@@ -1,0 +1,80 @@
+//! Differentially private SGD via the paper's §6 extension.
+//!
+//! Per-example clipping — normally the expensive part of DP-SGD — costs
+//! one extra matmul per layer with the trick: rescale the Zbar rows and
+//! redo `Wbar = Haug^T Zbar'`. This example trains with clipping + noise,
+//! tracks (ε, δ) with the RDP accountant, and calibrates the clip bound
+//! from observed norm quantiles.
+//!
+//! ```bash
+//! cargo run --release --example dp_sgd
+//! ```
+
+use pegrad::config::{Config, PrivacyConfig, RunMode, SamplerKind};
+use pegrad::coordinator::Trainer;
+use pegrad::nn::loss::Targets;
+use pegrad::privacy::clip_from_quantile;
+use pegrad::runtime::executable::Arg;
+use pegrad::runtime::Registry;
+use pegrad::tensor::{Rng, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    pegrad::util::logging::init_with(log::LevelFilter::Warn);
+
+    // ---- 1. calibrate the clip bound from one norm batch ---------------
+    let registry = Registry::open_default()?;
+    let preset = registry.manifest.preset("small")?.clone();
+    let spec = preset.spec()?;
+    let mut rng = Rng::new(3);
+    let params = spec.init_params(&mut rng);
+    let x = Tensor::randn(vec![spec.m, spec.in_dim()], &mut rng);
+    let y = Targets::Classes(
+        (0..spec.m)
+            .map(|_| rng.next_below(spec.out_dim() as u64) as i32)
+            .collect(),
+    );
+    let mut args: Vec<Arg> = params.iter().map(Arg::from).collect();
+    args.push((&x).into());
+    args.push((&y).into());
+    let out = registry.get("small", "norms_pegrad")?.call(&args)?;
+    let norms: Vec<f32> = out[0].data().iter().map(|s| s.sqrt()).collect();
+    // Init-time norms overestimate steady-state norms (they fall fast in
+    // the first steps); the standard heuristic is a LOW quantile of the
+    // warmup norms so most steady-state gradients pass unclipped.
+    let clip_c = clip_from_quantile(&norms, 10.0) * 0.25;
+    println!(
+        "observed norms: min {:.3} median {:.3} max {:.3}  -> clip C = {clip_c:.3}",
+        norms.iter().cloned().fold(f32::MAX, f32::min),
+        clip_from_quantile(&norms, 50.0),
+        norms.iter().cloned().fold(f32::MIN, f32::max),
+    );
+
+    // ---- 2. DP training run with the §6 trick --------------------------
+    for sigma in [0.5f32, 1.0, 2.0] {
+        let mut cfg = Config::default();
+        cfg.run_name = format!("dp-sigma{sigma}");
+        cfg.preset = "small".into();
+        cfg.mode = RunMode::Clipped;
+        cfg.sampler = SamplerKind::Uniform;
+        cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.02 };
+        cfg.steps = 600;
+        cfg.eval_every = 0;
+        cfg.data_n = 8192;
+        cfg.privacy = Some(PrivacyConfig {
+            clip_c,
+            noise_sigma: sigma,
+            delta: 1e-5,
+        });
+        cfg.out_dir = "runs".into();
+        let summary = Trainer::new(cfg)?.run()?;
+        println!(
+            "sigma {sigma:>4}: loss {:.3}  eval acc {:>5.1}%  ε = {:>8.3} @ δ=1e-5  ({:.2} ms/step)",
+            summary.final_loss,
+            summary.eval_accuracy.unwrap_or(0.0) * 100.0,
+            summary.epsilon.unwrap_or(f64::NAN),
+            summary.mean_step_ms
+        );
+    }
+    println!("\nmore noise -> smaller ε (stronger privacy), lower accuracy: the DP-SGD tradeoff.");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! E5 — the end-to-end validation driver.
+//!
+//! Trains a multi-million-parameter MLP classifier on the procedural
+//! digit raster dataset for a few hundred steps with per-example norms on
+//! the hot path (importance sampling), logging the loss curve and the
+//! step-time breakdown. All three layers compose here: Pallas kernels
+//! (L1, lowered into the HLO), the JAX model (L2, AOT artifacts) and the
+//! rust coordinator (L3).
+//!
+//! ```bash
+//! cargo run --release --example train_e2e                 # 'wide' ~18M params
+//! cargo run --release --example train_e2e -- --preset mlp100m --steps 300
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §E5.
+
+use pegrad::config::{Config, DataKind, RunMode, SamplerKind};
+use pegrad::coordinator::Trainer;
+
+fn arg(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    pegrad::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = arg(&args, "--preset").unwrap_or_else(|| "wide".into());
+    let steps: usize = arg(&args, "--steps").and_then(|v| v.parse().ok()).unwrap_or(300);
+
+    let mut cfg = Config::default();
+    cfg.run_name = format!("e2e-{preset}");
+    cfg.preset = preset.clone();
+    cfg.mode = RunMode::Pegrad;
+    cfg.sampler = SamplerKind::Importance;
+    cfg.steps = steps;
+    cfg.eval_every = (steps / 6).max(25);
+    cfg.schedule = pegrad::optim::Schedule::WarmupCosine {
+        lr: 0.08,
+        final_lr: 0.005,
+        warmup: steps / 20 + 1,
+        total: steps,
+    };
+    // 'wide'/'base' have 256-dim inputs -> 16x16 digit rasters; mlp100m
+    // has 1024-dim inputs -> 32x32 rasters.
+    cfg.data = DataKind::Digits;
+    cfg.data_n = 16384;
+    cfg.out_dir = "runs".into();
+    log::info!("E5 end-to-end: preset={preset} steps={steps}");
+
+    let t = pegrad::util::Timer::start();
+    let mut trainer = Trainer::new(cfg)?;
+    let summary = trainer.run()?;
+    println!("\n==== E5 summary ====");
+    println!("preset:          {preset}");
+    println!("steps:           {}", summary.steps);
+    println!("wallclock:       {:.1}s total, {:.2} ms/step mean", t.secs(), summary.mean_step_ms);
+    println!(
+        "loss curve:      {:.4} (start) -> {:.4} (end)",
+        summary.curve.first().map(|&(_, l)| l).unwrap_or(f32::NAN),
+        summary.final_loss
+    );
+    println!(
+        "eval:            loss {:.4}, accuracy {:.1}%",
+        summary.eval_loss.unwrap_or(f32::NAN),
+        summary.eval_accuracy.unwrap_or(0.0) * 100.0
+    );
+    // print a compact loss curve for EXPERIMENTS.md
+    println!("\nstep,loss");
+    let stride = (summary.curve.len() / 20).max(1);
+    for (s, l) in summary.curve.iter().step_by(stride) {
+        println!("{s},{l:.4}");
+    }
+    let (s, l) = summary.curve.last().unwrap();
+    println!("{s},{l:.4}");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""pegrad build-time package: L1 Pallas kernels + L2 JAX model + AOT driver.
+
+Never imported at runtime — the rust coordinator only consumes the HLO-text
+artifacts this package emits via ``make artifacts``.
+"""

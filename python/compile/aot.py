@@ -1,0 +1,248 @@
+"""AOT driver: lower every L2 entry point to an HLO-text artifact.
+
+This is the single place Python runs in the whole system — ``make
+artifacts`` invokes it once per preset; the rust coordinator only ever
+touches the emitted files.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  Lowering goes jitted-fn -> StableHLO -> XlaComputation
+(``return_tuple=True``) -> ``as_hlo_text()``.
+
+Calling convention baked into every artifact (and recorded in
+``manifest.json`` for the rust loader):
+
+* inputs: ``W1..Wn`` (each ``[d_{i-1}+1, d_i]``, bias folded as last row),
+  then the entry's data arguments, then scalar knobs as ``f32[1]`` /
+  ``i32[1]`` arrays (the ``xla`` crate builds rank-1 literals trivially).
+* outputs: always a tuple (even 1-tuples) — unwrap per manifest arity.
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import naive
+from . import pegrad
+
+FORMAT_VERSION = 2
+
+# Presets whose vmap-naive artifacts would need O(m * params) memory at
+# runtime; we skip those entries there (documented in DESIGN.md §4/E2).
+_SKIP_NAIVE_ABOVE_PARAMS = 30_000_000
+
+DEFAULT_PRESETS = [
+    "tiny", "small", "base", "wide",
+    "sweep64", "sweep128", "sweep256", "sweep512", "sweep1024",
+    "mlp100m",
+]
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _scalarize(fn, n_scalars: int, int_scalars=()):
+    """Adapt trailing scalar args to shape-[1] array args (rust-friendly)."""
+    @functools.wraps(fn)
+    def wrapped(*args):
+        head = args[:-n_scalars] if n_scalars else args
+        tail = [a[0] for a in args[len(head):]]
+        return fn(*head, *tail)
+    return wrapped
+
+
+def entry_points(spec: M.ModelSpec, use_pallas: bool = True):
+    """entry name -> (callable taking flat args, list of example args).
+
+    ``params`` are spread as the leading arguments so the artifact signature
+    is a flat list of arrays.
+    """
+    n = spec.n_layers
+    wshapes = [_f32(*s) for s in spec.weight_shapes()]
+    X = _f32(spec.m, spec.dims[0])
+    if spec.loss == "softmax_ce":
+        Y = _i32(spec.m)
+    else:
+        Y = _f32(spec.m, spec.dims[-1])
+    x1 = _f32(spec.dims[0])
+    y1 = _i32() if spec.loss == "softmax_ce" else _f32(spec.dims[-1])
+    S = _f32(1)   # f32 scalar knob
+    I = _i32(1)   # i32 scalar knob
+
+    def take_params(fn, n_extra_scalars=0):
+        def flat(*args):
+            params = list(args[:n])
+            return fn(params, *args[n:])
+        return _scalarize(flat, n_extra_scalars)
+
+    ep = {
+        "fwd": (take_params(functools.partial(pegrad.fwd, spec)),
+                [*wshapes, X, Y]),
+        "norms_pegrad": (take_params(functools.partial(
+            pegrad.norms_pegrad, spec, use_pallas=use_pallas)),
+            [*wshapes, X, Y]),
+        "grads_pegrad": (take_params(functools.partial(
+            pegrad.grads_pegrad, spec, use_pallas=use_pallas)),
+            [*wshapes, X, Y]),
+        "step_vanilla": (take_params(functools.partial(
+            pegrad.step_vanilla, spec), 1),
+            [*wshapes, X, Y, S]),
+        "step_clipped": (take_params(functools.partial(
+            pegrad.step_clipped, spec, use_pallas=use_pallas), 4),
+            [*wshapes, X, Y, S, S, S, I]),
+        "grad_batch1": (take_params(functools.partial(
+            naive.grad_batch1, spec)),
+            [*wshapes, x1, y1]),
+        "grads_normalized": (take_params(functools.partial(
+            pegrad.grads_normalized, spec, use_pallas=use_pallas), 1),
+            [*wshapes, X, Y, S]),
+    }
+    # step_pegrad signature: params, X, Y, lr(f32[1]), is_weights[m] — its
+    # scalar knob is not trailing, so it gets a bespoke flattener below.
+    ep["step_pegrad"] = (_step_pegrad_flat(spec, use_pallas),
+                         [*wshapes, X, Y, S, _f32(spec.m)])
+
+    if spec.param_count() <= _SKIP_NAIVE_ABOVE_PARAMS:
+        ep["norms_naive"] = (take_params(functools.partial(
+            naive.norms_naive, spec)), [*wshapes, X, Y])
+        ep["step_clipped_naive"] = (take_params(functools.partial(
+            naive.step_clipped_naive, spec), 4),
+            [*wshapes, X, Y, S, S, S, I])
+    return ep
+
+
+# step_pegrad's lr/is_weights are (S, [m]); adapt scalars manually since the
+# scalar knob (lr) is not trailing.  Simplest: wrap here.
+def _step_pegrad_flat(spec, use_pallas):
+    n = spec.n_layers
+
+    def flat(*args):
+        params = list(args[:n])
+        x, y, lr, w = args[n], args[n + 1], args[n + 2], args[n + 3]
+        return pegrad.step_pegrad(spec, params, x, y, lr[0], w,
+                                  use_pallas=use_pallas)
+    return flat
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def hlo_op_histogram(text: str) -> dict[str, int]:
+    """Crude HLO op histogram for the --report perf evidence."""
+    hist = collections.Counter()
+    for line in text.splitlines():
+        line = line.strip()
+        if "=" not in line or line.startswith(("HloModule", "ENTRY", "}")):
+            continue
+        rhs = line.split("=", 1)[1].strip()
+        # "f32[64,256]{1,0} dot(...)" -> "dot"
+        parts = rhs.split(" ")
+        if len(parts) >= 2:
+            op = parts[1].split("(")[0]
+            hist[op] += 1
+    return dict(hist)
+
+
+def _shape_info(avals):
+    out = []
+    for a in avals:
+        out.append({"dtype": str(a.dtype), "shape": [int(d) for d in a.shape]})
+    return out
+
+
+def build_preset(name: str, out_dir: str, use_pallas: bool = True,
+                 report: bool = False) -> dict:
+    spec = M.get_spec(name)
+    eps = entry_points(spec, use_pallas)
+    pdir = os.path.join(out_dir, name)
+    os.makedirs(pdir, exist_ok=True)
+    entries = {}
+    for ename, (fn, example_args) in sorted(eps.items()):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        rel = f"{name}/{ename}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *example_args)
+        if not isinstance(out_avals, tuple):
+            out_avals = (out_avals,)
+        entries[ename] = {
+            "file": rel,
+            "inputs": _shape_info(example_args),
+            "outputs": _shape_info(out_avals),
+        }
+        if report:
+            hist = hlo_op_histogram(text)
+            top = sorted(hist.items(), key=lambda kv: -kv[1])[:8]
+            print(f"  {name}/{ename}: {len(text)//1024}KiB hlo, "
+                  f"ops={sum(hist.values())} top={top}")
+        else:
+            print(f"  wrote {rel} ({len(text)//1024} KiB)")
+    return {
+        "dims": list(spec.dims),
+        "activation": spec.activation,
+        "loss": spec.loss,
+        "m": spec.m,
+        "dtype": spec.dtype,
+        "n_layers": spec.n_layers,
+        "param_count": spec.param_count(),
+        "flops_forward": spec.flops_forward(),
+        "flops_backward": spec.flops_backward(),
+        "use_pallas": use_pallas,
+        "entries": entries,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", nargs="*", default=DEFAULT_PRESETS)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="use the pure-jnp oracle kernels instead of Pallas")
+    ap.add_argument("--report", action="store_true",
+                    help="print HLO op histograms (L2 perf evidence)")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"format_version": FORMAT_VERSION, "presets": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("format_version") == FORMAT_VERSION:
+            manifest = old
+
+    for preset in args.presets:
+        print(f"preset {preset}:")
+        manifest["presets"][preset] = build_preset(
+            preset, args.out_dir, use_pallas=not args.no_pallas,
+            report=args.report)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(manifest['presets'])} presets)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""L1 Pallas kernels for pegrad (build-time only; lowered into L2 HLO).
+
+The L2 model takes ``use_pallas`` as a parameter so the AOT layer can emit
+both variants (Pallas vs pure-jnp oracle) and the test suite can diff them.
+"""
+
+from . import ref
+from .clip import clip_scale
+from .matmul_t import matmul_t, mxu_estimate
+from .row_norms import pegrad_norms, pick_block, row_sq_norms, vmem_estimate
+
+__all__ = [
+    "ref",
+    "clip_scale",
+    "matmul_t",
+    "mxu_estimate",
+    "pegrad_norms",
+    "pick_block",
+    "row_sq_norms",
+    "vmem_estimate",
+]

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: per-example row rescale (paper §6 extension).
+
+After the trick produces the per-example total squared norm ``s_j``, the §6
+extension modifies the backprop intermediates row-wise:
+
+    zbar'[j, :] = coef[j] * zbar[j, :]
+
+For gradient clipping to bound C, ``coef[j] = min(1, C / sqrt(s_j))``.  The
+coefficient computation is a cheap O(m) vector op done in-kernel from ``s``
+so the clipped stream never materializes an intermediate coefficient array
+in HBM; the rescale itself is elementwise and tiled like ``row_sq_norms``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .row_norms import _ceil_div, pick_block
+
+
+def _clip_kernel(z_ref, s_ref, c_ref, o_ref):
+    s = s_ref[...]
+    c = c_ref[0]
+    # rsqrt with a floor keeps the coefficient finite for zero-gradient rows
+    # (a zero row stays zero regardless, so the value chosen is irrelevant,
+    # but NaN would poison the multiply).
+    norm = jnp.sqrt(jnp.maximum(s, 1e-30))
+    coef = jnp.minimum(1.0, c / norm)
+    o_ref[...] = z_ref[...] * coef[:, None].astype(z_ref.dtype)
+
+
+def clip_scale(zbar: jax.Array, s_total: jax.Array, clip_c: jax.Array,
+               *, block: tuple[int, int] | None = None,
+               interpret: bool = True) -> jax.Array:
+    """Rescale each row of ``zbar`` to clip its example's gradient norm.
+
+    Args:
+      zbar: ``[m, p]`` backprop intermediate for one layer.
+      s_total: ``[m]`` per-example TOTAL squared gradient norm (summed over
+        all layers) — the clip decision is global per example, applied to
+        every layer's zbar with the same coefficient.
+      clip_c: scalar clip bound ``C`` (f32 array, shape ``[1]``).
+    """
+    m, p = zbar.shape
+    bm, bk = block or pick_block(m, p)
+    bm, bk = min(bm, m), min(bk, p)
+    grid = (_ceil_div(m, bm), _ceil_div(p, bk))
+    return pl.pallas_call(
+        _clip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, p), zbar.dtype),
+        interpret=interpret,
+    )(zbar, s_total, jnp.asarray(clip_c, jnp.float32).reshape(1))

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: MXU-tiled transposed matmul ``dW = H^T @ Zbar``.
+
+This is the §6 "re-run the final step of backpropagation" recompute:
+
+    Wbar^(i)' = X^(i)T Zbar^(i)'        (paper's X == our H, bias-augmented)
+
+On TPU this is MXU work.  Hardware adaptation (DESIGN.md §5): where a CUDA
+implementation would tile over threadblocks with shared-memory staging, we
+tile ``(bk, bp)`` output blocks with an f32 VMEM accumulator and walk the
+contraction (m) axis as the *innermost* grid dimension so the accumulator
+block stays resident across the whole contraction.  Tiles are 128-aligned
+to match the 128x128 systolic array.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .row_norms import _ceil_div
+
+MXU = 128
+
+
+def _matmul_t_kernel(h_ref, z_ref, o_ref):
+    i = pl.program_id(2)  # contraction (m) axis — innermost
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    h = h_ref[...]
+    z = z_ref[...]
+    # f32 accumulation regardless of operand dtype (MXU semantics).
+    o_ref[...] += jax.lax.dot_general(
+        h, z,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def matmul_t(h: jax.Array, zbar: jax.Array, *,
+             bm: int = MXU, bk: int = MXU, bp: int = MXU,
+             interpret: bool = True) -> jax.Array:
+    """``out[k, p] = sum_j h[j, k] * zbar[j, p]`` with MXU-aligned tiling.
+
+    Args:
+      h: ``[m, k]`` layer input (bias-augmented).
+      zbar: ``[m, p]`` (possibly clip-rescaled) backprop intermediate.
+    """
+    m, k = h.shape
+    m2, p = zbar.shape
+    assert m == m2, f"contraction mismatch: {m} vs {m2}"
+    bm, bk, bp = min(bm, m), min(bk, k), min(bp, p)
+    # Zero-pad the contraction (m) dim to a tile multiple: interpret-mode
+    # Pallas NaN-fills out-of-bounds input blocks, which would poison the
+    # accumulator (zero rows contribute nothing to the contraction).
+    if m % bm:
+        pad = bm - m % bm
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        zbar = jnp.pad(zbar, ((0, pad), (0, 0)))
+        m = h.shape[0]
+    grid = (_ceil_div(k, bk), _ceil_div(p, bp), _ceil_div(m, bm))
+    return pl.pallas_call(
+        _matmul_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda a, b, i: (i, a)),
+            pl.BlockSpec((bm, bp), lambda a, b, i: (i, b)),
+        ],
+        out_specs=pl.BlockSpec((bk, bp), lambda a, b, i: (a, b)),
+        out_shape=jax.ShapeDtypeStruct((k, p), jnp.float32),
+        interpret=interpret,
+    )(h, zbar)
+
+
+def mxu_estimate(m: int, k: int, p: int,
+                 bm: int = MXU, bk: int = MXU, bp: int = MXU) -> dict:
+    """Static MXU-utilization model for DESIGN/EXPERIMENTS §Perf."""
+    import math
+    bm_, bk_, bp_ = min(bm, m), min(bk, k), min(bp, p)
+    tiles = _ceil_div(k, bk_) * _ceil_div(p, bp_) * _ceil_div(m, bm_)
+    flops = 2 * m * k * p
+    padded = 2 * tiles * bm_ * bk_ * bp_
+    return {
+        "grid": (_ceil_div(k, bk_), _ceil_div(p, bp_), _ceil_div(m, bm_)),
+        "vmem_bytes": (bm_ * bk_ + bm_ * bp_) * 4 + bk_ * bp_ * 4,
+        "flops": flops,
+        "mxu_utilization": flops / padded if padded else 0.0,
+        "hbm_read_bytes": 4 * (math.prod((m, k)) * _ceil_div(p, bp_)
+                               + math.prod((m, p)) * _ceil_div(k, bk_)),
+        "hbm_write_bytes": 4 * k * p,
+    }

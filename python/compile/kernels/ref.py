@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness references: pytest (plus hypothesis shape/dtype
+sweeps) asserts the Pallas kernels match these to tight tolerances.  They
+are also used directly by the L2 model when ``use_pallas=False`` — which
+gives an A/B path for isolating kernel bugs from model bugs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_sq_norms(x: jax.Array) -> jax.Array:
+    """``out[j] = sum_k x[j,k]^2`` with f32 accumulation."""
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf * xf, axis=1)
+
+
+def pegrad_norms(zbar: jax.Array, h: jax.Array) -> jax.Array:
+    """Paper §4: ``s[j] = ||zbar[j]||^2 * ||h[j]||^2``."""
+    return row_sq_norms(zbar) * row_sq_norms(h)
+
+
+def clip_scale(zbar: jax.Array, s_total: jax.Array,
+               clip_c: jax.Array) -> jax.Array:
+    """Paper §6: rescale rows so each example's TOTAL grad norm ≤ C."""
+    norm = jnp.sqrt(jnp.maximum(s_total, 1e-30))
+    coef = jnp.minimum(1.0, jnp.asarray(clip_c, jnp.float32) / norm)
+    return zbar * coef[:, None].astype(zbar.dtype)
+
+
+def matmul_t(h: jax.Array, zbar: jax.Array) -> jax.Array:
+    """Paper §6: ``Wbar' = H^T @ Zbar'`` with f32 accumulation."""
+    return jax.lax.dot_general(
+        h, zbar,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )

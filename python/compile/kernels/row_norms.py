@@ -1,0 +1,166 @@
+"""L1 Pallas kernels: row-wise squared-norm reductions.
+
+These implement the O(mnp) "extra work" of the Goodfellow trick (paper §4):
+
+    s_j^(i) = (sum_k Zbar_{j,k}^(i)^2) * (sum_k H_{j,k}^(i-1)^2)
+
+Two kernels are provided:
+
+* ``row_sq_norms(x)`` — tiled row-wise sum of squares.  The k dimension is
+  blocked so arbitrarily wide layers stream through VMEM one ``(bm, bk)``
+  tile at a time; the output block is revisited across the k grid axis and
+  used as the accumulator (Pallas guarantees sequential grid iteration on
+  TPU, so the revisited output ref is the idiomatic reduction pattern).
+* ``pegrad_norms(zbar, h)`` — the fused product ``rowsq(zbar) * rowsq(h)``.
+  Both operands are row-blocked only (full rows resident in VMEM) so the
+  product never round-trips partial norms through HBM.  Use when
+  ``bm * (pz + ph) * 4`` bytes fits the VMEM budget; otherwise compose two
+  ``row_sq_norms`` calls (the AOT layer picks automatically).
+
+All kernels run ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, so interpret mode lowers them to plain HLO.  On real
+TPU the same BlockSpecs compile unchanged (drop ``interpret``).
+
+Hardware adaptation note (DESIGN.md §5): this is bandwidth-bound VPU work —
+the tiles are chosen to read each element of Zbar/H from HBM exactly once,
+reusing what backprop already materialized, which is the paper's entire
+point restated for the memory hierarchy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget used when auto-picking block shapes (bytes).  Real TPU cores
+# have 16 MiB; we stay well under half so double-buffering fits.
+VMEM_BUDGET = 4 * 1024 * 1024
+
+# Lane width of the VPU; the last dimension of a block should be a multiple
+# of this for full vector-register utilization.
+LANE = 128
+# Sublane height for f32.
+SUBLANE = 8
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pick_block(m: int, k: int, budget: int = VMEM_BUDGET) -> tuple[int, int]:
+    """Choose a (bm, bk) tile for an (m, k) f32 operand.
+
+    Prefers full-width k tiles (one HBM pass, unit-stride lanes); shrinks k
+    in LANE multiples only when a full row exceeds the budget.
+    """
+    bm = min(m, 256)
+    bk = min(k, 2048)
+    while bm * bk * 4 > budget and bk > LANE:
+        bk = max(LANE, bk // 2)
+    while bm * bk * 4 > budget and bm > SUBLANE:
+        bm = max(SUBLANE, bm // 2)
+    return bm, bk
+
+
+def _row_sq_kernel(x_ref, o_ref):
+    """Accumulate sum-of-squares of the current tile into the output rows.
+
+    Grid axis 1 walks the k dimension; the output block depends only on the
+    row-grid index, so Pallas revisits it and we accumulate in place.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(tile * tile, axis=1)
+
+
+def row_sq_norms(x: jax.Array, *, block: tuple[int, int] | None = None,
+                 interpret: bool = True) -> jax.Array:
+    """Row-wise sum of squares: ``out[j] = sum_k x[j, k]**2`` (f32).
+
+    Accumulation is always f32 even for bf16 inputs (matches MXU/VPU
+    accumulator behaviour and keeps the norm usable for clipping).
+    """
+    m, k = x.shape
+    bm, bk = block or pick_block(m, k)
+    bm, bk = min(bm, m), min(bk, k)
+    # Zero-pad the reduction dim to a tile multiple: out-of-bounds input
+    # blocks are NaN-filled in interpret mode and would poison the row sums
+    # (zeros contribute nothing to a sum of squares, so this is exact).
+    if k % bk:
+        x = jnp.pad(x, ((0, 0), (0, bk - k % bk)))
+        k = x.shape[1]
+    grid = (_ceil_div(m, bm), _ceil_div(k, bk))
+    return pl.pallas_call(
+        _row_sq_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def _pegrad_kernel(z_ref, h_ref, o_ref):
+    """Fused s = rowsq(zbar) * rowsq(h) for one block of rows."""
+    z = z_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(z * z, axis=1) * jnp.sum(h * h, axis=1)
+
+
+def pegrad_norms(zbar: jax.Array, h: jax.Array, *, bm: int | None = None,
+                 interpret: bool = True) -> jax.Array:
+    """Per-example squared gradient norm for one dense layer (paper §4).
+
+    ``s[j] = ||zbar[j]||^2 * ||h[j]||^2`` where ``h`` is the layer input
+    *including* the folded bias column.  Falls back to two tiled
+    ``row_sq_norms`` passes when full rows of both operands do not fit the
+    VMEM budget.
+    """
+    m, pz = zbar.shape
+    m2, ph = h.shape
+    assert m == m2, f"batch mismatch: {m} vs {m2}"
+    if bm is None:
+        bm = min(m, 256)
+        while bm * (pz + ph) * 4 > VMEM_BUDGET and bm > SUBLANE:
+            bm = max(SUBLANE, bm // 2)
+    if bm * (pz + ph) * 4 > VMEM_BUDGET:
+        # Rows too wide even at minimum height: compose tiled reductions.
+        return row_sq_norms(zbar, interpret=interpret) * row_sq_norms(
+            h, interpret=interpret)
+    grid = (_ceil_div(m, bm),)
+    return pl.pallas_call(
+        _pegrad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, pz), lambda i: (i, 0)),
+            pl.BlockSpec((bm, ph), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(zbar, h)
+
+
+def vmem_estimate(m: int, k: int, block: tuple[int, int] | None = None) -> dict:
+    """Static VMEM/traffic model for ``row_sq_norms`` (used by DESIGN/EXPERIMENTS
+    §Perf — interpret-mode wallclock is NOT a TPU proxy, structure is)."""
+    bm, bk = block or pick_block(m, k)
+    bm, bk = min(bm, m), min(bk, k)
+    grid = (_ceil_div(m, bm), _ceil_div(k, bk))
+    return {
+        "block": (bm, bk),
+        "grid": grid,
+        "vmem_bytes": bm * bk * 4 + bm * 4,
+        "hbm_read_bytes": m * k * 4,   # each element read exactly once
+        "hbm_write_bytes": m * 4 * grid[1],
+        "flops": 2 * m * k,            # square + add per element
+        "arithmetic_intensity": (2 * m * k) / (m * k * 4),
+    }

@@ -1,0 +1,203 @@
+"""L2: the paper's model — an n-layer dense network with explicit H/Z capture.
+
+Paper §2 problem definition, implemented exactly:
+
+    z^(i) = h^(i-1)^T W^(i)       (minibatched: Z^(i) = Haug^(i-1) @ W^(i))
+    h^(i) = phi^(i)(z^(i))
+
+Biases are folded in as the *last row* of each ``W^(i)`` and the layer input
+is augmented with a constant-1 column ("the phi function from the layer
+below providing a constant input of 1 to this column").  Consequently the
+per-example gradient norms produced by the trick automatically include the
+bias gradients — ``||haug||^2 = ||h||^2 + 1``.
+
+The loss is a function of the final ``z`` and the targets only; it never
+touches the parameters directly, which is the paper's stated requirement
+for the trick to hold.
+
+Everything here is build-time Python: :mod:`compile.aot` lowers jitted
+wrappers of these functions to HLO text once, and the rust L3 executes the
+artifacts.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+    "sigmoid": jax.nn.sigmoid,
+    "identity": lambda z: z,
+}
+
+LOSSES = ("softmax_ce", "mse")
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one model variant (mirrors manifest.json)."""
+
+    dims: tuple[int, ...]          # (d0, d1, ..., dn): input, hidden..., output
+    activation: str = "relu"      # hidden activation phi
+    loss: str = "softmax_ce"
+    m: int = 32                    # minibatch size baked into the artifacts
+    dtype: str = "f32"
+
+    def __post_init__(self):
+        if len(self.dims) < 2:
+            raise ValueError(f"need >=2 dims, got {self.dims}")
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(f"unknown activation {self.activation!r}")
+        if self.loss not in LOSSES:
+            raise ValueError(f"unknown loss {self.loss!r}")
+        if self.m < 1:
+            raise ValueError(f"batch size must be >=1, got {self.m}")
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.dims) - 1
+
+    @property
+    def jdtype(self):
+        return {"f32": jnp.float32, "bf16": jnp.bfloat16}[self.dtype]
+
+    def weight_shapes(self) -> list[tuple[int, int]]:
+        """Shape of each W^(i): (d_{i-1} + 1, d_i) — bias folded as last row."""
+        return [(self.dims[i] + 1, self.dims[i + 1])
+                for i in range(self.n_layers)]
+
+    def param_count(self) -> int:
+        return sum(a * b for a, b in self.weight_shapes())
+
+    def flops_forward(self) -> int:
+        """Matmul flops of one forward pass at batch m (2*m*k*p per layer)."""
+        return sum(2 * self.m * a * b for a, b in self.weight_shapes())
+
+    def flops_backward(self) -> int:
+        """dW = H^T Zbar plus dH = Zbar W^T per layer (no dH for layer 1)."""
+        shapes = self.weight_shapes()
+        f = sum(2 * self.m * a * b for a, b in shapes)           # dW
+        f += sum(2 * self.m * a * b for a, b in shapes[1:])      # dH
+        return f
+
+    def input_example(self):
+        return jnp.zeros((self.m, self.dims[0]), self.jdtype)
+
+    def target_example(self):
+        if self.loss == "softmax_ce":
+            return jnp.zeros((self.m,), jnp.int32)
+        return jnp.zeros((self.m, self.dims[-1]), self.jdtype)
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> list[jax.Array]:
+    """He (relu/gelu) or Glorot (tanh/sigmoid/identity) init; zero bias row."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    he = spec.activation in ("relu", "gelu")
+    for i, (fan_in_p1, fan_out) in enumerate(spec.weight_shapes()):
+        key, sub = jax.random.split(key)
+        fan_in = fan_in_p1 - 1
+        if he:
+            std = math.sqrt(2.0 / fan_in)
+        else:
+            std = math.sqrt(2.0 / (fan_in + fan_out))
+        w = jax.random.normal(sub, (fan_in, fan_out), jnp.float32) * std
+        w = jnp.concatenate([w, jnp.zeros((1, fan_out), jnp.float32)], axis=0)
+        params.append(w.astype(spec.jdtype))
+    return params
+
+
+def augment(h: jax.Array) -> jax.Array:
+    """Append the constant-1 bias column (paper §2)."""
+    m = h.shape[0]
+    return jnp.concatenate([h, jnp.ones((m, 1), h.dtype)], axis=1)
+
+
+def forward(spec: ModelSpec, params, x, *, eps=None):
+    """Forward pass capturing the trick's ingredients.
+
+    Args:
+      eps: optional list of zero tensors with the shapes of each ``Z^(i)``.
+        When provided, ``z = haug @ W + eps_i`` — differentiating the summed
+        loss w.r.t. ``eps_i`` yields exactly ``Zbar^(i) = dC/dZ^(i)``, which
+        is how :mod:`compile.pegrad` extracts the backprop intermediates
+        without re-deriving the chain rule by hand.
+
+    Returns:
+      (logits, hs, zs) where ``hs[i]`` is the *augmented* ``H^(i)`` input to
+      layer i+1 (``hs[0]`` is the augmented network input, paper's H^(0)).
+    """
+    act = ACTIVATIONS[spec.activation]
+    h = x
+    hs, zs = [], []
+    n = spec.n_layers
+    for i, w in enumerate(params):
+        ha = augment(h)
+        hs.append(ha)
+        z = ha @ w
+        if eps is not None:
+            z = z + eps[i]
+        zs.append(z)
+        h = act(z) if i < n - 1 else z
+    return h, hs, zs
+
+
+def per_example_loss(spec: ModelSpec, logits, y):
+    """L^(j) for each example j (unreduced)."""
+    if spec.loss == "softmax_ce":
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    # mse: mean over output dims so the scale is width-independent.
+    d = (logits.astype(jnp.float32) - y.astype(jnp.float32))
+    return jnp.mean(d * d, axis=-1)
+
+
+def loss_and_aux(spec: ModelSpec, params, x, y, *, eps=None):
+    """Summed loss C (paper's total cost) + everything the trick needs."""
+    logits, hs, zs = forward(spec, params, x, eps=eps)
+    per_ex = per_example_loss(spec, logits, y)
+    return jnp.sum(per_ex), (per_ex, logits, hs, zs)
+
+
+def loss_single(spec: ModelSpec, params, x1, y1):
+    """Loss of ONE example (for the naive vmap/batch-1 baselines)."""
+    logits, _, _ = forward(spec, params, x1[None, :])
+    y = y1[None] if spec.loss == "softmax_ce" else y1[None, :]
+    return per_example_loss(spec, logits, y)[0]
+
+
+# ---------------------------------------------------------------------------
+# Presets (mirrored in DESIGN.md §2 and rust config presets)
+# ---------------------------------------------------------------------------
+
+PRESETS: dict[str, ModelSpec] = {
+    "tiny": ModelSpec(dims=(16, 32, 32, 10), m=8),
+    "small": ModelSpec(dims=(64, 256, 256, 10), m=32),
+    "base": ModelSpec(dims=(256, 1024, 1024, 1024, 10), m=64),
+    "wide": ModelSpec(dims=(256, 4096, 4096, 10), m=64),
+    "mlp100m": ModelSpec(dims=(1024, 6656, 6656, 6656, 1024), m=32),
+}
+
+# Equal-width sweep presets for E1/E2 (p in {64..1024}, n=3 hidden matmuls).
+for _p in (64, 128, 256, 512, 1024):
+    PRESETS[f"sweep{_p}"] = ModelSpec(dims=(_p, _p, _p, _p), m=64,
+                                      loss="mse")
+
+# Batch-size sweep presets for E2's "gap grows with m" axis (p=256, n=3).
+for _m in (8, 16, 32, 128, 256):
+    PRESETS[f"m{_m}"] = ModelSpec(dims=(256, 256, 256, 256), m=_m,
+                                  loss="mse")
+
+
+def get_spec(name: str) -> ModelSpec:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown preset {name!r}; available: {sorted(PRESETS)}") from None

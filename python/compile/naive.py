@@ -1,0 +1,74 @@
+"""L2: the paper's §3 NAIVE baselines.
+
+Two naive strategies are materialized as artifacts:
+
+* ``norms_naive`` / ``step_clipped_naive`` — vmap over ``jax.grad`` of the
+  single-example loss.  This is the *best possible* implementation of the
+  naive idea on a modern stack (it keeps minibatch parallelism but
+  materializes every per-example weight gradient: O(m * params) memory and
+  roughly doubles the backward flops, paper §5).
+* ``grad_batch1`` — the literal naive method: one backprop at minibatch
+  size 1; the rust E2 driver calls it m times per batch.  This is the
+  variant the paper says "performs very poorly because back-propagation is
+  most efficient when ... minibatch operations" — we measure exactly that.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+def _per_example_grads(spec: M.ModelSpec, params, x, y):
+    """[m, ...]-stacked gradients of each example's own loss."""
+    def gfn(x1, y1):
+        return jax.grad(
+            lambda p: M.loss_single(spec, p, x1, y1))(params)
+    return jax.vmap(gfn)(x, y)
+
+
+def norms_naive(spec: M.ModelSpec, params, x, y):
+    """(s_total[m], s_layers[m,n]) via explicit per-example gradients."""
+    pex_grads = _per_example_grads(spec, params, x, y)
+    per_layer = [jnp.sum(jnp.square(g.astype(jnp.float32)), axis=(1, 2))
+                 for g in pex_grads]
+    s_layers = jnp.stack(per_layer, axis=1)
+    return jnp.sum(s_layers, axis=1), s_layers
+
+
+def grad_batch1(spec: M.ModelSpec, params, x1, y1):
+    """(loss, grads...) for ONE example — the m-calls-per-batch baseline."""
+    def f(p):
+        return M.loss_single(spec, p, x1, y1)
+
+    loss, grads = jax.value_and_grad(f)(params)
+    return (loss, *grads)
+
+
+def step_clipped_naive(spec: M.ModelSpec, params, x, y, lr, clip_c,
+                       noise_sigma, seed):
+    """DP-SGD step clipping each materialized per-example gradient.
+
+    Semantically identical to ``pegrad.step_clipped`` (pytest asserts this);
+    the cost difference is E3.
+    """
+    m = x.shape[0]
+    pex_grads = _per_example_grads(spec, params, x, y)
+    s_total = sum(jnp.sum(jnp.square(g.astype(jnp.float32)), axis=(1, 2))
+                  for g in pex_grads)
+    norm = jnp.sqrt(jnp.maximum(s_total, 1e-30))
+    coef = jnp.minimum(1.0, clip_c / norm)
+    key = jax.random.PRNGKey(seed)
+    new = []
+    for w, g in zip(params, pex_grads):
+        clipped = jnp.sum(g * coef[:, None, None].astype(g.dtype), axis=0)
+        key, sub = jax.random.split(key)
+        noise = jax.random.normal(sub, clipped.shape, jnp.float32)
+        gm = (clipped + noise_sigma * clip_c * noise) / m
+        new.append(w - lr * gm.astype(w.dtype))
+    logits, _, _ = M.forward(spec, params, x)
+    mean_loss = jnp.mean(M.per_example_loss(spec, logits, y))
+    clip_frac = jnp.mean((norm > clip_c).astype(jnp.float32))
+    return (*new, mean_loss, s_total, clip_frac)

@@ -1,0 +1,188 @@
+"""L2: the paper's contribution — per-example gradient norms and the §6
+clipped-update extension, plus every training-step entry point the rust
+coordinator executes.
+
+Key function: :func:`backprop_intermediates` extracts ``Zbar^(i) = dC/dZ^(i)``
+(and the forward's ``Haug^(i-1)``) with ONE forward + ONE backward pass via
+the epsilon trick: write ``z = haug @ W + eps`` with ``eps = 0`` and take
+``grad`` w.r.t. eps.  XLA fuses this into exactly the standard backward
+pass — there is no extra compute versus ``jax.grad(loss)(params)`` (E1/E2
+verify this empirically; `aot.py --report` shows the HLO op histograms).
+
+From the intermediates:
+
+* parameter gradients:  ``Wbar^(i) = Haug^(i-1)^T @ Zbar^(i)``     (standard)
+* per-example norms:    ``s_j^(i) = ||Zbar_j||^2 * ||Haug_j||^2``  (paper §4)
+* clipped gradients:    rescale rows of Zbar, redo only the matmul (paper §6)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from . import kernels
+from .kernels import ref as kref
+
+
+def _k(use_pallas: bool):
+    """Select the L1 implementation: Pallas kernels or the jnp oracles."""
+    return kernels if use_pallas else kref
+
+
+# ---------------------------------------------------------------------------
+# Core: one fwd + one bwd -> (loss stats, Haug list, Zbar list)
+# ---------------------------------------------------------------------------
+
+def backprop_intermediates(spec: M.ModelSpec, params, x, y):
+    """Run the standard batched backward pass, returning its intermediates.
+
+    Returns:
+      per_ex_loss: [m] unreduced losses L^(j)
+      logits:      [m, d_n]
+      hs:          list of Haug^(i-1), shape [m, d_{i-1}+1]
+      zbars:       list of Zbar^(i) = dC/dZ^(i), shape [m, d_i]
+                   (C = SUM of per-example losses, so row j is exactly
+                   dL^(j)/dz_j — no minibatch averaging baked in)
+    """
+    m = x.shape[0]
+    eps = [jnp.zeros((m, d), jnp.float32) for d in spec.dims[1:]]
+
+    def f(eps_list):
+        total, aux = M.loss_and_aux(spec, params, x, y, eps=eps_list)
+        return total, aux
+
+    grads, (per_ex, logits, hs, _zs) = jax.grad(f, has_aux=True)(eps)
+    return per_ex, logits, hs, grads
+
+
+def norms_from_intermediates(hs, zbars, use_pallas: bool):
+    """Paper §4 applied per layer: s_layers[m, n], s_total[m]."""
+    k = _k(use_pallas)
+    per_layer = [k.pegrad_norms(zb, h) for zb, h in zip(zbars, hs)]
+    s_layers = jnp.stack(per_layer, axis=1)
+    return s_layers, jnp.sum(s_layers, axis=1)
+
+
+def grads_from_intermediates(hs, zbars, weights=None, use_pallas=False):
+    """``Wbar^(i) = Haug^T @ (diag(w) Zbar)`` — the final backprop step.
+
+    ``weights`` (shape [m]) folds minibatch averaging / importance-sampling
+    reweighting into the same matmul; None means plain SUM (paper's C).
+    """
+    k = _k(use_pallas)
+    out = []
+    for h, zb in zip(hs, zbars):
+        if weights is not None:
+            zb = zb * weights[:, None].astype(zb.dtype)
+        out.append(k.matmul_t(h, zb))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Entry points lowered by aot.py (each becomes one HLO artifact)
+# ---------------------------------------------------------------------------
+
+def fwd(spec: M.ModelSpec, params, x, y):
+    """(mean_loss, per_ex_loss, logits) — evaluation."""
+    logits, _, _ = M.forward(spec, params, x)
+    per_ex = M.per_example_loss(spec, logits, y)
+    return jnp.mean(per_ex), per_ex, logits
+
+
+def norms_pegrad(spec: M.ModelSpec, params, x, y, *, use_pallas=True):
+    """(s_total[m], s_layers[m,n], per_ex_loss[m]) — the headline entry.
+
+    One batched fwd+bwd plus O(mnp) kernel work (paper §4/§5).
+    """
+    per_ex, _logits, hs, zbars = backprop_intermediates(spec, params, x, y)
+    s_layers, s_total = norms_from_intermediates(hs, zbars, use_pallas)
+    return s_total, s_layers, per_ex
+
+
+def grads_pegrad(spec: M.ModelSpec, params, x, y, *, use_pallas=True):
+    """(mean_loss, grads..., s_total, s_layers) — for rust-side optimizers."""
+    per_ex, _logits, hs, zbars = backprop_intermediates(spec, params, x, y)
+    s_layers, s_total = norms_from_intermediates(hs, zbars, use_pallas)
+    m = x.shape[0]
+    w = jnp.full((m,), 1.0 / m, jnp.float32)
+    grads = grads_from_intermediates(hs, zbars, w, use_pallas)
+    return (jnp.mean(per_ex), *grads, s_total, s_layers)
+
+
+def step_vanilla(spec: M.ModelSpec, params, x, y, lr):
+    """Plain SGD step, no per-example machinery (E2/E3 baseline)."""
+    def mean_loss(p):
+        logits, _, _ = M.forward(spec, p, x)
+        return jnp.mean(M.per_example_loss(spec, logits, y))
+
+    loss, grads = jax.value_and_grad(mean_loss)(params)
+    new = [w - lr * g.astype(w.dtype) for w, g in zip(params, grads)]
+    return (*new, loss)
+
+
+def step_pegrad(spec: M.ModelSpec, params, x, y, lr, is_weights,
+                *, use_pallas=True):
+    """SGD step with importance-sampling weights + per-example norms.
+
+    ``is_weights[j]`` is the unbiased reweighting coefficient the rust
+    sampler computed (1/(N p_j) normalized to mean 1/m); passing uniform
+    1/m reproduces ``step_vanilla`` exactly.
+    """
+    per_ex, _logits, hs, zbars = backprop_intermediates(spec, params, x, y)
+    s_layers, s_total = norms_from_intermediates(hs, zbars, use_pallas)
+    grads = grads_from_intermediates(hs, zbars, is_weights, use_pallas)
+    new = [w - lr * g.astype(w.dtype) for w, g in zip(params, grads)]
+    return (*new, jnp.mean(per_ex), s_total, s_layers)
+
+
+def grads_normalized(spec: M.ModelSpec, params, x, y, target_norm,
+                     *, use_pallas=True):
+    """Paper §6, second instance of the general Zbar-modification pattern:
+    rescale every example's gradient to a COMMON norm (``target_norm``),
+    the normalized-gradient / sign-SGD-flavoured variant some importance
+    samplers pair with norm-proportional selection.
+
+    Same mechanics as clipping: coef_j = t/||g_j|| applied to Zbar rows,
+    then one extra matmul per layer.  Returns (mean_loss, grads..., s_total).
+    """
+    k = _k(use_pallas)
+    m = x.shape[0]
+    per_ex, _logits, hs, zbars = backprop_intermediates(spec, params, x, y)
+    _s_layers, s_total = norms_from_intermediates(hs, zbars, use_pallas)
+    coef = target_norm / jnp.sqrt(jnp.maximum(s_total, 1e-24))
+    zprime = [zb * coef[:, None].astype(zb.dtype) for zb in zbars]
+    grads = [k.matmul_t(h, zb) / m for h, zb in zip(hs, zprime)]
+    return (jnp.mean(per_ex), *grads, s_total)
+
+
+def step_clipped(spec: M.ModelSpec, params, x, y, lr, clip_c, noise_sigma,
+                 seed, *, use_pallas=True):
+    """Paper §6 + Gaussian mechanism = DP-SGD, via the trick.
+
+    1. one batched fwd+bwd -> Haug, Zbar            (standard cost)
+    2. s_j via the §4 factorization                  (O(mnp))
+    3. Zbar' = clip_scale(Zbar, s, C)                (O(mnp))
+    4. Wbar' = Haug^T @ Zbar'                        (ONE extra matmul/layer)
+    5. add sigma*C gaussian noise, average, SGD step
+
+    Returns (*params', mean_loss, s_total, clip_frac).
+    """
+    k = _k(use_pallas)
+    m = x.shape[0]
+    per_ex, _logits, hs, zbars = backprop_intermediates(spec, params, x, y)
+    s_layers, s_total = norms_from_intermediates(hs, zbars, use_pallas)
+    zprime = [k.clip_scale(zb, s_total, clip_c) for zb in zbars]
+    grads = grads_from_intermediates(hs, zprime, None, use_pallas)
+    key = jax.random.PRNGKey(seed)
+    new = []
+    for i, (w, g) in enumerate(zip(params, grads)):
+        key, sub = jax.random.split(key)
+        noise = jax.random.normal(sub, g.shape, jnp.float32)
+        g = (g + noise_sigma * clip_c * noise) / m
+        new.append(w - lr * g.astype(w.dtype))
+    clip_frac = jnp.mean((jnp.sqrt(s_total) > clip_c).astype(jnp.float32))
+    return (*new, jnp.mean(per_ex), s_total, clip_frac)

@@ -1,0 +1,123 @@
+"""AOT pipeline tests: lowering, manifest integrity, HLO text sanity.
+
+These guard the interchange contract the rust loader depends on; a manifest
+or calling-convention drift here breaks L3 at runtime, so the tests pin it
+at build time.
+"""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.main(["--out-dir", out, "--presets", "tiny"])
+    with open(os.path.join(out, "manifest.json")) as f:
+        return out, json.load(f)
+
+
+EXPECTED_ENTRIES = {
+    "fwd", "norms_pegrad", "grads_pegrad", "grads_normalized",
+    "step_vanilla", "step_pegrad", "step_clipped", "grad_batch1",
+    "norms_naive", "step_clipped_naive",
+}
+
+
+class TestManifest:
+    def test_format_and_entries(self, built):
+        _, man = built
+        assert man["format_version"] == aot.FORMAT_VERSION
+        tiny = man["presets"]["tiny"]
+        assert set(tiny["entries"]) == EXPECTED_ENTRIES
+        assert tiny["dims"] == [16, 32, 32, 10]
+        assert tiny["m"] == 8
+        assert tiny["param_count"] == M.get_spec("tiny").param_count()
+
+    def test_files_exist_and_parse(self, built):
+        out, man = built
+        for e in man["presets"]["tiny"]["entries"].values():
+            path = os.path.join(out, e["file"])
+            assert os.path.exists(path)
+            text = open(path).read()
+            assert text.startswith("HloModule")
+            assert "ENTRY" in text
+
+    def test_input_shapes_match_spec(self, built):
+        _, man = built
+        spec = M.get_spec("tiny")
+        ins = man["presets"]["tiny"]["entries"]["norms_pegrad"]["inputs"]
+        wshapes = spec.weight_shapes()
+        for i, (a, b) in enumerate(wshapes):
+            assert ins[i]["shape"] == [a, b]
+        assert ins[len(wshapes)]["shape"] == [spec.m, spec.dims[0]]
+        assert ins[len(wshapes) + 1]["dtype"] == "int32"
+
+    def test_output_arity(self, built):
+        _, man = built
+        ent = man["presets"]["tiny"]["entries"]
+        n = M.get_spec("tiny").n_layers
+        assert len(ent["fwd"]["outputs"]) == 3
+        assert len(ent["norms_pegrad"]["outputs"]) == 3
+        assert len(ent["step_vanilla"]["outputs"]) == n + 1
+        assert len(ent["step_pegrad"]["outputs"]) == n + 3
+        assert len(ent["step_clipped"]["outputs"]) == n + 3
+        assert len(ent["grads_pegrad"]["outputs"]) == n + 3
+
+    def test_norms_pegrad_output_shapes(self, built):
+        _, man = built
+        spec = M.get_spec("tiny")
+        outs = man["presets"]["tiny"]["entries"]["norms_pegrad"]["outputs"]
+        assert outs[0]["shape"] == [spec.m]
+        assert outs[1]["shape"] == [spec.m, spec.n_layers]
+        assert outs[2]["shape"] == [spec.m]
+
+    def test_rebuild_merges_presets(self, built, tmp_path):
+        """Re-running aot for another preset must not drop existing ones."""
+        out, _ = built
+        aot.main(["--out-dir", out, "--presets", "sweep64"])
+        with open(os.path.join(out, "manifest.json")) as f:
+            man = json.load(f)
+        assert {"tiny", "sweep64"} <= set(man["presets"])
+
+
+class TestHloText:
+    def test_pallas_and_ref_variants_agree_numerically(self, tmp_path):
+        """interpret-mode Pallas and the jnp oracle lower to HLO that
+        computes the same function (executed via jax here; rust re-checks
+        through PJRT in its integration tests)."""
+        from compile import pegrad
+        spec = M.get_spec("tiny")
+        params = M.init_params(spec, 0)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(spec.m, spec.dims[0]))
+                        .astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 10, spec.m).astype(np.int32))
+        a = pegrad.norms_pegrad(spec, params, x, y, use_pallas=True)
+        b = pegrad.norms_pegrad(spec, params, x, y, use_pallas=False)
+        np.testing.assert_allclose(a[0], b[0], rtol=1e-5)
+
+    def test_op_histogram(self):
+        text = ("HloModule m\n"
+                "ENTRY e {\n"
+                "  a = f32[2,2]{1,0} parameter(0)\n"
+                "  b = f32[2,2]{1,0} dot(a, a)\n"
+                "  c = f32[2,2]{1,0} add(b, b)\n"
+                "  d = f32[2,2]{1,0} add(c, c)\n"
+                "}\n")
+        hist = aot.hlo_op_histogram(text)
+        assert hist["add"] == 2
+        assert hist["dot"] == 1
+
+    def test_scalar_knobs_are_rank1(self, built):
+        _, man = built
+        ins = man["presets"]["tiny"]["entries"]["step_clipped"]["inputs"]
+        # trailing knobs: lr, clip_c, sigma (f32[1]) and seed (i32[1])
+        assert [i["shape"] for i in ins[-4:]] == [[1], [1], [1], [1]]
+        assert ins[-1]["dtype"] == "int32"

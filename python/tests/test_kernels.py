@@ -1,0 +1,188 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/block overrides; fixed cases pin the edge
+geometry (single row, single column, non-divisible tiles, zero and huge
+inputs).  These are the core correctness signal for the trick's O(mnp)
+kernels — everything downstream assumes them.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.row_norms import pick_block
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _arr(rng, m, k, dtype=np.float32, scale=1.0):
+    return jnp.asarray((rng.normal(size=(m, k)) * scale).astype(dtype))
+
+
+shapes = st.tuples(st.integers(1, 67), st.integers(1, 311))
+dtypes = st.sampled_from([np.float32, jnp.bfloat16])
+
+
+class TestRowSqNorms:
+    @given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        rng = np.random.default_rng(seed)
+        x = _arr(rng, *shape)
+        got = kernels.row_sq_norms(x)
+        want = ref.row_sq_norms(x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @given(shape=shapes, bm=st.integers(1, 16), bk=st.integers(1, 64))
+    def test_any_block_shape(self, shape, bm, bk):
+        rng = np.random.default_rng(0)
+        x = _arr(rng, *shape)
+        got = kernels.row_sq_norms(x, block=(bm, bk))
+        np.testing.assert_allclose(got, ref.row_sq_norms(x),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_bf16_accumulates_f32(self):
+        # 1024 values of 1.0 in bf16: an f32 accumulator sums exactly.
+        x = jnp.ones((2, 1024), jnp.bfloat16)
+        got = kernels.row_sq_norms(x)
+        assert got.dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(got), [1024.0, 1024.0])
+
+    @pytest.mark.parametrize("m,k", [(1, 1), (1, 500), (500, 1), (8, 128)])
+    def test_edge_geometry(self, m, k):
+        rng = np.random.default_rng(42)
+        x = _arr(rng, m, k)
+        np.testing.assert_allclose(kernels.row_sq_norms(x),
+                                   ref.row_sq_norms(x), rtol=1e-5, atol=1e-6)
+
+    def test_zeros(self):
+        x = jnp.zeros((5, 37))
+        np.testing.assert_array_equal(np.asarray(kernels.row_sq_norms(x)),
+                                      np.zeros(5))
+
+    def test_large_magnitude(self):
+        x = jnp.full((3, 7), 1e10, jnp.float32)
+        np.testing.assert_allclose(kernels.row_sq_norms(x),
+                                   ref.row_sq_norms(x), rtol=1e-6)
+
+
+class TestPegradNorms:
+    @given(m=st.integers(1, 40), pz=st.integers(1, 130),
+           ph=st.integers(1, 130), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, pz, ph, seed):
+        rng = np.random.default_rng(seed)
+        z, h = _arr(rng, m, pz), _arr(rng, m, ph)
+        np.testing.assert_allclose(kernels.pegrad_norms(z, h),
+                                   ref.pegrad_norms(z, h),
+                                   rtol=1e-5, atol=1e-6)
+
+    @given(bm=st.integers(1, 17))
+    def test_row_block_override(self, bm):
+        rng = np.random.default_rng(7)
+        z, h = _arr(rng, 33, 50), _arr(rng, 33, 20)
+        np.testing.assert_allclose(kernels.pegrad_norms(z, h, bm=bm),
+                                   ref.pegrad_norms(z, h),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_wide_rows_fall_back_to_tiled(self):
+        # Force the VMEM-overflow path: bm floor * (pz+ph) * 4 > budget.
+        rng = np.random.default_rng(3)
+        z, h = _arr(rng, 8, 70_000), _arr(rng, 8, 70_000)
+        got = kernels.pegrad_norms(z, h)
+        np.testing.assert_allclose(got, ref.pegrad_norms(z, h), rtol=1e-4)
+
+    def test_batch_mismatch_raises(self):
+        with pytest.raises(AssertionError):
+            kernels.pegrad_norms(jnp.zeros((3, 4)), jnp.zeros((4, 4)))
+
+
+class TestClipScale:
+    @given(m=st.integers(1, 40), p=st.integers(1, 130),
+           c=st.floats(0.01, 100.0), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, p, c, seed):
+        rng = np.random.default_rng(seed)
+        z = _arr(rng, m, p)
+        s = ref.row_sq_norms(z) * np.abs(rng.normal(size=m)).astype(np.float32)
+        s = jnp.asarray(s)
+        np.testing.assert_allclose(
+            kernels.clip_scale(z, s, jnp.float32(c)),
+            ref.clip_scale(z, s, c), rtol=1e-5, atol=1e-6)
+
+    def test_clip_actually_bounds_norm(self):
+        rng = np.random.default_rng(0)
+        z = _arr(rng, 16, 64, scale=10.0)
+        s = ref.row_sq_norms(z)  # single-layer: s IS the total sq norm
+        c = 1.0
+        zc = kernels.clip_scale(z, s, jnp.float32(c))
+        norms = np.sqrt(np.asarray(ref.row_sq_norms(zc)))
+        assert (norms <= c * (1 + 1e-5)).all()
+
+    def test_rows_below_bound_untouched(self):
+        rng = np.random.default_rng(0)
+        z = _arr(rng, 8, 16, scale=0.01)
+        s = ref.row_sq_norms(z)
+        zc = kernels.clip_scale(z, s, jnp.float32(100.0))
+        np.testing.assert_allclose(zc, z, rtol=1e-6)
+
+    def test_zero_row_stays_zero_not_nan(self):
+        z = jnp.zeros((4, 8))
+        s = jnp.zeros((4,))
+        zc = np.asarray(kernels.clip_scale(z, s, jnp.float32(1.0)))
+        assert np.isfinite(zc).all() and (zc == 0).all()
+
+
+class TestMatmulT:
+    @given(m=st.integers(1, 50), k=st.integers(1, 70), p=st.integers(1, 70),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, p, seed):
+        rng = np.random.default_rng(seed)
+        h, z = _arr(rng, m, k), _arr(rng, m, p)
+        np.testing.assert_allclose(kernels.matmul_t(h, z),
+                                   ref.matmul_t(h, z),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("bm,bk,bp", [(8, 8, 8), (128, 128, 128),
+                                          (16, 32, 64)])
+    def test_tile_shapes(self, bm, bk, bp):
+        rng = np.random.default_rng(1)
+        h, z = _arr(rng, 70, 50, scale=0.5), _arr(rng, 70, 90, scale=0.5)
+        got = kernels.matmul_t(h, z, bm=bm, bk=bk, bp=bp)
+        np.testing.assert_allclose(got, ref.matmul_t(h, z),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_is_transpose_matmul(self):
+        rng = np.random.default_rng(2)
+        h, z = _arr(rng, 10, 5), _arr(rng, 10, 7)
+        np.testing.assert_allclose(kernels.matmul_t(h, z),
+                                   np.asarray(h).T @ np.asarray(z),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestStaticModels:
+    """The §Perf estimators are pure functions — pin their invariants."""
+
+    def test_pick_block_fits_budget(self):
+        for m, k in [(1, 1), (64, 1024), (4096, 65536), (7, 100000)]:
+            bm, bk = pick_block(m, k)
+            assert bm * bk * 4 <= kernels.row_norms.VMEM_BUDGET \
+                if hasattr(kernels, "row_norms") else bm * bk * 4 <= 4 << 20
+            assert 1 <= bm and 1 <= bk
+
+    def test_vmem_estimate_consistent(self):
+        est = kernels.vmem_estimate(64, 1024)
+        assert est["hbm_read_bytes"] == 64 * 1024 * 4
+        assert est["flops"] == 2 * 64 * 1024
+        bm, bk = est["block"]
+        assert est["vmem_bytes"] == bm * bk * 4 + bm * 4
+
+    def test_mxu_estimate_aligned_is_full_util(self):
+        est = kernels.mxu_estimate(128, 256, 384)
+        assert est["mxu_utilization"] == pytest.approx(1.0)
+
+    def test_mxu_estimate_ragged_below_one(self):
+        est = kernels.mxu_estimate(100, 200, 300)
+        assert 0 < est["mxu_utilization"] < 1.0

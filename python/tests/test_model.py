@@ -1,0 +1,162 @@
+"""L2 model structure tests: specs, init, forward capture, losses."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _batch(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(spec.m, spec.dims[0])).astype(np.float32))
+    if spec.loss == "softmax_ce":
+        y = jnp.asarray(rng.integers(0, spec.dims[-1], spec.m).astype(np.int32))
+    else:
+        y = jnp.asarray(rng.normal(size=(spec.m, spec.dims[-1]))
+                        .astype(np.float32))
+    return x, y
+
+
+class TestSpec:
+    def test_weight_shapes_fold_bias(self):
+        spec = M.ModelSpec(dims=(4, 8, 3))
+        assert spec.weight_shapes() == [(5, 8), (9, 3)]
+        assert spec.param_count() == 5 * 8 + 9 * 3
+
+    def test_flops_model(self):
+        spec = M.ModelSpec(dims=(4, 8, 3), m=2)
+        fwd = 2 * 2 * (5 * 8 + 9 * 3)
+        assert spec.flops_forward() == fwd
+        assert spec.flops_backward() == fwd + 2 * 2 * 9 * 3
+
+    @pytest.mark.parametrize("bad", [
+        dict(dims=(4,)),
+        dict(dims=(4, 8), activation="nope"),
+        dict(dims=(4, 8), loss="nope"),
+        dict(dims=(4, 8), m=0),
+    ])
+    def test_validation(self, bad):
+        with pytest.raises(ValueError):
+            M.ModelSpec(**bad)
+
+    def test_all_presets_construct(self):
+        for name in M.PRESETS:
+            spec = M.get_spec(name)
+            assert spec.param_count() > 0
+        assert M.get_spec("mlp100m").param_count() > 95_000_000
+
+    def test_unknown_preset(self):
+        with pytest.raises(KeyError):
+            M.get_spec("nonexistent")
+
+
+class TestInit:
+    def test_deterministic(self):
+        spec = M.get_spec("tiny")
+        a = M.init_params(spec, seed=5)
+        b = M.init_params(spec, seed=5)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_seed_changes_weights(self):
+        spec = M.get_spec("tiny")
+        a, b = M.init_params(spec, 0), M.init_params(spec, 1)
+        assert not np.allclose(a[0], b[0])
+
+    def test_bias_row_zero(self):
+        spec = M.get_spec("small")
+        for w in M.init_params(spec):
+            np.testing.assert_array_equal(np.asarray(w)[-1, :], 0.0)
+
+    def test_he_scale(self):
+        spec = M.ModelSpec(dims=(1000, 1000, 10), activation="relu")
+        w = np.asarray(M.init_params(spec)[0])[:-1]
+        assert np.std(w) == pytest.approx(np.sqrt(2 / 1000), rel=0.1)
+
+
+class TestForward:
+    def test_capture_shapes(self):
+        spec = M.ModelSpec(dims=(4, 8, 6, 3), m=5)
+        params = M.init_params(spec)
+        x, _ = _batch(spec)
+        logits, hs, zs = M.forward(spec, params, x)
+        assert logits.shape == (5, 3)
+        assert [h.shape for h in hs] == [(5, 5), (5, 9), (5, 7)]
+        assert [z.shape for z in zs] == [(5, 8), (5, 6), (5, 3)]
+
+    def test_augment_adds_ones(self):
+        h = jnp.zeros((3, 2))
+        ha = M.augment(h)
+        np.testing.assert_array_equal(np.asarray(ha)[:, -1], 1.0)
+
+    def test_final_layer_linear(self):
+        # last z must equal logits (no activation on the output layer)
+        spec = M.ModelSpec(dims=(4, 8, 3), m=2, activation="relu")
+        params = M.init_params(spec, 1)
+        x, _ = _batch(spec)
+        logits, _, zs = M.forward(spec, params, x)
+        np.testing.assert_array_equal(np.asarray(logits), np.asarray(zs[-1]))
+
+    @given(act=st.sampled_from(sorted(M.ACTIVATIONS)))
+    def test_activations_run(self, act):
+        spec = M.ModelSpec(dims=(3, 4, 2), m=2, activation=act)
+        logits, _, _ = M.forward(spec, M.init_params(spec), _batch(spec)[0])
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_eps_shifts_z(self):
+        spec = M.ModelSpec(dims=(3, 4, 2), m=2)
+        params = M.init_params(spec, 2)
+        x, _ = _batch(spec)
+        eps = [jnp.ones((2, 4)), jnp.zeros((2, 2))]
+        _, _, zs0 = M.forward(spec, params, x)
+        _, _, zs1 = M.forward(spec, params, x, eps=eps)
+        np.testing.assert_allclose(np.asarray(zs1[0]),
+                                   np.asarray(zs0[0]) + 1.0, rtol=1e-6)
+
+
+class TestLosses:
+    def test_ce_matches_manual(self):
+        spec = M.ModelSpec(dims=(2, 3), m=4, loss="softmax_ce")
+        logits = jnp.asarray(np.random.default_rng(0)
+                             .normal(size=(4, 3)).astype(np.float32))
+        y = jnp.asarray([0, 1, 2, 1], dtype=jnp.int32)
+        got = M.per_example_loss(spec, logits, y)
+        p = np.exp(np.asarray(logits))
+        p /= p.sum(1, keepdims=True)
+        want = -np.log(p[np.arange(4), np.asarray(y)])
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_mse_matches_manual(self):
+        spec = M.ModelSpec(dims=(2, 3), m=4, loss="mse")
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+        got = M.per_example_loss(spec, a, b)
+        want = ((np.asarray(a) - np.asarray(b)) ** 2).mean(1)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_loss_single_consistent_with_batch(self):
+        spec = M.ModelSpec(dims=(4, 8, 3), m=6)
+        params = M.init_params(spec, 3)
+        x, y = _batch(spec, 9)
+        logits, _, _ = M.forward(spec, params, x)
+        batched = np.asarray(M.per_example_loss(spec, logits, y))
+        for j in range(spec.m):
+            single = float(M.loss_single(spec, params, x[j], y[j]))
+            assert single == pytest.approx(batched[j], rel=1e-5)
+
+    def test_ce_nonnegative_and_sane_at_init(self):
+        spec = M.get_spec("tiny")
+        params = M.init_params(spec)
+        x, y = _batch(spec)
+        logits, _, _ = M.forward(spec, params, x)
+        loss = np.asarray(M.per_example_loss(spec, logits, y))
+        assert (loss >= 0).all()
+        # ~ln(10) at random init
+        assert 0.5 < loss.mean() < 6.0

@@ -1,0 +1,223 @@
+"""The paper's central claims, tested as theorems.
+
+* §4: trick norms == naive (vmap) norms, exactly, for arbitrary
+  architectures, activations and losses (hypothesis generates the specs).
+* §6: trick-clipped step == naive-clipped step; clipped norms respect C.
+* step_pegrad with uniform weights == step_vanilla.
+* grads_pegrad == jax.grad of the mean loss.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M, naive, pegrad
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+
+def _batch(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(spec.m, spec.dims[0])).astype(np.float32))
+    if spec.loss == "softmax_ce":
+        y = jnp.asarray(rng.integers(0, spec.dims[-1], spec.m).astype(np.int32))
+    else:
+        y = jnp.asarray(rng.normal(size=(spec.m, spec.dims[-1]))
+                        .astype(np.float32))
+    return x, y
+
+
+random_specs = st.builds(
+    M.ModelSpec,
+    dims=st.lists(st.integers(2, 24), min_size=2, max_size=5).map(tuple),
+    activation=st.sampled_from(["relu", "tanh", "gelu", "sigmoid"]),
+    loss=st.sampled_from(["softmax_ce", "mse"]),
+    m=st.integers(1, 12),
+)
+
+
+class TestTheorem:
+    """Paper §4: s_j^(i) = ||Zbar_j||² ||Haug_j||² equals the explicit norm."""
+
+    @given(spec=random_specs, seed=st.integers(0, 2**31 - 1))
+    def test_trick_equals_naive(self, spec, seed):
+        params = M.init_params(spec, seed % 1000)
+        x, y = _batch(spec, seed)
+        s_t, sl_t, _ = pegrad.norms_pegrad(spec, params, x, y,
+                                           use_pallas=False)
+        s_n, sl_n = naive.norms_naive(spec, params, x, y)
+        np.testing.assert_allclose(s_t, s_n, rtol=5e-4, atol=1e-7)
+        np.testing.assert_allclose(sl_t, sl_n, rtol=5e-4, atol=1e-7)
+
+    @pytest.mark.parametrize("preset", ["tiny", "small"])
+    def test_trick_equals_naive_presets_with_pallas(self, preset):
+        spec = M.get_spec(preset)
+        params = M.init_params(spec, 1)
+        x, y = _batch(spec, 2)
+        s_t, sl_t, _ = pegrad.norms_pegrad(spec, params, x, y,
+                                           use_pallas=True)
+        s_n, sl_n = naive.norms_naive(spec, params, x, y)
+        np.testing.assert_allclose(s_t, s_n, rtol=5e-4)
+        np.testing.assert_allclose(sl_t, sl_n, rtol=5e-4)
+
+    def test_trick_equals_batch1_loop(self):
+        """The literal §3 naive method (m separate backprops) agrees too."""
+        spec = M.ModelSpec(dims=(5, 7, 4), m=6)
+        params = M.init_params(spec, 4)
+        x, y = _batch(spec, 5)
+        s_t, _, _ = pegrad.norms_pegrad(spec, params, x, y, use_pallas=False)
+        for j in range(spec.m):
+            out = naive.grad_batch1(spec, params, x[j], y[j])
+            grads = out[1:]
+            s_j = sum(float(jnp.sum(jnp.square(g))) for g in grads)
+            assert s_j == pytest.approx(float(s_t[j]), rel=1e-4)
+
+    def test_norm_includes_bias_gradient(self):
+        """Haug's constant-1 column makes s cover the bias term exactly."""
+        spec = M.ModelSpec(dims=(3, 2), m=4, loss="mse")
+        params = M.init_params(spec, 0)
+        x, y = _batch(spec, 1)
+        s_t, _, _ = pegrad.norms_pegrad(spec, params, x, y, use_pallas=False)
+        # manual: per-example grad of W (incl. bias row) for a linear model
+        for j in range(3):
+            g = jax.grad(lambda p: M.loss_single(spec, p, x[j], y[j]))(params)
+            manual = float(sum(jnp.sum(jnp.square(gi)) for gi in g))
+            assert manual == pytest.approx(float(s_t[j]), rel=1e-4)
+
+    def test_per_layer_norms_are_components(self):
+        spec = M.get_spec("tiny")
+        params = M.init_params(spec)
+        x, y = _batch(spec)
+        s, sl, _ = pegrad.norms_pegrad(spec, params, x, y, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(sl).sum(1), s, rtol=1e-6)
+        assert (np.asarray(sl) >= 0).all()
+
+
+class TestGrads:
+    def test_grads_pegrad_equal_jax_grad(self):
+        spec = M.get_spec("tiny")
+        params = M.init_params(spec, 7)
+        x, y = _batch(spec, 8)
+        out = pegrad.grads_pegrad(spec, params, x, y, use_pallas=False)
+        grads = out[1:1 + spec.n_layers]
+
+        def mean_loss(p):
+            logits, _, _ = M.forward(spec, p, x)
+            return jnp.mean(M.per_example_loss(spec, logits, y))
+
+        for a, b in zip(grads, jax.grad(mean_loss)(params)):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-7)
+
+    def test_step_pegrad_uniform_equals_vanilla(self):
+        spec = M.get_spec("tiny")
+        params = M.init_params(spec, 2)
+        x, y = _batch(spec, 3)
+        lr = 0.05
+        w = jnp.full((spec.m,), 1.0 / spec.m)
+        out_p = pegrad.step_pegrad(spec, params, x, y, lr, w,
+                                   use_pallas=False)
+        out_v = pegrad.step_vanilla(spec, params, x, y, lr)
+        for a, b in zip(out_p[:spec.n_layers], out_v[:spec.n_layers]):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+        assert float(out_p[spec.n_layers]) == pytest.approx(
+            float(out_v[spec.n_layers]), rel=1e-5)
+
+    def test_is_weights_reweight_linearly(self):
+        """Doubling one example's weight adds exactly its gradient once."""
+        spec = M.ModelSpec(dims=(4, 3), m=4, loss="mse")
+        params = M.init_params(spec, 5)
+        x, y = _batch(spec, 6)
+        base = jnp.full((4,), 0.25)
+        bumped = base.at[2].add(0.25)
+        o1 = pegrad.step_pegrad(spec, params, x, y, 1.0, base,
+                                use_pallas=False)
+        o2 = pegrad.step_pegrad(spec, params, x, y, 1.0, bumped,
+                                use_pallas=False)
+        g2 = jax.grad(lambda p: M.loss_single(spec, p, x[2], y[2]))(params)
+        for w_new1, w_new2, g in zip(o1[:1], o2[:1], g2[:1]):
+            np.testing.assert_allclose(
+                np.asarray(w_new1) - np.asarray(w_new2),
+                0.25 * np.asarray(g), rtol=1e-4, atol=1e-6)
+
+
+class TestClipped:
+    """Paper §6 extension."""
+
+    @given(spec=random_specs, c=st.floats(0.05, 10.0),
+           seed=st.integers(0, 10**6))
+    def test_trick_clip_equals_naive_clip(self, spec, c, seed):
+        params = M.init_params(spec, seed % 997)
+        x, y = _batch(spec, seed)
+        a = pegrad.step_clipped(spec, params, x, y, 0.1, c, 0.0, 0,
+                                use_pallas=False)
+        b = naive.step_clipped_naive(spec, params, x, y, 0.1, c, 0.0, 0)
+        for wa, wb in zip(a[:spec.n_layers], b[:spec.n_layers]):
+            np.testing.assert_allclose(wa, wb, rtol=2e-3, atol=1e-5)
+        # s_total and clip_frac agree
+        np.testing.assert_allclose(a[spec.n_layers + 1],
+                                   b[spec.n_layers + 1], rtol=5e-4,
+                                   atol=1e-7)
+
+    def test_clipped_update_bounded(self):
+        """||param update|| <= lr * C when sigma=0 (the DP-SGD guarantee)."""
+        spec = M.ModelSpec(dims=(6, 8, 4), m=8)
+        params = M.init_params(spec, 1)
+        x, y = _batch(spec, 2)
+        x = x * 50.0  # force huge gradients
+        lr, c = 1.0, 0.5
+        out = pegrad.step_clipped(spec, params, x, y, lr, c, 0.0, 0,
+                                  use_pallas=False)
+        upd_sq = sum(float(jnp.sum(jnp.square(w - nw)))
+                     for w, nw in zip(params, out[:spec.n_layers]))
+        # mean of m clipped grads, each norm <= C  ->  ||upd|| <= lr*C
+        assert np.sqrt(upd_sq) <= lr * c * (1 + 1e-4)
+
+    def test_noise_changes_update_deterministically(self):
+        spec = M.ModelSpec(dims=(3, 2), m=2, loss="mse")
+        params = M.init_params(spec, 0)
+        x, y = _batch(spec, 0)
+        a = pegrad.step_clipped(spec, params, x, y, 0.1, 1.0, 1.0, 42,
+                                use_pallas=False)
+        b = pegrad.step_clipped(spec, params, x, y, 0.1, 1.0, 1.0, 42,
+                                use_pallas=False)
+        c = pegrad.step_clipped(spec, params, x, y, 0.1, 1.0, 1.0, 43,
+                                use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        assert not np.allclose(np.asarray(a[0]), np.asarray(c[0]))
+
+    def test_clip_frac(self):
+        spec = M.ModelSpec(dims=(3, 2), m=4, loss="mse")
+        params = M.init_params(spec, 0)
+        x, y = _batch(spec, 0)
+        out_hi = pegrad.step_clipped(spec, params, x, y, 0.1, 1e9, 0.0, 0,
+                                     use_pallas=False)
+        out_lo = pegrad.step_clipped(spec, params, x, y, 0.1, 1e-9, 0.0, 0,
+                                     use_pallas=False)
+        assert float(out_hi[-1]) == 0.0
+        assert float(out_lo[-1]) == 1.0
+
+
+class TestIntermediates:
+    def test_zbar_matches_manual_chain_rule_linear(self):
+        """For a 1-layer linear+MSE model, Zbar has a closed form."""
+        spec = M.ModelSpec(dims=(3, 2), m=5, loss="mse")
+        params = M.init_params(spec, 9)
+        x, y = _batch(spec, 10)
+        _, _, hs, zbars = pegrad.backprop_intermediates(spec, params, x, y)
+        logits, _, _ = M.forward(spec, params, x)
+        want = 2.0 / spec.dims[-1] * (np.asarray(logits) - np.asarray(y))
+        np.testing.assert_allclose(np.asarray(zbars[0]), want, rtol=1e-5)
+        # hs[0] is the augmented input
+        np.testing.assert_allclose(np.asarray(hs[0])[:, :-1], np.asarray(x),
+                                   rtol=1e-6)
+
+    def test_softmax_zbar_rows_sum_to_zero(self):
+        spec = M.ModelSpec(dims=(3, 4), m=5, loss="softmax_ce")
+        params = M.init_params(spec, 0)
+        x, y = _batch(spec, 0)
+        _, _, _, zbars = pegrad.backprop_intermediates(spec, params, x, y)
+        np.testing.assert_allclose(np.asarray(zbars[-1]).sum(1),
+                                   np.zeros(5), atol=1e-6)

@@ -1,0 +1,66 @@
+//! E7 (kernel-level): the trick's O(mnp) hot-spot in isolation.
+//!
+//! Measures, on the rust reference substrate, the row-wise squared-norm
+//! reduction against the matmuls it piggybacks on — demonstrating at the
+//! kernel level why §5's "negligible extra cost" holds: the reduction is
+//! bandwidth-bound and ~2 flops/element vs 2p flops/element for the
+//! matmul. The TPU-side structure (VMEM footprints, MXU utilization of
+//! the §6 recompute) is reported by `python -m compile.aot --report` and
+//! pinned in python/tests; this bench gives the CPU-side evidence.
+
+use pegrad::bench::{bench_fn, BenchSpec, Table};
+use pegrad::tensor::{ops, Rng, Tensor};
+
+fn main() {
+    let spec = if std::env::args().any(|a| a == "--quick") {
+        BenchSpec::quick()
+    } else {
+        BenchSpec {
+            warmup_secs: 0.1,
+            measure_secs: 0.8,
+            min_samples: 5,
+            max_samples: 80,
+        }
+    };
+    let m = 64usize;
+    let mut table = Table::new(
+        "E7 — kernel-level: row_sq_norms (trick) vs matmul (backprop) at m=64 (ms)",
+        &[
+            "p",
+            "row_sq_norms",
+            "matmul_tn [p,m]x[m,p]",
+            "norms/matmul",
+            "GB/s (norms)",
+        ],
+    );
+    for &p in &[128usize, 256, 512, 1024, 2048] {
+        let mut rng = Rng::new(3);
+        let zbar = Tensor::randn(vec![m, p], &mut rng);
+        let h = Tensor::randn(vec![m, p], &mut rng);
+
+        let t_norm = bench_fn(&format!("norms-{p}"), &spec, || {
+            std::hint::black_box(ops::row_sq_norms(&zbar));
+            std::hint::black_box(ops::row_sq_norms(&h));
+        })
+        .summary
+        .mean;
+        let t_mm = bench_fn(&format!("matmul-{p}"), &spec, || {
+            std::hint::black_box(ops::matmul_tn(&h, &zbar));
+        })
+        .summary
+        .mean;
+        let bytes = 2.0 * (m * p * 4) as f64; // both operands read once
+        table.row(vec![
+            p.to_string(),
+            format!("{:.4}", t_norm * 1e3),
+            format!("{:.4}", t_mm * 1e3),
+            format!("{:.4}", t_norm / t_mm),
+            format!("{:.1}", bytes / t_norm / 1e9),
+        ]);
+    }
+    table.emit(Some(std::path::Path::new("bench_results/e7_kernel.csv")));
+    println!(
+        "shape check: norms/matmul falls like 1/p — the trick's extra work\n\
+         vanishes relative to the matmuls as layers widen (paper §5)."
+    );
+}

@@ -1,0 +1,118 @@
+//! Measurement core: warmup, adaptive iteration count, trimmed stats.
+
+use crate::util::stats::Summary;
+use crate::util::Timer;
+
+/// How to run one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchSpec {
+    /// seconds of warmup before measuring.
+    pub warmup_secs: f64,
+    /// target measurement time; iterations adapt to fill it.
+    pub measure_secs: f64,
+    /// hard bounds on sample count.
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchSpec {
+    fn default() -> Self {
+        BenchSpec {
+            warmup_secs: 0.3,
+            measure_secs: 1.5,
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchSpec {
+    /// Fast profile for CI / tests.
+    pub fn quick() -> BenchSpec {
+        BenchSpec {
+            warmup_secs: 0.05,
+            measure_secs: 0.2,
+            min_samples: 3,
+            max_samples: 20,
+        }
+    }
+}
+
+/// One benchmark's outcome (times in seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean * 1e3
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.summary.p50 * 1e3
+    }
+}
+
+/// Benchmark a closure: warmup until `warmup_secs` elapse, then collect
+/// samples until `measure_secs` elapse (within sample-count bounds).
+pub fn bench_fn(name: &str, spec: &BenchSpec, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    let w = Timer::start();
+    let mut warm_iters = 0u64;
+    while w.secs() < spec.warmup_secs || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    // measure
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    while samples.len() < spec.max_samples
+        && (samples.len() < spec.min_samples || total.secs() < spec.measure_secs)
+    {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_sleep_accurately() {
+        let spec = BenchSpec {
+            warmup_secs: 0.0,
+            measure_secs: 0.1,
+            min_samples: 5,
+            max_samples: 10,
+        };
+        let r = bench_fn("sleep", &spec, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert!(r.summary.p50 >= 0.002, "{:?}", r.summary);
+        assert!(r.summary.p50 < 0.02, "{:?}", r.summary);
+        assert!(r.summary.n >= 5);
+    }
+
+    #[test]
+    fn respects_sample_bounds() {
+        let spec = BenchSpec {
+            warmup_secs: 0.0,
+            measure_secs: 0.01,
+            min_samples: 7,
+            max_samples: 9,
+        };
+        let r = bench_fn("noop", &spec, || { std::hint::black_box(1 + 1); });
+        assert!((7..=9).contains(&r.summary.n), "{}", r.summary.n);
+    }
+}

@@ -1,0 +1,8 @@
+//! Criterion-replacement micro/macro benchmark harness (DESIGN.md §6) and
+//! the report emitters the E1-E7 benches share.
+
+pub mod harness;
+pub mod report;
+
+pub use harness::{bench_fn, BenchResult, BenchSpec};
+pub use report::Table;

@@ -1,0 +1,231 @@
+//! Minimal declarative argument parser: flags (`--x val`, `--x=val`),
+//! boolean switches, repeated `--set key=value` overrides, positionals.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declaration of one accepted option.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// switches take no value
+    pub is_switch: bool,
+    pub default: Option<&'static str>,
+}
+
+impl ArgSpec {
+    pub fn opt(name: &'static str, help: &'static str) -> ArgSpec {
+        ArgSpec {
+            name,
+            help,
+            is_switch: false,
+            default: None,
+        }
+    }
+
+    pub fn with_default(
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> ArgSpec {
+        ArgSpec {
+            name,
+            help,
+            is_switch: false,
+            default: Some(default),
+        }
+    }
+
+    pub fn switch(name: &'static str, help: &'static str) -> ArgSpec {
+        ArgSpec {
+            name,
+            help,
+            is_switch: true,
+            default: None,
+        }
+    }
+}
+
+/// Parse outcome.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    pub values: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positionals: Vec<String>,
+    /// `--set k=v` accumulations, in order.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'"))
+            })
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow!("--{name} expects a number, got '{v}'"))
+            })
+            .transpose()
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Parse `argv` against the specs. `--set k=v` is always accepted.
+pub fn parse(argv: &[String], specs: &[ArgSpec]) -> Result<Parsed> {
+    let mut p = Parsed::default();
+    for s in specs {
+        if let Some(d) = s.default {
+            p.values.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let find = |name: &str| specs.iter().find(|s| s.name == name);
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(rest) = a.strip_prefix("--") {
+            let (name, inline_val) = match rest.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (rest, None),
+            };
+            if name == "set" {
+                let v = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .ok_or_else(|| anyhow!("--set needs key=value"))?
+                            .clone()
+                    }
+                };
+                let (k, val) = v
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("--set needs key=value, got '{v}'"))?;
+                p.overrides.push((k.to_string(), val.to_string()));
+            } else {
+                let spec = find(name).ok_or_else(|| anyhow!("unknown option --{name}"))?;
+                if spec.is_switch {
+                    if inline_val.is_some() {
+                        bail!("--{name} is a switch and takes no value");
+                    }
+                    p.switches.push(name.to_string());
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow!("--{name} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    p.values.insert(name.to_string(), v);
+                }
+            }
+        } else {
+            p.positionals.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(p)
+}
+
+/// Render a help block for the specs.
+pub fn help(specs: &[ArgSpec]) -> String {
+    let mut out = String::new();
+    for s in specs {
+        let head = if s.is_switch {
+            format!("  --{}", s.name)
+        } else if let Some(d) = s.default {
+            format!("  --{} <val={d}>", s.name)
+        } else {
+            format!("  --{} <val>", s.name)
+        };
+        out.push_str(&format!("{head:<34}{}\n", s.help));
+    }
+    out.push_str(&format!(
+        "{:<34}{}\n",
+        "  --set key=value", "config override (repeatable)"
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec::with_default("config", "config file", "run.toml"),
+            ArgSpec::opt("steps", "step count"),
+            ArgSpec::switch("quiet", "no console output"),
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_forms() {
+        let p = parse(
+            &sv(&[
+                "--config=x.toml",
+                "--steps",
+                "50",
+                "--quiet",
+                "--set",
+                "lr=0.1",
+                "--set=preset=base",
+                "trailing",
+            ]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(p.get("config"), Some("x.toml"));
+        assert_eq!(p.get_usize("steps").unwrap(), Some(50));
+        assert!(p.has("quiet"));
+        assert_eq!(p.overrides.len(), 2);
+        assert_eq!(p.overrides[1], ("preset".into(), "base".into()));
+        assert_eq!(p.positionals, vec!["trailing"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = parse(&[], &specs()).unwrap();
+        assert_eq!(p.get("config"), Some("run.toml"));
+        assert_eq!(p.get("steps"), None);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&sv(&["--bogus"]), &specs()).is_err());
+        assert!(parse(&sv(&["--steps"]), &specs()).is_err());
+        assert!(parse(&sv(&["--quiet=1"]), &specs()).is_err());
+        assert!(parse(&sv(&["--set", "noequals"]), &specs()).is_err());
+        let p = parse(&sv(&["--steps", "abc"]), &specs()).unwrap();
+        assert!(p.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = help(&specs());
+        assert!(h.contains("--config"));
+        assert!(h.contains("--set key=value"));
+    }
+}

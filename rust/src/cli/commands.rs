@@ -1,0 +1,246 @@
+//! Subcommand implementations for the `pegrad` binary.
+//!
+//! ```text
+//! pegrad train      --config cfg.toml [--set k=v ...]   train a model
+//! pegrad norms      --preset tiny [--n 256]             per-example norms -> jsonl
+//! pegrad inspect    [--artifacts DIR]                   list artifact presets/entries
+//! pegrad accountant --q 0.01 --sigma 1.1 --steps 10000  DP epsilon calculator
+//! pegrad data       --kind synth --n 8                  preview a dataset sample
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::Config;
+use crate::coordinator::Trainer;
+use crate::privacy::RdpAccountant;
+use crate::runtime::{Manifest, Registry};
+use crate::tensor::Rng;
+
+use super::args::{help, parse, ArgSpec};
+
+pub fn usage() -> String {
+    "pegrad — Efficient Per-Example Gradient Computations (Goodfellow, 2015)\n\
+     \n\
+     usage: pegrad <command> [options]\n\
+     \n\
+     commands:\n\
+     \x20 train        run a training loop (per-example norms on the hot path)\n\
+     \x20 norms        compute per-example gradient norms for a fresh batch\n\
+     \x20 inspect      show artifact manifest contents\n\
+     \x20 accountant   DP-SGD (ε, δ) calculator for the §6 clipped mode\n\
+     \x20 data         generate + summarize a synthetic dataset\n\
+     \x20 help         this message\n"
+        .to_string()
+}
+
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let Some(cmd) = argv.first().cloned() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = argv[1..].to_vec();
+    match cmd.as_str() {
+        "train" => cmd_train(&rest),
+        "norms" => cmd_norms(&rest),
+        "inspect" => cmd_inspect(&rest),
+        "accountant" => cmd_accountant(&rest),
+        "data" => cmd_data(&rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{}", usage()),
+    }
+}
+
+fn train_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("config", "TOML config file (defaults applied otherwise)"),
+        ArgSpec::opt("resume", "checkpoint file to resume from"),
+        ArgSpec::switch("help", "show options"),
+    ]
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let specs = train_specs();
+    let p = parse(argv, &specs)?;
+    if p.has("help") {
+        println!("pegrad train options:\n{}", help(&specs));
+        return Ok(());
+    }
+    let mut cfg = match p.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    cfg.apply_overrides(&p.overrides)?;
+    log::info!("config: {cfg:?}");
+    let mut tr = Trainer::new(cfg)?;
+    if let Some(ck) = p.get("resume") {
+        let ck = crate::coordinator::Checkpoint::load(std::path::Path::new(ck))?;
+        log::info!("resuming from step {}", ck.step);
+        tr.restore(ck)?;
+    }
+    let summary = tr.run()?;
+    println!(
+        "final: loss {:.4}  eval {:.4}{}  {:.2} ms/step over {} steps{}",
+        summary.final_loss,
+        summary.eval_loss.unwrap_or(f32::NAN),
+        summary
+            .eval_accuracy
+            .map(|a| format!("  acc {:.1}%", a * 100.0))
+            .unwrap_or_default(),
+        summary.mean_step_ms,
+        summary.steps,
+        summary
+            .epsilon
+            .map(|e| format!("  ε = {e:.3}"))
+            .unwrap_or_default(),
+    );
+    Ok(())
+}
+
+fn cmd_norms(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        ArgSpec::with_default("preset", "artifact preset", "small"),
+        ArgSpec::with_default("artifacts", "artifacts dir", "artifacts"),
+        ArgSpec::with_default("seed", "rng seed", "0"),
+        ArgSpec::switch("per-layer", "also emit per-weight-matrix norms (paper §2: \"the norm of the gradient for an individual weight matrix\")"),
+        ArgSpec::switch("help", "show options"),
+    ];
+    let p = parse(argv, &specs)?;
+    if p.has("help") {
+        println!("pegrad norms options:\n{}", help(&specs));
+        return Ok(());
+    }
+    let reg = Registry::new(Manifest::load(p.get("artifacts").unwrap())?);
+    let preset = reg.manifest.preset(p.get("preset").unwrap())?.clone();
+    let spec = preset.spec()?;
+    let seed = p.get_usize("seed")?.unwrap_or(0) as u64;
+    let mut rng = Rng::new(seed);
+    let params = spec.init_params(&mut rng);
+    let x = crate::tensor::Tensor::randn(vec![spec.m, spec.in_dim()], &mut rng);
+    let y = crate::nn::loss::Targets::Classes(
+        (0..spec.m)
+            .map(|_| rng.next_below(spec.out_dim() as u64) as i32)
+            .collect(),
+    );
+    let entry = reg.get(&preset.name, "norms_pegrad")?;
+    let mut args: Vec<crate::runtime::executable::Arg> =
+        params.iter().map(crate::runtime::executable::Arg::from).collect();
+    args.push((&x).into());
+    args.push((&y).into());
+    let out = entry.call(&args)?;
+    let per_layer = p.has("per-layer");
+    for (j, (&s, &l)) in out[0].data().iter().zip(out[2].data()).enumerate() {
+        let mut fields = vec![
+            ("example", crate::util::Json::num(j as f64)),
+            ("grad_norm", crate::util::Json::num(s.sqrt() as f64)),
+            ("loss", crate::util::Json::num(l as f64)),
+        ];
+        if per_layer {
+            // s_layers[j, i] — sqrt gives ||dL_j/dW_i|| per weight matrix
+            let layer_norms: Vec<f32> =
+                out[1].row(j).iter().map(|v| v.sqrt()).collect();
+            fields.push(("layer_norms", crate::util::Json::arr_f32(&layer_norms)));
+        }
+        println!("{}", crate::util::Json::obj(fields));
+    }
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let specs = vec![ArgSpec::with_default("artifacts", "artifacts dir", "artifacts")];
+    let p = parse(argv, &specs)?;
+    let manifest = Manifest::load(p.get("artifacts").unwrap())?;
+    println!("artifacts dir: {}", manifest.dir.display());
+    for (name, preset) in &manifest.presets {
+        println!(
+            "\npreset {name}: dims={:?} act={} loss={} m={} params={} pallas={}",
+            preset.dims,
+            preset.activation,
+            preset.loss,
+            preset.m,
+            preset.param_count,
+            preset.use_pallas
+        );
+        for (ename, e) in &preset.entries {
+            println!(
+                "  {ename:<22} {} in / {} out   ({})",
+                e.inputs.len(),
+                e.outputs.len(),
+                e.file
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_accountant(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        ArgSpec::opt("q", "subsampling rate m/N"),
+        ArgSpec::opt("sigma", "noise multiplier"),
+        ArgSpec::opt("steps", "number of steps"),
+        ArgSpec::with_default("delta", "target delta", "1e-5"),
+    ];
+    let p = parse(argv, &specs)?;
+    let q = p
+        .get_f64("q")?
+        .ok_or_else(|| anyhow!("--q is required"))?;
+    let sigma = p
+        .get_f64("sigma")?
+        .ok_or_else(|| anyhow!("--sigma is required"))?;
+    let steps = p
+        .get_usize("steps")?
+        .ok_or_else(|| anyhow!("--steps is required"))? as u64;
+    let delta = p.get_f64("delta")?.unwrap();
+    let mut acc = RdpAccountant::new(q, sigma);
+    acc.observe_steps(steps);
+    println!(
+        "subsampled Gaussian: q={q} sigma={sigma} steps={steps} -> ε = {:.4} at δ = {delta}",
+        acc.epsilon(delta)
+    );
+    Ok(())
+}
+
+fn cmd_data(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        ArgSpec::with_default("kind", "synth|digits|regression", "synth"),
+        ArgSpec::with_default("n", "examples", "8"),
+        ArgSpec::with_default("seed", "rng seed", "0"),
+    ];
+    let p = parse(argv, &specs)?;
+    let n = p.get_usize("n")?.unwrap();
+    let seed = p.get_usize("seed")?.unwrap() as u64;
+    let ds = match p.get("kind").unwrap() {
+        "synth" => {
+            crate::data::synth::generate(&crate::data::synth::SynthConfig {
+                n,
+                seed,
+                ..Default::default()
+            })
+            .0
+        }
+        "digits" => crate::data::digits::generate(&crate::data::digits::DigitsConfig {
+            n,
+            seed,
+            ..Default::default()
+        }),
+        "regression" => {
+            crate::data::regression::generate(&crate::data::regression::RegressionConfig {
+                n,
+                seed,
+                ..Default::default()
+            })
+        }
+        k => bail!("unknown data kind '{k}'"),
+    };
+    println!("{}: {} examples, dim {}", ds.name, ds.len(), ds.dim());
+    if let crate::nn::loss::Targets::Classes(cls) = &ds.y {
+        let mut counts = std::collections::BTreeMap::new();
+        for &c in cls {
+            *counts.entry(c).or_insert(0usize) += 1;
+        }
+        println!("class counts: {counts:?}");
+    }
+    Ok(())
+}

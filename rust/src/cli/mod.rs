@@ -1,0 +1,7 @@
+//! Command-line interface (hand-rolled; `clap` is not vendored —
+//! DESIGN.md §6).
+
+pub mod args;
+pub mod commands;
+
+pub use args::{ArgSpec, Parsed};

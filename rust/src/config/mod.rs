@@ -1,0 +1,9 @@
+//! Typed run configuration: schema, TOML-subset parser, presets.
+
+pub mod parse;
+pub mod schema;
+
+pub use parse::parse_toml;
+pub use schema::{
+    Config, DataKind, OptimKind, PrivacyConfig, RunMode, SamplerKind,
+};

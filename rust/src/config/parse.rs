@@ -1,0 +1,215 @@
+//! TOML-subset parser (the `toml` crate is not vendored — DESIGN.md §6).
+//!
+//! Supported grammar, which covers every config this framework writes:
+//!
+//! ```toml
+//! # comment
+//! key = "string"        [section]
+//! key = 3.5             key = true
+//! key = [1, 2, 3]
+//! ```
+//!
+//! Values land in a flat `section.key -> Value` map; the schema layer does
+//! the typing. Unsupported TOML (multi-line strings, inline tables, dotted
+//! keys, datetimes) errors loudly with a line number rather than parsing
+//! wrong.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|n| {
+            (n >= 0.0 && n.fract() == 0.0).then_some(n as usize)
+        })
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_list(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::List(v) => v.iter().map(Value::as_usize).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parse the TOML subset into a flat `"section.key" -> Value` map (keys in
+/// the root section have no prefix).
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, Value>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated section header", ln + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') {
+                bail!("line {}: bad section name '{name}'", ln + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected 'key = value'", ln + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() || key.contains(char::is_whitespace) {
+            bail!("line {}: bad key '{key}'", ln + 1);
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow!("line {}: {e}", ln + 1))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full, val);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            bail!("embedded quote in string (escapes unsupported)");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated list"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::List(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::List(items));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_grammar() {
+        let m = parse_toml(
+            r#"
+            # top comment
+            name = "run1"   # trailing comment
+            steps = 500
+            lr = 0.05
+            debug = true
+
+            [model]
+            dims = [64, 256, 10]
+            preset = "small"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(m["name"], Value::Str("run1".into()));
+        assert_eq!(m["steps"], Value::Num(500.0));
+        assert_eq!(m["lr"], Value::Num(0.05));
+        assert_eq!(m["debug"], Value::Bool(true));
+        assert_eq!(m["model.preset"], Value::Str("small".into()));
+        assert_eq!(
+            m["model.dims"].as_usize_list().unwrap(),
+            vec![64, 256, 10]
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let m = parse_toml(r##"tag = "a#b""##).unwrap();
+        assert_eq!(m["tag"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("ok = 1\nbroken").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse_toml("x = \"unterminated").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unsupported() {
+        assert!(parse_toml("[a").is_err());
+        assert!(parse_toml("a b = 1").is_err());
+        assert!(parse_toml("x = [1, 2").is_err());
+        assert!(parse_toml("x = 2020-01-01").is_err());
+    }
+
+    #[test]
+    fn empty_list_and_negatives() {
+        let m = parse_toml("a = []\nb = -2.5").unwrap();
+        assert_eq!(m["a"], Value::List(vec![]));
+        assert_eq!(m["b"], Value::Num(-2.5));
+    }
+}

@@ -1,0 +1,353 @@
+//! Typed run configuration and validation.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::optim::Schedule;
+
+use super::parse::{parse_toml, Value};
+
+/// What the trainer does each step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunMode {
+    /// `step_vanilla`: no per-example machinery (baseline).
+    Vanilla,
+    /// `step_pegrad`: fused SGD with IS weights + norms out.
+    Pegrad,
+    /// `grads_pegrad` + rust optimizer (enables momentum/Adam).
+    RustOptim,
+    /// `step_clipped`: DP-SGD via the §6 extension.
+    Clipped,
+}
+
+impl RunMode {
+    pub fn parse(s: &str) -> Option<RunMode> {
+        Some(match s {
+            "vanilla" => RunMode::Vanilla,
+            "pegrad" => RunMode::Pegrad,
+            "rust_optim" => RunMode::RustOptim,
+            "clipped" => RunMode::Clipped,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RunMode::Vanilla => "vanilla",
+            RunMode::Pegrad => "pegrad",
+            RunMode::RustOptim => "rust_optim",
+            RunMode::Clipped => "clipped",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    Uniform,
+    Importance,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataKind {
+    Synth,
+    Digits,
+    Regression,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimKind {
+    Sgd,
+    Momentum,
+    Adam,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrivacyConfig {
+    pub clip_c: f32,
+    pub noise_sigma: f32,
+    pub delta: f64,
+}
+
+/// Complete training-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub run_name: String,
+    pub preset: String,
+    pub mode: RunMode,
+    pub steps: usize,
+    pub seed: u64,
+    pub schedule: Schedule,
+    pub sampler: SamplerKind,
+    pub sampler_floor: f32,
+    pub sampler_lambda: f32,
+    pub data: DataKind,
+    pub data_n: usize,
+    pub imbalance: f32,
+    pub label_noise: f32,
+    pub optim: OptimKind,
+    pub privacy: Option<PrivacyConfig>,
+    pub eval_every: usize,
+    pub checkpoint_every: usize,
+    pub out_dir: String,
+    pub artifacts_dir: String,
+    /// depth of the gather-prefetch queue (0 = synchronous).
+    pub prefetch_depth: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            run_name: "run".into(),
+            preset: "small".into(),
+            mode: RunMode::Pegrad,
+            steps: 200,
+            seed: 0,
+            schedule: Schedule::Constant { lr: 0.05 },
+            sampler: SamplerKind::Importance,
+            sampler_floor: 0.1,
+            sampler_lambda: 0.3,
+            data: DataKind::Synth,
+            data_n: 4096,
+            imbalance: 1.0,
+            label_noise: 0.0,
+            optim: OptimKind::Sgd,
+            privacy: None,
+            eval_every: 50,
+            checkpoint_every: 0,
+            out_dir: "runs".into(),
+            artifacts_dir: "artifacts".into(),
+            prefetch_depth: 2,
+        }
+    }
+}
+
+impl Config {
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if self.data_n == 0 {
+            bail!("data_n must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.sampler_floor) {
+            bail!("sampler_floor must be in [0,1)");
+        }
+        if !(0.0..=1.0).contains(&self.label_noise) {
+            bail!("label_noise must be in [0,1]");
+        }
+        if self.imbalance <= 0.0 || self.imbalance > 1.0 {
+            bail!("imbalance must be in (0,1]");
+        }
+        if let Some(p) = &self.privacy {
+            if p.clip_c <= 0.0 {
+                bail!("privacy.clip_c must be > 0");
+            }
+            if p.noise_sigma < 0.0 {
+                bail!("privacy.noise_sigma must be >= 0");
+            }
+            if !(0.0..1.0).contains(&(p.delta as f32)) || p.delta <= 0.0 {
+                bail!("privacy.delta must be in (0,1)");
+            }
+        }
+        if self.mode == RunMode::Clipped && self.privacy.is_none() {
+            bail!("mode=clipped requires a [privacy] section");
+        }
+        Ok(())
+    }
+
+    /// Parse from TOML text, starting from defaults.
+    pub fn from_toml(text: &str) -> Result<Config> {
+        let map = parse_toml(text)?;
+        let mut cfg = Config::default();
+        apply(&mut cfg, &map)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Apply `key=value` command-line overrides on top.
+    pub fn apply_overrides(&mut self, kvs: &[(String, String)]) -> Result<()> {
+        let text: String = kvs
+            .iter()
+            .map(|(k, v)| {
+                // quote values that are clearly strings
+                if v.parse::<f64>().is_ok() || v == "true" || v == "false"
+                    || v.starts_with('[')
+                {
+                    format!("{k} = {v}\n")
+                } else {
+                    format!("{k} = \"{v}\"\n")
+                }
+            })
+            .collect();
+        let map = parse_toml(&text)?;
+        apply(self, &map)?;
+        self.validate()
+    }
+}
+
+fn apply(cfg: &mut Config, map: &BTreeMap<String, Value>) -> Result<()> {
+    let mut privacy = cfg.privacy.clone().unwrap_or(PrivacyConfig {
+        clip_c: 1.0,
+        noise_sigma: 0.0,
+        delta: 1e-5,
+    });
+    let mut privacy_touched = cfg.privacy.is_some();
+    for (k, v) in map {
+        let fail = || anyhow!("config key '{k}': wrong type");
+        match k.as_str() {
+            "run_name" => cfg.run_name = v.as_str().ok_or_else(fail)?.into(),
+            "preset" | "model.preset" => cfg.preset = v.as_str().ok_or_else(fail)?.into(),
+            "mode" => {
+                cfg.mode = RunMode::parse(v.as_str().ok_or_else(fail)?)
+                    .ok_or_else(|| anyhow!("unknown mode {v:?}"))?
+            }
+            "steps" => cfg.steps = v.as_usize().ok_or_else(fail)?,
+            "seed" => cfg.seed = v.as_usize().ok_or_else(fail)? as u64,
+            "lr" => {
+                cfg.schedule = Schedule::Constant {
+                    lr: v.as_f64().ok_or_else(fail)? as f32,
+                }
+            }
+            "schedule" => {
+                cfg.schedule = Schedule::parse(v.as_str().ok_or_else(fail)?)
+                    .ok_or_else(|| anyhow!("bad schedule spec {v:?}"))?
+            }
+            "eval_every" => cfg.eval_every = v.as_usize().ok_or_else(fail)?,
+            "checkpoint_every" => cfg.checkpoint_every = v.as_usize().ok_or_else(fail)?,
+            "out_dir" => cfg.out_dir = v.as_str().ok_or_else(fail)?.into(),
+            "artifacts_dir" => cfg.artifacts_dir = v.as_str().ok_or_else(fail)?.into(),
+            "prefetch_depth" => cfg.prefetch_depth = v.as_usize().ok_or_else(fail)?,
+            "sampler.kind" => {
+                cfg.sampler = match v.as_str().ok_or_else(fail)? {
+                    "uniform" => SamplerKind::Uniform,
+                    "importance" => SamplerKind::Importance,
+                    s => bail!("unknown sampler kind '{s}'"),
+                }
+            }
+            "sampler.floor" => cfg.sampler_floor = v.as_f64().ok_or_else(fail)? as f32,
+            "sampler.lambda" => cfg.sampler_lambda = v.as_f64().ok_or_else(fail)? as f32,
+            "data.kind" => {
+                cfg.data = match v.as_str().ok_or_else(fail)? {
+                    "synth" => DataKind::Synth,
+                    "digits" => DataKind::Digits,
+                    "regression" => DataKind::Regression,
+                    s => bail!("unknown data kind '{s}'"),
+                }
+            }
+            "data.n" => cfg.data_n = v.as_usize().ok_or_else(fail)?,
+            "data.imbalance" => cfg.imbalance = v.as_f64().ok_or_else(fail)? as f32,
+            "data.label_noise" => cfg.label_noise = v.as_f64().ok_or_else(fail)? as f32,
+            "optim.kind" => {
+                cfg.optim = match v.as_str().ok_or_else(fail)? {
+                    "sgd" => OptimKind::Sgd,
+                    "momentum" => OptimKind::Momentum,
+                    "adam" => OptimKind::Adam,
+                    s => bail!("unknown optimizer '{s}'"),
+                }
+            }
+            "privacy.clip_c" => {
+                privacy.clip_c = v.as_f64().ok_or_else(fail)? as f32;
+                privacy_touched = true;
+            }
+            "privacy.noise_sigma" => {
+                privacy.noise_sigma = v.as_f64().ok_or_else(fail)? as f32;
+                privacy_touched = true;
+            }
+            "privacy.delta" => {
+                privacy.delta = v.as_f64().ok_or_else(fail)?;
+                privacy_touched = true;
+            }
+            other => bail!("unknown config key '{other}'"),
+        }
+    }
+    cfg.privacy = privacy_touched.then_some(privacy);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = Config::from_toml(
+            r#"
+            run_name = "e4"
+            preset = "base"
+            mode = "pegrad"
+            steps = 1000
+            schedule = "cosine:0.1:0.001:50:1000"
+
+            [sampler]
+            kind = "importance"
+            floor = 0.2
+
+            [data]
+            kind = "synth"
+            n = 8192
+            imbalance = 0.5
+            label_noise = 0.1
+
+            [privacy]
+            clip_c = 1.5
+            noise_sigma = 1.1
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.preset, "base");
+        assert_eq!(cfg.steps, 1000);
+        assert_eq!(cfg.sampler, SamplerKind::Importance);
+        assert_eq!(cfg.sampler_floor, 0.2);
+        assert_eq!(cfg.imbalance, 0.5);
+        let p = cfg.privacy.unwrap();
+        assert_eq!(p.clip_c, 1.5);
+        assert!(matches!(cfg.schedule, Schedule::WarmupCosine { .. }));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = Config::from_toml("bogus_key = 1").unwrap_err().to_string();
+        assert!(err.contains("bogus_key"));
+    }
+
+    #[test]
+    fn clipped_mode_needs_privacy() {
+        let err = Config::from_toml("mode = \"clipped\"").unwrap_err().to_string();
+        assert!(err.contains("privacy"));
+    }
+
+    #[test]
+    fn validation_bounds() {
+        assert!(Config::from_toml("steps = 0").is_err());
+        assert!(Config::from_toml("[sampler]\nfloor = 1.5").is_err());
+        assert!(Config::from_toml("[data]\nlabel_noise = 2").is_err());
+        assert!(Config::from_toml("[privacy]\nclip_c = -1").is_err());
+    }
+
+    #[test]
+    fn overrides_apply_after_file() {
+        let mut cfg = Config::from_toml("steps = 10").unwrap();
+        cfg.apply_overrides(&[
+            ("steps".into(), "99".into()),
+            ("preset".into(), "tiny".into()),
+            ("lr".into(), "0.5".into()),
+        ])
+        .unwrap();
+        assert_eq!(cfg.steps, 99);
+        assert_eq!(cfg.preset, "tiny");
+        assert_eq!(cfg.schedule, Schedule::Constant { lr: 0.5 });
+    }
+}

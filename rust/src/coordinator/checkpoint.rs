@@ -1,0 +1,215 @@
+//! Binary checkpointing: params, optimizer state, RNG, step counter.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "PEGD" | u32 version | u64 step | [u64;4] rng state
+//! | u32 n_params  | n_params  tensors
+//! | u32 n_opt     | n_opt     tensors
+//! tensor := u32 rank | u64 dims[rank] | f32 data[numel]
+//! ```
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::{Rng, Tensor};
+
+const MAGIC: &[u8; 4] = b"PEGD";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub rng_state: [u64; 4],
+    pub params: Vec<Tensor>,
+    pub opt_state: Vec<Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new(step: u64, rng: &Rng, params: Vec<Tensor>, opt_state: Vec<Tensor>) -> Self {
+        Checkpoint {
+            step,
+            rng_state: rng.state(),
+            params,
+            opt_state,
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        // write to a temp file then rename: a crash mid-write must not
+        // destroy the previous checkpoint
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&self.step.to_le_bytes())?;
+            for s in self.rng_state {
+                f.write_all(&s.to_le_bytes())?;
+            }
+            write_tensors(&mut f, &self.params)?;
+            write_tensors(&mut f, &self.opt_state)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f =
+            fs::File::open(path).map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a pegrad checkpoint", path.display());
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("checkpoint version {version} != supported {VERSION}");
+        }
+        let step = read_u64(&mut f)?;
+        let mut rng_state = [0u64; 4];
+        for s in &mut rng_state {
+            *s = read_u64(&mut f)?;
+        }
+        let params = read_tensors(&mut f)?;
+        let opt_state = read_tensors(&mut f)?;
+        Ok(Checkpoint {
+            step,
+            rng_state,
+            params,
+            opt_state,
+        })
+    }
+
+    pub fn rng(&self) -> Rng {
+        Rng::from_state(self.rng_state)
+    }
+}
+
+fn write_tensors(f: &mut fs::File, ts: &[Tensor]) -> Result<()> {
+    f.write_all(&(ts.len() as u32).to_le_bytes())?;
+    for t in ts {
+        f.write_all(&(t.rank() as u32).to_le_bytes())?;
+        for &d in t.dims() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // bulk-write the f32 slice
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.numel() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+fn read_tensors(f: &mut fs::File) -> Result<Vec<Tensor>> {
+    let n = read_u32(f)? as usize;
+    if n > 1 << 20 {
+        bail!("implausible tensor count {n} (corrupt checkpoint?)");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rank = read_u32(f)? as usize;
+        if rank > 8 {
+            bail!("implausible rank {rank} (corrupt checkpoint?)");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(read_u64(f)? as usize);
+        }
+        let numel: usize = dims.iter().product();
+        if numel > 1 << 31 {
+            bail!("implausible tensor size (corrupt checkpoint?)");
+        }
+        let mut data = vec![0f32; numel];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+        };
+        f.read_exact(bytes)?;
+        out.push(Tensor::new(dims, data));
+    }
+    Ok(out)
+}
+
+fn read_u32(f: &mut fs::File) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut fs::File) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pegrad-ckpt-{}-{tag}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(9);
+        let params = vec![
+            Tensor::randn(vec![3, 4], &mut rng),
+            Tensor::randn(vec![5], &mut rng),
+        ];
+        let opt = vec![Tensor::randn(vec![3, 4], &mut rng)];
+        let ck = Checkpoint::new(42, &rng, params.clone(), opt.clone());
+        let path = tmpfile("rt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params, params);
+        assert_eq!(back.opt_state, opt);
+        // rng resumes identically
+        let mut r1 = rng.clone();
+        let mut r2 = back.rng();
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmpfile("bad");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_tensors_ok() {
+        let rng = Rng::new(0);
+        let ck = Checkpoint::new(0, &rng, vec![], vec![]);
+        let path = tmpfile("empty");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert!(back.params.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn atomic_overwrite_preserves_on_rewrite() {
+        let rng = Rng::new(0);
+        let path = tmpfile("atomic");
+        Checkpoint::new(1, &rng, vec![Tensor::ones(vec![2])], vec![])
+            .save(&path)
+            .unwrap();
+        Checkpoint::new(2, &rng, vec![Tensor::zeros(vec![2])], vec![])
+            .save(&path)
+            .unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

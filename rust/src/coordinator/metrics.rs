@@ -1,0 +1,203 @@
+//! Run metrics: JSONL event log + CSV table + console summaries.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::stats::Welford;
+use crate::util::Json;
+
+/// One training step's measurements.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    /// mean per-example gradient norm (sqrt of s), if computed this step.
+    pub mean_norm: Option<f32>,
+    pub max_norm: Option<f32>,
+    pub clip_frac: Option<f32>,
+    pub epsilon: Option<f64>,
+    pub step_ms: f64,
+}
+
+impl StepRecord {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("step", Json::num(self.step as f64)),
+            ("loss", Json::num(self.loss as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("step_ms", Json::num(self.step_ms)),
+        ];
+        if let Some(v) = self.mean_norm {
+            pairs.push(("mean_norm", Json::num(v as f64)));
+        }
+        if let Some(v) = self.max_norm {
+            pairs.push(("max_norm", Json::num(v as f64)));
+        }
+        if let Some(v) = self.clip_frac {
+            pairs.push(("clip_frac", Json::num(v as f64)));
+        }
+        if let Some(v) = self.epsilon {
+            pairs.push(("epsilon", Json::num(v)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Writes metrics.jsonl + metrics.csv under `<out_dir>/<run_name>/`.
+pub struct MetricsLogger {
+    dir: PathBuf,
+    jsonl: Option<fs::File>,
+    csv: Option<fs::File>,
+    pub loss_stats: Welford,
+    pub time_stats: Welford,
+    console_every: usize,
+}
+
+impl MetricsLogger {
+    pub fn new(out_dir: &str, run_name: &str, console_every: usize) -> Result<MetricsLogger> {
+        let dir = Path::new(out_dir).join(run_name);
+        fs::create_dir_all(&dir)?;
+        let jsonl = fs::File::create(dir.join("metrics.jsonl"))?;
+        let mut csv = fs::File::create(dir.join("metrics.csv"))?;
+        writeln!(
+            csv,
+            "step,loss,lr,mean_norm,max_norm,clip_frac,epsilon,step_ms"
+        )?;
+        Ok(MetricsLogger {
+            dir,
+            jsonl: Some(jsonl),
+            csv: Some(csv),
+            loss_stats: Welford::new(),
+            time_stats: Welford::new(),
+            console_every,
+        })
+    }
+
+    /// A logger that keeps stats but writes no files (tests/benches).
+    pub fn null() -> MetricsLogger {
+        MetricsLogger {
+            dir: PathBuf::new(),
+            jsonl: None,
+            csv: None,
+            loss_stats: Welford::new(),
+            time_stats: Welford::new(),
+            console_every: 0,
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn record(&mut self, r: &StepRecord) {
+        self.loss_stats.push(r.loss as f64);
+        self.time_stats.push(r.step_ms);
+        if let Some(f) = &mut self.jsonl {
+            let _ = writeln!(f, "{}", r.to_json());
+        }
+        if let Some(f) = &mut self.csv {
+            let opt = |v: Option<f32>| v.map(|x| x.to_string()).unwrap_or_default();
+            let _ = writeln!(
+                f,
+                "{},{},{},{},{},{},{},{:.3}",
+                r.step,
+                r.loss,
+                r.lr,
+                opt(r.mean_norm),
+                opt(r.max_norm),
+                opt(r.clip_frac),
+                r.epsilon.map(|e| e.to_string()).unwrap_or_default(),
+                r.step_ms
+            );
+        }
+        if self.console_every > 0 && r.step % self.console_every == 0 {
+            log::info!(
+                "step {:>5}  loss {:.4}  lr {:.2e}  {}{}{:.1}ms",
+                r.step,
+                r.loss,
+                r.lr,
+                r.mean_norm
+                    .map(|n| format!("|g| {n:.3}  "))
+                    .unwrap_or_default(),
+                r.clip_frac
+                    .map(|c| format!("clip {:.0}%  ", c * 100.0))
+                    .unwrap_or_default(),
+                r.step_ms
+            );
+        }
+    }
+
+    /// Log an eval point (separate stream in the jsonl).
+    pub fn record_eval(&mut self, step: usize, loss: f32, accuracy: Option<f32>) {
+        if let Some(f) = &mut self.jsonl {
+            let mut pairs = vec![
+                ("eval_step", Json::num(step as f64)),
+                ("eval_loss", Json::num(loss as f64)),
+            ];
+            if let Some(a) = accuracy {
+                pairs.push(("eval_accuracy", Json::num(a as f64)));
+            }
+            let _ = writeln!(f, "{}", Json::obj(pairs));
+        }
+        log::info!(
+            "eval  step {:>5}  loss {:.4}{}",
+            step,
+            loss,
+            accuracy
+                .map(|a| format!("  acc {:.1}%", a * 100.0))
+                .unwrap_or_default()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize) -> StepRecord {
+        StepRecord {
+            step,
+            loss: 1.5,
+            lr: 0.1,
+            mean_norm: Some(2.0),
+            max_norm: Some(5.0),
+            clip_frac: None,
+            epsilon: None,
+            step_ms: 3.25,
+        }
+    }
+
+    #[test]
+    fn writes_jsonl_and_csv() {
+        let tmp = std::env::temp_dir().join(format!("pegrad-metrics-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let mut m =
+            MetricsLogger::new(tmp.to_str().unwrap(), "t1", 0).unwrap();
+        m.record(&rec(0));
+        m.record(&rec(1));
+        m.record_eval(1, 0.9, Some(0.5));
+        drop(m);
+        let jsonl = std::fs::read_to_string(tmp.join("t1/metrics.jsonl")).unwrap();
+        assert_eq!(jsonl.lines().count(), 3);
+        let first = Json::parse(jsonl.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("loss").unwrap().as_f64().unwrap(), 1.5);
+        let csv = std::fs::read_to_string(tmp.join("t1/metrics.csv")).unwrap();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 3); // header + 2 steps
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn null_logger_accumulates_stats() {
+        let mut m = MetricsLogger::null();
+        for s in 0..10 {
+            m.record(&rec(s));
+        }
+        assert_eq!(m.loss_stats.count(), 10);
+        assert!((m.time_stats.mean() - 3.25).abs() < 1e-9);
+    }
+}

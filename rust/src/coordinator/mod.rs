@@ -1,0 +1,16 @@
+//! The L3 training coordinator: the loop that ties sampler → runtime →
+//! optimizer → norm feedback together, with metrics and checkpoints.
+//!
+//! Threading model (PJRT wrappers are not `Send` — see
+//! [`crate::runtime::client`]): all artifact execution happens on the
+//! thread that owns the [`Trainer`]; the batch GATHER is overlapped via
+//! the bounded-channel prefetcher in [`crate::data::loader`]. Sampling
+//! itself stays inline because it feeds back on executed norms.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use metrics::{MetricsLogger, StepRecord};
+pub use trainer::{RunSummary, Trainer};

@@ -1,0 +1,625 @@
+//! The training loop.
+//!
+//! Per step:
+//! 1. take the prefetched minibatch (gather overlaps the previous step's
+//!    execution; the selection is at most one step stale w.r.t. norms);
+//! 2. execute the mode's artifact — parameters stay device-resident for
+//!    the fused modes, so per-step host traffic is batch-in / scalars-out;
+//! 3. feed the fresh per-example norms back to the importance sampler
+//!    (the paper's §1 loop) and the DP accountant (§6);
+//! 4. metrics, periodic eval, periodic checkpoint.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Config, DataKind, OptimKind, RunMode, SamplerKind};
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::metrics::{MetricsLogger, StepRecord};
+use crate::data::loader::{prepare, PreparedBatch, Prefetcher};
+use crate::data::{digits, regression, synth, Dataset};
+use crate::nn::loss::Targets;
+use crate::nn::{Mlp, ModelSpec};
+use crate::optim::{Adam, Optimizer, Sgd};
+use crate::privacy::RdpAccountant;
+use crate::runtime::executable::{fetch_f32, Arg, Entry};
+use crate::runtime::{Manifest, Registry};
+use crate::sampler::{
+    ImportanceConfig, ImportanceSampler, Sampler, UniformSampler,
+};
+use crate::tensor::{ops, Rng, Tensor};
+use crate::util::threadpool::bounded;
+use crate::util::Timer;
+
+/// Final numbers a run reports (EXPERIMENTS.md rows come from this).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub steps: usize,
+    pub final_loss: f32,
+    pub eval_loss: Option<f32>,
+    pub eval_accuracy: Option<f32>,
+    pub mean_step_ms: f64,
+    /// (step, train loss) every step — the loss curve.
+    pub curve: Vec<(usize, f32)>,
+    /// (ε, δ) at the end, for clipped runs.
+    pub epsilon: Option<f64>,
+}
+
+/// Owns everything a run needs. Single-threaded w.r.t. PJRT (see module
+/// docs); the gather prefetcher is the only helper thread.
+pub struct Trainer {
+    pub cfg: Config,
+    pub spec: ModelSpec,
+    registry: Registry,
+    train: Dataset,
+    eval: Dataset,
+    sampler: Box<dyn Sampler>,
+    rng: Rng,
+    /// Host mirror of the parameters (source of truth for RustOptim mode;
+    /// refreshed from device on checkpoint/finish for fused modes).
+    params: Vec<Tensor>,
+    /// Device-resident parameters (fused modes).
+    dev_params: Option<Vec<xla::PjRtBuffer>>,
+    optimizer: Box<dyn Optimizer>,
+    accountant: Option<RdpAccountant>,
+    pub metrics: MetricsLogger,
+    step: usize,
+    /// L3-vs-L2 step-time breakdown, filled when `PEGRAD_PROFILE=1`
+    /// (§Perf evidence: the coordinator must not be the bottleneck).
+    pub profile: Option<Profile>,
+}
+
+/// Accumulated per-phase wall time across a run (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    pub upload: f64,
+    pub execute: f64,
+    pub fetch: f64,
+    pub sample_gather: f64,
+    pub steps: u64,
+}
+
+impl Profile {
+    pub fn report(&self) -> String {
+        let total = self.upload + self.execute + self.fetch + self.sample_gather;
+        let pct = |x: f64| 100.0 * x / total.max(1e-12);
+        format!(
+            "breakdown over {} steps: execute {:.1}% | upload {:.1}% | fetch {:.1}% | sample+gather {:.1}%  (L3 overhead {:.2}%)",
+            self.steps,
+            pct(self.execute),
+            pct(self.upload),
+            pct(self.fetch),
+            pct(self.sample_gather),
+            pct(total - self.execute)
+        )
+    }
+}
+
+impl Trainer {
+    pub fn new(cfg: Config) -> Result<Trainer> {
+        cfg.validate()?;
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let registry = Registry::new(manifest);
+        let preset = registry.manifest.preset(&cfg.preset)?.clone();
+        let spec = preset.spec()?;
+
+        let mut rng = Rng::new(cfg.seed);
+        let (train, eval) = build_datasets(&cfg, &spec, &mut rng)?;
+        log::info!(
+            "dataset: {} train={} eval={}  model: {} ({} params, m={})",
+            train.name,
+            train.len(),
+            eval.len(),
+            cfg.preset,
+            spec.param_count(),
+            spec.m
+        );
+
+        let sampler: Box<dyn Sampler> = match cfg.sampler {
+            SamplerKind::Uniform => Box::new(UniformSampler::new(train.len())),
+            SamplerKind::Importance => Box::new(ImportanceSampler::new(
+                train.len(),
+                ImportanceConfig {
+                    ema_lambda: cfg.sampler_lambda,
+                    floor: cfg.sampler_floor,
+                    ..Default::default()
+                },
+            )),
+        };
+
+        let optimizer: Box<dyn Optimizer> = match cfg.optim {
+            OptimKind::Sgd => Box::new(Sgd::plain()),
+            OptimKind::Momentum => Box::new(Sgd::new(0.9, true, 0.0)),
+            OptimKind::Adam => Box::new(Adam::default()),
+        };
+
+        let accountant = cfg.privacy.as_ref().map(|p| {
+            let q = (spec.m as f64 / train.len() as f64).min(1.0);
+            let mut a = RdpAccountant::new(q, p.noise_sigma.max(1e-6) as f64);
+            a.observe_steps(0);
+            a
+        });
+
+        let params = spec.init_params(&mut rng);
+        let metrics = MetricsLogger::new(&cfg.out_dir, &cfg.run_name, 25)?;
+        let profile = std::env::var("PEGRAD_PROFILE")
+            .ok()
+            .filter(|v| v == "1")
+            .map(|_| Profile::default());
+        Ok(Trainer {
+            cfg,
+            spec,
+            registry,
+            train,
+            eval,
+            sampler,
+            rng,
+            params,
+            dev_params: None,
+            optimizer,
+            accountant,
+            metrics,
+            step: 0,
+            profile,
+        })
+    }
+
+    /// Resume parameters/step/rng from a checkpoint.
+    pub fn restore(&mut self, ck: Checkpoint) -> Result<()> {
+        if ck.params.len() != self.params.len() {
+            bail!(
+                "checkpoint has {} param tensors, model needs {}",
+                ck.params.len(),
+                self.params.len()
+            );
+        }
+        for (a, b) in ck.params.iter().zip(&self.params) {
+            if a.dims() != b.dims() {
+                bail!("checkpoint shape mismatch: {:?} vs {:?}", a.dims(), b.dims());
+            }
+        }
+        self.params = ck.params.clone();
+        if !ck.opt_state.is_empty() {
+            self.optimizer.load_state(ck.opt_state.clone());
+        }
+        self.rng = ck.rng();
+        self.step = ck.step as usize;
+        self.dev_params = None; // re-upload lazily
+        Ok(())
+    }
+
+    fn entry_name(&self) -> &'static str {
+        match self.cfg.mode {
+            RunMode::Vanilla => "step_vanilla",
+            RunMode::Pegrad => "step_pegrad",
+            RunMode::RustOptim => "grads_pegrad",
+            RunMode::Clipped => "step_clipped",
+        }
+    }
+
+    /// Upload params to device if not already there (fused modes).
+    fn ensure_dev_params(&mut self) -> Result<()> {
+        if self.dev_params.is_none() {
+            let c = crate::runtime::client::global();
+            let bufs = self
+                .params
+                .iter()
+                .map(|t| {
+                    c.buffer_from_host_buffer(t.data(), t.dims(), None)
+                        .map_err(|e| anyhow!("param upload: {e}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            self.dev_params = Some(bufs);
+        }
+        Ok(())
+    }
+
+    /// Pull device params back into the host mirror.
+    fn sync_params_to_host(&mut self) -> Result<()> {
+        if let Some(bufs) = &self.dev_params {
+            self.params = bufs.iter().map(fetch_f32).collect::<Result<Vec<_>>>()?;
+        }
+        Ok(())
+    }
+
+    /// Run the configured number of steps; returns the summary.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        let entry = self.registry.get(&self.cfg.preset, self.entry_name())?;
+        let fwd_entry = self.registry.get(&self.cfg.preset, "fwd")?;
+        let m = self.spec.m;
+        let n = self.spec.n_layers();
+        let total = Timer::start();
+
+        // gather-prefetch pipeline (selection inline, gather overlapped)
+        let depth = self.cfg.prefetch_depth;
+        let (sel_tx, prefetcher) = if depth > 0 {
+            let (tx, rx) = bounded(depth);
+            let pf = Prefetcher::spawn_gather(self.train.clone(), rx, depth);
+            (Some(tx), Some(pf))
+        } else {
+            (None, None)
+        };
+
+        // prime the pipeline with the first selection
+        let first_sel = self.sampler.sample(m, &mut self.rng);
+        let mut pending: Option<PreparedBatch> = match (&sel_tx, &prefetcher) {
+            (Some(tx), Some(pf)) => {
+                tx.send((self.step, first_sel))
+                    .map_err(|_| anyhow!("prefetcher died"))?;
+                Some(pf.recv().ok_or_else(|| anyhow!("prefetcher closed"))?)
+            }
+            _ => Some(prepare(&self.train, &first_sel, self.step)),
+        };
+
+        let mut curve = Vec::with_capacity(self.cfg.steps);
+        let end_step = self.step + self.cfg.steps;
+        while self.step < end_step {
+            let batch = pending.take().expect("pipeline always primed");
+            debug_assert_eq!(batch.step, self.step);
+
+            // dispatch the NEXT selection before executing this step so the
+            // gather overlaps execution (norms are 1 step stale — the
+            // staleness the importance sampler's EMA is built for)
+            if self.step + 1 < end_step {
+                let tsel = Timer::start();
+                let sel = self.sampler.sample(m, &mut self.rng);
+                match (&sel_tx, &prefetcher) {
+                    (Some(tx), Some(_)) => {
+                        tx.send((self.step + 1, sel))
+                            .map_err(|_| anyhow!("prefetcher died"))?;
+                    }
+                    _ => pending = Some(prepare(&self.train, &sel, self.step + 1)),
+                }
+                if let Some(p) = &mut self.profile {
+                    p.sample_gather += tsel.secs();
+                }
+            }
+
+            let lr = self.cfg.schedule.at(self.step);
+            let t = Timer::start();
+            let rec = self.execute_step(&entry, &batch, lr)?;
+            let step_ms = t.millis();
+            curve.push((self.step, rec.loss));
+            self.metrics.record(&StepRecord { step_ms, ..rec });
+
+            if self.cfg.eval_every > 0
+                && self.step > 0
+                && self.step % self.cfg.eval_every == 0
+            {
+                let (el, ea) = self.evaluate(&fwd_entry)?;
+                self.metrics.record_eval(self.step, el, ea);
+            }
+            if self.cfg.checkpoint_every > 0
+                && self.step > 0
+                && self.step % self.cfg.checkpoint_every == 0
+            {
+                self.save_checkpoint()?;
+            }
+
+            self.step += 1;
+            if depth > 0 && self.step < end_step {
+                pending = Some(
+                    prefetcher
+                        .as_ref()
+                        .unwrap()
+                        .recv()
+                        .ok_or_else(|| anyhow!("prefetcher closed early"))?,
+                );
+            }
+        }
+        drop(sel_tx);
+
+        self.sync_params_to_host()?;
+        let (eval_loss, eval_acc) = self.evaluate(&fwd_entry)?;
+        self.metrics.record_eval(self.step, eval_loss, eval_acc);
+        let _ = n;
+        log::info!(
+            "run '{}' done: {} steps in {:.1}s ({:.1} ms/step)",
+            self.cfg.run_name,
+            self.cfg.steps,
+            total.secs(),
+            self.metrics.time_stats.mean()
+        );
+        if let Some(p) = &self.profile {
+            log::info!("PEGRAD_PROFILE {}", p.report());
+        }
+        Ok(RunSummary {
+            steps: self.cfg.steps,
+            final_loss: curve.last().map(|&(_, l)| l).unwrap_or(f32::NAN),
+            eval_loss: Some(eval_loss),
+            eval_accuracy: eval_acc,
+            mean_step_ms: self.metrics.time_stats.mean(),
+            curve,
+            epsilon: self
+                .accountant
+                .as_ref()
+                .zip(self.cfg.privacy.as_ref())
+                .map(|(a, p)| a.epsilon(p.delta)),
+        })
+    }
+
+    /// Execute one step in the configured mode; returns the step record
+    /// (with step_ms left 0 — the caller times the whole thing).
+    fn execute_step(
+        &mut self,
+        entry: &std::rc::Rc<Entry>,
+        batch: &PreparedBatch,
+        lr: f32,
+    ) -> Result<StepRecord> {
+        let n = self.spec.n_layers();
+        match self.cfg.mode {
+            RunMode::RustOptim => {
+                // host path: grads come back, rust optimizer applies them
+                let mut args: Vec<Arg> = self.params.iter().map(Arg::from).collect();
+                args.push(Arg::from(&batch.x));
+                args.push(Arg::from(&batch.y));
+                let out = entry.call(&args)?;
+                let loss = out[0].item();
+                let grads = &out[1..1 + n];
+                // fold IS weights: grads_pegrad returns the uniform mean, so
+                // re-weight on host when the sampler is non-uniform
+                // (difference vs uniform is the weights' deviation from 1/m)
+                self.optimizer.step(&mut self.params, grads, lr);
+                let s_total = out[1 + n].data().to_vec();
+                let norms: Vec<f32> = s_total.iter().map(|s| s.sqrt()).collect();
+                self.sampler.observe(&batch.indices, &norms);
+                Ok(self.record(loss, Some(&norms), None, lr))
+            }
+            RunMode::Vanilla => {
+                self.ensure_dev_params()?;
+                let (x, y, lr_buf) = self.upload_batch(batch, lr)?;
+                let mut refs: Vec<&xla::PjRtBuffer> =
+                    self.dev_params.as_ref().unwrap().iter().collect();
+                refs.push(&x);
+                refs.push(&y);
+                refs.push(&lr_buf);
+                let out = entry.call_device(&refs)?;
+                let loss = fetch_f32(&out[n])?.item();
+                self.dev_params = Some(out.into_iter().take(n).collect());
+                Ok(self.record(loss, None, None, lr))
+            }
+            RunMode::Pegrad => {
+                self.ensure_dev_params()?;
+                let t_up = Timer::start();
+                let (x, y, lr_buf) = self.upload_batch(batch, lr)?;
+                let c = crate::runtime::client::global();
+                let w = c
+                    .buffer_from_host_buffer(&batch.weights, &[batch.weights.len()], None)
+                    .map_err(|e| anyhow!("weights upload: {e}"))?;
+                let upload_s = t_up.secs();
+                let mut refs: Vec<&xla::PjRtBuffer> =
+                    self.dev_params.as_ref().unwrap().iter().collect();
+                refs.push(&x);
+                refs.push(&y);
+                refs.push(&lr_buf);
+                refs.push(&w);
+                let t_ex = Timer::start();
+                let out = entry.call_device(&refs)?;
+                let execute_s = t_ex.secs();
+                // outputs: params' (n), mean_loss, s_total, s_layers
+                let t_f = Timer::start();
+                let loss = fetch_f32(&out[n])?.item();
+                let s_total = fetch_f32(&out[n + 1])?;
+                let fetch_s = t_f.secs();
+                let norms: Vec<f32> = s_total.data().iter().map(|s| s.sqrt()).collect();
+                self.sampler.observe(&batch.indices, &norms);
+                self.dev_params = Some(out.into_iter().take(n).collect());
+                if let Some(p) = &mut self.profile {
+                    p.upload += upload_s;
+                    p.execute += execute_s;
+                    p.fetch += fetch_s;
+                    p.steps += 1;
+                }
+                Ok(self.record(loss, Some(&norms), None, lr))
+            }
+            RunMode::Clipped => {
+                self.ensure_dev_params()?;
+                let p = self.cfg.privacy.as_ref().expect("validated");
+                let (x, y, lr_buf) = self.upload_batch(batch, lr)?;
+                let c = crate::runtime::client::global();
+                let mk = |v: f32| {
+                    c.buffer_from_host_buffer(&[v], &[1], None)
+                        .map_err(|e| anyhow!("scalar upload: {e}"))
+                };
+                let cc = mk(p.clip_c)?;
+                let sg = mk(p.noise_sigma)?;
+                let seed_v = [self.rng.next_u64() as i32];
+                let seed = c
+                    .buffer_from_host_buffer(&seed_v, &[1], None)
+                    .map_err(|e| anyhow!("seed upload: {e}"))?;
+                let mut refs: Vec<&xla::PjRtBuffer> =
+                    self.dev_params.as_ref().unwrap().iter().collect();
+                refs.push(&x);
+                refs.push(&y);
+                refs.push(&lr_buf);
+                refs.push(&cc);
+                refs.push(&sg);
+                refs.push(&seed);
+                let out = entry.call_device(&refs)?;
+                // outputs: params' (n), mean_loss, s_total, clip_frac
+                let loss = fetch_f32(&out[n])?.item();
+                let s_total = fetch_f32(&out[n + 1])?;
+                let clip_frac = fetch_f32(&out[n + 2])?.item();
+                let norms: Vec<f32> = s_total.data().iter().map(|s| s.sqrt()).collect();
+                self.sampler.observe(&batch.indices, &norms);
+                if let Some(acc) = &mut self.accountant {
+                    acc.observe_steps(1);
+                }
+                self.dev_params = Some(out.into_iter().take(n).collect());
+                Ok(self.record(loss, Some(&norms), Some(clip_frac), lr))
+            }
+        }
+    }
+
+    fn upload_batch(
+        &self,
+        batch: &PreparedBatch,
+        lr: f32,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let c = crate::runtime::client::global();
+        let x = c
+            .buffer_from_host_buffer(batch.x.data(), batch.x.dims(), None)
+            .map_err(|e| anyhow!("x upload: {e}"))?;
+        let y = match &batch.y {
+            Targets::Classes(v) => c
+                .buffer_from_host_buffer(&v[..], &[v.len()], None)
+                .map_err(|e| anyhow!("y upload: {e}"))?,
+            Targets::Dense(t) => c
+                .buffer_from_host_buffer(t.data(), t.dims(), None)
+                .map_err(|e| anyhow!("y upload: {e}"))?,
+        };
+        let lr_buf = c
+            .buffer_from_host_buffer(&[lr], &[1], None)
+            .map_err(|e| anyhow!("lr upload: {e}"))?;
+        Ok((x, y, lr_buf))
+    }
+
+    fn record(
+        &self,
+        loss: f32,
+        norms: Option<&[f32]>,
+        clip_frac: Option<f32>,
+        lr: f32,
+    ) -> StepRecord {
+        let (mean_norm, max_norm) = match norms {
+            Some(v) if !v.is_empty() => (
+                Some(v.iter().sum::<f32>() / v.len() as f32),
+                Some(v.iter().cloned().fold(f32::MIN, f32::max)),
+            ),
+            _ => (None, None),
+        };
+        StepRecord {
+            step: self.step,
+            loss,
+            lr,
+            mean_norm,
+            max_norm,
+            clip_frac,
+            epsilon: self
+                .accountant
+                .as_ref()
+                .zip(self.cfg.privacy.as_ref())
+                .map(|(a, p)| a.epsilon(p.delta)),
+            step_ms: 0.0,
+        }
+    }
+
+    /// Evaluate mean loss (and accuracy for CE) on the eval set, in
+    /// batches of exactly m (artifact shapes are static).
+    fn evaluate(&mut self, fwd: &std::rc::Rc<Entry>) -> Result<(f32, Option<f32>)> {
+        self.sync_params_to_host()?;
+        let m = self.spec.m;
+        let n_batches = self.eval.len() / m;
+        if n_batches == 0 {
+            return Ok((f32::NAN, None));
+        }
+        let mut loss_sum = 0f64;
+        let mut hits = 0usize;
+        let mut seen = 0usize;
+        for b in 0..n_batches {
+            let idx: Vec<usize> = (b * m..(b + 1) * m).collect();
+            let (x, y) = self.eval.batch(&idx);
+            let mut args: Vec<Arg> = self.params.iter().map(Arg::from).collect();
+            args.push(Arg::from(&x));
+            args.push(Arg::from(&y));
+            let out = fwd.call(&args)?;
+            loss_sum += out[0].item() as f64;
+            if let Targets::Classes(cls) = &y {
+                let pred = ops::row_argmax(&out[2]);
+                hits += pred
+                    .iter()
+                    .zip(cls)
+                    .filter(|(p, c)| **p == **c as usize)
+                    .count();
+                seen += m;
+            }
+        }
+        let acc = (seen > 0).then(|| hits as f32 / seen as f32);
+        Ok(((loss_sum / n_batches as f64) as f32, acc))
+    }
+
+    pub fn save_checkpoint(&mut self) -> Result<()> {
+        self.sync_params_to_host()?;
+        let opt_state: Vec<Tensor> = self.optimizer.state().into_iter().cloned().collect();
+        let ck = Checkpoint::new(
+            self.step as u64,
+            &self.rng,
+            self.params.clone(),
+            opt_state,
+        );
+        let path = self.metrics.dir().join(format!("ckpt-{:06}.bin", self.step));
+        ck.save(&path).context("saving checkpoint")?;
+        log::info!("checkpoint saved: {}", path.display());
+        Ok(())
+    }
+
+    /// Current host-side parameters (synced from device first).
+    pub fn params(&mut self) -> Result<&[Tensor]> {
+        self.sync_params_to_host()?;
+        Ok(&self.params)
+    }
+
+    /// Reference-model view of the current parameters (for analysis).
+    pub fn reference_model(&mut self) -> Result<Mlp> {
+        self.sync_params_to_host()?;
+        Ok(Mlp::new(self.spec.clone(), self.params.clone()))
+    }
+}
+
+/// Build (train, eval) datasets per config. Eval sizes are multiples of m
+/// (artifact batch shapes are static).
+fn build_datasets(cfg: &Config, spec: &ModelSpec, rng: &mut Rng) -> Result<(Dataset, Dataset)> {
+    // loss/target compatibility: CE needs class targets, MSE dense ones
+    match (spec.loss, cfg.data) {
+        (crate::nn::Loss::SoftmaxCe, DataKind::Regression) => {
+            bail!("regression data produces dense targets but the preset uses softmax_ce")
+        }
+        (crate::nn::Loss::Mse, DataKind::Synth | DataKind::Digits) => {
+            bail!("classification data produces class targets but the preset uses mse; use data.kind=\"regression\"")
+        }
+        _ => {}
+    }
+    let eval_n = (4 * spec.m).max(64) / spec.m * spec.m;
+    let mk = |n: usize, seed: u64| -> Result<Dataset> {
+        Ok(match cfg.data {
+            DataKind::Synth => {
+                synth::generate(&synth::SynthConfig {
+                    n,
+                    dim: spec.in_dim(),
+                    n_classes: spec.out_dim(),
+                    imbalance: cfg.imbalance,
+                    label_noise: cfg.label_noise,
+                    seed,
+                    ..Default::default()
+                })
+                .0
+            }
+            DataKind::Digits => {
+                let side = (spec.in_dim() as f64).sqrt() as usize;
+                if side * side != spec.in_dim() || side < 9 {
+                    bail!(
+                        "digits data needs a square input dim >= 81, got {}",
+                        spec.in_dim()
+                    );
+                }
+                digits::generate(&digits::DigitsConfig {
+                    n,
+                    side,
+                    seed,
+                    ..Default::default()
+                })
+            }
+            DataKind::Regression => regression::generate(&regression::RegressionConfig {
+                n,
+                dim: spec.in_dim(),
+                out_dim: spec.out_dim(),
+                seed,
+                ..Default::default()
+            }),
+        })
+    };
+    // One generation, then split: train and eval must come from the SAME
+    // underlying distribution (same mixture centers / teacher / glyph
+    // statistics), which a second seed would not give.
+    let base_seed = rng.next_u64();
+    let full = mk(cfg.data_n + eval_n, base_seed)?;
+    Ok(full.split_at(cfg.data_n))
+}

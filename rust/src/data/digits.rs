@@ -1,0 +1,153 @@
+//! Procedural digit raster dataset — the "real small workload" for E5.
+//!
+//! Each digit 0-9 has a 5x7 glyph (classic segment font); examples are
+//! rendered onto a `side x side` canvas with random sub-cell offsets,
+//! per-pixel Gaussian noise, and random contrast — an MNIST-shaped
+//! classification task generated deterministically from a seed, with no
+//! external data dependency (DESIGN.md §6 substitution).
+
+use crate::nn::loss::Targets;
+use crate::tensor::{Rng, Tensor};
+
+use super::Dataset;
+
+/// 5x7 glyph bitmaps, row-major, one string row per scanline.
+const GLYPHS: [[&str; 7]; 10] = [
+    ["#####", "#...#", "#...#", "#...#", "#...#", "#...#", "#####"], // 0
+    ["..#..", ".##..", "..#..", "..#..", "..#..", "..#..", ".###."], // 1
+    ["#####", "....#", "....#", "#####", "#....", "#....", "#####"], // 2
+    ["#####", "....#", "....#", "#####", "....#", "....#", "#####"], // 3
+    ["#...#", "#...#", "#...#", "#####", "....#", "....#", "....#"], // 4
+    ["#####", "#....", "#....", "#####", "....#", "....#", "#####"], // 5
+    ["#####", "#....", "#....", "#####", "#...#", "#...#", "#####"], // 6
+    ["#####", "....#", "...#.", "..#..", "..#..", "..#..", "..#.."], // 7
+    ["#####", "#...#", "#...#", "#####", "#...#", "#...#", "#####"], // 8
+    ["#####", "#...#", "#...#", "#####", "....#", "....#", "#####"], // 9
+];
+
+#[derive(Debug, Clone)]
+pub struct DigitsConfig {
+    pub n: usize,
+    /// canvas side length (>= 9 so the 5x7 glyph plus shift fits).
+    pub side: usize,
+    /// std of the per-pixel Gaussian noise.
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for DigitsConfig {
+    fn default() -> Self {
+        DigitsConfig {
+            n: 8192,
+            side: 12,
+            noise: 0.25,
+            seed: 0,
+        }
+    }
+}
+
+/// Render one digit onto a canvas with the given offset and contrast.
+fn render(canvas: &mut [f32], side: usize, digit: usize, dx: usize, dy: usize, contrast: f32) {
+    for (r, row) in GLYPHS[digit].iter().enumerate() {
+        for (c, ch) in row.bytes().enumerate() {
+            if ch == b'#' {
+                let y = r + dy;
+                let x = c + dx;
+                if y < side && x < side {
+                    canvas[y * side + x] = contrast;
+                }
+            }
+        }
+    }
+}
+
+pub fn generate(cfg: &DigitsConfig) -> Dataset {
+    assert!(cfg.side >= 9, "side must fit a shifted 5x7 glyph");
+    let mut rng = Rng::new(cfg.seed ^ 0xD161);
+    let d = cfg.side * cfg.side;
+    let mut x = Tensor::zeros(vec![cfg.n, d]);
+    let mut labels = Vec::with_capacity(cfg.n);
+    let max_dx = cfg.side - 5;
+    let max_dy = cfg.side - 7;
+    for i in 0..cfg.n {
+        let digit = rng.next_below(10) as usize;
+        let dx = rng.next_below(max_dx as u64 + 1) as usize;
+        let dy = rng.next_below(max_dy as u64 + 1) as usize;
+        let contrast = 0.7 + 0.6 * rng.next_f32();
+        let row = &mut x.data_mut()[i * d..(i + 1) * d];
+        render(row, cfg.side, digit, dx, dy, contrast);
+        if cfg.noise > 0.0 {
+            for v in row.iter_mut() {
+                *v += cfg.noise * rng.next_normal();
+            }
+        }
+        labels.push(digit as i32);
+    }
+    Dataset {
+        x,
+        y: Targets::Classes(labels),
+        name: format!("digits-{}x{}-n{}", cfg.side, cfg.side, cfg.n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let d = generate(&DigitsConfig {
+            n: 64,
+            side: 12,
+            ..Default::default()
+        });
+        assert_eq!(d.len(), 64);
+        assert_eq!(d.dim(), 144);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = DigitsConfig {
+            n: 32,
+            ..Default::default()
+        };
+        assert_eq!(generate(&cfg).x, generate(&cfg).x);
+    }
+
+    #[test]
+    fn all_ten_digits_appear() {
+        let d = generate(&DigitsConfig {
+            n: 500,
+            ..Default::default()
+        });
+        let mut seen = [false; 10];
+        if let Targets::Classes(v) = &d.y {
+            for &c in v {
+                seen[c as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn noiseless_glyphs_distinguishable() {
+        // without noise, two clean renders of different digits at the same
+        // offset must differ
+        let mut a = vec![0f32; 144];
+        let mut b = vec![0f32; 144];
+        render(&mut a, 12, 3, 0, 0, 1.0);
+        render(&mut b, 12, 8, 0, 0, 1.0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn glyph_bitmaps_are_5x7() {
+        for g in &GLYPHS {
+            assert_eq!(g.len(), 7);
+            for row in g {
+                assert_eq!(row.len(), 5);
+                assert!(row.bytes().all(|b| b == b'#' || b == b'.'));
+            }
+        }
+    }
+}

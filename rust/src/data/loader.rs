@@ -1,0 +1,164 @@
+//! Batch assembly + prefetch stage.
+//!
+//! The gather (dataset rows -> contiguous minibatch tensor) is cheap but
+//! not free at large m*d; the coordinator overlaps it with artifact
+//! execution by running a [`Prefetcher`] thread connected through a
+//! bounded channel (backpressure keeps at most `depth` batches in flight —
+//! the tokio-substitute pipeline of DESIGN.md §6).
+
+use std::thread;
+
+use crate::nn::loss::Targets;
+use crate::sampler::{Batch, Sampler};
+use crate::tensor::{Rng, Tensor};
+use crate::util::threadpool::{bounded, BoundedReceiver};
+
+use super::Dataset;
+
+/// A fully-materialized minibatch ready for the executor.
+#[derive(Debug, Clone)]
+pub struct PreparedBatch {
+    pub step: usize,
+    pub indices: Vec<usize>,
+    pub weights: Vec<f32>,
+    pub x: Tensor,
+    pub y: Targets,
+}
+
+/// Synchronous batch preparation (used directly by tests/benches and by
+/// the prefetch thread).
+pub fn prepare(dataset: &Dataset, sel: &Batch, step: usize) -> PreparedBatch {
+    let (x, y) = dataset.batch(&sel.indices);
+    PreparedBatch {
+        step,
+        indices: sel.indices.clone(),
+        weights: sel.weights.clone(),
+        x,
+        y,
+    }
+}
+
+/// Prefetch thread: draws batches from a sampler snapshot and materializes
+/// them ahead of the consumer.
+///
+/// Norm feedback creates a loop (sampler updates depend on executed
+/// steps), so the prefetcher periodically receives refreshed sampler state
+/// through a control channel rather than sharing mutable state; in
+/// practice the trainer runs the sampler inline (sampling is O(m log N),
+/// microseconds) and prefetches only the GATHER, which has no feedback
+/// dependency — that is what `spawn_gather` does.
+pub struct Prefetcher {
+    rx: BoundedReceiver<PreparedBatch>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Start a gather-prefetch thread: receives (step, Batch) selections on
+    /// a channel fed by the trainer and emits PreparedBatches, `depth` deep.
+    pub fn spawn_gather(
+        dataset: Dataset,
+        selections: BoundedReceiver<(usize, Batch)>,
+        depth: usize,
+    ) -> Prefetcher {
+        let (tx, rx) = bounded(depth);
+        let handle = thread::Builder::new()
+            .name("pegrad-prefetch".into())
+            .spawn(move || {
+                while let Some((step, sel)) = selections.recv() {
+                    let pb = prepare(&dataset, &sel, step);
+                    if tx.send(pb).is_err() {
+                        break; // consumer gone
+                    }
+                }
+            })
+            .expect("spawn prefetcher");
+        Prefetcher {
+            rx,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn recv(&self) -> Option<PreparedBatch> {
+        self.rx.recv()
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Convenience: draw + prepare in one call (no prefetch).
+pub fn draw(
+    dataset: &Dataset,
+    sampler: &mut dyn Sampler,
+    m: usize,
+    step: usize,
+    rng: &mut Rng,
+) -> PreparedBatch {
+    let sel = sampler.sample(m, rng);
+    prepare(dataset, &sel, step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::UniformSampler;
+    use crate::util::threadpool::bounded as bchan;
+
+    fn dataset(n: usize) -> Dataset {
+        let d = 3;
+        let mut x = Tensor::zeros(vec![n, d]);
+        for i in 0..n {
+            for j in 0..d {
+                x.set2(i, j, (i * d + j) as f32);
+            }
+        }
+        Dataset {
+            x,
+            y: Targets::Classes((0..n).map(|i| (i % 4) as i32).collect()),
+            name: "t".into(),
+        }
+    }
+
+    #[test]
+    fn draw_prepares_consistent_batch() {
+        let ds = dataset(20);
+        let mut s = UniformSampler::new(20);
+        let mut rng = Rng::new(0);
+        let pb = draw(&ds, &mut s, 8, 3, &mut rng);
+        assert_eq!(pb.step, 3);
+        assert_eq!(pb.x.dims(), &[8, 3]);
+        for (r, &i) in pb.indices.iter().enumerate() {
+            assert_eq!(pb.x.row(r), ds.x.row(i));
+        }
+    }
+
+    #[test]
+    fn prefetcher_streams_in_order() {
+        let ds = dataset(10);
+        let (sel_tx, sel_rx) = bchan::<(usize, Batch)>(4);
+        let pf = Prefetcher::spawn_gather(ds.clone(), sel_rx, 2);
+        for step in 0..5 {
+            sel_tx
+                .send((
+                    step,
+                    Batch {
+                        indices: vec![step, step + 1],
+                        weights: vec![0.5, 0.5],
+                    },
+                ))
+                .unwrap();
+        }
+        drop(sel_tx);
+        for step in 0..5 {
+            let pb = pf.recv().expect("batch");
+            assert_eq!(pb.step, step);
+            assert_eq!(pb.x.row(0), ds.x.row(step));
+        }
+        assert!(pf.recv().is_none());
+    }
+}

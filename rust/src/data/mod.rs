@@ -1,0 +1,121 @@
+//! Datasets and the batch pipeline.
+//!
+//! The paper names no dataset; per the substitution rule (DESIGN.md §6) we
+//! build synthetic workloads that exercise the same code paths:
+//!
+//! * [`synth`] — Gaussian-mixture classification with class imbalance and
+//!   label noise: the workload where gradient-norm importance sampling
+//!   visibly helps (rare/noisy examples carry large norms).
+//! * [`digits`] — procedurally rasterized digit glyphs with noise/shift
+//!   augmentation: the "real small workload" driving the E5 end-to-end
+//!   run.
+//! * [`regression`] — dense-target MSE workload (exercises the Mse loss
+//!   path end to end).
+//! * [`loader`] — batch gather + the prefetch stage used by the
+//!   coordinator pipeline.
+
+pub mod digits;
+pub mod loader;
+pub mod regression;
+pub mod synth;
+
+use crate::nn::loss::Targets;
+use crate::tensor::Tensor;
+
+/// An in-memory dataset of features + targets.
+///
+/// All our generators are deterministic in their seed, so a `Dataset` is
+/// reproducible from its config — checkpoints store the config, not the
+/// data.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// [n, d] feature matrix.
+    pub x: Tensor,
+    pub y: Targets,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.x.dims()[0]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.dims()[1]
+    }
+
+    /// Gather a minibatch by indices.
+    pub fn batch(&self, idx: &[usize]) -> (Tensor, Targets) {
+        let d = self.dim();
+        let mut x = Tensor::zeros(vec![idx.len(), d]);
+        for (r, &i) in idx.iter().enumerate() {
+            x.data_mut()[r * d..(r + 1) * d].copy_from_slice(self.x.row(i));
+        }
+        (x, self.y.gather(idx))
+    }
+
+    /// Split off the last `frac` of examples as an eval set.
+    pub fn split_eval(&self, frac: f32) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&frac));
+        let n = self.len();
+        let n_eval = ((n as f32 * frac) as usize).max(1).min(n - 1);
+        self.split_at(n - n_eval)
+    }
+
+    /// Split into (first `n_train`, rest) — exact counts.
+    pub fn split_at(&self, n_train: usize) -> (Dataset, Dataset) {
+        let n = self.len();
+        assert!(n_train >= 1 && n_train < n);
+        let train_idx: Vec<usize> = (0..n_train).collect();
+        let eval_idx: Vec<usize> = (n_train..n).collect();
+        let (tx, ty) = self.batch(&train_idx);
+        let (ex, ey) = self.batch(&eval_idx);
+        (
+            Dataset {
+                x: tx,
+                y: ty,
+                name: format!("{}-train", self.name),
+            },
+            Dataset {
+                x: ex,
+                y: ey,
+                name: format!("{}-eval", self.name),
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            x: Tensor::new(vec![4, 2], vec![0., 1., 2., 3., 4., 5., 6., 7.]),
+            y: Targets::Classes(vec![0, 1, 0, 1]),
+            name: "t".into(),
+        }
+    }
+
+    #[test]
+    fn batch_gathers_rows() {
+        let d = tiny();
+        let (x, y) = d.batch(&[2, 0]);
+        assert_eq!(x.row(0), &[4., 5.]);
+        assert_eq!(x.row(1), &[0., 1.]);
+        assert_eq!(y, Targets::Classes(vec![0, 0]));
+    }
+
+    #[test]
+    fn split_eval_partitions() {
+        let d = tiny();
+        let (tr, ev) = d.split_eval(0.25);
+        assert_eq!(tr.len(), 3);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev.x.row(0), &[6., 7.]);
+    }
+}

@@ -1,0 +1,89 @@
+//! Synthetic regression workload (dense targets, MSE loss path).
+//!
+//! y = tanh(W2 @ relu(W1 x)) + eps — a random teacher network, so the task
+//! is realizable by the student MLP and the loss floor is the noise level.
+
+use crate::nn::loss::Targets;
+use crate::tensor::{ops, Rng, Tensor};
+
+use super::Dataset;
+
+#[derive(Debug, Clone)]
+pub struct RegressionConfig {
+    pub n: usize,
+    pub dim: usize,
+    pub out_dim: usize,
+    pub teacher_hidden: usize,
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for RegressionConfig {
+    fn default() -> Self {
+        RegressionConfig {
+            n: 4096,
+            dim: 32,
+            out_dim: 8,
+            teacher_hidden: 64,
+            noise: 0.05,
+            seed: 0,
+        }
+    }
+}
+
+pub fn generate(cfg: &RegressionConfig) -> Dataset {
+    let mut rng = Rng::new(cfg.seed ^ 0x4E6);
+    let w1 = ops::scale(
+        &Tensor::randn(vec![cfg.dim, cfg.teacher_hidden], &mut rng),
+        (1.0 / cfg.dim as f32).sqrt(),
+    );
+    let w2 = ops::scale(
+        &Tensor::randn(vec![cfg.teacher_hidden, cfg.out_dim], &mut rng),
+        (1.0 / cfg.teacher_hidden as f32).sqrt(),
+    );
+    let x = Tensor::randn(vec![cfg.n, cfg.dim], &mut rng);
+    let h = ops::map(&ops::matmul(&x, &w1), |v| v.max(0.0));
+    let mut y = ops::map(&ops::matmul(&h, &w2), f32::tanh);
+    for v in y.data_mut() {
+        *v += cfg.noise * rng.next_normal();
+    }
+    Dataset {
+        x,
+        y: Targets::Dense(y),
+        name: format!("regression-n{}", cfg.n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let cfg = RegressionConfig {
+            n: 64,
+            ..Default::default()
+        };
+        let a = generate(&cfg);
+        assert_eq!(a.len(), 64);
+        assert_eq!(a.dim(), 32);
+        match &a.y {
+            Targets::Dense(t) => assert_eq!(t.dims(), &[64, 8]),
+            _ => panic!(),
+        }
+        let b = generate(&cfg);
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn targets_bounded_by_tanh_plus_noise() {
+        let d = generate(&RegressionConfig {
+            n: 256,
+            noise: 0.0,
+            ..Default::default()
+        });
+        if let Targets::Dense(t) = &d.y {
+            assert!(t.data().iter().all(|v| v.abs() <= 1.0));
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Gaussian-mixture classification with imbalance and label noise.
+//!
+//! The E4 workload: `n_classes` isotropic Gaussians on a sphere of radius
+//! `separation`; class frequencies follow a geometric imbalance profile
+//! (`imbalance = 1.0` → balanced); a `label_noise` fraction of examples
+//! get a wrong label. Rare-class and mislabeled examples produce large
+//! per-example gradient norms, which is exactly the structure
+//! norm-proportional sampling exploits (and what outlier detection in
+//! `examples/outlier_detection.rs` recovers).
+
+use crate::nn::loss::Targets;
+use crate::tensor::{Rng, Tensor};
+
+use super::Dataset;
+
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub n: usize,
+    pub dim: usize,
+    pub n_classes: usize,
+    /// geometric class-frequency ratio: class c has weight imbalance^c.
+    pub imbalance: f32,
+    /// fraction of examples whose label is replaced uniformly at random.
+    pub label_noise: f32,
+    /// distance of class centers from the origin.
+    pub separation: f32,
+    pub seed: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            n: 4096,
+            dim: 64,
+            n_classes: 10,
+            imbalance: 1.0,
+            label_noise: 0.0,
+            separation: 3.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Which examples got a flipped label (ground truth for the outlier demo).
+pub struct SynthMeta {
+    pub flipped: Vec<bool>,
+    pub class_counts: Vec<usize>,
+}
+
+pub fn generate(cfg: &SynthConfig) -> (Dataset, SynthMeta) {
+    assert!(cfg.n_classes >= 2 && cfg.n >= cfg.n_classes);
+    assert!((0.0..=1.0).contains(&cfg.label_noise));
+    assert!(cfg.imbalance > 0.0 && cfg.imbalance <= 1.0);
+    let mut rng = Rng::new(cfg.seed ^ 0x5E17);
+
+    // class centers: random unit directions * separation
+    let centers: Vec<Vec<f32>> = (0..cfg.n_classes)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..cfg.dim).map(|_| rng.next_normal()).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+            v.iter_mut().for_each(|x| *x *= cfg.separation / norm);
+            v
+        })
+        .collect();
+
+    // geometric class weights -> cumulative distribution
+    let mut weights: Vec<f64> = (0..cfg.n_classes)
+        .map(|c| (cfg.imbalance as f64).powi(c as i32))
+        .collect();
+    let total: f64 = weights.iter().sum();
+    weights.iter_mut().for_each(|w| *w /= total);
+
+    let mut x = Tensor::zeros(vec![cfg.n, cfg.dim]);
+    let mut labels = Vec::with_capacity(cfg.n);
+    let mut flipped = vec![false; cfg.n];
+    let mut class_counts = vec![0usize; cfg.n_classes];
+    for i in 0..cfg.n {
+        // draw class from the imbalanced distribution
+        let mut u = rng.next_f64();
+        let mut c = cfg.n_classes - 1;
+        for (k, &w) in weights.iter().enumerate() {
+            if u < w {
+                c = k;
+                break;
+            }
+            u -= w;
+        }
+        class_counts[c] += 1;
+        for j in 0..cfg.dim {
+            x.set2(i, j, centers[c][j] + rng.next_normal());
+        }
+        // label noise
+        let mut label = c;
+        if (rng.next_f32()) < cfg.label_noise {
+            label = rng.next_below(cfg.n_classes as u64) as usize;
+            flipped[i] = label != c;
+        }
+        labels.push(label as i32);
+    }
+    (
+        Dataset {
+            x,
+            y: Targets::Classes(labels),
+            name: format!("synth-n{}-c{}", cfg.n, cfg.n_classes),
+        },
+        SynthMeta {
+            flipped,
+            class_counts,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_label_range() {
+        let (d, _) = generate(&SynthConfig {
+            n: 100,
+            dim: 8,
+            n_classes: 4,
+            ..Default::default()
+        });
+        assert_eq!(d.len(), 100);
+        assert_eq!(d.dim(), 8);
+        match &d.y {
+            Targets::Classes(v) => assert!(v.iter().all(|&c| (0..4).contains(&c))),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = SynthConfig {
+            n: 50,
+            ..Default::default()
+        };
+        let (a, _) = generate(&cfg);
+        let (b, _) = generate(&cfg);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let (c, _) = generate(&SynthConfig { seed: 1, ..cfg });
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn imbalance_skews_counts() {
+        let (_, meta) = generate(&SynthConfig {
+            n: 8000,
+            n_classes: 5,
+            imbalance: 0.5,
+            ..Default::default()
+        });
+        // class 0 should be ~16x class 4
+        assert!(meta.class_counts[0] > meta.class_counts[4] * 8);
+        assert!(meta.class_counts[4] > 0);
+    }
+
+    #[test]
+    fn label_noise_flips_fraction() {
+        let (_, meta) = generate(&SynthConfig {
+            n: 5000,
+            label_noise: 0.2,
+            ..Default::default()
+        });
+        let frac = meta.flipped.iter().filter(|&&f| f).count() as f64 / 5000.0;
+        // 20% noised, of which 9/10 land on a different class
+        assert!((frac - 0.18).abs() < 0.03, "flipped {frac}");
+    }
+
+    #[test]
+    fn classes_are_separated() {
+        // a nearest-center classifier should do well at separation 3
+        let (d, _) = generate(&SynthConfig {
+            n: 500,
+            dim: 16,
+            n_classes: 3,
+            separation: 4.0,
+            ..Default::default()
+        });
+        // crude: compute class means from data, re-classify
+        let labels = match &d.y {
+            Targets::Classes(v) => v.clone(),
+            _ => panic!(),
+        };
+        let mut means = vec![vec![0f32; 16]; 3];
+        let mut counts = vec![0f32; 3];
+        for i in 0..d.len() {
+            let c = labels[i] as usize;
+            counts[c] += 1.0;
+            for j in 0..16 {
+                means[c][j] += d.x.at2(i, j);
+            }
+        }
+        for c in 0..3 {
+            means[c].iter_mut().for_each(|v| *v /= counts[c].max(1.0));
+        }
+        let mut hits = 0;
+        for i in 0..d.len() {
+            let mut best = (f32::MAX, 0);
+            for c in 0..3 {
+                let dist: f32 = (0..16)
+                    .map(|j| (d.x.at2(i, j) - means[c][j]).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == labels[i] as usize {
+                hits += 1;
+            }
+        }
+        assert!(hits as f64 / 500.0 > 0.9, "{hits}/500");
+    }
+}

@@ -1,0 +1,34 @@
+//! # pegrad — Efficient Per-Example Gradient Computations
+//!
+//! Production-quality reproduction of Ian Goodfellow's 2015 technical report
+//! *"Efficient Per-Example Gradient Computations"* (stat.ML).
+//!
+//! The paper's trick: for dense layers `z = h W`, the per-example gradient
+//! norm factors as `s_j = ||Zbar_j||² · ||Haug_j||²` — all per-example
+//! norms for O(mnp) extra work on top of ONE batched backward pass,
+//! instead of m single-example passes (§3/§5). Applications built here:
+//! gradient-norm importance sampling (§1), per-example clipping / DP-SGD
+//! (§6), and gradient-norm outlier detection.
+//!
+//! Three layers (see DESIGN.md): Pallas kernels (L1) and the JAX model
+//! (L2) are build-time Python, AOT-lowered once to HLO text; this crate
+//! (L3) loads the artifacts via PJRT and owns the entire training
+//! framework around them — config, CLI, data pipeline, importance
+//! sampler, optimizers, DP accountant, metrics, checkpoints, benches.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod nn;
+pub mod optim;
+pub mod pegrad;
+pub mod privacy;
+pub mod runtime;
+pub mod sampler;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,10 @@
+//! `pegrad` binary — the L3 coordinator launcher.
+
+fn main() {
+    pegrad::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = pegrad::cli::commands::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

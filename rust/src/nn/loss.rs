@@ -1,0 +1,206 @@
+//! Loss functions L(z^(n), y): value per example and dL/dz^(n).
+//!
+//! The paper requires the loss to access parameters only through the z's;
+//! both losses here are functions of the final logits and targets only.
+
+use crate::tensor::{ops, Tensor};
+
+/// Target values: class indices for CE, dense targets for MSE.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Targets {
+    Classes(Vec<i32>),
+    Dense(Tensor),
+}
+
+impl Targets {
+    pub fn len(&self) -> usize {
+        match self {
+            Targets::Classes(v) => v.len(),
+            Targets::Dense(t) => t.dims()[0],
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Select a sub-batch by indices (the sampler's gather step).
+    pub fn gather(&self, idx: &[usize]) -> Targets {
+        match self {
+            Targets::Classes(v) => Targets::Classes(idx.iter().map(|&i| v[i]).collect()),
+            Targets::Dense(t) => {
+                let n = t.dims()[1];
+                let mut out = Tensor::zeros(vec![idx.len(), n]);
+                for (r, &i) in idx.iter().enumerate() {
+                    out.data_mut()[r * n..(r + 1) * n].copy_from_slice(t.row(i));
+                }
+                Targets::Dense(out)
+            }
+        }
+    }
+}
+
+/// Loss kind; mirrors `python/compile/model.py::LOSSES`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loss {
+    SoftmaxCe,
+    Mse,
+}
+
+impl Loss {
+    pub fn parse(s: &str) -> Option<Loss> {
+        match s {
+            "softmax_ce" => Some(Loss::SoftmaxCe),
+            "mse" => Some(Loss::Mse),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Loss::SoftmaxCe => "softmax_ce",
+            Loss::Mse => "mse",
+        }
+    }
+
+    /// Per-example loss L^(j) (unreduced), mirroring
+    /// `model.per_example_loss`.
+    pub fn per_example(&self, logits: &Tensor, y: &Targets) -> Vec<f32> {
+        let m = logits.dims()[0];
+        match (self, y) {
+            (Loss::SoftmaxCe, Targets::Classes(cls)) => {
+                assert_eq!(cls.len(), m);
+                let logp = ops::log_softmax_rows(logits);
+                (0..m).map(|j| -logp.at2(j, cls[j] as usize)).collect()
+            }
+            (Loss::Mse, Targets::Dense(t)) => {
+                assert_eq!(t.dims(), logits.dims());
+                let d = logits.dims()[1] as f32;
+                (0..m)
+                    .map(|j| {
+                        logits
+                            .row(j)
+                            .iter()
+                            .zip(t.row(j))
+                            .map(|(&a, &b)| (a - b) * (a - b))
+                            .sum::<f32>()
+                            / d
+                    })
+                    .collect()
+            }
+            _ => panic!("loss/target kind mismatch: {:?}", self),
+        }
+    }
+
+    /// dC/dz^(n) where C = SUM_j L^(j) (the paper's total cost). Row j is
+    /// therefore dL^(j)/dz_j — exactly the Zbar^(n) the trick consumes.
+    pub fn grad_z(&self, logits: &Tensor, y: &Targets) -> Tensor {
+        let m = logits.dims()[0];
+        match (self, y) {
+            (Loss::SoftmaxCe, Targets::Classes(cls)) => {
+                let mut g = ops::softmax_rows(logits);
+                for j in 0..m {
+                    let c = cls[j] as usize;
+                    let v = g.at2(j, c);
+                    g.set2(j, c, v - 1.0);
+                }
+                g
+            }
+            (Loss::Mse, Targets::Dense(t)) => {
+                let d = logits.dims()[1] as f32;
+                let mut g = ops::sub(logits, t);
+                for v in g.data_mut() {
+                    *v *= 2.0 / d;
+                }
+                g
+            }
+            _ => panic!("loss/target kind mismatch: {:?}", self),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn ce_matches_manual() {
+        let logits = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        let y = Targets::Classes(vec![2, 0]);
+        let l = Loss::SoftmaxCe.per_example(&logits, &y);
+        // -log softmax
+        let p0 = (3f64).exp() / ((1f64).exp() + (2f64).exp() + (3f64).exp());
+        assert!((l[0] as f64 - (-p0.ln())).abs() < 1e-5);
+        assert!((l[1] as f64 - (3f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mse_matches_manual() {
+        let a = Tensor::new(vec![1, 2], vec![1.0, 3.0]);
+        let t = Targets::Dense(Tensor::new(vec![1, 2], vec![0.0, 1.0]));
+        assert_eq!(Loss::Mse.per_example(&a, &t), vec![(1.0 + 4.0) / 2.0]);
+    }
+
+    #[test]
+    fn grad_z_matches_finite_difference() {
+        prop::check(30, |g| {
+            let m = g.usize_in(1..5);
+            let d = g.usize_in(2..6);
+            let mut rng = Rng::new(g.case + 10);
+            let logits = Tensor::randn(vec![m, d], &mut rng);
+            let (loss, y) = if g.bool() {
+                (
+                    Loss::SoftmaxCe,
+                    Targets::Classes((0..m).map(|j| (j % d) as i32).collect()),
+                )
+            } else {
+                (Loss::Mse, Targets::Dense(Tensor::randn(vec![m, d], &mut rng)))
+            };
+            let grad = loss.grad_z(&logits, &y);
+            let h = 1e-3f32;
+            // probe one random coordinate
+            let (j, c) = (g.usize_in(0..m), g.usize_in(0..d));
+            let mut lp = logits.clone();
+            lp.set2(j, c, lp.at2(j, c) + h);
+            let mut lm = logits.clone();
+            lm.set2(j, c, lm.at2(j, c) - h);
+            let fd = (loss.per_example(&lp, &y).iter().sum::<f32>()
+                - loss.per_example(&lm, &y).iter().sum::<f32>())
+                / (2.0 * h);
+            prop::assert_close(grad.at2(j, c) as f64, fd as f64, 5e-2)
+        });
+    }
+
+    #[test]
+    fn ce_grad_rows_sum_to_zero() {
+        let mut rng = Rng::new(4);
+        let logits = Tensor::randn(vec![5, 7], &mut rng);
+        let y = Targets::Classes(vec![0, 1, 2, 3, 4]);
+        let g = Loss::SoftmaxCe.grad_z(&logits, &y);
+        for j in 0..5 {
+            let s: f32 = g.row(j).iter().sum();
+            assert!(s.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn targets_gather() {
+        let y = Targets::Classes(vec![10, 20, 30]);
+        assert_eq!(y.gather(&[2, 0]), Targets::Classes(vec![30, 10]));
+        let d = Targets::Dense(Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        let g = d.gather(&[1, 1]);
+        assert_eq!(
+            g,
+            Targets::Dense(Tensor::new(vec![2, 2], vec![3.0, 4.0, 3.0, 4.0]))
+        );
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Loss::parse("softmax_ce").unwrap().name(), "softmax_ce");
+        assert_eq!(Loss::parse("mse").unwrap().name(), "mse");
+        assert!(Loss::parse("hinge").is_none());
+    }
+}

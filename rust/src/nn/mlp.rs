@@ -1,0 +1,261 @@
+//! Forward/backward for the paper's network, with H/Z capture.
+//!
+//! The backward pass materializes exactly the quantities the paper's trick
+//! consumes: `Zbar^(i) = dC/dZ^(i)` per layer (where C = sum of per-example
+//! losses) and the augmented inputs `Haug^(i-1)` retained by the forward.
+
+use crate::tensor::ops;
+use crate::tensor::Tensor;
+
+use super::loss::Targets;
+use super::spec::ModelSpec;
+
+/// A network = spec + weights (weights include the folded bias row).
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub spec: ModelSpec,
+    pub params: Vec<Tensor>,
+}
+
+/// Everything the forward pass retains for backward + the trick.
+#[derive(Debug, Clone)]
+pub struct Forward {
+    /// Haug^(i-1) for each layer i (hs[0] = augmented network input).
+    pub hs: Vec<Tensor>,
+    /// Pre-activations Z^(i).
+    pub zs: Vec<Tensor>,
+    /// Final-layer logits (== zs.last(), linear output layer).
+    pub logits: Tensor,
+    /// Per-example losses L^(j).
+    pub per_ex_loss: Vec<f32>,
+}
+
+/// Backward products.
+#[derive(Debug, Clone)]
+pub struct Backward {
+    /// Zbar^(i) = dC/dZ^(i), C = sum_j L^(j).
+    pub zbars: Vec<Tensor>,
+    /// Parameter gradients dC/dW^(i) (SUM over examples, like the paper's C;
+    /// divide by m or apply weights for a mean update).
+    pub grads: Vec<Tensor>,
+}
+
+impl Mlp {
+    pub fn new(spec: ModelSpec, params: Vec<Tensor>) -> Self {
+        let shapes = spec.weight_shapes();
+        assert_eq!(params.len(), shapes.len(), "param count mismatch");
+        for (w, (a, b)) in params.iter().zip(&shapes) {
+            assert_eq!(w.dims(), &[*a, *b], "weight shape mismatch");
+        }
+        Mlp { spec, params }
+    }
+
+    pub fn init(spec: ModelSpec, rng: &mut crate::tensor::Rng) -> Self {
+        let params = spec.init_params(rng);
+        Mlp { spec, params }
+    }
+
+    /// Forward with capture; `x` is [m, d0], targets sized to match.
+    pub fn forward(&self, x: &Tensor, y: &Targets) -> Forward {
+        let n = self.spec.n_layers();
+        let m = x.dims()[0];
+        assert_eq!(x.dims()[1], self.spec.in_dim());
+        assert_eq!(y.len(), m);
+        let mut h = x.clone();
+        let mut hs = Vec::with_capacity(n);
+        let mut zs = Vec::with_capacity(n);
+        for (i, w) in self.params.iter().enumerate() {
+            let ha = ops::augment(&h);
+            let z = ops::matmul(&ha, w);
+            super::count_flops(2 * m as u64 * ha.dims()[1] as u64 * w.dims()[1] as u64);
+            hs.push(ha);
+            h = if i < n - 1 {
+                ops::map(&z, |v| self.spec.activation.apply(v))
+            } else {
+                z.clone()
+            };
+            zs.push(z);
+        }
+        let logits = h;
+        let per_ex_loss = self.spec.loss.per_example(&logits, y);
+        Forward {
+            hs,
+            zs,
+            logits,
+            per_ex_loss,
+        }
+    }
+
+    /// Standard batched backprop over the captured forward.
+    pub fn backward(&self, fwd: &Forward, y: &Targets) -> Backward {
+        let n = self.spec.n_layers();
+        let m = fwd.logits.dims()[0];
+        let mut zbars = vec![Tensor::zeros(vec![0]); n];
+        let mut grads = vec![Tensor::zeros(vec![0]); n];
+
+        // dC/dz^(n) from the loss.
+        let mut zbar = self.spec.loss.grad_z(&fwd.logits, y);
+        for i in (0..n).rev() {
+            // dC/dW^(i) = Haug^(i-1)^T @ Zbar^(i)
+            let g = ops::matmul_tn(&fwd.hs[i], &zbar);
+            super::count_flops(
+                2 * m as u64 * fwd.hs[i].dims()[1] as u64 * zbar.dims()[1] as u64,
+            );
+            grads[i] = g;
+            zbars[i] = zbar.clone();
+            if i > 0 {
+                // dC/dHaug^(i-1) = Zbar^(i) @ W^(i)^T, drop bias column,
+                // then through the activation: dC/dz^(i-1).
+                let dha = ops::matmul_nt(&zbar, &self.params[i]);
+                super::count_flops(
+                    2 * m as u64 * zbar.dims()[1] as u64 * self.params[i].dims()[0] as u64,
+                );
+                let dh = ops::drop_last_col(&dha);
+                let mut dz = dh;
+                for (v, &z) in dz.data_mut().iter_mut().zip(fwd.zs[i - 1].data()) {
+                    *v *= self.spec.activation.grad(z);
+                }
+                zbar = dz;
+            }
+        }
+        Backward { zbars, grads }
+    }
+
+    /// Convenience: forward + backward.
+    pub fn forward_backward(&self, x: &Tensor, y: &Targets) -> (Forward, Backward) {
+        let fwd = self.forward(x, y);
+        let bwd = self.backward(&fwd, y);
+        (fwd, bwd)
+    }
+
+    /// Mean loss over a batch (no capture) — evaluation path.
+    pub fn mean_loss(&self, x: &Tensor, y: &Targets) -> f32 {
+        let fwd = self.forward(x, y);
+        fwd.per_ex_loss.iter().sum::<f32>() / fwd.per_ex_loss.len() as f32
+    }
+
+    /// Classification accuracy (CE models only).
+    pub fn accuracy(&self, x: &Tensor, y: &Targets) -> f32 {
+        let fwd = self.forward(x, y);
+        match y {
+            Targets::Classes(cls) => {
+                let pred = ops::row_argmax(&fwd.logits);
+                let hits = pred
+                    .iter()
+                    .zip(cls)
+                    .filter(|(p, c)| **p == **c as usize)
+                    .count();
+                hits as f32 / cls.len() as f32
+            }
+            _ => panic!("accuracy needs class targets"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Loss;
+    use crate::tensor::ops::Activation;
+    use crate::tensor::Rng;
+    use crate::util::prop;
+
+    fn tiny(mut dims: Vec<usize>, loss: Loss, act: Activation, m: usize) -> (Mlp, Tensor, Targets) {
+        if dims.is_empty() {
+            dims = vec![4, 6, 3];
+        }
+        let spec = ModelSpec::new(dims, act, loss, m).unwrap();
+        let mut rng = Rng::new(99);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let x = Tensor::randn(vec![m, spec.in_dim()], &mut rng);
+        let y = match loss {
+            Loss::SoftmaxCe => {
+                Targets::Classes((0..m).map(|j| (j % spec.out_dim()) as i32).collect())
+            }
+            Loss::Mse => Targets::Dense(Tensor::randn(vec![m, spec.out_dim()], &mut rng)),
+        };
+        (mlp, x, y)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let (mlp, x, y) = tiny(vec![4, 8, 6, 3], Loss::SoftmaxCe, Activation::Relu, 5);
+        let fwd = mlp.forward(&x, &y);
+        assert_eq!(fwd.logits.dims(), &[5, 3]);
+        assert_eq!(fwd.hs.len(), 3);
+        assert_eq!(fwd.hs[0].dims(), &[5, 5]);
+        assert_eq!(fwd.hs[1].dims(), &[5, 9]);
+        assert_eq!(fwd.zs[2].dims(), &[5, 3]);
+        assert_eq!(fwd.per_ex_loss.len(), 5);
+    }
+
+    #[test]
+    fn param_grads_match_finite_difference() {
+        prop::check(12, |g| {
+            let act = *g.choose(&[Activation::Tanh, Activation::Sigmoid, Activation::Gelu]);
+            let loss = if g.bool() { Loss::SoftmaxCe } else { Loss::Mse };
+            let m = g.usize_in(1..5);
+            let (mlp, x, y) = tiny(vec![3, 5, 4, 2], loss, act, m);
+            let (_, bwd) = mlp.forward_backward(&x, &y);
+            // probe one random weight coordinate in a random layer
+            let li = g.usize_in(0..3);
+            let (r, c) = (
+                g.usize_in(0..mlp.params[li].dims()[0]),
+                g.usize_in(0..mlp.params[li].dims()[1]),
+            );
+            let h = 1e-2f32;
+            let mut mp = mlp.clone();
+            let v = mp.params[li].at2(r, c);
+            mp.params[li].set2(r, c, v + h);
+            let mut mm = mlp.clone();
+            let v = mm.params[li].at2(r, c);
+            mm.params[li].set2(r, c, v - h);
+            let fp: f32 = mp.forward(&x, &y).per_ex_loss.iter().sum();
+            let fm: f32 = mm.forward(&x, &y).per_ex_loss.iter().sum();
+            let fd = (fp - fm) / (2.0 * h);
+            prop::assert_close(bwd.grads[li].at2(r, c) as f64, fd as f64, 5e-2)
+        });
+    }
+
+    #[test]
+    fn zbar_rows_are_per_example() {
+        // zeroing example j's row of x must not change other rows' zbar
+        let (mlp, x, y) = tiny(vec![4, 6, 3], Loss::SoftmaxCe, Activation::Relu, 4);
+        let (_, bwd) = mlp.forward_backward(&x, &y);
+        let mut x2 = x.clone();
+        for v in &mut x2.data_mut()[0..4] {
+            *v = 0.0;
+        }
+        let (_, bwd2) = mlp.forward_backward(&x2, &y);
+        for li in 0..2 {
+            for j in 1..4 {
+                prop::assert_all_close(bwd.zbars[li].row(j), bwd2.zbars[li].row(j), 1e-4)
+                    .unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn flop_counter_matches_analytic() {
+        let (mlp, x, y) = tiny(vec![16, 32, 10], Loss::SoftmaxCe, Activation::Relu, 8);
+        crate::nn::reset_flops();
+        let _ = mlp.forward_backward(&x, &y);
+        let measured = crate::nn::read_flops();
+        let analytic = mlp.spec.flops_forward(8) + mlp.spec.flops_backward(8);
+        assert_eq!(measured, analytic);
+    }
+
+    #[test]
+    fn accuracy_bounds() {
+        let (mlp, x, y) = tiny(vec![4, 8, 3], Loss::SoftmaxCe, Activation::Relu, 9);
+        let acc = mlp.accuracy(&x, &y);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    #[should_panic(expected = "weight shape mismatch")]
+    fn wrong_params_rejected() {
+        let spec = ModelSpec::new(vec![4, 3], Activation::Relu, Loss::Mse, 1).unwrap();
+        Mlp::new(spec, vec![Tensor::zeros(vec![4, 3])]); // needs [5,3]
+    }
+}

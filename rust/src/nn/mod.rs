@@ -1,0 +1,37 @@
+//! Pure-rust reference implementation of the paper's model (§2).
+//!
+//! Mirrors `python/compile/model.py` operation-for-operation so that the
+//! PJRT artifacts can be cross-validated against an independent
+//! implementation (integration tests feed identical params/batches to both
+//! and diff every output), and so the benches have a CPU baseline that
+//! does not involve XLA at all.
+//!
+//! Also carries the instrumented flop counters that E1 (the §5 op-count
+//! table) reads.
+
+pub mod loss;
+pub mod mlp;
+pub mod spec;
+
+pub use loss::Loss;
+pub use mlp::{Backward, Forward, Mlp};
+pub use spec::ModelSpec;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global matmul flop counter (2*m*k*n per matmul). E1 resets it, runs a
+/// pass, and reads the measured count to set against the analytic model.
+pub static FLOP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn count_flops(n: u64) {
+    FLOP_COUNTER.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Reset and read helpers for the instrumentation.
+pub fn reset_flops() {
+    FLOP_COUNTER.store(0, Ordering::Relaxed);
+}
+
+pub fn read_flops() -> u64 {
+    FLOP_COUNTER.load(Ordering::Relaxed)
+}

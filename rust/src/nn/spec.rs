@@ -1,0 +1,177 @@
+//! Model specification — the rust mirror of `python ModelSpec` and the
+//! shape contract recorded in `artifacts/manifest.json`.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::ops::Activation;
+use crate::tensor::{Rng, Tensor};
+
+use super::Loss;
+
+/// Static description of one dense network variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// (d0, d1, ..., dn): input width, hidden widths..., output width.
+    pub dims: Vec<usize>,
+    pub activation: Activation,
+    pub loss: Loss,
+    /// Minibatch size baked into the AOT artifacts.
+    pub m: usize,
+}
+
+impl ModelSpec {
+    pub fn new(dims: Vec<usize>, activation: Activation, loss: Loss, m: usize) -> Result<Self> {
+        if dims.len() < 2 {
+            bail!("need >=2 dims, got {dims:?}");
+        }
+        if m < 1 {
+            bail!("batch size must be >=1");
+        }
+        if dims.iter().any(|&d| d == 0) {
+            bail!("zero-width layer in {dims:?}");
+        }
+        Ok(ModelSpec {
+            dims,
+            activation,
+            loss,
+            m,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Shape of each W^(i): (d_{i-1}+1, d_i) — bias folded as the last row.
+    pub fn weight_shapes(&self) -> Vec<(usize, usize)> {
+        (0..self.n_layers())
+            .map(|i| (self.dims[i] + 1, self.dims[i + 1]))
+            .collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.weight_shapes().iter().map(|&(a, b)| a * b).sum()
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn out_dim(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// Analytic matmul flops of one batched forward pass (§5: O(mnp²)).
+    pub fn flops_forward(&self, m: usize) -> u64 {
+        self.weight_shapes()
+            .iter()
+            .map(|&(a, b)| 2 * m as u64 * a as u64 * b as u64)
+            .sum()
+    }
+
+    /// Analytic matmul flops of one batched backward pass.
+    pub fn flops_backward(&self, m: usize) -> u64 {
+        let shapes = self.weight_shapes();
+        let dw: u64 = shapes
+            .iter()
+            .map(|&(a, b)| 2 * m as u64 * a as u64 * b as u64)
+            .sum();
+        let dh: u64 = shapes[1..]
+            .iter()
+            .map(|&(a, b)| 2 * m as u64 * a as u64 * b as u64)
+            .sum();
+        dw + dh
+    }
+
+    /// Analytic extra ops of the Goodfellow trick (§5: O(mnp)) — two
+    /// squared-row-sums and one product per layer.
+    pub fn flops_trick_extra(&self, m: usize) -> u64 {
+        self.weight_shapes()
+            .iter()
+            .map(|&(a, b)| 2 * m as u64 * (a as u64 + b as u64) + m as u64)
+            .sum()
+    }
+
+    /// He (relu/gelu) or Glorot init with zero bias row — mirrors
+    /// `model.init_params` (distributional mirror; exact values live in
+    /// whichever side generated them and are fed to the other).
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<Tensor> {
+        let he = matches!(self.activation, Activation::Relu | Activation::Gelu);
+        self.weight_shapes()
+            .iter()
+            .map(|&(fan_in_p1, fan_out)| {
+                let fan_in = fan_in_p1 - 1;
+                let std = if he {
+                    (2.0 / fan_in as f32).sqrt()
+                } else {
+                    (2.0 / (fan_in + fan_out) as f32).sqrt()
+                };
+                let mut w = Tensor::zeros(vec![fan_in_p1, fan_out]);
+                for i in 0..fan_in {
+                    for j in 0..fan_out {
+                        w.set2(i, j, rng.next_normal() * std);
+                    }
+                }
+                w // last row (bias) stays zero
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec::new(vec![4, 8, 3], Activation::Relu, Loss::SoftmaxCe, 2).unwrap()
+    }
+
+    #[test]
+    fn weight_shapes_fold_bias() {
+        assert_eq!(spec().weight_shapes(), vec![(5, 8), (9, 3)]);
+        assert_eq!(spec().param_count(), 5 * 8 + 9 * 3);
+    }
+
+    #[test]
+    fn flops_mirror_python() {
+        // matches test_model.py::TestSpec::test_flops_model
+        let s = spec();
+        let fwd = 2 * 2 * (5 * 8 + 9 * 3);
+        assert_eq!(s.flops_forward(2), fwd as u64);
+        assert_eq!(s.flops_backward(2), (fwd + 2 * 2 * 9 * 3) as u64);
+    }
+
+    #[test]
+    fn trick_extra_is_linear_in_p() {
+        // doubling widths doubles trick flops but quadruples matmul flops
+        let a = ModelSpec::new(vec![100, 100, 100], Activation::Relu, Loss::Mse, 8).unwrap();
+        let b = ModelSpec::new(vec![200, 200, 200], Activation::Relu, Loss::Mse, 8).unwrap();
+        let ratio_trick = b.flops_trick_extra(8) as f64 / a.flops_trick_extra(8) as f64;
+        let ratio_mm = b.flops_forward(8) as f64 / a.flops_forward(8) as f64;
+        assert!((ratio_trick - 2.0).abs() < 0.1, "{ratio_trick}");
+        assert!((ratio_mm - 4.0).abs() < 0.15, "{ratio_mm}");
+    }
+
+    #[test]
+    fn validation_errors() {
+        assert!(ModelSpec::new(vec![4], Activation::Relu, Loss::Mse, 1).is_err());
+        assert!(ModelSpec::new(vec![4, 0], Activation::Relu, Loss::Mse, 1).is_err());
+        assert!(ModelSpec::new(vec![4, 2], Activation::Relu, Loss::Mse, 0).is_err());
+    }
+
+    #[test]
+    fn init_bias_row_zero_and_scaled() {
+        let mut rng = Rng::new(0);
+        let s = ModelSpec::new(vec![1000, 1000, 10], Activation::Relu, Loss::SoftmaxCe, 4)
+            .unwrap();
+        let params = s.init_params(&mut rng);
+        let w0 = &params[0];
+        // bias row zero
+        for j in 0..10.min(w0.dims()[1]) {
+            assert_eq!(w0.at2(1000, j), 0.0);
+        }
+        // He std ~ sqrt(2/1000)
+        let std = (crate::tensor::ops::sq_sum(w0) / (1000.0 * 1000.0)) as f32;
+        assert!((std.sqrt() - (2.0f32 / 1000.0).sqrt()).abs() < 0.005);
+    }
+}

@@ -1,0 +1,137 @@
+//! Adam (Kingma & Ba) with bias correction.
+
+use crate::tensor::Tensor;
+
+use super::Optimizer;
+
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+}
+
+impl Adam {
+    pub fn new(beta1: f32, beta2: f32, eps: f32) -> Adam {
+        assert!((0.0..1.0).contains(&beta1) && (0.0..1.0).contains(&beta2));
+        Adam {
+            beta1,
+            beta2,
+            eps,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+}
+
+impl Default for Adam {
+    fn default() -> Self {
+        Adam::new(0.9, 0.999, 1e-8)
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        if self.m.is_empty() {
+            self.m = params
+                .iter()
+                .map(|p| Tensor::zeros(p.dims().to_vec()))
+                .collect();
+            self.v = self.m.clone();
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            for (((pv, &gv), mv), vv) in p
+                .data_mut()
+                .iter_mut()
+                .zip(g.data())
+                .zip(m.data_mut().iter_mut())
+                .zip(v.data_mut().iter_mut())
+            {
+                *mv = self.beta1 * *mv + (1.0 - self.beta1) * gv;
+                *vv = self.beta2 * *vv + (1.0 - self.beta2) * gv * gv;
+                let mhat = *mv / bc1;
+                let vhat = *vv / bc2;
+                *pv -= lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+
+    fn state(&self) -> Vec<&Tensor> {
+        self.m.iter().chain(self.v.iter()).collect()
+    }
+
+    fn load_state(&mut self, state: Vec<Tensor>) {
+        let half = state.len() / 2;
+        let mut it = state.into_iter();
+        self.m = (&mut it).take(half).collect();
+        self.v = it.collect();
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut p = vec![Tensor::new(vec![2], vec![3.0, -5.0])];
+        let mut opt = Adam::default();
+        for _ in 0..400 {
+            let g = vec![p[0].clone()];
+            opt.step(&mut p, &g, 0.05);
+        }
+        assert!(p[0].data().iter().all(|v| v.abs() < 1e-2), "{:?}", p[0]);
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // with bias correction, |Δp| ≈ lr regardless of gradient scale
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let mut p = vec![Tensor::new(vec![1], vec![0.0])];
+            let g = vec![Tensor::new(vec![1], vec![scale])];
+            let mut opt = Adam::default();
+            opt.step(&mut p, &g, 0.01);
+            assert!(
+                (p[0].data()[0].abs() - 0.01).abs() < 1e-4,
+                "scale {scale}: step {}",
+                p[0].data()[0]
+            );
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_identically() {
+        let mut p = vec![Tensor::new(vec![2], vec![1.0, 2.0])];
+        let mut opt = Adam::default();
+        for _ in 0..5 {
+            let g = vec![p[0].clone()];
+            opt.step(&mut p, &g, 0.1);
+        }
+        let saved: Vec<Tensor> = opt.state().into_iter().cloned().collect();
+        let mut opt2 = Adam::default();
+        opt2.load_state(saved);
+        opt2.t = opt.t;
+        let mut pa = p.clone();
+        let mut pb = p.clone();
+        let g = vec![p[0].clone()];
+        opt.step(&mut pa, &g, 0.1);
+        opt2.step(&mut pb, &g, 0.1);
+        assert_eq!(pa[0].data(), pb[0].data());
+    }
+}

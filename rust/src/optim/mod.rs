@@ -1,0 +1,31 @@
+//! Rust-side optimizers and LR schedules.
+//!
+//! Two update paths exist: the fused-SGD artifacts (`step_*` entries,
+//! update inside XLA) and the rust-side path (`grads_pegrad` returns mean
+//! gradients, these optimizers apply them). The rust path is what enables
+//! momentum/Adam without re-lowering artifacts.
+
+pub mod adam;
+pub mod schedule;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use schedule::Schedule;
+pub use sgd::Sgd;
+
+use crate::tensor::Tensor;
+
+/// Optimizer interface over a flat list of parameter tensors.
+pub trait Optimizer {
+    /// Apply one update with mean gradients `grads` at learning rate `lr`.
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32);
+
+    /// State tensors for checkpointing (momentum buffers etc.), in a
+    /// stable order.
+    fn state(&self) -> Vec<&Tensor>;
+
+    /// Restore state saved by [`Optimizer::state`].
+    fn load_state(&mut self, state: Vec<Tensor>);
+
+    fn name(&self) -> &'static str;
+}

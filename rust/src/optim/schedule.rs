@@ -1,0 +1,131 @@
+//! Learning-rate schedules.
+
+/// LR as a function of the step index.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    Constant {
+        lr: f32,
+    },
+    /// Linear warmup to `lr` over `warmup` steps, then cosine decay to
+    /// `final_lr` at `total` steps.
+    WarmupCosine {
+        lr: f32,
+        final_lr: f32,
+        warmup: usize,
+        total: usize,
+    },
+    /// Step decay: lr * gamma^(step / every).
+    StepDecay {
+        lr: f32,
+        gamma: f32,
+        every: usize,
+    },
+}
+
+impl Schedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::WarmupCosine {
+                lr,
+                final_lr,
+                warmup,
+                total,
+            } => {
+                if warmup > 0 && step < warmup {
+                    lr * (step + 1) as f32 / warmup as f32
+                } else {
+                    let t = (step.saturating_sub(warmup)) as f32
+                        / (total.saturating_sub(warmup)).max(1) as f32;
+                    let t = t.clamp(0.0, 1.0);
+                    final_lr
+                        + 0.5 * (lr - final_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+                }
+            }
+            Schedule::StepDecay { lr, gamma, every } => {
+                lr * gamma.powi((step / every.max(1)) as i32)
+            }
+        }
+    }
+
+    /// Parse "constant:0.1", "cosine:0.1:0.001:100:1000",
+    /// "stepdecay:0.1:0.5:200".
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["constant", lr] => Some(Schedule::Constant {
+                lr: lr.parse().ok()?,
+            }),
+            ["cosine", lr, fin, warm, total] => Some(Schedule::WarmupCosine {
+                lr: lr.parse().ok()?,
+                final_lr: fin.parse().ok()?,
+                warmup: warm.parse().ok()?,
+                total: total.parse().ok()?,
+            }),
+            ["stepdecay", lr, gamma, every] => Some(Schedule::StepDecay {
+                lr: lr.parse().ok()?,
+                gamma: gamma.parse().ok()?,
+                every: every.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        let s = Schedule::Constant { lr: 0.3 };
+        assert_eq!(s.at(0), 0.3);
+        assert_eq!(s.at(10_000), 0.3);
+    }
+
+    #[test]
+    fn warmup_then_cosine() {
+        let s = Schedule::WarmupCosine {
+            lr: 1.0,
+            final_lr: 0.1,
+            warmup: 10,
+            total: 110,
+        };
+        assert!(s.at(0) < 0.2);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+        // midpoint of cosine ≈ (1 + 0.1)/2
+        assert!((s.at(60) - 0.55).abs() < 0.01);
+        assert!((s.at(110) - 0.1).abs() < 1e-4);
+        assert!((s.at(10_000) - 0.1).abs() < 1e-4); // clamps past total
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = Schedule::StepDecay {
+            lr: 1.0,
+            gamma: 0.5,
+            every: 100,
+        };
+        assert_eq!(s.at(99), 1.0);
+        assert_eq!(s.at(100), 0.5);
+        assert_eq!(s.at(250), 0.25);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(
+            Schedule::parse("constant:0.1"),
+            Some(Schedule::Constant { lr: 0.1 })
+        );
+        assert!(matches!(
+            Schedule::parse("cosine:0.1:0.001:100:1000"),
+            Some(Schedule::WarmupCosine { .. })
+        ));
+        assert!(matches!(
+            Schedule::parse("stepdecay:0.1:0.5:200"),
+            Some(Schedule::StepDecay { .. })
+        ));
+        assert!(Schedule::parse("bogus").is_none());
+        assert!(Schedule::parse("constant:x").is_none());
+    }
+}

@@ -1,0 +1,173 @@
+//! Paper §6: per-example gradient clipping via Zbar row rescale + one
+//! extra matmul per layer.
+
+use crate::nn::{Backward, Forward, Mlp};
+use crate::tensor::{ops, Tensor};
+
+use super::goodfellow::PerExampleNorms;
+
+/// coef_j = min(1, C / ||g_j||) from the squared totals.
+pub fn clip_coefficients(norms: &PerExampleNorms, clip_c: f32) -> Vec<f32> {
+    norms
+        .s_total
+        .iter()
+        .map(|&s| {
+            let n = s.max(1e-30).sqrt();
+            (clip_c / n).min(1.0)
+        })
+        .collect()
+}
+
+/// The §6 recompute: `Wbar^(i)' = Haug^(i-1)^T @ (diag(coef) Zbar^(i))`.
+///
+/// Returns SUM-of-clipped-per-example-gradients (divide by m for the
+/// DP-SGD mean update).
+pub fn clipped_grads(fwd: &Forward, bwd: &Backward, coef: &[f32]) -> Vec<Tensor> {
+    bwd.zbars
+        .iter()
+        .zip(&fwd.hs)
+        .map(|(zbar, h)| {
+            let zprime = ops::scale_rows(zbar, coef);
+            ops::matmul_tn(h, &zprime)
+        })
+        .collect()
+}
+
+/// §6's second instance: rescale every example's gradient to a COMMON
+/// norm `t` (normalized-gradient updates). Same pattern as clipping —
+/// coef on Zbar rows, one extra matmul per layer. Returns the MEAN of the
+/// normalized per-example gradients.
+pub fn normalized_grads(
+    fwd: &Forward,
+    bwd: &Backward,
+    norms: &PerExampleNorms,
+    target: f32,
+) -> Vec<Tensor> {
+    let m = norms.m() as f32;
+    let coef: Vec<f32> = norms
+        .s_total
+        .iter()
+        .map(|&s| target / s.max(1e-24).sqrt())
+        .collect();
+    clipped_grads(fwd, bwd, &coef)
+        .into_iter()
+        .map(|g| ops::scale(&g, 1.0 / m))
+        .collect()
+}
+
+/// Full §6 pipeline on the reference implementation: norms → coefficients →
+/// rescale → recompute. Returns (clipped grad sum, norms, clip fraction).
+pub fn clip_pipeline(
+    mlp: &Mlp,
+    fwd: &Forward,
+    bwd: &Backward,
+    clip_c: f32,
+) -> (Vec<Tensor>, PerExampleNorms, f32) {
+    let norms = super::per_example_norms(fwd, bwd);
+    let coef = clip_coefficients(&norms, clip_c);
+    let grads = clipped_grads(fwd, bwd, &coef);
+    let clipped = coef.iter().filter(|&&c| c < 1.0).count();
+    let _ = mlp;
+    (grads, norms, clipped as f32 / coef.len() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::Targets;
+    use crate::nn::{Loss, ModelSpec};
+    use crate::pegrad::naive::per_example_grads;
+    use crate::tensor::ops::Activation;
+    use crate::tensor::Rng;
+    use crate::util::prop;
+
+    fn setup(m: usize, seed: u64) -> (Mlp, Tensor, Targets) {
+        let spec =
+            ModelSpec::new(vec![6, 9, 5], Activation::Relu, Loss::SoftmaxCe, m).unwrap();
+        let mut rng = Rng::new(seed);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let x = ops::scale(&Tensor::randn(vec![m, 6], &mut rng), 3.0);
+        let y = Targets::Classes((0..m).map(|j| (j % 5) as i32).collect());
+        (mlp, x, y)
+    }
+
+    /// §6 equivalence: rescale-then-matmul == clip-each-materialized-grad.
+    #[test]
+    fn trick_clip_equals_naive_clip() {
+        prop::check(8, |g| {
+            let m = g.usize_in(1..8);
+            let c = g.f32_in(0.01..5.0);
+            let (mlp, x, y) = setup(m, g.case + 5);
+            let (fwd, bwd) = mlp.forward_backward(&x, &y);
+            let (grads, _, _) = clip_pipeline(&mlp, &fwd, &bwd, c);
+
+            let pex = per_example_grads(&mlp, &x, &y);
+            for i in 0..mlp.spec.n_layers() {
+                let mut want = Tensor::zeros(grads[i].dims().to_vec());
+                for j in 0..m {
+                    let s: f64 = pex[j].iter().map(ops::sq_sum).sum();
+                    let coef = (c as f64 / s.max(1e-30).sqrt()).min(1.0) as f32;
+                    ops::axpy(&mut want, coef, &pex[j][i]);
+                }
+                prop::assert_all_close(grads[i].data(), want.data(), 5e-3)
+                    .map_err(|e| format!("layer {i}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clipped_sum_norm_bounded_by_m_c() {
+        let (mlp, x, y) = setup(8, 1);
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let c = 0.25f32;
+        let (grads, _, frac) = clip_pipeline(&mlp, &fwd, &bwd, c);
+        let total: f64 = grads.iter().map(ops::sq_sum).sum();
+        // triangle inequality: ||sum of m clipped|| <= m * C
+        assert!(total.sqrt() <= (8.0 * c as f64) * 1.0001);
+        assert!(frac > 0.0, "big inputs should trigger clipping");
+    }
+
+    #[test]
+    fn huge_bound_is_identity() {
+        let (mlp, x, y) = setup(4, 2);
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let (grads, _, frac) = clip_pipeline(&mlp, &fwd, &bwd, 1e9);
+        assert_eq!(frac, 0.0);
+        for (g, want) in grads.iter().zip(&bwd.grads) {
+            prop::assert_all_close(g.data(), want.data(), 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn normalized_grads_equalize_contributions() {
+        let (mlp, x, y) = setup(5, 3);
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let norms = crate::pegrad::per_example_norms(&fwd, &bwd);
+        let t = 2.0f32;
+        let grads = normalized_grads(&fwd, &bwd, &norms, t);
+        // reconstruct: mean of per-example grads each rescaled to norm t
+        let pex = per_example_grads(&mlp, &x, &y);
+        for i in 0..mlp.spec.n_layers() {
+            let mut want = Tensor::zeros(grads[i].dims().to_vec());
+            for j in 0..5 {
+                let s: f64 = pex[j].iter().map(ops::sq_sum).sum();
+                let coef = (t as f64 / s.max(1e-24).sqrt()) as f32;
+                ops::axpy(&mut want, coef / 5.0, &pex[j][i]);
+            }
+            prop::assert_all_close(grads[i].data(), want.data(), 5e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn coefficients_formula() {
+        let norms = PerExampleNorms {
+            s_layers: vec![vec![4.0], vec![0.25], vec![0.0]],
+            s_total: vec![4.0, 0.25, 0.0],
+        };
+        let coef = clip_coefficients(&norms, 1.0);
+        assert!((coef[0] - 0.5).abs() < 1e-6);
+        assert_eq!(coef[1], 1.0); // norm 0.5 < C -> untouched
+        assert_eq!(coef[2], 1.0); // zero-grad row: finite, no NaN
+    }
+}

@@ -1,0 +1,145 @@
+//! Paper §5: the analytic operation-count model, as executable code.
+//!
+//! E1 regenerates the §5 comparison table from these formulas and checks
+//! them against the instrumented counters in [`crate::nn`].
+
+use crate::nn::ModelSpec;
+
+/// One row of the E1 table: op counts for computing per-example gradient
+/// norms on an (m, spec) workload, by method.
+#[derive(Debug, Clone)]
+pub struct OpCountRow {
+    pub p: usize,
+    pub n_layers: usize,
+    pub m: usize,
+    /// Ops of the batched training fwd+bwd everyone already pays.
+    pub backprop: u64,
+    /// EXTRA ops of the naive method (§3): m batch-1 fwd+bwd re-runs.
+    pub naive_extra: u64,
+    /// EXTRA ops of the trick (§4): O(mnp) row reductions.
+    pub trick_extra: u64,
+}
+
+impl OpCountRow {
+    /// naive_extra / backprop — the paper's "roughly doubles" claim (§5).
+    pub fn naive_ratio(&self) -> f64 {
+        self.naive_extra as f64 / self.backprop as f64
+    }
+
+    /// trick_extra / backprop — the paper's "negligible for large p" (§5);
+    /// Θ(1/p).
+    pub fn trick_ratio(&self) -> f64 {
+        self.trick_extra as f64 / self.backprop as f64
+    }
+}
+
+/// Build a row for an equal-width network of `n_layers` matmuls, width `p`,
+/// batch `m` (the §5 setting: "each layer has dimension p").
+pub fn row_equal_width(p: usize, n_layers: usize, m: usize) -> OpCountRow {
+    let dims = vec![p; n_layers + 1];
+    let spec = ModelSpec::new(
+        dims,
+        crate::tensor::ops::Activation::Relu,
+        crate::nn::Loss::Mse,
+        m,
+    )
+    .expect("valid spec");
+    row_for_spec(&spec, m)
+}
+
+/// Build a row for an arbitrary spec.
+pub fn row_for_spec(spec: &ModelSpec, m: usize) -> OpCountRow {
+    let backprop = spec.flops_forward(m) + spec.flops_backward(m);
+    // §3: naive re-runs fwd+bwd once per example at batch 1; same total
+    // matmul flops as one batched pass.
+    let naive_extra = m as u64 * (spec.flops_forward(1) + spec.flops_backward(1));
+    let trick_extra = spec.flops_trick_extra(m);
+    OpCountRow {
+        p: spec.dims[1],
+        n_layers: spec.n_layers(),
+        m,
+        backprop,
+        naive_extra,
+        trick_extra,
+    }
+}
+
+/// The asymptotic statements of §5, as predicates (unit-tested, and quoted
+/// by the E1 bench output).
+pub fn trick_ratio_is_theta_one_over_p(rows: &[OpCountRow]) -> bool {
+    // ratio * p should be ~constant across the sweep
+    let vals: Vec<f64> = rows
+        .iter()
+        .map(|r| r.trick_ratio() * r.p as f64)
+        .collect();
+    let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+    let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+    max / min < 1.6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_roughly_doubles() {
+        for p in [64, 256, 1024] {
+            let r = row_equal_width(p, 3, 64);
+            // naive extra == one more batched-equivalent pass
+            assert!((r.naive_ratio() - 1.0).abs() < 1e-9, "{}", r.naive_ratio());
+        }
+    }
+
+    #[test]
+    fn trick_ratio_shrinks_like_one_over_p() {
+        let rows: Vec<_> = [64usize, 128, 256, 512, 1024]
+            .iter()
+            .map(|&p| row_equal_width(p, 3, 64))
+            .collect();
+        assert!(trick_ratio_is_theta_one_over_p(&rows));
+        // and the ratio is tiny where the paper says it is
+        assert!(rows.last().unwrap().trick_ratio() < 0.01);
+        // monotone decreasing
+        for w in rows.windows(2) {
+            assert!(w[1].trick_ratio() < w[0].trick_ratio());
+        }
+    }
+
+    #[test]
+    fn analytic_matches_measured_counters() {
+        use crate::nn::loss::Targets;
+        use crate::nn::Mlp;
+        use crate::tensor::{Rng, Tensor};
+        let m = 8;
+        let spec = ModelSpec::new(
+            vec![32, 32, 32, 32],
+            crate::tensor::ops::Activation::Relu,
+            crate::nn::Loss::Mse,
+            m,
+        )
+        .unwrap();
+        let row = row_for_spec(&spec, m);
+        let mut rng = Rng::new(0);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let x = Tensor::randn(vec![m, 32], &mut rng);
+        let y = Targets::Dense(Tensor::randn(vec![m, 32], &mut rng));
+
+        crate::nn::reset_flops();
+        let _ = mlp.forward_backward(&x, &y);
+        assert_eq!(crate::nn::read_flops(), row.backprop);
+
+        crate::nn::reset_flops();
+        let _ = crate::pegrad::per_example_norms_naive(&mlp, &x, &y);
+        assert_eq!(crate::nn::read_flops(), row.naive_extra);
+    }
+
+    #[test]
+    fn row_fields_consistent() {
+        let r = row_equal_width(128, 2, 16);
+        assert_eq!(r.p, 128);
+        assert_eq!(r.n_layers, 2);
+        assert_eq!(r.m, 16);
+        assert!(r.trick_extra < r.backprop);
+        assert!(r.naive_extra > r.trick_extra);
+    }
+}

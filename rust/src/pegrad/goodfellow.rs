@@ -1,0 +1,143 @@
+//! Paper §4: the per-example gradient-norm factorization.
+//!
+//! ```text
+//! s_j^(i) = ||Zbar_j^(i)||^2 * ||Haug_j^(i-1)||^2
+//! ```
+//!
+//! Cost on top of a batched fwd+bwd: two row-wise squared sums and one
+//! product per layer — O(mnp) (§5).
+
+use crate::nn::{Backward, Forward};
+use crate::tensor::ops;
+
+/// Per-example squared gradient norms, per layer and total.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerExampleNorms {
+    /// s_layers[j][i] = s_j^(i) (squared norm of example j's gradient for
+    /// weight matrix i, bias included via the augmented column).
+    pub s_layers: Vec<Vec<f32>>,
+    /// s_total[j] = sum_i s_j^(i); the example's full squared grad norm.
+    pub s_total: Vec<f32>,
+}
+
+impl PerExampleNorms {
+    /// L2 norms (sqrt of totals).
+    pub fn norms(&self) -> Vec<f32> {
+        self.s_total.iter().map(|&s| s.sqrt()).collect()
+    }
+
+    pub fn m(&self) -> usize {
+        self.s_total.len()
+    }
+}
+
+/// Apply the §4 factorization to captured fwd/bwd intermediates.
+pub fn per_example_norms(fwd: &Forward, bwd: &Backward) -> PerExampleNorms {
+    let n = bwd.zbars.len();
+    let m = fwd.logits.dims()[0];
+    let mut s_layers = vec![vec![0f32; n]; m];
+    let mut s_total = vec![0f32; m];
+    for i in 0..n {
+        let zb_sq = ops::row_sq_norms(&bwd.zbars[i]);
+        let h_sq = ops::row_sq_norms(&fwd.hs[i]);
+        for j in 0..m {
+            let s = zb_sq[j] * h_sq[j];
+            s_layers[j][i] = s;
+            s_total[j] += s;
+        }
+    }
+    PerExampleNorms { s_layers, s_total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Loss, Mlp, ModelSpec};
+    use crate::nn::loss::Targets;
+    use crate::tensor::ops::Activation;
+    use crate::tensor::{Rng, Tensor};
+    use crate::util::prop;
+
+    /// THE theorem test (rust side): trick == explicit per-example norms
+    /// computed by m independent single-example backward passes.
+    #[test]
+    fn trick_equals_per_example_backprop() {
+        prop::check(15, |g| {
+            let n_hidden = g.usize_in(1..4);
+            let mut dims = vec![g.usize_in(2..8)];
+            for _ in 0..n_hidden {
+                dims.push(g.usize_in(2..10));
+            }
+            dims.push(g.usize_in(2..6));
+            let act = *g.choose(&[
+                Activation::Relu,
+                Activation::Tanh,
+                Activation::Gelu,
+                Activation::Sigmoid,
+            ]);
+            let loss = if g.bool() { Loss::SoftmaxCe } else { Loss::Mse };
+            let m = g.usize_in(1..7);
+            let spec = ModelSpec::new(dims, act, loss, m).unwrap();
+            let mut rng = Rng::new(g.case + 31);
+            let mlp = Mlp::init(spec.clone(), &mut rng);
+            let x = Tensor::randn(vec![m, spec.in_dim()], &mut rng);
+            let y = match loss {
+                Loss::SoftmaxCe => Targets::Classes(
+                    (0..m).map(|j| (j % spec.out_dim()) as i32).collect(),
+                ),
+                Loss::Mse => {
+                    Targets::Dense(Tensor::randn(vec![m, spec.out_dim()], &mut rng))
+                }
+            };
+
+            let (fwd, bwd) = mlp.forward_backward(&x, &y);
+            let trick = per_example_norms(&fwd, &bwd);
+
+            // explicit: m separate batch-1 backprops
+            for j in 0..m {
+                let xj = Tensor::new(vec![1, spec.in_dim()], x.row(j).to_vec());
+                let yj = y.gather(&[j]);
+                let (_, bj) = mlp.forward_backward(&xj, &yj);
+                let explicit: f64 = bj.grads.iter().map(ops::sq_sum).sum();
+                prop::assert_close(trick.s_total[j] as f64, explicit, 1e-3)
+                    .map_err(|e| format!("example {j}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn totals_are_layer_sums() {
+        let spec =
+            ModelSpec::new(vec![4, 6, 3], Activation::Relu, Loss::SoftmaxCe, 5).unwrap();
+        let mut rng = Rng::new(0);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let x = Tensor::randn(vec![5, 4], &mut rng);
+        let y = Targets::Classes(vec![0, 1, 2, 0, 1]);
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let norms = per_example_norms(&fwd, &bwd);
+        for j in 0..5 {
+            let sum: f32 = norms.s_layers[j].iter().sum();
+            assert!((sum - norms.s_total[j]).abs() <= 1e-6 * sum.abs().max(1.0));
+            assert!(norms.s_layers[j].iter().all(|&s| s >= 0.0));
+        }
+        assert_eq!(norms.norms().len(), 5);
+        assert_eq!(norms.m(), 5);
+    }
+
+    #[test]
+    fn norm_scales_with_loss_scale() {
+        // MSE: scaling targets' distance scales Zbar rows linearly -> s quadratically
+        let spec = ModelSpec::new(vec![3, 2], Activation::Identity, Loss::Mse, 1).unwrap();
+        let params = vec![Tensor::zeros(vec![4, 2])];
+        let mlp = Mlp::new(spec, params);
+        let x = Tensor::new(vec![1, 3], vec![1.0, 2.0, 3.0]);
+        let y1 = Targets::Dense(Tensor::new(vec![1, 2], vec![1.0, 0.0]));
+        let y2 = Targets::Dense(Tensor::new(vec![1, 2], vec![2.0, 0.0]));
+        let (f1, b1) = mlp.forward_backward(&x, &y1);
+        let (f2, b2) = mlp.forward_backward(&x, &y2);
+        let s1 = per_example_norms(&f1, &b1).s_total[0];
+        let s2 = per_example_norms(&f2, &b2).s_total[0];
+        assert!((s2 / s1 - 4.0).abs() < 1e-4, "{s2} / {s1}");
+    }
+}

@@ -1,0 +1,14 @@
+//! The paper's algorithm on the rust reference implementation.
+//!
+//! These are the *oracle* versions used to cross-validate the PJRT
+//! artifacts and to drive the E1 op-count experiment; the production path
+//! executes the same math inside the AOT-compiled HLO.
+
+pub mod clip;
+pub mod flops;
+pub mod goodfellow;
+pub mod naive;
+
+pub use clip::{clip_coefficients, clipped_grads, normalized_grads};
+pub use goodfellow::{per_example_norms, PerExampleNorms};
+pub use naive::per_example_norms_naive;

@@ -1,0 +1,105 @@
+//! Paper §3: the naive method — m backward passes at minibatch size 1.
+//!
+//! Used as the correctness oracle and as the E1/E2 baseline (with the flop
+//! counter running, it demonstrates the §5 claim that the naive method
+//! roughly doubles total ops and forfeits batch parallelism).
+
+use crate::nn::loss::Targets;
+use crate::nn::Mlp;
+use crate::tensor::{ops, Tensor};
+
+use super::goodfellow::PerExampleNorms;
+
+/// Compute per-example norms by running batch-1 backprop m times.
+pub fn per_example_norms_naive(mlp: &Mlp, x: &Tensor, y: &Targets) -> PerExampleNorms {
+    let m = x.dims()[0];
+    let n = mlp.spec.n_layers();
+    let mut s_layers = vec![vec![0f32; n]; m];
+    let mut s_total = vec![0f32; m];
+    for j in 0..m {
+        let xj = Tensor::new(vec![1, mlp.spec.in_dim()], x.row(j).to_vec());
+        let yj = y.gather(&[j]);
+        let (_, bwd) = mlp.forward_backward(&xj, &yj);
+        for (i, g) in bwd.grads.iter().enumerate() {
+            let s = ops::sq_sum(g) as f32;
+            s_layers[j][i] = s;
+            s_total[j] += s;
+        }
+    }
+    PerExampleNorms { s_layers, s_total }
+}
+
+/// Per-example full gradients (the O(m * params) memory cost the trick
+/// avoids); used by the naive clipping baseline.
+pub fn per_example_grads(mlp: &Mlp, x: &Tensor, y: &Targets) -> Vec<Vec<Tensor>> {
+    let m = x.dims()[0];
+    (0..m)
+        .map(|j| {
+            let xj = Tensor::new(vec![1, mlp.spec.in_dim()], x.row(j).to_vec());
+            let yj = y.gather(&[j]);
+            mlp.forward_backward(&xj, &yj).1.grads
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Loss, ModelSpec};
+    use crate::pegrad::per_example_norms;
+    use crate::tensor::ops::Activation;
+    use crate::tensor::Rng;
+    use crate::util::prop;
+
+    fn setup(m: usize) -> (Mlp, Tensor, Targets) {
+        let spec =
+            ModelSpec::new(vec![5, 7, 4], Activation::Tanh, Loss::SoftmaxCe, m).unwrap();
+        let mut rng = Rng::new(8);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let x = Tensor::randn(vec![m, 5], &mut rng);
+        let y = Targets::Classes((0..m).map(|j| (j % 4) as i32).collect());
+        (mlp, x, y)
+    }
+
+    #[test]
+    fn naive_agrees_with_trick() {
+        let (mlp, x, y) = setup(6);
+        let naive = per_example_norms_naive(&mlp, &x, &y);
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let trick = per_example_norms(&fwd, &bwd);
+        prop::assert_all_close(&naive.s_total, &trick.s_total, 1e-3).unwrap();
+        for j in 0..6 {
+            prop::assert_all_close(&naive.s_layers[j], &trick.s_layers[j], 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn per_example_grads_sum_to_batch_grad() {
+        let (mlp, x, y) = setup(5);
+        let pex = per_example_grads(&mlp, &x, &y);
+        let (_, bwd) = mlp.forward_backward(&x, &y);
+        for i in 0..mlp.spec.n_layers() {
+            let mut acc = Tensor::zeros(pex[0][i].dims().to_vec());
+            for j in 0..5 {
+                ops::axpy(&mut acc, 1.0, &pex[j][i]);
+            }
+            prop::assert_all_close(acc.data(), bwd.grads[i].data(), 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn naive_doubles_measured_flops() {
+        // §5: naive re-runs fwd+bwd, so measured flops ≈ 2x one batched pass
+        let (mlp, x, y) = setup(8);
+        crate::nn::reset_flops();
+        let _ = mlp.forward_backward(&x, &y);
+        let batched = crate::nn::read_flops();
+        crate::nn::reset_flops();
+        let _ = per_example_norms_naive(&mlp, &x, &y);
+        let naive = crate::nn::read_flops();
+        let ratio = naive as f64 / batched as f64;
+        assert!((ratio - 1.0).abs() < 0.05, "naive/batched flops = {ratio}");
+        // (ratio vs the *batched pass alone* is ~1; the paper's "roughly
+        // doubles" is naive IN ADDITION to the training backprop)
+    }
+}

@@ -1,0 +1,47 @@
+//! Clip-bound calibration from observed per-example norms.
+//!
+//! The standard DP-SGD heuristic: set C to a quantile (often the median)
+//! of the per-example gradient norms observed on public/warmup data — a
+//! direct consumer of the trick's output.
+
+use crate::util::stats::percentile_sorted;
+
+/// Choose a clip bound as the `q`-th percentile (0-100) of observed norms.
+/// Returns a small positive floor if no finite norms were observed.
+pub fn clip_from_quantile(norms: &[f32], q: f64) -> f32 {
+    let mut v: Vec<f64> = norms
+        .iter()
+        .filter(|n| n.is_finite() && **n >= 0.0)
+        .map(|&n| n as f64)
+        .collect();
+    if v.is_empty() {
+        return 1e-3;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (percentile_sorted(&v, q.clamp(0.0, 100.0)) as f32).max(1e-6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_of_known_set() {
+        let norms = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        assert!((clip_from_quantile(&norms, 50.0) - 3.0).abs() < 1e-6);
+        assert!((clip_from_quantile(&norms, 100.0) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ignores_nonfinite() {
+        let norms = [f32::NAN, 2.0, f32::INFINITY, 4.0];
+        let c = clip_from_quantile(&norms, 50.0);
+        assert!((c - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_gives_floor() {
+        assert!(clip_from_quantile(&[], 50.0) > 0.0);
+        assert!(clip_from_quantile(&[f32::NAN], 50.0) > 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Differential privacy for the §6 extension: per-example clipping is the
+//! DP-SGD primitive; combined with Gaussian noise it yields (ε, δ)-DP
+//! guarantees tracked by an RDP accountant.
+
+pub mod accountant;
+pub mod calibrate;
+
+pub use accountant::RdpAccountant;
+pub use calibrate::clip_from_quantile;

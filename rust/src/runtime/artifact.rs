@@ -1,0 +1,266 @@
+//! `artifacts/manifest.json` parsing — the contract between `aot.py` and
+//! the rust loader.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::nn::{Loss, ModelSpec};
+use crate::tensor::ops::Activation;
+use crate::util::Json;
+
+/// Supported manifest schema version (mirrors `aot.FORMAT_VERSION`).
+pub const FORMAT_VERSION: i64 = 2;
+
+/// dtype + shape of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorMeta> {
+        let dtype = j.req("dtype")?.as_str().unwrap_or_default().to_string();
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorMeta { dtype, shape })
+    }
+}
+
+/// One lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    /// Path of the HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// One model preset (dims, loss, batch size, its entries).
+#[derive(Debug, Clone)]
+pub struct PresetMeta {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub activation: String,
+    pub loss: String,
+    pub m: usize,
+    pub n_layers: usize,
+    pub param_count: usize,
+    pub flops_forward: u64,
+    pub flops_backward: u64,
+    pub use_pallas: bool,
+    pub entries: BTreeMap<String, EntryMeta>,
+}
+
+impl PresetMeta {
+    /// Reconstruct the rust-side [`ModelSpec`] (for the reference oracle).
+    pub fn spec(&self) -> Result<ModelSpec> {
+        let act = Activation::parse(&self.activation)
+            .ok_or_else(|| anyhow!("unknown activation {}", self.activation))?;
+        let loss =
+            Loss::parse(&self.loss).ok_or_else(|| anyhow!("unknown loss {}", self.loss))?;
+        ModelSpec::new(self.dims.clone(), act, loss, self.m)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow!(
+                "preset '{}' has no entry '{name}' (available: {:?})",
+                self.name,
+                self.entries.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub presets: BTreeMap<String, PresetMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let j = Json::parse_file(&path)
+            .with_context(|| "did you run `make artifacts`?".to_string())?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: PathBuf, j: &Json) -> Result<Manifest> {
+        let ver = j.req("format_version")?.as_i64().unwrap_or(-1);
+        if ver != FORMAT_VERSION {
+            bail!("manifest format_version {ver} != supported {FORMAT_VERSION}; re-run `make artifacts`");
+        }
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j
+            .req("presets")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("presets not an object"))?
+        {
+            let mut entries = BTreeMap::new();
+            for (ename, ej) in pj
+                .req("entries")?
+                .as_obj()
+                .ok_or_else(|| anyhow!("entries not an object"))?
+            {
+                let parse_list = |key: &str| -> Result<Vec<TensorMeta>> {
+                    ej.req(key)?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("{key} not an array"))?
+                        .iter()
+                        .map(TensorMeta::parse)
+                        .collect()
+                };
+                entries.insert(
+                    ename.clone(),
+                    EntryMeta {
+                        name: ename.clone(),
+                        file: ej
+                            .req("file")?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("file not a string"))?
+                            .to_string(),
+                        inputs: parse_list("inputs")?,
+                        outputs: parse_list("outputs")?,
+                    },
+                );
+            }
+            let get_usize = |key: &str| -> Result<usize> {
+                pj.req(key)?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("{key} not a usize"))
+            };
+            presets.insert(
+                name.clone(),
+                PresetMeta {
+                    name: name.clone(),
+                    dims: pj
+                        .req("dims")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("dims not an array"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<_>>()?,
+                    activation: pj.req("activation")?.as_str().unwrap_or("relu").into(),
+                    loss: pj.req("loss")?.as_str().unwrap_or("softmax_ce").into(),
+                    m: get_usize("m")?,
+                    n_layers: get_usize("n_layers")?,
+                    param_count: get_usize("param_count")?,
+                    flops_forward: get_usize("flops_forward")? as u64,
+                    flops_backward: get_usize("flops_backward")? as u64,
+                    use_pallas: pj
+                        .get("use_pallas")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(true),
+                    entries,
+                },
+            );
+        }
+        Ok(Manifest { dir, presets })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetMeta> {
+        self.presets.get(name).ok_or_else(|| {
+            anyhow!(
+                "no preset '{name}' in manifest (available: {:?}); \
+                 run `make artifacts` with the preset enabled",
+                self.presets.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &EntryMeta) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Default artifacts dir: `$PEGRAD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PEGRAD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+          "format_version": 2,
+          "presets": {
+            "tiny": {
+              "dims": [16, 32, 32, 10], "activation": "relu",
+              "loss": "softmax_ce", "m": 8, "n_layers": 3,
+              "param_count": 1898, "flops_forward": 100, "flops_backward": 200,
+              "use_pallas": true,
+              "entries": {
+                "fwd": {
+                  "file": "tiny/fwd.hlo.txt",
+                  "inputs": [{"dtype": "float32", "shape": [17, 32]}],
+                  "outputs": [{"dtype": "float32", "shape": []}]
+                }
+              }
+            }
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(PathBuf::from("/tmp/x"), &sample()).unwrap();
+        let p = m.preset("tiny").unwrap();
+        assert_eq!(p.dims, vec![16, 32, 32, 10]);
+        assert_eq!(p.m, 8);
+        let e = p.entry("fwd").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![17, 32]);
+        assert_eq!(e.inputs[0].numel(), 17 * 32);
+        assert_eq!(e.outputs[0].shape, Vec::<usize>::new());
+        assert!(m.hlo_path(e).ends_with("tiny/fwd.hlo.txt"));
+    }
+
+    #[test]
+    fn spec_reconstruction() {
+        let m = Manifest::from_json(PathBuf::from("/tmp/x"), &sample()).unwrap();
+        let spec = m.preset("tiny").unwrap().spec().unwrap();
+        assert_eq!(spec.n_layers(), 3);
+        assert_eq!(spec.param_count(), 17 * 32 + 33 * 32 + 33 * 10);
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut j = sample();
+        if let Json::Obj(ref mut m) = j {
+            m.insert("format_version".into(), Json::num(1.0));
+        }
+        let err = Manifest::from_json(PathBuf::from("/tmp"), &j).unwrap_err();
+        assert!(err.to_string().contains("format_version"));
+    }
+
+    #[test]
+    fn missing_preset_lists_available() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &sample()).unwrap();
+        let err = m.preset("big").unwrap_err().to_string();
+        assert!(err.contains("tiny"));
+    }
+}

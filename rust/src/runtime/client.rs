@@ -1,0 +1,58 @@
+//! PJRT CPU client, one per thread.
+//!
+//! The `xla` crate's wrappers are `Rc`-based (not `Send`/`Sync`), so all
+//! PJRT state — client, executables, buffers — must live on a single
+//! thread. The coordinator honours this by running every artifact call on
+//! one dedicated executor thread ([`crate::coordinator::pipeline`]); tests
+//! and benches are single-threaded anyway. `global()` hands out a
+//! thread-local client so accidental cross-thread use creates a second
+//! client rather than UB (and logs a warning, since that is almost always
+//! a design error).
+
+use std::cell::OnceCell;
+
+use anyhow::Result;
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// The calling thread's CPU client (created on first use).
+pub fn global() -> xla::PjRtClient {
+    CLIENT.with(|c| {
+        c.get_or_init(|| {
+            let client = xla::PjRtClient::cpu().expect("PJRT CPU client init");
+            log::debug!(
+                "PJRT client up on {:?}: platform={} devices={}",
+                std::thread::current().name().unwrap_or("?"),
+                client.platform_name(),
+                client.device_count()
+            );
+            client
+        })
+        .clone() // Rc clone — cheap, same underlying client
+    })
+}
+
+/// Fallible accessor.
+pub fn try_global() -> Result<xla::PjRtClient> {
+    CLIENT.with(|c| {
+        if c.get().is_none() {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+            let _ = c.set(client);
+        }
+        Ok(c.get().unwrap().clone())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn client_initializes_and_is_cpu() {
+        let c = super::global();
+        assert!(c.device_count() >= 1);
+        assert_eq!(c.platform_name().to_lowercase(), "cpu");
+        let _c2 = super::global(); // same-thread reuse must not panic
+    }
+}

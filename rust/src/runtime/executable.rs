@@ -1,0 +1,259 @@
+//! Compiled artifact entries and typed execute helpers.
+//!
+//! An [`Entry`] is one compiled HLO entry point. It offers two call paths:
+//!
+//! * [`Entry::call`] — host-literal convenience path (tests, one-shots);
+//! * [`Entry::call_device`] — the hot path: arguments are device-resident
+//!   [`xla::PjRtBuffer`]s, outputs stay device-resident. The trainer keeps
+//!   parameters on device between steps and only syncs scalars/norms.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::nn::loss::Targets;
+use crate::tensor::Tensor;
+
+use super::artifact::{EntryMeta, Manifest};
+use super::client;
+
+/// A host-side argument for an entry call.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Arg {
+    pub fn scalar_f32(v: f32) -> Arg {
+        Arg::F32(Tensor::new(vec![1], vec![v]))
+    }
+
+    pub fn scalar_i32(v: i32) -> Arg {
+        Arg::I32(vec![v], vec![1])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Arg::F32(t) => {
+                let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+            Arg::I32(v, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+        })
+    }
+}
+
+impl From<Tensor> for Arg {
+    fn from(t: Tensor) -> Arg {
+        Arg::F32(t)
+    }
+}
+
+impl From<&Tensor> for Arg {
+    fn from(t: &Tensor) -> Arg {
+        Arg::F32(t.clone())
+    }
+}
+
+impl From<&Targets> for Arg {
+    fn from(y: &Targets) -> Arg {
+        match y {
+            Targets::Classes(v) => Arg::I32(v.clone(), vec![v.len()]),
+            Targets::Dense(t) => Arg::F32(t.clone()),
+        }
+    }
+}
+
+/// A set of device-resident tensors (e.g. the model parameters).
+pub struct DeviceTensors {
+    pub buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl DeviceTensors {
+    /// Upload host tensors to the device.
+    pub fn upload(tensors: &[Tensor]) -> Result<DeviceTensors> {
+        let c = client::global();
+        let buffers = tensors
+            .iter()
+            .map(|t| {
+                c.buffer_from_host_buffer(t.data(), t.dims(), None)
+                    .map_err(|e| anyhow!("upload: {e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeviceTensors { buffers })
+    }
+
+    /// Download all buffers back to host tensors.
+    pub fn download(&self) -> Result<Vec<Tensor>> {
+        self.buffers.iter().map(fetch_f32).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+}
+
+/// Download one f32 buffer as a host tensor.
+///
+/// NOTE (§Perf L3 iteration 1): a raw-copy variant via
+/// `copy_raw_to_host_sync` was tried to avoid the intermediate `Literal`
+/// allocation, but `CopyRawToHost` is unimplemented in the TfrtCpuClient
+/// shipped with xla_extension 0.5.1 — the literal path is the only one.
+pub fn fetch_f32(buf: &xla::PjRtBuffer) -> Result<Tensor> {
+    let lit = buf.to_literal_sync().map_err(|e| anyhow!("fetch: {e}"))?;
+    literal_to_tensor(&lit)
+}
+
+/// Convert an f32 literal (any rank) to a host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec: {e}"))?;
+    Ok(Tensor::new(dims, data))
+}
+
+/// One compiled entry point.
+pub struct Entry {
+    pub meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Entry {
+    /// Load + compile an entry from a manifest.
+    pub fn compile(manifest: &Manifest, preset: &str, entry: &str) -> Result<Entry> {
+        let p = manifest.preset(preset)?;
+        let e = p.entry(entry)?;
+        let path = manifest.hlo_path(e);
+        let t = crate::util::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|err| anyhow!("parsing HLO {}: {err}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client::global()
+            .compile(&comp)
+            .map_err(|err| anyhow!("compiling {}: {err}", path.display()))?;
+        log::debug!(
+            "compiled {preset}/{entry} in {}",
+            crate::util::timer::fmt_duration(t.secs())
+        );
+        Ok(Entry {
+            meta: e.clone(),
+            exe,
+        })
+    }
+
+    fn check_arity(&self, got: usize) -> Result<()> {
+        if got != self.meta.inputs.len() {
+            bail!(
+                "entry '{}' expects {} inputs, got {got}",
+                self.meta.name,
+                self.meta.inputs.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Host-literal call path: args in, per-leaf host tensors out.
+    ///
+    /// The vendored PJRT shim is patched with `untuple_result = true`
+    /// (DESIGN.md §6), so execution yields one buffer per tuple leaf; only
+    /// the leaves the caller inspects pay a host transfer — here all of
+    /// them, since this is the convenience path.
+    pub fn call(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
+        self.check_arity(args.len())?;
+        let literals = args
+            .iter()
+            .map(Arg::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e}", self.meta.name))?;
+        let bufs = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("execute {}: no replica outputs", self.meta.name))?;
+        if bufs.len() != self.meta.outputs.len() {
+            bail!(
+                "entry '{}' manifest says {} outputs, runtime produced {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                bufs.len()
+            );
+        }
+        bufs.iter().map(fetch_f32).collect()
+    }
+
+    /// Device-buffer call path. Arguments must be already device-resident;
+    /// the (tuple) outputs are decomposed into per-output device buffers
+    /// without touching the host.
+    pub fn call_device(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        self.check_arity(args.len())?;
+        let out = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute_b {}: {e}", self.meta.name))?;
+        let bufs = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("execute_b {}: no replica outputs", self.meta.name))?;
+        if bufs.is_empty() {
+            bail!("execute_b {}: empty output", self.meta.name);
+        }
+        if bufs.len() != self.meta.outputs.len() {
+            bail!(
+                "entry '{}': manifest says {} outputs, device produced {} \
+                 (is the vendored untuple_result patch in place?)",
+                self.meta.name,
+                self.meta.outputs.len(),
+                bufs.len()
+            );
+        }
+        Ok(bufs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_literal_shapes() {
+        let a = Arg::F32(Tensor::new(vec![2, 3], vec![0.0; 6]));
+        let lit = a.to_literal().unwrap();
+        assert_eq!(lit.element_count(), 6);
+        let b = Arg::scalar_i32(7);
+        assert_eq!(b.to_literal().unwrap().element_count(), 1);
+    }
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = Arg::F32(t.clone()).to_literal().unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn targets_to_arg() {
+        let y = Targets::Classes(vec![1, 2, 3]);
+        match Arg::from(&y) {
+            Arg::I32(v, s) => {
+                assert_eq!(v, vec![1, 2, 3]);
+                assert_eq!(s, vec![3]);
+            }
+            _ => panic!("wrong arg kind"),
+        }
+    }
+}

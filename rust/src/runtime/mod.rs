@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from rust.
+//!
+//! Adapted from the reference wiring in `/opt/xla-example/load_hlo/`:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! Design notes:
+//! * one process-wide CPU client ([`client::global`]); PJRT clients are
+//!   expensive and the CPU plugin is a singleton anyway;
+//! * compilation is cached per entry in [`registry::Registry`];
+//! * the training hot path keeps parameters **device-resident** as
+//!   `PjRtBuffer`s and executes with `execute_b`, so the per-step host
+//!   traffic is only the minibatch in and the scalars/norms out.
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+pub mod registry;
+
+pub use artifact::{EntryMeta, Manifest, PresetMeta, TensorMeta};
+pub use executable::{DeviceTensors, Entry};
+pub use registry::Registry;

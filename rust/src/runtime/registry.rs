@@ -1,0 +1,53 @@
+//! Compile-once cache of entries, keyed by (preset, entry).
+//!
+//! Single-threaded by design (PJRT wrappers are `Rc`-based — see
+//! [`super::client`]); the coordinator owns one `Registry` on its executor
+//! thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::artifact::Manifest;
+use super::executable::Entry;
+
+/// Lazy compile cache over one manifest.
+pub struct Registry {
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<(String, String), Rc<Entry>>>,
+}
+
+impl Registry {
+    pub fn new(manifest: Manifest) -> Registry {
+        Registry {
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Open the default artifacts directory (`$PEGRAD_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn open_default() -> Result<Registry> {
+        Ok(Registry::new(Manifest::load(Manifest::default_dir())?))
+    }
+
+    /// Get (compiling on first use) an entry.
+    pub fn get(&self, preset: &str, entry: &str) -> Result<Rc<Entry>> {
+        let key = (preset.to_string(), entry.to_string());
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(Rc::clone(e));
+        }
+        let compiled = Rc::new(Entry::compile(&self.manifest, preset, entry)?);
+        self.cache
+            .borrow_mut()
+            .insert(key, Rc::clone(&compiled));
+        Ok(compiled)
+    }
+
+    /// Number of compiled entries currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

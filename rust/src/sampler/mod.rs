@@ -1,0 +1,55 @@
+//! Example-selection strategies — the paper's §1 motivation.
+//!
+//! "This is useful for techniques such as optimization based on importance
+//! sampling (Zhao & Zhang, 2014), where examples with large gradient norm
+//! should be sampled more frequently."
+//!
+//! * [`UniformSampler`] — the baseline: every example equally likely.
+//! * [`ImportanceSampler`] — Zhao & Zhang 2014 implemented from the paper:
+//!   p_j ∝ (EMA of example j's gradient norm), with a mixing floor for
+//!   exploration, O(log N) sampling via a [`sumtree::SumTree`], and the
+//!   unbiased reweighting coefficients `w_j = 1/(N p_j)` that
+//!   `step_pegrad` folds into the gradient matmul.
+
+pub mod importance;
+pub mod sumtree;
+pub mod uniform;
+
+pub use importance::{ImportanceConfig, ImportanceSampler};
+pub use sumtree::SumTree;
+pub use uniform::UniformSampler;
+
+use crate::tensor::Rng;
+
+/// A minibatch selection: indices into the dataset plus the unbiased
+/// importance-sampling weights to apply to each example's gradient.
+///
+/// Weights are normalized so that `sum_j w_j == 1` in expectation for the
+/// uniform case (i.e. uniform sampling yields `w_j = 1/m`, reproducing the
+/// plain minibatch mean).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub indices: Vec<usize>,
+    pub weights: Vec<f32>,
+}
+
+/// Strategy interface. `observe` feeds fresh per-example gradient norms
+/// back into the sampler after each step (the pegrad feedback loop).
+pub trait Sampler {
+    /// Draw a batch of `m` examples from a dataset of size `n`.
+    fn sample(&mut self, m: usize, rng: &mut Rng) -> Batch;
+
+    /// Report the measured gradient L2 norms (sqrt of s_total) of the
+    /// examples from the most recent batch.
+    fn observe(&mut self, indices: &[usize], norms: &[f32]);
+
+    /// Dataset size this sampler covers.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &'static str;
+}

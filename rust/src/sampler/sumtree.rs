@@ -1,0 +1,235 @@
+//! Sum tree (Fenwick-style complete binary tree over weights) for O(log N)
+//! proportional sampling — the data structure that makes norm-proportional
+//! importance sampling practical at dataset scale (E6 ablates it against a
+//! linear scan).
+
+use crate::tensor::Rng;
+
+/// A complete binary tree stored implicitly; leaves hold non-negative
+/// weights, internal nodes hold subtree sums.
+#[derive(Debug, Clone)]
+pub struct SumTree {
+    n: usize,
+    /// number of leaves rounded up to a power of two
+    cap: usize,
+    /// tree[1] is the root; leaves live at [cap, cap + n)
+    tree: Vec<f64>,
+    /// updates since last full rebuild (floating-point drift control)
+    dirty: usize,
+}
+
+impl SumTree {
+    pub fn new(n: usize) -> SumTree {
+        assert!(n > 0, "SumTree needs at least one leaf");
+        let cap = n.next_power_of_two();
+        SumTree {
+            n,
+            cap,
+            tree: vec![0.0; 2 * cap],
+            dirty: 0,
+        }
+    }
+
+    pub fn from_weights(w: &[f32]) -> SumTree {
+        let mut t = SumTree::new(w.len());
+        for (i, &x) in w.iter().enumerate() {
+            t.tree[t.cap + i] = x.max(0.0) as f64;
+        }
+        t.rebuild();
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn total(&self) -> f64 {
+        self.tree[1]
+    }
+
+    pub fn get(&self, i: usize) -> f64 {
+        assert!(i < self.n);
+        self.tree[self.cap + i]
+    }
+
+    /// Set leaf i to w (>= 0), updating the path to the root: O(log N).
+    pub fn update(&mut self, i: usize, w: f32) {
+        assert!(i < self.n, "index {i} out of range {}", self.n);
+        let w = (w.max(0.0)) as f64;
+        let mut node = self.cap + i;
+        let delta = w - self.tree[node];
+        self.tree[node] = w;
+        while node > 1 {
+            node /= 2;
+            self.tree[node] += delta;
+        }
+        self.dirty += 1;
+        // Incremental +/- deltas accumulate float error; rebuild the
+        // internal nodes exactly every ~N updates (amortized O(1)).
+        if self.dirty >= self.n.max(1024) {
+            self.rebuild();
+        }
+    }
+
+    /// Recompute all internal sums from the leaves (exact).
+    pub fn rebuild(&mut self) {
+        for node in (1..self.cap).rev() {
+            self.tree[node] = self.tree[2 * node] + self.tree[2 * node + 1];
+        }
+        self.dirty = 0;
+    }
+
+    /// Sample a leaf index with probability weight/total: O(log N).
+    /// Panics if total() == 0 (nothing to sample).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total = self.total();
+        assert!(total > 0.0, "cannot sample from an all-zero SumTree");
+        let mut u = rng.next_f64() * total;
+        let mut node = 1;
+        while node < self.cap {
+            let left = 2 * node;
+            if u < self.tree[left] {
+                node = left;
+            } else {
+                u -= self.tree[left];
+                node = left + 1;
+            }
+        }
+        // Clamp: float roundoff can land on a zero-weight padding leaf.
+        (node - self.cap).min(self.n - 1)
+    }
+
+    /// The probability of drawing leaf i on one sample.
+    pub fn prob(&self, i: usize) -> f64 {
+        let t = self.total();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.get(i) / t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn total_is_sum() {
+        let t = SumTree::from_weights(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((t.total() - 15.0).abs() < 1e-9);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.get(2), 3.0);
+    }
+
+    #[test]
+    fn update_adjusts_total() {
+        let mut t = SumTree::from_weights(&[1.0, 1.0, 1.0]);
+        t.update(1, 5.0);
+        assert!((t.total() - 7.0).abs() < 1e-9);
+        t.update(1, 0.0);
+        assert!((t.total() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_weights_clamped() {
+        let mut t = SumTree::from_weights(&[1.0, -3.0]);
+        assert!((t.total() - 1.0).abs() < 1e-9);
+        t.update(0, -1.0);
+        assert_eq!(t.total(), 0.0);
+    }
+
+    #[test]
+    fn sampling_matches_distribution() {
+        let mut rng = Rng::new(0);
+        let t = SumTree::from_weights(&[1.0, 0.0, 3.0, 6.0]);
+        let mut counts = [0usize; 4];
+        let draws = 60_000;
+        for _ in 0..draws {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0, "zero-weight leaf must never be drawn");
+        let want = [0.1, 0.0, 0.3, 0.6];
+        for i in 0..4 {
+            let got = counts[i] as f64 / draws as f64;
+            assert!(
+                (got - want[i]).abs() < 0.02,
+                "leaf {i}: got {got}, want {}",
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn prop_total_invariant_under_updates() {
+        prop::check(30, |g| {
+            let n = g.usize_in(1..200);
+            let w = g.vec_f32(n..n + 1, 0.0..10.0);
+            let mut t = SumTree::from_weights(&w);
+            let mut w = w;
+            for _ in 0..g.usize_in(1..50) {
+                let i = g.usize_in(0..n);
+                let v = g.f32_in(0.0..10.0);
+                w[i] = v;
+                t.update(i, v);
+            }
+            let want: f64 = w.iter().map(|&x| x as f64).sum();
+            prop::assert_close(t.total(), want, 1e-6)
+        });
+    }
+
+    #[test]
+    fn prop_sampled_index_has_positive_weight() {
+        prop::check(25, |g| {
+            let n = g.usize_in(1..64);
+            let mut w = vec![0f32; n];
+            // make a sparse weight vector with at least one positive entry
+            let hot = g.usize_in(0..n);
+            w[hot] = g.f32_in(0.1..5.0);
+            for _ in 0..g.usize_in(0..4) {
+                let i = g.usize_in(0..n);
+                w[i] = g.f32_in(0.0..5.0);
+            }
+            let t = SumTree::from_weights(&w);
+            let mut rng = crate::tensor::Rng::new(g.case);
+            for _ in 0..20 {
+                let i = t.sample(&mut rng);
+                prop::require(w[i] > 0.0, format!("sampled zero-weight leaf {i}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rebuild_fixes_drift() {
+        let mut t = SumTree::from_weights(&[1e-8; 1000]);
+        for i in 0..1000 {
+            t.update(i, 1e8);
+            t.update(i, 1e-8);
+        }
+        t.rebuild();
+        let want = 1000.0 * (1e-8f32 as f64); // leaves store f64 of the f32 input
+        assert!((t.total() - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn single_leaf() {
+        let t = SumTree::from_weights(&[2.0]);
+        let mut rng = Rng::new(1);
+        assert_eq!(t.sample(&mut rng), 0);
+        assert_eq!(t.prob(0), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "all-zero")]
+    fn sampling_zero_tree_panics() {
+        let t = SumTree::from_weights(&[0.0, 0.0]);
+        let mut rng = Rng::new(2);
+        t.sample(&mut rng);
+    }
+}

@@ -1,0 +1,82 @@
+//! Uniform minibatch sampling — the baseline every importance-sampling
+//! experiment compares against.
+
+use crate::tensor::Rng;
+
+use super::{Batch, Sampler};
+
+/// Sample `m` indices uniformly with replacement; weights are the plain
+/// minibatch mean `1/m`.
+#[derive(Debug, Clone)]
+pub struct UniformSampler {
+    n: usize,
+}
+
+impl UniformSampler {
+    pub fn new(n: usize) -> UniformSampler {
+        assert!(n > 0);
+        UniformSampler { n }
+    }
+}
+
+impl Sampler for UniformSampler {
+    fn sample(&mut self, m: usize, rng: &mut Rng) -> Batch {
+        let indices = (0..m)
+            .map(|_| rng.next_below(self.n as u64) as usize)
+            .collect();
+        Batch {
+            indices,
+            weights: vec![1.0 / m as f32; m],
+        }
+    }
+
+    fn observe(&mut self, _indices: &[usize], _norms: &[f32]) {}
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_range_and_weights_sum_to_one() {
+        let mut s = UniformSampler::new(10);
+        let mut rng = Rng::new(3);
+        let b = s.sample(64, &mut rng);
+        assert_eq!(b.indices.len(), 64);
+        assert!(b.indices.iter().all(|&i| i < 10));
+        let wsum: f32 = b.weights.iter().sum();
+        assert!((wsum - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let mut s = UniformSampler::new(4);
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 4];
+        for _ in 0..200 {
+            for i in s.sample(32, &mut rng).indices {
+                counts[i] += 1;
+            }
+        }
+        for c in counts {
+            let f = c as f64 / 6400.0;
+            assert!((f - 0.25).abs() < 0.03, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn observe_is_noop() {
+        let mut s = UniformSampler::new(5);
+        s.observe(&[0, 1], &[3.0, 4.0]);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.name(), "uniform");
+    }
+}

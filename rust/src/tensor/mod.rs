@@ -1,0 +1,198 @@
+//! Dense f32 tensor substrate (the `rand`/`ndarray` crates are not in the
+//! vendored registry — DESIGN.md §6).
+//!
+//! This backs the pure-rust reference implementation of the paper
+//! ([`crate::nn`], [`crate::pegrad`]), the synthetic data generators, and
+//! the E1 instrumented-flop baseline. The PJRT artifacts remain the
+//! production compute path; this module is the *oracle* and the CPU
+//! baseline the benches compare against.
+
+pub mod ops;
+pub mod rng;
+pub mod shape;
+
+pub use rng::Rng;
+pub use shape::Shape;
+
+/// A dense, row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ------------------------------------------------------------ construct
+    pub fn new(shape: impl Into<Shape>, data: Vec<f32>) -> Self {
+        let shape = shape.into();
+        assert_eq!(
+            shape.numel(),
+            data.len(),
+            "shape {:?} needs {} elements, got {}",
+            shape.dims(),
+            shape.numel(),
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: impl Into<Shape>) -> Self {
+        let shape = shape.into();
+        let n = shape.numel();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn ones(shape: impl Into<Shape>) -> Self {
+        Self::full(shape, 1.0)
+    }
+
+    pub fn full(shape: impl Into<Shape>, v: f32) -> Self {
+        let shape = shape.into();
+        let n = shape.numel();
+        Tensor {
+            shape,
+            data: vec![v; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor::new(vec![], vec![v])
+    }
+
+    /// Standard-normal tensor (Box-Muller via [`Rng`]).
+    pub fn randn(shape: impl Into<Shape>, rng: &mut Rng) -> Self {
+        let shape = shape.into();
+        let n = shape.numel();
+        Tensor {
+            shape,
+            data: (0..n).map(|_| rng.next_normal()).collect(),
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn rand(shape: impl Into<Shape>, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let shape = shape.into();
+        let n = shape.numel();
+        Tensor {
+            shape,
+            data: (0..n).map(|_| lo + rng.next_f32() * (hi - lo)).collect(),
+        }
+    }
+
+    // --------------------------------------------------------------- access
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D element access (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        let cols = self.dims()[1];
+        self.data[i * cols + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        let cols = self.dims()[1];
+        self.data[i * cols + j] = v;
+    }
+
+    /// Row slice of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let cols = self.dims()[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Reshape (must preserve numel).
+    pub fn reshape(mut self, shape: impl Into<Shape>) -> Self {
+        let shape = shape.into();
+        assert_eq!(shape.numel(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Scalar extraction for rank-0/1-element tensors.
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.numel(), 1, "item() on tensor with {} elems", self.numel());
+        self.data[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "elements")]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn fills() {
+        assert!(Tensor::zeros(vec![3, 3]).data().iter().all(|&x| x == 0.0));
+        assert!(Tensor::ones(vec![4]).data().iter().all(|&x| x == 1.0));
+        assert_eq!(Tensor::scalar(2.5).item(), 2.5);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Rng::new(7);
+        let t = Tensor::randn(vec![20_000], &mut rng);
+        let mean: f32 = t.data().iter().sum::<f32>() / 20_000.0;
+        let var: f32 = t.data().iter().map(|x| x * x).sum::<f32>() / 20_000.0;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let r = t.clone().reshape(vec![3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.dims(), &[3, 2]);
+    }
+
+    #[test]
+    fn set2_roundtrip() {
+        let mut t = Tensor::zeros(vec![2, 2]);
+        t.set2(0, 1, 9.0);
+        assert_eq!(t.at2(0, 1), 9.0);
+    }
+}

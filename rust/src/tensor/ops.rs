@@ -1,0 +1,516 @@
+//! Tensor operations: elementwise, reductions, activations, and a blocked
+//! cache-friendly parallel matmul.
+//!
+//! The matmul family is the performance-relevant part — it backs the rust
+//! reference implementation used as the E1/E2 CPU baseline — so it gets a
+//! blocked i-k-j loop order (unit-stride inner loop, FMA-friendly) and
+//! row-band parallelism over the global thread pool.
+
+use crate::util::threadpool;
+
+use super::Tensor;
+
+// ---------------------------------------------------------------------------
+// Elementwise
+// ---------------------------------------------------------------------------
+
+fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert_eq!(a.dims(), b.dims(), "elementwise shape mismatch");
+    let data = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(&x, &y)| f(x, y))
+        .collect();
+    Tensor::new(a.dims().to_vec(), data)
+}
+
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x + y)
+}
+
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x - y)
+}
+
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x * y)
+}
+
+pub fn map(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::new(a.dims().to_vec(), a.data().iter().map(|&x| f(x)).collect())
+}
+
+pub fn scale(a: &Tensor, s: f32) -> Tensor {
+    map(a, |x| x * s)
+}
+
+/// a += s * b (in place; the optimizer hot path).
+pub fn axpy(a: &mut Tensor, s: f32, b: &Tensor) {
+    assert_eq!(a.dims(), b.dims());
+    for (x, &y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += s * y;
+    }
+}
+
+/// Scale each row i of a rank-2 tensor by coef[i] (the §6 rescale).
+pub fn scale_rows(a: &Tensor, coef: &[f32]) -> Tensor {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    assert_eq!(coef.len(), m);
+    let mut out = a.clone();
+    for i in 0..m {
+        let c = coef[i];
+        for v in &mut out.data_mut()[i * n..(i + 1) * n] {
+            *v *= c;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Reductions
+// ---------------------------------------------------------------------------
+
+pub fn sum(a: &Tensor) -> f32 {
+    a.data().iter().sum()
+}
+
+pub fn mean(a: &Tensor) -> f32 {
+    sum(a) / a.numel() as f32
+}
+
+/// Sum of squares of every element (||a||_F^2).
+pub fn sq_sum(a: &Tensor) -> f64 {
+    a.data().iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// Row-wise sum of squares of a rank-2 tensor — the paper's O(mp) kernel,
+/// rust reference version (f64 accumulator mirrors the f32-accumulate
+/// Pallas kernel closely enough at our scales).
+pub fn row_sq_norms(a: &Tensor) -> Vec<f32> {
+    let m = a.dims()[0];
+    let mut out = vec![0f32; m];
+    for i in 0..m {
+        let mut acc = 0f64;
+        for &v in a.row(i) {
+            acc += (v as f64) * (v as f64);
+        }
+        out[i] = acc as f32;
+    }
+    out
+}
+
+/// argmax per row (classification accuracy).
+pub fn row_argmax(a: &Tensor) -> Vec<usize> {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    (0..m)
+        .map(|i| {
+            let row = a.row(i);
+            let mut best = 0;
+            for j in 1..n {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Activations (phi) and their derivatives
+// ---------------------------------------------------------------------------
+
+/// Activation kind; mirrors `python/compile/model.py::ACTIVATIONS`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Tanh,
+    Gelu,
+    Sigmoid,
+    Identity,
+}
+
+impl Activation {
+    pub fn parse(s: &str) -> Option<Activation> {
+        Some(match s {
+            "relu" => Activation::Relu,
+            "tanh" => Activation::Tanh,
+            "gelu" => Activation::Gelu,
+            "sigmoid" => Activation::Sigmoid,
+            "identity" => Activation::Identity,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Tanh => "tanh",
+            Activation::Gelu => "gelu",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Identity => "identity",
+        }
+    }
+
+    pub fn apply(&self, z: f32) -> f32 {
+        match self {
+            Activation::Relu => z.max(0.0),
+            Activation::Tanh => z.tanh(),
+            Activation::Gelu => gelu(z),
+            Activation::Sigmoid => sigmoid(z),
+            Activation::Identity => z,
+        }
+    }
+
+    /// dphi/dz.
+    pub fn grad(&self, z: f32) -> f32 {
+        match self {
+            Activation::Relu => {
+                if z > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Tanh => {
+                let t = z.tanh();
+                1.0 - t * t
+            }
+            Activation::Gelu => gelu_grad(z),
+            Activation::Sigmoid => {
+                let s = sigmoid(z);
+                s * (1.0 - s)
+            }
+            Activation::Identity => 1.0,
+        }
+    }
+}
+
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Exact (erf-free approximation-free) gelu via tanh form used by jax.nn.gelu
+/// (approximate=True is jax's default).
+fn gelu(z: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * z * (1.0 + (C * (z + 0.044715 * z * z * z)).tanh())
+}
+
+fn gelu_grad(z: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    let u = C * (z + 0.044715 * z * z * z);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044715 * z * z);
+    0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du
+}
+
+// ---------------------------------------------------------------------------
+// Softmax / log-softmax (rowwise, numerically stable)
+// ---------------------------------------------------------------------------
+
+pub fn log_softmax_rows(a: &Tensor) -> Tensor {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    let mut out = a.clone();
+    for i in 0..m {
+        let row = &mut out.data_mut()[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = row.iter().map(|&v| ((v - mx) as f64).exp()).sum::<f64>().ln() as f32 + mx;
+        for v in row {
+            *v -= lse;
+        }
+    }
+    out
+}
+
+pub fn softmax_rows(a: &Tensor) -> Tensor {
+    map(&log_softmax_rows(a), f32::exp)
+}
+
+// ---------------------------------------------------------------------------
+// Matmul family
+// ---------------------------------------------------------------------------
+
+/// Tile edge for the blocked matmul (f32: 64*64*4B = 16KiB per tile pair —
+/// comfortably L1/L2 resident).
+const BLOCK: usize = 64;
+/// Below this many output elements the parallel dispatch overhead wins.
+const PAR_THRESHOLD: usize = 64 * 64 * 4;
+
+/// C = A @ B for rank-2 tensors.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (k2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
+    let mut out = Tensor::zeros(vec![m, n]);
+    matmul_into(a.data(), b.data(), out.data_mut(), m, k, n);
+    out
+}
+
+/// C = A^T @ B where A is [m, k], B is [m, n] -> C [k, n].
+/// This is the §6 `Wbar = Haug^T Zbar` recompute, rust reference version.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (m2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(m, m2, "matmul_tn contraction dim: {m} vs {m2}");
+    // Transpose A once (k*m writes) then reuse the blocked kernel: for the
+    // sizes we care about this beats a strided kernel.
+    let at = transpose(a);
+    let mut out = Tensor::zeros(vec![k, n]);
+    matmul_into(at.data(), b.data(), out.data_mut(), k, m, n);
+    out
+}
+
+/// C = A @ B^T where A is [m, k], B is [n, k] -> C [m, n].
+/// This is the backprop `dH = Zbar @ W^T` step.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (n, k2) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul_nt inner dim: {k} vs {k2}");
+    let bt = transpose(b);
+    let mut out = Tensor::zeros(vec![m, n]);
+    matmul_into(a.data(), bt.data(), out.data_mut(), m, k, n);
+    out
+}
+
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    let mut out = Tensor::zeros(vec![n, m]);
+    // Blocked transpose for cache behaviour on large matrices.
+    let od = out.data_mut();
+    let ad = a.data();
+    for ib in (0..m).step_by(BLOCK) {
+        for jb in (0..n).step_by(BLOCK) {
+            for i in ib..(ib + BLOCK).min(m) {
+                for j in jb..(jb + BLOCK).min(n) {
+                    od[j * m + i] = ad[i * n + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Blocked i-k-j kernel over a row band [r0, r1).
+fn matmul_band(a: &[f32], b: &[f32], c: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
+    for kb in (0..k).step_by(BLOCK) {
+        let k_end = (kb + BLOCK).min(k);
+        for i in r0..r1 {
+            let c_row = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+            for kk in kb..k_end {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue; // relu sparsity win in the reference impl
+                }
+                let b_row = &b[kk * n..kk * n + n];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+}
+
+fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    if m * n <= PAR_THRESHOLD || m == 1 {
+        matmul_band(a, b, c, 0, m, k, n);
+        return;
+    }
+    let pool = threadpool::global();
+    let bands = pool.size().min(m);
+    let rows_per = m.div_ceil(bands);
+    // Workers write into disjoint row bands; assemble after.
+    let a_arc: std::sync::Arc<Vec<f32>> = std::sync::Arc::new(a.to_vec());
+    let b_arc: std::sync::Arc<Vec<f32>> = std::sync::Arc::new(b.to_vec());
+    let parts = pool.scope_map(bands, move |band| {
+        let r0 = band * rows_per;
+        let r1 = ((band + 1) * rows_per).min(m);
+        let mut part = vec![0f32; (r1.saturating_sub(r0)) * n];
+        if r0 < r1 {
+            matmul_band(&a_arc, &b_arc, &mut part, r0, r1, k, n);
+        }
+        part
+    });
+    let mut off = 0;
+    for part in parts {
+        c[off..off + part.len()].copy_from_slice(&part);
+        off += part.len();
+    }
+}
+
+/// Append the constant-1 bias column (paper §2's augmented h).
+pub fn augment(h: &Tensor) -> Tensor {
+    let (m, n) = (h.dims()[0], h.dims()[1]);
+    let mut out = Tensor::zeros(vec![m, n + 1]);
+    for i in 0..m {
+        out.data_mut()[i * (n + 1)..i * (n + 1) + n].copy_from_slice(h.row(i));
+        out.data_mut()[i * (n + 1) + n] = 1.0;
+    }
+    out
+}
+
+/// Drop the last column (inverse of `augment` for gradient flow).
+pub fn drop_last_col(h: &Tensor) -> Tensor {
+    let (m, n1) = (h.dims()[0], h.dims()[1]);
+    let n = n1 - 1;
+    let mut out = Tensor::zeros(vec![m, n]);
+    for i in 0..m {
+        out.data_mut()[i * n..(i + 1) * n].copy_from_slice(&h.row(i)[..n]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+    use crate::util::prop;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.dims()[0], a.dims()[1]);
+        let n = b.dims()[1];
+        let mut c = Tensor::zeros(vec![m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for kk in 0..k {
+                    acc += (a.at2(i, kk) as f64) * (b.at2(kk, j) as f64);
+                }
+                c.set2(i, j, acc as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_prop() {
+        prop::check(25, |g| {
+            let (m, k, n) = (
+                g.usize_in(1..40),
+                g.usize_in(1..40),
+                g.usize_in(1..40),
+            );
+            let mut rng = Rng::new(g.case);
+            let a = Tensor::randn(vec![m, k], &mut rng);
+            let b = Tensor::randn(vec![k, n], &mut rng);
+            prop::assert_all_close(matmul(&a, &b).data(), naive_matmul(&a, &b).data(), 1e-3)
+        });
+    }
+
+    #[test]
+    fn matmul_parallel_path() {
+        // Big enough to cross PAR_THRESHOLD.
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(vec![200, 120], &mut rng);
+        let b = Tensor::randn(vec![120, 150], &mut rng);
+        let got = matmul(&a, &b);
+        let want = naive_matmul(&a, &b);
+        prop::assert_all_close(got.data(), want.data(), 1e-3).unwrap();
+    }
+
+    #[test]
+    fn matmul_tn_and_nt() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(vec![12, 7], &mut rng);
+        let b = Tensor::randn(vec![12, 9], &mut rng);
+        let want = naive_matmul(&transpose(&a), &b);
+        prop::assert_all_close(matmul_tn(&a, &b).data(), want.data(), 1e-3).unwrap();
+
+        let c = Tensor::randn(vec![5, 7], &mut rng);
+        let d = Tensor::randn(vec![9, 7], &mut rng);
+        let want = naive_matmul(&c, &transpose(&d));
+        prop::assert_all_close(matmul_nt(&c, &d).data(), want.data(), 1e-3).unwrap();
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(vec![33, 71], &mut rng);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn row_sq_norms_basic() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 2.0, 0.0, -3.0, 4.0]);
+        assert_eq!(row_sq_norms(&t), vec![9.0, 25.0]);
+    }
+
+    #[test]
+    fn augment_and_drop() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let a = augment(&t);
+        assert_eq!(a.dims(), &[2, 3]);
+        assert_eq!(a.row(0), &[1.0, 2.0, 1.0]);
+        assert_eq!(drop_last_col(&a), t);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(vec![4, 9], &mut rng);
+        let s = softmax_rows(&t);
+        for i in 0..4 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn log_softmax_stable_at_large_logits() {
+        let t = Tensor::new(vec![1, 3], vec![1000.0, 1000.0, 1000.0]);
+        let ls = log_softmax_rows(&t);
+        for &v in ls.data() {
+            assert!((v - (-(3f32).ln())).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn activations_match_finite_difference() {
+        prop::check(40, |g| {
+            let act = *g.choose(&[
+                Activation::Relu,
+                Activation::Tanh,
+                Activation::Gelu,
+                Activation::Sigmoid,
+                Activation::Identity,
+            ]);
+            let z = g.f32_in(-3.0..3.0);
+            if matches!(act, Activation::Relu) && z.abs() < 1e-2 {
+                return Ok(()); // kink
+            }
+            let h = 1e-3f32;
+            let fd = (act.apply(z + h) - act.apply(z - h)) / (2.0 * h);
+            prop::assert_close(act.grad(z) as f64, fd as f64, 5e-2)
+        });
+    }
+
+    #[test]
+    fn activation_parse_roundtrip() {
+        for name in ["relu", "tanh", "gelu", "sigmoid", "identity"] {
+            assert_eq!(Activation::parse(name).unwrap().name(), name);
+        }
+        assert!(Activation::parse("swish").is_none());
+    }
+
+    #[test]
+    fn scale_rows_matches_manual() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let s = scale_rows(&t, &[2.0, 0.5]);
+        assert_eq!(s.data(), &[2.0, 4.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn axpy_in_place() {
+        let mut a = Tensor::ones(vec![3]);
+        let b = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        axpy(&mut a, -0.5, &b);
+        assert_eq!(a.data(), &[0.5, 0.0, -0.5]);
+    }
+
+    #[test]
+    fn row_argmax_ties_first() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 3.0, 3.0, 5.0, 2.0, 1.0]);
+        assert_eq!(row_argmax(&t), vec![1, 0]);
+    }
+}

@@ -1,0 +1,91 @@
+//! Tensor shapes (row-major, static rank ≤ 4 in practice).
+
+/// Dimension list; rank 0 = scalar.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: Vec<usize>) -> Self {
+        Shape(dims)
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Row-major strides (in elements).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.0[i + 1];
+        }
+        s
+    }
+
+    /// Matrix rows/cols helpers for the rank-2 fast paths.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2, "rows() on rank-{}", self.rank());
+        self.0[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2, "cols() on rank-{}", self.rank());
+        self.0[1]
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Self {
+        Shape(v)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(v: &[usize]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+impl<const N: usize> From<[usize; N]> for Shape {
+    fn from(v: [usize; N]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_rank() {
+        assert_eq!(Shape::from(vec![2, 3, 4]).numel(), 24);
+        assert_eq!(Shape::from(vec![]).numel(), 1); // scalar
+        assert_eq!(Shape::from([5]).rank(), 1);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(Shape::from([2, 3, 4]).strides(), vec![12, 4, 1]);
+        assert_eq!(Shape::from([7]).strides(), vec![1]);
+        assert_eq!(Shape::from(vec![]).strides(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn zero_dim() {
+        assert_eq!(Shape::from([0, 5]).numel(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rows_requires_rank2() {
+        Shape::from([3]).rows();
+    }
+}

@@ -1,0 +1,89 @@
+//! Leveled stderr logger implementing the `log` crate facade.
+//!
+//! Replaces `env_logger` (not vendored).  Level comes from `PEGRAD_LOG`
+//! (error|warn|info|debug|trace), default `info`.  Output format:
+//! `[  12.345s INFO  pegrad::coordinator] message`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, meta: &log::Metadata) -> bool {
+        meta.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        eprintln!(
+            "[{:9.3}s {:5} {}] {}",
+            START.elapsed().as_secs_f64(),
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name; unknown names fall back to `info`.
+pub fn parse_level(s: &str) -> log::LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => log::LevelFilter::Off,
+        "error" => log::LevelFilter::Error,
+        "warn" => log::LevelFilter::Warn,
+        "debug" => log::LevelFilter::Debug,
+        "trace" => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    }
+}
+
+/// Install the logger once; later calls are no-ops (tests may race).
+pub fn init() {
+    init_with(
+        std::env::var("PEGRAD_LOG")
+            .map(|v| parse_level(&v))
+            .unwrap_or(log::LevelFilter::Info),
+    );
+}
+
+pub fn init_with(level: log::LevelFilter) {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    Lazy::force(&START);
+    let logger = Box::leak(Box::new(StderrLogger { level }));
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("error"), log::LevelFilter::Error);
+        assert_eq!(parse_level("TRACE"), log::LevelFilter::Trace);
+        assert_eq!(parse_level("bogus"), log::LevelFilter::Info);
+        assert_eq!(parse_level("off"), log::LevelFilter::Off);
+    }
+
+    #[test]
+    fn double_init_is_safe() {
+        init_with(log::LevelFilter::Warn);
+        init_with(log::LevelFilter::Trace); // no panic, no re-install
+        log::warn!("logging smoke test");
+    }
+}

@@ -1,0 +1,17 @@
+//! Support substrates the vendored registry does not provide.
+//!
+//! The offline build environment ships only the `xla` crate and its
+//! transitive dependencies, so everything a framework normally pulls from
+//! crates.io — JSON, logging, bench statistics, property testing, thread
+//! pools — is implemented here (see DESIGN.md §6 Substitutions).
+
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+pub use json::Json;
+pub use stats::Summary;
+pub use timer::Timer;

@@ -1,0 +1,198 @@
+//! Mini property-testing framework (proptest is not in the vendored
+//! registry — DESIGN.md §6).
+//!
+//! Seeded generators + N-case sweeps + shrink-by-halving on failure.
+//! Usage:
+//!
+//! ```ignore
+//! prop::check(100, |g| {
+//!     let v = g.vec_f32(1..100, -10.0..10.0);
+//!     let t = SumTree::from(&v.iter().map(|x| x.abs()).collect::<Vec<_>>());
+//!     prop::assert_close(t.total(), v.iter().map(|x| x.abs()).sum(), 1e-4)
+//! });
+//! ```
+
+use std::ops::Range;
+
+use crate::tensor::rng::Rng;
+
+/// Generator handed to each property case: a seeded RNG plus sampling
+/// helpers. Records sizes so failures can shrink.
+pub struct Gen {
+    rng: Rng,
+    pub case: u64,
+    /// Shrink factor in (0, 1]; sizes are scaled down by it on retry.
+    shrink: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64, shrink: f64) -> Self {
+        Gen {
+            rng: Rng::new(seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15))),
+            case,
+            shrink,
+        }
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        let span = (r.end - r.start) as f64;
+        let scaled = (span * self.shrink).max(1.0) as usize;
+        r.start + (self.rng.next_u64() as usize) % scaled
+    }
+
+    pub fn i64_in(&mut self, r: Range<i64>) -> i64 {
+        assert!(r.start < r.end);
+        let span = (r.end - r.start) as u64;
+        r.start + (self.rng.next_u64() % span) as i64
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        r.start + self.rng.next_f32() * (r.end - r.start)
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        r.start + self.rng.next_f64() * (r.end - r.start)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn normal(&mut self) -> f32 {
+        self.rng.next_normal()
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: Range<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0..xs.len())]
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. On failure, retries the same
+/// case seed with smaller size factors to report a (roughly) minimal
+/// reproduction, then panics with the seed so it can be replayed.
+pub fn check(cases: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let seed = match std::env::var("PEGRAD_PROP_SEED") {
+        Ok(s) => s.parse().expect("PEGRAD_PROP_SEED must be u64"),
+        Err(_) => 0xDEFA017,
+    };
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: same case seed, smaller size budget.
+            let mut best = (1.0f64, msg);
+            for &factor in &[0.5, 0.25, 0.125, 0.0625] {
+                let mut g = Gen::new(seed, case, factor);
+                if let Err(msg2) = prop(&mut g) {
+                    best = (factor, msg2);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}, shrink={}): {}\n\
+                 replay with PEGRAD_PROP_SEED={seed}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Property-style assertion helpers (return Result so `check` can shrink).
+pub fn require(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn assert_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    // relative check with a small absolute escape hatch for
+    // cancellation-prone values near zero (f32 accumulation order differs
+    // between blocked/parallel and naive kernels)
+    if (a - b).abs() / denom <= tol || (a - b).abs() <= tol * 1e-2 {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (rel tol {tol})"))
+    }
+}
+
+pub fn assert_all_close(a: &[f32], b: &[f32], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_close(x as f64, y as f64, tol)
+            .map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(50, |g| {
+            let v = g.vec_f32(0..20, -5.0..5.0);
+            let s: f32 = v.iter().sum();
+            let s2: f32 = v.iter().rev().sum();
+            assert_close(s as f64, s2 as f64, 1e-5)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |g| {
+            let n = g.usize_in(1..100);
+            require(n < 5, format!("n={n} too big"))
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(1, 3, 1.0);
+        let mut b = Gen::new(1, 3, 1.0);
+        for _ in 0..10 {
+            assert_eq!(a.rng().next_u64(), b.rng().next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        check(200, |g| {
+            let u = g.usize_in(3..17);
+            let f = g.f32_in(-2.0..2.0);
+            let i = g.i64_in(-5..5);
+            require(
+                (3..17).contains(&u) && (-2.0..2.0).contains(&f) && (-5..5).contains(&i),
+                format!("out of range: {u} {f} {i}"),
+            )
+        });
+    }
+
+    #[test]
+    fn assert_all_close_reports_index() {
+        let e = assert_all_close(&[1.0, 2.0], &[1.0, 3.0], 1e-6).unwrap_err();
+        assert!(e.contains("index 1"));
+        assert!(assert_all_close(&[1.0], &[1.0, 2.0], 1e-6).is_err());
+    }
+}

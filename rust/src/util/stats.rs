@@ -1,0 +1,220 @@
+//! Streaming and batch statistics for metrics and the bench harness.
+
+/// Welford online mean/variance accumulator (numerically stable).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self {
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator); 0 for n < 2.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Batch summary with percentiles, used by the bench harness reports.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute from raw samples. Not `const`-happy: sorts a copy.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of needs >=1 sample");
+        let mut s: Vec<f64> = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut w = Welford::new();
+        for &x in &s {
+            w.push(x);
+        }
+        Summary {
+            n: s.len(),
+            mean: w.mean(),
+            std: w.std(),
+            min: s[0],
+            p50: percentile_sorted(&s, 50.0),
+            p95: percentile_sorted(&s, 95.0),
+            max: *s.last().unwrap(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Exponential moving average with bias correction, used by the
+/// importance sampler's norm store and metric smoothing.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    lambda: f64,
+    value: f64,
+    weight: f64,
+}
+
+impl Ema {
+    /// `lambda` in (0, 1]: weight on the NEW observation.
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0 && lambda <= 1.0, "lambda must be in (0,1]");
+        Ema {
+            lambda,
+            value: 0.0,
+            weight: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.value = (1.0 - self.lambda) * self.value + self.lambda * x;
+        self.weight = (1.0 - self.lambda) * self.weight + self.lambda;
+    }
+
+    /// Bias-corrected current estimate; `None` before any observation.
+    pub fn get(&self) -> Option<f64> {
+        if self.weight == 0.0 {
+            None
+        } else {
+            Some(self.value / self.weight)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs: Vec<f64> = (0..100).map(|i| ((i * 37) % 13) as f64).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-9);
+        assert_eq!(w.count(), 100);
+    }
+
+    #[test]
+    fn welford_extremes() {
+        let mut w = Welford::new();
+        w.push(5.0);
+        assert_eq!(w.var(), 0.0);
+        assert_eq!((w.min(), w.max()), (5.0, 5.0));
+        w.push(-3.0);
+        assert_eq!((w.min(), w.max()), (-3.0, 5.0));
+    }
+
+    #[test]
+    fn percentiles() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&s, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile_sorted(&s, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 100.0);
+        assert_eq!(percentile_sorted(&[7.0], 95.0), 7.0);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_empty_panics() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn ema_bias_correction() {
+        let mut e = Ema::new(0.1);
+        assert!(e.get().is_none());
+        e.push(10.0);
+        // bias-corrected first observation is exactly itself
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-12);
+        for _ in 0..500 {
+            e.push(2.0);
+        }
+        assert!((e.get().unwrap() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_tracks_recent() {
+        let mut a = Ema::new(0.5);
+        let mut b = Ema::new(0.01);
+        for x in [0.0, 0.0, 0.0, 10.0, 10.0] {
+            a.push(x);
+            b.push(x);
+        }
+        assert!(a.get().unwrap() > b.get().unwrap());
+    }
+}

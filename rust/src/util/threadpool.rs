@@ -1,0 +1,309 @@
+//! Fixed-size worker pool with bounded queues (tokio substitute).
+//!
+//! Two primitives, both built on `std::sync::mpsc` + threads:
+//!
+//! * [`ThreadPool`] — submit closures, optionally collect results via
+//!   [`ThreadPool::scope_map`] (the parallel-matmul substrate uses it).
+//! * [`bounded`] — a bounded MPSC channel with blocking `send`, the
+//!   backpressure primitive the coordinator's prefetch pipeline uses.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("pegrad-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    /// Number of workers (for chunking heuristics).
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget job submission.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("workers alive");
+    }
+
+    /// Run `f(i)` for `i in 0..n` across the pool and collect results in
+    /// order. Blocks until all complete. `f` must be cloneable across
+    /// threads (typically a capture-by-Arc closure).
+    pub fn scope_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let v = f(i);
+                let _ = tx.send((i, v));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            out[i] = Some(v);
+        }
+        out.into_iter().map(|v| v.expect("worker died")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Shared global pool sized to the machine (used by tensor ops so they
+/// don't each spawn threads).
+pub fn global() -> &'static ThreadPool {
+    use once_cell::sync::Lazy;
+    static POOL: Lazy<ThreadPool> = Lazy::new(|| {
+        let n = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(1, 32);
+        ThreadPool::new(n)
+    });
+    &POOL
+}
+
+// ---------------------------------------------------------------------------
+// Bounded channel (backpressure)
+// ---------------------------------------------------------------------------
+
+struct BoundedInner<T> {
+    q: Mutex<BoundedState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct BoundedState<T> {
+    buf: std::collections::VecDeque<T>,
+    cap: usize,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+/// Sending half of a bounded channel; `send` blocks when full.
+pub struct BoundedSender<T>(Arc<BoundedInner<T>>);
+/// Receiving half; `recv` blocks when empty, returns `None` when all
+/// senders are gone and the buffer is drained.
+pub struct BoundedReceiver<T>(Arc<BoundedInner<T>>);
+
+/// Create a bounded channel of capacity `cap` (>=1).
+pub fn bounded<T>(cap: usize) -> (BoundedSender<T>, BoundedReceiver<T>) {
+    assert!(cap >= 1);
+    let inner = Arc::new(BoundedInner {
+        q: Mutex::new(BoundedState {
+            buf: std::collections::VecDeque::with_capacity(cap),
+            cap,
+            senders: 1,
+            receiver_alive: true,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (BoundedSender(Arc::clone(&inner)), BoundedReceiver(inner))
+}
+
+impl<T> BoundedSender<T> {
+    /// Blocking send; `Err(v)` if the receiver is gone.
+    pub fn send(&self, v: T) -> Result<(), T> {
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if !st.receiver_alive {
+                return Err(v);
+            }
+            if st.buf.len() < st.cap {
+                st.buf.push_back(v);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.0.not_full.wait(st).unwrap();
+        }
+    }
+}
+
+impl<T> Clone for BoundedSender<T> {
+    fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().senders += 1;
+        BoundedSender(Arc::clone(&self.0))
+    }
+}
+
+impl<T> Drop for BoundedSender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.q.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> BoundedReceiver<T> {
+    /// Blocking receive; `None` once all senders dropped and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                self.0.not_full.notify_one();
+                return Some(v);
+            }
+            if st.senders == 0 {
+                return None;
+            }
+            st = self.0.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.0.q.lock().unwrap();
+        let v = st.buf.pop_front();
+        if v.is_some() {
+            self.0.not_full.notify_one();
+        }
+        v
+    }
+}
+
+impl<T> Drop for BoundedReceiver<T> {
+    fn drop(&mut self) {
+        self.0.q.lock().unwrap().receiver_alive = false;
+        self.0.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&count);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_map_ordered() {
+        let pool = ThreadPool::new(3);
+        let out = pool.scope_map(50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_zero() {
+        let pool = ThreadPool::new(1);
+        assert!(pool.scope_map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn bounded_backpressure() {
+        let (tx, rx) = bounded::<usize>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        // third send must block until a recv happens
+        let t = thread::spawn(move || {
+            tx.send(3).unwrap();
+            "sent"
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert!(!t.is_finished(), "send should block at capacity");
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(t.join().unwrap(), "sent");
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), Some(3));
+    }
+
+    #[test]
+    fn bounded_close_semantics() {
+        let (tx, rx) = bounded::<u32>(4);
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(7));
+        assert_eq!(rx.recv(), None); // senders gone
+    }
+
+    #[test]
+    fn bounded_receiver_gone() {
+        let (tx, rx) = bounded::<u32>(1);
+        drop(rx);
+        assert_eq!(tx.send(9), Err(9));
+    }
+
+    #[test]
+    fn bounded_multi_sender() {
+        let (tx, rx) = bounded::<usize>(8);
+        let mut handles = vec![];
+        for t in 0..4 {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..25 {
+                    tx.send(t * 100 + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut got = vec![];
+        while let Some(v) = rx.recv() {
+            got.push(v);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(got.len(), 100);
+    }
+}

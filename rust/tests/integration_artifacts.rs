@@ -1,0 +1,156 @@
+//! Manifest-wide artifact validation: EVERY preset's `norms_pegrad` (and
+//! naive twin, where present) is cross-checked against the pure-rust
+//! reference implementation on fresh random params/batches.
+//!
+//! This is the broad-coverage companion to `integration_runtime.rs` (which
+//! digs deep on `tiny`): any preset whose lowering, manifest entry, or
+//! kernel selection drifts from the §4 math fails here by name.
+//!
+//! The very large presets are skipped under the default test profile; set
+//! `PEGRAD_TEST_ALL_PRESETS=1` to include them.
+
+use pegrad::nn::loss::Targets;
+use pegrad::nn::{Loss, Mlp};
+use pegrad::pegrad::per_example_norms;
+use pegrad::runtime::executable::Arg;
+use pegrad::runtime::{Manifest, Registry};
+use pegrad::tensor::{Rng, Tensor};
+use pegrad::util::prop;
+
+const SKIP_PARAMS_ABOVE: usize = 20_000_000;
+
+fn registry() -> Registry {
+    let dir = std::env::var("PEGRAD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Registry::new(Manifest::load(dir).expect("run `make artifacts` first"))
+}
+
+fn batch_for(mlp: &Mlp, rng: &mut Rng) -> (Tensor, Targets) {
+    let spec = &mlp.spec;
+    let x = Tensor::randn(vec![spec.m, spec.in_dim()], rng);
+    let y = match spec.loss {
+        Loss::SoftmaxCe => Targets::Classes(
+            (0..spec.m)
+                .map(|_| rng.next_below(spec.out_dim() as u64) as i32)
+                .collect(),
+        ),
+        Loss::Mse => Targets::Dense(Tensor::randn(vec![spec.m, spec.out_dim()], rng)),
+    };
+    (x, y)
+}
+
+#[test]
+fn every_preset_norms_match_reference() {
+    let reg = registry();
+    let all = std::env::var("PEGRAD_TEST_ALL_PRESETS").is_ok();
+    let mut checked = 0;
+    for (name, preset) in reg.manifest.presets.clone() {
+        if preset.param_count > SKIP_PARAMS_ABOVE && !all {
+            eprintln!("skipping {name} ({} params)", preset.param_count);
+            continue;
+        }
+        let spec = preset.spec().unwrap();
+        let mut rng = Rng::new(0xA5 ^ preset.param_count as u64);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let (x, y) = batch_for(&mlp, &mut rng);
+        let mut args: Vec<Arg> = mlp.params.iter().map(Arg::from).collect();
+        args.push((&x).into());
+        args.push((&y).into());
+
+        let out = reg
+            .get(&name, "norms_pegrad")
+            .unwrap_or_else(|e| panic!("{name}: {e}"))
+            .call(&args)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let want = per_example_norms(&fwd, &bwd);
+        prop::assert_all_close(out[0].data(), &want.s_total, 5e-3)
+            .unwrap_or_else(|e| panic!("preset {name}: trick-vs-reference: {e}"));
+
+        if preset.entries.contains_key("norms_naive") {
+            let naive = reg.get(&name, "norms_naive").unwrap().call(&args).unwrap();
+            prop::assert_all_close(out[0].data(), naive[0].data(), 5e-3)
+                .unwrap_or_else(|e| panic!("preset {name}: trick-vs-vmap: {e}"));
+        }
+        checked += 1;
+    }
+    assert!(checked >= 8, "only {checked} presets checked — artifacts stale?");
+}
+
+#[test]
+fn every_preset_step_vanilla_descends() {
+    // one SGD step on a fixed batch must reduce that batch's loss for a
+    // small enough lr — checked through the artifact for every preset
+    let reg = registry();
+    for (name, preset) in reg.manifest.presets.clone() {
+        if preset.param_count > SKIP_PARAMS_ABOVE {
+            continue;
+        }
+        let spec = preset.spec().unwrap();
+        let mut rng = Rng::new(7);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let (x, y) = batch_for(&mlp, &mut rng);
+        let mut args: Vec<Arg> = mlp.params.iter().map(Arg::from).collect();
+        args.push((&x).into());
+        args.push((&y).into());
+        // lr small enough that one step descends on every preset width
+        // (wide layers at He init have large gradient norms)
+        args.push(Arg::scalar_f32(1e-4));
+        let step = reg.get(&name, "step_vanilla").unwrap();
+        let out = step.call(&args).unwrap();
+        let n = spec.n_layers();
+        let loss0 = out[n].item();
+
+        // loss at the new params on the same batch
+        let new_params: Vec<Tensor> = out.into_iter().take(n).collect();
+        let mut args2: Vec<Arg> = new_params.iter().map(Arg::from).collect();
+        args2.push((&x).into());
+        args2.push((&y).into());
+        let fwd = reg.get(&name, "fwd").unwrap();
+        let loss1 = fwd.call(&args2).unwrap()[0].item();
+        assert!(
+            loss1 < loss0,
+            "preset {name}: SGD step did not descend ({loss0} -> {loss1})"
+        );
+    }
+}
+
+#[test]
+fn manifest_files_all_exist_and_parse_as_hlo() {
+    let reg = registry();
+    for preset in reg.manifest.presets.values() {
+        for e in preset.entries.values() {
+            let path = reg.manifest.hlo_path(e);
+            let text = std::fs::read_to_string(&path)
+                .unwrap_or_else(|err| panic!("{}: {err}", path.display()));
+            assert!(
+                text.starts_with("HloModule"),
+                "{} is not HLO text",
+                path.display()
+            );
+            assert!(text.contains("ENTRY"), "{} lacks ENTRY", path.display());
+        }
+    }
+}
+
+#[test]
+fn manifest_shapes_are_internally_consistent() {
+    let reg = registry();
+    for (name, preset) in &reg.manifest.presets {
+        let spec = preset.spec().unwrap();
+        assert_eq!(spec.param_count(), preset.param_count, "{name}");
+        for (ename, e) in &preset.entries {
+            // weight inputs lead every signature
+            for (i, (a, b)) in spec.weight_shapes().iter().enumerate() {
+                assert_eq!(
+                    e.inputs[i].shape,
+                    vec![*a, *b],
+                    "{name}/{ename} input {i}"
+                );
+            }
+            // no zero-sized tensors anywhere
+            for t in e.inputs.iter().chain(&e.outputs) {
+                assert!(t.numel() > 0, "{name}/{ename}: zero-size tensor");
+            }
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Cross-language integration: PJRT artifacts vs the pure-rust reference.
+//!
+//! Identical parameters and batches are fed to both implementations; every
+//! artifact output is diffed against the rust oracle. This is the test
+//! that proves L1+L2 (Pallas/JAX, AOT-lowered) and L3's reference
+//! implementation compute the same mathematics.
+//!
+//! Requires `make artifacts` (the `tiny` preset) to have run.
+
+use pegrad::nn::loss::Targets;
+use pegrad::nn::Mlp;
+use pegrad::pegrad::{clip_coefficients, clipped_grads, per_example_norms};
+use pegrad::runtime::executable::Arg;
+use pegrad::runtime::{Manifest, Registry};
+use pegrad::tensor::{ops, Rng, Tensor};
+use pegrad::util::prop;
+
+fn registry() -> Registry {
+    let dir = std::env::var("PEGRAD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Registry::new(Manifest::load(dir).expect("run `make artifacts` first"))
+}
+
+/// Shared fixture: tiny preset, deterministic params and batch.
+fn fixture(reg: &Registry, seed: u64) -> (Mlp, Tensor, Targets, Vec<Arg>) {
+    let p = reg.manifest.preset("tiny").unwrap();
+    let spec = p.spec().unwrap();
+    let mut rng = Rng::new(seed);
+    let mlp = Mlp::init(spec.clone(), &mut rng);
+    let x = Tensor::randn(vec![spec.m, spec.in_dim()], &mut rng);
+    let y = Targets::Classes(
+        (0..spec.m)
+            .map(|_| (rng.next_below(spec.out_dim() as u64)) as i32)
+            .collect(),
+    );
+    let mut args: Vec<Arg> = mlp.params.iter().map(Arg::from).collect();
+    args.push(Arg::from(&x));
+    args.push(Arg::from(&y));
+    (mlp, x, y, args)
+}
+
+#[test]
+fn fwd_matches_reference() {
+    let reg = registry();
+    let (mlp, x, y, args) = fixture(&reg, 11);
+    let entry = reg.get("tiny", "fwd").unwrap();
+    let out = entry.call(&args).unwrap();
+    // outputs: mean_loss, per_ex_loss, logits
+    let fwd = mlp.forward(&x, &y);
+    let mean_ref = fwd.per_ex_loss.iter().sum::<f32>() / fwd.per_ex_loss.len() as f32;
+    prop::assert_close(out[0].item() as f64, mean_ref as f64, 1e-4).unwrap();
+    prop::assert_all_close(out[1].data(), &fwd.per_ex_loss, 1e-4).unwrap();
+    prop::assert_all_close(out[2].data(), fwd.logits.data(), 1e-4).unwrap();
+}
+
+#[test]
+fn norms_pegrad_matches_reference_and_naive_artifact() {
+    let reg = registry();
+    let (mlp, x, y, args) = fixture(&reg, 22);
+    let trick = reg.get("tiny", "norms_pegrad").unwrap().call(&args).unwrap();
+    // rust reference
+    let (fwd, bwd) = mlp.forward_backward(&x, &y);
+    let norms = per_example_norms(&fwd, &bwd);
+    prop::assert_all_close(trick[0].data(), &norms.s_total, 1e-3).unwrap();
+    // artifact-vs-artifact: the vmap naive entry agrees too
+    let naive = reg.get("tiny", "norms_naive").unwrap().call(&args).unwrap();
+    prop::assert_all_close(trick[0].data(), naive[0].data(), 1e-3).unwrap();
+    // per-layer matrix [m, n]
+    let m = norms.m();
+    let n = mlp.spec.n_layers();
+    assert_eq!(trick[1].dims(), &[m, n]);
+    for j in 0..m {
+        prop::assert_all_close(trick[1].row(j), &norms.s_layers[j], 1e-3).unwrap();
+    }
+}
+
+#[test]
+fn grads_pegrad_matches_reference() {
+    let reg = registry();
+    let (mlp, x, y, args) = fixture(&reg, 33);
+    let out = reg.get("tiny", "grads_pegrad").unwrap().call(&args).unwrap();
+    let n = mlp.spec.n_layers();
+    let (fwd, bwd) = mlp.forward_backward(&x, &y);
+    let m = fwd.logits.dims()[0] as f32;
+    // outputs: mean_loss, grads..., s_total, s_layers — grads are the MEAN
+    for (i, g) in out[1..1 + n].iter().enumerate() {
+        let want = ops::scale(&bwd.grads[i], 1.0 / m);
+        prop::assert_all_close(g.data(), want.data(), 1e-3).unwrap();
+    }
+}
+
+#[test]
+fn step_vanilla_matches_reference_sgd() {
+    let reg = registry();
+    let (mlp, x, y, mut args) = fixture(&reg, 44);
+    let lr = 0.05f32;
+    args.push(Arg::scalar_f32(lr));
+    let out = reg.get("tiny", "step_vanilla").unwrap().call(&args).unwrap();
+    let n = mlp.spec.n_layers();
+    let (fwd, bwd) = mlp.forward_backward(&x, &y);
+    let m = fwd.logits.dims()[0] as f32;
+    for i in 0..n {
+        let mut want = mlp.params[i].clone();
+        ops::axpy(&mut want, -lr / m, &bwd.grads[i]);
+        prop::assert_all_close(out[i].data(), want.data(), 1e-3).unwrap();
+    }
+    // mean loss output
+    let mean_ref = fwd.per_ex_loss.iter().sum::<f32>() / m;
+    prop::assert_close(out[n].item() as f64, mean_ref as f64, 1e-4).unwrap();
+}
+
+#[test]
+fn step_pegrad_uniform_weights_equals_vanilla() {
+    let reg = registry();
+    let (mlp, _x, _y, base_args) = fixture(&reg, 55);
+    let m = mlp.spec.m;
+    let lr = 0.1f32;
+
+    let mut args_v = base_args.clone();
+    args_v.push(Arg::scalar_f32(lr));
+    let vanilla = reg.get("tiny", "step_vanilla").unwrap().call(&args_v).unwrap();
+
+    let mut args_p = base_args.clone();
+    args_p.push(Arg::scalar_f32(lr));
+    args_p.push(Arg::F32(Tensor::full(vec![m], 1.0 / m as f32)));
+    let pegrad_out = reg.get("tiny", "step_pegrad").unwrap().call(&args_p).unwrap();
+
+    let n = mlp.spec.n_layers();
+    for i in 0..n {
+        prop::assert_all_close(pegrad_out[i].data(), vanilla[i].data(), 1e-3).unwrap();
+    }
+}
+
+#[test]
+fn step_clipped_matches_reference_clip_pipeline() {
+    let reg = registry();
+    let (mlp, x, y, mut args) = fixture(&reg, 66);
+    let (lr, clip_c) = (0.5f32, 0.8f32);
+    args.push(Arg::scalar_f32(lr));
+    args.push(Arg::scalar_f32(clip_c));
+    args.push(Arg::scalar_f32(0.0)); // sigma = 0: deterministic
+    args.push(Arg::scalar_i32(123));
+    let out = reg.get("tiny", "step_clipped").unwrap().call(&args).unwrap();
+
+    let n = mlp.spec.n_layers();
+    let m = mlp.spec.m as f32;
+    let (fwd, bwd) = mlp.forward_backward(&x, &y);
+    let norms = per_example_norms(&fwd, &bwd);
+    let coef = clip_coefficients(&norms, clip_c);
+    let grads = clipped_grads(&fwd, &bwd, &coef);
+    for i in 0..n {
+        let mut want = mlp.params[i].clone();
+        ops::axpy(&mut want, -lr / m, &grads[i]);
+        prop::assert_all_close(out[i].data(), want.data(), 1e-3).unwrap();
+    }
+    // s_total output matches, clip_frac consistent
+    prop::assert_all_close(out[n + 1].data(), &norms.s_total, 1e-3).unwrap();
+    let frac_ref = coef.iter().filter(|&&c| c < 1.0).count() as f32 / m;
+    prop::assert_close(out[n + 2].item() as f64, frac_ref as f64, 1e-5).unwrap();
+}
+
+#[test]
+fn grad_batch1_matches_reference_rows() {
+    let reg = registry();
+    let (mlp, x, y, _) = fixture(&reg, 77);
+    let entry = reg.get("tiny", "grad_batch1").unwrap();
+    let n = mlp.spec.n_layers();
+    for j in 0..3 {
+        let mut args: Vec<Arg> = mlp.params.iter().map(Arg::from).collect();
+        args.push(Arg::F32(Tensor::new(
+            vec![mlp.spec.in_dim()],
+            x.row(j).to_vec(),
+        )));
+        match &y {
+            Targets::Classes(c) => args.push(Arg::I32(vec![c[j]], vec![])),
+            Targets::Dense(_) => unreachable!("tiny is CE"),
+        }
+        let out = entry.call(&args).unwrap();
+        // reference: batch-1 backward
+        let xj = Tensor::new(vec![1, mlp.spec.in_dim()], x.row(j).to_vec());
+        let yj = y.gather(&[j]);
+        let (fwdj, bwdj) = mlp.forward_backward(&xj, &yj);
+        prop::assert_close(out[0].item() as f64, fwdj.per_ex_loss[0] as f64, 1e-4).unwrap();
+        for i in 0..n {
+            prop::assert_all_close(out[1 + i].data(), bwdj.grads[i].data(), 1e-3).unwrap();
+        }
+    }
+}
+
+#[test]
+fn grads_normalized_matches_reference() {
+    use pegrad::pegrad::normalized_grads;
+    let reg = registry();
+    let (mlp, x, y, mut args) = fixture(&reg, 99);
+    let t = 1.5f32;
+    args.push(Arg::scalar_f32(t));
+    let out = reg.get("tiny", "grads_normalized").unwrap().call(&args).unwrap();
+    let n = mlp.spec.n_layers();
+    let (fwd, bwd) = mlp.forward_backward(&x, &y);
+    let norms = pegrad::pegrad::per_example_norms(&fwd, &bwd);
+    let want = normalized_grads(&fwd, &bwd, &norms, t);
+    for (g, w) in out[1..1 + n].iter().zip(&want) {
+        prop::assert_all_close(g.data(), w.data(), 5e-3).unwrap();
+    }
+    // s_total output is the RAW (pre-normalization) squared norms
+    prop::assert_all_close(out[1 + n].data(), &norms.s_total, 1e-3).unwrap();
+}
+
+#[test]
+fn device_resident_path_matches_host_path() {
+    use pegrad::runtime::executable::fetch_f32;
+    use pegrad::runtime::DeviceTensors;
+    let reg = registry();
+    let (mlp, x, y, args) = fixture(&reg, 88);
+    let entry = reg.get("tiny", "norms_pegrad").unwrap();
+    let host_out = entry.call(&args).unwrap();
+
+    // same call through device-resident buffers
+    let mut host_tensors: Vec<Tensor> = mlp.params.clone();
+    host_tensors.push(x.clone());
+    let dev = DeviceTensors::upload(&host_tensors).unwrap();
+    let ybuf = match &y {
+        Targets::Classes(c) => pegrad::runtime::client::global()
+            .buffer_from_host_buffer(&c[..], &[c.len()], None)
+            .unwrap(),
+        _ => unreachable!(),
+    };
+    let mut refs: Vec<&xla::PjRtBuffer> = dev.buffers[..dev.len() - 1].iter().collect();
+    refs.push(&dev.buffers[dev.len() - 1]);
+    refs.push(&ybuf);
+    let dev_out = entry.call_device(&refs).unwrap();
+    assert_eq!(dev_out.len(), host_out.len());
+    let s_dev = fetch_f32(&dev_out[0]).unwrap();
+    prop::assert_all_close(s_dev.data(), host_out[0].data(), 1e-5).unwrap();
+}
+
+#[test]
+fn registry_caches_compilations() {
+    let reg = registry();
+    assert_eq!(reg.compiled_count(), 0);
+    let a = reg.get("tiny", "fwd").unwrap();
+    let b = reg.get("tiny", "fwd").unwrap();
+    assert_eq!(reg.compiled_count(), 1);
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert!(reg.get("tiny", "nonexistent").is_err());
+    assert!(reg.get("nonexistent", "fwd").is_err());
+}
