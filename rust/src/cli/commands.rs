@@ -12,11 +12,16 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::Config;
 use crate::coordinator::Trainer;
+use crate::engine::{EngineMode, FusedEngine};
+use crate::nn::loss::Targets;
+use crate::nn::{Loss, ModelSpec};
 use crate::privacy::RdpAccountant;
 use crate::runtime::{Manifest, Registry};
-use crate::tensor::Rng;
+use crate::tensor::ops::Activation;
+use crate::tensor::{Rng, Tensor};
+use crate::util::Json;
 
-use super::args::{help, parse, ArgSpec};
+use super::args::{help, parse, ArgSpec, Parsed};
 
 pub fn usage() -> String {
     "pegrad — Efficient Per-Example Gradient Computations (Goodfellow, 2015)\n\
@@ -24,8 +29,11 @@ pub fn usage() -> String {
      usage: pegrad <command> [options]\n\
      \n\
      commands:\n\
-     \x20 train        run a training loop (per-example norms on the hot path)\n\
+     \x20 train        run a training loop (per-example norms on the hot path);\n\
+     \x20              mode rust_pegrad|rust_clipped|rust_normalized runs the\n\
+     \x20              pure-rust fused engine — no artifacts or PJRT needed\n\
      \x20 norms        compute per-example gradient norms for a fresh batch\n\
+     \x20              (--rust uses the fused engine instead of artifacts)\n\
      \x20 inspect      show artifact manifest contents\n\
      \x20 accountant   DP-SGD (ε, δ) calculator for the §6 clipped mode\n\
      \x20 data         generate + summarize a synthetic dataset\n\
@@ -104,6 +112,9 @@ fn cmd_norms(argv: &[String]) -> Result<()> {
         ArgSpec::with_default("preset", "artifact preset", "small"),
         ArgSpec::with_default("artifacts", "artifacts dir", "artifacts"),
         ArgSpec::with_default("seed", "rng seed", "0"),
+        ArgSpec::switch("rust", "use the pure-rust fused engine (no artifacts/PJRT)"),
+        ArgSpec::with_default("dims", "model dims for --rust, comma-separated", "16,32,10"),
+        ArgSpec::with_default("m", "batch size for --rust", "8"),
         ArgSpec::switch("per-layer", "also emit per-weight-matrix norms (paper §2: \"the norm of the gradient for an individual weight matrix\")"),
         ArgSpec::switch("help", "show options"),
     ];
@@ -111,6 +122,9 @@ fn cmd_norms(argv: &[String]) -> Result<()> {
     if p.has("help") {
         println!("pegrad norms options:\n{}", help(&specs));
         return Ok(());
+    }
+    if p.has("rust") {
+        return cmd_norms_rust(&p);
     }
     let reg = Registry::new(Manifest::load(p.get("artifacts").unwrap())?);
     let preset = reg.manifest.preset(p.get("preset").unwrap())?.clone();
@@ -144,6 +158,49 @@ fn cmd_norms(argv: &[String]) -> Result<()> {
             fields.push(("layer_norms", crate::util::Json::arr_f32(&layer_norms)));
         }
         println!("{}", crate::util::Json::obj(fields));
+    }
+    Ok(())
+}
+
+/// `pegrad norms --rust`: §4 norms from the fused engine on a fresh
+/// random model/batch — runs anywhere, no artifacts or PJRT runtime.
+fn cmd_norms_rust(p: &Parsed) -> Result<()> {
+    let dims = p
+        .get("dims")
+        .unwrap()
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("--dims expects comma-separated widths, got '{s}'"))
+        })
+        .collect::<Result<Vec<usize>>>()?;
+    let m = p.get_usize("m")?.unwrap();
+    let seed = p.get_usize("seed")?.unwrap_or(0) as u64;
+    let spec = ModelSpec::new(dims, Activation::Relu, Loss::SoftmaxCe, m)?;
+    let mut rng = Rng::new(seed);
+    let params = spec.init_params(&mut rng);
+    let x = Tensor::randn(vec![m, spec.in_dim()], &mut rng);
+    let y = Targets::Classes(
+        (0..m)
+            .map(|_| rng.next_below(spec.out_dim() as u64) as i32)
+            .collect(),
+    );
+    let mut engine = FusedEngine::new(spec);
+    engine.step(&params, &x, &y, EngineMode::Mean);
+    let per_layer = p.has("per-layer");
+    let pe = engine.per_example_norms();
+    for j in 0..m {
+        let mut fields = vec![
+            ("example", Json::num(j as f64)),
+            ("grad_norm", Json::num(engine.norms()[j] as f64)),
+            ("loss", Json::num(engine.per_ex_loss()[j] as f64)),
+        ];
+        if per_layer {
+            let layer_norms: Vec<f32> = pe.s_layers[j].iter().map(|s| s.sqrt()).collect();
+            fields.push(("layer_norms", Json::arr_f32(&layer_norms)));
+        }
+        println!("{}", Json::obj(fields));
     }
     Ok(())
 }

@@ -20,6 +20,14 @@ pub enum RunMode {
     RustOptim,
     /// `step_clipped`: DP-SGD via the §6 extension.
     Clipped,
+    /// Pure-rust fused engine: mean grads + per-example norms, no XLA
+    /// runtime or artifacts needed (model comes from the `[model]` section).
+    RustPegrad,
+    /// Pure-rust fused engine: §6 clipped DP-SGD.
+    RustClipped,
+    /// Pure-rust fused engine: §6 normalized-gradient updates
+    /// (every example rescaled to `normalize_target`).
+    RustNormalized,
 }
 
 impl RunMode {
@@ -29,6 +37,9 @@ impl RunMode {
             "pegrad" => RunMode::Pegrad,
             "rust_optim" => RunMode::RustOptim,
             "clipped" => RunMode::Clipped,
+            "rust_pegrad" => RunMode::RustPegrad,
+            "rust_clipped" => RunMode::RustClipped,
+            "rust_normalized" => RunMode::RustNormalized,
             _ => return None,
         })
     }
@@ -39,7 +50,19 @@ impl RunMode {
             RunMode::Pegrad => "pegrad",
             RunMode::RustOptim => "rust_optim",
             RunMode::Clipped => "clipped",
+            RunMode::RustPegrad => "rust_pegrad",
+            RunMode::RustClipped => "rust_clipped",
+            RunMode::RustNormalized => "rust_normalized",
         }
+    }
+
+    /// Modes served entirely by the in-process fused engine — no PJRT
+    /// runtime, no AOT artifacts.
+    pub fn is_rust_engine(&self) -> bool {
+        matches!(
+            self,
+            RunMode::RustPegrad | RunMode::RustClipped | RunMode::RustNormalized
+        )
     }
 }
 
@@ -94,6 +117,15 @@ pub struct Config {
     pub artifacts_dir: String,
     /// depth of the gather-prefetch queue (0 = synchronous).
     pub prefetch_depth: usize,
+    /// `[model]` section: the network the rust-engine modes build directly
+    /// (artifact modes take their model from the manifest preset instead).
+    pub model_dims: Vec<usize>,
+    pub model_activation: String,
+    pub model_loss: String,
+    /// minibatch size for the rust-engine modes.
+    pub model_m: usize,
+    /// target norm for mode = "rust_normalized".
+    pub normalize_target: f32,
 }
 
 impl Default for Config {
@@ -119,6 +151,11 @@ impl Default for Config {
             out_dir: "runs".into(),
             artifacts_dir: "artifacts".into(),
             prefetch_depth: 2,
+            model_dims: vec![16, 32, 10],
+            model_activation: "relu".into(),
+            model_loss: "softmax_ce".into(),
+            model_m: 16,
+            normalize_target: 1.0,
         }
     }
 }
@@ -151,8 +188,24 @@ impl Config {
                 bail!("privacy.delta must be in (0,1)");
             }
         }
-        if self.mode == RunMode::Clipped && self.privacy.is_none() {
-            bail!("mode=clipped requires a [privacy] section");
+        if matches!(self.mode, RunMode::Clipped | RunMode::RustClipped)
+            && self.privacy.is_none()
+        {
+            bail!("mode={} requires a [privacy] section", self.mode.name());
+        }
+        if self.mode.is_rust_engine() {
+            if self.model_dims.len() < 2 {
+                bail!(
+                    "rust-engine modes need model.dims with >=2 entries, got {:?}",
+                    self.model_dims
+                );
+            }
+            if self.model_m == 0 {
+                bail!("model.m must be > 0");
+            }
+        }
+        if self.mode == RunMode::RustNormalized && self.normalize_target <= 0.0 {
+            bail!("normalize_target must be > 0");
         }
         Ok(())
     }
@@ -225,6 +278,19 @@ fn apply(cfg: &mut Config, map: &BTreeMap<String, Value>) -> Result<()> {
             "out_dir" => cfg.out_dir = v.as_str().ok_or_else(fail)?.into(),
             "artifacts_dir" => cfg.artifacts_dir = v.as_str().ok_or_else(fail)?.into(),
             "prefetch_depth" => cfg.prefetch_depth = v.as_usize().ok_or_else(fail)?,
+            "normalize_target" => {
+                cfg.normalize_target = v.as_f64().ok_or_else(fail)? as f32
+            }
+            "model.dims" => {
+                cfg.model_dims = v
+                    .as_usize_list()
+                    .ok_or_else(|| anyhow!("model.dims must be a list of widths"))?
+            }
+            "model.activation" => {
+                cfg.model_activation = v.as_str().ok_or_else(fail)?.into()
+            }
+            "model.loss" => cfg.model_loss = v.as_str().ok_or_else(fail)?.into(),
+            "model.m" => cfg.model_m = v.as_usize().ok_or_else(fail)?,
             "sampler.kind" => {
                 cfg.sampler = match v.as_str().ok_or_else(fail)? {
                     "uniform" => SamplerKind::Uniform,
@@ -315,6 +381,53 @@ mod tests {
         let p = cfg.privacy.unwrap();
         assert_eq!(p.clip_c, 1.5);
         assert!(matches!(cfg.schedule, Schedule::WarmupCosine { .. }));
+    }
+
+    #[test]
+    fn parse_rust_engine_config() {
+        let cfg = Config::from_toml(
+            r#"
+            mode = "rust_clipped"
+
+            [model]
+            dims = [8, 24, 4]
+            activation = "tanh"
+            loss = "softmax_ce"
+            m = 32
+
+            [privacy]
+            clip_c = 1.0
+            noise_sigma = 0.8
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mode, RunMode::RustClipped);
+        assert!(cfg.mode.is_rust_engine());
+        assert_eq!(cfg.model_dims, vec![8, 24, 4]);
+        assert_eq!(cfg.model_activation, "tanh");
+        assert_eq!(cfg.model_m, 32);
+    }
+
+    #[test]
+    fn rust_engine_validation() {
+        // rust_clipped needs privacy, like clipped
+        assert!(Config::from_toml("mode = \"rust_clipped\"").is_err());
+        // degenerate model dims rejected
+        assert!(
+            Config::from_toml("mode = \"rust_pegrad\"\n[model]\ndims = [5]").is_err()
+        );
+        // normalized target must be positive
+        assert!(Config::from_toml(
+            "mode = \"rust_normalized\"\nnormalize_target = 0"
+        )
+        .is_err());
+        let cfg =
+            Config::from_toml("mode = \"rust_normalized\"\nnormalize_target = 2.5").unwrap();
+        assert_eq!(cfg.normalize_target, 2.5);
+        // mode name roundtrip
+        for name in ["rust_pegrad", "rust_clipped", "rust_normalized"] {
+            assert_eq!(RunMode::parse(name).unwrap().name(), name);
+        }
     }
 
     #[test]

@@ -16,8 +16,9 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::{MetricsLogger, StepRecord};
 use crate::data::loader::{prepare, PreparedBatch, Prefetcher};
 use crate::data::{digits, regression, synth, Dataset};
+use crate::engine::{EngineMode, FusedEngine};
 use crate::nn::loss::Targets;
-use crate::nn::{Mlp, ModelSpec};
+use crate::nn::{Loss, Mlp, ModelSpec};
 use crate::optim::{Adam, Optimizer, Sgd};
 use crate::privacy::RdpAccountant;
 use crate::runtime::executable::{fetch_f32, Arg, Entry};
@@ -48,7 +49,11 @@ pub struct RunSummary {
 pub struct Trainer {
     pub cfg: Config,
     pub spec: ModelSpec,
-    registry: Registry,
+    /// Artifact registry — `None` for the rust-engine modes, which need
+    /// neither the PJRT runtime nor AOT artifacts.
+    registry: Option<Registry>,
+    /// The fused streaming engine — `Some` exactly for the rust modes.
+    engine: Option<FusedEngine>,
     train: Dataset,
     eval: Dataset,
     sampler: Box<dyn Sampler>,
@@ -96,10 +101,25 @@ impl Profile {
 impl Trainer {
     pub fn new(cfg: Config) -> Result<Trainer> {
         cfg.validate()?;
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
-        let registry = Registry::new(manifest);
-        let preset = registry.manifest.preset(&cfg.preset)?.clone();
-        let spec = preset.spec()?;
+        let (registry, spec) = if cfg.mode.is_rust_engine() {
+            // model straight from config; no manifest, no PJRT
+            let act = ops::Activation::parse(&cfg.model_activation).ok_or_else(|| {
+                anyhow!("unknown model.activation '{}'", cfg.model_activation)
+            })?;
+            let loss = Loss::parse(&cfg.model_loss)
+                .ok_or_else(|| anyhow!("unknown model.loss '{}'", cfg.model_loss))?;
+            let spec = ModelSpec::new(cfg.model_dims.clone(), act, loss, cfg.model_m)?;
+            (None, spec)
+        } else {
+            let manifest = Manifest::load(&cfg.artifacts_dir)?;
+            let registry = Registry::new(manifest);
+            let spec = registry.manifest.preset(&cfg.preset)?.spec()?;
+            (Some(registry), spec)
+        };
+        let engine = cfg
+            .mode
+            .is_rust_engine()
+            .then(|| FusedEngine::new(spec.clone()));
 
         let mut rng = Rng::new(cfg.seed);
         let (train, eval) = build_datasets(&cfg, &spec, &mut rng)?;
@@ -148,6 +168,7 @@ impl Trainer {
             cfg,
             spec,
             registry,
+            engine,
             train,
             eval,
             sampler,
@@ -192,6 +213,9 @@ impl Trainer {
             RunMode::Pegrad => "step_pegrad",
             RunMode::RustOptim => "grads_pegrad",
             RunMode::Clipped => "step_clipped",
+            RunMode::RustPegrad | RunMode::RustClipped | RunMode::RustNormalized => {
+                unreachable!("rust-engine modes compile no artifacts")
+            }
         }
     }
 
@@ -222,8 +246,15 @@ impl Trainer {
 
     /// Run the configured number of steps; returns the summary.
     pub fn run(&mut self) -> Result<RunSummary> {
-        let entry = self.registry.get(&self.cfg.preset, self.entry_name())?;
-        let fwd_entry = self.registry.get(&self.cfg.preset, "fwd")?;
+        let (entry, fwd_entry) = if self.cfg.mode.is_rust_engine() {
+            (None, None)
+        } else {
+            let reg = self.registry.as_ref().expect("artifact modes keep a registry");
+            (
+                Some(reg.get(&self.cfg.preset, self.entry_name())?),
+                Some(reg.get(&self.cfg.preset, "fwd")?),
+            )
+        };
         let m = self.spec.m;
         let n = self.spec.n_layers();
         let total = Timer::start();
@@ -275,7 +306,7 @@ impl Trainer {
 
             let lr = self.cfg.schedule.at(self.step);
             let t = Timer::start();
-            let rec = self.execute_step(&entry, &batch, lr)?;
+            let rec = self.execute_step(entry.as_ref(), &batch, lr)?;
             let step_ms = t.millis();
             curve.push((self.step, rec.loss));
             self.metrics.record(&StepRecord { step_ms, ..rec });
@@ -284,7 +315,7 @@ impl Trainer {
                 && self.step > 0
                 && self.step % self.cfg.eval_every == 0
             {
-                let (el, ea) = self.evaluate(&fwd_entry)?;
+                let (el, ea) = self.evaluate(fwd_entry.as_ref())?;
                 self.metrics.record_eval(self.step, el, ea);
             }
             if self.cfg.checkpoint_every > 0
@@ -308,7 +339,7 @@ impl Trainer {
         drop(sel_tx);
 
         self.sync_params_to_host()?;
-        let (eval_loss, eval_acc) = self.evaluate(&fwd_entry)?;
+        let (eval_loss, eval_acc) = self.evaluate(fwd_entry.as_ref())?;
         self.metrics.record_eval(self.step, eval_loss, eval_acc);
         let _ = n;
         log::info!(
@@ -336,16 +367,71 @@ impl Trainer {
         })
     }
 
+    /// One fused-engine step: engine forward+backward, optional DP noise,
+    /// optimizer update, sampler feedback. No artifacts, no device I/O.
+    fn execute_step_rust(&mut self, batch: &PreparedBatch, lr: f32) -> Result<StepRecord> {
+        let mode = match self.cfg.mode {
+            RunMode::RustPegrad => EngineMode::Mean,
+            RunMode::RustClipped => EngineMode::Clip {
+                c: self.cfg.privacy.as_ref().expect("validated").clip_c,
+                mean: true,
+            },
+            RunMode::RustNormalized => EngineMode::Normalize {
+                target: self.cfg.normalize_target,
+            },
+            _ => unreachable!("execute_step_rust called for an artifact mode"),
+        };
+        let engine = self.engine.as_mut().expect("rust modes own an engine");
+        let stats = engine.step(&self.params, &batch.x, &batch.y, mode);
+
+        if let (RunMode::RustClipped, Some(p)) = (self.cfg.mode, self.cfg.privacy.clone()) {
+            if p.noise_sigma > 0.0 {
+                // DP-SGD gaussian noise on the MEAN clipped gradient:
+                // sigma * C / m per coordinate, from the run RNG.
+                let scale = p.noise_sigma * p.clip_c / self.spec.m as f32;
+                let rng = &mut self.rng;
+                for g in self.engine.as_mut().unwrap().grads_mut() {
+                    for v in g.data_mut() {
+                        *v += scale * rng.next_normal();
+                    }
+                }
+            }
+            if let Some(acc) = &mut self.accountant {
+                acc.observe_steps(1);
+            }
+        }
+
+        self.optimizer.step(
+            &mut self.params,
+            self.engine.as_ref().unwrap().grads(),
+            lr,
+        );
+        // norm feedback (§1 loop): the engine computed them in-pass
+        {
+            let engine = self.engine.as_ref().unwrap();
+            self.sampler.observe(&batch.indices, engine.norms());
+        }
+        let norms: Vec<f32> = self.engine.as_ref().unwrap().norms().to_vec();
+        Ok(self.record(stats.mean_loss, Some(&norms), stats.clip_frac, lr))
+    }
+
     /// Execute one step in the configured mode; returns the step record
     /// (with step_ms left 0 — the caller times the whole thing).
     fn execute_step(
         &mut self,
-        entry: &std::rc::Rc<Entry>,
+        entry: Option<&std::rc::Rc<Entry>>,
         batch: &PreparedBatch,
         lr: f32,
     ) -> Result<StepRecord> {
+        if self.cfg.mode.is_rust_engine() {
+            return self.execute_step_rust(batch, lr);
+        }
+        let entry = entry.expect("artifact modes pass an entry");
         let n = self.spec.n_layers();
         match self.cfg.mode {
+            RunMode::RustPegrad | RunMode::RustClipped | RunMode::RustNormalized => {
+                unreachable!("handled above")
+            }
             RunMode::RustOptim => {
                 // host path: grads come back, rust optimizer applies them
                 let mut args: Vec<Arg> = self.params.iter().map(Arg::from).collect();
@@ -503,27 +589,43 @@ impl Trainer {
     }
 
     /// Evaluate mean loss (and accuracy for CE) on the eval set, in
-    /// batches of exactly m (artifact shapes are static).
-    fn evaluate(&mut self, fwd: &std::rc::Rc<Entry>) -> Result<(f32, Option<f32>)> {
+    /// batches of exactly m (artifact shapes are static; the rust-engine
+    /// path keeps the same batching for comparable numbers).
+    fn evaluate(&mut self, fwd: Option<&std::rc::Rc<Entry>>) -> Result<(f32, Option<f32>)> {
         self.sync_params_to_host()?;
         let m = self.spec.m;
         let n_batches = self.eval.len() / m;
         if n_batches == 0 {
             return Ok((f32::NAN, None));
         }
+        let reference = self
+            .cfg
+            .mode
+            .is_rust_engine()
+            .then(|| Mlp::new(self.spec.clone(), self.params.clone()));
         let mut loss_sum = 0f64;
         let mut hits = 0usize;
         let mut seen = 0usize;
         for b in 0..n_batches {
             let idx: Vec<usize> = (b * m..(b + 1) * m).collect();
             let (x, y) = self.eval.batch(&idx);
-            let mut args: Vec<Arg> = self.params.iter().map(Arg::from).collect();
-            args.push(Arg::from(&x));
-            args.push(Arg::from(&y));
-            let out = fwd.call(&args)?;
-            loss_sum += out[0].item() as f64;
+            let logits;
+            if let Some(mlp) = &reference {
+                let f = mlp.forward(&x, &y);
+                loss_sum +=
+                    (f.per_ex_loss.iter().sum::<f32>() / f.per_ex_loss.len() as f32) as f64;
+                logits = f.logits;
+            } else {
+                let fwd = fwd.expect("artifact modes pass a fwd entry");
+                let mut args: Vec<Arg> = self.params.iter().map(Arg::from).collect();
+                args.push(Arg::from(&x));
+                args.push(Arg::from(&y));
+                let mut out = fwd.call(&args)?;
+                loss_sum += out[0].item() as f64;
+                logits = out.swap_remove(2);
+            }
             if let Targets::Classes(cls) = &y {
-                let pred = ops::row_argmax(&out[2]);
+                let pred = ops::row_argmax(&logits);
                 hits += pred
                     .iter()
                     .zip(cls)

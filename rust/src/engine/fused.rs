@@ -1,0 +1,527 @@
+//! The fused streaming per-example-gradient engine.
+//!
+//! One `step()` = exactly one forward + one backward traversal:
+//!
+//! * forward: augmentation and the §4 row norms `||Haug_j^(i-1)||²` are
+//!   computed in the same pass that builds each layer's input (the +1 for
+//!   the bias column included), and `phi'(z)` is stored instead of `z` so
+//!   the backward never re-evaluates activations;
+//! * backward: each `Zbar^(i)` is produced into a ping-pong buffer; its
+//!   row norms `||Zbar_j^(i)||²` are computed **inside the same row-band
+//!   loop** that forms `Zbar^(i-1)` (threadpool-sized scoped bands, the
+//!   same blocking discipline as `ops::matmul_band`), and the intermediate
+//!   is dropped immediately — O(1) layers of Zbar live in norms/mean mode;
+//! * gradients: accumulated in place into preallocated buffers via the
+//!   fused `C += Haugᵀ·diag(coef)·Zbar` kernel
+//!   ([`crate::tensor::ops::matmul_tn_coef_acc_slices`]), so the §6
+//!   rescale (`diag(c)·Zbar`) never materializes and the unclipped
+//!   gradient is never formed in clipped mode.
+//!
+//! §6 modes (clip / normalize) need the full per-example norm before any
+//! coefficient can be applied, so they retain the Zbars in reusable
+//! workspace buffers and run the rescale matmuls after the traversal —
+//! still one forward + one backward worth of matmul flops total (the
+//! rescale matmul *replaces* the plain gradient matmul; the instrumented
+//! flop counter proves this, see `tests/fused_engine.rs`).
+
+use crate::nn::loss::Targets;
+use crate::nn::ModelSpec;
+use crate::pegrad::PerExampleNorms;
+use crate::tensor::{ops, Tensor};
+
+use super::workspace::Workspace;
+
+/// Below this many multiply-adds a layer's backward runs single-threaded.
+const ENGINE_PAR_THRESHOLD: usize = 64 * 64 * 16;
+
+/// What the engine folds into the gradient accumulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EngineMode {
+    /// Mean gradient + per-example norms in one streamed pass
+    /// (coefficients `1/m` known upfront — no Zbar retention).
+    Mean,
+    /// §6 clipping: `Σ_j min(1, c/||g_j||)·g_j`; `mean` divides by m.
+    Clip { c: f32, mean: bool },
+    /// §6 normalized updates: mean of per-example gradients rescaled to
+    /// the common norm `target`.
+    Normalize { target: f32 },
+}
+
+/// Scalars a step reports (everything else is read via getters).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineStats {
+    pub mean_loss: f32,
+    /// Fraction of examples with `||g_j|| > c` (clip mode only).
+    pub clip_frac: Option<f32>,
+}
+
+/// The engine: a model shape plus its reusable workspace.
+pub struct FusedEngine {
+    spec: ModelSpec,
+    ws: Workspace,
+}
+
+impl FusedEngine {
+    pub fn new(spec: ModelSpec) -> FusedEngine {
+        let ws = Workspace::new(&spec);
+        FusedEngine { spec, ws }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Accumulated gradients of the last step (Σ coef_j · g_j).
+    pub fn grads(&self) -> &[Tensor] {
+        &self.ws.grads
+    }
+
+    /// Mutable access (DP noise is added in place by the trainer).
+    pub fn grads_mut(&mut self) -> &mut [Tensor] {
+        &mut self.ws.grads
+    }
+
+    /// Squared per-example gradient norms `s_j = Σ_i s_j^(i)`.
+    pub fn s_total(&self) -> &[f32] {
+        &self.ws.s_total
+    }
+
+    /// Per-example gradient L2 norms (sqrt of `s_total`).
+    pub fn norms(&self) -> &[f32] {
+        &self.ws.norms
+    }
+
+    pub fn per_ex_loss(&self) -> &[f32] {
+        &self.ws.per_ex_loss
+    }
+
+    /// Materialize the §4 norms in the oracle's layout (tests/CLI).
+    pub fn per_example_norms(&self) -> PerExampleNorms {
+        let n = self.spec.n_layers();
+        let m = self.spec.m;
+        let mut s_layers = vec![vec![0f32; n]; m];
+        for i in 0..n {
+            for j in 0..m {
+                s_layers[j][i] = self.ws.z_sq[i][j] * self.ws.h_sq[i][j];
+            }
+        }
+        PerExampleNorms {
+            s_layers,
+            s_total: self.ws.s_total.clone(),
+        }
+    }
+
+    /// Bytes of live tensor state (the e8 peak-memory metric).
+    pub fn live_bytes(&self) -> usize {
+        self.ws.live_bytes()
+    }
+
+    /// One fused step: forward + streaming backward + mode-dependent
+    /// gradient accumulation. Results are read via the getters.
+    pub fn step(
+        &mut self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Targets,
+        mode: EngineMode,
+    ) -> EngineStats {
+        let spec = &self.spec;
+        let n = spec.n_layers();
+        let m = spec.m;
+        assert_eq!(x.dims(), &[m, spec.in_dim()], "engine batch shape");
+        assert_eq!(y.len(), m, "engine target count");
+        assert_eq!(params.len(), n, "engine param count");
+        let retain_zbars = !matches!(mode, EngineMode::Mean);
+        if retain_zbars {
+            self.ws.ensure_zbars();
+        }
+        let Workspace {
+            dims,
+            hs,
+            dphi,
+            act,
+            zping,
+            zpong,
+            zbars,
+            logits,
+            per_ex_loss,
+            h_sq,
+            z_sq,
+            s_total,
+            norms,
+            coef,
+            grads,
+            ..
+        } = &mut self.ws;
+
+        // ---------------- forward (fused Haug norms, phi' capture) -------
+        let mut src_is_x = true;
+        for i in 0..n {
+            let d_in = dims[i];
+            let d_out = dims[i + 1];
+            {
+                let src: &[f32] = if src_is_x {
+                    x.data()
+                } else {
+                    &act[..m * d_in]
+                };
+                augment_rows(src, m, d_in, hs[i].data_mut(), &mut h_sq[i]);
+            }
+            ops::matmul_into_slices(
+                hs[i].data(),
+                params[i].data(),
+                &mut zping[..m * d_out],
+                m,
+                d_in + 1,
+                d_out,
+            );
+            crate::nn::count_flops(2 * m as u64 * (d_in + 1) as u64 * d_out as u64);
+            if i < n - 1 {
+                let z = &zping[..m * d_out];
+                let a = &mut act[..m * d_out];
+                let dp = dphi[i].data_mut();
+                for ((av, dv), &zv) in a.iter_mut().zip(dp.iter_mut()).zip(z) {
+                    *av = spec.activation.apply(zv);
+                    *dv = spec.activation.grad(zv);
+                }
+                src_is_x = false;
+            } else {
+                logits.data_mut().copy_from_slice(&zping[..m * d_out]);
+            }
+        }
+        spec.loss.per_example_into(logits, y, per_ex_loss);
+
+        // ---------------- backward (streaming, fused row norms) ----------
+        spec.loss.grad_z_into_slice(logits, y, &mut zping[..m * dims[n]]);
+        if let EngineMode::Mean = mode {
+            let w = 1.0 / m as f32;
+            for c in coef.iter_mut() {
+                *c = w;
+            }
+        }
+        for g in grads.iter_mut() {
+            for v in g.data_mut() {
+                *v = 0.0;
+            }
+        }
+        for i in (0..n).rev() {
+            let d_out = dims[i + 1];
+            {
+                let cur = &zping[..m * d_out];
+                if retain_zbars {
+                    zbars[i].data_mut().copy_from_slice(cur);
+                } else {
+                    ops::matmul_tn_coef_acc_slices(
+                        hs[i].data(),
+                        cur,
+                        Some(&coef[..]),
+                        grads[i].data_mut(),
+                        m,
+                        dims[i] + 1,
+                        d_out,
+                    );
+                    crate::nn::count_flops(2 * m as u64 * (dims[i] + 1) as u64 * d_out as u64);
+                }
+                if i > 0 {
+                    let d_in = dims[i];
+                    backprop_layer(
+                        cur,
+                        d_out,
+                        params[i].data(),
+                        dphi[i - 1].data(),
+                        d_in,
+                        &mut zpong[..m * d_in],
+                        &mut z_sq[i],
+                        m,
+                    );
+                    crate::nn::count_flops(2 * m as u64 * (d_in + 1) as u64 * d_out as u64);
+                } else {
+                    row_sq_into(cur, m, d_out, &mut z_sq[0]);
+                }
+            }
+            if i > 0 {
+                std::mem::swap(zping, zpong);
+            }
+        }
+
+        // ---------------- §4 totals ---------------------------------------
+        for j in 0..m {
+            let mut s = 0f32;
+            for i in 0..n {
+                s += z_sq[i][j] * h_sq[i][j];
+            }
+            s_total[j] = s;
+            norms[j] = s.max(0.0).sqrt();
+        }
+
+        // ---------------- §6 coefficients + deferred accumulation --------
+        let mut clip_frac = None;
+        match mode {
+            EngineMode::Mean => {}
+            EngineMode::Clip { c, mean } => {
+                let mut clipped = 0usize;
+                for (w, &s) in coef.iter_mut().zip(s_total.iter()) {
+                    let norm = s.max(1e-30).sqrt();
+                    let mut cf = (c / norm).min(1.0);
+                    if cf < 1.0 {
+                        clipped += 1;
+                    }
+                    if mean {
+                        cf /= m as f32;
+                    }
+                    *w = cf;
+                }
+                clip_frac = Some(clipped as f32 / m as f32);
+            }
+            EngineMode::Normalize { target } => {
+                for (w, &s) in coef.iter_mut().zip(s_total.iter()) {
+                    *w = target / s.max(1e-24).sqrt() / m as f32;
+                }
+            }
+        }
+        if retain_zbars {
+            for i in 0..n {
+                ops::matmul_tn_coef_acc_slices(
+                    hs[i].data(),
+                    zbars[i].data(),
+                    Some(&coef[..]),
+                    grads[i].data_mut(),
+                    m,
+                    dims[i] + 1,
+                    dims[i + 1],
+                );
+                crate::nn::count_flops(2 * m as u64 * (dims[i] + 1) as u64 * dims[i + 1] as u64);
+            }
+        }
+
+        let mean_loss = per_ex_loss.iter().sum::<f32>() / m as f32;
+        EngineStats {
+            mean_loss,
+            clip_frac,
+        }
+    }
+}
+
+/// Copy `src` rows into the augmented buffer (bias column = 1) while
+/// accumulating `||Haug_j||²` — the fused §4 forward-side norm.
+fn augment_rows(src: &[f32], m: usize, d: usize, out: &mut [f32], h_sq: &mut [f32]) {
+    debug_assert_eq!(src.len(), m * d);
+    debug_assert_eq!(out.len(), m * (d + 1));
+    debug_assert_eq!(h_sq.len(), m);
+    for j in 0..m {
+        let s = &src[j * d..(j + 1) * d];
+        let o = &mut out[j * (d + 1)..(j + 1) * (d + 1)];
+        let mut acc = 0f64;
+        for (ov, &sv) in o[..d].iter_mut().zip(s) {
+            *ov = sv;
+            acc += (sv as f64) * (sv as f64);
+        }
+        o[d] = 1.0;
+        h_sq[j] = (acc + 1.0) as f32; // +1: the bias column of Haug
+    }
+}
+
+fn row_sq_into(src: &[f32], m: usize, d: usize, out: &mut [f32]) {
+    debug_assert_eq!(src.len(), m * d);
+    debug_assert_eq!(out.len(), m);
+    for j in 0..m {
+        let mut acc = 0f64;
+        for &v in &src[j * d..(j + 1) * d] {
+            acc += (v as f64) * (v as f64);
+        }
+        out[j] = acc as f32;
+    }
+}
+
+/// One example-row band of the fused backward step for layer i:
+/// `Zbar^(i-1)[j, p] = (Σ_q Zbar^(i)[j, q]·W[p, q]) · phi'(z^(i-1))[j, p]`
+/// (the bias row `p = d_in` of W is skipped — that is `drop_last_col`),
+/// with `||Zbar_j^(i)||²` accumulated in the same row visit.
+#[allow(clippy::too_many_arguments)]
+fn backprop_band(
+    zbar: &[f32],
+    d_out: usize,
+    w: &[f32],
+    dphi: &[f32],
+    d_in: usize,
+    out: &mut [f32],
+    z_sq: &mut [f32],
+    j0: usize,
+    j1: usize,
+) {
+    for j in j0..j1 {
+        let zrow = &zbar[j * d_out..(j + 1) * d_out];
+        let mut acc = 0f64;
+        for &v in zrow {
+            acc += (v as f64) * (v as f64);
+        }
+        z_sq[j - j0] = acc as f32;
+        let drow = &dphi[j * d_in..(j + 1) * d_in];
+        let orow = &mut out[(j - j0) * d_in..(j - j0 + 1) * d_in];
+        for p in 0..d_in {
+            let wrow = &w[p * d_out..(p + 1) * d_out];
+            let mut dot = 0f32;
+            for (&zv, &wv) in zrow.iter().zip(wrow) {
+                dot += zv * wv;
+            }
+            orow[p] = dot * drow[p];
+        }
+    }
+}
+
+/// Row-band-parallel driver for [`backprop_band`] (scoped threads borrow
+/// the workspace directly — no copies, no allocations).
+#[allow(clippy::too_many_arguments)]
+fn backprop_layer(
+    zbar: &[f32],
+    d_out: usize,
+    w: &[f32],
+    dphi: &[f32],
+    d_in: usize,
+    out: &mut [f32],
+    z_sq: &mut [f32],
+    m: usize,
+) {
+    debug_assert_eq!(zbar.len(), m * d_out);
+    debug_assert_eq!(w.len(), (d_in + 1) * d_out);
+    debug_assert_eq!(dphi.len(), m * d_in);
+    debug_assert_eq!(out.len(), m * d_in);
+    debug_assert_eq!(z_sq.len(), m);
+    if m * d_in * d_out <= ENGINE_PAR_THRESHOLD || m == 1 {
+        backprop_band(zbar, d_out, w, dphi, d_in, out, z_sq, 0, m);
+        return;
+    }
+    let bands = crate::util::threadpool::bands().min(m);
+    let rows_per = m.div_ceil(bands);
+    std::thread::scope(|s| {
+        for (bi, (ochunk, sqchunk)) in out
+            .chunks_mut(rows_per * d_in)
+            .zip(z_sq.chunks_mut(rows_per))
+            .enumerate()
+        {
+            let j0 = bi * rows_per;
+            s.spawn(move || {
+                let j1 = j0 + sqchunk.len();
+                backprop_band(zbar, d_out, w, dphi, d_in, ochunk, sqchunk, j0, j1);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Loss, Mlp};
+    use crate::pegrad;
+    use crate::tensor::ops::Activation;
+    use crate::tensor::Rng;
+    use crate::util::prop;
+
+    fn setup(
+        dims: Vec<usize>,
+        act: Activation,
+        loss: Loss,
+        m: usize,
+        seed: u64,
+    ) -> (Mlp, Tensor, Targets) {
+        let spec = ModelSpec::new(dims, act, loss, m).unwrap();
+        let mut rng = Rng::new(seed);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let x = Tensor::randn(vec![m, spec.in_dim()], &mut rng);
+        let y = match loss {
+            Loss::SoftmaxCe => {
+                Targets::Classes((0..m).map(|j| (j % spec.out_dim()) as i32).collect())
+            }
+            Loss::Mse => Targets::Dense(Tensor::randn(vec![m, spec.out_dim()], &mut rng)),
+        };
+        (mlp, x, y)
+    }
+
+    #[test]
+    fn mean_mode_matches_batched_backward() {
+        let (mlp, x, y) = setup(vec![5, 9, 7, 4], Activation::Tanh, Loss::SoftmaxCe, 6, 3);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        let stats = engine.step(&mlp.params, &x, &y, EngineMode::Mean);
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let mean_ref = fwd.per_ex_loss.iter().sum::<f32>() / 6.0;
+        prop::assert_close(stats.mean_loss as f64, mean_ref as f64, 1e-4).unwrap();
+        for (g, want) in engine.grads().iter().zip(&bwd.grads) {
+            let scaled = ops::scale(want, 1.0 / 6.0);
+            prop::assert_all_close(g.data(), scaled.data(), 1e-3).unwrap();
+        }
+        let norms = pegrad::per_example_norms(&fwd, &bwd);
+        prop::assert_all_close(engine.s_total(), &norms.s_total, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn clip_mode_matches_clip_pipeline() {
+        let (mlp, x, y) = setup(vec![6, 10, 5], Activation::Relu, Loss::SoftmaxCe, 8, 4);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        let c = 0.3f32;
+        let stats = engine.step(&mlp.params, &x, &y, EngineMode::Clip { c, mean: false });
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let (grads, norms, frac) = pegrad::clip::clip_pipeline(&mlp, &fwd, &bwd, c);
+        prop::assert_all_close(engine.s_total(), &norms.s_total, 1e-3).unwrap();
+        assert_eq!(stats.clip_frac, Some(frac));
+        for (g, want) in engine.grads().iter().zip(&grads) {
+            prop::assert_all_close(g.data(), want.data(), 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn normalize_mode_matches_normalized_grads() {
+        let (mlp, x, y) = setup(vec![4, 8, 3], Activation::Sigmoid, Loss::Mse, 5, 5);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        let t = 2.5f32;
+        engine.step(&mlp.params, &x, &y, EngineMode::Normalize { target: t });
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let norms = pegrad::per_example_norms(&fwd, &bwd);
+        let want = pegrad::normalized_grads(&fwd, &bwd, &norms, t);
+        for (g, w) in engine.grads().iter().zip(&want) {
+            prop::assert_all_close(g.data(), w.data(), 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn per_example_norms_layout_matches_oracle() {
+        let (mlp, x, y) = setup(vec![3, 6, 6, 2], Activation::Gelu, Loss::Mse, 4, 6);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        engine.step(&mlp.params, &x, &y, EngineMode::Mean);
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let want = pegrad::per_example_norms(&fwd, &bwd);
+        let got = engine.per_example_norms();
+        for j in 0..4 {
+            prop::assert_all_close(&got.s_layers[j], &want.s_layers[j], 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_bitwise_deterministic() {
+        let (mlp, x, y) = setup(vec![5, 7, 4], Activation::Relu, Loss::SoftmaxCe, 6, 7);
+        let (mlp2, x2, y2) = setup(vec![4, 9, 3], Activation::Tanh, Loss::SoftmaxCe, 6, 8);
+        // reused engine: unrelated clip step in between must not leak state
+        let mut reused = FusedEngine::new(mlp.spec.clone());
+        reused.step(&mlp.params, &x, &y, EngineMode::Clip { c: 0.1, mean: true });
+        reused.step(&mlp.params, &x, &y, EngineMode::Mean);
+        let mut fresh = FusedEngine::new(mlp.spec.clone());
+        fresh.step(&mlp.params, &x, &y, EngineMode::Mean);
+        for (a, b) in reused.grads().iter().zip(fresh.grads()) {
+            assert_eq!(a.data(), b.data(), "workspace reuse changed results");
+        }
+        assert_eq!(reused.s_total(), fresh.s_total());
+        // different-shape engines don't interact
+        let mut other = FusedEngine::new(mlp2.spec.clone());
+        other.step(&mlp2.params, &x2, &y2, EngineMode::Mean);
+    }
+
+    #[test]
+    fn single_layer_model_works() {
+        let (mlp, x, y) = setup(vec![4, 3], Activation::Identity, Loss::Mse, 3, 9);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        engine.step(&mlp.params, &x, &y, EngineMode::Clip { c: 1.0, mean: false });
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let (grads, norms, _) = pegrad::clip::clip_pipeline(&mlp, &fwd, &bwd, 1.0);
+        prop::assert_all_close(engine.s_total(), &norms.s_total, 1e-3).unwrap();
+        prop::assert_all_close(engine.grads()[0].data(), grads[0].data(), 1e-3).unwrap();
+    }
+}

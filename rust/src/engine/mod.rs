@@ -1,0 +1,32 @@
+//! Fused streaming per-example-gradient execution engine (paper §4–§6).
+//!
+//! Code ↔ paper map:
+//!
+//! * **§2 (model)** — [`workspace::Workspace`] holds the augmented inputs
+//!   `Haug^(i-1)` (bias column folded) the factorization consumes; the
+//!   forward pass writes them once per step into preallocated buffers.
+//! * **§4 (factored norms)** — `s_j^(i) = ||Zbar_j^(i)||²·||Haug_j^(i-1)||²`.
+//!   The `Haug` factor is computed inside the augmentation copy; the
+//!   `Zbar` factor is computed inside the backward row-band kernel that
+//!   forms the next layer's `Zbar` ([`fused::FusedEngine::step`]) — the
+//!   norms are a by-product of the traversal, not a second pass over
+//!   materialized intermediates.
+//! * **§5 (cost)** — one forward + one backward worth of matmul flops per
+//!   step in every mode (`tests/fused_engine.rs` proves it with the
+//!   instrumented flop counter); the trick's extra work is the O(mnp)
+//!   row-norm accumulation.
+//! * **§6 (clipping / normalized updates)** — the rescale
+//!   `Haugᵀ(diag(c)·Zbar)` is a single fused kernel
+//!   ([`crate::tensor::ops::matmul_tn_coef_acc_slices`]): coefficients
+//!   multiply on the fly, the rescaled `Zbar` never materializes, and in
+//!   clipped mode the unclipped gradient is never formed at all.
+//!
+//! The two-pass reference (`nn::Mlp::forward_backward` →
+//! `pegrad::per_example_norms` → `pegrad::clipped_grads`) stays in-tree as
+//! the correctness oracle; `benches/e8_fused.rs` measures the gap.
+
+pub mod fused;
+pub mod workspace;
+
+pub use fused::{EngineMode, EngineStats, FusedEngine};
+pub use workspace::Workspace;

@@ -1,0 +1,154 @@
+//! Preallocated buffers for the fused streaming engine.
+//!
+//! Every tensor the engine touches per step lives here and is allocated
+//! once at construction ("warmup"); a training step performs **zero tensor
+//! allocations** — buffers are overwritten in place. This is the memory
+//! half of the §5 argument: the trick's extra state is O(m·n) scalars, not
+//! O(m·params) materialized per-example gradients.
+
+use crate::nn::ModelSpec;
+use crate::tensor::Tensor;
+
+/// Reusable per-step state for one `(ModelSpec, m)` shape.
+pub struct Workspace {
+    pub(crate) m: usize,
+    pub(crate) dims: Vec<usize>,
+    /// `Haug^(i-1)` per layer i: `[m, dims[i]+1]` — retained by the forward
+    /// pass (standard backprop memory; the engine drops everything else).
+    pub(crate) hs: Vec<Tensor>,
+    /// `phi'(z^(i))` for hidden layers `i = 0..n-1`: `[m, dims[i+1]]`.
+    /// Stored at forward time so the backward never revisits `z`.
+    pub(crate) dphi: Vec<Tensor>,
+    /// Activation scratch (current layer input), `m * max_hidden_width`.
+    pub(crate) act: Vec<f32>,
+    /// Ping-pong Zbar buffers, `m * max_layer_width` each: layer `i`'s
+    /// Zbar is dropped as soon as `i-1`'s is formed (O(1) layers live),
+    /// except in the coefficient-rescale modes which copy into `zbars`.
+    pub(crate) zping: Vec<f32>,
+    pub(crate) zpong: Vec<f32>,
+    /// Retained Zbars for §6 clip/normalize (coefficients need the full
+    /// per-example norm before any rescaled gradient can be accumulated).
+    /// Allocated lazily on the first such step.
+    pub(crate) zbars: Vec<Tensor>,
+    pub(crate) logits: Tensor,
+    pub(crate) per_ex_loss: Vec<f32>,
+    /// `||Haug_j^(i-1)||²` / `||Zbar_j^(i)||²` per layer — the §4 factors.
+    pub(crate) h_sq: Vec<Vec<f32>>,
+    pub(crate) z_sq: Vec<Vec<f32>>,
+    pub(crate) s_total: Vec<f32>,
+    pub(crate) norms: Vec<f32>,
+    /// Per-example coefficients folded into the gradient matmul.
+    pub(crate) coef: Vec<f32>,
+    /// Gradient accumulators, one per weight matrix.
+    pub(crate) grads: Vec<Tensor>,
+}
+
+impl Workspace {
+    pub fn new(spec: &ModelSpec) -> Workspace {
+        let m = spec.m;
+        let dims = spec.dims.clone();
+        let n = spec.n_layers();
+        let hs = (0..n).map(|i| Tensor::zeros(vec![m, dims[i] + 1])).collect();
+        let dphi = (0..n.saturating_sub(1))
+            .map(|i| Tensor::zeros(vec![m, dims[i + 1]]))
+            .collect();
+        let max_hidden = dims[1..n].iter().copied().max().unwrap_or(0);
+        let max_width = dims[1..].iter().copied().max().unwrap_or(0);
+        let grads = spec
+            .weight_shapes()
+            .into_iter()
+            .map(|(a, b)| Tensor::zeros(vec![a, b]))
+            .collect();
+        Workspace {
+            m,
+            hs,
+            dphi,
+            act: vec![0.0; m * max_hidden],
+            zping: vec![0.0; m * max_width],
+            zpong: vec![0.0; m * max_width],
+            zbars: Vec::new(),
+            logits: Tensor::zeros(vec![m, *dims.last().unwrap()]),
+            per_ex_loss: vec![0.0; m],
+            h_sq: vec![vec![0.0; m]; n],
+            z_sq: vec![vec![0.0; m]; n],
+            s_total: vec![0.0; m],
+            norms: vec![0.0; m],
+            coef: vec![0.0; m],
+            grads,
+            dims,
+        }
+    }
+
+    /// Allocate the retained-Zbar buffers (first §6-mode step only).
+    pub fn ensure_zbars(&mut self) {
+        if self.zbars.is_empty() {
+            let n = self.dims.len() - 1;
+            self.zbars = (0..n)
+                .map(|i| Tensor::zeros(vec![self.m, self.dims[i + 1]]))
+                .collect();
+        }
+    }
+
+    /// Bytes of live f32 tensor state currently held (the peak-memory
+    /// number `e8_fused` reports).
+    pub fn live_bytes(&self) -> usize {
+        let tensors: usize = self
+            .hs
+            .iter()
+            .chain(&self.dphi)
+            .chain(&self.zbars)
+            .chain(&self.grads)
+            .map(Tensor::numel)
+            .sum::<usize>()
+            + self.logits.numel();
+        let vecs: usize = self.act.len()
+            + self.zping.len()
+            + self.zpong.len()
+            + self.per_ex_loss.len()
+            + self.s_total.len()
+            + self.norms.len()
+            + self.coef.len()
+            + self.h_sq.iter().map(Vec::len).sum::<usize>()
+            + self.z_sq.iter().map(Vec::len).sum::<usize>();
+        4 * (tensors + vecs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Loss;
+    use crate::tensor::ops::Activation;
+
+    #[test]
+    fn shapes_follow_spec() {
+        let spec =
+            ModelSpec::new(vec![4, 8, 6, 3], Activation::Relu, Loss::SoftmaxCe, 5).unwrap();
+        let mut ws = Workspace::new(&spec);
+        assert_eq!(ws.hs.len(), 3);
+        assert_eq!(ws.hs[0].dims(), &[5, 5]);
+        assert_eq!(ws.hs[2].dims(), &[5, 7]);
+        assert_eq!(ws.dphi.len(), 2);
+        assert_eq!(ws.dphi[1].dims(), &[5, 6]);
+        assert_eq!(ws.act.len(), 5 * 8);
+        assert_eq!(ws.zping.len(), 5 * 8);
+        assert_eq!(ws.logits.dims(), &[5, 3]);
+        assert!(ws.zbars.is_empty());
+        let before = ws.live_bytes();
+        ws.ensure_zbars();
+        assert_eq!(ws.zbars.len(), 3);
+        assert!(ws.live_bytes() > before);
+        // idempotent
+        ws.ensure_zbars();
+        assert_eq!(ws.zbars.len(), 3);
+    }
+
+    #[test]
+    fn single_layer_model_has_no_hidden_state() {
+        let spec = ModelSpec::new(vec![4, 2], Activation::Identity, Loss::Mse, 3).unwrap();
+        let ws = Workspace::new(&spec);
+        assert!(ws.dphi.is_empty());
+        assert!(ws.act.is_empty());
+        assert_eq!(ws.zping.len(), 3 * 2);
+    }
+}

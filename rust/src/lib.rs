@@ -21,6 +21,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod nn;
 pub mod optim;
 pub mod pegrad;

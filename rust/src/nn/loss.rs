@@ -3,7 +3,7 @@
 //! The paper requires the loss to access parameters only through the z's;
 //! both losses here are functions of the final logits and targets only.
 
-use crate::tensor::{ops, Tensor};
+use crate::tensor::Tensor;
 
 /// Target values: class indices for CE, dense targets for MSE.
 #[derive(Debug, Clone, PartialEq)]
@@ -66,27 +66,42 @@ impl Loss {
     /// Per-example loss L^(j) (unreduced), mirroring
     /// `model.per_example_loss`.
     pub fn per_example(&self, logits: &Tensor, y: &Targets) -> Vec<f32> {
-        let m = logits.dims()[0];
+        let mut out = vec![0f32; logits.dims()[0]];
+        self.per_example_into(logits, y, &mut out);
+        out
+    }
+
+    /// `per_example` into a caller-owned buffer — the fused engine's
+    /// allocation-free path.
+    pub fn per_example_into(&self, logits: &Tensor, y: &Targets, out: &mut [f32]) {
+        let (m, d) = (logits.dims()[0], logits.dims()[1]);
+        assert_eq!(out.len(), m, "per_example_into buffer length");
         match (self, y) {
             (Loss::SoftmaxCe, Targets::Classes(cls)) => {
                 assert_eq!(cls.len(), m);
-                let logp = ops::log_softmax_rows(logits);
-                (0..m).map(|j| -logp.at2(j, cls[j] as usize)).collect()
+                for j in 0..m {
+                    let row = logits.row(j);
+                    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let lse = row
+                        .iter()
+                        .map(|&v| ((v - mx) as f64).exp())
+                        .sum::<f64>()
+                        .ln() as f32
+                        + mx;
+                    out[j] = lse - row[cls[j] as usize];
+                }
             }
             (Loss::Mse, Targets::Dense(t)) => {
                 assert_eq!(t.dims(), logits.dims());
-                let d = logits.dims()[1] as f32;
-                (0..m)
-                    .map(|j| {
-                        logits
-                            .row(j)
-                            .iter()
-                            .zip(t.row(j))
-                            .map(|(&a, &b)| (a - b) * (a - b))
-                            .sum::<f32>()
-                            / d
-                    })
-                    .collect()
+                for j in 0..m {
+                    out[j] = logits
+                        .row(j)
+                        .iter()
+                        .zip(t.row(j))
+                        .map(|(&a, &b)| (a - b) * (a - b))
+                        .sum::<f32>()
+                        / d as f32;
+                }
             }
             _ => panic!("loss/target kind mismatch: {:?}", self),
         }
@@ -95,24 +110,42 @@ impl Loss {
     /// dC/dz^(n) where C = SUM_j L^(j) (the paper's total cost). Row j is
     /// therefore dL^(j)/dz_j — exactly the Zbar^(n) the trick consumes.
     pub fn grad_z(&self, logits: &Tensor, y: &Targets) -> Tensor {
-        let m = logits.dims()[0];
+        let mut g = Tensor::zeros(logits.dims().to_vec());
+        self.grad_z_into_slice(logits, y, g.data_mut());
+        g
+    }
+
+    /// `grad_z` into a caller-owned row-major buffer — the fused engine's
+    /// allocation-free path.
+    pub fn grad_z_into_slice(&self, logits: &Tensor, y: &Targets, out: &mut [f32]) {
+        let (m, d) = (logits.dims()[0], logits.dims()[1]);
+        assert_eq!(out.len(), m * d, "grad_z_into_slice buffer length");
         match (self, y) {
             (Loss::SoftmaxCe, Targets::Classes(cls)) => {
-                let mut g = ops::softmax_rows(logits);
+                assert_eq!(cls.len(), m);
                 for j in 0..m {
-                    let c = cls[j] as usize;
-                    let v = g.at2(j, c);
-                    g.set2(j, c, v - 1.0);
+                    let row = logits.row(j);
+                    let orow = &mut out[j * d..(j + 1) * d];
+                    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0f64;
+                    for (o, &v) in orow.iter_mut().zip(row) {
+                        let e = ((v - mx) as f64).exp();
+                        *o = e as f32;
+                        sum += e;
+                    }
+                    let inv = (1.0 / sum) as f32;
+                    for o in orow.iter_mut() {
+                        *o *= inv;
+                    }
+                    orow[cls[j] as usize] -= 1.0;
                 }
-                g
             }
             (Loss::Mse, Targets::Dense(t)) => {
-                let d = logits.dims()[1] as f32;
-                let mut g = ops::sub(logits, t);
-                for v in g.data_mut() {
-                    *v *= 2.0 / d;
+                assert_eq!(t.dims(), logits.dims());
+                let s = 2.0 / d as f32;
+                for ((o, &a), &b) in out.iter_mut().zip(logits.data()).zip(t.data()) {
+                    *o = s * (a - b);
                 }
-                g
             }
             _ => panic!("loss/target kind mismatch: {:?}", self),
         }

@@ -86,23 +86,25 @@ impl Mlp {
         }
     }
 
-    /// Standard batched backprop over the captured forward.
-    pub fn backward(&self, fwd: &Forward, y: &Targets) -> Backward {
+    /// Streaming backward with a layer tap: walks layers top→down and
+    /// hands each `(i, Haug^(i-1), Zbar^(i))` to `tap` as it is produced,
+    /// then drops it — O(1) layers of `Zbar` live. This is the visitor the
+    /// paper's §4/§6 consumers build on; [`crate::engine::FusedEngine`] is
+    /// the workspace-backed, kernel-fused production version of the same
+    /// traversal.
+    pub fn backward_streamed<F: FnMut(usize, &Tensor, &Tensor)>(
+        &self,
+        fwd: &Forward,
+        y: &Targets,
+        mut tap: F,
+    ) {
         let n = self.spec.n_layers();
         let m = fwd.logits.dims()[0];
-        let mut zbars = vec![Tensor::zeros(vec![0]); n];
-        let mut grads = vec![Tensor::zeros(vec![0]); n];
 
         // dC/dz^(n) from the loss.
         let mut zbar = self.spec.loss.grad_z(&fwd.logits, y);
         for i in (0..n).rev() {
-            // dC/dW^(i) = Haug^(i-1)^T @ Zbar^(i)
-            let g = ops::matmul_tn(&fwd.hs[i], &zbar);
-            super::count_flops(
-                2 * m as u64 * fwd.hs[i].dims()[1] as u64 * zbar.dims()[1] as u64,
-            );
-            grads[i] = g;
-            zbars[i] = zbar.clone();
+            tap(i, &fwd.hs[i], &zbar);
             if i > 0 {
                 // dC/dHaug^(i-1) = Zbar^(i) @ W^(i)^T, drop bias column,
                 // then through the activation: dC/dz^(i-1).
@@ -118,6 +120,21 @@ impl Mlp {
                 zbar = dz;
             }
         }
+    }
+
+    /// Standard batched backprop over the captured forward: the retaining
+    /// tap (materializes every `Zbar^(i)` and `dC/dW^(i)`).
+    pub fn backward(&self, fwd: &Forward, y: &Targets) -> Backward {
+        let n = self.spec.n_layers();
+        let m = fwd.logits.dims()[0];
+        let mut zbars = vec![Tensor::zeros(vec![0]); n];
+        let mut grads = vec![Tensor::zeros(vec![0]); n];
+        self.backward_streamed(fwd, y, |i, haug, zbar| {
+            // dC/dW^(i) = Haug^(i-1)^T @ Zbar^(i)
+            grads[i] = ops::matmul_tn(haug, zbar);
+            super::count_flops(2 * m as u64 * haug.dims()[1] as u64 * zbar.dims()[1] as u64);
+            zbars[i] = zbar.clone();
+        });
         Backward { zbars, grads }
     }
 
@@ -243,6 +260,21 @@ mod tests {
         let measured = crate::nn::read_flops();
         let analytic = mlp.spec.flops_forward(8) + mlp.spec.flops_backward(8);
         assert_eq!(measured, analytic);
+    }
+
+    #[test]
+    fn backward_streamed_taps_match_backward() {
+        let (mlp, x, y) = tiny(vec![4, 8, 6, 3], Loss::SoftmaxCe, Activation::Relu, 5);
+        let fwd = mlp.forward(&x, &y);
+        let bwd = mlp.backward(&fwd, &y);
+        let mut seen = Vec::new();
+        mlp.backward_streamed(&fwd, &y, |i, haug, zbar| {
+            assert_eq!(haug.dims(), fwd.hs[i].dims());
+            assert_eq!(zbar.data(), bwd.zbars[i].data());
+            seen.push(i);
+        });
+        // top-down traversal, every layer visited exactly once
+        assert_eq!(seen, vec![2, 1, 0]);
     }
 
     #[test]

@@ -41,17 +41,11 @@ impl Optimizer for Sgd {
         for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
             if self.weight_decay > 0.0 {
                 // decoupled decay: p -= lr * wd * p
-                let decay = 1.0 - lr * self.weight_decay;
-                for v in p.data_mut() {
-                    *v *= decay;
-                }
+                ops::scale_in_place(p, 1.0 - lr * self.weight_decay);
             }
             if self.momentum > 0.0 {
                 let v = &mut self.velocity[i];
-                // v = mu*v + g
-                for (vv, &gv) in v.data_mut().iter_mut().zip(g.data()) {
-                    *vv = self.momentum * *vv + gv;
-                }
+                ops::decay_axpy(v, self.momentum, g);
                 if self.nesterov {
                     // p -= lr * (g + mu*v)
                     for ((pv, &gv), &vv) in

@@ -1,6 +1,8 @@
 //! Paper §6: per-example gradient clipping via Zbar row rescale + one
 //! extra matmul per layer.
 
+use crate::engine::{EngineMode, FusedEngine};
+use crate::nn::loss::Targets;
 use crate::nn::{Backward, Forward, Mlp};
 use crate::tensor::{ops, Tensor};
 
@@ -71,10 +73,28 @@ pub fn clip_pipeline(
     (grads, norms, clipped as f32 / coef.len() as f32)
 }
 
+/// §6 re-expressed as an engine consumer: one fused step (single
+/// forward + single backward traversal, rescale folded into the gradient
+/// matmul) instead of the three-pass `clip_pipeline`. Returns the same
+/// triple: (clipped grad SUM, squared per-example norms, clip fraction).
+pub fn clip_pipeline_fused(
+    engine: &mut FusedEngine,
+    params: &[Tensor],
+    x: &Tensor,
+    y: &Targets,
+    clip_c: f32,
+) -> (Vec<Tensor>, Vec<f32>, f32) {
+    let stats = engine.step(params, x, y, EngineMode::Clip { c: clip_c, mean: false });
+    (
+        engine.grads().to_vec(),
+        engine.s_total().to_vec(),
+        stats.clip_frac.unwrap_or(0.0),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::loss::Targets;
     use crate::nn::{Loss, ModelSpec};
     use crate::pegrad::naive::per_example_grads;
     use crate::tensor::ops::Activation;
@@ -114,6 +134,22 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn fused_pipeline_matches_two_pass() {
+        let (mlp, x, y) = setup(6, 9);
+        let c = 0.5f32;
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let (grads, norms, frac) = clip_pipeline(&mlp, &fwd, &bwd, c);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        let (fgrads, fs_total, ffrac) =
+            clip_pipeline_fused(&mut engine, &mlp.params, &x, &y, c);
+        assert_eq!(frac, ffrac);
+        crate::util::prop::assert_all_close(&fs_total, &norms.s_total, 1e-3).unwrap();
+        for (a, b) in fgrads.iter().zip(&grads) {
+            crate::util::prop::assert_all_close(a.data(), b.data(), 1e-3).unwrap();
+        }
     }
 
     #[test]

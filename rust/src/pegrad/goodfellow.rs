@@ -7,7 +7,8 @@
 //! Cost on top of a batched fwd+bwd: two row-wise squared sums and one
 //! product per layer — O(mnp) (§5).
 
-use crate::nn::{Backward, Forward};
+use crate::nn::loss::Targets;
+use crate::nn::{Backward, Forward, Mlp};
 use crate::tensor::ops;
 
 /// Per-example squared gradient norms, per layer and total.
@@ -29,6 +30,27 @@ impl PerExampleNorms {
     pub fn m(&self) -> usize {
         self.s_total.len()
     }
+}
+
+/// §4 via the streaming layer tap: norms accumulate as each `Zbar^(i)` is
+/// produced and the intermediate is dropped — no `Backward` materialized,
+/// O(1) layers of `Zbar` live. (The fused engine in [`crate::engine`]
+/// additionally folds the row norms into the backward kernels themselves.)
+pub fn per_example_norms_streamed(mlp: &Mlp, fwd: &Forward, y: &Targets) -> PerExampleNorms {
+    let n = mlp.spec.n_layers();
+    let m = fwd.logits.dims()[0];
+    let mut s_layers = vec![vec![0f32; n]; m];
+    let mut s_total = vec![0f32; m];
+    mlp.backward_streamed(fwd, y, |i, haug, zbar| {
+        let zb_sq = ops::row_sq_norms(zbar);
+        let h_sq = ops::row_sq_norms(haug);
+        for j in 0..m {
+            let s = zb_sq[j] * h_sq[j];
+            s_layers[j][i] = s;
+            s_total[j] += s;
+        }
+    });
+    PerExampleNorms { s_layers, s_total }
 }
 
 /// Apply the §4 factorization to captured fwd/bwd intermediates.
@@ -104,6 +126,24 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn streamed_norms_match_two_pass() {
+        let spec =
+            ModelSpec::new(vec![5, 8, 6, 3], Activation::Gelu, Loss::SoftmaxCe, 6).unwrap();
+        let mut rng = Rng::new(17);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let x = Tensor::randn(vec![6, 5], &mut rng);
+        let y = Targets::Classes(vec![0, 1, 2, 0, 1, 2]);
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let two_pass = per_example_norms(&fwd, &bwd);
+        let streamed = per_example_norms_streamed(&mlp, &fwd, &y);
+        prop::assert_all_close(&streamed.s_total, &two_pass.s_total, 1e-4).unwrap();
+        for j in 0..6 {
+            prop::assert_all_close(&streamed.s_layers[j], &two_pass.s_layers[j], 1e-4)
+                .unwrap();
+        }
     }
 
     #[test]

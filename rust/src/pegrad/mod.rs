@@ -9,6 +9,6 @@ pub mod flops;
 pub mod goodfellow;
 pub mod naive;
 
-pub use clip::{clip_coefficients, clipped_grads, normalized_grads};
-pub use goodfellow::{per_example_norms, PerExampleNorms};
+pub use clip::{clip_coefficients, clip_pipeline_fused, clipped_grads, normalized_grads};
+pub use goodfellow::{per_example_norms, per_example_norms_streamed, PerExampleNorms};
 pub use naive::per_example_norms_naive;

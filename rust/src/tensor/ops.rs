@@ -2,9 +2,11 @@
 //! cache-friendly parallel matmul.
 //!
 //! The matmul family is the performance-relevant part — it backs the rust
-//! reference implementation used as the E1/E2 CPU baseline — so it gets a
-//! blocked i-k-j loop order (unit-stride inner loop, FMA-friendly) and
-//! row-band parallelism over the global thread pool.
+//! reference implementation used as the E1/E2 CPU baseline and the fused
+//! engine's kernels — so it gets a blocked i-k-j loop order (unit-stride
+//! inner loop, FMA-friendly) and row-band parallelism via scoped threads
+//! that borrow the operands directly (no per-call input copies; band
+//! count from [`threadpool::bands`]).
 
 use crate::util::threadpool;
 
@@ -312,31 +314,167 @@ fn matmul_band(a: &[f32], b: &[f32], c: &mut [f32], r0: usize, r1: usize, k: usi
     }
 }
 
+/// Accumulating blocked matmul over row bands. Scoped threads borrow the
+/// operands directly — no input cloning, no output assembly copy (each
+/// worker owns a disjoint `chunks_mut` band of `c`), so the parallel path
+/// allocates nothing. (The previous implementation Arc-copied both inputs
+/// per call; at engine batch sizes that was the dominant allocation.)
 fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
     if m * n <= PAR_THRESHOLD || m == 1 {
         matmul_band(a, b, c, 0, m, k, n);
         return;
     }
-    let pool = threadpool::global();
-    let bands = pool.size().min(m);
+    let bands = threadpool::bands().min(m);
     let rows_per = m.div_ceil(bands);
-    // Workers write into disjoint row bands; assemble after.
-    let a_arc: std::sync::Arc<Vec<f32>> = std::sync::Arc::new(a.to_vec());
-    let b_arc: std::sync::Arc<Vec<f32>> = std::sync::Arc::new(b.to_vec());
-    let parts = pool.scope_map(bands, move |band| {
-        let r0 = band * rows_per;
-        let r1 = ((band + 1) * rows_per).min(m);
-        let mut part = vec![0f32; (r1.saturating_sub(r0)) * n];
-        if r0 < r1 {
-            matmul_band(&a_arc, &b_arc, &mut part, r0, r1, k, n);
+    std::thread::scope(|s| {
+        for (bi, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let r0 = bi * rows_per;
+            let r1 = r0 + chunk.len() / n;
+            s.spawn(move || matmul_band(a, b, chunk, r0, r1, k, n));
         }
-        part
     });
-    let mut off = 0;
-    for part in parts {
-        c[off..off + part.len()].copy_from_slice(&part);
-        off += part.len();
+}
+
+/// C = A @ B on raw row-major slices, into a caller-owned (reused) buffer.
+/// The engine's allocation-free forward path.
+pub fn matmul_into_slices(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for v in c.iter_mut() {
+        *v = 0.0;
     }
+    matmul_into(a, b, c, m, k, n);
+}
+
+// ---------------------------------------------------------------------------
+// In-place / accumulating variants (optimizer + fused-engine hot paths)
+// ---------------------------------------------------------------------------
+
+/// t *= s in place.
+pub fn scale_in_place(a: &mut Tensor, s: f32) {
+    for v in a.data_mut() {
+        *v *= s;
+    }
+}
+
+/// a -= b (in place).
+pub fn sub_into(a: &mut Tensor, b: &Tensor) {
+    assert_eq!(a.dims(), b.dims(), "sub_into shape mismatch");
+    for (x, &y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x -= y;
+    }
+}
+
+/// v = mu * v + g (the momentum recurrence, in place).
+pub fn decay_axpy(v: &mut Tensor, mu: f32, g: &Tensor) {
+    assert_eq!(v.dims(), g.dims(), "decay_axpy shape mismatch");
+    for (vv, &gv) in v.data_mut().iter_mut().zip(g.data()) {
+        *vv = mu * *vv + gv;
+    }
+}
+
+/// `scale_rows` into a caller-owned buffer (no allocation).
+pub fn scale_rows_into(a: &Tensor, coef: &[f32], out: &mut Tensor) {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    assert_eq!(coef.len(), m);
+    assert_eq!(out.dims(), a.dims(), "scale_rows_into shape mismatch");
+    let src = a.data();
+    let dst = out.data_mut();
+    for i in 0..m {
+        let c = coef[i];
+        for (d, &s) in dst[i * n..(i + 1) * n].iter_mut().zip(&src[i * n..(i + 1) * n]) {
+            *d = c * s;
+        }
+    }
+}
+
+/// One output row band of `C += A^T diag(coef) B` (A [m,k], B [m,n]).
+/// This is the paper-§6 rescale-recompute collapsed into a single kernel:
+/// the row rescale `diag(coef)·B` never materializes.
+fn tn_band(
+    a: &[f32],
+    b: &[f32],
+    coef: Option<&[f32]>,
+    c: &mut [f32],
+    k0: usize,
+    k1: usize,
+    k: usize,
+    n: usize,
+    m: usize,
+) {
+    for j in 0..m {
+        let w = match coef {
+            Some(cf) => cf[j],
+            None => 1.0,
+        };
+        if w == 0.0 {
+            continue;
+        }
+        let a_row = &a[j * k..j * k + k];
+        let b_row = &b[j * n..j * n + n];
+        for p in k0..k1 {
+            let apj = a_row[p];
+            if apj == 0.0 {
+                continue; // relu sparsity in Haug, same win as matmul_band
+            }
+            let f = apj * w;
+            let c_row = &mut c[(p - k0) * n..(p - k0 + 1) * n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += f * bv;
+            }
+        }
+    }
+}
+
+/// C += A^T diag(coef) B on raw slices (coef `None` = identity), row-band
+/// parallel over the k output rows with zero allocations.
+pub fn matmul_tn_coef_acc_slices(
+    a: &[f32],
+    b: &[f32],
+    coef: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    if let Some(cf) = coef {
+        assert_eq!(cf.len(), m, "coef length must equal contraction dim");
+    }
+    if k * n <= PAR_THRESHOLD || k == 1 {
+        tn_band(a, b, coef, c, 0, k, k, n, m);
+        return;
+    }
+    let bands = threadpool::bands().min(k);
+    let rows_per = k.div_ceil(bands);
+    std::thread::scope(|s| {
+        for (bi, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let k0 = bi * rows_per;
+            let k1 = k0 + chunk.len() / n;
+            s.spawn(move || tn_band(a, b, coef, chunk, k0, k1, k, n, m));
+        }
+    });
+}
+
+/// C += A^T @ B for rank-2 tensors (accumulating, no transpose temp).
+pub fn matmul_tn_acc(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (m2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(m, m2, "matmul_tn_acc contraction dim: {m} vs {m2}");
+    assert_eq!(c.dims(), &[k, n], "matmul_tn_acc output shape");
+    matmul_tn_coef_acc_slices(a.data(), b.data(), None, c.data_mut(), m, k, n);
+}
+
+/// C += A^T diag(coef) B for rank-2 tensors — the fused §6 kernel.
+pub fn matmul_tn_coef_acc(a: &Tensor, b: &Tensor, coef: &[f32], c: &mut Tensor) {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (m2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(m, m2, "matmul_tn_coef_acc contraction dim: {m} vs {m2}");
+    assert_eq!(c.dims(), &[k, n], "matmul_tn_coef_acc output shape");
+    matmul_tn_coef_acc_slices(a.data(), b.data(), Some(coef), c.data_mut(), m, k, n);
 }
 
 /// Append the constant-1 bias column (paper §2's augmented h).
@@ -512,5 +650,79 @@ mod tests {
     fn row_argmax_ties_first() {
         let t = Tensor::new(vec![2, 3], vec![1.0, 3.0, 3.0, 5.0, 2.0, 1.0]);
         assert_eq!(row_argmax(&t), vec![1, 0]);
+    }
+
+    #[test]
+    fn in_place_elementwise_variants() {
+        let mut a = Tensor::new(vec![3], vec![2.0, 4.0, 6.0]);
+        scale_in_place(&mut a, 0.5);
+        assert_eq!(a.data(), &[1.0, 2.0, 3.0]);
+        sub_into(&mut a, &Tensor::ones(vec![3]));
+        assert_eq!(a.data(), &[0.0, 1.0, 2.0]);
+        let mut v = Tensor::new(vec![3], vec![1.0, 1.0, 1.0]);
+        decay_axpy(&mut v, 0.5, &a);
+        assert_eq!(v.data(), &[0.5, 1.5, 2.5]);
+    }
+
+    #[test]
+    fn scale_rows_into_matches_scale_rows() {
+        let mut rng = Rng::new(6);
+        let t = Tensor::randn(vec![5, 7], &mut rng);
+        let coef = [0.0, 1.0, -2.0, 0.5, 3.0];
+        let mut out = Tensor::zeros(vec![5, 7]);
+        scale_rows_into(&t, &coef, &mut out);
+        assert_eq!(out, scale_rows(&t, &coef));
+    }
+
+    #[test]
+    fn matmul_tn_acc_matches_matmul_tn() {
+        prop::check(20, |g| {
+            let (m, k, n) = (g.usize_in(1..30), g.usize_in(1..30), g.usize_in(1..30));
+            let mut rng = Rng::new(g.case + 77);
+            let a = Tensor::randn(vec![m, k], &mut rng);
+            let b = Tensor::randn(vec![m, n], &mut rng);
+            let mut c = Tensor::randn(vec![k, n], &mut rng);
+            let want = add(&c, &matmul_tn(&a, &b));
+            matmul_tn_acc(&a, &b, &mut c);
+            prop::assert_all_close(c.data(), want.data(), 1e-3)
+        });
+    }
+
+    #[test]
+    fn matmul_tn_coef_acc_matches_scale_rows_then_matmul() {
+        prop::check(20, |g| {
+            let (m, k, n) = (g.usize_in(1..25), g.usize_in(1..25), g.usize_in(1..25));
+            let mut rng = Rng::new(g.case + 99);
+            let a = Tensor::randn(vec![m, k], &mut rng);
+            let b = Tensor::randn(vec![m, n], &mut rng);
+            let coef: Vec<f32> = (0..m).map(|_| rng.next_f32() * 2.0 - 0.5).collect();
+            let mut c = Tensor::zeros(vec![k, n]);
+            matmul_tn_coef_acc(&a, &b, &coef, &mut c);
+            let want = matmul_tn(&a, &scale_rows(&b, &coef));
+            prop::assert_all_close(c.data(), want.data(), 1e-3)
+        });
+    }
+
+    #[test]
+    fn matmul_tn_coef_acc_parallel_band_path() {
+        // large enough that k*n crosses PAR_THRESHOLD
+        let mut rng = Rng::new(12);
+        let a = Tensor::randn(vec![64, 150], &mut rng);
+        let b = Tensor::randn(vec![64, 130], &mut rng);
+        let coef: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
+        let mut c = Tensor::zeros(vec![150, 130]);
+        matmul_tn_coef_acc(&a, &b, &coef, &mut c);
+        let want = matmul_tn(&a, &scale_rows(&b, &coef));
+        prop::assert_all_close(c.data(), want.data(), 1e-3).unwrap();
+    }
+
+    #[test]
+    fn matmul_into_slices_matches_matmul() {
+        let mut rng = Rng::new(13);
+        let a = Tensor::randn(vec![40, 30], &mut rng);
+        let b = Tensor::randn(vec![30, 20], &mut rng);
+        let mut c = vec![9.9f32; 40 * 20]; // stale contents must be overwritten
+        matmul_into_slices(a.data(), b.data(), &mut c, 40, 30, 20);
+        prop::assert_all_close(&c, matmul(&a, &b).data(), 1e-3).unwrap();
     }
 }

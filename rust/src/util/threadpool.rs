@@ -1,11 +1,18 @@
 //! Fixed-size worker pool with bounded queues (tokio substitute).
 //!
-//! Two primitives, both built on `std::sync::mpsc` + threads:
+//! Three primitives:
 //!
-//! * [`ThreadPool`] — submit closures, optionally collect results via
-//!   [`ThreadPool::scope_map`] (the parallel-matmul substrate uses it).
 //! * [`bounded`] — a bounded MPSC channel with blocking `send`, the
 //!   backpressure primitive the coordinator's prefetch pipeline uses.
+//! * [`bands`] — the machine's clamped parallelism, the band count the
+//!   scoped-thread compute kernels in `tensor::ops` / `engine` target
+//!   (those kernels borrow their operands via `std::thread::scope`
+//!   instead of going through the pool, so inputs are never copied).
+//! * [`ThreadPool`] — submit `'static` closures, optionally collect
+//!   results via [`ThreadPool::scope_map`]. Kept for fire-and-forget /
+//!   owned-data work; a scoped-borrow dispatch over these persistent
+//!   workers (to drop the per-call thread spawns of the kernels above)
+//!   is a ROADMAP open item.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -95,18 +102,28 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Shared global pool sized to the machine (used by tensor ops so they
-/// don't each spawn threads).
+/// Shared global pool sized to the machine, spawned on first use (for
+/// `'static` jobs; the borrow-heavy compute kernels use scoped threads
+/// and only consult [`bands`]).
 pub fn global() -> &'static ThreadPool {
     use once_cell::sync::Lazy;
-    static POOL: Lazy<ThreadPool> = Lazy::new(|| {
-        let n = thread::available_parallelism()
+    static POOL: Lazy<ThreadPool> = Lazy::new(|| ThreadPool::new(bands()));
+    &POOL
+}
+
+/// Row-band count compute kernels should target: the machine's available
+/// parallelism with the pool's clamp, cached, WITHOUT spawning the pool
+/// (the scoped-thread kernels in `tensor::ops`/`engine` only need the
+/// number, not the worker queue).
+pub fn bands() -> usize {
+    use std::sync::OnceLock;
+    static BANDS: OnceLock<usize> = OnceLock::new();
+    *BANDS.get_or_init(|| {
+        thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(4)
-            .clamp(1, 32);
-        ThreadPool::new(n)
-    });
-    &POOL
+            .clamp(1, 32)
+    })
 }
 
 // ---------------------------------------------------------------------------

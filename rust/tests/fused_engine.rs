@@ -1,0 +1,182 @@
+//! Property tests for the fused streaming engine (paper §4–§6):
+//! numerical equivalence against BOTH independent oracles — the naive
+//! per-example backprop (`pegrad::naive`) and the two-pass reference
+//! (`per_example_norms` + `clip_pipeline`) — across all activations and
+//! both losses, plus the single-traversal flop proof and workspace-reuse
+//! determinism.
+
+use pegrad::engine::{EngineMode, FusedEngine};
+use pegrad::nn::loss::Targets;
+use pegrad::nn::{Loss, Mlp, ModelSpec};
+use pegrad::pegrad::naive::{per_example_grads, per_example_norms_naive};
+use pegrad::pegrad::{clip_pipeline_fused, per_example_norms};
+use pegrad::tensor::ops::Activation;
+use pegrad::tensor::{ops, Rng, Tensor};
+use pegrad::util::prop;
+
+/// The flop counter is process-global and the harness runs tests on
+/// threads; every test in this binary touches the counter, so they all
+/// serialize on this lock to keep the flop-equality proof exact.
+static FLOPS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn flops_guard() -> std::sync::MutexGuard<'static, ()> {
+    FLOPS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const ACTIVATIONS: [Activation; 5] = [
+    Activation::Relu,
+    Activation::Tanh,
+    Activation::Gelu,
+    Activation::Sigmoid,
+    Activation::Identity,
+];
+
+fn random_case(g: &mut prop::Gen) -> (Mlp, Tensor, Targets) {
+    let n_hidden = g.usize_in(1..4);
+    let mut dims = vec![g.usize_in(2..8)];
+    for _ in 0..n_hidden {
+        dims.push(g.usize_in(2..10));
+    }
+    dims.push(g.usize_in(2..6));
+    let act = *g.choose(&ACTIVATIONS);
+    let loss = if g.bool() { Loss::SoftmaxCe } else { Loss::Mse };
+    let m = g.usize_in(1..8);
+    let spec = ModelSpec::new(dims, act, loss, m).unwrap();
+    let mut rng = Rng::new(g.case + 101);
+    let mlp = Mlp::init(spec.clone(), &mut rng);
+    // scale inputs up so clipping actually triggers for small C
+    let x = ops::scale(&Tensor::randn(vec![m, spec.in_dim()], &mut rng), 2.0);
+    let y = match loss {
+        Loss::SoftmaxCe => {
+            Targets::Classes((0..m).map(|j| (j % spec.out_dim()) as i32).collect())
+        }
+        Loss::Mse => Targets::Dense(Tensor::randn(vec![m, spec.out_dim()], &mut rng)),
+    };
+    (mlp, x, y)
+}
+
+/// §4: fused norms == naive per-example backprop == two-pass reference,
+/// all activations × both losses.
+#[test]
+fn fused_norms_match_naive_and_two_pass() {
+    let _guard = flops_guard();
+    prop::check(15, |g| {
+        let (mlp, x, y) = random_case(g);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        engine.step(&mlp.params, &x, &y, EngineMode::Mean);
+
+        let naive = per_example_norms_naive(&mlp, &x, &y);
+        prop::assert_all_close(engine.s_total(), &naive.s_total, 1e-3)
+            .map_err(|e| format!("fused vs naive: {e}"))?;
+
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let two_pass = per_example_norms(&fwd, &bwd);
+        prop::assert_all_close(engine.s_total(), &two_pass.s_total, 1e-3)
+            .map_err(|e| format!("fused vs two-pass: {e}"))?;
+        let pe = engine.per_example_norms();
+        for j in 0..mlp.spec.m {
+            prop::assert_all_close(&pe.s_layers[j], &two_pass.s_layers[j], 1e-3)
+                .map_err(|e| format!("example {j} layers: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// §6: fused clipped gradient sum == two-pass clip_pipeline == explicitly
+/// clipped naive per-example gradients.
+#[test]
+fn fused_clip_matches_naive_and_two_pass() {
+    let _guard = flops_guard();
+    prop::check(10, |g| {
+        let (mlp, x, y) = random_case(g);
+        let c = g.f32_in(0.01..3.0);
+        let m = mlp.spec.m;
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        let (fgrads, _, _) = clip_pipeline_fused(&mut engine, &mlp.params, &x, &y, c);
+
+        // two-pass reference
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let (grads, _, _) = pegrad::pegrad::clip::clip_pipeline(&mlp, &fwd, &bwd, c);
+        for (i, (a, b)) in fgrads.iter().zip(&grads).enumerate() {
+            prop::assert_all_close(a.data(), b.data(), 1e-3)
+                .map_err(|e| format!("layer {i} fused vs two-pass: {e}"))?;
+        }
+
+        // naive oracle: clip each materialized per-example gradient
+        let pex = per_example_grads(&mlp, &x, &y);
+        for i in 0..mlp.spec.n_layers() {
+            let mut want = Tensor::zeros(fgrads[i].dims().to_vec());
+            for j in 0..m {
+                let s: f64 = pex[j].iter().map(ops::sq_sum).sum();
+                let coef = (c as f64 / s.max(1e-30).sqrt()).min(1.0) as f32;
+                ops::axpy(&mut want, coef, &pex[j][i]);
+            }
+            prop::assert_all_close(fgrads[i].data(), want.data(), 5e-3)
+                .map_err(|e| format!("layer {i} fused vs naive: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Acceptance: in clipped mode the engine spends exactly one forward + one
+/// backward traversal of matmul flops — the §6 rescale matmul *replaces*
+/// the plain gradient matmul instead of adding a third pass.
+#[test]
+fn clipped_mode_is_one_forward_one_backward() {
+    let _guard = flops_guard();
+    let spec =
+        ModelSpec::new(vec![12, 24, 18, 6], Activation::Relu, Loss::SoftmaxCe, 16).unwrap();
+    let mut rng = Rng::new(3);
+    let mlp = Mlp::init(spec.clone(), &mut rng);
+    let x = Tensor::randn(vec![16, 12], &mut rng);
+    let y = Targets::Classes((0..16).map(|j| (j % 6) as i32).collect());
+    let mut engine = FusedEngine::new(spec.clone());
+    for mode in [
+        EngineMode::Mean,
+        EngineMode::Clip { c: 0.5, mean: true },
+        EngineMode::Normalize { target: 1.0 },
+    ] {
+        pegrad::nn::reset_flops();
+        engine.step(&mlp.params, &x, &y, mode);
+        let measured = pegrad::nn::read_flops();
+        let analytic = spec.flops_forward(16) + spec.flops_backward(16);
+        assert_eq!(
+            measured, analytic,
+            "mode {mode:?}: engine must cost exactly fwd+bwd matmul flops"
+        );
+    }
+}
+
+/// Workspace reuse across heterogeneous steps is bitwise deterministic.
+#[test]
+fn workspace_reuse_determinism_across_modes() {
+    let _guard = flops_guard();
+    let spec = ModelSpec::new(vec![6, 12, 4], Activation::Gelu, Loss::SoftmaxCe, 8).unwrap();
+    let mut rng = Rng::new(21);
+    let mlp = Mlp::init(spec.clone(), &mut rng);
+    let x = Tensor::randn(vec![8, 6], &mut rng);
+    let y = Targets::Classes((0..8).map(|j| (j % 4) as i32).collect());
+    let modes = [
+        EngineMode::Clip { c: 0.2, mean: false },
+        EngineMode::Mean,
+        EngineMode::Normalize { target: 2.0 },
+        EngineMode::Mean,
+    ];
+    let mut reused = FusedEngine::new(spec.clone());
+    let mut reused_grads = Vec::new();
+    for mode in modes {
+        reused.step(&mlp.params, &x, &y, mode);
+        reused_grads.push(reused.grads().to_vec());
+    }
+    for (mi, mode) in modes.into_iter().enumerate() {
+        let mut fresh = FusedEngine::new(spec.clone());
+        fresh.step(&mlp.params, &x, &y, mode);
+        for (a, b) in reused_grads[mi].iter().zip(fresh.grads()) {
+            assert_eq!(
+                a.data(),
+                b.data(),
+                "mode {mode:?}: reused workspace diverged from fresh engine"
+            );
+        }
+    }
+}

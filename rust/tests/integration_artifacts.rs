@@ -39,6 +39,7 @@ fn batch_for(mlp: &Mlp, rng: &mut Rng) -> (Tensor, Targets) {
 }
 
 #[test]
+#[ignore = "requires PJRT runtime + make artifacts; offline stub xla crate cannot execute HLO (rust/vendor/README.md)"]
 fn every_preset_norms_match_reference() {
     let reg = registry();
     let all = std::env::var("PEGRAD_TEST_ALL_PRESETS").is_ok();
@@ -77,6 +78,7 @@ fn every_preset_norms_match_reference() {
 }
 
 #[test]
+#[ignore = "requires PJRT runtime + make artifacts; offline stub xla crate cannot execute HLO (rust/vendor/README.md)"]
 fn every_preset_step_vanilla_descends() {
     // one SGD step on a fixed batch must reduce that batch's loss for a
     // small enough lr — checked through the artifact for every preset
@@ -115,6 +117,7 @@ fn every_preset_step_vanilla_descends() {
 }
 
 #[test]
+#[ignore = "requires PJRT runtime + make artifacts; offline stub xla crate cannot execute HLO (rust/vendor/README.md)"]
 fn manifest_files_all_exist_and_parse_as_hlo() {
     let reg = registry();
     for preset in reg.manifest.presets.values() {
@@ -133,6 +136,7 @@ fn manifest_files_all_exist_and_parse_as_hlo() {
 }
 
 #[test]
+#[ignore = "requires PJRT runtime + make artifacts; offline stub xla crate cannot execute HLO (rust/vendor/README.md)"]
 fn manifest_shapes_are_internally_consistent() {
     let reg = registry();
     for (name, preset) in &reg.manifest.presets {

@@ -1,7 +1,11 @@
-//! End-to-end trainer integration: every run mode trains on the tiny
-//! preset through real artifacts, and the loss goes down.
+//! End-to-end trainer integration.
 //!
-//! Requires `make artifacts` (tiny + small presets).
+//! Two families:
+//! * artifact modes (`vanilla`/`pegrad`/`rust_optim`/`clipped`) — need
+//!   `make artifacts` + the real PJRT runtime, so they are `#[ignore]`d
+//!   under the offline stub xla crate (rust/vendor/README.md);
+//! * rust-engine modes (`rust_pegrad`/`rust_clipped`/`rust_normalized`) —
+//!   the fused streaming engine, running everywhere with no artifacts.
 
 use pegrad::config::{Config, DataKind, OptimKind, PrivacyConfig, RunMode, SamplerKind};
 use pegrad::coordinator::{Checkpoint, Trainer};
@@ -23,6 +27,18 @@ fn base_cfg(name: &str) -> Config {
     cfg
 }
 
+/// Rust-engine base: model straight from config, no artifacts involved.
+fn rust_cfg(name: &str, mode: RunMode) -> Config {
+    let mut cfg = base_cfg(name);
+    cfg.mode = mode;
+    cfg.model_dims = vec![16, 32, 10];
+    cfg.model_activation = "relu".into();
+    cfg.model_loss = "softmax_ce".into();
+    cfg.model_m = 16;
+    cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.05 };
+    cfg
+}
+
 fn early_late(curve: &[(usize, f32)]) -> (f32, f32) {
     let k = 10.min(curve.len());
     let early: f32 = curve[..k].iter().map(|&(_, l)| l).sum::<f32>() / k as f32;
@@ -31,22 +47,16 @@ fn early_late(curve: &[(usize, f32)]) -> (f32, f32) {
     (early, late)
 }
 
-#[test]
-fn vanilla_mode_trains() {
-    let mut cfg = base_cfg("it-vanilla");
-    cfg.mode = RunMode::Vanilla;
-    cfg.sampler = SamplerKind::Uniform;
-    let summary = Trainer::new(cfg).unwrap().run().unwrap();
-    let (early, late) = early_late(&summary.curve);
-    assert!(late < early * 0.7, "loss did not fall: {early} -> {late}");
-}
+// ---------------------------------------------------------------------------
+// Rust-engine modes (run everywhere)
+// ---------------------------------------------------------------------------
 
 #[test]
-fn pegrad_mode_trains_with_importance_sampling() {
-    let mut cfg = base_cfg("it-pegrad");
-    cfg.mode = RunMode::Pegrad;
+fn rust_pegrad_mode_trains_with_importance_sampling() {
+    let mut cfg = rust_cfg("it-rust-pegrad", RunMode::RustPegrad);
     cfg.sampler = SamplerKind::Importance;
     cfg.label_noise = 0.05;
+    cfg.eval_every = 50;
     let summary = Trainer::new(cfg).unwrap().run().unwrap();
     let (early, late) = early_late(&summary.curve);
     assert!(late < early * 0.8, "loss did not fall: {early} -> {late}");
@@ -54,20 +64,21 @@ fn pegrad_mode_trains_with_importance_sampling() {
 }
 
 #[test]
-fn rust_optim_mode_trains_with_adam() {
-    let mut cfg = base_cfg("it-adam");
-    cfg.mode = RunMode::RustOptim;
-    cfg.optim = OptimKind::Adam;
-    cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.005 };
+fn rust_pegrad_trains_mse_regression() {
+    let mut cfg = rust_cfg("it-rust-mse", RunMode::RustPegrad);
+    cfg.data = DataKind::Regression;
+    cfg.model_loss = "mse".into();
+    cfg.model_dims = vec![12, 24, 4];
+    cfg.model_activation = "tanh".into();
+    cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.02 };
     let summary = Trainer::new(cfg).unwrap().run().unwrap();
     let (early, late) = early_late(&summary.curve);
-    assert!(late < early * 0.8, "loss did not fall: {early} -> {late}");
+    assert!(late < early * 0.9, "mse loss did not fall: {early} -> {late}");
 }
 
 #[test]
-fn clipped_mode_trains_and_accounts() {
-    let mut cfg = base_cfg("it-dp");
-    cfg.mode = RunMode::Clipped;
+fn rust_clipped_mode_trains_and_accounts() {
+    let mut cfg = rust_cfg("it-rust-dp", RunMode::RustClipped);
     cfg.privacy = Some(PrivacyConfig {
         clip_c: 2.0,
         noise_sigma: 0.5,
@@ -81,19 +92,38 @@ fn clipped_mode_trains_and_accounts() {
 }
 
 #[test]
-fn prefetch_and_sync_paths_equivalent() {
+fn rust_normalized_mode_trains() {
+    let mut cfg = rust_cfg("it-rust-norm", RunMode::RustNormalized);
+    cfg.normalize_target = 1.0;
+    cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.02 };
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    let (early, late) = early_late(&summary.curve);
+    assert!(late < early * 0.9, "loss did not fall: {early} -> {late}");
+}
+
+#[test]
+fn rust_mode_works_with_adam() {
+    let mut cfg = rust_cfg("it-rust-adam", RunMode::RustPegrad);
+    cfg.optim = OptimKind::Adam;
+    cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.005 };
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    let (early, late) = early_late(&summary.curve);
+    assert!(late < early * 0.8, "loss did not fall: {early} -> {late}");
+}
+
+#[test]
+fn rust_prefetch_and_sync_paths_equivalent() {
     // same seed, prefetch on/off -> identical loss curves (gather overlap
     // must not change the math)
     let mk = |depth: usize, name: &str| {
-        let mut cfg = base_cfg(name);
-        cfg.mode = RunMode::Pegrad;
+        let mut cfg = rust_cfg(name, RunMode::RustPegrad);
         cfg.steps = 40;
         cfg.prefetch_depth = depth;
         cfg.seed = 7;
         Trainer::new(cfg).unwrap().run().unwrap()
     };
-    let a = mk(0, "it-sync");
-    let b = mk(2, "it-prefetch");
+    let a = mk(0, "it-rust-sync");
+    let b = mk(2, "it-rust-prefetch");
     for ((s1, l1), (s2, l2)) in a.curve.iter().zip(&b.curve) {
         assert_eq!(s1, s2);
         assert!(
@@ -104,9 +134,28 @@ fn prefetch_and_sync_paths_equivalent() {
 }
 
 #[test]
-fn checkpoint_resume_continues() {
-    let mut cfg = base_cfg("it-ckpt");
-    cfg.mode = RunMode::Pegrad;
+fn rust_runs_are_bitwise_deterministic() {
+    // workspace-reuse determinism through the full trainer: two identical
+    // runs (same seed, same config) must produce bitwise-equal params
+    let mk = |name: &str| {
+        let mut cfg = rust_cfg(name, RunMode::RustPegrad);
+        cfg.steps = 25;
+        cfg.seed = 13;
+        let mut tr = Trainer::new(cfg).unwrap();
+        tr.run().unwrap();
+        tr.params().unwrap().to_vec()
+    };
+    let a = mk("it-rust-det-a");
+    let b = mk("it-rust-det-b");
+    assert_eq!(a.len(), b.len());
+    for (pa, pb) in a.iter().zip(&b) {
+        assert_eq!(pa.data(), pb.data(), "runs diverged — workspace reuse leaked state");
+    }
+}
+
+#[test]
+fn rust_checkpoint_resume_continues() {
+    let mut cfg = rust_cfg("it-rust-ckpt", RunMode::RustPegrad);
     cfg.steps = 30;
     let mut tr = Trainer::new(cfg.clone()).unwrap();
     tr.run().unwrap();
@@ -118,7 +167,7 @@ fn checkpoint_resume_continues() {
     let ck = Checkpoint::load(&ck_path).unwrap();
     assert_eq!(ck.step, 30);
     let mut cfg2 = cfg;
-    cfg2.run_name = "it-ckpt-resumed".into();
+    cfg2.run_name = "it-rust-ckpt-resumed".into();
     cfg2.steps = 10;
     let mut tr2 = Trainer::new(cfg2).unwrap();
     tr2.restore(ck).unwrap();
@@ -129,12 +178,11 @@ fn checkpoint_resume_continues() {
 }
 
 #[test]
-fn importance_sampler_receives_norm_feedback() {
-    // after training with label noise, the trainer's reference model can
-    // recompute norms; noisy examples should have higher average norm than
-    // clean ones (the §1 signal) — checked through the full pipeline
-    let mut cfg = base_cfg("it-feedback");
-    cfg.mode = RunMode::Pegrad;
+fn rust_importance_sampler_receives_norm_feedback() {
+    // after training with label noise, noisy examples should carry higher
+    // gradient norms than clean ones (the §1 signal) — checked through the
+    // full fused-engine pipeline
+    let mut cfg = rust_cfg("it-rust-feedback", RunMode::RustPegrad);
     cfg.steps = 200;
     cfg.label_noise = 0.15;
     cfg.data_n = 512;
@@ -173,4 +221,61 @@ fn importance_sampler_receives_norm_feedback() {
         avg(&noisy),
         avg(&clean)
     );
+}
+
+// ---------------------------------------------------------------------------
+// Artifact modes (need PJRT + `make artifacts`)
+// ---------------------------------------------------------------------------
+
+#[test]
+#[ignore = "requires PJRT runtime + make artifacts; offline stub xla crate cannot execute HLO (rust/vendor/README.md)"]
+fn vanilla_mode_trains() {
+    let mut cfg = base_cfg("it-vanilla");
+    cfg.mode = RunMode::Vanilla;
+    cfg.sampler = SamplerKind::Uniform;
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    let (early, late) = early_late(&summary.curve);
+    assert!(late < early * 0.7, "loss did not fall: {early} -> {late}");
+}
+
+#[test]
+#[ignore = "requires PJRT runtime + make artifacts; offline stub xla crate cannot execute HLO (rust/vendor/README.md)"]
+fn pegrad_mode_trains_with_importance_sampling() {
+    let mut cfg = base_cfg("it-pegrad");
+    cfg.mode = RunMode::Pegrad;
+    cfg.sampler = SamplerKind::Importance;
+    cfg.label_noise = 0.05;
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    let (early, late) = early_late(&summary.curve);
+    assert!(late < early * 0.8, "loss did not fall: {early} -> {late}");
+    assert!(summary.eval_accuracy.unwrap() > 0.3);
+}
+
+#[test]
+#[ignore = "requires PJRT runtime + make artifacts; offline stub xla crate cannot execute HLO (rust/vendor/README.md)"]
+fn rust_optim_mode_trains_with_adam() {
+    let mut cfg = base_cfg("it-adam");
+    cfg.mode = RunMode::RustOptim;
+    cfg.optim = OptimKind::Adam;
+    cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.005 };
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    let (early, late) = early_late(&summary.curve);
+    assert!(late < early * 0.8, "loss did not fall: {early} -> {late}");
+}
+
+#[test]
+#[ignore = "requires PJRT runtime + make artifacts; offline stub xla crate cannot execute HLO (rust/vendor/README.md)"]
+fn clipped_mode_trains_and_accounts() {
+    let mut cfg = base_cfg("it-dp");
+    cfg.mode = RunMode::Clipped;
+    cfg.privacy = Some(PrivacyConfig {
+        clip_c: 2.0,
+        noise_sigma: 0.5,
+        delta: 1e-5,
+    });
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    let (early, late) = early_late(&summary.curve);
+    assert!(late < early, "DP loss did not fall at all: {early} -> {late}");
+    let eps = summary.epsilon.expect("accountant ran");
+    assert!(eps.is_finite() && eps > 0.0);
 }

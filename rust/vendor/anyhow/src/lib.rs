@@ -1,0 +1,123 @@
+//! Minimal offline shim of the `anyhow` crate.
+//!
+//! Errors are a single rendered string; context wraps as `"ctx: inner"`.
+//! Exactly the surface `pegrad` uses: `Error`, `Result`, `anyhow!`,
+//! `bail!`, and the `Context` extension trait.
+
+use std::fmt;
+
+/// A string-backed error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` (alternate) renders identically: the full chain is already
+        // flattened into one string.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that keeps this blanket conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` on fallible values.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| {
+            let inner: Error = e.into();
+            Error::msg(format!("{ctx}: {inner}"))
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                let inner: Error = e.into();
+                Err(Error::msg(format!("{}: {inner}", f())))
+            }
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn macro_and_conversion() {
+        let e = anyhow!("bad thing {}", 7);
+        assert_eq!(e.to_string(), "bad thing 7");
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| format!("outer{}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "outer2: inner");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Minimal offline shim of `once_cell`: just `sync::Lazy`, backed by
+//! `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access by a stored constructor.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy {
+                cell: OnceLock::new(),
+                init,
+            }
+        }
+
+        /// Force initialization and return the value.
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static CALLS: AtomicUsize = AtomicUsize::new(0);
+    static VALUE: Lazy<usize> = Lazy::new(|| {
+        CALLS.fetch_add(1, Ordering::SeqCst);
+        41 + 1
+    });
+
+    #[test]
+    fn initializes_once() {
+        assert_eq!(*VALUE, 42);
+        assert_eq!(*VALUE, 42);
+        assert_eq!(Lazy::force(&VALUE), &42);
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,273 @@
+//! API stub of the vendored PJRT `xla` wrapper crate.
+//!
+//! Host-side pieces work for real: `Literal` stores typed host data,
+//! `PjRtBuffer` is a host-resident buffer, and the CPU "client" hands them
+//! out. Everything that needs the actual PJRT runtime — parsing HLO,
+//! compiling, executing — returns [`Error`] with an "unavailable" message.
+//!
+//! Replace this path dependency with the real vendored crate to restore
+//! artifact execution; the call sites are source-compatible.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::rc::Rc;
+
+/// Error type mirroring the real crate's (Display-able, std::error::Error).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT runtime unavailable (offline stub xla crate; \
+             see rust/vendor/README.md)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Typed host storage behind literals/buffers. Public only because the
+/// sealed [`NativeType`] trait mentions it; not part of the real API.
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types the stub understands (f32 and i32 cover every call site).
+pub trait NativeType: Copy + sealed::Sealed {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn extract(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+
+    fn extract(data: &Data) -> Option<Vec<f32>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+
+    fn extract(data: &Data) -> Option<Vec<i32>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Dims of an array-shaped literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A typed host tensor value.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Same data, new dims (must preserve element count).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.data).ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+}
+
+/// A "device"-resident buffer — host memory in the stub.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Handle to the process CPU client (Rc-based like the real wrapper:
+/// cheap to clone, not Send/Sync).
+#[derive(Clone)]
+pub struct PjRtClient(Rc<()>);
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient(Rc::new(())))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let numel: usize = dims.iter().product();
+        if numel != data.len() {
+            return Err(Error(format!(
+                "buffer_from_host_buffer: {} elements into dims {dims:?}",
+                data.len()
+            )));
+        }
+        Ok(PjRtBuffer {
+            literal: Literal {
+                dims: dims.iter().map(|&d| d as i64).collect(),
+                data: T::wrap(data.to_vec()),
+            },
+        })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile"))
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("HLO parse of '{path}'")))
+    }
+}
+
+/// An XLA computation graph.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A compiled executable (never constructible in the stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_and_buffers_work_on_host() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        assert_eq!(c.device_count(), 1);
+        let b = c
+            .buffer_from_host_buffer(&[1i32, 2, 3], &[3], None)
+            .unwrap();
+        let l = b.to_literal_sync().unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+        assert!(c.buffer_from_host_buffer(&[1.0f32], &[2], None).is_err());
+    }
+
+    #[test]
+    fn runtime_paths_report_unavailable() {
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}
