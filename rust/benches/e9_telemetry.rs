@@ -1,0 +1,121 @@
+//! E9: telemetry overhead — the fused Mean step with the full
+//! `TelemetryMonitor` tap attached (per-layer histograms, three P²
+//! quantile sketches per stream, Welford, outlier detector, GNS moments)
+//! vs the plain fused step, at m ∈ {32, 256, 1024}.
+//!
+//! The monitoring workload's whole premise is that it rides the existing
+//! backward traversal: the acceptance gate is < 10% step-time overhead at
+//! m = 256 and zero extra matmul flops (asserted inline before timing).
+//! Emits `BENCH_telemetry.json`.
+
+use pegrad::bench::{bench_fn, BenchSpec, Table};
+use pegrad::engine::{EngineMode, FusedEngine};
+use pegrad::nn::loss::Targets;
+use pegrad::nn::{Loss, Mlp, ModelSpec};
+use pegrad::telemetry::{TelemetryConfig, TelemetryMonitor};
+use pegrad::tensor::ops::Activation;
+use pegrad::tensor::{Rng, Tensor};
+use pegrad::util::Json;
+
+const DIMS: [usize; 4] = [64, 128, 128, 10];
+
+fn main() -> anyhow::Result<()> {
+    pegrad::util::logging::init_with(log::LevelFilter::Warn);
+    let quick = std::env::args().any(|a| a == "--quick");
+    let spec_bench = if quick {
+        BenchSpec::quick()
+    } else {
+        BenchSpec {
+            warmup_secs: 0.1,
+            measure_secs: 0.8,
+            min_samples: 3,
+            max_samples: 40,
+        }
+    };
+
+    let mut table = Table::new(
+        "E9 — telemetry tap overhead on the fused Mean step (ms)",
+        &["m", "plain", "telemetry", "overhead"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut ok_at_256 = true;
+
+    for m in [32usize, 256, 1024] {
+        let mspec =
+            ModelSpec::new(DIMS.to_vec(), Activation::Relu, Loss::SoftmaxCe, m).unwrap();
+        let n_layers = mspec.n_layers();
+        let mut rng = Rng::new(9);
+        let mlp = Mlp::init(mspec.clone(), &mut rng);
+        let x = Tensor::randn(vec![m, mspec.in_dim()], &mut rng);
+        let y = Targets::Classes((0..m).map(|j| (j % 10) as i32).collect());
+        let mut engine = FusedEngine::new(mspec.clone());
+        let indices: Vec<usize> = (0..m).collect();
+        let tcfg = TelemetryConfig {
+            enabled: true,
+            ..Default::default()
+        };
+        let mut monitor = TelemetryMonitor::new(&tcfg, n_layers, m, 4096);
+
+        // flop gate: the tap must not add matmul work
+        pegrad::nn::reset_flops();
+        engine.step(&mlp.params, &x, &y, EngineMode::Mean);
+        let plain_flops = pegrad::nn::read_flops();
+        pegrad::nn::reset_flops();
+        engine.step_streamed(&mlp.params, &x, &y, EngineMode::Mean, None, Some(&mut monitor));
+        monitor.end_step(&indices, engine.grads());
+        assert_eq!(
+            plain_flops,
+            pegrad::nn::read_flops(),
+            "tap changed matmul flops at m={m}"
+        );
+
+        let t_plain = bench_fn(&format!("m{m}/plain"), &spec_bench, || {
+            engine.step(&mlp.params, &x, &y, EngineMode::Mean);
+        })
+        .mean_ms();
+        let t_telem = bench_fn(&format!("m{m}/telemetry"), &spec_bench, || {
+            engine.step_streamed(
+                &mlp.params,
+                &x,
+                &y,
+                EngineMode::Mean,
+                None,
+                Some(&mut monitor),
+            );
+            monitor.end_step(&indices, engine.grads());
+        })
+        .mean_ms();
+
+        let overhead = t_telem / t_plain - 1.0;
+        if m == 256 && overhead >= 0.10 {
+            ok_at_256 = false;
+        }
+        table.row(vec![
+            m.to_string(),
+            format!("{t_plain:.3}"),
+            format!("{t_telem:.3}"),
+            format!("{:+.1}%", overhead * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("m", Json::num(m as f64)),
+            ("plain_ms", Json::num(t_plain)),
+            ("telemetry_ms", Json::num(t_telem)),
+            ("overhead_frac", Json::num(overhead)),
+        ]));
+    }
+
+    table.emit(Some(std::path::Path::new("bench_results/e9_telemetry.csv")));
+    let summary = Json::obj(vec![
+        ("bench", Json::str("e9_telemetry")),
+        ("model_dims", Json::arr_usize(&DIMS)),
+        ("quick", Json::Bool(quick)),
+        ("overhead_under_10pct_at_m256", Json::Bool(ok_at_256)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_telemetry.json", format!("{summary}\n"))?;
+    println!("(summary saved to BENCH_telemetry.json)");
+    if !ok_at_256 {
+        println!("WARNING: telemetry overhead exceeded 10% at m=256 on this host.");
+    }
+    Ok(())
+}

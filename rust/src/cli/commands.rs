@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! pegrad train      --config cfg.toml [--set k=v ...]   train a model
+//! pegrad monitor    --config cfg.toml [--steps 200]     train + stream gradient-norm telemetry
 //! pegrad norms      --preset tiny [--n 256]             per-example norms -> jsonl
 //! pegrad inspect    [--artifacts DIR]                   list artifact presets/entries
 //! pegrad accountant --q 0.01 --sigma 1.1 --steps 10000  DP epsilon calculator
@@ -10,7 +11,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::Config;
+use crate::config::{Config, RunMode};
 use crate::coordinator::Trainer;
 use crate::engine::{EngineMode, FusedEngine};
 use crate::nn::loss::Targets;
@@ -32,6 +33,9 @@ pub fn usage() -> String {
      \x20 train        run a training loop (per-example norms on the hot path);\n\
      \x20              mode rust_pegrad|rust_clipped|rust_normalized runs the\n\
      \x20              pure-rust fused engine — no artifacts or PJRT needed\n\
+     \x20 monitor      train with streaming gradient-norm telemetry: per-layer\n\
+     \x20              histograms/quantiles, outlier flags, gradient noise\n\
+     \x20              scale — emitted as a JSON report (rust modes only)\n\
      \x20 norms        compute per-example gradient norms for a fresh batch\n\
      \x20              (--rust uses the fused engine instead of artifacts)\n\
      \x20 inspect      show artifact manifest contents\n\
@@ -49,6 +53,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     let rest = argv[1..].to_vec();
     match cmd.as_str() {
         "train" => cmd_train(&rest),
+        "monitor" => cmd_monitor(&rest),
         "norms" => cmd_norms(&rest),
         "inspect" => cmd_inspect(&rest),
         "accountant" => cmd_accountant(&rest),
@@ -102,6 +107,86 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         summary
             .epsilon
             .map(|e| format!("  ε = {e:.3}"))
+            .unwrap_or_default(),
+    );
+    Ok(())
+}
+
+/// `pegrad monitor`: a training run with the telemetry subsystem forced
+/// on — per-layer gradient-norm histograms/quantiles, outlier flags and a
+/// gradient-noise-scale estimate, written as a JSON report. Runs on the
+/// fused engine, so it works in every environment (no artifacts/PJRT).
+fn cmd_monitor(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        ArgSpec::opt(
+            "config",
+            "TOML config (must use a rust-engine mode; default: rust_pegrad on synth data)",
+        ),
+        ArgSpec::opt("steps", "override the step count"),
+        ArgSpec::opt("out", "also write the report to this path"),
+        ArgSpec::switch("print", "print the report JSON to stdout"),
+        ArgSpec::switch("help", "show options"),
+    ];
+    let p = parse(argv, &specs)?;
+    if p.has("help") {
+        println!("pegrad monitor options:\n{}", help(&specs));
+        return Ok(());
+    }
+    let mut cfg = match p.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config {
+            mode: RunMode::RustPegrad,
+            run_name: "monitor".into(),
+            ..Config::default()
+        },
+    };
+    cfg.apply_overrides(&p.overrides)?;
+    if !cfg.mode.is_rust_engine() {
+        bail!(
+            "pegrad monitor taps the in-process fused engine; set mode = \
+             \"rust_pegrad\" | \"rust_clipped\" | \"rust_normalized\" (got '{}')",
+            cfg.mode.name()
+        );
+    }
+    cfg.telemetry.enabled = true;
+    if let Some(steps) = p.get_usize("steps")? {
+        cfg.steps = steps;
+    }
+    cfg.validate()?;
+
+    let mut tr = Trainer::new(cfg)?;
+    let summary = tr.run()?;
+    let mon = tr.telemetry().expect("monitor mode forces telemetry on");
+    if let Some(out) = p.get("out") {
+        mon.write_report(std::path::Path::new(out))?;
+        println!("report written to {out}");
+    }
+    if p.has("print") {
+        println!("{}", mon.report());
+    }
+    let gns = mon
+        .gns()
+        .total()
+        .map(|t| {
+            if t.b_simple.is_finite() {
+                format!("{:.2}", t.b_simple)
+            } else {
+                "inf (noise-dominated at this m)".into()
+            }
+        })
+        .unwrap_or_else(|| "n/a".into());
+    println!(
+        "monitored {} steps: final loss {:.4}, {} outlier flags ({} examples \
+         flagged on the last step), gradient noise scale B_simple = {}{}",
+        summary.steps,
+        summary.final_loss,
+        mon.outliers().total_flags(),
+        mon.outliers().last_flagged().len(),
+        gns,
+        summary
+            .telemetry_path
+            .as_ref()
+            .map(|p| format!("\nreport: {}", p.display()))
             .unwrap_or_default(),
     );
     Ok(())

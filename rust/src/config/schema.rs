@@ -6,6 +6,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Result};
 
 use crate::optim::Schedule;
+use crate::telemetry::TelemetryConfig;
 
 use super::parse::{parse_toml, Value};
 
@@ -126,6 +127,10 @@ pub struct Config {
     pub model_m: usize,
     /// target norm for mode = "rust_normalized".
     pub normalize_target: f32,
+    /// `[telemetry]` section: streaming gradient-norm telemetry
+    /// (histograms, outlier flags, gradient noise scale) for the
+    /// rust-engine modes. Off by default.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for Config {
@@ -156,6 +161,7 @@ impl Default for Config {
             model_loss: "softmax_ce".into(),
             model_m: 16,
             normalize_target: 1.0,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -206,6 +212,14 @@ impl Config {
         }
         if self.mode == RunMode::RustNormalized && self.normalize_target <= 0.0 {
             bail!("normalize_target must be > 0");
+        }
+        self.telemetry.validate()?;
+        if self.telemetry.enabled && !self.mode.is_rust_engine() {
+            bail!(
+                "telemetry.enabled requires a rust-engine mode \
+                 (rust_pegrad|rust_clipped|rust_normalized): the layer taps \
+                 stream out of the in-process fused engine, not the AOT artifacts"
+            );
         }
         Ok(())
     }
@@ -331,6 +345,20 @@ fn apply(cfg: &mut Config, map: &BTreeMap<String, Value>) -> Result<()> {
                 privacy.delta = v.as_f64().ok_or_else(fail)?;
                 privacy_touched = true;
             }
+            "telemetry.enabled" => {
+                cfg.telemetry.enabled = v.as_bool().ok_or_else(fail)?
+            }
+            "telemetry.every" => cfg.telemetry.every = v.as_usize().ok_or_else(fail)?,
+            "telemetry.bins" => cfg.telemetry.bins = v.as_usize().ok_or_else(fail)?,
+            "telemetry.outlier_quantile" => {
+                cfg.telemetry.outlier_quantile = v.as_f64().ok_or_else(fail)?
+            }
+            "telemetry.outlier_zscore" => {
+                cfg.telemetry.outlier_zscore = v.as_f64().ok_or_else(fail)?
+            }
+            "telemetry.warmup_steps" => {
+                cfg.telemetry.warmup_steps = v.as_usize().ok_or_else(fail)?
+            }
             other => bail!("unknown config key '{other}'"),
         }
     }
@@ -428,6 +456,50 @@ mod tests {
         for name in ["rust_pegrad", "rust_clipped", "rust_normalized"] {
             assert_eq!(RunMode::parse(name).unwrap().name(), name);
         }
+    }
+
+    #[test]
+    fn parse_telemetry_section() {
+        let cfg = Config::from_toml(
+            r#"
+            mode = "rust_pegrad"
+
+            [telemetry]
+            enabled = true
+            every = 50
+            bins = 32
+            outlier_quantile = 0.95
+            outlier_zscore = 3.5
+            warmup_steps = 20
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.telemetry.enabled);
+        assert_eq!(cfg.telemetry.every, 50);
+        assert_eq!(cfg.telemetry.bins, 32);
+        assert_eq!(cfg.telemetry.outlier_quantile, 0.95);
+        assert_eq!(cfg.telemetry.outlier_zscore, 3.5);
+        assert_eq!(cfg.telemetry.warmup_steps, 20);
+        // defaults: off, valid
+        assert!(!Config::default().telemetry.enabled);
+    }
+
+    #[test]
+    fn telemetry_validation() {
+        // artifact modes cannot stream layer taps
+        let err = Config::from_toml("mode = \"pegrad\"\n[telemetry]\nenabled = true")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rust-engine"), "{err}");
+        // bad knobs rejected even when disabled
+        assert!(Config::from_toml("[telemetry]\nbins = 1").is_err());
+        assert!(Config::from_toml("[telemetry]\noutlier_quantile = 1.5").is_err());
+        assert!(Config::from_toml("[telemetry]\noutlier_zscore = 0").is_err());
+        // override path: --set telemetry.enabled=true
+        let mut cfg = Config::from_toml("mode = \"rust_pegrad\"").unwrap();
+        cfg.apply_overrides(&[("telemetry.enabled".into(), "true".into())])
+            .unwrap();
+        assert!(cfg.telemetry.enabled);
     }
 
     #[test]

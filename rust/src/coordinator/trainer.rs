@@ -26,6 +26,7 @@ use crate::runtime::{Manifest, Registry};
 use crate::sampler::{
     ImportanceConfig, ImportanceSampler, Sampler, UniformSampler,
 };
+use crate::telemetry::{LayerTap, TelemetryMonitor};
 use crate::tensor::{ops, Rng, Tensor};
 use crate::util::threadpool::bounded;
 use crate::util::Timer;
@@ -42,6 +43,8 @@ pub struct RunSummary {
     pub curve: Vec<(usize, f32)>,
     /// (ε, δ) at the end, for clipped runs.
     pub epsilon: Option<f64>,
+    /// Where the final telemetry report landed (`[telemetry]` runs only).
+    pub telemetry_path: Option<std::path::PathBuf>,
 }
 
 /// Owns everything a run needs. Single-threaded w.r.t. PJRT (see module
@@ -65,6 +68,9 @@ pub struct Trainer {
     dev_params: Option<Vec<xla::PjRtBuffer>>,
     optimizer: Box<dyn Optimizer>,
     accountant: Option<RdpAccountant>,
+    /// Streaming gradient-norm telemetry (`[telemetry]` section; rust
+    /// modes only — the monitor taps the fused engine's backward pass).
+    monitor: Option<TelemetryMonitor>,
     pub metrics: MetricsLogger,
     step: usize,
     /// L3-vs-L2 step-time breakdown, filled when `PEGRAD_PROFILE=1`
@@ -159,6 +165,17 @@ impl Trainer {
         });
 
         let params = spec.init_params(&mut rng);
+        let monitor = cfg.telemetry.enabled.then(|| {
+            let mut mon =
+                TelemetryMonitor::new(&cfg.telemetry, spec.n_layers(), spec.m, train.len());
+            // the GNS decomposition is unbiased only for the plain uniform
+            // minibatch mean; IS weights and the §6 rescales shift both
+            // moments, so the report must say which one it is
+            if cfg.sampler != SamplerKind::Uniform || cfg.mode != RunMode::RustPegrad {
+                mon.mark_weighted_gradients();
+            }
+            mon
+        });
         let metrics = MetricsLogger::new(&cfg.out_dir, &cfg.run_name, 25)?;
         let profile = std::env::var("PEGRAD_PROFILE")
             .ok()
@@ -177,10 +194,16 @@ impl Trainer {
             dev_params: None,
             optimizer,
             accountant,
+            monitor,
             metrics,
             step: 0,
             profile,
         })
+    }
+
+    /// The live telemetry monitor, when `[telemetry]` is enabled.
+    pub fn telemetry(&self) -> Option<&TelemetryMonitor> {
+        self.monitor.as_ref()
     }
 
     /// Resume parameters/step/rng from a checkpoint.
@@ -311,6 +334,19 @@ impl Trainer {
             curve.push((self.step, rec.loss));
             self.metrics.record(&StepRecord { step_ms, ..rec });
 
+            if let Some(mon) = &self.monitor {
+                let every = self.cfg.telemetry.every;
+                if every > 0 && self.step > 0 && self.step % every == 0 {
+                    let path = self
+                        .metrics
+                        .dir()
+                        .join(format!("telemetry-{:06}.json", self.step));
+                    if let Err(e) = mon.write_report(&path) {
+                        log::warn!("telemetry snapshot failed: {e}");
+                    }
+                }
+            }
+
             if self.cfg.eval_every > 0
                 && self.step > 0
                 && self.step % self.cfg.eval_every == 0
@@ -352,6 +388,21 @@ impl Trainer {
         if let Some(p) = &self.profile {
             log::info!("PEGRAD_PROFILE {}", p.report());
         }
+        // telemetry is observation-only: a failed report write must not
+        // turn a completed training run into an error
+        let telemetry_path = self.monitor.as_ref().and_then(|mon| {
+            let path = self.metrics.dir().join("telemetry.json");
+            match mon.write_report(&path) {
+                Ok(()) => {
+                    log::info!("telemetry report: {}", path.display());
+                    Some(path)
+                }
+                Err(e) => {
+                    log::warn!("telemetry report failed: {e}");
+                    None
+                }
+            }
+        });
         Ok(RunSummary {
             steps: self.cfg.steps,
             final_loss: curve.last().map(|&(_, l)| l).unwrap_or(f32::NAN),
@@ -364,10 +415,13 @@ impl Trainer {
                 .as_ref()
                 .zip(self.cfg.privacy.as_ref())
                 .map(|(a, p)| a.epsilon(p.delta)),
+            telemetry_path,
         })
     }
 
-    /// One fused-engine step: engine forward+backward, optional DP noise,
+    /// One fused-engine step: engine forward+backward (with the sampler's
+    /// unbiased per-example weights folded into the Mean-mode rescale, and
+    /// the telemetry tap attached when configured), optional DP noise,
     /// optimizer update, sampler feedback. No artifacts, no device I/O.
     fn execute_step_rust(&mut self, batch: &PreparedBatch, lr: f32) -> Result<StepRecord> {
         let mode = match self.cfg.mode {
@@ -381,8 +435,24 @@ impl Trainer {
             },
             _ => unreachable!("execute_step_rust called for an artifact mode"),
         };
+        // IS reweighting (§1): w_j = 1/(N p_j)/m, already batch-mean
+        // normalized by the sampler — uniform sampling yields exactly 1/m,
+        // so the engine's plain mean is the special case
+        let weights = matches!(self.cfg.mode, RunMode::RustPegrad)
+            .then_some(batch.weights.as_slice());
         let engine = self.engine.as_mut().expect("rust modes own an engine");
-        let stats = engine.step(&self.params, &batch.x, &batch.y, mode);
+        let tap = self
+            .monitor
+            .as_mut()
+            .map(|m| m as &mut dyn LayerTap);
+        let stats =
+            engine.step_streamed(&self.params, &batch.x, &batch.y, mode, weights, tap);
+        // complete the telemetry step BEFORE DP noise: the GNS big-batch
+        // moment should see the gradient the math defines (ḡ in mean mode,
+        // the clipped mean in clipped mode), not the privacy noise
+        if let Some(mon) = self.monitor.as_mut() {
+            mon.end_step(&batch.indices, self.engine.as_ref().unwrap().grads());
+        }
 
         if let (RunMode::RustClipped, Some(p)) = (self.cfg.mode, self.cfg.privacy.clone()) {
             if p.noise_sigma > 0.0 {

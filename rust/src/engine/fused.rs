@@ -27,6 +27,8 @@
 use crate::nn::loss::Targets;
 use crate::nn::ModelSpec;
 use crate::pegrad::PerExampleNorms;
+use crate::telemetry::LayerTap;
+use crate::tensor::ops::Activation;
 use crate::tensor::{ops, Tensor};
 
 use super::workspace::Workspace;
@@ -34,11 +36,19 @@ use super::workspace::Workspace;
 /// Below this many multiply-adds a layer's backward runs single-threaded.
 const ENGINE_PAR_THRESHOLD: usize = 64 * 64 * 16;
 
+/// Below this many elements the forward activation/phi' loop stays
+/// single-threaded (elementwise work only pays for fan-out at m ≥ ~1024
+/// with the transcendental activations).
+const ACT_PAR_THRESHOLD: usize = 1 << 15;
+
 /// What the engine folds into the gradient accumulation.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EngineMode {
     /// Mean gradient + per-example norms in one streamed pass
-    /// (coefficients `1/m` known upfront — no Zbar retention).
+    /// (coefficients known upfront — no Zbar retention). The default
+    /// coefficient is the uniform `1/m`; [`FusedEngine::step_streamed`]
+    /// accepts per-example weights (the importance sampler's unbiased
+    /// `w_j = 1/(N p_j)`, batch-mean normalized) that replace it.
     Mean,
     /// §6 clipping: `Σ_j min(1, c/||g_j||)·g_j`; `mean` divides by m.
     Clip { c: f32, mean: bool },
@@ -125,12 +135,43 @@ impl FusedEngine {
         y: &Targets,
         mode: EngineMode,
     ) -> EngineStats {
+        self.step_streamed(params, x, y, mode, None, None)
+    }
+
+    /// [`FusedEngine::step`] with the two streaming extensions:
+    ///
+    /// * `weights` — per-example coefficients replacing Mean mode's
+    ///   uniform `1/m` (the importance sampler's unbiased reweighting
+    ///   `w_j = 1/(N p_j)/m`; rejected in the §6 modes, whose
+    ///   coefficients are derived from the norms);
+    /// * `tap` — a [`LayerTap`] receiving each layer's per-example
+    ///   squared norms `s_j^(l)` as the backward traversal produces them
+    ///   (top-down), then the totals. The tap adds zero matmul flops and
+    ///   zero extra traversals — `tests/fused_engine.rs` proves the flop
+    ///   count is identical with and without it.
+    pub fn step_streamed(
+        &mut self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Targets,
+        mode: EngineMode,
+        weights: Option<&[f32]>,
+        mut tap: Option<&mut dyn LayerTap>,
+    ) -> EngineStats {
         let spec = &self.spec;
         let n = spec.n_layers();
         let m = spec.m;
         assert_eq!(x.dims(), &[m, spec.in_dim()], "engine batch shape");
         assert_eq!(y.len(), m, "engine target count");
         assert_eq!(params.len(), n, "engine param count");
+        if let Some(w) = weights {
+            assert_eq!(w.len(), m, "engine weight count");
+            assert!(
+                matches!(mode, EngineMode::Mean),
+                "per-example weights fold into Mean-mode coefficients only; \
+                 the §6 modes derive their coefficients from the norms"
+            );
+        }
         let retain_zbars = !matches!(mode, EngineMode::Mean);
         if retain_zbars {
             self.ws.ensure_zbars();
@@ -149,6 +190,7 @@ impl FusedEngine {
             z_sq,
             s_total,
             norms,
+            s_layer,
             coef,
             grads,
             ..
@@ -177,13 +219,14 @@ impl FusedEngine {
             );
             crate::nn::count_flops(2 * m as u64 * (d_in + 1) as u64 * d_out as u64);
             if i < n - 1 {
-                let z = &zping[..m * d_out];
-                let a = &mut act[..m * d_out];
-                let dp = dphi[i].data_mut();
-                for ((av, dv), &zv) in a.iter_mut().zip(dp.iter_mut()).zip(z) {
-                    *av = spec.activation.apply(zv);
-                    *dv = spec.activation.grad(zv);
-                }
+                act_dphi_layer(
+                    spec.activation,
+                    &zping[..m * d_out],
+                    &mut act[..m * d_out],
+                    dphi[i].data_mut(),
+                    m,
+                    d_out,
+                );
                 src_is_x = false;
             } else {
                 logits.data_mut().copy_from_slice(&zping[..m * d_out]);
@@ -194,9 +237,14 @@ impl FusedEngine {
         // ---------------- backward (streaming, fused row norms) ----------
         spec.loss.grad_z_into_slice(logits, y, &mut zping[..m * dims[n]]);
         if let EngineMode::Mean = mode {
-            let w = 1.0 / m as f32;
-            for c in coef.iter_mut() {
-                *c = w;
+            match weights {
+                Some(w) => coef.copy_from_slice(w),
+                None => {
+                    let w = 1.0 / m as f32;
+                    for c in coef.iter_mut() {
+                        *c = w;
+                    }
+                }
             }
         }
         for g in grads.iter_mut() {
@@ -239,6 +287,16 @@ impl FusedEngine {
                     row_sq_into(cur, m, d_out, &mut z_sq[0]);
                 }
             }
+            // stream this layer's §4 norms out while they are hot — the
+            // tap sees s_j^(i) in the same traversal that produced it
+            if let Some(t) = &mut tap {
+                for (s, (&z, &h)) in
+                    s_layer.iter_mut().zip(z_sq[i].iter().zip(h_sq[i].iter()))
+                {
+                    *s = z * h;
+                }
+                t.on_layer(i, &s_layer[..]);
+            }
             if i > 0 {
                 std::mem::swap(zping, zpong);
             }
@@ -252,6 +310,9 @@ impl FusedEngine {
             }
             s_total[j] = s;
             norms[j] = s.max(0.0).sqrt();
+        }
+        if let Some(t) = &mut tap {
+            t.on_step_end(&s_total[..], &per_ex_loss[..]);
         }
 
         // ---------------- §6 coefficients + deferred accumulation --------
@@ -319,6 +380,41 @@ fn augment_rows(src: &[f32], m: usize, d: usize, out: &mut [f32], h_sq: &mut [f3
         o[d] = 1.0;
         h_sq[j] = (acc + 1.0) as f32; // +1: the bias column of Haug
     }
+}
+
+/// `phi(z)` and `phi'(z)` for one contiguous row chunk. Elementwise, so
+/// any row-band split is bitwise-identical to the serial loop (the
+/// determinism test below exercises exactly that).
+fn act_dphi_chunk(act: Activation, z: &[f32], a: &mut [f32], dp: &mut [f32]) {
+    for ((av, dv), &zv) in a.iter_mut().zip(dp.iter_mut()).zip(z) {
+        *av = act.apply(zv);
+        *dv = act.grad(zv);
+    }
+}
+
+/// Row-band-parallel driver for [`act_dphi_chunk`]: the forward
+/// activation/phi' loop fans out across scoped threads above
+/// [`ACT_PAR_THRESHOLD`] elements (the same borrow-don't-copy band
+/// discipline as [`backprop_layer`] and `ops::matmul`).
+fn act_dphi_layer(act: Activation, z: &[f32], a: &mut [f32], dp: &mut [f32], m: usize, d: usize) {
+    debug_assert_eq!(z.len(), m * d);
+    debug_assert_eq!(a.len(), m * d);
+    debug_assert_eq!(dp.len(), m * d);
+    if m * d <= ACT_PAR_THRESHOLD || m == 1 {
+        act_dphi_chunk(act, z, a, dp);
+        return;
+    }
+    let bands = crate::util::threadpool::bands().min(m);
+    let rows_per = m.div_ceil(bands);
+    std::thread::scope(|s| {
+        for ((zc, ac), dc) in z
+            .chunks(rows_per * d)
+            .zip(a.chunks_mut(rows_per * d))
+            .zip(dp.chunks_mut(rows_per * d))
+        {
+            s.spawn(move || act_dphi_chunk(act, zc, ac, dc));
+        }
+    });
 }
 
 fn row_sq_into(src: &[f32], m: usize, d: usize, out: &mut [f32]) {
@@ -512,6 +608,77 @@ mod tests {
         // different-shape engines don't interact
         let mut other = FusedEngine::new(mlp2.spec.clone());
         other.step(&mlp2.params, &x2, &y2, EngineMode::Mean);
+    }
+
+    /// Satellite guard: the fanned-out activation/phi' loop is bitwise
+    /// identical to the serial loop, across the threshold boundary and
+    /// with ragged last bands.
+    #[test]
+    fn act_dphi_parallel_matches_serial_bitwise() {
+        let mut rng = Rng::new(42);
+        for &(m, d) in &[(1usize, 7usize), (64, 16), (1024, 48), (2048, 33)] {
+            for act in [
+                Activation::Relu,
+                Activation::Tanh,
+                Activation::Gelu,
+                Activation::Sigmoid,
+            ] {
+                let z = Tensor::randn(vec![m, d], &mut rng);
+                let mut a1 = vec![0f32; m * d];
+                let mut d1 = vec![0f32; m * d];
+                act_dphi_chunk(act, z.data(), &mut a1, &mut d1);
+                let mut a2 = vec![0f32; m * d];
+                let mut d2 = vec![0f32; m * d];
+                act_dphi_layer(act, z.data(), &mut a2, &mut d2, m, d);
+                assert_eq!(a1, a2, "phi diverged at m={m} d={d} {act:?}");
+                assert_eq!(d1, d2, "phi' diverged at m={m} d={d} {act:?}");
+            }
+        }
+    }
+
+    /// Satellite: Mean-mode per-example weights == the materialized
+    /// weighted-sum oracle, and uniform weights reproduce plain Mean
+    /// bitwise.
+    #[test]
+    fn weighted_mean_mode_matches_materialized_oracle() {
+        let (mlp, x, y) = setup(vec![5, 8, 4], Activation::Tanh, Loss::SoftmaxCe, 6, 11);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        let weights: Vec<f32> = (0..6).map(|j| 0.05 + 0.03 * j as f32).collect();
+        engine.step_streamed(&mlp.params, &x, &y, EngineMode::Mean, Some(&weights), None);
+        let pex = crate::pegrad::naive::per_example_grads(&mlp, &x, &y);
+        for i in 0..mlp.spec.n_layers() {
+            let mut want = Tensor::zeros(engine.grads()[i].dims().to_vec());
+            for (j, w) in weights.iter().enumerate() {
+                ops::axpy(&mut want, *w, &pex[j][i]);
+            }
+            prop::assert_all_close(engine.grads()[i].data(), want.data(), 1e-3)
+                .map_err(|e| format!("layer {i}: {e}"))
+                .unwrap();
+        }
+        // uniform weights are exactly the built-in 1/m path
+        let uni = vec![1.0 / 6.0f32; 6];
+        engine.step_streamed(&mlp.params, &x, &y, EngineMode::Mean, Some(&uni), None);
+        let weighted: Vec<Tensor> = engine.grads().to_vec();
+        engine.step(&mlp.params, &x, &y, EngineMode::Mean);
+        for (a, b) in weighted.iter().zip(engine.grads()) {
+            assert_eq!(a.data(), b.data(), "uniform weights diverged from 1/m");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "Mean-mode coefficients only")]
+    fn weights_rejected_outside_mean_mode() {
+        let (mlp, x, y) = setup(vec![4, 6, 3], Activation::Relu, Loss::SoftmaxCe, 4, 12);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        let w = vec![0.25f32; 4];
+        engine.step_streamed(
+            &mlp.params,
+            &x,
+            &y,
+            EngineMode::Clip { c: 1.0, mean: true },
+            Some(&w),
+            None,
+        );
     }
 
     #[test]

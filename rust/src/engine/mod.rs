@@ -24,6 +24,15 @@
 //! The two-pass reference (`nn::Mlp::forward_backward` →
 //! `pegrad::per_example_norms` → `pegrad::clipped_grads`) stays in-tree as
 //! the correctness oracle; `benches/e8_fused.rs` measures the gap.
+//!
+//! **Telemetry**: [`fused::FusedEngine::step_streamed`] additionally
+//! accepts a [`crate::telemetry::LayerTap`] that receives each layer's
+//! per-example squared norms during the backward traversal (the
+//! monitoring/auditing workload — histograms, outlier flags, gradient
+//! noise scale) and per-example Mean-mode coefficients (the importance
+//! sampler's unbiased weights). Both ride the existing traversal:
+//! `benches/e9_telemetry.rs` measures the overhead, the flop tests prove
+//! the matmul work is untouched.
 
 pub mod fused;
 pub mod workspace;

@@ -37,6 +37,10 @@ pub struct Workspace {
     pub(crate) z_sq: Vec<Vec<f32>>,
     pub(crate) s_total: Vec<f32>,
     pub(crate) norms: Vec<f32>,
+    /// Scratch for one layer's per-example norms handed to a
+    /// [`crate::telemetry::LayerTap`] (filled and consumed inside the
+    /// backward traversal; never read across layers).
+    pub(crate) s_layer: Vec<f32>,
     /// Per-example coefficients folded into the gradient matmul.
     pub(crate) coef: Vec<f32>,
     /// Gradient accumulators, one per weight matrix.
@@ -73,6 +77,7 @@ impl Workspace {
             z_sq: vec![vec![0.0; m]; n],
             s_total: vec![0.0; m],
             norms: vec![0.0; m],
+            s_layer: vec![0.0; m],
             coef: vec![0.0; m],
             grads,
             dims,
@@ -107,6 +112,7 @@ impl Workspace {
             + self.per_ex_loss.len()
             + self.s_total.len()
             + self.norms.len()
+            + self.s_layer.len()
             + self.coef.len()
             + self.h_sq.iter().map(Vec::len).sum::<usize>()
             + self.z_sq.iter().map(Vec::len).sum::<usize>();

@@ -28,6 +28,7 @@ pub mod pegrad;
 pub mod privacy;
 pub mod runtime;
 pub mod sampler;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 

@@ -122,6 +122,36 @@ impl Mlp {
         }
     }
 
+    /// [`Mlp::backward_streamed`] driving a [`crate::telemetry::LayerTap`]:
+    /// each layer's per-example squared gradient norms
+    /// `s_j^(i) = ||Zbar_j^(i)||²·||Haug_j^(i-1)||²` stream to the sink as
+    /// the traversal produces them, then the totals. This is the reference
+    /// (oracle) telemetry source — the per-layer values are computed with
+    /// the exact arithmetic of [`crate::pegrad::per_example_norms`], so
+    /// tests can require bitwise equality; the fused engine's tap is the
+    /// workspace-backed production version of the same stream.
+    pub fn backward_streamed_tap(
+        &self,
+        fwd: &Forward,
+        y: &Targets,
+        tap: &mut dyn crate::telemetry::LayerTap,
+    ) {
+        let m = fwd.logits.dims()[0];
+        let mut s_total = vec![0f32; m];
+        let mut s_layer = vec![0f32; m];
+        self.backward_streamed(fwd, y, |i, haug, zbar| {
+            let zb_sq = ops::row_sq_norms(zbar);
+            let h_sq = ops::row_sq_norms(haug);
+            for j in 0..m {
+                let s = zb_sq[j] * h_sq[j];
+                s_layer[j] = s;
+                s_total[j] += s;
+            }
+            tap.on_layer(i, &s_layer);
+        });
+        tap.on_step_end(&s_total, &fwd.per_ex_loss);
+    }
+
     /// Standard batched backprop over the captured forward: the retaining
     /// tap (materializes every `Zbar^(i)` and `dC/dW^(i)`).
     pub fn backward(&self, fwd: &Forward, y: &Targets) -> Backward {
@@ -275,6 +305,26 @@ mod tests {
         });
         // top-down traversal, every layer visited exactly once
         assert_eq!(seen, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn backward_streamed_tap_matches_oracle_bitwise() {
+        let (mlp, x, y) = tiny(vec![4, 8, 6, 3], Loss::SoftmaxCe, Activation::Gelu, 5);
+        let fwd = mlp.forward(&x, &y);
+        let bwd = mlp.backward(&fwd, &y);
+        let oracle = crate::pegrad::per_example_norms(&fwd, &bwd);
+        let mut tap = crate::telemetry::RecordingTap::default();
+        mlp.backward_streamed_tap(&fwd, &y, &mut tap);
+        let s = tap.s_layers();
+        for j in 0..5 {
+            // same arithmetic as the oracle -> bitwise equality required
+            assert_eq!(s[j], oracle.s_layers[j], "example {j}");
+        }
+        // totals accumulate in traversal order (top-down) vs the oracle's
+        // bottom-up -> equal up to f32 reassociation only
+        prop::assert_all_close(&tap.s_total, &oracle.s_total, 1e-5).unwrap();
+        assert_eq!(tap.per_ex_loss, fwd.per_ex_loss);
+        assert_eq!(tap.steps_ended, 1);
     }
 
     #[test]

@@ -34,23 +34,17 @@ impl PerExampleNorms {
 
 /// §4 via the streaming layer tap: norms accumulate as each `Zbar^(i)` is
 /// produced and the intermediate is dropped — no `Backward` materialized,
-/// O(1) layers of `Zbar` live. (The fused engine in [`crate::engine`]
-/// additionally folds the row norms into the backward kernels themselves.)
+/// O(1) layers of `Zbar` live. One implementation of the arithmetic:
+/// this is [`Mlp::backward_streamed_tap`] recorded into the oracle layout
+/// (the fused engine in [`crate::engine`] additionally folds the row
+/// norms into the backward kernels themselves).
 pub fn per_example_norms_streamed(mlp: &Mlp, fwd: &Forward, y: &Targets) -> PerExampleNorms {
-    let n = mlp.spec.n_layers();
-    let m = fwd.logits.dims()[0];
-    let mut s_layers = vec![vec![0f32; n]; m];
-    let mut s_total = vec![0f32; m];
-    mlp.backward_streamed(fwd, y, |i, haug, zbar| {
-        let zb_sq = ops::row_sq_norms(zbar);
-        let h_sq = ops::row_sq_norms(haug);
-        for j in 0..m {
-            let s = zb_sq[j] * h_sq[j];
-            s_layers[j][i] = s;
-            s_total[j] += s;
-        }
-    });
-    PerExampleNorms { s_layers, s_total }
+    let mut tap = crate::telemetry::RecordingTap::default();
+    mlp.backward_streamed_tap(fwd, y, &mut tap);
+    PerExampleNorms {
+        s_layers: tap.s_layers(),
+        s_total: tap.s_total,
+    }
 }
 
 /// Apply the §4 factorization to captured fwd/bwd intermediates.

@@ -1,0 +1,268 @@
+//! Gradient-noise-scale estimation from streamed per-example norms.
+//!
+//! Follows the big-batch vs small-batch decomposition of McCandlish et al.
+//! 2018 as specialized by Gray et al. 2024 (PAPERS.md) to per-example
+//! gradients: with batch size `m`, every step already yields both sides of
+//! the decomposition for free —
+//!
+//! * `S_small = E_j ||g_j||²` — the mean per-example squared norm, i.e.
+//!   the batch-size-1 norm estimate (streamed by the §4 trick), and
+//! * `S_big = ||ḡ||²` — the squared norm of the accumulated batch
+//!   gradient the optimizer is about to apply.
+//!
+//! Unbiased moment estimates (B_big = m, B_small = 1):
+//!
+//! ```text
+//! |G|²  = (m·S_big − S_small) / (m − 1)       true gradient signal
+//! tr(Σ) = (S_small − S_big) · m / (m − 1)     per-example noise
+//! B_simple = tr(Σ) / |G|²                     the gradient noise scale
+//! ```
+//!
+//! Gray et al.'s observation is that *per-layer* norms predict the total
+//! well; we track the decomposition per layer and in total, averaging the
+//! two moments across steps before forming the ratio (ratio-of-means, not
+//! mean-of-ratios — single-step ratios are wildly noisy).
+//!
+//! The unbiasedness of the decomposition assumes the batch is a UNIFORM
+//! draw and `ḡ` is the plain minibatch mean. Importance-sampled weights
+//! and the §6 clip/normalize rescales shift both moments; the estimator
+//! still runs on those streams, but the monitor's report carries an
+//! `unbiased` flag so the two cases cannot be confused.
+
+use crate::util::Json;
+
+/// Accumulates the two moments per layer across steps.
+pub struct GnsEstimator {
+    m: usize,
+    /// Per-layer running sums of `mean_j s_j^(l)` (small-batch moment).
+    sum_small: Vec<f64>,
+    /// Per-layer running sums of `||ḡ^(l)||²` (big-batch moment).
+    sum_big: Vec<f64>,
+    steps: u64,
+    /// Steps excluded because a moment was non-finite (divergence):
+    /// excluding the WHOLE step keeps the ratio-of-means consistent —
+    /// skipping single values while counting the step would bias every
+    /// moment low.
+    skipped: u64,
+}
+
+/// One decomposition: the moments and the implied noise scale.
+#[derive(Debug, Clone, Copy)]
+pub struct GnsEstimate {
+    /// Mean per-example squared norm `E_j ||g_j||²` (per layer or total).
+    pub small_sq: f64,
+    /// Mean squared norm of the batch gradient `||ḡ||²`.
+    pub big_sq: f64,
+    /// Unbiased `|G|²` (can be ≤ 0 when noise dominates at this m).
+    pub grad_sq: f64,
+    /// Unbiased `tr(Σ)`.
+    pub noise_tr: f64,
+    /// `B_simple = tr(Σ)/|G|²`; infinite when `|G|² <= 0`.
+    pub b_simple: f64,
+}
+
+impl GnsEstimate {
+    fn from_moments(m: usize, small: f64, big: f64) -> GnsEstimate {
+        let mf = m as f64;
+        let grad_sq = (mf * big - small) / (mf - 1.0);
+        let noise_tr = (small - big) * mf / (mf - 1.0);
+        let b_simple = if grad_sq > 0.0 {
+            noise_tr / grad_sq
+        } else {
+            f64::INFINITY
+        };
+        GnsEstimate {
+            small_sq: small,
+            big_sq: big,
+            grad_sq,
+            noise_tr,
+            b_simple,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let num_or_null = |v: f64| if v.is_finite() { Json::num(v) } else { Json::Null };
+        Json::obj(vec![
+            ("small_sq", num_or_null(self.small_sq)),
+            ("big_sq", num_or_null(self.big_sq)),
+            ("grad_sq", num_or_null(self.grad_sq)),
+            ("noise_tr", num_or_null(self.noise_tr)),
+            ("b_simple", num_or_null(self.b_simple)),
+        ])
+    }
+}
+
+impl GnsEstimator {
+    /// `m` is the per-step batch size; needs `m >= 2` for the
+    /// decomposition to be identified (with m = 1 both moments coincide).
+    pub fn new(m: usize, n_layers: usize) -> GnsEstimator {
+        GnsEstimator {
+            m,
+            sum_small: vec![0.0; n_layers],
+            sum_big: vec![0.0; n_layers],
+            steps: 0,
+            skipped: 0,
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    /// Record one step: `small_sq[l] = mean_j s_j^(l)` (from the layer
+    /// taps) and `big_sq[l] = ||ḡ^(l)||²` (from the accumulated gradient
+    /// the optimizer consumes). A step with any non-finite moment is
+    /// excluded entirely (and counted in [`GnsEstimator::skipped`]).
+    pub fn observe(&mut self, small_sq: &[f64], big_sq: &[f64]) {
+        assert_eq!(small_sq.len(), self.sum_small.len());
+        assert_eq!(big_sq.len(), self.sum_big.len());
+        if small_sq
+            .iter()
+            .chain(big_sq.iter())
+            .any(|v| !v.is_finite())
+        {
+            self.skipped += 1;
+            return;
+        }
+        for (acc, &v) in self.sum_small.iter_mut().zip(small_sq) {
+            *acc += v;
+        }
+        for (acc, &v) in self.sum_big.iter_mut().zip(big_sq) {
+            *acc += v;
+        }
+        self.steps += 1;
+    }
+
+    /// Per-layer estimates; `None` before any step or when m < 2.
+    pub fn per_layer(&self) -> Option<Vec<GnsEstimate>> {
+        if self.steps == 0 || self.m < 2 {
+            return None;
+        }
+        let s = self.steps as f64;
+        Some(
+            self.sum_small
+                .iter()
+                .zip(&self.sum_big)
+                .map(|(&a, &b)| GnsEstimate::from_moments(self.m, a / s, b / s))
+                .collect(),
+        )
+    }
+
+    /// Whole-model estimate (moments summed over layers).
+    pub fn total(&self) -> Option<GnsEstimate> {
+        if self.steps == 0 || self.m < 2 {
+            return None;
+        }
+        let s = self.steps as f64;
+        let small: f64 = self.sum_small.iter().sum::<f64>() / s;
+        let big: f64 = self.sum_big.iter().sum::<f64>() / s;
+        Some(GnsEstimate::from_moments(self.m, small, big))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let per_layer = match self.per_layer() {
+            Some(v) => Json::Arr(v.iter().map(GnsEstimate::to_json).collect()),
+            None => Json::Null,
+        };
+        let total = match self.total() {
+            Some(t) => t.to_json(),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("m", Json::num(self.m as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("skipped_steps", Json::num(self.skipped as f64)),
+            ("per_layer", per_layer),
+            ("total", total),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_gradients_have_zero_noise() {
+        // every example's gradient equals the mean: S_small == S_big
+        let mut g = GnsEstimator::new(8, 2);
+        for _ in 0..5 {
+            g.observe(&[1.0, 2.0], &[1.0, 2.0]);
+        }
+        let t = g.total().unwrap();
+        assert!(t.noise_tr.abs() < 1e-12, "{t:?}");
+        assert!(t.b_simple.abs() < 1e-12);
+        assert!((t.grad_sq - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_form_moments() {
+        // m=4, S_small=1.0, S_big=0.4:
+        // |G|² = (1.6 - 1)/3 = 0.2; trΣ = 0.6·4/3 = 0.8; B = 4
+        let mut g = GnsEstimator::new(4, 1);
+        g.observe(&[1.0], &[0.4]);
+        let t = g.total().unwrap();
+        assert!((t.grad_sq - 0.2).abs() < 1e-12);
+        assert!((t.noise_tr - 0.8).abs() < 1e-12);
+        assert!((t.b_simple - 4.0).abs() < 1e-9);
+        let pl = g.per_layer().unwrap();
+        assert_eq!(pl.len(), 1);
+        assert!((pl[0].b_simple - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pure_noise_reports_infinite_scale() {
+        // zero-mean gradients: m·S_big == S_small -> |G|² == 0
+        let mut g = GnsEstimator::new(4, 1);
+        g.observe(&[1.0], &[0.25]);
+        let t = g.total().unwrap();
+        assert!(t.b_simple.is_infinite());
+        // JSON must stay valid: non-finite -> null
+        let j = t.to_json();
+        assert_eq!(j.get("b_simple").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn degenerate_cases_return_none() {
+        let g = GnsEstimator::new(8, 1);
+        assert!(g.total().is_none(), "no steps yet");
+        let mut g1 = GnsEstimator::new(1, 1);
+        g1.observe(&[1.0], &[1.0]);
+        assert!(g1.total().is_none(), "m=1 is unidentified");
+        assert_eq!(g1.to_json().get("total").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn non_finite_steps_excluded_entirely() {
+        let mut g = GnsEstimator::new(4, 2);
+        g.observe(&[1.0, 2.0], &[0.5, 1.0]);
+        g.observe(&[f64::NAN, 2.0], &[0.5, 1.0]); // whole step out
+        g.observe(&[1.0, 2.0], &[0.5, f64::INFINITY]); // whole step out
+        assert_eq!(g.steps(), 1);
+        assert_eq!(g.skipped(), 2);
+        let t = g.total().unwrap();
+        // moments reflect ONLY the clean step — no denominator bias
+        assert!((t.small_sq - 3.0).abs() < 1e-12, "{t:?}");
+        assert!((t.big_sq - 1.5).abs() < 1e-12);
+        let j = g.to_json();
+        assert_eq!(j.get("skipped_steps").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn ratio_of_means_across_steps() {
+        // two steps with different moments: the estimate uses averaged
+        // moments, not averaged per-step ratios
+        let mut g = GnsEstimator::new(2, 1);
+        g.observe(&[2.0], &[1.5]);
+        g.observe(&[4.0], &[2.5]);
+        let t = g.total().unwrap();
+        // means: small 3, big 2 -> |G|² = (4-3)/1 = 1; trΣ = (3-2)·2 = 2
+        assert!((t.grad_sq - 1.0).abs() < 1e-12);
+        assert!((t.noise_tr - 2.0).abs() < 1e-12);
+        assert!((t.b_simple - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,183 @@
+//! Streaming gradient-norm telemetry (the monitoring/auditing workload).
+//!
+//! The paper makes per-example gradient norms cheap enough to compute for
+//! *every* example on *every* step — which turns them into a first-class
+//! monitoring signal, not just a clipping input. This subsystem consumes
+//! the fused engine's backward traversal through the [`LayerTap`] sink:
+//! the per-layer squared norms `s_j^(l) = ||Zbar_j^(l)||²·||Haug_j^(l-1)||²`
+//! stream out *as the backward pass produces them* — zero extra forward or
+//! backward traversals, zero extra matmul flops (proved by the flop-counter
+//! test in `tests/fused_engine.rs`), and no per-step allocations.
+//!
+//! What is built on the stream:
+//!
+//! * [`sketch`] — allocation-free online accumulators: a log-spaced
+//!   streaming histogram, a P² quantile sketch (Jain & Chlamtac 1985) and
+//!   the Welford mean/variance from `util::stats`.
+//! * [`outlier`] — flags examples whose gradient norm exceeds a
+//!   configurable quantile or z-score threshold, with persistent
+//!   per-example flag counts across epochs (data-auditing signal: noisy /
+//!   mislabeled examples accumulate flags).
+//! * [`gns`] — a gradient-noise-scale estimator in the style of
+//!   Gray et al. 2024 ("Normalization Layer Per-Example Gradients are
+//!   Sufficient to Predict Gradient Noise Scale in Transformers",
+//!   PAPERS.md): the big-batch vs per-example norm decomposition, computed
+//!   from the same streamed values, per layer and in total.
+//! * [`monitor`] — [`monitor::TelemetryMonitor`] owns all of the above,
+//!   implements [`LayerTap`], and renders the JSON report that
+//!   `pegrad monitor` / the trainer's `[telemetry]` section emit.
+//!
+//! Dependency direction: `engine` and `nn` know only the [`LayerTap`]
+//! trait; everything stateful lives here and is driven by the trainer.
+
+pub mod gns;
+pub mod monitor;
+pub mod outlier;
+pub mod sketch;
+
+pub use gns::GnsEstimator;
+pub use monitor::TelemetryMonitor;
+pub use outlier::{OutlierConfig, OutlierDetector};
+pub use sketch::{P2Quantile, StreamingHistogram};
+
+/// Sink for per-layer squared gradient norms streamed out of a backward
+/// traversal. Implementations must not allocate on the hot path (they are
+/// called once per layer per training step).
+///
+/// Contract (upheld by [`crate::engine::FusedEngine`] and
+/// [`crate::nn::Mlp::backward_streamed_tap`]):
+///
+/// * `on_layer(l, s_layer)` fires once per weight matrix `l`, in the
+///   backward traversal's top-down order (`n-1, n-2, .., 0`), with
+///   `s_layer[j] = s_j^(l)` — example j's squared gradient norm for that
+///   layer, the §4 factorization `||Zbar_j^(l)||² · ||Haug_j^(l-1)||²`.
+/// * `on_step_end(s_total, per_ex_loss)` fires once after the traversal
+///   with the per-example totals `s_total[j] = Σ_l s_j^(l)` and losses.
+pub trait LayerTap {
+    fn on_layer(&mut self, layer: usize, s_layer: &[f32]);
+    fn on_step_end(&mut self, s_total: &[f32], per_ex_loss: &[f32]);
+}
+
+/// Recording tap for tests and offline analysis: materializes every
+/// streamed value in the oracle's `[example][layer]` layout.
+#[derive(Debug, Clone, Default)]
+pub struct RecordingTap {
+    /// `layers[l][j] = s_j^(l)` in stream order (index by layer).
+    pub layers: Vec<(usize, Vec<f32>)>,
+    pub s_total: Vec<f32>,
+    pub per_ex_loss: Vec<f32>,
+    pub steps_ended: usize,
+}
+
+impl LayerTap for RecordingTap {
+    fn on_layer(&mut self, layer: usize, s_layer: &[f32]) {
+        self.layers.push((layer, s_layer.to_vec()));
+    }
+
+    fn on_step_end(&mut self, s_total: &[f32], per_ex_loss: &[f32]) {
+        self.s_total = s_total.to_vec();
+        self.per_ex_loss = per_ex_loss.to_vec();
+        self.steps_ended += 1;
+    }
+}
+
+impl RecordingTap {
+    /// Reassemble the stream into `s_layers[j][l]` (the
+    /// [`crate::pegrad::PerExampleNorms`] layout). The row width is the
+    /// highest layer index seen, and when the tap recorded several steps
+    /// each slot holds the MOST RECENT step's value (entries replay in
+    /// stream order) — not a concatenation of steps.
+    pub fn s_layers(&self) -> Vec<Vec<f32>> {
+        let n = self.layers.iter().map(|(l, _)| *l + 1).max().unwrap_or(0);
+        let m = self.layers.first().map(|(_, v)| v.len()).unwrap_or(0);
+        let mut out = vec![vec![0f32; n]; m];
+        for (l, vals) in &self.layers {
+            for (j, &s) in vals.iter().enumerate() {
+                out[j][*l] = s;
+            }
+        }
+        out
+    }
+}
+
+/// Runtime knobs for the telemetry subsystem (`[telemetry]` config
+/// section; see `config::schema`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryConfig {
+    /// Master switch; when false the trainer attaches no tap at all.
+    pub enabled: bool,
+    /// Write a step-stamped report every N steps (0 = final report only).
+    pub every: usize,
+    /// Histogram bin count (log-spaced).
+    pub bins: usize,
+    /// Outlier rule: norm above this quantile of the running total-norm
+    /// distribution is flagged (in (0,1)).
+    pub outlier_quantile: f64,
+    /// Outlier rule: norm more than this many running standard deviations
+    /// above the running mean is flagged.
+    pub outlier_zscore: f64,
+    /// Steps before the outlier detector starts flagging (thresholds need
+    /// a populated sketch first).
+    pub warmup_steps: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            enabled: false,
+            every: 0,
+            bins: 64,
+            outlier_quantile: 0.99,
+            outlier_zscore: 4.0,
+            warmup_steps: 10,
+        }
+    }
+}
+
+impl TelemetryConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.bins < 2 {
+            anyhow::bail!("telemetry.bins must be >= 2");
+        }
+        if !(0.0 < self.outlier_quantile && self.outlier_quantile < 1.0) {
+            anyhow::bail!("telemetry.outlier_quantile must be in (0,1)");
+        }
+        if self.outlier_zscore <= 0.0 {
+            anyhow::bail!("telemetry.outlier_zscore must be > 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recording_tap_reassembles_layout() {
+        let mut tap = RecordingTap::default();
+        // top-down order, 2 layers, 3 examples
+        tap.on_layer(1, &[10.0, 11.0, 12.0]);
+        tap.on_layer(0, &[0.0, 1.0, 2.0]);
+        tap.on_step_end(&[10.0, 12.0, 14.0], &[0.5, 0.6, 0.7]);
+        let s = tap.s_layers();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], vec![0.0, 10.0]);
+        assert_eq!(s[2], vec![2.0, 12.0]);
+        assert_eq!(tap.steps_ended, 1);
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut c = TelemetryConfig::default();
+        c.validate().unwrap();
+        c.bins = 1;
+        assert!(c.validate().is_err());
+        c.bins = 8;
+        c.outlier_quantile = 1.0;
+        assert!(c.validate().is_err());
+        c.outlier_quantile = 0.9;
+        c.outlier_zscore = 0.0;
+        assert!(c.validate().is_err());
+    }
+}

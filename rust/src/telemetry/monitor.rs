@@ -1,0 +1,345 @@
+//! The telemetry aggregator: one [`TelemetryMonitor`] per training run.
+//!
+//! Implements [`LayerTap`] so the fused engine streams per-layer squared
+//! norms straight into the accumulators during its backward traversal;
+//! the trainer then calls [`TelemetryMonitor::end_step`] with the batch's
+//! dataset indices and the accumulated gradient (for the big-batch side of
+//! the gradient-noise-scale decomposition). Everything on the per-step
+//! path is allocation-free after construction.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::{ops, Tensor};
+use crate::util::stats::Welford;
+use crate::util::Json;
+
+use super::gns::GnsEstimator;
+use super::outlier::{OutlierConfig, OutlierDetector};
+use super::sketch::StreamingHistogram;
+use super::{LayerTap, TelemetryConfig};
+
+/// Online distribution summary of one norm stream (a layer or the total):
+/// a log-binned histogram plus Welford moments. Report quantiles derive
+/// from the HISTOGRAM — exact up to bin resolution and monotone in q even
+/// when the norm distribution drifts over training (P² marker heights lag
+/// on non-stationary streams; the P² sketch's production consumer is the
+/// outlier detector's O(1) running threshold, not these report fields).
+struct NormStats {
+    hist: StreamingHistogram,
+    stats: Welford,
+}
+
+impl NormStats {
+    fn new(bins: usize) -> NormStats {
+        NormStats {
+            hist: StreamingHistogram::new(bins),
+            stats: Welford::new(),
+        }
+    }
+
+    fn push(&mut self, norm: f32) {
+        // NaN lands in the histogram's underflow bucket (visible in the
+        // report as total != sum(counts)+overflow) and is excluded from
+        // the moments.
+        self.hist.push(norm);
+        if norm.is_finite() {
+            self.stats.push(norm as f64);
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let w = &self.stats;
+        let hq = |q: f64| self.hist.quantile(q).map(Json::num).unwrap_or(Json::Null);
+        let finite = |v: f64| if v.is_finite() { Json::num(v) } else { Json::Null };
+        Json::obj(vec![
+            ("count", Json::num(w.count() as f64)),
+            ("mean", finite(w.mean())),
+            ("std", finite(w.std())),
+            ("min", finite(w.min())),
+            ("max", finite(w.max())),
+            ("p50", hq(0.5)),
+            ("p90", hq(0.9)),
+            ("p99", hq(0.99)),
+            ("histogram", self.hist.to_json()),
+        ])
+    }
+}
+
+/// Everything the `[telemetry]` section turns on, in one object.
+pub struct TelemetryMonitor {
+    n_layers: usize,
+    m: usize,
+    layers: Vec<NormStats>,
+    total: NormStats,
+    loss: Welford,
+    outliers: OutlierDetector,
+    gns: GnsEstimator,
+    /// Scratch: this step's `mean_j s_j^(l)` per layer (small-batch GNS
+    /// moment), filled by `on_layer`, consumed by `end_step`.
+    step_small: Vec<f64>,
+    /// Scratch: this step's `||ḡ^(l)||²` per layer.
+    step_big: Vec<f64>,
+    /// Scratch: this step's per-example total norms, for the detector.
+    last_norms: Vec<f32>,
+    steps: u64,
+    flagged_last_step: usize,
+    /// True when the gradient stream satisfies the GNS decomposition's
+    /// assumptions (uniform sampling, plain mean gradient). Weighted /
+    /// clipped / normalized streams still produce useful moments but the
+    /// unbiasedness claim does not hold — the report says so.
+    gns_unbiased: bool,
+}
+
+impl TelemetryMonitor {
+    /// `n_layers`/`m` from the model spec, `dataset_n` for the persistent
+    /// per-example flag table.
+    pub fn new(
+        cfg: &TelemetryConfig,
+        n_layers: usize,
+        m: usize,
+        dataset_n: usize,
+    ) -> TelemetryMonitor {
+        TelemetryMonitor {
+            n_layers,
+            m,
+            layers: (0..n_layers).map(|_| NormStats::new(cfg.bins)).collect(),
+            total: NormStats::new(cfg.bins),
+            loss: Welford::new(),
+            outliers: OutlierDetector::new(
+                dataset_n,
+                OutlierConfig {
+                    quantile: cfg.outlier_quantile,
+                    zscore: cfg.outlier_zscore,
+                    warmup_steps: cfg.warmup_steps,
+                },
+            ),
+            gns: GnsEstimator::new(m, n_layers),
+            step_small: vec![0.0; n_layers],
+            step_big: vec![0.0; n_layers],
+            last_norms: vec![0.0; m],
+            steps: 0,
+            flagged_last_step: 0,
+            gns_unbiased: true,
+        }
+    }
+
+    /// Declare that the observed gradient stream is NOT the plain uniform
+    /// minibatch mean (importance-sampled weights, §6 clipping or
+    /// normalization): the GNS moments are still recorded, but the report
+    /// marks the decomposition as biased so readers don't mistake it for
+    /// the McCandlish/Gray unbiased estimate.
+    pub fn mark_weighted_gradients(&mut self) {
+        self.gns_unbiased = false;
+    }
+
+    /// Steps fully recorded (i.e. `end_step` calls).
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn flagged_last_step(&self) -> usize {
+        self.flagged_last_step
+    }
+
+    pub fn outliers(&self) -> &OutlierDetector {
+        &self.outliers
+    }
+
+    pub fn gns(&self) -> &GnsEstimator {
+        &self.gns
+    }
+
+    /// Complete one step: feed the outlier detector (dataset indices of
+    /// the batch + the totals streamed by `on_step_end`) and the GNS
+    /// estimator (`grads` = the accumulated per-layer gradient the
+    /// optimizer is about to consume — `ḡ` in Mean/weighted mode).
+    pub fn end_step(&mut self, indices: &[usize], grads: &[Tensor]) {
+        assert_eq!(grads.len(), self.n_layers, "gradient tensor count");
+        for (b, g) in self.step_big.iter_mut().zip(grads) {
+            *b = ops::sq_sum(g);
+        }
+        self.flagged_last_step = self.outliers.observe(indices, &self.last_norms);
+        self.gns.observe(&self.step_small, &self.step_big);
+        self.steps += 1;
+    }
+
+    /// The full JSON report (see module docs for the schema).
+    pub fn report(&self) -> Json {
+        Json::obj(vec![
+            ("telemetry", Json::str("pegrad.gradient_norms")),
+            ("steps", Json::num(self.steps as f64)),
+            ("m", Json::num(self.m as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            (
+                "loss",
+                if self.loss.count() > 0 {
+                    Json::obj(vec![
+                        ("mean", Json::num(self.loss.mean())),
+                        ("std", Json::num(self.loss.std())),
+                    ])
+                } else {
+                    Json::Null
+                },
+            ),
+            ("total", self.total.to_json()),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(NormStats::to_json).collect()),
+            ),
+            ("outliers", self.outliers.to_json(32)),
+            (
+                "gns",
+                match self.gns.to_json() {
+                    Json::Obj(mut m) => {
+                        m.insert("unbiased".into(), Json::Bool(self.gns_unbiased));
+                        Json::Obj(m)
+                    }
+                    other => other,
+                },
+            ),
+        ])
+    }
+
+    pub fn write_report(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        std::fs::write(path, format!("{}\n", self.report()))
+            .with_context(|| format!("writing telemetry report {}", path.display()))
+    }
+}
+
+/// Norm of one squared-norm value, PRESERVING non-finite inputs: clamping
+/// a NaN with `max(0.0)` would launder divergence into a benign 0.0 and
+/// defeat every downstream `is_finite` guard.
+fn norm_of(s: f32) -> f32 {
+    if s.is_finite() {
+        s.max(0.0).sqrt()
+    } else {
+        f32::NAN
+    }
+}
+
+impl LayerTap for TelemetryMonitor {
+    fn on_layer(&mut self, layer: usize, s_layer: &[f32]) {
+        debug_assert!(layer < self.n_layers);
+        let mut acc = 0f64;
+        for &s in s_layer {
+            self.layers[layer].push(norm_of(s));
+            // non-finite propagates into the moment, so the GNS estimator
+            // excludes the whole step instead of silently averaging less
+            acc += s as f64;
+        }
+        self.step_small[layer] = acc / s_layer.len().max(1) as f64;
+    }
+
+    fn on_step_end(&mut self, s_total: &[f32], per_ex_loss: &[f32]) {
+        debug_assert_eq!(s_total.len(), self.last_norms.len());
+        for (out, &s) in self.last_norms.iter_mut().zip(s_total) {
+            let n = norm_of(s);
+            self.total.push(n);
+            *out = n;
+        }
+        for &l in per_ex_loss {
+            if l.is_finite() {
+                self.loss.push(l as f64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed_step(mon: &mut TelemetryMonitor, scale: f32) {
+        // 2 layers, m = 4
+        let s0: Vec<f32> = (0..4).map(|j| scale * (1.0 + j as f32)).collect();
+        let s1: Vec<f32> = (0..4).map(|j| scale * (2.0 + j as f32)).collect();
+        let total: Vec<f32> = s0.iter().zip(&s1).map(|(a, b)| a + b).collect();
+        mon.on_layer(1, &s1);
+        mon.on_layer(0, &s0);
+        mon.on_step_end(&total, &[0.5, 0.4, 0.3, 0.2]);
+        let grads = vec![Tensor::full(vec![2, 2], 0.5), Tensor::full(vec![1, 3], 1.0)];
+        mon.end_step(&[0, 1, 2, 3], &grads);
+    }
+
+    #[test]
+    fn accumulates_and_reports() {
+        let cfg = TelemetryConfig {
+            enabled: true,
+            bins: 16,
+            warmup_steps: 2,
+            ..Default::default()
+        };
+        let mut mon = TelemetryMonitor::new(&cfg, 2, 4, 16);
+        for _ in 0..6 {
+            feed_step(&mut mon, 1.0);
+        }
+        assert_eq!(mon.steps(), 6);
+        let j = mon.report();
+        assert_eq!(j.get("steps").unwrap().as_usize().unwrap(), 6);
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 2);
+        // each layer saw 6 steps * 4 examples
+        assert_eq!(
+            layers[0].get("count").unwrap().as_usize().unwrap(),
+            24
+        );
+        assert_eq!(
+            j.get("total")
+                .unwrap()
+                .get("histogram")
+                .unwrap()
+                .get("total")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            24
+        );
+        // p50 <= p90 <= p99 on the total stream
+        let t = j.get("total").unwrap();
+        let (p50, p90, p99) = (
+            t.get("p50").unwrap().as_f64().unwrap(),
+            t.get("p90").unwrap().as_f64().unwrap(),
+            t.get("p99").unwrap().as_f64().unwrap(),
+        );
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        // gns observed: grads fixed -> big moment constant
+        let gns = j.get("gns").unwrap();
+        assert_eq!(gns.get("steps").unwrap().as_usize().unwrap(), 6);
+        assert!(gns.get("total").unwrap().get("b_simple").is_some());
+        // loss tracked
+        assert!(j.get("loss").unwrap().get("mean").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_roundtrips_through_parser() {
+        let cfg = TelemetryConfig::default();
+        let mut mon = TelemetryMonitor::new(&cfg, 2, 4, 8);
+        feed_step(&mut mon, 2.0);
+        let text = mon.report().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("telemetry").unwrap().as_str().unwrap(),
+            "pegrad.gradient_norms"
+        );
+    }
+
+    #[test]
+    fn write_report_creates_dirs() {
+        let cfg = TelemetryConfig::default();
+        let mut mon = TelemetryMonitor::new(&cfg, 2, 4, 8);
+        feed_step(&mut mon, 1.0);
+        let dir = std::env::temp_dir().join(format!("pegrad-telemetry-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("telemetry.json");
+        mon.write_report(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        Json::parse(&text).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,324 @@
+//! Gradient-norm outlier detection (the data-auditing workload).
+//!
+//! Examples with persistently large gradient norms are the ones the model
+//! keeps failing to fit — mislabeled, corrupted, or genuinely hard
+//! (`examples/outlier_detection.rs` demonstrates the signal offline; this
+//! detector runs it *online*, on the per-step norms the fused engine
+//! already streams for free).
+//!
+//! Two flagging rules, both against *running* statistics so no second
+//! pass over the data is ever needed:
+//!
+//! * quantile rule: `norm > Q_p(all norms so far)` via a [`P2Quantile`];
+//! * z-score rule: `norm > mean + z·std` via a Welford accumulator.
+//!
+//! Flag counts persist per dataset index across epochs: an example flagged
+//! once may be noise, an example flagged every epoch is a labeling bug.
+
+use crate::util::stats::Welford;
+use crate::util::Json;
+
+use super::sketch::P2Quantile;
+
+/// Thresholding knobs (the `[telemetry]` config section carries these).
+#[derive(Debug, Clone)]
+pub struct OutlierConfig {
+    /// Flag when the norm exceeds this quantile of the running
+    /// distribution, in (0,1).
+    pub quantile: f64,
+    /// Flag when the norm exceeds `mean + zscore * std`.
+    pub zscore: f64,
+    /// Steps observed before flagging starts (the sketch needs mass first).
+    pub warmup_steps: usize,
+}
+
+impl Default for OutlierConfig {
+    fn default() -> Self {
+        OutlierConfig {
+            quantile: 0.99,
+            zscore: 4.0,
+            warmup_steps: 10,
+        }
+    }
+}
+
+/// Streaming detector with persistent per-example flag counts.
+pub struct OutlierDetector {
+    cfg: OutlierConfig,
+    sketch: P2Quantile,
+    stats: Welford,
+    /// Flag count per dataset index — survives across epochs.
+    flag_counts: Vec<u32>,
+    steps: usize,
+    total_flags: u64,
+    /// Indices flagged on the most recent step (deduplicated).
+    last_flagged: Vec<usize>,
+}
+
+impl OutlierDetector {
+    pub fn new(dataset_n: usize, cfg: OutlierConfig) -> OutlierDetector {
+        assert!(cfg.quantile > 0.0 && cfg.quantile < 1.0);
+        assert!(cfg.zscore > 0.0);
+        OutlierDetector {
+            sketch: P2Quantile::new(cfg.quantile),
+            cfg,
+            stats: Welford::new(),
+            flag_counts: vec![0; dataset_n],
+            steps: 0,
+            total_flags: 0,
+            last_flagged: Vec::new(),
+        }
+    }
+
+    /// Current quantile threshold (`None` during warmup).
+    pub fn threshold_quantile(&self) -> Option<f64> {
+        (self.steps >= self.cfg.warmup_steps)
+            .then(|| self.sketch.estimate())
+            .flatten()
+    }
+
+    /// Current z-score threshold (`None` during warmup).
+    pub fn threshold_zscore(&self) -> Option<f64> {
+        (self.steps >= self.cfg.warmup_steps && self.stats.count() >= 2)
+            .then(|| self.stats.mean() + self.cfg.zscore * self.stats.std())
+    }
+
+    /// Observe one step's batch: `norms[i]` is the gradient L2 norm of
+    /// dataset example `indices[i]`. Flags are assigned against the
+    /// thresholds from *previous* observations (so a step's own outliers
+    /// cannot mask themselves), then the statistics absorb the new norms.
+    ///
+    /// Flags are DEDUPLICATED per step: samplers draw with replacement
+    /// (and the importance sampler deliberately oversamples high-norm
+    /// examples), so counting per occurrence would inflate the persistent
+    /// audit counts by sampling frequency, not outlier persistence. An
+    /// example's count rises by at most 1 per step. (Counts still scale
+    /// with how often an example is *seen* across steps — compare flagged
+    /// examples against their sampling rate when auditing IS runs.)
+    ///
+    /// Returns the number of distinct examples flagged this step.
+    pub fn observe(&mut self, indices: &[usize], norms: &[f32]) -> usize {
+        assert_eq!(indices.len(), norms.len());
+        let tq = self.threshold_quantile();
+        let tz = self.threshold_zscore();
+        self.last_flagged.clear();
+        for (&idx, &nm) in indices.iter().zip(norms) {
+            if !nm.is_finite() {
+                continue;
+            }
+            let n = nm as f64;
+            let hit = tq.map(|t| n > t).unwrap_or(false)
+                || tz.map(|t| n > t).unwrap_or(false);
+            // only indices inside the audit table count as flags — an
+            // out-of-range index (eval batch, stale config) must not make
+            // total_flags disagree with the per-example counts
+            if hit && !self.last_flagged.contains(&idx) {
+                if let Some(c) = self.flag_counts.get_mut(idx) {
+                    *c += 1;
+                    self.last_flagged.push(idx);
+                    self.total_flags += 1;
+                }
+            }
+            self.sketch.push(nm);
+            self.stats.push(n);
+        }
+        self.steps += 1;
+        self.last_flagged.len()
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    pub fn total_flags(&self) -> u64 {
+        self.total_flags
+    }
+
+    pub fn flag_count(&self, idx: usize) -> u32 {
+        self.flag_counts.get(idx).copied().unwrap_or(0)
+    }
+
+    pub fn last_flagged(&self) -> &[usize] {
+        &self.last_flagged
+    }
+
+    /// The `k` most-flagged example indices, `(index, count)`, count
+    /// descending (ties broken by index for determinism).
+    pub fn top_flagged(&self, k: usize) -> Vec<(usize, u32)> {
+        let mut v: Vec<(usize, u32)> = self
+            .flag_counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(k);
+        v
+    }
+
+    pub fn to_json(&self, top_k: usize) -> Json {
+        let top = self.top_flagged(top_k);
+        Json::obj(vec![
+            ("quantile", Json::num(self.cfg.quantile)),
+            ("zscore", Json::num(self.cfg.zscore)),
+            ("warmup_steps", Json::num(self.cfg.warmup_steps as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("total_flags", Json::num(self.total_flags as f64)),
+            (
+                "threshold_quantile",
+                self.threshold_quantile().map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "threshold_zscore",
+                self.threshold_zscore().map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "last_flagged",
+                Json::arr_usize(&self.last_flagged),
+            ),
+            (
+                "flagged_examples",
+                Json::Arr(
+                    top.iter()
+                        .map(|&(i, c)| {
+                            Json::obj(vec![
+                                ("index", Json::num(i as f64)),
+                                ("flags", Json::num(c as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planted_outlier_accumulates_flags() {
+        let mut det = OutlierDetector::new(
+            64,
+            OutlierConfig {
+                quantile: 0.95,
+                zscore: 3.0,
+                warmup_steps: 5,
+            },
+        );
+        // 40 "epochs" of a 32-example batch: clean norms jitter in
+        // [1.0, 1.5), example 31 is always 50x out in the tail
+        for step in 0..40usize {
+            let indices: Vec<usize> = (0..32).collect();
+            let mut norms: Vec<f32> = (0..32)
+                .map(|i| 1.0 + ((step * 31 + i * 17) % 97) as f32 / 97.0 * 0.5)
+                .collect();
+            norms[31] = 50.0;
+            let flagged = det.observe(&indices, &norms);
+            if step < 5 {
+                assert_eq!(flagged, 0, "no flags during warmup");
+            }
+        }
+        // z-rule alone catches the planted outlier every post-warmup step
+        assert!(det.flag_count(31) >= 30, "planted outlier: {}", det.flag_count(31));
+        for i in 0..31 {
+            assert!(
+                det.flag_count(i) <= 10,
+                "clean example {i} over-flagged: {}",
+                det.flag_count(i)
+            );
+        }
+        let top = det.top_flagged(3);
+        assert_eq!(top[0].0, 31);
+        assert!(det.last_flagged().contains(&31));
+        assert!(det.total_flags() >= 30);
+    }
+
+    #[test]
+    fn replacement_duplicates_flag_once_per_step() {
+        let mut det = OutlierDetector::new(
+            8,
+            OutlierConfig {
+                warmup_steps: 0,
+                ..Default::default()
+            },
+        );
+        for _ in 0..10 {
+            det.observe(&[0, 1, 2, 3], &[1.0, 1.0, 1.0, 1.0]);
+        }
+        // example 5 drawn twice in one batch (sampling with replacement)
+        let flagged = det.observe(&[5, 5], &[100.0, 100.0]);
+        assert_eq!(flagged, 1, "distinct examples, not occurrences");
+        assert_eq!(det.flag_count(5), 1);
+        assert_eq!(det.total_flags(), 1);
+        assert_eq!(det.last_flagged(), &[5]);
+    }
+
+    #[test]
+    fn warmup_suppresses_thresholds() {
+        let det = OutlierDetector::new(4, OutlierConfig::default());
+        assert!(det.threshold_quantile().is_none());
+        assert!(det.threshold_zscore().is_none());
+    }
+
+    #[test]
+    fn nan_norms_skipped() {
+        let mut det = OutlierDetector::new(
+            4,
+            OutlierConfig {
+                warmup_steps: 0,
+                ..Default::default()
+            },
+        );
+        for _ in 0..20 {
+            det.observe(&[0, 1], &[1.0, f32::NAN]);
+        }
+        assert_eq!(det.flag_count(1), 0);
+        assert!(det.threshold_zscore().unwrap().is_finite());
+    }
+
+    #[test]
+    fn out_of_range_index_ignored() {
+        let mut det = OutlierDetector::new(
+            2,
+            OutlierConfig {
+                warmup_steps: 0,
+                ..Default::default()
+            },
+        );
+        for _ in 0..10 {
+            det.observe(&[0], &[1.0]);
+        }
+        // index beyond dataset_n must not panic (eval batches etc.) and
+        // must stay consistent: no count, no total, no last_flagged entry
+        let flagged = det.observe(&[99], &[100.0]);
+        assert_eq!(flagged, 0);
+        assert_eq!(det.flag_count(99), 0);
+        assert_eq!(det.total_flags(), 0);
+        assert!(det.last_flagged().is_empty());
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut det = OutlierDetector::new(
+            8,
+            OutlierConfig {
+                warmup_steps: 1,
+                ..Default::default()
+            },
+        );
+        // identical clean norms: thresholds settle exactly at 1.0 and the
+        // strict `>` comparison keeps the clean stream unflagged
+        for _ in 0..10 {
+            det.observe(&[0, 1, 2], &[1.0, 1.0, 1.0]);
+        }
+        det.observe(&[3], &[1000.0]);
+        let j = det.to_json(16);
+        assert_eq!(j.get("steps").unwrap().as_usize().unwrap(), 11);
+        assert!(j.get("threshold_quantile").unwrap().as_f64().is_some());
+        let flagged = j.get("flagged_examples").unwrap().as_arr().unwrap();
+        assert_eq!(flagged[0].get("index").unwrap().as_usize().unwrap(), 3);
+    }
+}

@@ -1,0 +1,412 @@
+//! Allocation-free online accumulators for gradient-norm streams.
+//!
+//! * [`StreamingHistogram`] — fixed log-spaced bins (norms span decades,
+//!   so linear bins would waste resolution); O(1) push, O(bins) quantile.
+//! * [`P2Quantile`] — the P² algorithm (Jain & Chlamtac 1985): a single
+//!   quantile tracked with five markers, O(1) push, O(1) state. No
+//!   buffering, no sorting — the sketch the per-step outlier threshold
+//!   reads on the hot path.
+//!
+//! Mean/variance accumulation reuses [`crate::util::stats::Welford`].
+
+use crate::util::Json;
+
+/// Streaming histogram over `(0, ∞)` with `bins` log2-spaced buckets
+/// between `2^lo_log2` and `2^hi_log2`; values outside land in dedicated
+/// underflow/overflow buckets (zero and negative values underflow).
+#[derive(Debug, Clone)]
+pub struct StreamingHistogram {
+    lo_log2: f64,
+    hi_log2: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    total: u64,
+}
+
+impl StreamingHistogram {
+    /// Default range covers norms from 2^-20 (~1e-6) to 2^20 (~1e6).
+    pub fn new(bins: usize) -> StreamingHistogram {
+        StreamingHistogram::with_range(bins, -20.0, 20.0)
+    }
+
+    pub fn with_range(bins: usize, lo_log2: f64, hi_log2: f64) -> StreamingHistogram {
+        assert!(bins >= 2, "histogram needs >= 2 bins");
+        assert!(lo_log2 < hi_log2, "empty histogram range");
+        StreamingHistogram {
+            lo_log2,
+            hi_log2,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+        }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Total observations, including under/overflow.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Bucket index for `x`, `None` for under/overflow.
+    pub fn bin_index(&self, x: f32) -> Option<usize> {
+        if !x.is_finite() || x <= 0.0 {
+            return None; // underflow (zeros, negatives, NaN, ±inf)
+        }
+        let l = (x as f64).log2();
+        if l < self.lo_log2 {
+            return None;
+        }
+        if l >= self.hi_log2 {
+            return None;
+        }
+        let frac = (l - self.lo_log2) / (self.hi_log2 - self.lo_log2);
+        Some(((frac * self.counts.len() as f64) as usize).min(self.counts.len() - 1))
+    }
+
+    pub fn push(&mut self, x: f32) {
+        self.total += 1;
+        match self.bin_index(x) {
+            Some(i) => self.counts[i] += 1,
+            None => {
+                if x.is_finite() && (x as f64).log2() >= self.hi_log2 {
+                    self.overflow += 1;
+                } else if !x.is_finite() && x > 0.0 {
+                    self.overflow += 1; // +inf
+                } else {
+                    self.underflow += 1;
+                }
+            }
+        }
+    }
+
+    /// The `bins + 1` bucket edges (geometric).
+    pub fn edges(&self) -> Vec<f64> {
+        let b = self.counts.len() as f64;
+        (0..=self.counts.len())
+            .map(|i| {
+                let l = self.lo_log2 + (i as f64 / b) * (self.hi_log2 - self.lo_log2);
+                l.exp2()
+            })
+            .collect()
+    }
+
+    /// Quantile estimate by linear interpolation in log space within the
+    /// covering bucket. Underflow mass sits at the low edge, overflow at
+    /// the high edge. `None` before any observation.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.total == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = q * self.total as f64;
+        let mut cum = self.underflow as f64;
+        if target <= cum {
+            return Some(self.lo_log2.exp2());
+        }
+        let width = (self.hi_log2 - self.lo_log2) / self.counts.len() as f64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let next = cum + c as f64;
+            if target <= next && c > 0 {
+                let frac = (target - cum) / c as f64;
+                let l = self.lo_log2 + (i as f64 + frac) * width;
+                return Some(l.exp2());
+            }
+            cum = next;
+        }
+        Some(self.hi_log2.exp2())
+    }
+
+    /// Merge another histogram's counts (must share the binning).
+    pub fn merge(&mut self, other: &StreamingHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len(), "bin count mismatch");
+        assert_eq!(
+            (self.lo_log2, self.hi_log2),
+            (other.lo_log2, other.hi_log2),
+            "range mismatch"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.total += other.total;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lo_log2", Json::num(self.lo_log2)),
+            ("hi_log2", Json::num(self.hi_log2)),
+            (
+                "counts",
+                Json::Arr(self.counts.iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+            ("underflow", Json::num(self.underflow as f64)),
+            ("overflow", Json::num(self.overflow as f64)),
+            ("total", Json::num(self.total as f64)),
+        ])
+    }
+}
+
+/// P² single-quantile sketch (Jain & Chlamtac 1985): five markers whose
+/// heights approximate `(0, p/2, p, (1+p)/2, 1)` quantiles, adjusted with
+/// a piecewise-parabolic update. O(1) memory, O(1) per observation.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// Marker heights (sorted invariant).
+    q: [f64; 5],
+    /// Actual marker positions (1-based ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired-position increments per observation.
+    dn: [f64; 5],
+    count: u64,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> P2Quantile {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0,1)");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+        }
+    }
+
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn push(&mut self, x: f32) {
+        let x = x as f64;
+        if !x.is_finite() {
+            return; // a NaN/inf marker height would poison every estimate
+        }
+        self.count += 1;
+        if self.count <= 5 {
+            // insertion-sort the first five observations into the markers
+            let k = self.count as usize;
+            self.q[k - 1] = x;
+            let mut i = k - 1;
+            while i > 0 && self.q[i - 1] > self.q[i] {
+                self.q.swap(i - 1, i);
+                i -= 1;
+            }
+            return;
+        }
+
+        // locate the cell and clamp extremes
+        let k: usize = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            // q[k] <= x < q[k+1]
+            let mut k = 0;
+            while k < 3 && x >= self.q[k + 1] {
+                k += 1;
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+
+        // adjust interior markers
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let ds = d.signum();
+                let qp = self.parabolic(i, ds);
+                if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    self.q[i] = qp;
+                } else {
+                    self.q[i] = self.linear(i, ds);
+                }
+                self.n[i] += ds;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, ds: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + ds / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + ds) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - ds) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, ds: f64) -> f64 {
+        let j = if ds > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + ds * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate of the `p`-quantile. `None` before any
+    /// observation; exact for the first five.
+    pub fn estimate(&self) -> Option<f64> {
+        match self.count {
+            0 => None,
+            c if c <= 5 => {
+                // exact small-sample quantile over the sorted markers
+                let k = c as usize;
+                let rank = self.p * (k - 1) as f64;
+                let lo = rank.floor() as usize;
+                let hi = rank.ceil() as usize;
+                let frac = rank - lo as f64;
+                Some(self.q[lo] * (1.0 - frac) + self.q[hi] * frac)
+            }
+            _ => Some(self.q[2]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::stats::percentile_sorted;
+
+    #[test]
+    fn histogram_counts_and_edges() {
+        let mut h = StreamingHistogram::with_range(4, 0.0, 4.0); // [1,16)
+        for &x in &[0.5, 1.0, 1.5, 2.0, 3.9, 4.0, 15.9, 16.0, 100.0, 0.0, -1.0] {
+            h.push(x);
+        }
+        assert_eq!(h.total(), 11);
+        assert_eq!(h.underflow(), 3); // 0.5, 0.0, -1.0
+        assert_eq!(h.overflow(), 2); // 16.0, 100.0
+        assert_eq!(h.counts(), &[2, 2, 1, 1]); // [1,2):{1,1.5} [2,4):{2,3.9} [4,8):{4} [8,16):{15.9}
+        let e = h.edges();
+        assert_eq!(e.len(), 5);
+        assert!((e[0] - 1.0).abs() < 1e-12 && (e[4] - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_nan_and_inf_do_not_poison() {
+        let mut h = StreamingHistogram::new(8);
+        h.push(f32::NAN);
+        h.push(f32::INFINITY);
+        h.push(f32::NEG_INFINITY);
+        h.push(1.0);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.underflow() + h.overflow(), 3);
+    }
+
+    #[test]
+    fn histogram_quantile_brackets_exact() {
+        prop::check(20, |g| {
+            let mut h = StreamingHistogram::new(64);
+            let n = g.usize_in(50..400);
+            let mut xs: Vec<f64> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let x = g.f32_in(0.001..100.0);
+                h.push(x);
+                xs.push(x as f64);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.1, 0.5, 0.9] {
+                let est = h.quantile(q).unwrap();
+                // estimate must fall within one bucket of the exact value
+                let exact = percentile_sorted(&xs, q * 100.0);
+                let ratio = est / exact;
+                let bucket = (40.0f64 / 64.0).exp2(); // one-bucket growth factor
+                prop::require(
+                    ratio < bucket * bucket && ratio > 1.0 / (bucket * bucket),
+                    format!("q={q}: est {est} vs exact {exact}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn histogram_merge_adds() {
+        let mut a = StreamingHistogram::new(8);
+        let mut b = StreamingHistogram::new(8);
+        a.push(1.0);
+        b.push(2.0);
+        b.push(1e30); // overflow at hi 2^20
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        assert_eq!(a.overflow(), 1);
+    }
+
+    #[test]
+    fn p2_exact_for_first_five() {
+        let mut s = P2Quantile::new(0.5);
+        assert!(s.estimate().is_none());
+        for x in [5.0, 1.0, 3.0] {
+            s.push(x);
+        }
+        assert!((s.estimate().unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_tracks_known_quantiles() {
+        prop::check(15, |g| {
+            let p = *g.choose(&[0.5, 0.9, 0.99]);
+            let n = g.usize_in(500..3000);
+            let mut s = P2Quantile::new(p);
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                // mix of scales, like gradient norms
+                let x = g.normal().abs() * 10f32.powi(g.i64_in(-1..2) as i32);
+                s.push(x);
+                xs.push(x as f64);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let est = s.estimate().unwrap();
+            // rank-tolerance check: the estimate must sit between the exact
+            // (p-eps) and (p+eps) quantiles
+            let eps = 0.06;
+            let lo = percentile_sorted(&xs, ((p - eps).max(0.0)) * 100.0);
+            let hi = percentile_sorted(&xs, ((p + eps).min(1.0)) * 100.0);
+            prop::require(
+                est >= lo && est <= hi,
+                format!("p={p} n={n}: estimate {est} outside [{lo}, {hi}]"),
+            )
+        });
+    }
+
+    #[test]
+    fn p2_ignores_non_finite() {
+        let mut s = P2Quantile::new(0.9);
+        for i in 0..100 {
+            s.push(i as f32);
+            s.push(f32::NAN);
+        }
+        let e = s.estimate().unwrap();
+        assert!(e.is_finite() && e > 50.0 && e < 100.0, "{e}");
+    }
+}

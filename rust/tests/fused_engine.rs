@@ -10,6 +10,7 @@ use pegrad::nn::loss::Targets;
 use pegrad::nn::{Loss, Mlp, ModelSpec};
 use pegrad::pegrad::naive::{per_example_grads, per_example_norms_naive};
 use pegrad::pegrad::{clip_pipeline_fused, per_example_norms};
+use pegrad::telemetry::RecordingTap;
 use pegrad::tensor::ops::Activation;
 use pegrad::tensor::{ops, Rng, Tensor};
 use pegrad::util::prop;
@@ -145,6 +146,98 @@ fn clipped_mode_is_one_forward_one_backward() {
             "mode {mode:?}: engine must cost exactly fwd+bwd matmul flops"
         );
     }
+}
+
+/// Telemetry acceptance: a layer tap adds ZERO matmul work — the flop
+/// count with the tap attached is identical to the plain fused step, in
+/// every mode, and the gradients are bitwise unchanged.
+#[test]
+fn layer_tap_adds_zero_matmul_flops() {
+    let _guard = flops_guard();
+    let spec =
+        ModelSpec::new(vec![12, 24, 18, 6], Activation::Gelu, Loss::SoftmaxCe, 16).unwrap();
+    let mut rng = Rng::new(77);
+    let mlp = Mlp::init(spec.clone(), &mut rng);
+    let x = Tensor::randn(vec![16, 12], &mut rng);
+    let y = Targets::Classes((0..16).map(|j| (j % 6) as i32).collect());
+    let mut engine = FusedEngine::new(spec.clone());
+    for mode in [
+        EngineMode::Mean,
+        EngineMode::Clip { c: 0.5, mean: true },
+        EngineMode::Normalize { target: 1.0 },
+    ] {
+        pegrad::nn::reset_flops();
+        engine.step(&mlp.params, &x, &y, mode);
+        let plain = pegrad::nn::read_flops();
+        let plain_grads: Vec<Tensor> = engine.grads().to_vec();
+
+        let mut tap = RecordingTap::default();
+        pegrad::nn::reset_flops();
+        engine.step_streamed(&mlp.params, &x, &y, mode, None, Some(&mut tap));
+        let tapped = pegrad::nn::read_flops();
+
+        assert_eq!(
+            plain, tapped,
+            "mode {mode:?}: tap changed the flop count"
+        );
+        assert_eq!(
+            plain,
+            spec.flops_forward(16) + spec.flops_backward(16),
+            "mode {mode:?}: still exactly one fwd + one bwd traversal"
+        );
+        assert_eq!(tap.layers.len(), 3, "one on_layer call per weight matrix");
+        assert_eq!(tap.steps_ended, 1);
+        for (a, b) in plain_grads.iter().zip(engine.grads()) {
+            assert_eq!(a.data(), b.data(), "mode {mode:?}: tap perturbed gradients");
+        }
+    }
+}
+
+/// Telemetry acceptance: the engine's streamed per-layer norms are
+/// bitwise identical to its own materialized decomposition and match the
+/// two-pass oracle decomposition across activations × losses.
+#[test]
+fn streamed_layer_norms_match_oracle_decompositions() {
+    let _guard = flops_guard();
+    prop::check(12, |g| {
+        let (mlp, x, y) = random_case(g);
+        let m = mlp.spec.m;
+        let n = mlp.spec.n_layers();
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        let mut tap = RecordingTap::default();
+        engine.step_streamed(&mlp.params, &x, &y, EngineMode::Mean, None, Some(&mut tap));
+
+        // stream arrives top-down, one call per layer
+        let order: Vec<usize> = tap.layers.iter().map(|(l, _)| *l).collect();
+        prop::require(
+            order == (0..n).rev().collect::<Vec<_>>(),
+            format!("tap order {order:?}"),
+        )?;
+
+        // bitwise vs the engine's own materialized layout
+        let pe = engine.per_example_norms();
+        let streamed = tap.s_layers();
+        for j in 0..m {
+            prop::require(
+                streamed[j] == pe.s_layers[j],
+                format!("example {j}: streamed {:?} != engine {:?}", streamed[j], pe.s_layers[j]),
+            )?;
+        }
+        prop::require(tap.s_total == engine.s_total(), "tap totals != engine totals")?;
+        prop::require(
+            tap.per_ex_loss == engine.per_ex_loss(),
+            "tap losses != engine losses",
+        )?;
+
+        // numerically vs the independent two-pass oracle
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let oracle = per_example_norms(&fwd, &bwd);
+        for j in 0..m {
+            prop::assert_all_close(&streamed[j], &oracle.s_layers[j], 1e-3)
+                .map_err(|e| format!("example {j} vs oracle: {e}"))?;
+        }
+        Ok(())
+    });
 }
 
 /// Workspace reuse across heterogeneous steps is bitwise deterministic.

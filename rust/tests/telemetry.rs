@@ -1,0 +1,278 @@
+//! Telemetry subsystem integration: streamed taps vs the oracle
+//! decompositions across activations × losses, and full trainer / CLI
+//! runs emitting the JSON report for the paper scenarios.
+//!
+//! (The flop-identity proof — taps add zero matmul work — lives in
+//! `tests/fused_engine.rs`, which owns the flop-counter serialization.)
+
+use pegrad::config::{Config, DataKind, PrivacyConfig, RunMode, SamplerKind};
+use pegrad::coordinator::Trainer;
+use pegrad::nn::loss::Targets;
+use pegrad::nn::{Loss, Mlp, ModelSpec};
+use pegrad::pegrad::per_example_norms;
+use pegrad::telemetry::RecordingTap;
+use pegrad::tensor::ops::Activation;
+use pegrad::tensor::{Rng, Tensor};
+use pegrad::util::{prop, Json};
+
+const ACTIVATIONS: [Activation; 5] = [
+    Activation::Relu,
+    Activation::Tanh,
+    Activation::Gelu,
+    Activation::Sigmoid,
+    Activation::Identity,
+];
+
+/// Satellite: the reference tap (`Mlp::backward_streamed_tap`) streams
+/// per-layer norms that BITWISE match the `per_example_norms` oracle
+/// decomposition, across all activations × both losses.
+#[test]
+fn mlp_tap_bitwise_matches_oracle_across_activations_and_losses() {
+    prop::check(20, |g| {
+        let n_hidden = g.usize_in(1..4);
+        let mut dims = vec![g.usize_in(2..8)];
+        for _ in 0..n_hidden {
+            dims.push(g.usize_in(2..10));
+        }
+        dims.push(g.usize_in(2..6));
+        let act = *g.choose(&ACTIVATIONS);
+        let loss = if g.bool() { Loss::SoftmaxCe } else { Loss::Mse };
+        let m = g.usize_in(1..8);
+        let spec = ModelSpec::new(dims, act, loss, m).unwrap();
+        let mut rng = Rng::new(g.case + 401);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let x = Tensor::randn(vec![m, spec.in_dim()], &mut rng);
+        let y = match loss {
+            Loss::SoftmaxCe => {
+                Targets::Classes((0..m).map(|j| (j % spec.out_dim()) as i32).collect())
+            }
+            Loss::Mse => Targets::Dense(Tensor::randn(vec![m, spec.out_dim()], &mut rng)),
+        };
+
+        let fwd = mlp.forward(&x, &y);
+        let bwd = mlp.backward(&fwd, &y);
+        let oracle = per_example_norms(&fwd, &bwd);
+        let mut tap = RecordingTap::default();
+        mlp.backward_streamed_tap(&fwd, &y, &mut tap);
+        let streamed = tap.s_layers();
+        for j in 0..m {
+            prop::require(
+                streamed[j] == oracle.s_layers[j],
+                format!(
+                    "act {act:?} loss {loss:?} example {j}: streamed {:?} != oracle {:?}",
+                    streamed[j], oracle.s_layers[j]
+                ),
+            )?;
+        }
+        // totals differ only by f32 reassociation (traversal order)
+        prop::assert_all_close(&tap.s_total, &oracle.s_total, 1e-4)?;
+        prop::require(tap.per_ex_loss == fwd.per_ex_loss, "loss stream mismatch")?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Trainer integration: paper scenarios emitting the JSON report
+// ---------------------------------------------------------------------------
+
+fn telem_cfg(name: &str, mode: RunMode) -> Config {
+    let mut cfg = Config::default();
+    cfg.run_name = name.into();
+    cfg.mode = mode;
+    cfg.steps = 80;
+    cfg.data = DataKind::Synth;
+    cfg.data_n = 1024;
+    cfg.eval_every = 0;
+    cfg.model_dims = vec![16, 32, 10];
+    cfg.model_activation = "relu".into();
+    cfg.model_loss = "softmax_ce".into();
+    cfg.model_m = 16;
+    cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.05 };
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("pegrad-telem-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    cfg.telemetry.enabled = true;
+    cfg.telemetry.warmup_steps = 10;
+    cfg
+}
+
+fn load_report(path: &std::path::Path) -> Json {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    Json::parse(&text).expect("report must be valid JSON")
+}
+
+/// Shared structural assertions (the acceptance criteria's report shape:
+/// per-layer histograms/quantiles, outlier indices, a GNS estimate).
+fn assert_report_shape(j: &Json, steps: usize, m: usize, n_layers: usize) {
+    assert_eq!(j.get("steps").unwrap().as_usize().unwrap(), steps);
+    let layers = j.get("layers").unwrap().as_arr().unwrap();
+    assert_eq!(layers.len(), n_layers);
+    for l in layers {
+        // every layer stream saw every example every step
+        assert_eq!(
+            l.get("histogram").unwrap().get("total").unwrap().as_usize().unwrap(),
+            steps * m
+        );
+        let (p50, p90, p99) = (
+            l.get("p50").unwrap().as_f64().unwrap(),
+            l.get("p90").unwrap().as_f64().unwrap(),
+            l.get("p99").unwrap().as_f64().unwrap(),
+        );
+        assert!(
+            p50 <= p90 && p90 <= p99,
+            "quantiles out of order: {p50} {p90} {p99}"
+        );
+        assert!(l.get("mean").unwrap().as_f64().unwrap() >= 0.0);
+    }
+    let total = j.get("total").unwrap();
+    assert_eq!(
+        total.get("histogram").unwrap().get("total").unwrap().as_usize().unwrap(),
+        steps * m
+    );
+    let outliers = j.get("outliers").unwrap();
+    assert_eq!(outliers.get("steps").unwrap().as_usize().unwrap(), steps);
+    assert!(outliers.get("flagged_examples").unwrap().as_arr().is_some());
+    let gns = j.get("gns").unwrap();
+    assert_eq!(gns.get("steps").unwrap().as_usize().unwrap(), steps);
+    let gns_total = gns.get("total").unwrap();
+    // the estimate exists (b_simple may be null only when noise-dominated;
+    // the moments themselves must always be reported)
+    assert!(gns_total.get("small_sq").unwrap().as_f64().unwrap() > 0.0);
+    assert!(gns_total.get("big_sq").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        gns.get("per_layer").unwrap().as_arr().unwrap().len(),
+        n_layers
+    );
+}
+
+/// Scenario 1 (§1 importance sampling, synth classification): telemetry
+/// rides the weighted fused engine; periodic + final reports land.
+#[test]
+fn trainer_emits_telemetry_classification() {
+    let mut cfg = telem_cfg("telem-cls", RunMode::RustPegrad);
+    cfg.sampler = SamplerKind::Importance;
+    cfg.label_noise = 0.1;
+    cfg.telemetry.every = 25;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let summary = tr.run().unwrap();
+    let path = summary.telemetry_path.expect("telemetry path reported");
+    let j = load_report(&path);
+    assert_report_shape(&j, 80, 16, 2);
+    // importance-sampled stream -> the GNS decomposition is marked biased
+    assert_eq!(
+        j.get("gns").unwrap().get("unbiased").unwrap().as_bool(),
+        Some(false)
+    );
+    // periodic snapshots
+    let dir = path.parent().unwrap();
+    for step in [25, 50, 75] {
+        let snap = dir.join(format!("telemetry-{step:06}.json"));
+        assert!(snap.exists(), "missing snapshot {}", snap.display());
+        let sj = load_report(&snap);
+        // snapshots land after the step executes -> step+1 steps recorded
+        assert_eq!(sj.get("steps").unwrap().as_usize().unwrap(), step + 1);
+    }
+    // live monitor agrees with the serialized report
+    let mon = tr.telemetry().unwrap();
+    assert_eq!(mon.steps(), 80);
+    // loss stream was captured
+    assert!(j.get("loss").unwrap().get("mean").unwrap().as_f64().unwrap() > 0.0);
+}
+
+/// Scenario 2 (regression / MSE): same report shape from the second
+/// paper scenario family.
+#[test]
+fn trainer_emits_telemetry_regression() {
+    let mut cfg = telem_cfg("telem-reg", RunMode::RustPegrad);
+    cfg.data = DataKind::Regression;
+    cfg.model_loss = "mse".into();
+    cfg.model_dims = vec![12, 24, 4];
+    cfg.model_activation = "tanh".into();
+    cfg.sampler = SamplerKind::Uniform;
+    cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.02 };
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    let j = load_report(&summary.telemetry_path.unwrap());
+    assert_report_shape(&j, 80, 16, 2);
+    // uniform sampling + plain mean -> the unbiased decomposition holds
+    assert_eq!(
+        j.get("gns").unwrap().get("unbiased").unwrap().as_bool(),
+        Some(true)
+    );
+}
+
+/// Scenario 3 (§6 DP-SGD): taps also stream in the Zbar-retaining clipped
+/// mode, and the GNS moments see the pre-noise clipped gradient.
+#[test]
+fn trainer_emits_telemetry_clipped() {
+    let mut cfg = telem_cfg("telem-dp", RunMode::RustClipped);
+    cfg.privacy = Some(PrivacyConfig {
+        clip_c: 2.0,
+        noise_sigma: 0.5,
+        delta: 1e-5,
+    });
+    cfg.steps = 40;
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    let j = load_report(&summary.telemetry_path.unwrap());
+    assert_report_shape(&j, 40, 16, 2);
+}
+
+/// Telemetry must not perturb training: identical runs with and without
+/// the monitor produce bitwise-identical parameters.
+#[test]
+fn telemetry_is_observation_only() {
+    let mk = |telemetry: bool, name: &str| {
+        let mut cfg = telem_cfg(name, RunMode::RustPegrad);
+        cfg.steps = 25;
+        cfg.seed = 99;
+        cfg.telemetry.enabled = telemetry;
+        let mut tr = Trainer::new(cfg).unwrap();
+        tr.run().unwrap();
+        tr.params().unwrap().to_vec()
+    };
+    let with = mk(true, "telem-obs-on");
+    let without = mk(false, "telem-obs-off");
+    for (a, b) in with.iter().zip(&without) {
+        assert_eq!(a.data(), b.data(), "telemetry changed the training math");
+    }
+}
+
+/// `pegrad monitor` end to end: default scenario, report to --out.
+#[test]
+fn cli_monitor_emits_report() {
+    let dir = std::env::temp_dir().join(format!("pegrad-telem-cli-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("report.json");
+    pegrad::cli::commands::run(vec![
+        "monitor".into(),
+        "--steps".into(),
+        "30".into(),
+        "--out".into(),
+        out.to_string_lossy().into_owned(),
+        "--set".into(),
+        format!("out_dir={}", dir.to_string_lossy()),
+        "--set".into(),
+        "telemetry.warmup_steps=5".into(),
+    ])
+    .unwrap();
+    let j = load_report(&out);
+    assert_report_shape(&j, 30, 16, 2);
+    // the trainer's own copy landed under out_dir/monitor/ too
+    assert!(dir.join("monitor").join("telemetry.json").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Artifact modes must refuse `pegrad monitor` with a readable error.
+#[test]
+fn cli_monitor_rejects_artifact_modes() {
+    let err = pegrad::cli::commands::run(vec![
+        "monitor".into(),
+        "--set".into(),
+        "mode=pegrad".into(),
+    ])
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("rust_pegrad"), "{err}");
+}
