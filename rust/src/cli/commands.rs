@@ -124,6 +124,11 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
         ),
         ArgSpec::opt("steps", "override the step count"),
         ArgSpec::opt("out", "also write the report to this path"),
+        ArgSpec::opt(
+            "baseline",
+            "previous telemetry.json to diff against: emits a drift summary \
+             (norm histograms/quantiles, loss, gradient noise scale)",
+        ),
         ArgSpec::switch("print", "print the report JSON to stdout"),
         ArgSpec::switch("help", "show options"),
     ];
@@ -154,6 +159,19 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
     }
     cfg.validate()?;
 
+    // load AND shape-check the baseline BEFORE the run so a bad path or
+    // a non-report file fails fast instead of after minutes of training
+    let baseline = match p.get("baseline") {
+        Some(path) => {
+            let j = Json::parse_file(std::path::Path::new(path))?;
+            if !crate::telemetry::diff::is_report(&j) {
+                bail!("--baseline {path} is not a pegrad telemetry report");
+            }
+            Some((path.to_string(), j))
+        }
+        None => None,
+    };
+
     let mut tr = Trainer::new(cfg)?;
     let summary = tr.run()?;
     let mon = tr.telemetry().expect("monitor mode forces telemetry on");
@@ -161,8 +179,23 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
         mon.write_report(std::path::Path::new(out))?;
         println!("report written to {out}");
     }
+    let report = mon.report();
     if p.has("print") {
-        println!("{}", mon.report());
+        println!("{report}");
+    }
+    if let Some((bpath, bjson)) = &baseline {
+        let diff = crate::telemetry::diff_reports(
+            bjson,
+            &report,
+            &crate::telemetry::DiffConfig::default(),
+        )?;
+        let drift_path = tr.metrics.dir().join("telemetry-drift.json");
+        std::fs::write(&drift_path, format!("{diff}\n"))?;
+        println!(
+            "baseline {bpath}: {}\ndrift summary: {}",
+            crate::telemetry::diff::render_summary(&diff),
+            drift_path.display()
+        );
     }
     let gns = mon
         .gns()

@@ -125,6 +125,11 @@ pub struct Config {
     pub model_loss: String,
     /// minibatch size for the rust-engine modes.
     pub model_m: usize,
+    /// Heterogeneous layer-stack DSL (`nn::layers::StackSpec::parse`),
+    /// e.g. `"input 12x12x1, conv 8 k3 relu, pool 2, flatten, dense 10"`.
+    /// When non-empty it replaces `model.dims`/`model.activation` for the
+    /// rust-engine modes (conv stacks have per-layer activations).
+    pub model_stack: String,
     /// target norm for mode = "rust_normalized".
     pub normalize_target: f32,
     /// `[telemetry]` section: streaming gradient-norm telemetry
@@ -160,6 +165,7 @@ impl Default for Config {
             model_activation: "relu".into(),
             model_loss: "softmax_ce".into(),
             model_m: 16,
+            model_stack: String::new(),
             normalize_target: 1.0,
             telemetry: TelemetryConfig::default(),
         }
@@ -200,9 +206,14 @@ impl Config {
             bail!("mode={} requires a [privacy] section", self.mode.name());
         }
         if self.mode.is_rust_engine() {
-            if self.model_dims.len() < 2 {
+            if !self.model_stack.is_empty() {
+                // syntax/shape check up front; the trainer builds the real
+                // StackSpec (it also knows the loss)
+                crate::nn::layers::StackSpec::parse_layers(&self.model_stack)?;
+            } else if self.model_dims.len() < 2 {
                 bail!(
-                    "rust-engine modes need model.dims with >=2 entries, got {:?}",
+                    "rust-engine modes need model.dims with >=2 entries (or a \
+                     model.stack), got {:?}",
                     self.model_dims
                 );
             }
@@ -305,6 +316,7 @@ fn apply(cfg: &mut Config, map: &BTreeMap<String, Value>) -> Result<()> {
             }
             "model.loss" => cfg.model_loss = v.as_str().ok_or_else(fail)?.into(),
             "model.m" => cfg.model_m = v.as_usize().ok_or_else(fail)?,
+            "model.stack" => cfg.model_stack = v.as_str().ok_or_else(fail)?.into(),
             "sampler.kind" => {
                 cfg.sampler = match v.as_str().ok_or_else(fail)? {
                     "uniform" => SamplerKind::Uniform,
@@ -456,6 +468,34 @@ mod tests {
         for name in ["rust_pegrad", "rust_clipped", "rust_normalized"] {
             assert_eq!(RunMode::parse(name).unwrap().name(), name);
         }
+    }
+
+    #[test]
+    fn parse_model_stack() {
+        let cfg = Config::from_toml(
+            r#"
+            mode = "rust_pegrad"
+
+            [model]
+            stack = "input 12x12x1, conv 8 k3 relu, pool 2, flatten, dense 10"
+            m = 32
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.model_stack,
+            "input 12x12x1, conv 8 k3 relu, pool 2, flatten, dense 10"
+        );
+        assert_eq!(cfg.model_m, 32);
+        // bad stack syntax rejected at validation time
+        let err = Config::from_toml(
+            "mode = \"rust_pegrad\"\n[model]\nstack = \"input 12x12x1, dense 10\"",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("flatten"), "{err}");
+        // artifact modes ignore the [model] section entirely
+        Config::from_toml("mode = \"pegrad\"\n[model]\nstack = \"garbage\"").unwrap();
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::data::loader::{prepare, PreparedBatch, Prefetcher};
 use crate::data::{digits, regression, synth, Dataset};
 use crate::engine::{EngineMode, FusedEngine};
 use crate::nn::loss::Targets;
-use crate::nn::{Loss, Mlp, ModelSpec};
+use crate::nn::{Loss, Mlp, ModelSpec, StackSpec};
 use crate::optim::{Adam, Optimizer, Sgd};
 use crate::privacy::RdpAccountant;
 use crate::runtime::executable::{fetch_f32, Arg, Entry};
@@ -51,7 +51,12 @@ pub struct RunSummary {
 /// docs); the gather prefetcher is the only helper thread.
 pub struct Trainer {
     pub cfg: Config,
-    pub spec: ModelSpec,
+    /// The model as a heterogeneous layer stack — the shape source of
+    /// truth for every mode (dense models map onto dense-only stacks).
+    pub stack: StackSpec,
+    /// The dense `ModelSpec` view, when the model is expressible as one
+    /// (always for artifact modes; `None` for conv stacks).
+    dense_spec: Option<ModelSpec>,
     /// Artifact registry — `None` for the rust-engine modes, which need
     /// neither the PJRT runtime nor AOT artifacts.
     registry: Option<Registry>,
@@ -107,36 +112,47 @@ impl Profile {
 impl Trainer {
     pub fn new(cfg: Config) -> Result<Trainer> {
         cfg.validate()?;
-        let (registry, spec) = if cfg.mode.is_rust_engine() {
+        let (registry, dense_spec, stack) = if cfg.mode.is_rust_engine() {
             // model straight from config; no manifest, no PJRT
-            let act = ops::Activation::parse(&cfg.model_activation).ok_or_else(|| {
-                anyhow!("unknown model.activation '{}'", cfg.model_activation)
-            })?;
             let loss = Loss::parse(&cfg.model_loss)
                 .ok_or_else(|| anyhow!("unknown model.loss '{}'", cfg.model_loss))?;
-            let spec = ModelSpec::new(cfg.model_dims.clone(), act, loss, cfg.model_m)?;
-            (None, spec)
+            if !cfg.model_stack.is_empty() {
+                let stack = StackSpec::parse(&cfg.model_stack, loss, cfg.model_m)?;
+                (None, None, stack)
+            } else {
+                let act = ops::Activation::parse(&cfg.model_activation).ok_or_else(
+                    || anyhow!("unknown model.activation '{}'", cfg.model_activation),
+                )?;
+                let spec = ModelSpec::new(cfg.model_dims.clone(), act, loss, cfg.model_m)?;
+                let stack = StackSpec::from_dense(&spec);
+                (None, Some(spec), stack)
+            }
         } else {
             let manifest = Manifest::load(&cfg.artifacts_dir)?;
             let registry = Registry::new(manifest);
             let spec = registry.manifest.preset(&cfg.preset)?.spec()?;
-            (Some(registry), spec)
+            let stack = StackSpec::from_dense(&spec);
+            (Some(registry), Some(spec), stack)
         };
         let engine = cfg
             .mode
             .is_rust_engine()
-            .then(|| FusedEngine::new(spec.clone()));
+            .then(|| FusedEngine::from_stack(stack.clone()));
 
         let mut rng = Rng::new(cfg.seed);
-        let (train, eval) = build_datasets(&cfg, &spec, &mut rng)?;
+        let (train, eval) = build_datasets(&cfg, &stack, &mut rng)?;
         log::info!(
             "dataset: {} train={} eval={}  model: {} ({} params, m={})",
             train.name,
             train.len(),
             eval.len(),
-            cfg.preset,
-            spec.param_count(),
-            spec.m
+            if cfg.model_stack.is_empty() {
+                cfg.preset.clone()
+            } else {
+                cfg.model_stack.clone()
+            },
+            stack.param_count(),
+            stack.m
         );
 
         let sampler: Box<dyn Sampler> = match cfg.sampler {
@@ -158,16 +174,21 @@ impl Trainer {
         };
 
         let accountant = cfg.privacy.as_ref().map(|p| {
-            let q = (spec.m as f64 / train.len() as f64).min(1.0);
+            let q = (stack.m as f64 / train.len() as f64).min(1.0);
             let mut a = RdpAccountant::new(q, p.noise_sigma.max(1e-6) as f64);
             a.observe_steps(0);
             a
         });
 
-        let params = spec.init_params(&mut rng);
+        // dense models keep the exact ModelSpec init (He/Glorot chosen by
+        // the model activation); stacks choose per layer
+        let params = match &dense_spec {
+            Some(spec) => spec.init_params(&mut rng),
+            None => stack.init_params(&mut rng),
+        };
         let monitor = cfg.telemetry.enabled.then(|| {
             let mut mon =
-                TelemetryMonitor::new(&cfg.telemetry, spec.n_layers(), spec.m, train.len());
+                TelemetryMonitor::new(&cfg.telemetry, stack.n_params(), stack.m, train.len());
             // the GNS decomposition is unbiased only for the plain uniform
             // minibatch mean; IS weights and the §6 rescales shift both
             // moments, so the report must say which one it is
@@ -183,7 +204,8 @@ impl Trainer {
             .map(|_| Profile::default());
         Ok(Trainer {
             cfg,
-            spec,
+            stack,
+            dense_spec,
             registry,
             engine,
             train,
@@ -278,8 +300,7 @@ impl Trainer {
                 Some(reg.get(&self.cfg.preset, "fwd")?),
             )
         };
-        let m = self.spec.m;
-        let n = self.spec.n_layers();
+        let m = self.stack.m;
         let total = Timer::start();
 
         // gather-prefetch pipeline (selection inline, gather overlapped)
@@ -377,7 +398,6 @@ impl Trainer {
         self.sync_params_to_host()?;
         let (eval_loss, eval_acc) = self.evaluate(fwd_entry.as_ref())?;
         self.metrics.record_eval(self.step, eval_loss, eval_acc);
-        let _ = n;
         log::info!(
             "run '{}' done: {} steps in {:.1}s ({:.1} ms/step)",
             self.cfg.run_name,
@@ -458,7 +478,7 @@ impl Trainer {
             if p.noise_sigma > 0.0 {
                 // DP-SGD gaussian noise on the MEAN clipped gradient:
                 // sigma * C / m per coordinate, from the run RNG.
-                let scale = p.noise_sigma * p.clip_c / self.spec.m as f32;
+                let scale = p.noise_sigma * p.clip_c / self.stack.m as f32;
                 let rng = &mut self.rng;
                 for g in self.engine.as_mut().unwrap().grads_mut() {
                     for v in g.data_mut() {
@@ -497,7 +517,7 @@ impl Trainer {
             return self.execute_step_rust(batch, lr);
         }
         let entry = entry.expect("artifact modes pass an entry");
-        let n = self.spec.n_layers();
+        let n = self.stack.n_params();
         match self.cfg.mode {
             RunMode::RustPegrad | RunMode::RustClipped | RunMode::RustNormalized => {
                 unreachable!("handled above")
@@ -663,28 +683,29 @@ impl Trainer {
     /// path keeps the same batching for comparable numbers).
     fn evaluate(&mut self, fwd: Option<&std::rc::Rc<Entry>>) -> Result<(f32, Option<f32>)> {
         self.sync_params_to_host()?;
-        let m = self.spec.m;
+        let m = self.stack.m;
+        let out_len = self.stack.out_len();
         let n_batches = self.eval.len() / m;
         if n_batches == 0 {
             return Ok((f32::NAN, None));
         }
-        let reference = self
-            .cfg
-            .mode
-            .is_rust_engine()
-            .then(|| Mlp::new(self.spec.clone(), self.params.clone()));
         let mut loss_sum = 0f64;
         let mut hits = 0usize;
         let mut seen = 0usize;
         for b in 0..n_batches {
             let idx: Vec<usize> = (b * m..(b + 1) * m).collect();
             let (x, y) = self.eval.batch(&idx);
-            let logits;
-            if let Some(mlp) = &reference {
-                let f = mlp.forward(&x, &y);
-                loss_sum +=
-                    (f.per_ex_loss.iter().sum::<f32>() / f.per_ex_loss.len() as f32) as f64;
-                logits = f.logits;
+            let is_classes = matches!(y, Targets::Classes(_));
+            // predictions only for classification — regression evals skip
+            // the argmax scan entirely
+            let pred: Option<Vec<usize>>;
+            if self.cfg.mode.is_rust_engine() {
+                // fused-engine forward — works for every stack (dense or
+                // conv) and reuses the step workspace, zero allocations
+                let engine = self.engine.as_mut().expect("rust modes own an engine");
+                loss_sum += engine.forward_only(&self.params, &x, &y) as f64;
+                pred = is_classes
+                    .then(|| ops::row_argmax_rows(engine.logits(), m, out_len));
             } else {
                 let fwd = fwd.expect("artifact modes pass a fwd entry");
                 let mut args: Vec<Arg> = self.params.iter().map(Arg::from).collect();
@@ -692,10 +713,9 @@ impl Trainer {
                 args.push(Arg::from(&y));
                 let mut out = fwd.call(&args)?;
                 loss_sum += out[0].item() as f64;
-                logits = out.swap_remove(2);
+                pred = is_classes.then(|| ops::row_argmax(&out.swap_remove(2)));
             }
-            if let Targets::Classes(cls) = &y {
-                let pred = ops::row_argmax(&logits);
+            if let (Targets::Classes(cls), Some(pred)) = (&y, pred) {
                 hits += pred
                     .iter()
                     .zip(cls)
@@ -730,17 +750,22 @@ impl Trainer {
     }
 
     /// Reference-model view of the current parameters (for analysis).
+    /// Dense models only — conv stacks run exclusively on the fused
+    /// engine (use [`Trainer::params`] + `FusedEngine::from_stack`).
     pub fn reference_model(&mut self) -> Result<Mlp> {
         self.sync_params_to_host()?;
-        Ok(Mlp::new(self.spec.clone(), self.params.clone()))
+        let spec = self.dense_spec.clone().ok_or_else(|| {
+            anyhow!("reference_model needs a dense model; this run uses a layer stack")
+        })?;
+        Ok(Mlp::new(spec, self.params.clone()))
     }
 }
 
 /// Build (train, eval) datasets per config. Eval sizes are multiples of m
 /// (artifact batch shapes are static).
-fn build_datasets(cfg: &Config, spec: &ModelSpec, rng: &mut Rng) -> Result<(Dataset, Dataset)> {
+fn build_datasets(cfg: &Config, stack: &StackSpec, rng: &mut Rng) -> Result<(Dataset, Dataset)> {
     // loss/target compatibility: CE needs class targets, MSE dense ones
-    match (spec.loss, cfg.data) {
+    match (stack.loss, cfg.data) {
         (crate::nn::Loss::SoftmaxCe, DataKind::Regression) => {
             bail!("regression data produces dense targets but the preset uses softmax_ce")
         }
@@ -749,14 +774,14 @@ fn build_datasets(cfg: &Config, spec: &ModelSpec, rng: &mut Rng) -> Result<(Data
         }
         _ => {}
     }
-    let eval_n = (4 * spec.m).max(64) / spec.m * spec.m;
+    let eval_n = (4 * stack.m).max(64) / stack.m * stack.m;
     let mk = |n: usize, seed: u64| -> Result<Dataset> {
         Ok(match cfg.data {
             DataKind::Synth => {
                 synth::generate(&synth::SynthConfig {
                     n,
-                    dim: spec.in_dim(),
-                    n_classes: spec.out_dim(),
+                    dim: stack.in_len(),
+                    n_classes: stack.out_len(),
                     imbalance: cfg.imbalance,
                     label_noise: cfg.label_noise,
                     seed,
@@ -765,11 +790,13 @@ fn build_datasets(cfg: &Config, spec: &ModelSpec, rng: &mut Rng) -> Result<(Data
                 .0
             }
             DataKind::Digits => {
-                let side = (spec.in_dim() as f64).sqrt() as usize;
-                if side * side != spec.in_dim() || side < 9 {
+                // a conv stack's single-channel HxW input is the same
+                // flat layout the dense models consume
+                let side = (stack.in_len() as f64).sqrt() as usize;
+                if side * side != stack.in_len() || side < 9 {
                     bail!(
-                        "digits data needs a square input dim >= 81, got {}",
-                        spec.in_dim()
+                        "digits data needs a square (single-channel) input dim >= 81, got {}",
+                        stack.in_len()
                     );
                 }
                 digits::generate(&digits::DigitsConfig {
@@ -781,8 +808,8 @@ fn build_datasets(cfg: &Config, spec: &ModelSpec, rng: &mut Rng) -> Result<(Data
             }
             DataKind::Regression => regression::generate(&regression::RegressionConfig {
                 n,
-                dim: spec.in_dim(),
-                out_dim: spec.out_dim(),
+                dim: stack.in_len(),
+                out_dim: stack.out_len(),
                 seed,
                 ..Default::default()
             }),

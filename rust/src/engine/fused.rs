@@ -1,40 +1,52 @@
-//! The fused streaming per-example-gradient engine.
+//! The fused streaming per-example-gradient engine, generalized over
+//! heterogeneous layer stacks.
 //!
-//! One `step()` = exactly one forward + one backward traversal:
+//! One `step()` = exactly one forward + one backward traversal of the
+//! stack:
 //!
-//! * forward: augmentation and the §4 row norms `||Haug_j^(i-1)||²` are
-//!   computed in the same pass that builds each layer's input (the +1 for
-//!   the bias column included), and `phi'(z)` is stored instead of `z` so
-//!   the backward never re-evaluates activations;
-//! * backward: each `Zbar^(i)` is produced into a ping-pong buffer; its
-//!   row norms `||Zbar_j^(i)||²` are computed **inside the same row-band
-//!   loop** that forms `Zbar^(i-1)` (threadpool-sized scoped bands, the
-//!   same blocking discipline as `ops::matmul_band`), and the intermediate
-//!   is dropped immediately — O(1) layers of Zbar live in norms/mean mode;
-//! * gradients: accumulated in place into preallocated buffers via the
-//!   fused `C += Haugᵀ·diag(coef)·Zbar` kernel
-//!   ([`crate::tensor::ops::matmul_tn_coef_acc_slices`]), so the §6
-//!   rescale (`diag(c)·Zbar`) never materializes and the unclipped
-//!   gradient is never formed in clipped mode.
+//! * forward: each [`crate::nn::layers::Layer`] writes its
+//!   pre-activation output into the engine's ping-pong buffer and
+//!   retains its own input-side state (dense: augmented rows + `Haug`
+//!   norms; conv: the im2col unfold); the engine applies `phi` in place
+//!   and stores `phi'(z)` so the backward never re-evaluates
+//!   activations;
+//! * backward: layers are walked top-down; each weighted layer emits its
+//!   per-example squared norms `s_j^{(l)}` **during** the traversal
+//!   (dense: the §4 factorization fused into the backprop band kernel;
+//!   conv: `||U_j^T V_j||²` from a band-local scratch, per Rochette et
+//!   al. — see `nn::layers`), and the delta is dropped as soon as the
+//!   previous layer's is formed — O(1) layers of deltas live in Mean
+//!   mode;
+//! * gradients: Mean mode folds the per-example coefficients into the
+//!   same kernels that compute the norms
+//!   ([`crate::tensor::ops::matmul_tn_coef_acc_slices`] for dense,
+//!   band-local partials for conv), so per-example gradients are never
+//!   materialized.
 //!
 //! §6 modes (clip / normalize) need the full per-example norm before any
-//! coefficient can be applied, so they retain the Zbars in reusable
-//! workspace buffers and run the rescale matmuls after the traversal —
-//! still one forward + one backward worth of matmul flops total (the
-//! rescale matmul *replaces* the plain gradient matmul; the instrumented
-//! flop counter proves this, see `tests/fused_engine.rs`).
+//! coefficient can be applied, so weighted layers retain their deltas in
+//! reusable buffers and replay the accumulation once the coefficients
+//! are known. For dense layers the replay *replaces* the plain gradient
+//! matmul (still exactly fwd+bwd flops — the instrumented counter proves
+//! it, see `tests/fused_engine.rs`); conv layers pay one extra gradient
+//! matmul because the norm pass itself already cost one (the price of
+//! losing the dense rank-1 structure).
+//!
+//! The engine is **batch-size tolerant**: one engine serves any
+//! `m ≤ m_max` (the workspace capacity from the spec); every kernel
+//! operates on the leading `m` rows, so a shrunken batch is bitwise
+//! identical to a fresh engine built for that size.
 
+use crate::nn::layers::{Layer, StackSpec};
 use crate::nn::loss::Targets;
 use crate::nn::ModelSpec;
 use crate::pegrad::PerExampleNorms;
 use crate::telemetry::LayerTap;
 use crate::tensor::ops::Activation;
-use crate::tensor::{ops, Tensor};
+use crate::tensor::Tensor;
+use crate::util::threadpool;
 
 use super::workspace::Workspace;
-
-/// Below this many multiply-adds a layer's backward runs single-threaded.
-const ENGINE_PAR_THRESHOLD: usize = 64 * 64 * 16;
 
 /// Below this many elements the forward activation/phi' loop stays
 /// single-threaded (elementwise work only pays for fan-out at m ≥ ~1024
@@ -45,7 +57,7 @@ const ACT_PAR_THRESHOLD: usize = 1 << 15;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EngineMode {
     /// Mean gradient + per-example norms in one streamed pass
-    /// (coefficients known upfront — no Zbar retention). The default
+    /// (coefficients known upfront — no delta retention). The default
     /// coefficient is the uniform `1/m`; [`FusedEngine::step_streamed`]
     /// accepts per-example weights (the importance sampler's unbiased
     /// `w_j = 1/(N p_j)`, batch-mean normalized) that replace it.
@@ -65,20 +77,45 @@ pub struct EngineStats {
     pub clip_frac: Option<f32>,
 }
 
-/// The engine: a model shape plus its reusable workspace.
+/// The engine: a layer stack plus its reusable workspace.
 pub struct FusedEngine {
-    spec: ModelSpec,
+    stack: StackSpec,
+    layers: Vec<Box<dyn Layer>>,
+    /// Stack index of each weighted layer, in order.
+    param_idx: Vec<usize>,
     ws: Workspace,
+    retention_ready: bool,
 }
 
 impl FusedEngine {
+    /// Dense constructor — every existing `ModelSpec` config runs
+    /// unchanged through the generalized engine.
     pub fn new(spec: ModelSpec) -> FusedEngine {
-        let ws = Workspace::new(&spec);
-        FusedEngine { spec, ws }
+        FusedEngine::from_stack(StackSpec::from_dense(&spec))
     }
 
-    pub fn spec(&self) -> &ModelSpec {
-        &self.spec
+    /// Build the engine for an arbitrary layer stack.
+    pub fn from_stack(stack: StackSpec) -> FusedEngine {
+        let layers: Vec<Box<dyn Layer>> =
+            stack.layers.iter().map(|l| l.build(stack.m)).collect();
+        let param_idx = stack.param_layers();
+        let ws = Workspace::new(&stack);
+        FusedEngine {
+            stack,
+            layers,
+            param_idx,
+            ws,
+            retention_ready: false,
+        }
+    }
+
+    pub fn stack(&self) -> &StackSpec {
+        &self.stack
+    }
+
+    /// Rows of the most recent step (`m ≤ m_max`).
+    pub fn last_m(&self) -> usize {
+        self.ws.last_m
     }
 
     /// Accumulated gradients of the last step (Σ coef_j · g_j).
@@ -91,39 +128,46 @@ impl FusedEngine {
         &mut self.ws.grads
     }
 
-    /// Squared per-example gradient norms `s_j = Σ_i s_j^(i)`.
+    /// Squared per-example gradient norms `s_j = Σ_l s_j^(l)`.
     pub fn s_total(&self) -> &[f32] {
-        &self.ws.s_total
+        &self.ws.s_total[..self.ws.last_m]
     }
 
     /// Per-example gradient L2 norms (sqrt of `s_total`).
     pub fn norms(&self) -> &[f32] {
-        &self.ws.norms
+        &self.ws.norms[..self.ws.last_m]
     }
 
     pub fn per_ex_loss(&self) -> &[f32] {
-        &self.ws.per_ex_loss
+        &self.ws.per_ex_loss[..self.ws.last_m]
     }
 
-    /// Materialize the §4 norms in the oracle's layout (tests/CLI).
+    /// Final-layer logits of the most recent step (`[m, out_len]`).
+    pub fn logits(&self) -> &[f32] {
+        &self.ws.logits[..self.ws.last_m * self.stack.out_len()]
+    }
+
+    /// Materialize the §4 norms in the oracle's layout (tests/CLI):
+    /// `s_layers[j][l]` indexed by WEIGHTED layer ordinal.
     pub fn per_example_norms(&self) -> PerExampleNorms {
-        let n = self.spec.n_layers();
-        let m = self.spec.m;
-        let mut s_layers = vec![vec![0f32; n]; m];
-        for i in 0..n {
+        let m = self.ws.last_m;
+        let np = self.param_idx.len();
+        let mut s_layers = vec![vec![0f32; np]; m];
+        for (wi, row) in self.ws.s_param.iter().enumerate() {
             for j in 0..m {
-                s_layers[j][i] = self.ws.z_sq[i][j] * self.ws.h_sq[i][j];
+                s_layers[j][wi] = row[j];
             }
         }
         PerExampleNorms {
             s_layers,
-            s_total: self.ws.s_total.clone(),
+            s_total: self.ws.s_total[..m].to_vec(),
         }
     }
 
-    /// Bytes of live tensor state (the e8 peak-memory metric).
+    /// Bytes of live tensor state (the e8/e10 peak-memory metric):
+    /// engine buffers plus every layer's retained state.
     pub fn live_bytes(&self) -> usize {
-        self.ws.live_bytes()
+        self.ws.live_bytes() + self.layers.iter().map(|l| l.state_bytes()).sum::<usize>()
     }
 
     /// One fused step: forward + streaming backward + mode-dependent
@@ -138,17 +182,51 @@ impl FusedEngine {
         self.step_streamed(params, x, y, mode, None, None)
     }
 
+    /// Forward pass + per-example losses only (the evaluation path —
+    /// works for every stack the engine runs, dense or conv). Returns
+    /// the mean loss; logits are read via [`FusedEngine::logits`].
+    pub fn forward_only(&mut self, params: &[Tensor], x: &Tensor, y: &Targets) -> f32 {
+        let m = self.check_batch(params, x, y);
+        self.ws.last_m = m;
+        forward_pass(
+            &self.stack,
+            &mut self.layers,
+            &mut self.ws,
+            params,
+            x,
+            y,
+            m,
+        );
+        self.ws.per_ex_loss[..m].iter().sum::<f32>() / m as f32
+    }
+
+    fn check_batch(&self, params: &[Tensor], x: &Tensor, y: &Targets) -> usize {
+        let m = x.dims()[0];
+        assert!(
+            m >= 1 && m <= self.ws.m_max,
+            "engine batch rows {m} exceed workspace capacity {}",
+            self.ws.m_max
+        );
+        assert_eq!(x.dims()[1], self.stack.in_len(), "engine input width");
+        assert_eq!(y.len(), m, "engine target count");
+        assert_eq!(params.len(), self.param_idx.len(), "engine param count");
+        for (p, (a, b)) in params.iter().zip(self.stack.weight_shapes()) {
+            assert_eq!(p.dims(), &[a, b], "engine weight shape");
+        }
+        m
+    }
+
     /// [`FusedEngine::step`] with the two streaming extensions:
     ///
     /// * `weights` — per-example coefficients replacing Mean mode's
     ///   uniform `1/m` (the importance sampler's unbiased reweighting
     ///   `w_j = 1/(N p_j)/m`; rejected in the §6 modes, whose
     ///   coefficients are derived from the norms);
-    /// * `tap` — a [`LayerTap`] receiving each layer's per-example
-    ///   squared norms `s_j^(l)` as the backward traversal produces them
-    ///   (top-down), then the totals. The tap adds zero matmul flops and
-    ///   zero extra traversals — `tests/fused_engine.rs` proves the flop
-    ///   count is identical with and without it.
+    /// * `tap` — a [`LayerTap`] receiving each WEIGHTED layer's
+    ///   per-example squared norms `s_j^(l)` as the backward traversal
+    ///   produces them (top-down), then the totals. The tap adds zero
+    ///   matmul flops and zero extra traversals — `tests/fused_engine.rs`
+    ///   proves the flop count is identical with and without it.
     pub fn step_streamed(
         &mut self,
         params: &[Tensor],
@@ -158,12 +236,7 @@ impl FusedEngine {
         weights: Option<&[f32]>,
         mut tap: Option<&mut dyn LayerTap>,
     ) -> EngineStats {
-        let spec = &self.spec;
-        let n = spec.n_layers();
-        let m = spec.m;
-        assert_eq!(x.dims(), &[m, spec.in_dim()], "engine batch shape");
-        assert_eq!(y.len(), m, "engine target count");
-        assert_eq!(params.len(), n, "engine param count");
+        let m = self.check_batch(params, x, y);
         if let Some(w) = weights {
             assert_eq!(w.len(), m, "engine weight count");
             assert!(
@@ -172,76 +245,61 @@ impl FusedEngine {
                  the §6 modes derive their coefficients from the norms"
             );
         }
-        let retain_zbars = !matches!(mode, EngineMode::Mean);
-        if retain_zbars {
-            self.ws.ensure_zbars();
+        let retain = !matches!(mode, EngineMode::Mean);
+        if retain && !self.retention_ready {
+            for &i in &self.param_idx {
+                self.layers[i].ensure_retention();
+            }
+            self.retention_ready = true;
         }
+        self.ws.last_m = m;
+
+        // ---------------- forward --------------------------------------
+        forward_pass(
+            &self.stack,
+            &mut self.layers,
+            &mut self.ws,
+            params,
+            x,
+            y,
+            m,
+        );
+
+        // ---------------- backward (streaming norms) -------------------
+        let stack = &self.stack;
+        let n = stack.n_layers();
+        let out_len = stack.out_len();
         let Workspace {
-            dims,
-            hs,
+            ping,
+            pong,
             dphi,
-            act,
-            zping,
-            zpong,
-            zbars,
             logits,
             per_ex_loss,
-            h_sq,
-            z_sq,
+            s_param,
             s_total,
             norms,
-            s_layer,
             coef,
             grads,
             ..
         } = &mut self.ws;
-
-        // ---------------- forward (fused Haug norms, phi' capture) -------
-        let mut src_is_x = true;
-        for i in 0..n {
-            let d_in = dims[i];
-            let d_out = dims[i + 1];
-            {
-                let src: &[f32] = if src_is_x {
-                    x.data()
-                } else {
-                    &act[..m * d_in]
-                };
-                augment_rows(src, m, d_in, hs[i].data_mut(), &mut h_sq[i]);
-            }
-            ops::matmul_into_slices(
-                hs[i].data(),
-                params[i].data(),
-                &mut zping[..m * d_out],
-                m,
-                d_in + 1,
-                d_out,
-            );
-            crate::nn::count_flops(2 * m as u64 * (d_in + 1) as u64 * d_out as u64);
-            if i < n - 1 {
-                act_dphi_layer(
-                    spec.activation,
-                    &zping[..m * d_out],
-                    &mut act[..m * d_out],
-                    dphi[i].data_mut(),
-                    m,
-                    d_out,
-                );
-                src_is_x = false;
-            } else {
-                logits.data_mut().copy_from_slice(&zping[..m * d_out]);
+        stack
+            .loss
+            .grad_z_rows(&logits[..m * out_len], m, out_len, y, &mut ping[..m * out_len]);
+        // chain rule through a non-Identity FINAL activation: the loss sees
+        // a = phi(z_last) (the logits buffer), so dL/dz_last needs phi'.
+        // Dense-from-ModelSpec stacks have a linear output (empty dphi) and
+        // skip this bitwise.
+        if let Some(dp) = dphi.last().filter(|d| !d.is_empty()) {
+            for (g, &p) in ping[..m * out_len].iter_mut().zip(&dp[..m * out_len]) {
+                *g *= p;
             }
         }
-        spec.loss.per_example_into(logits, y, per_ex_loss);
-
-        // ---------------- backward (streaming, fused row norms) ----------
-        spec.loss.grad_z_into_slice(logits, y, &mut zping[..m * dims[n]]);
         if let EngineMode::Mean = mode {
             match weights {
-                Some(w) => coef.copy_from_slice(w),
+                Some(w) => coef[..m].copy_from_slice(w),
                 None => {
                     let w = 1.0 / m as f32;
-                    for c in coef.iter_mut() {
+                    for c in coef[..m].iter_mut() {
                         *c = w;
                     }
                 }
@@ -252,76 +310,72 @@ impl FusedEngine {
                 *v = 0.0;
             }
         }
+        let mut wi = self.param_idx.len();
         for i in (0..n).rev() {
-            let d_out = dims[i + 1];
-            {
-                let cur = &zping[..m * d_out];
-                if retain_zbars {
-                    zbars[i].data_mut().copy_from_slice(cur);
-                } else {
-                    ops::matmul_tn_coef_acc_slices(
-                        hs[i].data(),
-                        cur,
-                        Some(&coef[..]),
-                        grads[i].data_mut(),
-                        m,
-                        dims[i] + 1,
-                        d_out,
-                    );
-                    crate::nn::count_flops(2 * m as u64 * (dims[i] + 1) as u64 * d_out as u64);
-                }
-                if i > 0 {
-                    let d_in = dims[i];
-                    backprop_layer(
-                        cur,
-                        d_out,
-                        params[i].data(),
-                        dphi[i - 1].data(),
-                        d_in,
-                        &mut zpong[..m * d_in],
-                        &mut z_sq[i],
-                        m,
-                    );
-                    crate::nn::count_flops(2 * m as u64 * (d_in + 1) as u64 * d_out as u64);
-                } else {
-                    row_sq_into(cur, m, d_out, &mut z_sq[0]);
-                }
+            let lspec = &stack.layers[i];
+            let has_w = lspec.weight_shape().is_some();
+            if has_w {
+                wi -= 1;
             }
+            let (in_len_i, out_len_i) = (lspec.in_len(), lspec.out_len());
+            let need_dx = i > 0;
+            let dphi_prev = (i > 0 && !dphi[i - 1].is_empty())
+                .then(|| &dphi[i - 1][..m * in_len_i]);
+            let (coef_arg, grad_arg) = if has_w && !retain {
+                (Some(&coef[..m]), Some(&mut grads[wi]))
+            } else {
+                (None, None)
+            };
+            self.layers[i].backward(
+                has_w.then(|| &params[wi]),
+                &ping[..m * out_len_i],
+                if need_dx {
+                    Some(&mut pong[..m * in_len_i])
+                } else {
+                    None
+                },
+                dphi_prev,
+                if has_w {
+                    Some(&mut s_param[wi][..m])
+                } else {
+                    None
+                },
+                coef_arg,
+                grad_arg,
+                m,
+            );
             // stream this layer's §4 norms out while they are hot — the
-            // tap sees s_j^(i) in the same traversal that produced it
-            if let Some(t) = &mut tap {
-                for (s, (&z, &h)) in
-                    s_layer.iter_mut().zip(z_sq[i].iter().zip(h_sq[i].iter()))
-                {
-                    *s = z * h;
+            // tap sees s_j^(l) in the same traversal that produced them
+            if has_w {
+                if let Some(t) = &mut tap {
+                    t.on_layer(wi, &s_param[wi][..m]);
                 }
-                t.on_layer(i, &s_layer[..]);
             }
-            if i > 0 {
-                std::mem::swap(zping, zpong);
+            if need_dx {
+                std::mem::swap(ping, pong);
             }
         }
 
-        // ---------------- §4 totals ---------------------------------------
+        // ---------------- §4 totals -------------------------------------
         for j in 0..m {
             let mut s = 0f32;
-            for i in 0..n {
-                s += z_sq[i][j] * h_sq[i][j];
+            for row in s_param.iter() {
+                s += row[j];
             }
             s_total[j] = s;
             norms[j] = s.max(0.0).sqrt();
         }
         if let Some(t) = &mut tap {
-            t.on_step_end(&s_total[..], &per_ex_loss[..]);
+            t.on_step_end(&s_total[..m], &per_ex_loss[..m]);
         }
 
-        // ---------------- §6 coefficients + deferred accumulation --------
+        // ---------------- §6 coefficients + deferred accumulation ------
         let mut clip_frac = None;
         match mode {
             EngineMode::Mean => {}
             EngineMode::Clip { c, mean } => {
                 let mut clipped = 0usize;
-                for (w, &s) in coef.iter_mut().zip(s_total.iter()) {
+                for (w, &s) in coef[..m].iter_mut().zip(s_total.iter()) {
                     let norm = s.max(1e-30).sqrt();
                     let mut cf = (c / norm).min(1.0);
                     if cf < 1.0 {
@@ -335,27 +389,18 @@ impl FusedEngine {
                 clip_frac = Some(clipped as f32 / m as f32);
             }
             EngineMode::Normalize { target } => {
-                for (w, &s) in coef.iter_mut().zip(s_total.iter()) {
+                for (w, &s) in coef[..m].iter_mut().zip(s_total.iter()) {
                     *w = target / s.max(1e-24).sqrt() / m as f32;
                 }
             }
         }
-        if retain_zbars {
-            for i in 0..n {
-                ops::matmul_tn_coef_acc_slices(
-                    hs[i].data(),
-                    zbars[i].data(),
-                    Some(&coef[..]),
-                    grads[i].data_mut(),
-                    m,
-                    dims[i] + 1,
-                    dims[i + 1],
-                );
-                crate::nn::count_flops(2 * m as u64 * (dims[i] + 1) as u64 * dims[i + 1] as u64);
+        if retain {
+            for (wi, &li) in self.param_idx.iter().enumerate() {
+                self.layers[li].accumulate(&coef[..m], &mut grads[wi], m);
             }
         }
 
-        let mean_loss = per_ex_loss.iter().sum::<f32>() / m as f32;
+        let mean_loss = per_ex_loss[..m].iter().sum::<f32>() / m as f32;
         EngineStats {
             mean_loss,
             clip_frac,
@@ -363,145 +408,88 @@ impl FusedEngine {
     }
 }
 
-/// Copy `src` rows into the augmented buffer (bias column = 1) while
-/// accumulating `||Haug_j||²` — the fused §4 forward-side norm.
-fn augment_rows(src: &[f32], m: usize, d: usize, out: &mut [f32], h_sq: &mut [f32]) {
-    debug_assert_eq!(src.len(), m * d);
-    debug_assert_eq!(out.len(), m * (d + 1));
-    debug_assert_eq!(h_sq.len(), m);
-    for j in 0..m {
-        let s = &src[j * d..(j + 1) * d];
-        let o = &mut out[j * (d + 1)..(j + 1) * (d + 1)];
-        let mut acc = 0f64;
-        for (ov, &sv) in o[..d].iter_mut().zip(s) {
-            *ov = sv;
-            acc += (sv as f64) * (sv as f64);
-        }
-        o[d] = 1.0;
-        h_sq[j] = (acc + 1.0) as f32; // +1: the bias column of Haug
-    }
-}
-
-/// `phi(z)` and `phi'(z)` for one contiguous row chunk. Elementwise, so
-/// any row-band split is bitwise-identical to the serial loop (the
-/// determinism test below exercises exactly that).
-fn act_dphi_chunk(act: Activation, z: &[f32], a: &mut [f32], dp: &mut [f32]) {
-    for ((av, dv), &zv) in a.iter_mut().zip(dp.iter_mut()).zip(z) {
-        *av = act.apply(zv);
-        *dv = act.grad(zv);
-    }
-}
-
-/// Row-band-parallel driver for [`act_dphi_chunk`]: the forward
-/// activation/phi' loop fans out across scoped threads above
-/// [`ACT_PAR_THRESHOLD`] elements (the same borrow-don't-copy band
-/// discipline as [`backprop_layer`] and `ops::matmul`).
-fn act_dphi_layer(act: Activation, z: &[f32], a: &mut [f32], dp: &mut [f32], m: usize, d: usize) {
-    debug_assert_eq!(z.len(), m * d);
-    debug_assert_eq!(a.len(), m * d);
-    debug_assert_eq!(dp.len(), m * d);
-    if m * d <= ACT_PAR_THRESHOLD || m == 1 {
-        act_dphi_chunk(act, z, a, dp);
-        return;
-    }
-    let bands = crate::util::threadpool::bands().min(m);
-    let rows_per = m.div_ceil(bands);
-    std::thread::scope(|s| {
-        for ((zc, ac), dc) in z
-            .chunks(rows_per * d)
-            .zip(a.chunks_mut(rows_per * d))
-            .zip(dp.chunks_mut(rows_per * d))
-        {
-            s.spawn(move || act_dphi_chunk(act, zc, ac, dc));
-        }
-    });
-}
-
-fn row_sq_into(src: &[f32], m: usize, d: usize, out: &mut [f32]) {
-    debug_assert_eq!(src.len(), m * d);
-    debug_assert_eq!(out.len(), m);
-    for j in 0..m {
-        let mut acc = 0f64;
-        for &v in &src[j * d..(j + 1) * d] {
-            acc += (v as f64) * (v as f64);
-        }
-        out[j] = acc as f32;
-    }
-}
-
-/// One example-row band of the fused backward step for layer i:
-/// `Zbar^(i-1)[j, p] = (Σ_q Zbar^(i)[j, q]·W[p, q]) · phi'(z^(i-1))[j, p]`
-/// (the bias row `p = d_in` of W is skipped — that is `drop_last_col`),
-/// with `||Zbar_j^(i)||²` accumulated in the same row visit.
-#[allow(clippy::too_many_arguments)]
-fn backprop_band(
-    zbar: &[f32],
-    d_out: usize,
-    w: &[f32],
-    dphi: &[f32],
-    d_in: usize,
-    out: &mut [f32],
-    z_sq: &mut [f32],
-    j0: usize,
-    j1: usize,
-) {
-    for j in j0..j1 {
-        let zrow = &zbar[j * d_out..(j + 1) * d_out];
-        let mut acc = 0f64;
-        for &v in zrow {
-            acc += (v as f64) * (v as f64);
-        }
-        z_sq[j - j0] = acc as f32;
-        let drow = &dphi[j * d_in..(j + 1) * d_in];
-        let orow = &mut out[(j - j0) * d_in..(j - j0 + 1) * d_in];
-        for p in 0..d_in {
-            let wrow = &w[p * d_out..(p + 1) * d_out];
-            let mut dot = 0f32;
-            for (&zv, &wv) in zrow.iter().zip(wrow) {
-                dot += zv * wv;
-            }
-            orow[p] = dot * drow[p];
-        }
-    }
-}
-
-/// Row-band-parallel driver for [`backprop_band`] (scoped threads borrow
-/// the workspace directly — no copies, no allocations).
-#[allow(clippy::too_many_arguments)]
-fn backprop_layer(
-    zbar: &[f32],
-    d_out: usize,
-    w: &[f32],
-    dphi: &[f32],
-    d_in: usize,
-    out: &mut [f32],
-    z_sq: &mut [f32],
+/// One forward traversal: layers write pre-activations into the
+/// ping-pong buffers, the driver applies `phi`/`phi'` in place, logits
+/// and per-example losses land in the workspace.
+fn forward_pass(
+    stack: &StackSpec,
+    layers: &mut [Box<dyn Layer>],
+    ws: &mut Workspace,
+    params: &[Tensor],
+    x: &Tensor,
+    y: &Targets,
     m: usize,
 ) {
-    debug_assert_eq!(zbar.len(), m * d_out);
-    debug_assert_eq!(w.len(), (d_in + 1) * d_out);
-    debug_assert_eq!(dphi.len(), m * d_in);
-    debug_assert_eq!(out.len(), m * d_in);
-    debug_assert_eq!(z_sq.len(), m);
-    if m * d_in * d_out <= ENGINE_PAR_THRESHOLD || m == 1 {
-        backprop_band(zbar, d_out, w, dphi, d_in, out, z_sq, 0, m);
+    let n = stack.n_layers();
+    let Workspace {
+        ping,
+        pong,
+        dphi,
+        logits,
+        per_ex_loss,
+        ..
+    } = ws;
+    let mut src_is_x = true;
+    let mut wi = 0usize;
+    for i in 0..n {
+        let lspec = &stack.layers[i];
+        let (in_len, out_len) = (lspec.in_len(), lspec.out_len());
+        let w = lspec.weight_shape().is_some().then(|| {
+            wi += 1;
+            &params[wi - 1]
+        });
+        {
+            let src: &[f32] = if src_is_x {
+                x.data()
+            } else {
+                &ping[..m * in_len]
+            };
+            layers[i].forward(w, src, &mut pong[..m * out_len], m);
+        }
+        let act = lspec.activation();
+        if act != Activation::Identity {
+            act_dphi_in_place(act, &mut pong[..m * out_len], &mut dphi[i][..m * out_len]);
+        }
+        std::mem::swap(ping, pong);
+        src_is_x = false;
+    }
+    let out_len = stack.out_len();
+    logits[..m * out_len].copy_from_slice(&ping[..m * out_len]);
+    stack
+        .loss
+        .per_example_rows(&logits[..m * out_len], m, out_len, y, &mut per_ex_loss[..m]);
+}
+
+/// `phi(z)` and `phi'(z)` for one contiguous chunk, z overwritten by
+/// phi(z). Elementwise, so any band split is bitwise-identical to the
+/// serial loop (the determinism test below exercises exactly that).
+fn act_dphi_chunk(act: Activation, za: &mut [f32], dp: &mut [f32]) {
+    for (v, d) in za.iter_mut().zip(dp.iter_mut()) {
+        let z = *v;
+        *v = act.apply(z);
+        *d = act.grad(z);
+    }
+}
+
+/// Band-parallel driver for [`act_dphi_chunk`]: fans out across the
+/// persistent worker pool above [`ACT_PAR_THRESHOLD`] elements.
+fn act_dphi_in_place(act: Activation, za: &mut [f32], dp: &mut [f32]) {
+    debug_assert_eq!(za.len(), dp.len());
+    let total = za.len();
+    if total <= ACT_PAR_THRESHOLD {
+        act_dphi_chunk(act, za, dp);
         return;
     }
-    let bands = crate::util::threadpool::bands().min(m);
-    let rows_per = m.div_ceil(bands);
-    std::thread::scope(|s| {
-        for (bi, (ochunk, sqchunk)) in out
-            .chunks_mut(rows_per * d_in)
-            .zip(z_sq.chunks_mut(rows_per))
-            .enumerate()
-        {
-            let j0 = bi * rows_per;
-            s.spawn(move || {
-                let j1 = j0 + sqchunk.len();
-                backprop_band(zbar, d_out, w, dphi, d_in, ochunk, sqchunk, j0, j1);
-            });
-        }
-    });
+    let bands = threadpool::bands();
+    let per = total.div_ceil(bands);
+    let jobs: Vec<threadpool::ScopedJob> = za
+        .chunks_mut(per)
+        .zip(dp.chunks_mut(per))
+        .map(|(zc, dc)| {
+            Box::new(move || act_dphi_chunk(act, zc, dc)) as threadpool::ScopedJob
+        })
+        .collect();
+    threadpool::scope(jobs);
 }
 
 #[cfg(test)]
@@ -509,7 +497,7 @@ mod tests {
     use super::*;
     use crate::nn::{Loss, Mlp};
     use crate::pegrad;
-    use crate::tensor::ops::Activation;
+    use crate::tensor::ops;
     use crate::tensor::Rng;
     use crate::util::prop;
 
@@ -610,6 +598,54 @@ mod tests {
         other.step(&mlp2.params, &x2, &y2, EngineMode::Mean);
     }
 
+    /// Batch-size tolerance: the same engine serves any m ≤ m_max, and a
+    /// shrunken batch is bitwise identical to a fresh engine built for
+    /// exactly that size.
+    #[test]
+    fn shrinking_m_is_bitwise_identical_to_fresh_engine() {
+        let (mlp, x, y) = setup(vec![6, 12, 5], Activation::Gelu, Loss::SoftmaxCe, 8, 17);
+        let small_m = 3;
+        let xs = Tensor::new(vec![small_m, 6], x.data()[..small_m * 6].to_vec());
+        let ys = match &y {
+            Targets::Classes(c) => Targets::Classes(c[..small_m].to_vec()),
+            Targets::Dense(_) => unreachable!(),
+        };
+        let mut big = FusedEngine::new(mlp.spec.clone()); // capacity 8
+        big.step(&mlp.params, &x, &y, EngineMode::Mean); // dirty the workspace at m=8
+        for mode in [
+            EngineMode::Mean,
+            EngineMode::Clip { c: 0.2, mean: true },
+            EngineMode::Normalize { target: 1.0 },
+        ] {
+            big.step(&mlp.params, &xs, &ys, mode);
+            let small_spec =
+                ModelSpec::new(vec![6, 12, 5], Activation::Gelu, Loss::SoftmaxCe, small_m)
+                    .unwrap();
+            let mut fresh = FusedEngine::new(small_spec);
+            fresh.step(&mlp.params, &xs, &ys, mode);
+            assert_eq!(big.last_m(), small_m);
+            assert_eq!(big.s_total(), fresh.s_total(), "{mode:?} norms diverged");
+            assert_eq!(big.per_ex_loss(), fresh.per_ex_loss());
+            for (a, b) in big.grads().iter().zip(fresh.grads()) {
+                assert_eq!(a.data(), b.data(), "{mode:?} grads diverged");
+            }
+        }
+        // the full batch still works afterwards
+        big.step(&mlp.params, &x, &y, EngineMode::Mean);
+        assert_eq!(big.last_m(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "workspace capacity")]
+    fn oversized_batch_rejected() {
+        let (mlp, _, _) = setup(vec![4, 6, 3], Activation::Relu, Loss::SoftmaxCe, 4, 18);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(vec![9, 4], &mut rng);
+        let y = Targets::Classes(vec![0; 9]);
+        engine.step(&mlp.params, &x, &y, EngineMode::Mean);
+    }
+
     /// Satellite guard: the fanned-out activation/phi' loop is bitwise
     /// identical to the serial loop, across the threshold boundary and
     /// with ragged last bands.
@@ -624,12 +660,12 @@ mod tests {
                 Activation::Sigmoid,
             ] {
                 let z = Tensor::randn(vec![m, d], &mut rng);
-                let mut a1 = vec![0f32; m * d];
+                let mut a1 = z.data().to_vec();
                 let mut d1 = vec![0f32; m * d];
-                act_dphi_chunk(act, z.data(), &mut a1, &mut d1);
-                let mut a2 = vec![0f32; m * d];
+                act_dphi_chunk(act, &mut a1, &mut d1);
+                let mut a2 = z.data().to_vec();
                 let mut d2 = vec![0f32; m * d];
-                act_dphi_layer(act, z.data(), &mut a2, &mut d2, m, d);
+                act_dphi_in_place(act, &mut a2, &mut d2);
                 assert_eq!(a1, a2, "phi diverged at m={m} d={d} {act:?}");
                 assert_eq!(d1, d2, "phi' diverged at m={m} d={d} {act:?}");
             }
@@ -690,5 +726,56 @@ mod tests {
         let (grads, norms, _) = pegrad::clip::clip_pipeline(&mlp, &fwd, &bwd, 1.0);
         prop::assert_all_close(engine.s_total(), &norms.s_total, 1e-3).unwrap();
         prop::assert_all_close(engine.grads()[0].data(), grads[0].data(), 1e-3).unwrap();
+    }
+
+    /// A non-Identity activation on the FINAL layer must backprop through
+    /// its phi' (regression: the loss gradient is taken w.r.t. the
+    /// post-activation output).
+    #[test]
+    fn final_activation_chain_rule_matches_finite_difference() {
+        let stack = crate::nn::StackSpec::parse(
+            "input 5, dense 7 tanh, dense 3 sigmoid",
+            Loss::Mse,
+            4,
+        )
+        .unwrap();
+        let mut rng = Rng::new(61);
+        let params = stack.init_params(&mut rng);
+        let x = Tensor::randn(vec![4, 5], &mut rng);
+        let y = Targets::Dense(Tensor::rand(vec![4, 3], 0.1, 0.9, &mut rng));
+        let mut engine = FusedEngine::from_stack(stack);
+        engine.step(&params, &x, &y, EngineMode::Mean);
+        let grads: Vec<Tensor> = engine.grads().to_vec();
+        // probe several coordinates of both layers against central FD
+        for li in 0..2 {
+            let (rows, cols) = (params[li].dims()[0], params[li].dims()[1]);
+            for (r, c) in [(0, 0), (rows - 1, cols - 1), (rows / 2, cols / 2)] {
+                let h = 1e-2f32;
+                let mut pp = params.clone();
+                pp[li].set2(r, c, pp[li].at2(r, c) + h);
+                let fp = engine.forward_only(&pp, &x, &y);
+                let mut pm = params.clone();
+                pm[li].set2(r, c, pm[li].at2(r, c) - h);
+                let fm = engine.forward_only(&pm, &x, &y);
+                let fd = (fp - fm) / (2.0 * h);
+                prop::assert_close(grads[li].at2(r, c) as f64, fd as f64, 5e-2)
+                    .map_err(|e| format!("layer {li} ({r},{c}): {e}"))
+                    .unwrap();
+            }
+        }
+    }
+
+    /// forward_only matches the Mlp reference bitwise on dense stacks
+    /// (the trainer's eval path).
+    #[test]
+    fn forward_only_matches_mlp_forward() {
+        let (mlp, x, y) = setup(vec![5, 8, 4], Activation::Gelu, Loss::SoftmaxCe, 6, 21);
+        let mut engine = FusedEngine::new(mlp.spec.clone());
+        let mean = engine.forward_only(&mlp.params, &x, &y);
+        let fwd = mlp.forward(&x, &y);
+        assert_eq!(engine.logits(), fwd.logits.data(), "logits must match bitwise");
+        assert_eq!(engine.per_ex_loss(), &fwd.per_ex_loss[..]);
+        let want = fwd.per_ex_loss.iter().sum::<f32>() / 6.0;
+        prop::assert_close(mean as f64, want as f64, 1e-6).unwrap();
     }
 }

@@ -1,29 +1,42 @@
-//! Fused streaming per-example-gradient execution engine (paper §4–§6).
+//! Fused streaming per-example-gradient execution engine (paper §4–§6),
+//! generalized over heterogeneous layer stacks
+//! ([`crate::nn::layers::Layer`]).
 //!
 //! Code ↔ paper map:
 //!
-//! * **§2 (model)** — [`workspace::Workspace`] holds the augmented inputs
-//!   `Haug^(i-1)` (bias column folded) the factorization consumes; the
-//!   forward pass writes them once per step into preallocated buffers.
-//! * **§4 (factored norms)** — `s_j^(i) = ||Zbar_j^(i)||²·||Haug_j^(i-1)||²`.
-//!   The `Haug` factor is computed inside the augmentation copy; the
-//!   `Zbar` factor is computed inside the backward row-band kernel that
-//!   forms the next layer's `Zbar` ([`fused::FusedEngine::step`]) — the
+//! * **§2 (model)** — a [`crate::nn::layers::StackSpec`] describes the
+//!   network (dense configs map onto dense-only stacks via
+//!   `StackSpec::from_dense`, so every `ModelSpec` runs unchanged); each
+//!   layer retains its own input-side state (dense: `Haug^(i-1)` with the
+//!   bias column folded; conv: the im2col unfold) in buffers allocated
+//!   once at engine construction.
+//! * **§4 (factored norms)** — dense layers stream
+//!   `s_j^(i) = ||Zbar_j^(i)||²·||Haug_j^(i-1)||²`: the `Haug` factor is
+//!   computed inside the augmentation copy, the `Zbar` factor inside the
+//!   backward row-band kernel that forms the next layer's `Zbar` — the
 //!   norms are a by-product of the traversal, not a second pass over
-//!   materialized intermediates.
+//!   materialized intermediates. Conv layers stream the Rochette et
+//!   al. generalization `s_j = ||U_jᵀV_j||²` from band-local scratch
+//!   (see `nn::layers` for the derivation).
 //! * **§5 (cost)** — one forward + one backward worth of matmul flops per
-//!   step in every mode (`tests/fused_engine.rs` proves it with the
-//!   instrumented flop counter); the trick's extra work is the O(mnp)
-//!   row-norm accumulation.
+//!   step in every mode on dense stacks (`tests/fused_engine.rs` proves
+//!   it with the instrumented flop counter); the trick's extra work is
+//!   the O(mnp) row-norm accumulation. Conv norms cost one gradient
+//!   matmul — which in Mean mode IS the gradient accumulation.
 //! * **§6 (clipping / normalized updates)** — the rescale
 //!   `Haugᵀ(diag(c)·Zbar)` is a single fused kernel
 //!   ([`crate::tensor::ops::matmul_tn_coef_acc_slices`]): coefficients
 //!   multiply on the fly, the rescaled `Zbar` never materializes, and in
 //!   clipped mode the unclipped gradient is never formed at all.
 //!
+//! The engine is batch-size tolerant: one engine serves any `m ≤ m_max`,
+//! bitwise identically to a fresh engine of that size.
+//!
 //! The two-pass reference (`nn::Mlp::forward_backward` →
 //! `pegrad::per_example_norms` → `pegrad::clipped_grads`) stays in-tree as
-//! the correctness oracle; `benches/e8_fused.rs` measures the gap.
+//! the correctness oracle; `benches/e8_fused.rs` measures the gap and
+//! `benches/e10_conv.rs` measures the conv stack against the
+//! materialized per-example-gradient oracle.
 //!
 //! **Telemetry**: [`fused::FusedEngine::step_streamed`] additionally
 //! accepts a [`crate::telemetry::LayerTap`] that receives each layer's

@@ -1,160 +1,145 @@
-//! Preallocated buffers for the fused streaming engine.
+//! Preallocated engine-level buffers for the fused streaming engine.
 //!
-//! Every tensor the engine touches per step lives here and is allocated
-//! once at construction ("warmup"); a training step performs **zero tensor
-//! allocations** — buffers are overwritten in place. This is the memory
-//! half of the §5 argument: the trick's extra state is O(m·n) scalars, not
-//! O(m·params) materialized per-example gradients.
+//! Every buffer the generic layer driver touches per step lives here and
+//! is allocated once at construction ("warmup") for the stack's maximum
+//! batch size `m_max`; a training step at any `m ≤ m_max` performs
+//! **zero tensor allocations** — buffers are overwritten in place and
+//! every kernel operates on the leading `m` rows. This is the memory
+//! half of the §5 argument: the trick's extra state is O(m·n) scalars,
+//! not O(m·params) materialized per-example gradients. (Layer-local
+//! state — augmented/unfolded inputs, pooling argmaxes, §6 retention —
+//! lives inside each [`crate::nn::layers::Layer`]; the engine sums it
+//! into [`crate::engine::FusedEngine::live_bytes`].)
 
-use crate::nn::ModelSpec;
+use crate::nn::layers::StackSpec;
+use crate::tensor::ops::Activation;
 use crate::tensor::Tensor;
 
-/// Reusable per-step state for one `(ModelSpec, m)` shape.
+/// Reusable per-step engine state for one `(StackSpec, m_max)` shape.
 pub struct Workspace {
-    pub(crate) m: usize,
-    pub(crate) dims: Vec<usize>,
-    /// `Haug^(i-1)` per layer i: `[m, dims[i]+1]` — retained by the forward
-    /// pass (standard backprop memory; the engine drops everything else).
-    pub(crate) hs: Vec<Tensor>,
-    /// `phi'(z^(i))` for hidden layers `i = 0..n-1`: `[m, dims[i+1]]`.
-    /// Stored at forward time so the backward never revisits `z`.
-    pub(crate) dphi: Vec<Tensor>,
-    /// Activation scratch (current layer input), `m * max_hidden_width`.
-    pub(crate) act: Vec<f32>,
-    /// Ping-pong Zbar buffers, `m * max_layer_width` each: layer `i`'s
-    /// Zbar is dropped as soon as `i-1`'s is formed (O(1) layers live),
-    /// except in the coefficient-rescale modes which copy into `zbars`.
-    pub(crate) zping: Vec<f32>,
-    pub(crate) zpong: Vec<f32>,
-    /// Retained Zbars for §6 clip/normalize (coefficients need the full
-    /// per-example norm before any rescaled gradient can be accumulated).
-    /// Allocated lazily on the first such step.
-    pub(crate) zbars: Vec<Tensor>,
-    pub(crate) logits: Tensor,
+    pub(crate) m_max: usize,
+    /// Shared traversal ping-pong buffers, `m_max * max_width` each: the
+    /// forward streams activations through them, the backward reuses the
+    /// same pair for the deltas (the phases never overlap — everything
+    /// the backward needs from the forward lives in layer-local state,
+    /// `dphi`, and `logits`).
+    pub(crate) ping: Vec<f32>,
+    pub(crate) pong: Vec<f32>,
+    /// `phi'(z^(i))` per layer (`[m_max, out_len]`; empty for layers
+    /// with the identity activation — pool/flatten glue and linear
+    /// outputs). Stored at forward time so the backward never
+    /// re-evaluates activations.
+    pub(crate) dphi: Vec<Vec<f32>>,
+    /// Final-layer logits, retained for the loss gradient + getters.
+    pub(crate) logits: Vec<f32>,
     pub(crate) per_ex_loss: Vec<f32>,
-    /// `||Haug_j^(i-1)||²` / `||Zbar_j^(i)||²` per layer — the §4 factors.
-    pub(crate) h_sq: Vec<Vec<f32>>,
-    pub(crate) z_sq: Vec<Vec<f32>>,
+    /// Streamed per-example squared norms, one row per WEIGHTED layer
+    /// (`s_param[wi][j] = s_j^{(wi)}`).
+    pub(crate) s_param: Vec<Vec<f32>>,
     pub(crate) s_total: Vec<f32>,
     pub(crate) norms: Vec<f32>,
-    /// Scratch for one layer's per-example norms handed to a
-    /// [`crate::telemetry::LayerTap`] (filled and consumed inside the
-    /// backward traversal; never read across layers).
-    pub(crate) s_layer: Vec<f32>,
-    /// Per-example coefficients folded into the gradient matmul.
+    /// Per-example coefficients folded into the gradient accumulation.
     pub(crate) coef: Vec<f32>,
     /// Gradient accumulators, one per weight matrix.
     pub(crate) grads: Vec<Tensor>,
+    /// Rows of the most recent step (getters slice to this).
+    pub(crate) last_m: usize,
 }
 
 impl Workspace {
-    pub fn new(spec: &ModelSpec) -> Workspace {
-        let m = spec.m;
-        let dims = spec.dims.clone();
-        let n = spec.n_layers();
-        let hs = (0..n).map(|i| Tensor::zeros(vec![m, dims[i] + 1])).collect();
-        let dphi = (0..n.saturating_sub(1))
-            .map(|i| Tensor::zeros(vec![m, dims[i + 1]]))
+    pub fn new(stack: &StackSpec) -> Workspace {
+        let m = stack.m;
+        let w = stack.max_width();
+        let dphi = stack
+            .layers
+            .iter()
+            .map(|l| {
+                if l.activation() == Activation::Identity {
+                    Vec::new()
+                } else {
+                    vec![0.0; m * l.out_len()]
+                }
+            })
             .collect();
-        let max_hidden = dims[1..n].iter().copied().max().unwrap_or(0);
-        let max_width = dims[1..].iter().copied().max().unwrap_or(0);
-        let grads = spec
+        let grads = stack
             .weight_shapes()
             .into_iter()
             .map(|(a, b)| Tensor::zeros(vec![a, b]))
             .collect();
         Workspace {
-            m,
-            hs,
+            m_max: m,
+            ping: vec![0.0; m * w],
+            pong: vec![0.0; m * w],
             dphi,
-            act: vec![0.0; m * max_hidden],
-            zping: vec![0.0; m * max_width],
-            zpong: vec![0.0; m * max_width],
-            zbars: Vec::new(),
-            logits: Tensor::zeros(vec![m, *dims.last().unwrap()]),
+            logits: vec![0.0; m * stack.out_len()],
             per_ex_loss: vec![0.0; m],
-            h_sq: vec![vec![0.0; m]; n],
-            z_sq: vec![vec![0.0; m]; n],
+            s_param: vec![vec![0.0; m]; stack.n_params()],
             s_total: vec![0.0; m],
             norms: vec![0.0; m],
-            s_layer: vec![0.0; m],
             coef: vec![0.0; m],
             grads,
-            dims,
+            last_m: 0,
         }
     }
 
-    /// Allocate the retained-Zbar buffers (first §6-mode step only).
-    pub fn ensure_zbars(&mut self) {
-        if self.zbars.is_empty() {
-            let n = self.dims.len() - 1;
-            self.zbars = (0..n)
-                .map(|i| Tensor::zeros(vec![self.m, self.dims[i + 1]]))
-                .collect();
-        }
-    }
-
-    /// Bytes of live f32 tensor state currently held (the peak-memory
-    /// number `e8_fused` reports).
+    /// Bytes of live f32 state held by the engine-level buffers (the
+    /// layer-local state is added by `FusedEngine::live_bytes`).
     pub fn live_bytes(&self) -> usize {
-        let tensors: usize = self
-            .hs
-            .iter()
-            .chain(&self.dphi)
-            .chain(&self.zbars)
-            .chain(&self.grads)
-            .map(Tensor::numel)
-            .sum::<usize>()
-            + self.logits.numel();
-        let vecs: usize = self.act.len()
-            + self.zping.len()
-            + self.zpong.len()
+        let vecs = self.ping.len()
+            + self.pong.len()
+            + self.logits.len()
             + self.per_ex_loss.len()
             + self.s_total.len()
             + self.norms.len()
-            + self.s_layer.len()
             + self.coef.len()
-            + self.h_sq.iter().map(Vec::len).sum::<usize>()
-            + self.z_sq.iter().map(Vec::len).sum::<usize>();
-        4 * (tensors + vecs)
+            + self.dphi.iter().map(Vec::len).sum::<usize>()
+            + self.s_param.iter().map(Vec::len).sum::<usize>();
+        let grads: usize = self.grads.iter().map(Tensor::numel).sum();
+        4 * (vecs + grads)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::Loss;
+    use crate::nn::{Loss, ModelSpec};
     use crate::tensor::ops::Activation;
 
     #[test]
-    fn shapes_follow_spec() {
+    fn shapes_follow_dense_stack() {
         let spec =
             ModelSpec::new(vec![4, 8, 6, 3], Activation::Relu, Loss::SoftmaxCe, 5).unwrap();
-        let mut ws = Workspace::new(&spec);
-        assert_eq!(ws.hs.len(), 3);
-        assert_eq!(ws.hs[0].dims(), &[5, 5]);
-        assert_eq!(ws.hs[2].dims(), &[5, 7]);
-        assert_eq!(ws.dphi.len(), 2);
-        assert_eq!(ws.dphi[1].dims(), &[5, 6]);
-        assert_eq!(ws.act.len(), 5 * 8);
-        assert_eq!(ws.zping.len(), 5 * 8);
-        assert_eq!(ws.logits.dims(), &[5, 3]);
-        assert!(ws.zbars.is_empty());
-        let before = ws.live_bytes();
-        ws.ensure_zbars();
-        assert_eq!(ws.zbars.len(), 3);
-        assert!(ws.live_bytes() > before);
-        // idempotent
-        ws.ensure_zbars();
-        assert_eq!(ws.zbars.len(), 3);
+        let ws = Workspace::new(&StackSpec::from_dense(&spec));
+        assert_eq!(ws.m_max, 5);
+        assert_eq!(ws.ping.len(), 5 * 8);
+        assert_eq!(ws.logits.len(), 5 * 3);
+        // hidden layers store phi', the linear output layer does not
+        assert_eq!(ws.dphi.len(), 3);
+        assert_eq!(ws.dphi[0].len(), 5 * 8);
+        assert_eq!(ws.dphi[1].len(), 5 * 6);
+        assert!(ws.dphi[2].is_empty());
+        assert_eq!(ws.s_param.len(), 3);
+        assert_eq!(ws.grads.len(), 3);
+        assert_eq!(ws.grads[2].dims(), &[7, 3]);
+        assert!(ws.live_bytes() > 0);
     }
 
     #[test]
-    fn single_layer_model_has_no_hidden_state() {
-        let spec = ModelSpec::new(vec![4, 2], Activation::Identity, Loss::Mse, 3).unwrap();
-        let ws = Workspace::new(&spec);
-        assert!(ws.dphi.is_empty());
-        assert!(ws.act.is_empty());
-        assert_eq!(ws.zping.len(), 3 * 2);
+    fn conv_stack_sizes_glue_layers() {
+        let stack = StackSpec::parse(
+            "input 12x12x1, conv 8 k3 relu, pool 2, flatten, dense 10",
+            Loss::SoftmaxCe,
+            4,
+        )
+        .unwrap();
+        let ws = Workspace::new(&stack);
+        // widest boundary is the conv output 10x10x8
+        assert_eq!(ws.ping.len(), 4 * 800);
+        // conv stores phi'; pool/flatten/linear dense do not
+        assert_eq!(ws.dphi[0].len(), 4 * 800);
+        assert!(ws.dphi[1].is_empty());
+        assert!(ws.dphi[2].is_empty());
+        assert!(ws.dphi[3].is_empty());
+        assert_eq!(ws.s_param.len(), 2);
     }
 }

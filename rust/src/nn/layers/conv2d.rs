@@ -1,0 +1,535 @@
+//! The im2col convolution layer with Rochette-style streamed
+//! per-example gradient norms (see the module docs in
+//! [`super`] for the derivation).
+//!
+//! Forward: `im2col` unfolds the NHWC input into `U` `[m·L, K+1]` (bias
+//! column folded), then one batched matmul `Z = U W` gives all output
+//! positions. Backward, per example j and entirely inside one band-local
+//! scratch:
+//!
+//! * `G_j = U_j^T V_j` (the example's weight gradient) is formed in a
+//!   `[K+1, c_out]` scratch, its squared Frobenius norm streamed out as
+//!   `s_j`, and — in Mean mode — `coef_j·G_j` folded into a per-band
+//!   gradient partial. Per-example gradients are never materialized
+//!   (`O(K·c_out)` scratch per worker vs the naive `O(m·K·c_out)`).
+//! * the input gradient re-uses the same traversal: for every position,
+//!   `dU = V W^T` rows are scattered back onto the input pixels
+//!   (col2im), then multiplied by the previous layer's `phi'`.
+//!
+//! Bands split over examples on the persistent worker pool; every
+//! example's outputs are disjoint, so banding is bitwise identical to
+//! the serial loop.
+
+use crate::tensor::conv::ConvGeom;
+use crate::tensor::{ops, Tensor};
+use crate::util::threadpool;
+
+use super::{Layer, LayerSpec};
+
+/// Below this many G-matmul multiply-adds the backward stays
+/// single-threaded.
+const CONV_PAR_THRESHOLD: usize = 64 * 64 * 16;
+
+pub struct ConvLayer {
+    spec: LayerSpec,
+    geom: ConvGeom,
+    out_ch: usize,
+    m_max: usize,
+    /// L = number of output positions.
+    l: usize,
+    /// K+1 = patch length + folded bias column.
+    kp1: usize,
+    /// Unfolded inputs `[m_max, L·(K+1)]`, written by forward.
+    ucols: Vec<f32>,
+    /// Per-band `[K+1, c_out]` G scratch (one block per worker band).
+    gbuf: Vec<f32>,
+    /// Per-band gradient partials `Σ_j coef_j·G_j` (Mean mode).
+    gpartial: Vec<f32>,
+    /// Per-band `dU` row scratch `[K]` for the col2im scatter.
+    dubuf: Vec<f32>,
+    /// Retained deltas `[m_max, L·c_out]` + expanded coefficient rows
+    /// for the §6 deferred accumulation (lazily allocated).
+    retained: Vec<f32>,
+    coef_rows: Vec<f32>,
+}
+
+impl ConvLayer {
+    pub fn new(spec: LayerSpec, m_max: usize) -> ConvLayer {
+        let LayerSpec::Conv2d { geom, out_ch, .. } = spec else {
+            panic!("ConvLayer::new needs a Conv2d spec, got {}", spec.name());
+        };
+        let l = geom.positions();
+        let kp1 = geom.patch_len() + 1;
+        let nb = threadpool::bands();
+        ConvLayer {
+            spec,
+            geom,
+            out_ch,
+            m_max,
+            l,
+            kp1,
+            ucols: vec![0.0; m_max * l * kp1],
+            gbuf: vec![0.0; nb * kp1 * out_ch],
+            gpartial: vec![0.0; nb * kp1 * out_ch],
+            dubuf: vec![0.0; nb * (kp1 - 1)],
+            retained: Vec::new(),
+            coef_rows: Vec::new(),
+        }
+    }
+
+    fn bands_for(&self, m: usize) -> usize {
+        if m * self.l * self.kp1 * self.out_ch <= CONV_PAR_THRESHOLD || m == 1 {
+            1
+        } else {
+            threadpool::bands().min(m)
+        }
+    }
+}
+
+impl Layer for ConvLayer {
+    fn spec(&self) -> &LayerSpec {
+        &self.spec
+    }
+
+    fn forward(&mut self, w: Option<&Tensor>, x: &[f32], z: &mut [f32], m: usize) {
+        let w = w.expect("conv layer is weighted");
+        debug_assert!(m <= self.m_max);
+        let (l, kp1, co) = (self.l, self.kp1, self.out_ch);
+        crate::tensor::conv::im2col(&self.geom, &x[..m * self.geom.in_len()],
+            &mut self.ucols[..m * l * kp1], m);
+        ops::matmul_into_slices(
+            &self.ucols[..m * l * kp1],
+            w.data(),
+            &mut z[..m * l * co],
+            m * l,
+            kp1,
+            co,
+        );
+        crate::nn::count_flops(2 * (m * l) as u64 * kp1 as u64 * co as u64);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &mut self,
+        w: Option<&Tensor>,
+        delta: &[f32],
+        dx: Option<&mut [f32]>,
+        dphi_prev: Option<&[f32]>,
+        s: Option<&mut [f32]>,
+        coef: Option<&[f32]>,
+        grad: Option<&mut Tensor>,
+        m: usize,
+    ) {
+        let w = w.expect("conv layer is weighted");
+        let (l, kp1, co) = (self.l, self.kp1, self.out_ch);
+        let in_len = self.geom.in_len();
+        debug_assert_eq!(delta.len(), m * l * co);
+        let fused_accum = match (&coef, &grad) {
+            (Some(_), Some(_)) => true,
+            (None, None) => {
+                debug_assert!(
+                    !self.retained.is_empty(),
+                    "ensure_retention before a §6 backward"
+                );
+                self.retained[..m * l * co].copy_from_slice(delta);
+                false
+            }
+            _ => panic!("conv backward: coef and grad must be both Some or both None"),
+        };
+        // G_j = U_j^T V_j per example (the norm stream — and in Mean mode
+        // also the gradient accumulation), plus the col2im input gradient.
+        crate::nn::count_flops(2 * (m * l) as u64 * kp1 as u64 * co as u64);
+        let need_dx = dx.is_some();
+        if need_dx {
+            crate::nn::count_flops(2 * (m * l) as u64 * kp1 as u64 * co as u64);
+        }
+        let nb = self.bands_for(m);
+        let rows_per = m.div_ceil(nb);
+        let nb = m.div_ceil(rows_per);
+        let gsz = kp1 * co;
+        for v in self.gpartial[..nb * gsz].iter_mut() {
+            *v = 0.0;
+        }
+        {
+            let geom = self.geom;
+            let ucols = &self.ucols[..m * l * kp1];
+            let wdat = w.data();
+            let mut s_chunks: Vec<Option<&mut [f32]>> = match s {
+                Some(sl) => sl[..m].chunks_mut(rows_per).map(Some).collect(),
+                None => (0..nb).map(|_| None).collect(),
+            };
+            let mut dx_chunks: Vec<Option<&mut [f32]>> = match dx {
+                Some(d) => d[..m * in_len].chunks_mut(rows_per * in_len).map(Some).collect(),
+                None => (0..nb).map(|_| None).collect(),
+            };
+            let g_chunks: Vec<&mut [f32]> = self.gbuf[..nb * gsz].chunks_mut(gsz).collect();
+            let p_chunks: Vec<&mut [f32]> =
+                self.gpartial[..nb * gsz].chunks_mut(gsz).collect();
+            let du_chunks: Vec<&mut [f32]> =
+                self.dubuf[..nb * (kp1 - 1)].chunks_mut(kp1 - 1).collect();
+            let mut jobs: Vec<threadpool::ScopedJob> = Vec::with_capacity(nb);
+            for (bi, (((g_b, p_b), du_b), (s_b, dx_b))) in g_chunks
+                .into_iter()
+                .zip(p_chunks)
+                .zip(du_chunks)
+                .zip(s_chunks.drain(..).zip(dx_chunks.drain(..)))
+                .enumerate()
+            {
+                let j0 = bi * rows_per;
+                let j1 = (j0 + rows_per).min(m);
+                jobs.push(Box::new(move || {
+                    conv_bwd_band(
+                        &geom, co, ucols, delta, wdat, dphi_prev, coef, j0, j1, s_b, dx_b,
+                        need_dx, g_b, p_b, du_b,
+                    );
+                }) as threadpool::ScopedJob);
+            }
+            threadpool::scope(jobs);
+        }
+        // deterministic band-order reduction of the gradient partials
+        if fused_accum {
+            let grad = grad.unwrap().data_mut();
+            for b in 0..nb {
+                for (gv, &pv) in grad.iter_mut().zip(&self.gpartial[b * gsz..(b + 1) * gsz]) {
+                    *gv += pv;
+                }
+            }
+        }
+    }
+
+    fn accumulate(&mut self, coef: &[f32], grad: &mut Tensor, m: usize) {
+        let (l, kp1, co) = (self.l, self.kp1, self.out_ch);
+        // §6 replay: one coefficient-weighted matmul over the retained
+        // deltas, coefficients expanded to all L rows of each example.
+        for (j, &c) in coef[..m].iter().enumerate() {
+            for v in self.coef_rows[j * l..(j + 1) * l].iter_mut() {
+                *v = c;
+            }
+        }
+        ops::matmul_tn_coef_acc_slices(
+            &self.ucols[..m * l * kp1],
+            &self.retained[..m * l * co],
+            Some(&self.coef_rows[..m * l]),
+            grad.data_mut(),
+            m * l,
+            kp1,
+            co,
+        );
+        crate::nn::count_flops(2 * (m * l) as u64 * kp1 as u64 * co as u64);
+    }
+
+    fn ensure_retention(&mut self) {
+        if self.retained.is_empty() {
+            self.retained = vec![0.0; self.m_max * self.l * self.out_ch];
+            self.coef_rows = vec![0.0; self.m_max * self.l];
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * (self.ucols.len()
+            + self.gbuf.len()
+            + self.gpartial.len()
+            + self.dubuf.len()
+            + self.retained.len()
+            + self.coef_rows.len())
+    }
+}
+
+/// One example band of the conv backward. For each example j in
+/// `[j0, j1)`:
+///
+/// 1. `G_j = U_j^T V_j` into the band-local `gbuf` (tn accumulation over
+///    positions — never materialized per example beyond this scratch);
+/// 2. `s[j] = ||G_j||_F²` (f64 accumulation, row-major — the same order
+///    `ops::sq_sum` walks a materialized gradient, so the streamed value
+///    matches the materialized oracle bitwise);
+/// 3. Mean mode: `partial += coef_j · G_j`;
+/// 4. input gradient: per position, `dU row = V row · W^T` (bias column
+///    skipped) scattered col2im-style onto `dx`, then the previous
+///    layer's `phi'` applied.
+#[allow(clippy::too_many_arguments)]
+fn conv_bwd_band(
+    geom: &ConvGeom,
+    co: usize,
+    ucols: &[f32],
+    delta: &[f32],
+    w: &[f32],
+    dphi: Option<&[f32]>,
+    coef: Option<&[f32]>,
+    j0: usize,
+    j1: usize,
+    mut s: Option<&mut [f32]>,
+    mut dx: Option<&mut [f32]>,
+    need_dx: bool,
+    gbuf: &mut [f32],
+    partial: &mut [f32],
+    dub: &mut [f32],
+) {
+    let l = geom.positions();
+    let kp1 = geom.patch_len() + 1;
+    let kc = geom.patch_len();
+    let in_len = geom.in_len();
+    let (out_w, k, ch) = (geom.out_w(), geom.k, geom.in_ch);
+    let row_stride = geom.in_w * ch;
+    for j in j0..j1 {
+        let u_j = &ucols[j * l * kp1..(j + 1) * l * kp1];
+        let v_j = &delta[j * l * co..(j + 1) * l * co];
+        // ---- G_j = U_j^T V_j into scratch --------------------------------
+        for v in gbuf.iter_mut() {
+            *v = 0.0;
+        }
+        for li in 0..l {
+            let urow = &u_j[li * kp1..(li + 1) * kp1];
+            let vrow = &v_j[li * co..(li + 1) * co];
+            for (p, &f) in urow.iter().enumerate() {
+                if f == 0.0 {
+                    continue; // relu sparsity, same win as tn_band
+                }
+                let grow = &mut gbuf[p * co..(p + 1) * co];
+                for (gv, &vv) in grow.iter_mut().zip(vrow) {
+                    *gv += f * vv;
+                }
+            }
+        }
+        // ---- streamed norm + Mean-mode accumulation ----------------------
+        if let Some(s) = s.as_deref_mut() {
+            let mut acc = 0f64;
+            for &g in gbuf.iter() {
+                acc += (g as f64) * (g as f64);
+            }
+            s[j - j0] = acc as f32;
+        }
+        if let Some(coef) = coef {
+            let cj = coef[j];
+            if cj != 0.0 {
+                for (pv, &gv) in partial.iter_mut().zip(gbuf.iter()) {
+                    *pv += cj * gv;
+                }
+            }
+        }
+        // ---- input gradient: dU = V W^T, scattered (col2im) -------------
+        if need_dx {
+            let dx_j = {
+                let dxs = dx.as_deref_mut().expect("need_dx implies dx band");
+                &mut dxs[(j - j0) * in_len..(j - j0 + 1) * in_len]
+            };
+            for v in dx_j.iter_mut() {
+                *v = 0.0;
+            }
+            for li in 0..l {
+                let vrow = &v_j[li * co..(li + 1) * co];
+                for p in 0..kc {
+                    let wrow = &w[p * co..(p + 1) * co];
+                    let mut dot = 0f32;
+                    for (&vv, &wv) in vrow.iter().zip(wrow) {
+                        dot += vv * wv;
+                    }
+                    dub[p] = dot;
+                }
+                let (oy, ox) = (li / out_w, li % out_w);
+                for ky in 0..k {
+                    let dst = &mut dx_j[(oy + ky) * row_stride + ox * ch..][..k * ch];
+                    for (d, &v) in dst.iter_mut().zip(&dub[ky * k * ch..(ky + 1) * k * ch]) {
+                        *d += v;
+                    }
+                }
+            }
+            if let Some(dphi) = dphi {
+                let drow = &dphi[j * in_len..(j + 1) * in_len];
+                for (d, &p) in dx_j.iter_mut().zip(drow) {
+                    *d *= p;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::Activation;
+    use crate::tensor::Rng;
+    use crate::util::prop;
+
+    fn conv_spec() -> LayerSpec {
+        LayerSpec::Conv2d {
+            geom: ConvGeom {
+                in_h: 5,
+                in_w: 5,
+                in_ch: 2,
+                k: 3,
+            },
+            out_ch: 4,
+            act: Activation::Tanh,
+        }
+    }
+
+    fn setup(m: usize) -> (ConvLayer, Tensor, Tensor, Tensor) {
+        let spec = conv_spec();
+        let mut rng = Rng::new(31);
+        let w = Tensor::randn(vec![spec.weight_shape().unwrap().0, 4], &mut rng);
+        let x = Tensor::randn(vec![m, spec.in_len()], &mut rng);
+        let delta = Tensor::randn(vec![m, spec.out_len()], &mut rng);
+        (ConvLayer::new(spec, m), w, x, delta)
+    }
+
+    /// Independent oracle: per-example G via ops::matmul_tn on the
+    /// unfolded patches.
+    fn oracle_grad(layer: &ConvLayer, w_rows: usize, j: usize, delta: &Tensor) -> Tensor {
+        let (l, kp1, co) = (layer.l, layer.kp1, layer.out_ch);
+        let u = Tensor::new(
+            vec![l, kp1],
+            layer.ucols[j * l * kp1..(j + 1) * l * kp1].to_vec(),
+        );
+        let v = Tensor::new(vec![l, co], delta.data()[j * l * co..(j + 1) * l * co].to_vec());
+        assert_eq!(w_rows, kp1);
+        ops::matmul_tn(&u, &v)
+    }
+
+    #[test]
+    fn grads_and_norms_match_unfolded_oracle() {
+        let m = 3;
+        let (mut layer, w, x, delta) = setup(m);
+        let mut z = vec![0f32; m * layer.spec.out_len()];
+        layer.forward(Some(&w), x.data(), &mut z, m);
+        let coef = vec![1.0f32; m];
+        let mut grad = Tensor::zeros(vec![layer.kp1, 4]);
+        let mut s = vec![0f32; m];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            None,
+            None,
+            Some(&mut s),
+            Some(&coef),
+            Some(&mut grad),
+            m,
+        );
+        let mut want = Tensor::zeros(vec![layer.kp1, 4]);
+        for j in 0..m {
+            let g = oracle_grad(&layer, layer.kp1, j, &delta);
+            prop::assert_close(s[j] as f64, ops::sq_sum(&g), 1e-3)
+                .map_err(|e| format!("example {j} norm: {e}"))
+                .unwrap();
+            ops::axpy(&mut want, 1.0, &g);
+        }
+        prop::assert_all_close(grad.data(), want.data(), 1e-3).unwrap();
+    }
+
+    #[test]
+    fn retention_replays_accumulation() {
+        let m = 4;
+        let (mut layer, w, x, delta) = setup(m);
+        let mut z = vec![0f32; m * layer.spec.out_len()];
+        layer.forward(Some(&w), x.data(), &mut z, m);
+        layer.ensure_retention();
+        let mut s = vec![0f32; m];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            None,
+            None,
+            Some(&mut s),
+            None,
+            None,
+            m,
+        );
+        let coef = [0.5f32, 0.0, 2.0, 1.0];
+        let mut grad = Tensor::zeros(vec![layer.kp1, 4]);
+        layer.accumulate(&coef, &mut grad, m);
+        let mut want = Tensor::zeros(vec![layer.kp1, 4]);
+        for (j, &c) in coef.iter().enumerate() {
+            let g = oracle_grad(&layer, layer.kp1, j, &delta);
+            ops::axpy(&mut want, c, &g);
+        }
+        prop::assert_all_close(grad.data(), want.data(), 1e-3).unwrap();
+    }
+
+    #[test]
+    fn banded_backward_bitwise_matches_single_band() {
+        // big enough that bands_for(m) > 1
+        let spec = LayerSpec::Conv2d {
+            geom: ConvGeom {
+                in_h: 12,
+                in_w: 12,
+                in_ch: 2,
+                k: 3,
+            },
+            out_ch: 8,
+            act: Activation::Relu,
+        };
+        let m = 64;
+        let mut rng = Rng::new(8);
+        let w = Tensor::randn(vec![spec.weight_shape().unwrap().0, 8], &mut rng);
+        let x = Tensor::randn(vec![m, spec.in_len()], &mut rng);
+        let delta = Tensor::randn(vec![m, spec.out_len()], &mut rng);
+        let dphi = Tensor::randn(vec![m, spec.in_len()], &mut rng);
+        let run = |mut layer: ConvLayer| {
+            let mut z = vec![0f32; m * layer.spec.out_len()];
+            layer.forward(Some(&w), x.data(), &mut z, m);
+            let mut s = vec![0f32; m];
+            let mut dx = vec![0f32; m * layer.spec.in_len()];
+            let coef = vec![1.0 / m as f32; m];
+            let mut grad = Tensor::zeros(vec![layer.kp1, 8]);
+            layer.backward(
+                Some(&w),
+                delta.data(),
+                Some(&mut dx),
+                Some(dphi.data()),
+                Some(&mut s),
+                Some(&coef),
+                Some(&mut grad),
+                m,
+            );
+            (s, dx, grad)
+        };
+        let layer = ConvLayer::new(spec.clone(), m);
+        let (s_par, dx_par, grad_par) = run(layer);
+        // single-band reference: force one band by shrinking the scratch
+        let mut solo = ConvLayer::new(spec, m);
+        let (s_ser, dx_ser, grad_ser) = {
+            let mut z = vec![0f32; m * solo.spec.out_len()];
+            solo.forward(Some(&w), x.data(), &mut z, m);
+            let mut s = vec![0f32; m];
+            let mut dx = vec![0f32; m * solo.spec.in_len()];
+            let gsz = solo.kp1 * 8;
+            for v in solo.gpartial[..gsz].iter_mut() {
+                *v = 0.0;
+            }
+            let (gb, pb) = (&mut solo.gbuf[..gsz], &mut solo.gpartial[..gsz]);
+            let coef = vec![1.0 / m as f32; m];
+            conv_bwd_band(
+                &ConvGeom {
+                    in_h: 12,
+                    in_w: 12,
+                    in_ch: 2,
+                    k: 3,
+                },
+                8,
+                &solo.ucols[..],
+                delta.data(),
+                w.data(),
+                Some(dphi.data()),
+                Some(&coef),
+                0,
+                m,
+                Some(&mut s),
+                Some(&mut dx),
+                true,
+                gb,
+                pb,
+                &mut solo.dubuf[..solo.kp1 - 1],
+            );
+            let mut grad = Tensor::zeros(vec![solo.kp1, 8]);
+            for (gv, &pv) in grad.data_mut().iter_mut().zip(pb.iter()) {
+                *gv += pv;
+            }
+            (s, dx, grad)
+        };
+        assert_eq!(s_par, s_ser, "streamed norms diverged under banding");
+        assert_eq!(dx_par, dx_ser, "input gradient diverged under banding");
+        // gradient partial reduction order differs (per-band partials) —
+        // tolerance, not bitwise
+        prop::assert_all_close(grad_par.data(), grad_ser.data(), 1e-4).unwrap();
+    }
+}

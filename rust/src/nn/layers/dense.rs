@@ -1,0 +1,416 @@
+//! The dense layer, extracted from `Mlp`/the old dense-only engine.
+//!
+//! Arithmetic is kept bit-for-bit identical to the original fused
+//! engine: the augmentation copy accumulates `||h_aug,j||²` in f64, the
+//! backward band kernel accumulates `||zbar_j||²` in f64 inside the same
+//! row visit that forms the input gradient, and the §4 product
+//! `s_j = ||zbar_j||²·||h_aug,j||²` is a single f32 multiply — so the
+//! streamed values match `pegrad::per_example_norms` bitwise.
+
+use crate::tensor::{ops, Tensor};
+use crate::util::threadpool;
+
+use super::{Layer, LayerSpec};
+
+/// Below this many multiply-adds the backward band kernel stays
+/// single-threaded (same constant as the original engine).
+const BACKPROP_PAR_THRESHOLD: usize = 64 * 64 * 16;
+
+pub struct DenseLayer {
+    spec: LayerSpec,
+    in_dim: usize,
+    out_dim: usize,
+    m_max: usize,
+    /// `Haug` `[m_max, in_dim+1]` — written by forward, consumed by the
+    /// gradient matmuls.
+    haug: Vec<f32>,
+    /// `||Haug_j||²` (bias column's +1 included).
+    h_sq: Vec<f32>,
+    /// `||Zbar_j||²` scratch, filled by the backward kernel.
+    z_sq: Vec<f32>,
+    /// Retained `Zbar` copy for the §6 deferred accumulation
+    /// (lazily allocated on the first clip/normalize step).
+    retained: Vec<f32>,
+}
+
+impl DenseLayer {
+    pub fn new(spec: LayerSpec, m_max: usize) -> DenseLayer {
+        let LayerSpec::Dense { in_dim, out_dim, .. } = spec else {
+            panic!("DenseLayer::new needs a Dense spec, got {}", spec.name());
+        };
+        DenseLayer {
+            spec,
+            in_dim,
+            out_dim,
+            m_max,
+            haug: vec![0.0; m_max * (in_dim + 1)],
+            h_sq: vec![0.0; m_max],
+            z_sq: vec![0.0; m_max],
+            retained: Vec::new(),
+        }
+    }
+}
+
+impl Layer for DenseLayer {
+    fn spec(&self) -> &LayerSpec {
+        &self.spec
+    }
+
+    fn forward(&mut self, w: Option<&Tensor>, x: &[f32], z: &mut [f32], m: usize) {
+        let w = w.expect("dense layer is weighted");
+        let (d_in, d_out) = (self.in_dim, self.out_dim);
+        debug_assert!(m <= self.m_max);
+        augment_rows(
+            &x[..m * d_in],
+            m,
+            d_in,
+            &mut self.haug[..m * (d_in + 1)],
+            &mut self.h_sq[..m],
+        );
+        ops::matmul_into_slices(
+            &self.haug[..m * (d_in + 1)],
+            w.data(),
+            &mut z[..m * d_out],
+            m,
+            d_in + 1,
+            d_out,
+        );
+        crate::nn::count_flops(2 * m as u64 * (d_in + 1) as u64 * d_out as u64);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &mut self,
+        w: Option<&Tensor>,
+        delta: &[f32],
+        dx: Option<&mut [f32]>,
+        dphi_prev: Option<&[f32]>,
+        s: Option<&mut [f32]>,
+        coef: Option<&[f32]>,
+        grad: Option<&mut Tensor>,
+        m: usize,
+    ) {
+        let w = w.expect("dense layer is weighted");
+        let (d_in, d_out) = (self.in_dim, self.out_dim);
+        debug_assert_eq!(delta.len(), m * d_out);
+        match (coef, grad) {
+            (Some(coef), Some(grad)) => {
+                ops::matmul_tn_coef_acc_slices(
+                    &self.haug[..m * (d_in + 1)],
+                    delta,
+                    Some(coef),
+                    grad.data_mut(),
+                    m,
+                    d_in + 1,
+                    d_out,
+                );
+                crate::nn::count_flops(2 * m as u64 * (d_in + 1) as u64 * d_out as u64);
+            }
+            (None, None) => {
+                debug_assert!(
+                    !self.retained.is_empty(),
+                    "ensure_retention before a §6 backward"
+                );
+                self.retained[..m * d_out].copy_from_slice(delta);
+            }
+            _ => panic!("dense backward: coef and grad must be both Some or both None"),
+        }
+        match dx {
+            Some(dx) => {
+                backprop_layer(
+                    delta,
+                    d_out,
+                    w.data(),
+                    dphi_prev,
+                    d_in,
+                    &mut dx[..m * d_in],
+                    &mut self.z_sq[..m],
+                    m,
+                );
+                crate::nn::count_flops(2 * m as u64 * (d_in + 1) as u64 * d_out as u64);
+            }
+            None => row_sq_into(delta, m, d_out, &mut self.z_sq[..m]),
+        }
+        if let Some(s) = s {
+            for (sv, (&z, &h)) in s[..m]
+                .iter_mut()
+                .zip(self.z_sq[..m].iter().zip(&self.h_sq[..m]))
+            {
+                *sv = z * h;
+            }
+        }
+    }
+
+    fn accumulate(&mut self, coef: &[f32], grad: &mut Tensor, m: usize) {
+        let (d_in, d_out) = (self.in_dim, self.out_dim);
+        ops::matmul_tn_coef_acc_slices(
+            &self.haug[..m * (d_in + 1)],
+            &self.retained[..m * d_out],
+            Some(coef),
+            grad.data_mut(),
+            m,
+            d_in + 1,
+            d_out,
+        );
+        crate::nn::count_flops(2 * m as u64 * (d_in + 1) as u64 * d_out as u64);
+    }
+
+    fn ensure_retention(&mut self) {
+        if self.retained.is_empty() {
+            self.retained = vec![0.0; self.m_max * self.out_dim];
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * (self.haug.len() + self.h_sq.len() + self.z_sq.len() + self.retained.len())
+    }
+}
+
+/// Copy `src` rows into the augmented buffer (bias column = 1) while
+/// accumulating `||Haug_j||²` — the fused §4 forward-side norm.
+pub(crate) fn augment_rows(src: &[f32], m: usize, d: usize, out: &mut [f32], h_sq: &mut [f32]) {
+    debug_assert_eq!(src.len(), m * d);
+    debug_assert_eq!(out.len(), m * (d + 1));
+    debug_assert_eq!(h_sq.len(), m);
+    for j in 0..m {
+        let s = &src[j * d..(j + 1) * d];
+        let o = &mut out[j * (d + 1)..(j + 1) * (d + 1)];
+        let mut acc = 0f64;
+        for (ov, &sv) in o[..d].iter_mut().zip(s) {
+            *ov = sv;
+            acc += (sv as f64) * (sv as f64);
+        }
+        o[d] = 1.0;
+        h_sq[j] = (acc + 1.0) as f32; // +1: the bias column of Haug
+    }
+}
+
+/// Row-wise `||row_j||²` with the oracle's f64 accumulation.
+pub(crate) fn row_sq_into(src: &[f32], m: usize, d: usize, out: &mut [f32]) {
+    debug_assert_eq!(src.len(), m * d);
+    debug_assert_eq!(out.len(), m);
+    for j in 0..m {
+        let mut acc = 0f64;
+        for &v in &src[j * d..(j + 1) * d] {
+            acc += (v as f64) * (v as f64);
+        }
+        out[j] = acc as f32;
+    }
+}
+
+/// One example-row band of the fused dense backward:
+/// `dx[j, p] = (Σ_q delta[j, q]·W[p, q]) · dphi[j, p]` (the bias row
+/// `p = d_in` of W is skipped — that is `drop_last_col`; `dphi` is the
+/// PREVIOUS layer's stored `phi'`, `None` ≡ all-ones), with
+/// `||delta_j||²` accumulated in the same row visit.
+#[allow(clippy::too_many_arguments)]
+fn backprop_band(
+    delta: &[f32],
+    d_out: usize,
+    w: &[f32],
+    dphi: Option<&[f32]>,
+    d_in: usize,
+    out: &mut [f32],
+    z_sq: &mut [f32],
+    j0: usize,
+    j1: usize,
+) {
+    for j in j0..j1 {
+        let zrow = &delta[j * d_out..(j + 1) * d_out];
+        let mut acc = 0f64;
+        for &v in zrow {
+            acc += (v as f64) * (v as f64);
+        }
+        z_sq[j - j0] = acc as f32;
+        let drow = dphi.map(|d| &d[j * d_in..(j + 1) * d_in]);
+        let orow = &mut out[(j - j0) * d_in..(j - j0 + 1) * d_in];
+        for p in 0..d_in {
+            let wrow = &w[p * d_out..(p + 1) * d_out];
+            let mut dot = 0f32;
+            for (&zv, &wv) in zrow.iter().zip(wrow) {
+                dot += zv * wv;
+            }
+            orow[p] = match drow {
+                Some(d) => dot * d[p],
+                None => dot,
+            };
+        }
+    }
+}
+
+/// Row-band driver for [`backprop_band`], dispatched onto the persistent
+/// worker pool (jobs borrow the operands directly — no copies, no thread
+/// spawns).
+#[allow(clippy::too_many_arguments)]
+fn backprop_layer(
+    delta: &[f32],
+    d_out: usize,
+    w: &[f32],
+    dphi: Option<&[f32]>,
+    d_in: usize,
+    out: &mut [f32],
+    z_sq: &mut [f32],
+    m: usize,
+) {
+    debug_assert_eq!(delta.len(), m * d_out);
+    debug_assert_eq!(w.len(), (d_in + 1) * d_out);
+    debug_assert_eq!(out.len(), m * d_in);
+    debug_assert_eq!(z_sq.len(), m);
+    if let Some(d) = dphi {
+        debug_assert_eq!(d.len(), m * d_in);
+    }
+    if m * d_in * d_out <= BACKPROP_PAR_THRESHOLD || m == 1 {
+        backprop_band(delta, d_out, w, dphi, d_in, out, z_sq, 0, m);
+        return;
+    }
+    let bands = threadpool::bands().min(m);
+    let rows_per = m.div_ceil(bands);
+    let jobs: Vec<threadpool::ScopedJob> = out
+        .chunks_mut(rows_per * d_in)
+        .zip(z_sq.chunks_mut(rows_per))
+        .enumerate()
+        .map(|(bi, (ochunk, sqchunk))| {
+            let j0 = bi * rows_per;
+            Box::new(move || {
+                let j1 = j0 + sqchunk.len();
+                backprop_band(delta, d_out, w, dphi, d_in, ochunk, sqchunk, j0, j1);
+            }) as threadpool::ScopedJob
+        })
+        .collect();
+    threadpool::scope(jobs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::Activation;
+    use crate::tensor::Rng;
+    use crate::util::prop;
+
+    fn dense(in_dim: usize, out_dim: usize, m_max: usize) -> (DenseLayer, Tensor) {
+        let spec = LayerSpec::Dense {
+            in_dim,
+            out_dim,
+            act: Activation::Relu,
+        };
+        let layer = DenseLayer::new(spec, m_max);
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(vec![in_dim + 1, out_dim], &mut rng);
+        (layer, w)
+    }
+
+    #[test]
+    fn forward_matches_augment_matmul() {
+        let (mut layer, w) = dense(4, 3, 8);
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(vec![5, 4], &mut rng);
+        let mut z = vec![0f32; 5 * 3];
+        layer.forward(Some(&w), x.data(), &mut z, 5);
+        let want = ops::matmul(&ops::augment(&x), &w);
+        assert_eq!(&z, want.data(), "forward must equal augment+matmul bitwise");
+        // h_sq carries the +1 bias term
+        let h_sq_want = ops::row_sq_norms(&ops::augment(&x));
+        prop::assert_all_close(&layer.h_sq[..5], &h_sq_want, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn backward_emits_rank1_norms() {
+        let (mut layer, w) = dense(4, 3, 6);
+        let mut rng = Rng::new(7);
+        let x = Tensor::randn(vec![6, 4], &mut rng);
+        let delta = Tensor::randn(vec![6, 3], &mut rng);
+        let mut z = vec![0f32; 6 * 3];
+        layer.forward(Some(&w), x.data(), &mut z, 6);
+        let coef = vec![1.0f32; 6];
+        let mut grad = Tensor::zeros(vec![5, 3]);
+        let mut s = vec![0f32; 6];
+        let mut dx = vec![0f32; 6 * 4];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            Some(&mut dx),
+            None,
+            Some(&mut s),
+            Some(&coef),
+            Some(&mut grad),
+            6,
+        );
+        // s_j == ||delta_j||² · ||haug_j||² (the §4 product)
+        let zb = ops::row_sq_norms(&delta);
+        let hq = ops::row_sq_norms(&ops::augment(&x));
+        for j in 0..6 {
+            prop::assert_close(s[j] as f64, (zb[j] * hq[j]) as f64, 1e-4).unwrap();
+        }
+        // grad == Haug^T delta
+        let want = ops::matmul_tn(&ops::augment(&x), &delta);
+        prop::assert_all_close(grad.data(), want.data(), 1e-4).unwrap();
+        // dx == delta W^T (bias row dropped)
+        let want_dx = ops::drop_last_col(&ops::matmul_nt(&delta, &w));
+        prop::assert_all_close(&dx, want_dx.data(), 1e-4).unwrap();
+    }
+
+    #[test]
+    fn retention_replays_accumulation() {
+        let (mut layer, w) = dense(3, 2, 4);
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(vec![4, 3], &mut rng);
+        let delta = Tensor::randn(vec![4, 2], &mut rng);
+        let mut z = vec![0f32; 4 * 2];
+        layer.forward(Some(&w), x.data(), &mut z, 4);
+        layer.ensure_retention();
+        let mut s = vec![0f32; 4];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            None,
+            None,
+            Some(&mut s),
+            None,
+            None,
+            4,
+        );
+        let coef = [0.5f32, 2.0, 0.0, 1.0];
+        let mut grad = Tensor::zeros(vec![4, 2]);
+        layer.accumulate(&coef, &mut grad, 4);
+        let want = ops::matmul_tn(&ops::augment(&x), &ops::scale_rows(&delta, &coef));
+        prop::assert_all_close(grad.data(), want.data(), 1e-4).unwrap();
+    }
+
+    #[test]
+    fn banded_backprop_bitwise_matches_serial() {
+        // cross the parallel threshold with a ragged band
+        let (d_in, d_out, m) = (70, 40, 130);
+        let mut rng = Rng::new(11);
+        let delta = Tensor::randn(vec![m, d_out], &mut rng);
+        let w = Tensor::randn(vec![d_in + 1, d_out], &mut rng);
+        let dphi = Tensor::randn(vec![m, d_in], &mut rng);
+        assert!(m * d_in * d_out > BACKPROP_PAR_THRESHOLD);
+        let mut out_p = vec![0f32; m * d_in];
+        let mut sq_p = vec![0f32; m];
+        backprop_layer(
+            delta.data(),
+            d_out,
+            w.data(),
+            Some(dphi.data()),
+            d_in,
+            &mut out_p,
+            &mut sq_p,
+            m,
+        );
+        let mut out_s = vec![0f32; m * d_in];
+        let mut sq_s = vec![0f32; m];
+        backprop_band(
+            delta.data(),
+            d_out,
+            w.data(),
+            Some(dphi.data()),
+            d_in,
+            &mut out_s,
+            &mut sq_s,
+            0,
+            m,
+        );
+        assert_eq!(out_p, out_s, "pooled band dispatch diverged from serial");
+        assert_eq!(sq_p, sq_s);
+    }
+}

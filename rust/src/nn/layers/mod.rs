@@ -1,0 +1,294 @@
+//! Heterogeneous layer stacks with streamed per-example gradient norms.
+//!
+//! This subsystem generalizes the dense-only model path (`ModelSpec` /
+//! `Mlp`) to a list of [`LayerSpec`]s — dense, convolutional, and the
+//! pooling/flatten glue between them — behind one [`Layer`] trait that
+//! [`crate::engine::FusedEngine`] drives with zero per-step allocations.
+//!
+//! ## How the paper's trick extends to convolutions (Rochette et al. 2019)
+//!
+//! For a dense layer `z = h_aug W`, example j's weight gradient is the
+//! rank-1 outer product `G_j = h_j^T zbar_j`, so its squared Frobenius
+//! norm factors (paper §4):
+//!
+//! ```text
+//! s_j = ||G_j||_F² = ||zbar_j||² · ||h_aug,j||²
+//! ```
+//!
+//! A convolution is the same matmul applied at every spatial position:
+//! with `U_j ∈ R^{L×(K+1)}` the unfolded (im2col) input patches of
+//! example j (bias column of ones folded, exactly like `Haug`) and
+//! `V_j ∈ R^{L×c_out}` the backward deltas at the L output positions,
+//!
+//! ```text
+//! G_j = U_j^T V_j           (rank ≤ L, not rank 1)
+//! s_j = ||U_j^T V_j||_F²
+//! ```
+//!
+//! The rank-1 factorization no longer applies (dense is the `L = 1`
+//! special case), but the *efficiency* claim survives, which is
+//! Rochette et al.'s observation: both quantities the product needs —
+//! `U_j` (materialized by the forward's im2col) and `V_j` (produced by
+//! the batched backward) — already exist, so per-example norms cost one
+//! gradient-matmul worth of flops `O(m·L·K·c_out)` instead of m separate
+//! backward passes, and in Mean mode that matmul IS the gradient
+//! accumulation `Σ_j coef_j·G_j` the optimizer needs anyway: each `G_j`
+//! lives only in a band-local scratch while its squared norm is summed
+//! and its contribution accumulated — per-example weight gradients are
+//! never materialized (`O(K·c_out)` live scratch per worker, not
+//! `O(m·K·c_out)`).
+//!
+//! In the §6 coefficient modes (clip / normalize) the coefficients
+//! depend on the full norms, so conv layers retain `V_j` (the analogue
+//! of the dense path's retained `Zbar`) and replay the accumulation as
+//! one coefficient-weighted matmul once the coefficients are known. For
+//! dense layers that rescale *replaces* the plain gradient matmul (§6's
+//! "one extra matmul" — net zero); for conv the norm pass itself already
+//! cost a gradient matmul, so §6 conv steps pay one extra
+//! `O(m·L·K·c_out)` term — the price of losing the rank-1 structure.
+//!
+//! ## Traversal contract
+//!
+//! [`Layer`] mirrors the `backward_streamed_tap` contract of the dense
+//! engine: the driver walks layers top-down, hands each layer its
+//! backward delta, and the layer emits that layer's per-example squared
+//! norms `s_j^{(l)}` *during* the traversal (weighted layers only —
+//! pool/flatten glue has no parameters and no stream). A
+//! [`crate::telemetry::LayerTap`] attached to the engine therefore sees
+//! conv layers exactly like dense ones, at zero extra traversals.
+
+pub mod conv2d;
+pub mod dense;
+pub mod pool;
+pub mod stack;
+
+pub use conv2d::ConvLayer;
+pub use dense::DenseLayer;
+pub use pool::{FlattenLayer, MaxPoolLayer};
+pub use stack::StackSpec;
+
+use crate::tensor::conv::ConvGeom;
+use crate::tensor::ops::Activation;
+use crate::tensor::Tensor;
+
+/// Static description of one layer in a stack. All feature maps are
+/// flat row-major `[m, len]` buffers; spatial layers interpret their
+/// slice as channel-last `[h, w, c]` (see `tensor::conv`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerSpec {
+    /// `z = h_aug W`, W `[(in_dim+1), out_dim]` with the bias folded as
+    /// the last row — the layer extracted from `Mlp`.
+    Dense {
+        in_dim: usize,
+        out_dim: usize,
+        act: Activation,
+    },
+    /// Stride-1 valid k×k convolution, W `[(k·k·in_ch + 1), out_ch]`
+    /// with the bias folded as the last row.
+    Conv2d {
+        geom: ConvGeom,
+        out_ch: usize,
+        act: Activation,
+    },
+    /// Non-overlapping k×k max pooling (stride k); requires `k` to
+    /// divide both spatial dims.
+    MaxPool2d {
+        in_h: usize,
+        in_w: usize,
+        ch: usize,
+        k: usize,
+    },
+    /// Shape-only marker between spatial and dense stages (the flat
+    /// buffer layout makes it a copy-through).
+    Flatten { len: usize },
+}
+
+impl LayerSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerSpec::Dense { .. } => "dense",
+            LayerSpec::Conv2d { .. } => "conv2d",
+            LayerSpec::MaxPool2d { .. } => "maxpool2d",
+            LayerSpec::Flatten { .. } => "flatten",
+        }
+    }
+
+    /// Flat per-example input length.
+    pub fn in_len(&self) -> usize {
+        match self {
+            LayerSpec::Dense { in_dim, .. } => *in_dim,
+            LayerSpec::Conv2d { geom, .. } => geom.in_len(),
+            LayerSpec::MaxPool2d { in_h, in_w, ch, .. } => in_h * in_w * ch,
+            LayerSpec::Flatten { len } => *len,
+        }
+    }
+
+    /// Flat per-example output length.
+    pub fn out_len(&self) -> usize {
+        match self {
+            LayerSpec::Dense { out_dim, .. } => *out_dim,
+            LayerSpec::Conv2d { geom, out_ch, .. } => geom.positions() * out_ch,
+            LayerSpec::MaxPool2d { in_h, in_w, ch, k } => (in_h / k) * (in_w / k) * ch,
+            LayerSpec::Flatten { len } => *len,
+        }
+    }
+
+    /// `(h, w, c)` of the output when it is spatial.
+    pub fn out_hwc(&self) -> Option<(usize, usize, usize)> {
+        match self {
+            LayerSpec::Conv2d { geom, out_ch, .. } => {
+                Some((geom.out_h(), geom.out_w(), *out_ch))
+            }
+            LayerSpec::MaxPool2d { in_h, in_w, ch, k } => {
+                Some((in_h / k, in_w / k, *ch))
+            }
+            _ => None,
+        }
+    }
+
+    /// Weight shape `(rows, cols)` with the bias row folded; `None` for
+    /// the parameterless glue layers.
+    pub fn weight_shape(&self) -> Option<(usize, usize)> {
+        match self {
+            LayerSpec::Dense { in_dim, out_dim, .. } => Some((in_dim + 1, *out_dim)),
+            LayerSpec::Conv2d { geom, out_ch, .. } => {
+                Some((geom.patch_len() + 1, *out_ch))
+            }
+            _ => None,
+        }
+    }
+
+    /// The activation applied to this layer's pre-activation output
+    /// (`Identity` for the glue layers).
+    pub fn activation(&self) -> Activation {
+        match self {
+            LayerSpec::Dense { act, .. } | LayerSpec::Conv2d { act, .. } => *act,
+            _ => Activation::Identity,
+        }
+    }
+
+    /// Analytic matmul flops of this layer's forward at batch m.
+    pub fn flops_forward(&self, m: usize) -> u64 {
+        match self.weight_shape() {
+            Some((a, b)) => {
+                let rows = match self {
+                    LayerSpec::Conv2d { geom, .. } => m * geom.positions(),
+                    _ => m,
+                };
+                2 * rows as u64 * a as u64 * b as u64
+            }
+            None => 0,
+        }
+    }
+
+    /// Build this spec's runtime kernel with buffers for `m_max` rows.
+    pub fn build(&self, m_max: usize) -> Box<dyn Layer> {
+        match self {
+            LayerSpec::Dense { .. } => Box::new(DenseLayer::new(self.clone(), m_max)),
+            LayerSpec::Conv2d { .. } => Box::new(ConvLayer::new(self.clone(), m_max)),
+            LayerSpec::MaxPool2d { .. } => Box::new(MaxPoolLayer::new(self.clone(), m_max)),
+            LayerSpec::Flatten { .. } => Box::new(FlattenLayer::new(self.clone())),
+        }
+    }
+}
+
+/// One layer's runtime kernels + preallocated per-step state. All
+/// methods operate on the leading `m ≤ m_max` rows of flat `[m, len]`
+/// slices and perform no allocations after construction (the §6
+/// retention buffer is allocated once, lazily, via
+/// [`Layer::ensure_retention`]).
+pub trait Layer: Send {
+    fn spec(&self) -> &LayerSpec;
+
+    /// Compute the pre-activation output `z` `[m, out_len]` from `x`
+    /// `[m, in_len]`, retaining whatever the backward pass needs
+    /// (augmented/unfolded inputs). `w` is `Some` exactly for weighted
+    /// layers. The driver applies the activation to `z` afterwards.
+    fn forward(&mut self, w: Option<&Tensor>, x: &[f32], z: &mut [f32], m: usize);
+
+    /// Streaming backward for one layer, given `delta = dL/dz`
+    /// `[m, out_len]`:
+    ///
+    /// * `dx`: when `Some`, write `dL/d(input activation)` — already
+    ///   multiplied by `dphi_prev` (the PREVIOUS layer's stored
+    ///   `phi'(z)`) when that is `Some`, so the result is the previous
+    ///   layer's `dL/dz`.
+    /// * `s`: when `Some` (weighted layers), emit the per-example
+    ///   squared gradient norms `s_j = ||G_j||_F²`.
+    /// * `coef`/`grad` both `Some`: fused accumulation
+    ///   `grad += Σ_j coef_j G_j` (Mean mode — coefficients known
+    ///   upfront). Both `None` on a weighted layer: retain what
+    ///   [`Layer::accumulate`] needs (§6 modes, coefficients derived
+    ///   from the norms after the traversal).
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &mut self,
+        w: Option<&Tensor>,
+        delta: &[f32],
+        dx: Option<&mut [f32]>,
+        dphi_prev: Option<&[f32]>,
+        s: Option<&mut [f32]>,
+        coef: Option<&[f32]>,
+        grad: Option<&mut Tensor>,
+        m: usize,
+    );
+
+    /// §6 deferred accumulation `grad += Σ_j coef_j G_j` from the state
+    /// retained by a coefficient-less [`Layer::backward`]. No-op for
+    /// parameterless layers.
+    fn accumulate(&mut self, coef: &[f32], grad: &mut Tensor, m: usize) {
+        let _ = (coef, grad, m);
+    }
+
+    /// Allocate the §6 retention buffer (first clip/normalize step
+    /// only). No-op for parameterless layers.
+    fn ensure_retention(&mut self) {}
+
+    /// Bytes of live f32/index state held (the peak-memory metric).
+    fn state_bytes(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_shape_arithmetic() {
+        let conv = LayerSpec::Conv2d {
+            geom: ConvGeom {
+                in_h: 12,
+                in_w: 12,
+                in_ch: 1,
+                k: 3,
+            },
+            out_ch: 8,
+            act: Activation::Relu,
+        };
+        assert_eq!(conv.in_len(), 144);
+        assert_eq!(conv.out_len(), 100 * 8);
+        assert_eq!(conv.weight_shape(), Some((10, 8)));
+        assert_eq!(conv.out_hwc(), Some((10, 10, 8)));
+        assert_eq!(conv.flops_forward(2), 2 * 2 * 100 * 10 * 8);
+
+        let pool = LayerSpec::MaxPool2d {
+            in_h: 10,
+            in_w: 10,
+            ch: 8,
+            k: 2,
+        };
+        assert_eq!(pool.in_len(), 800);
+        assert_eq!(pool.out_len(), 200);
+        assert_eq!(pool.weight_shape(), None);
+        assert_eq!(pool.activation(), Activation::Identity);
+        assert_eq!(pool.flops_forward(64), 0);
+
+        let dense = LayerSpec::Dense {
+            in_dim: 200,
+            out_dim: 10,
+            act: Activation::Identity,
+        };
+        assert_eq!(dense.weight_shape(), Some((201, 10)));
+        let flat = LayerSpec::Flatten { len: 200 };
+        assert_eq!(flat.in_len(), flat.out_len());
+    }
+}

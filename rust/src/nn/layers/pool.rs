@@ -1,0 +1,255 @@
+//! Parameterless glue layers: non-overlapping max pooling and the
+//! flatten marker. Neither has weights, so neither emits a per-example
+//! norm stream — a [`crate::telemetry::LayerTap`] on a conv stack sees
+//! only the weighted layers, exactly like the dense stack.
+
+use crate::tensor::Tensor;
+
+use super::{Layer, LayerSpec};
+
+/// Non-overlapping k×k max pooling on NHWC maps (stride k). The forward
+/// records each output's argmax index so the backward is a pure scatter;
+/// ties resolve to the first (row-major) maximum, deterministically.
+pub struct MaxPoolLayer {
+    spec: LayerSpec,
+    in_h: usize,
+    in_w: usize,
+    ch: usize,
+    k: usize,
+    out_len: usize,
+    /// Winner input index (flat, per example) for every output element.
+    argmax: Vec<u32>,
+}
+
+impl MaxPoolLayer {
+    pub fn new(spec: LayerSpec, m_max: usize) -> MaxPoolLayer {
+        let LayerSpec::MaxPool2d { in_h, in_w, ch, k } = spec else {
+            panic!("MaxPoolLayer::new needs a MaxPool2d spec, got {}", spec.name());
+        };
+        assert!(k > 0 && in_h % k == 0 && in_w % k == 0,
+            "maxpool2d k={k} must divide the {in_h}x{in_w} input");
+        let out_len = (in_h / k) * (in_w / k) * ch;
+        MaxPoolLayer {
+            spec,
+            in_h,
+            in_w,
+            ch,
+            k,
+            out_len,
+            argmax: vec![0; m_max * out_len],
+        }
+    }
+}
+
+impl Layer for MaxPoolLayer {
+    fn spec(&self) -> &LayerSpec {
+        &self.spec
+    }
+
+    fn forward(&mut self, w: Option<&Tensor>, x: &[f32], z: &mut [f32], m: usize) {
+        debug_assert!(w.is_none());
+        let (k, ch) = (self.k, self.ch);
+        let (out_h, out_w) = (self.in_h / k, self.in_w / k);
+        let in_len = self.in_h * self.in_w * ch;
+        let row_stride = self.in_w * ch;
+        for j in 0..m {
+            let xj = &x[j * in_len..(j + 1) * in_len];
+            let zj = &mut z[j * self.out_len..(j + 1) * self.out_len];
+            let aj = &mut self.argmax[j * self.out_len..(j + 1) * self.out_len];
+            for oy in 0..out_h {
+                for ox in 0..out_w {
+                    for c in 0..ch {
+                        let mut best_idx = (oy * k) * row_stride + (ox * k) * ch + c;
+                        let mut best = xj[best_idx];
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let idx = (oy * k + ky) * row_stride + (ox * k + kx) * ch + c;
+                                if xj[idx] > best {
+                                    best = xj[idx];
+                                    best_idx = idx;
+                                }
+                            }
+                        }
+                        let o = (oy * out_w + ox) * ch + c;
+                        zj[o] = best;
+                        aj[o] = best_idx as u32;
+                    }
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &mut self,
+        _w: Option<&Tensor>,
+        delta: &[f32],
+        dx: Option<&mut [f32]>,
+        dphi_prev: Option<&[f32]>,
+        s: Option<&mut [f32]>,
+        _coef: Option<&[f32]>,
+        _grad: Option<&mut Tensor>,
+        m: usize,
+    ) {
+        debug_assert!(s.is_none(), "parameterless layer has no norm stream");
+        let Some(dx) = dx else { return };
+        let in_len = self.in_h * self.in_w * self.ch;
+        for j in 0..m {
+            let dj = &delta[j * self.out_len..(j + 1) * self.out_len];
+            let xj = &mut dx[j * in_len..(j + 1) * in_len];
+            for v in xj.iter_mut() {
+                *v = 0.0;
+            }
+            let aj = &self.argmax[j * self.out_len..(j + 1) * self.out_len];
+            for (o, &d) in dj.iter().enumerate() {
+                xj[aj[o] as usize] += d;
+            }
+            if let Some(dphi) = dphi_prev {
+                for (v, &p) in xj.iter_mut().zip(&dphi[j * in_len..(j + 1) * in_len]) {
+                    *v *= p;
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * self.argmax.len()
+    }
+}
+
+/// Flatten: a shape marker between the spatial and dense stages. The
+/// flat buffer layout makes both directions a copy.
+pub struct FlattenLayer {
+    spec: LayerSpec,
+    len: usize,
+}
+
+impl FlattenLayer {
+    pub fn new(spec: LayerSpec) -> FlattenLayer {
+        let LayerSpec::Flatten { len } = spec else {
+            panic!("FlattenLayer::new needs a Flatten spec, got {}", spec.name());
+        };
+        FlattenLayer { spec, len }
+    }
+}
+
+impl Layer for FlattenLayer {
+    fn spec(&self) -> &LayerSpec {
+        &self.spec
+    }
+
+    fn forward(&mut self, w: Option<&Tensor>, x: &[f32], z: &mut [f32], m: usize) {
+        debug_assert!(w.is_none());
+        z[..m * self.len].copy_from_slice(&x[..m * self.len]);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &mut self,
+        _w: Option<&Tensor>,
+        delta: &[f32],
+        dx: Option<&mut [f32]>,
+        dphi_prev: Option<&[f32]>,
+        s: Option<&mut [f32]>,
+        _coef: Option<&[f32]>,
+        _grad: Option<&mut Tensor>,
+        m: usize,
+    ) {
+        debug_assert!(s.is_none(), "parameterless layer has no norm stream");
+        let Some(dx) = dx else { return };
+        dx[..m * self.len].copy_from_slice(&delta[..m * self.len]);
+        if let Some(dphi) = dphi_prev {
+            for (v, &p) in dx[..m * self.len].iter_mut().zip(&dphi[..m * self.len]) {
+                *v *= p;
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn pool_spec() -> LayerSpec {
+        LayerSpec::MaxPool2d {
+            in_h: 4,
+            in_w: 4,
+            ch: 2,
+            k: 2,
+        }
+    }
+
+    #[test]
+    fn pool_forward_picks_window_max() {
+        let mut layer = MaxPoolLayer::new(pool_spec(), 1);
+        // channel-last 4x4x2; channel 0 = index, channel 1 = -index
+        let x: Vec<f32> = (0..16)
+            .flat_map(|i| [i as f32, -(i as f32)])
+            .collect();
+        let mut z = vec![0f32; 8];
+        layer.forward(None, &x, &mut z, 1);
+        // channel 0: max of each 2x2 block of values laid row-major 0..15
+        assert_eq!(z[0], 5.0);
+        assert_eq!(z[2], 7.0);
+        assert_eq!(z[4], 13.0);
+        assert_eq!(z[6], 15.0);
+        // channel 1 is the negation -> maxima at the block's smallest index
+        assert_eq!(z[1], -0.0);
+        assert_eq!(z[3], -2.0);
+    }
+
+    #[test]
+    fn pool_backward_routes_to_argmax() {
+        let mut layer = MaxPoolLayer::new(pool_spec(), 1);
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(vec![1, 32], &mut rng);
+        let mut z = vec![0f32; 8];
+        layer.forward(None, x.data(), &mut z, 1);
+        let delta: Vec<f32> = (1..=8).map(|v| v as f32).collect();
+        let mut dx = vec![0f32; 32];
+        layer.backward(None, &delta, Some(&mut dx), None, None, None, None, 1);
+        // every delta lands on exactly one input, totals preserved
+        let nz: Vec<f32> = dx.iter().copied().filter(|&v| v != 0.0).collect();
+        assert_eq!(nz.len(), 8);
+        assert_eq!(dx.iter().sum::<f32>(), delta.iter().sum::<f32>());
+        // the winning input holds its output's delta
+        for (o, &d) in delta.iter().enumerate() {
+            assert_eq!(dx[layer.argmax[o] as usize], d);
+        }
+    }
+
+    #[test]
+    fn flatten_roundtrip_applies_dphi() {
+        let spec = LayerSpec::Flatten { len: 6 };
+        let mut layer = FlattenLayer::new(spec);
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let mut z = vec![0f32; 12];
+        layer.forward(None, &x, &mut z, 2);
+        assert_eq!(z, x);
+        let dphi: Vec<f32> = (0..12).map(|v| 0.5 * v as f32).collect();
+        let mut dx = vec![0f32; 12];
+        layer.backward(None, &x, Some(&mut dx), Some(&dphi), None, None, None, 2);
+        for i in 0..12 {
+            assert_eq!(dx[i], x[i] * dphi[i]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn pool_rejects_nondividing_k() {
+        MaxPoolLayer::new(
+            LayerSpec::MaxPool2d {
+                in_h: 5,
+                in_w: 4,
+                ch: 1,
+                k: 2,
+            },
+            1,
+        );
+    }
+}

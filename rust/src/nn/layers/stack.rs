@@ -1,0 +1,440 @@
+//! [`StackSpec`] — the heterogeneous generalization of `ModelSpec`: an
+//! ordered list of [`LayerSpec`]s plus the loss and the maximum batch
+//! size. Every dense config is expressible ([`StackSpec::from_dense`]),
+//! so the old `[model] dims = [...]` path parses unchanged; conv stacks
+//! come from the `model.stack` DSL ([`StackSpec::parse_layers`]).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::nn::{Loss, ModelSpec};
+use crate::tensor::conv::ConvGeom;
+use crate::tensor::ops::Activation;
+use crate::tensor::{Rng, Tensor};
+
+use super::LayerSpec;
+
+/// Static description of a heterogeneous model: layers + loss + the
+/// maximum minibatch size the engine's workspace is sized for (any
+/// `m ≤ m_max` runs in the same engine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StackSpec {
+    pub layers: Vec<LayerSpec>,
+    pub loss: Loss,
+    /// Maximum batch size (workspace capacity).
+    pub m: usize,
+}
+
+impl StackSpec {
+    pub fn new(layers: Vec<LayerSpec>, loss: Loss, m: usize) -> Result<StackSpec> {
+        if layers.is_empty() {
+            bail!("a stack needs at least one layer");
+        }
+        if m < 1 {
+            bail!("batch size must be >=1");
+        }
+        for (i, l) in layers.iter().enumerate() {
+            // geometry bounds first — out_len() on a too-large kernel
+            // would underflow
+            if let LayerSpec::Conv2d { geom, .. } = l {
+                if geom.k == 0 || geom.k > geom.in_h || geom.k > geom.in_w {
+                    bail!(
+                        "layer {i}: conv kernel {}x{} does not fit a {}x{} input",
+                        geom.k,
+                        geom.k,
+                        geom.in_h,
+                        geom.in_w
+                    );
+                }
+            }
+            if let LayerSpec::MaxPool2d { in_h, in_w, k, .. } = l {
+                if *k == 0 || in_h % k != 0 || in_w % k != 0 {
+                    bail!("layer {i}: pool k={k} must divide the {in_h}x{in_w} input");
+                }
+            }
+            if l.in_len() == 0 || l.out_len() == 0 {
+                bail!("layer {i} ({}) has a zero-width side", l.name());
+            }
+        }
+        for (i, pair) in layers.windows(2).enumerate() {
+            if pair[0].out_len() != pair[1].in_len() {
+                bail!(
+                    "layer {i} ({}) outputs {} features but layer {} ({}) expects {}",
+                    pair[0].name(),
+                    pair[0].out_len(),
+                    i + 1,
+                    pair[1].name(),
+                    pair[1].in_len()
+                );
+            }
+        }
+        if layers.last().unwrap().weight_shape().is_none() {
+            bail!("the last layer must be weighted (it produces the logits)");
+        }
+        if layers.iter().all(|l| l.weight_shape().is_none()) {
+            bail!("a stack needs at least one weighted layer");
+        }
+        Ok(StackSpec { layers, loss, m })
+    }
+
+    /// The dense constructor: every existing `ModelSpec` maps onto a
+    /// stack of dense layers (hidden layers carry the model activation,
+    /// the output layer is linear) with identical weight shapes.
+    pub fn from_dense(spec: &ModelSpec) -> StackSpec {
+        let n = spec.n_layers();
+        let layers = (0..n)
+            .map(|i| LayerSpec::Dense {
+                in_dim: spec.dims[i],
+                out_dim: spec.dims[i + 1],
+                act: if i < n - 1 {
+                    spec.activation
+                } else {
+                    Activation::Identity
+                },
+            })
+            .collect();
+        StackSpec {
+            layers,
+            loss: spec.loss,
+            m: spec.m,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Number of weighted layers (the telemetry/oracle layer count).
+    pub fn n_params(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| l.weight_shape().is_some())
+            .count()
+    }
+
+    /// Stack indices of the weighted layers, in order.
+    pub fn param_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| l.weight_shape().map(|_| i))
+            .collect()
+    }
+
+    pub fn weight_shapes(&self) -> Vec<(usize, usize)> {
+        self.layers
+            .iter()
+            .filter_map(LayerSpec::weight_shape)
+            .collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.weight_shapes().iter().map(|&(a, b)| a * b).sum()
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.layers[0].in_len()
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.layers.last().unwrap().out_len()
+    }
+
+    /// Widest flat buffer the engine's traversal ever stages (ping-pong
+    /// sizing): the max over layer OUTPUT widths. The stack input is
+    /// excluded — layer 0 reads it straight from the caller's batch and
+    /// the backward never materializes a layer-0 input gradient, so a
+    /// wide-input model does not inflate the workspace.
+    pub fn max_width(&self) -> usize {
+        self.layers
+            .iter()
+            .map(LayerSpec::out_len)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Is this a pure dense stack (i.e. expressible as a `ModelSpec`)?
+    pub fn is_dense(&self) -> bool {
+        self.layers
+            .iter()
+            .all(|l| matches!(l, LayerSpec::Dense { .. }))
+    }
+
+    /// He (relu/gelu) or Glorot init per weighted layer, bias row zero —
+    /// the per-layer generalization of `ModelSpec::init_params` (He is
+    /// chosen by the layer's own activation).
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<Tensor> {
+        self.layers
+            .iter()
+            .filter_map(|l| {
+                let (rows, cols) = l.weight_shape()?;
+                let fan_in = rows - 1;
+                let he = matches!(l.activation(), Activation::Relu | Activation::Gelu);
+                let std = if he {
+                    (2.0 / fan_in as f32).sqrt()
+                } else {
+                    (2.0 / (fan_in + cols) as f32).sqrt()
+                };
+                let mut w = Tensor::zeros(vec![rows, cols]);
+                for i in 0..fan_in {
+                    for j in 0..cols {
+                        w.set2(i, j, rng.next_normal() * std);
+                    }
+                }
+                Some(w) // last row (bias) stays zero
+            })
+            .collect()
+    }
+
+    /// Parse the `model.stack` DSL into layer specs. Comma-separated,
+    /// shapes inferred left to right:
+    ///
+    /// ```text
+    /// input 12x12x1, conv 8 k3 relu, pool 2, conv 16 k3 relu, flatten, dense 10
+    /// ```
+    ///
+    /// * `input HxWxC` (spatial) or `input N` (flat) — required first
+    /// * `conv C kK [act]` — stride-1 valid k×k conv, C output channels
+    /// * `pool K` — non-overlapping k×k max pool
+    /// * `flatten` — spatial → flat (required before `dense`)
+    /// * `dense N [act]` — activation defaults to `identity`
+    pub fn parse_layers(text: &str) -> Result<Vec<LayerSpec>> {
+        enum Cur {
+            Spatial(usize, usize, usize), // h, w, c
+            Flat(usize),
+        }
+        let mut items = text.split(',').map(str::trim).filter(|s| !s.is_empty());
+        let first = items
+            .next()
+            .ok_or_else(|| anyhow!("empty stack spec"))?;
+        let mut words = first.split_whitespace();
+        if words.next() != Some("input") {
+            bail!("stack spec must start with 'input HxWxC' or 'input N', got '{first}'");
+        }
+        let shape_word = words
+            .next()
+            .ok_or_else(|| anyhow!("'input' needs a shape, e.g. 'input 12x12x1'"))?;
+        let dims: Vec<usize> = shape_word
+            .split('x')
+            .map(|p| {
+                p.parse::<usize>()
+                    .map_err(|_| anyhow!("bad input dimension '{p}' in '{shape_word}'"))
+            })
+            .collect::<Result<_>>()?;
+        let mut cur = match dims.as_slice() {
+            [n] => Cur::Flat(*n),
+            [h, w, c] => Cur::Spatial(*h, *w, *c),
+            _ => bail!("input shape must be N or HxWxC, got '{shape_word}'"),
+        };
+        if let Some(extra) = words.next() {
+            bail!("unexpected token '{extra}' after the input shape");
+        }
+
+        let parse_act = |tok: Option<&str>, what: &str| -> Result<Activation> {
+            match tok {
+                None => Ok(Activation::Identity),
+                Some(a) => Activation::parse(a)
+                    .ok_or_else(|| anyhow!("unknown activation '{a}' on {what}")),
+            }
+        };
+        let mut layers = Vec::new();
+        for item in items {
+            let mut w = item.split_whitespace();
+            let kind = w.next().unwrap();
+            match kind {
+                "conv" => {
+                    let Cur::Spatial(h, wd, c) = cur else {
+                        bail!("'{item}': conv needs a spatial input (HxWxC)");
+                    };
+                    let out_ch: usize = w
+                        .next()
+                        .ok_or_else(|| anyhow!("'{item}': conv needs output channels"))?
+                        .parse()
+                        .map_err(|_| anyhow!("'{item}': bad channel count"))?;
+                    let ktok = w
+                        .next()
+                        .ok_or_else(|| anyhow!("'{item}': conv needs a kernel, e.g. k3"))?;
+                    let k: usize = ktok
+                        .strip_prefix('k')
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| anyhow!("'{item}': kernel must look like k3"))?;
+                    let act = parse_act(w.next(), item)?;
+                    let geom = ConvGeom {
+                        in_h: h,
+                        in_w: wd,
+                        in_ch: c,
+                        k,
+                    };
+                    if k == 0 || k > h || k > wd {
+                        bail!("'{item}': kernel {k} does not fit a {h}x{wd} input");
+                    }
+                    cur = Cur::Spatial(geom.out_h(), geom.out_w(), out_ch);
+                    layers.push(LayerSpec::Conv2d { geom, out_ch, act });
+                }
+                "pool" => {
+                    let Cur::Spatial(h, wd, c) = cur else {
+                        bail!("'{item}': pool needs a spatial input");
+                    };
+                    let k: usize = w
+                        .next()
+                        .ok_or_else(|| anyhow!("'{item}': pool needs a window, e.g. pool 2"))?
+                        .parse()
+                        .map_err(|_| anyhow!("'{item}': bad pool window"))?;
+                    if k == 0 || h % k != 0 || wd % k != 0 {
+                        bail!("'{item}': pool {k} must divide the {h}x{wd} input");
+                    }
+                    layers.push(LayerSpec::MaxPool2d {
+                        in_h: h,
+                        in_w: wd,
+                        ch: c,
+                        k,
+                    });
+                    cur = Cur::Spatial(h / k, wd / k, c);
+                }
+                "flatten" => {
+                    let Cur::Spatial(h, wd, c) = cur else {
+                        bail!("'{item}': input is already flat");
+                    };
+                    layers.push(LayerSpec::Flatten { len: h * wd * c });
+                    cur = Cur::Flat(h * wd * c);
+                }
+                "dense" => {
+                    let Cur::Flat(n) = cur else {
+                        bail!("'{item}': dense needs a flat input — insert 'flatten' first");
+                    };
+                    let out: usize = w
+                        .next()
+                        .ok_or_else(|| anyhow!("'{item}': dense needs an output width"))?
+                        .parse()
+                        .map_err(|_| anyhow!("'{item}': bad dense width"))?;
+                    let act = parse_act(w.next(), item)?;
+                    layers.push(LayerSpec::Dense {
+                        in_dim: n,
+                        out_dim: out,
+                        act,
+                    });
+                    cur = Cur::Flat(out);
+                }
+                other => bail!("unknown stack layer '{other}' in '{item}'"),
+            }
+            if let Some(extra) = w.next() {
+                bail!("unexpected token '{extra}' in '{item}'");
+            }
+        }
+        if layers.is_empty() {
+            bail!("stack spec has an input shape but no layers");
+        }
+        Ok(layers)
+    }
+
+    /// Parse the full DSL into a validated spec.
+    pub fn parse(text: &str, loss: Loss, m: usize) -> Result<StackSpec> {
+        StackSpec::new(Self::parse_layers(text)?, loss, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn digits_stack() -> &'static str {
+        "input 12x12x1, conv 8 k3 relu, pool 2, conv 16 k3 relu, flatten, dense 10"
+    }
+
+    #[test]
+    fn parses_the_digits_cnn() {
+        let spec = StackSpec::parse(digits_stack(), Loss::SoftmaxCe, 16).unwrap();
+        assert_eq!(spec.n_layers(), 5);
+        assert_eq!(spec.n_params(), 3);
+        assert_eq!(spec.param_layers(), vec![0, 2, 4]);
+        assert_eq!(spec.in_len(), 144);
+        assert_eq!(spec.out_len(), 10);
+        // conv1: 12x12x1 -> 10x10x8; pool: 5x5x8; conv2: 3x3x16; dense 144->10
+        assert_eq!(
+            spec.weight_shapes(),
+            vec![(10, 8), (73, 16), (145, 10)]
+        );
+        assert_eq!(spec.param_count(), 80 + 73 * 16 + 145 * 10);
+        assert!(!spec.is_dense());
+        assert!(spec.max_width() >= 800);
+    }
+
+    #[test]
+    fn dense_constructor_mirrors_model_spec() {
+        let ms = ModelSpec::new(
+            vec![16, 32, 10],
+            Activation::Relu,
+            Loss::SoftmaxCe,
+            8,
+        )
+        .unwrap();
+        let st = StackSpec::from_dense(&ms);
+        assert!(st.is_dense());
+        assert_eq!(st.weight_shapes(), ms.weight_shapes());
+        assert_eq!(st.param_count(), ms.param_count());
+        assert_eq!(st.n_params(), ms.n_layers());
+        assert_eq!(st.layers[0].activation(), Activation::Relu);
+        assert_eq!(st.layers[1].activation(), Activation::Identity);
+        StackSpec::new(st.layers.clone(), st.loss, st.m).expect("round-trips validation");
+    }
+
+    #[test]
+    fn init_params_shapes_and_zero_bias() {
+        let spec = StackSpec::parse(digits_stack(), Loss::SoftmaxCe, 4).unwrap();
+        let mut rng = Rng::new(0);
+        let params = spec.init_params(&mut rng);
+        assert_eq!(params.len(), 3);
+        for (p, (rows, cols)) in params.iter().zip(spec.weight_shapes()) {
+            assert_eq!(p.dims(), &[rows, cols]);
+            for j in 0..cols {
+                assert_eq!(p.at2(rows - 1, j), 0.0, "bias row must start at zero");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_input_parses_dense_only_stacks() {
+        let spec =
+            StackSpec::parse("input 16, dense 32 relu, dense 10", Loss::SoftmaxCe, 4).unwrap();
+        assert!(spec.is_dense());
+        assert_eq!(spec.weight_shapes(), vec![(17, 32), (33, 10)]);
+    }
+
+    #[test]
+    fn parse_and_validation_errors() {
+        let bad = [
+            ("", "empty"),
+            ("conv 8 k3", "must start with 'input"),
+            ("input 12x12x1, dense 10", "insert 'flatten'"),
+            ("input 12x12x1, pool 5", "must divide"),
+            ("input 12x12x1, conv 8 k13 relu", "does not fit"),
+            ("input 12x12x1, conv 8 k3 swish", "unknown activation"),
+            ("input 4, flatten", "already flat"),
+            ("input 12x12x1, pool 2", "last layer must be weighted"),
+            ("input 12x12x1, warp 2", "unknown stack layer"),
+            ("input 12x12x1x9", "must be N or HxWxC"),
+        ];
+        for (text, needle) in bad {
+            let err = StackSpec::parse(text, Loss::SoftmaxCe, 4)
+                .map(|_| ())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "'{text}': got '{err}'");
+        }
+        // mismatched hand-built chain
+        let err = StackSpec::new(
+            vec![
+                LayerSpec::Flatten { len: 9 },
+                LayerSpec::Dense {
+                    in_dim: 8,
+                    out_dim: 2,
+                    act: Activation::Identity,
+                },
+            ],
+            Loss::Mse,
+            1,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("expects"), "{err}");
+    }
+}

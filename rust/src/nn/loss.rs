@@ -75,6 +75,22 @@ impl Loss {
     /// allocation-free path.
     pub fn per_example_into(&self, logits: &Tensor, y: &Targets, out: &mut [f32]) {
         let (m, d) = (logits.dims()[0], logits.dims()[1]);
+        self.per_example_rows(logits.data(), m, d, y, out);
+    }
+
+    /// [`Loss::per_example_into`] on a raw row-major slice of `m` logit
+    /// rows of width `d` — the batch-size-tolerant engine path (the
+    /// buffer may be a prefix of a larger workspace).
+    pub fn per_example_rows(
+        &self,
+        logits: &[f32],
+        m: usize,
+        d: usize,
+        y: &Targets,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(logits.len(), m * d);
+        let logits = RowView { data: logits, d };
         assert_eq!(out.len(), m, "per_example_into buffer length");
         match (self, y) {
             (Loss::SoftmaxCe, Targets::Classes(cls)) => {
@@ -92,7 +108,7 @@ impl Loss {
                 }
             }
             (Loss::Mse, Targets::Dense(t)) => {
-                assert_eq!(t.dims(), logits.dims());
+                assert_eq!(t.dims(), &[m, d]);
                 for j in 0..m {
                     out[j] = logits
                         .row(j)
@@ -119,6 +135,14 @@ impl Loss {
     /// allocation-free path.
     pub fn grad_z_into_slice(&self, logits: &Tensor, y: &Targets, out: &mut [f32]) {
         let (m, d) = (logits.dims()[0], logits.dims()[1]);
+        self.grad_z_rows(logits.data(), m, d, y, out);
+    }
+
+    /// [`Loss::grad_z_into_slice`] on a raw row-major slice of `m` logit
+    /// rows of width `d`.
+    pub fn grad_z_rows(&self, logits: &[f32], m: usize, d: usize, y: &Targets, out: &mut [f32]) {
+        debug_assert_eq!(logits.len(), m * d);
+        let logits = RowView { data: logits, d };
         assert_eq!(out.len(), m * d, "grad_z_into_slice buffer length");
         match (self, y) {
             (Loss::SoftmaxCe, Targets::Classes(cls)) => {
@@ -141,14 +165,26 @@ impl Loss {
                 }
             }
             (Loss::Mse, Targets::Dense(t)) => {
-                assert_eq!(t.dims(), logits.dims());
+                assert_eq!(t.dims(), &[m, d]);
                 let s = 2.0 / d as f32;
-                for ((o, &a), &b) in out.iter_mut().zip(logits.data()).zip(t.data()) {
+                for ((o, &a), &b) in out.iter_mut().zip(logits.data).zip(t.data()) {
                     *o = s * (a - b);
                 }
             }
             _ => panic!("loss/target kind mismatch: {:?}", self),
         }
+    }
+}
+
+/// Borrowed row-major `[m, d]` view used by the `_rows` loss variants.
+struct RowView<'a> {
+    data: &'a [f32],
+    d: usize,
+}
+
+impl RowView<'_> {
+    fn row(&self, j: usize) -> &[f32] {
+        &self.data[j * self.d..(j + 1) * self.d]
     }
 }
 

@@ -9,10 +9,12 @@
 //! Also carries the instrumented flop counters that E1 (the §5 op-count
 //! table) reads.
 
+pub mod layers;
 pub mod loss;
 pub mod mlp;
 pub mod spec;
 
+pub use layers::{Layer, LayerSpec, StackSpec};
 pub use loss::Loss;
 pub use mlp::{Backward, Forward, Mlp};
 pub use spec::ModelSpec;

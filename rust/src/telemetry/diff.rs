@@ -1,0 +1,327 @@
+//! Cross-run telemetry diffing: compare two `telemetry.json` reports and
+//! summarize distribution drift (`pegrad monitor --baseline report.json`).
+//!
+//! The gradient-norm histograms are the natural regression fingerprint
+//! of a training run (ROADMAP): two runs of the same scenario should put
+//! the same mass in the same log-spaced bins. This module compares, per
+//! stream (the total and every layer):
+//!
+//! * the moment/quantile summaries (`mean`, `std`, `p50`, `p90`, `p99`)
+//!   as relative deltas;
+//! * the histograms as a total-variation distance (half the L1 between
+//!   normalized bin masses, under/overflow included) — 0 for identical
+//!   mass placement, 1 for disjoint;
+//!
+//! plus the loss mean and the gradient-noise-scale `b_simple`. A field
+//! drifts when its relative delta exceeds `rel_threshold` (or, for the
+//! histogram, when the TV distance exceeds `tv_threshold`).
+
+use anyhow::{anyhow, Result};
+
+use crate::util::Json;
+
+/// Drift thresholds; defaults are deliberately loose — the diff is a
+/// smoke alarm, not a bitwise gate.
+#[derive(Debug, Clone, Copy)]
+pub struct DiffConfig {
+    /// Relative-change threshold on scalar summaries.
+    pub rel_threshold: f64,
+    /// Total-variation threshold on histogram mass.
+    pub tv_threshold: f64,
+}
+
+impl Default for DiffConfig {
+    fn default() -> Self {
+        DiffConfig {
+            rel_threshold: 0.25,
+            tv_threshold: 0.15,
+        }
+    }
+}
+
+/// Is this JSON document a pegrad telemetry report? (Shared tag check —
+/// the CLI uses it to fail fast on a bad `--baseline` before training.)
+pub fn is_report(j: &Json) -> bool {
+    j.get("telemetry").and_then(Json::as_str) == Some(super::REPORT_TAG)
+}
+
+fn rel_delta(base: f64, cur: f64) -> f64 {
+    if base == cur {
+        return 0.0;
+    }
+    (cur - base) / base.abs().max(1e-12)
+}
+
+/// Scalar comparison entry; `None` when either side is missing/null.
+fn scalar_diff(
+    base: &Json,
+    cur: &Json,
+    key: &str,
+    cfg: &DiffConfig,
+    drifts: &mut usize,
+) -> (String, Json) {
+    let (b, c) = (
+        base.get(key).and_then(Json::as_f64),
+        cur.get(key).and_then(Json::as_f64),
+    );
+    let v = match (b, c) {
+        (Some(b), Some(c)) => {
+            let rel = rel_delta(b, c);
+            let drifted = rel.abs() > cfg.rel_threshold;
+            if drifted {
+                *drifts += 1;
+            }
+            Json::obj(vec![
+                ("baseline", Json::num(b)),
+                ("current", Json::num(c)),
+                ("rel_delta", Json::num(rel)),
+                ("drifted", Json::Bool(drifted)),
+            ])
+        }
+        _ => Json::Null,
+    };
+    (key.to_string(), v)
+}
+
+/// Total-variation distance between two histogram reports; `None` when
+/// bin layouts differ (incomparable runs).
+fn histogram_tv(base: &Json, cur: &Json) -> Option<f64> {
+    let (bh, ch) = (base.get("histogram")?, cur.get("histogram")?);
+    if bh.get("lo_log2") != ch.get("lo_log2") || bh.get("hi_log2") != ch.get("hi_log2") {
+        return None;
+    }
+    let counts = |h: &Json| -> Option<(Vec<f64>, f64)> {
+        let mut v: Vec<f64> = h
+            .get("counts")?
+            .as_arr()?
+            .iter()
+            .map(|c| c.as_f64().unwrap_or(0.0))
+            .collect();
+        v.push(h.get("underflow")?.as_f64()?);
+        v.push(h.get("overflow")?.as_f64()?);
+        let total: f64 = v.iter().sum();
+        Some((v, total))
+    };
+    let (bc, bt) = counts(bh)?;
+    let (cc, ct) = counts(ch)?;
+    if bc.len() != cc.len() || bt == 0.0 || ct == 0.0 {
+        return None;
+    }
+    let tv = 0.5
+        * bc.iter()
+            .zip(&cc)
+            .map(|(&b, &c)| (b / bt - c / ct).abs())
+            .sum::<f64>();
+    Some(tv)
+}
+
+/// Diff one norm-stream summary (the `total` object or one `layers[i]`).
+fn stream_diff(base: &Json, cur: &Json, cfg: &DiffConfig, drifts: &mut usize) -> Json {
+    let mut fields: Vec<(String, Json)> = ["mean", "std", "p50", "p90", "p99"]
+        .iter()
+        .map(|k| scalar_diff(base, cur, k, cfg, drifts))
+        .collect();
+    let tv = histogram_tv(base, cur);
+    let tv_json = match tv {
+        Some(tv) => {
+            let drifted = tv > cfg.tv_threshold;
+            if drifted {
+                *drifts += 1;
+            }
+            Json::obj(vec![
+                ("tv_distance", Json::num(tv)),
+                ("drifted", Json::Bool(drifted)),
+            ])
+        }
+        None => Json::Null,
+    };
+    fields.push(("histogram".to_string(), tv_json));
+    Json::Obj(fields.into_iter().collect())
+}
+
+/// Compare two telemetry reports; returns the drift summary document.
+pub fn diff_reports(baseline: &Json, current: &Json, cfg: &DiffConfig) -> Result<Json> {
+    for (j, which) in [(baseline, "baseline"), (current, "current")] {
+        if !is_report(j) {
+            return Err(anyhow!("{which} is not a pegrad telemetry report"));
+        }
+    }
+    let mut drifts = 0usize;
+    let total = stream_diff(
+        baseline.req("total")?,
+        current.req("total")?,
+        cfg,
+        &mut drifts,
+    );
+    let (bl, cl) = (
+        baseline.req("layers")?.as_arr().unwrap_or(&[]),
+        current.req("layers")?.as_arr().unwrap_or(&[]),
+    );
+    let layers: Vec<Json> = if bl.len() == cl.len() {
+        bl.iter()
+            .zip(cl)
+            .map(|(b, c)| stream_diff(b, c, cfg, &mut drifts))
+            .collect()
+    } else {
+        drifts += 1; // a different layer count is drift by definition
+        Vec::new()
+    };
+    let loss = {
+        let (b, c) = (baseline.get("loss"), current.get("loss"));
+        match (b, c) {
+            (Some(b), Some(c)) if b.get("mean").is_some() && c.get("mean").is_some() => {
+                scalar_diff(b, c, "mean", cfg, &mut drifts).1
+            }
+            _ => Json::Null,
+        }
+    };
+    let gns = {
+        let get = |j: &Json| {
+            j.get("gns")
+                .and_then(|g| g.get("total"))
+                .cloned()
+                .unwrap_or(Json::Null)
+        };
+        let (b, c) = (get(baseline), get(current));
+        scalar_diff(&b, &c, "b_simple", cfg, &mut drifts).1
+    };
+    Ok(Json::obj(vec![
+        ("telemetry_diff", Json::str("pegrad.gradient_norms.drift")),
+        (
+            "baseline_steps",
+            baseline.get("steps").cloned().unwrap_or(Json::Null),
+        ),
+        (
+            "current_steps",
+            current.get("steps").cloned().unwrap_or(Json::Null),
+        ),
+        (
+            "layer_count_matches",
+            Json::Bool(bl.len() == cl.len()),
+        ),
+        ("rel_threshold", Json::num(cfg.rel_threshold)),
+        ("tv_threshold", Json::num(cfg.tv_threshold)),
+        ("total", total),
+        ("layers", Json::Arr(layers)),
+        ("loss_mean", loss),
+        ("gns_b_simple", gns),
+        ("drift_count", Json::num(drifts as f64)),
+        ("drifted", Json::Bool(drifts > 0)),
+    ]))
+}
+
+/// One-line console rendering of a drift summary.
+pub fn render_summary(diff: &Json) -> String {
+    let drifted = diff
+        .get("drifted")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    let count = diff
+        .get("drift_count")
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+    let tv = diff
+        .get("total")
+        .and_then(|t| t.get("histogram"))
+        .and_then(|h| h.get("tv_distance"))
+        .and_then(Json::as_f64);
+    let tv_txt = tv
+        .map(|v| format!(", total-norm histogram TV distance {v:.4}"))
+        .unwrap_or_default();
+    if drifted {
+        format!("DRIFT: {count} field(s) moved beyond thresholds{tv_txt}")
+    } else {
+        format!("no drift vs baseline{tv_txt}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{LayerTap, TelemetryConfig, TelemetryMonitor};
+    use crate::tensor::Tensor;
+
+    fn monitor_report(scale: f32, steps: usize) -> Json {
+        let cfg = TelemetryConfig {
+            enabled: true,
+            bins: 16,
+            warmup_steps: 1,
+            ..Default::default()
+        };
+        let mut mon = TelemetryMonitor::new(&cfg, 2, 4, 16);
+        for _ in 0..steps {
+            let s0: Vec<f32> = (0..4).map(|j| scale * (1.0 + j as f32)).collect();
+            let s1: Vec<f32> = (0..4).map(|j| scale * (2.0 + j as f32)).collect();
+            let total: Vec<f32> = s0.iter().zip(&s1).map(|(a, b)| a + b).collect();
+            mon.on_layer(1, &s1);
+            mon.on_layer(0, &s0);
+            mon.on_step_end(&total, &[0.5, 0.4, 0.3, 0.2]);
+            let grads =
+                vec![Tensor::full(vec![2, 2], 0.5), Tensor::full(vec![1, 3], 1.0)];
+            mon.end_step(&[0, 1, 2, 3], &grads);
+        }
+        mon.report()
+    }
+
+    #[test]
+    fn identical_runs_do_not_drift() {
+        let a = monitor_report(1.0, 6);
+        let b = monitor_report(1.0, 6);
+        let d = diff_reports(&a, &b, &DiffConfig::default()).unwrap();
+        assert_eq!(d.get("drifted").unwrap().as_bool(), Some(false));
+        assert_eq!(d.get("drift_count").unwrap().as_usize(), Some(0));
+        let tv = d
+            .get("total")
+            .unwrap()
+            .get("histogram")
+            .unwrap()
+            .get("tv_distance")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(tv, 0.0);
+        assert!(render_summary(&d).contains("no drift"));
+    }
+
+    #[test]
+    fn scaled_norms_drift() {
+        let a = monitor_report(1.0, 6);
+        let b = monitor_report(100.0, 6);
+        let d = diff_reports(&a, &b, &DiffConfig::default()).unwrap();
+        assert_eq!(d.get("drifted").unwrap().as_bool(), Some(true));
+        assert!(d.get("drift_count").unwrap().as_usize().unwrap() >= 4);
+        // the per-layer streams drifted too
+        let layers = d.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(
+            layers[0]
+                .get("mean")
+                .unwrap()
+                .get("drifted")
+                .unwrap()
+                .as_bool(),
+            Some(true)
+        );
+        assert!(render_summary(&d).starts_with("DRIFT"));
+    }
+
+    #[test]
+    fn rejects_non_reports() {
+        let bogus = Json::parse(r#"{"hello": 1}"#).unwrap();
+        let real = monitor_report(1.0, 2);
+        assert!(diff_reports(&bogus, &real, &DiffConfig::default()).is_err());
+        assert!(diff_reports(&real, &bogus, &DiffConfig::default()).is_err());
+    }
+
+    #[test]
+    fn diff_roundtrips_through_parser() {
+        let a = monitor_report(1.0, 3);
+        let b = monitor_report(2.0, 3);
+        let d = diff_reports(&a, &b, &DiffConfig::default()).unwrap();
+        let re = Json::parse(&d.to_string()).unwrap();
+        assert_eq!(
+            re.get("telemetry_diff").unwrap().as_str(),
+            Some("pegrad.gradient_norms.drift")
+        );
+    }
+}

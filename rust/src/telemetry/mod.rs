@@ -26,15 +26,25 @@
 //! * [`monitor`] — [`monitor::TelemetryMonitor`] owns all of the above,
 //!   implements [`LayerTap`], and renders the JSON report that
 //!   `pegrad monitor` / the trainer's `[telemetry]` section emit.
+//! * [`diff`] — cross-run drift detection: compare two reports
+//!   (histogram total-variation distance, quantile/moment deltas, GNS)
+//!   — the `pegrad monitor --baseline report.json` path.
 //!
 //! Dependency direction: `engine` and `nn` know only the [`LayerTap`]
 //! trait; everything stateful lives here and is driven by the trainer.
 
+pub mod diff;
 pub mod gns;
 pub mod monitor;
 pub mod outlier;
 pub mod sketch;
 
+pub use diff::{diff_reports, DiffConfig};
+
+/// Identifying tag every telemetry report carries (`"telemetry"` field);
+/// written by [`monitor::TelemetryMonitor::report`], checked by
+/// [`diff::is_report`].
+pub const REPORT_TAG: &str = "pegrad.gradient_norms";
 pub use gns::GnsEstimator;
 pub use monitor::TelemetryMonitor;
 pub use outlier::{OutlierConfig, OutlierDetector};

@@ -168,7 +168,7 @@ impl TelemetryMonitor {
     /// The full JSON report (see module docs for the schema).
     pub fn report(&self) -> Json {
         Json::obj(vec![
-            ("telemetry", Json::str("pegrad.gradient_norms")),
+            ("telemetry", Json::str(super::REPORT_TAG)),
             ("steps", Json::num(self.steps as f64)),
             ("m", Json::num(self.m as f64)),
             ("n_layers", Json::num(self.n_layers as f64)),

@@ -1,0 +1,250 @@
+//! im2col / col2im kernels for the convolutional layer subsystem.
+//!
+//! Layout conventions (shared with `nn::layers::conv`):
+//!
+//! * per-example feature maps are **channel-last** (NHWC): a flat
+//!   `[h * w * c]` slice with `x[(y*w + x_)*c + ch]`. A conv's matmul
+//!   output `[L, c_out]` (L = out_h·out_w positions, row-major over
+//!   (oy, ox)) is then *already* the next layer's NHWC input — no
+//!   transpose between layers.
+//! * the unfolded patch matrix `U_j` is `[L, K+1]` with
+//!   `K = k*k*in_ch`, patch column order `(ky, kx, ch)`, and a constant
+//!   `1.0` in the last column — the bias folded exactly like the dense
+//!   path's `Haug` augmentation, so a conv weight is `[K+1, c_out]` with
+//!   the bias as its last row.
+//!
+//! Both kernels fan out across example bands on the persistent worker
+//! pool ([`threadpool::scope`]); each example's rows/outputs are disjoint,
+//! so any banding is bitwise identical to the serial loop.
+
+use crate::util::threadpool;
+
+/// Static geometry of one stride-1, valid-padding k×k convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_ch: usize,
+    pub k: usize,
+}
+
+impl ConvGeom {
+    pub fn out_h(&self) -> usize {
+        self.in_h + 1 - self.k
+    }
+
+    pub fn out_w(&self) -> usize {
+        self.in_w + 1 - self.k
+    }
+
+    /// Number of output positions L.
+    pub fn positions(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// Patch length K (without the folded bias column).
+    pub fn patch_len(&self) -> usize {
+        self.k * self.k * self.in_ch
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.in_h * self.in_w * self.in_ch
+    }
+}
+
+/// Below this many unfolded elements per call the im2col loop stays
+/// single-threaded.
+const IM2COL_PAR_THRESHOLD: usize = 1 << 15;
+
+/// Unfold one NHWC example into its `[L, K+1]` patch matrix (bias column
+/// of ones included).
+fn im2col_example(g: &ConvGeom, x: &[f32], u: &mut [f32]) {
+    let (out_h, out_w, k, c) = (g.out_h(), g.out_w(), g.k, g.in_ch);
+    let kp1 = g.patch_len() + 1;
+    let row_stride = g.in_w * c;
+    debug_assert_eq!(x.len(), g.in_len());
+    debug_assert_eq!(u.len(), g.positions() * kp1);
+    for oy in 0..out_h {
+        for ox in 0..out_w {
+            let urow = &mut u[(oy * out_w + ox) * kp1..(oy * out_w + ox + 1) * kp1];
+            for ky in 0..k {
+                let src = &x[(oy + ky) * row_stride + ox * c..][..k * c];
+                urow[ky * k * c..(ky + 1) * k * c].copy_from_slice(src);
+            }
+            urow[kp1 - 1] = 1.0;
+        }
+    }
+}
+
+/// Batched im2col: `x` is `[m, in_len]` NHWC, `u` is `[m, L*(K+1)]`,
+/// band-parallel over examples on the pooled workers.
+pub fn im2col(g: &ConvGeom, x: &[f32], u: &mut [f32], m: usize) {
+    let per_u = g.positions() * (g.patch_len() + 1);
+    let per_x = g.in_len();
+    debug_assert_eq!(x.len(), m * per_x);
+    debug_assert_eq!(u.len(), m * per_u);
+    if m * per_u <= IM2COL_PAR_THRESHOLD || m == 1 {
+        for j in 0..m {
+            im2col_example(g, &x[j * per_x..(j + 1) * per_x], &mut u[j * per_u..(j + 1) * per_u]);
+        }
+        return;
+    }
+    let bands = threadpool::bands().min(m);
+    let rows_per = m.div_ceil(bands);
+    let jobs: Vec<threadpool::ScopedJob> = u
+        .chunks_mut(rows_per * per_u)
+        .enumerate()
+        .map(|(bi, chunk)| {
+            let j0 = bi * rows_per;
+            Box::new(move || {
+                for (dj, uc) in chunk.chunks_mut(per_u).enumerate() {
+                    let j = j0 + dj;
+                    im2col_example(g, &x[j * per_x..(j + 1) * per_x], uc);
+                }
+            }) as threadpool::ScopedJob
+        })
+        .collect();
+    threadpool::scope(jobs);
+}
+
+/// Fold one example's patch-gradient matrix `du` (`[L, K]`, the bias
+/// column already dropped by the caller) back onto the NHWC input
+/// gradient `dx` (`[in_len]`, overwritten): every patch position
+/// scatter-adds into the pixels it covered. The inverse of
+/// [`im2col_example`]'s gather.
+pub fn col2im_example(g: &ConvGeom, du: &[f32], dx: &mut [f32]) {
+    let (out_h, out_w, k, c) = (g.out_h(), g.out_w(), g.k, g.in_ch);
+    let kc = g.patch_len();
+    let row_stride = g.in_w * c;
+    debug_assert_eq!(du.len(), g.positions() * kc);
+    debug_assert_eq!(dx.len(), g.in_len());
+    for v in dx.iter_mut() {
+        *v = 0.0;
+    }
+    for oy in 0..out_h {
+        for ox in 0..out_w {
+            let drow = &du[(oy * out_w + ox) * kc..(oy * out_w + ox + 1) * kc];
+            for ky in 0..k {
+                let dst = &mut dx[(oy + ky) * row_stride + ox * c..][..k * c];
+                for (d, &s) in dst.iter_mut().zip(&drow[ky * k * c..(ky + 1) * k * c]) {
+                    *d += s;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Rng, Tensor};
+
+    fn geom() -> ConvGeom {
+        ConvGeom {
+            in_h: 5,
+            in_w: 4,
+            in_ch: 2,
+            k: 3,
+        }
+    }
+
+    #[test]
+    fn geometry() {
+        let g = geom();
+        assert_eq!((g.out_h(), g.out_w()), (3, 2));
+        assert_eq!(g.positions(), 6);
+        assert_eq!(g.patch_len(), 18);
+        assert_eq!(g.in_len(), 40);
+    }
+
+    #[test]
+    fn im2col_gathers_patches_with_bias_column() {
+        let g = geom();
+        let x: Vec<f32> = (0..g.in_len()).map(|v| v as f32).collect();
+        let kp1 = g.patch_len() + 1;
+        let mut u = vec![0f32; g.positions() * kp1];
+        im2col_example(&g, &x, &mut u);
+        // patch at (oy=1, ox=1): rows 1..4, cols 1..4, both channels
+        let l = g.out_w() + 1;
+        let urow = &u[l * kp1..(l + 1) * kp1];
+        for ky in 0..3 {
+            for kx in 0..3 {
+                for ch in 0..2 {
+                    let want = ((1 + ky) * 4 * 2 + (1 + kx) * 2 + ch) as f32;
+                    assert_eq!(urow[(ky * 3 + kx) * 2 + ch], want, "ky{ky} kx{kx} ch{ch}");
+                }
+            }
+        }
+        assert_eq!(urow[kp1 - 1], 1.0);
+    }
+
+    #[test]
+    fn batched_im2col_parallel_matches_serial_bitwise() {
+        // large enough to cross the parallel threshold, ragged band sizes
+        let g = ConvGeom {
+            in_h: 12,
+            in_w: 12,
+            in_ch: 3,
+            k: 3,
+        };
+        let m = 37;
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(vec![m, g.in_len()], &mut rng);
+        let per_u = g.positions() * (g.patch_len() + 1);
+        assert!(m * per_u > IM2COL_PAR_THRESHOLD);
+        let mut par = vec![0f32; m * per_u];
+        im2col(&g, x.data(), &mut par, m);
+        let mut ser = vec![0f32; m * per_u];
+        for j in 0..m {
+            im2col_example(
+                &g,
+                &x.data()[j * g.in_len()..(j + 1) * g.in_len()],
+                &mut ser[j * per_u..(j + 1) * per_u],
+            );
+        }
+        assert_eq!(par, ser, "banded im2col diverged from serial");
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), u> == <x, col2im(u)> for random x, u — the defining
+        // property of the gather/scatter pair (bias column excluded).
+        let g = geom();
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(vec![g.in_len()], &mut rng);
+        let du = Tensor::randn(vec![g.positions() * g.patch_len()], &mut rng);
+        let kp1 = g.patch_len() + 1;
+        let mut u = vec![0f32; g.positions() * kp1];
+        im2col_example(&g, x.data(), &mut u);
+        let lhs: f64 = (0..g.positions())
+            .flat_map(|l| (0..g.patch_len()).map(move |p| (l, p)))
+            .map(|(l, p)| u[l * kp1 + p] as f64 * du.data()[l * g.patch_len() + p] as f64)
+            .sum();
+        let mut dx = vec![0f32; g.in_len()];
+        col2im_example(&g, du.data(), &mut dx);
+        let rhs: f64 = x
+            .data()
+            .iter()
+            .zip(&dx)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn k1_conv_is_identity_unfold() {
+        let g = ConvGeom {
+            in_h: 2,
+            in_w: 2,
+            in_ch: 3,
+            k: 1,
+        };
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let mut u = vec![0f32; g.positions() * 4];
+        im2col_example(&g, &x, &mut u);
+        for l in 0..4 {
+            assert_eq!(&u[l * 4..l * 4 + 3], &x[l * 3..(l + 1) * 3]);
+            assert_eq!(u[l * 4 + 3], 1.0);
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! production compute path; this module is the *oracle* and the CPU
 //! baseline the benches compare against.
 
+pub mod conv;
 pub mod ops;
 pub mod rng;
 pub mod shape;

@@ -4,8 +4,9 @@
 //! The matmul family is the performance-relevant part — it backs the rust
 //! reference implementation used as the E1/E2 CPU baseline and the fused
 //! engine's kernels — so it gets a blocked i-k-j loop order (unit-stride
-//! inner loop, FMA-friendly) and row-band parallelism via scoped threads
-//! that borrow the operands directly (no per-call input copies; band
+//! inner loop, FMA-friendly) and row-band parallelism dispatched onto the
+//! persistent worker pool via [`threadpool::scope`], with jobs borrowing
+//! the operands directly (no per-call input copies or thread spawns; band
 //! count from [`threadpool::bands`]).
 
 use crate::util::threadpool;
@@ -104,10 +105,15 @@ pub fn row_sq_norms(a: &Tensor) -> Vec<f32> {
 
 /// argmax per row (classification accuracy).
 pub fn row_argmax(a: &Tensor) -> Vec<usize> {
-    let (m, n) = (a.dims()[0], a.dims()[1]);
+    row_argmax_rows(a.data(), a.dims()[0], a.dims()[1])
+}
+
+/// [`row_argmax`] on a raw row-major slice of `m` rows of width `n`.
+pub fn row_argmax_rows(a: &[f32], m: usize, n: usize) -> Vec<usize> {
+    debug_assert_eq!(a.len(), m * n);
     (0..m)
         .map(|i| {
-            let row = a.row(i);
+            let row = &a[i * n..(i + 1) * n];
             let mut best = 0;
             for j in 1..n {
                 if row[j] > row[best] {
@@ -314,11 +320,13 @@ fn matmul_band(a: &[f32], b: &[f32], c: &mut [f32], r0: usize, r1: usize, k: usi
     }
 }
 
-/// Accumulating blocked matmul over row bands. Scoped threads borrow the
-/// operands directly — no input cloning, no output assembly copy (each
-/// worker owns a disjoint `chunks_mut` band of `c`), so the parallel path
-/// allocates nothing. (The previous implementation Arc-copied both inputs
-/// per call; at engine batch sizes that was the dominant allocation.)
+/// Accumulating blocked matmul over row bands. The pooled workers borrow
+/// the operands directly — no input cloning, no output assembly copy
+/// (each band job owns a disjoint `chunks_mut` band of `c`), and the
+/// dispatch reuses the persistent [`threadpool`] workers instead of
+/// spawning threads per call; the only per-call cost is one small job box
+/// per band. (The original implementation Arc-copied both inputs per
+/// call; at engine batch sizes that was the dominant allocation.)
 fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -329,13 +337,16 @@ fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
     }
     let bands = threadpool::bands().min(m);
     let rows_per = m.div_ceil(bands);
-    std::thread::scope(|s| {
-        for (bi, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+    let jobs: Vec<threadpool::ScopedJob> = c
+        .chunks_mut(rows_per * n)
+        .enumerate()
+        .map(|(bi, chunk)| {
             let r0 = bi * rows_per;
             let r1 = r0 + chunk.len() / n;
-            s.spawn(move || matmul_band(a, b, chunk, r0, r1, k, n));
-        }
-    });
+            Box::new(move || matmul_band(a, b, chunk, r0, r1, k, n)) as threadpool::ScopedJob
+        })
+        .collect();
+    threadpool::scope(jobs);
 }
 
 /// C = A @ B on raw row-major slices, into a caller-owned (reused) buffer.
@@ -428,7 +439,7 @@ fn tn_band(
 }
 
 /// C += A^T diag(coef) B on raw slices (coef `None` = identity), row-band
-/// parallel over the k output rows with zero allocations.
+/// parallel over the k output rows on the persistent worker pool.
 pub fn matmul_tn_coef_acc_slices(
     a: &[f32],
     b: &[f32],
@@ -450,13 +461,17 @@ pub fn matmul_tn_coef_acc_slices(
     }
     let bands = threadpool::bands().min(k);
     let rows_per = k.div_ceil(bands);
-    std::thread::scope(|s| {
-        for (bi, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+    let jobs: Vec<threadpool::ScopedJob> = c
+        .chunks_mut(rows_per * n)
+        .enumerate()
+        .map(|(bi, chunk)| {
             let k0 = bi * rows_per;
             let k1 = k0 + chunk.len() / n;
-            s.spawn(move || tn_band(a, b, coef, chunk, k0, k1, k, n, m));
-        }
-    });
+            Box::new(move || tn_band(a, b, coef, chunk, k0, k1, k, n, m))
+                as threadpool::ScopedJob
+        })
+        .collect();
+    threadpool::scope(jobs);
 }
 
 /// C += A^T @ B for rank-2 tensors (accumulating, no transpose temp).

@@ -1,22 +1,29 @@
 //! Fixed-size worker pool with bounded queues (tokio substitute).
 //!
-//! Three primitives:
+//! Four primitives:
 //!
 //! * [`bounded`] — a bounded MPSC channel with blocking `send`, the
 //!   backpressure primitive the coordinator's prefetch pipeline uses.
 //! * [`bands`] — the machine's clamped parallelism, the band count the
-//!   scoped-thread compute kernels in `tensor::ops` / `engine` target
-//!   (those kernels borrow their operands via `std::thread::scope`
-//!   instead of going through the pool, so inputs are never copied).
+//!   band-parallel compute kernels in `tensor::ops` / `engine` /
+//!   `nn::layers` target.
+//! * [`scope`] — scoped-borrow dispatch over the persistent global pool:
+//!   run a set of borrowed jobs (each owning a disjoint `chunks_mut`
+//!   band of the output) on the pooled workers and block until all
+//!   complete. This replaced the per-call `std::thread::scope` spawns in
+//!   the band kernels (correct and copy-free, but paying OS thread
+//!   creation on every large op); the only per-call cost now is one
+//!   small box per band.
 //! * [`ThreadPool`] — submit `'static` closures, optionally collect
-//!   results via [`ThreadPool::scope_map`]. Kept for fire-and-forget /
-//!   owned-data work; a scoped-borrow dispatch over these persistent
-//!   workers (to drop the per-call thread spawns of the kernels above)
-//!   is a ROADMAP open item.
+//!   results via [`ThreadPool::scope_map`]; also hosts [`ThreadPool::scope`].
 
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+
+/// A borrowed band job handed to [`scope`]. Each job typically owns one
+/// disjoint `chunks_mut` slice of the output buffer.
+pub type ScopedJob<'a> = Box<dyn FnOnce() + Send + 'a>;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -66,6 +73,42 @@ impl ThreadPool {
             .expect("workers alive");
     }
 
+    /// Scoped-borrow dispatch: run the borrowed `jobs` on the pooled
+    /// workers and block until every one of them has finished. The LAST
+    /// job runs inline on the calling thread (one fewer queue hop, and
+    /// the caller keeps making progress even when the pool is saturated
+    /// by other callers); the rest go through the worker queue.
+    ///
+    /// Safety: the non-`'static` borrows inside the jobs are sound
+    /// because this function does not return until the completion latch
+    /// counts every dispatched job — the borrows strictly outlive the
+    /// workers' use of them. A panicking job is caught on the worker (so
+    /// the latch still completes and the pool worker survives) and its
+    /// original payload is re-raised on the caller once all jobs settle.
+    pub fn scope<'a>(&self, mut jobs: Vec<ScopedJob<'a>>) {
+        let Some(last) = jobs.pop() else { return };
+        let latch = Arc::new(Latch::new(jobs.len()));
+        for job in jobs {
+            // SAFETY: see above — `scope` blocks on the latch until the
+            // job has run, so extending the closure's lifetime to
+            // 'static never lets a borrow dangle.
+            let job: ScopedJob<'static> = unsafe { std::mem::transmute(job) };
+            let latch = Arc::clone(&latch);
+            self.execute(move || {
+                let payload =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).err();
+                latch.complete(payload);
+            });
+        }
+        // The inline job may panic; the latch MUST be drained first so no
+        // borrowed job is still running when this frame unwinds.
+        let inline = std::panic::catch_unwind(std::panic::AssertUnwindSafe(last)).err();
+        let pooled = latch.wait();
+        if let Some(payload) = inline.or(pooled) {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
     /// Run `f(i)` for `i in 0..n` across the pool and collect results in
     /// order. Blocks until all complete. `f` must be cloneable across
     /// threads (typically a capture-by-Arc closure).
@@ -102,9 +145,56 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Shared global pool sized to the machine, spawned on first use (for
-/// `'static` jobs; the borrow-heavy compute kernels use scoped threads
-/// and only consult [`bands`]).
+/// Panic payload captured from a worker, carried back to the caller.
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Completion latch for [`ThreadPool::scope`]: counts outstanding jobs
+/// down and keeps the first panic payload for re-raising on the caller.
+struct Latch {
+    state: Mutex<(usize, Option<PanicPayload>)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            state: Mutex::new((n, None)),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, payload: Option<PanicPayload>) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        if st.1.is_none() {
+            st.1 = payload;
+        }
+        if st.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every job completed; returns the first panic payload,
+    /// if any job panicked.
+    fn wait(&self) -> Option<PanicPayload> {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.1.take()
+    }
+}
+
+/// [`ThreadPool::scope`] on the shared global pool — the band kernels'
+/// dispatch point. Workers never block on latches (only callers do), so
+/// concurrent callers contend but cannot deadlock.
+pub fn scope(jobs: Vec<ScopedJob<'_>>) {
+    global().scope(jobs);
+}
+
+/// Shared global pool sized to the machine, spawned on first use. The
+/// band kernels dispatch their borrowed jobs here via [`scope`];
+/// `'static` fire-and-forget work goes through [`ThreadPool::execute`].
 pub fn global() -> &'static ThreadPool {
     use once_cell::sync::Lazy;
     static POOL: Lazy<ThreadPool> = Lazy::new(|| ThreadPool::new(bands()));
@@ -112,9 +202,8 @@ pub fn global() -> &'static ThreadPool {
 }
 
 /// Row-band count compute kernels should target: the machine's available
-/// parallelism with the pool's clamp, cached, WITHOUT spawning the pool
-/// (the scoped-thread kernels in `tensor::ops`/`engine` only need the
-/// number, not the worker queue).
+/// parallelism with the pool's clamp, cached WITHOUT spawning the pool
+/// (shape-only callers need the number, not the worker queue).
 pub fn bands() -> usize {
     use std::sync::OnceLock;
     static BANDS: OnceLock<usize> = OnceLock::new();
@@ -265,6 +354,75 @@ mod tests {
     fn scope_map_zero() {
         let pool = ThreadPool::new(1);
         assert!(pool.scope_map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn scope_runs_borrowed_chunks() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0usize; 103]; // ragged last band
+        let jobs: Vec<super::ScopedJob> = data
+            .chunks_mut(10)
+            .enumerate()
+            .map(|(bi, chunk)| {
+                Box::new(move || {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = bi * 10 + i + 1;
+                    }
+                }) as super::ScopedJob
+            })
+            .collect();
+        pool.scope(jobs);
+        assert_eq!(data, (1..=103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_empty_and_single() {
+        let pool = ThreadPool::new(2);
+        pool.scope(Vec::new());
+        let mut hit = false;
+        pool.scope(vec![Box::new(|| hit = true) as super::ScopedJob]);
+        assert!(hit, "single job must run inline");
+    }
+
+    #[test]
+    fn scope_keeps_workers_alive_after_many_rounds() {
+        // the dispatch must be reusable thousands of times without
+        // spawning threads (this is the whole point of the satellite)
+        let pool = ThreadPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..2000 {
+            let jobs: Vec<super::ScopedJob> = (0..4)
+                .map(|_| {
+                    Box::new(|| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    }) as super::ScopedJob
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 8000);
+        assert_eq!(pool.size(), 3);
+    }
+
+    #[test]
+    fn scope_propagates_worker_panic_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<super::ScopedJob> = (0..4)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("band boom");
+                        }
+                    }) as super::ScopedJob
+                })
+                .collect();
+            pool.scope(jobs);
+        }));
+        assert!(caught.is_err(), "panic must propagate to the caller");
+        // pool still functional afterwards
+        let out = pool.scope_map(8, |i| i + 1);
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
     }
 
     #[test]

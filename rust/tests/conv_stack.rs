@@ -1,0 +1,452 @@
+//! Convolutional layer subsystem acceptance tests (PR 3):
+//!
+//! * streamed conv per-example norms BITWISE equal the materialized
+//!   per-example-gradient oracle (m separate batch-1 runs that
+//!   materialize each G_j and take its norm), across activations ×
+//!   losses;
+//! * finite-difference gradient proof for the whole conv stack (the
+//!   only oracle that shares no kernels with the engine);
+//! * flop identity: attaching a `LayerTap` to a conv stack adds zero
+//!   matmul/im2col work in every mode;
+//! * the `digits_conv` trainer scenario end to end, checkpoint resume
+//!   included;
+//! * batch-size tolerance on conv stacks (m ≤ m_max bitwise).
+
+use pegrad::config::{Config, DataKind, PrivacyConfig, RunMode, SamplerKind};
+use pegrad::coordinator::{Checkpoint, Trainer};
+use pegrad::engine::{EngineMode, FusedEngine};
+use pegrad::nn::layers::StackSpec;
+use pegrad::nn::loss::Targets;
+use pegrad::nn::Loss;
+use pegrad::telemetry::RecordingTap;
+use pegrad::tensor::{ops, Rng, Tensor};
+use pegrad::util::prop;
+
+/// The flop counter is process-global and the harness runs tests on
+/// threads; every test in this binary touching it serializes here.
+static FLOPS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn flops_guard() -> std::sync::MutexGuard<'static, ()> {
+    FLOPS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cnn_stack(act: &str, loss: Loss, m: usize) -> StackSpec {
+    let out = match loss {
+        Loss::SoftmaxCe => 5,
+        Loss::Mse => 4,
+    };
+    let text = format!(
+        "input 8x8x1, conv 4 k3 {act}, pool 2, conv 6 k2 {act}, flatten, dense {out}"
+    );
+    StackSpec::parse(&text, loss, m).unwrap()
+}
+
+fn batch(stack: &StackSpec, m: usize, seed: u64) -> (Vec<Tensor>, Tensor, Targets) {
+    let mut rng = Rng::new(seed);
+    let params = stack.init_params(&mut rng);
+    let x = Tensor::randn(vec![m, stack.in_len()], &mut rng);
+    let y = match stack.loss {
+        Loss::SoftmaxCe => {
+            Targets::Classes((0..m).map(|j| (j % stack.out_len()) as i32).collect())
+        }
+        Loss::Mse => Targets::Dense(Tensor::randn(vec![m, stack.out_len()], &mut rng)),
+    };
+    (params, x, y)
+}
+
+/// Materialized oracle: batch-1 engine runs with unit weight — the
+/// returned accumulators ARE the per-example gradients G_j, one layer
+/// each, materialized. Norms come from `ops::sq_sum` over them.
+fn materialized_per_example(
+    stack: &StackSpec,
+    params: &[Tensor],
+    x: &Tensor,
+    y: &Targets,
+) -> Vec<Vec<Tensor>> {
+    let m = x.dims()[0];
+    let mut solo = FusedEngine::from_stack(StackSpec {
+        m: 1,
+        ..stack.clone()
+    });
+    (0..m)
+        .map(|j| {
+            let xj = Tensor::new(vec![1, stack.in_len()], x.row(j).to_vec());
+            let yj = y.gather(&[j]);
+            solo.step_streamed(params, &xj, &yj, EngineMode::Mean, Some(&[1.0]), None);
+            solo.grads().to_vec()
+        })
+        .collect()
+}
+
+/// Acceptance: streamed conv norms == materialized per-example-gradient
+/// oracle BITWISE, per conv layer, across activations × losses (dense
+/// layers use the §4 rank-1 factorization, which is a different — but
+/// numerically equivalent — arithmetic, so they get a tolerance).
+#[test]
+fn streamed_conv_norms_bitwise_match_materialized_oracle() {
+    let _guard = flops_guard();
+    for act in ["relu", "tanh", "gelu", "sigmoid"] {
+        for loss in [Loss::SoftmaxCe, Loss::Mse] {
+            let m = 6;
+            let stack = cnn_stack(act, loss, m);
+            let (params, x, y) = batch(&stack, m, 0xC0 + act.len() as u64);
+            let mut engine = FusedEngine::from_stack(stack.clone());
+            let mut tap = RecordingTap::default();
+            engine.step_streamed(&params, &x, &y, EngineMode::Mean, None, Some(&mut tap));
+            let streamed = engine.per_example_norms();
+            let pex = materialized_per_example(&stack, &params, &x, &y);
+            // weighted ordinals: 0 = conv1, 1 = conv2, 2 = dense
+            for j in 0..m {
+                for li in [0usize, 1] {
+                    let want = ops::sq_sum(&pex[j][li]) as f32;
+                    assert_eq!(
+                        streamed.s_layers[j][li], want,
+                        "{act}/{loss:?} example {j} conv layer {li}: streamed norm \
+                         must equal the materialized oracle bitwise"
+                    );
+                }
+                let dense_want = ops::sq_sum(&pex[j][2]) as f32;
+                prop::assert_close(
+                    streamed.s_layers[j][2] as f64,
+                    dense_want as f64,
+                    1e-3,
+                )
+                .unwrap();
+                let total: f64 = pex[j].iter().map(ops::sq_sum).sum();
+                prop::assert_close(streamed.s_total[j] as f64, total, 1e-3).unwrap();
+            }
+            // the tap saw the same stream, bitwise
+            let tapped = tap.s_layers();
+            for j in 0..m {
+                assert_eq!(tapped[j], streamed.s_layers[j]);
+            }
+            // mean-mode grads = mean of materialized per-example grads
+            for li in 0..3 {
+                let mut want = Tensor::zeros(engine.grads()[li].dims().to_vec());
+                for g in pex.iter() {
+                    ops::axpy(&mut want, 1.0 / m as f32, &g[li]);
+                }
+                prop::assert_all_close(engine.grads()[li].data(), want.data(), 1e-3)
+                    .map_err(|e| format!("{act}/{loss:?} layer {li}: {e}"))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+/// Acceptance criterion on the EXACT digits_conv stack: streamed conv
+/// norms are bitwise equal to the materialized oracle on real digits
+/// data.
+#[test]
+fn digits_conv_stack_norms_bitwise_match_oracle() {
+    let _guard = flops_guard();
+    let m = 4;
+    let stack = StackSpec::parse(
+        "input 12x12x1, conv 8 k3 relu, pool 2, conv 16 k3 relu, flatten, dense 10",
+        Loss::SoftmaxCe,
+        m,
+    )
+    .unwrap();
+    let ds = pegrad::data::digits::generate(&pegrad::data::digits::DigitsConfig {
+        n: m,
+        side: 12,
+        seed: 5,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(40);
+    let params = stack.init_params(&mut rng);
+    let (x, y) = (ds.x.clone(), ds.y.clone());
+    let mut engine = FusedEngine::from_stack(stack.clone());
+    engine.step(&params, &x, &y, EngineMode::Mean);
+    let streamed = engine.per_example_norms();
+    let pex = materialized_per_example(&stack, &params, &x, &y);
+    for j in 0..m {
+        for li in [0usize, 1] {
+            assert_eq!(
+                streamed.s_layers[j][li],
+                ops::sq_sum(&pex[j][li]) as f32,
+                "digits_conv example {j} conv layer {li}"
+            );
+        }
+        prop::assert_close(
+            streamed.s_layers[j][2] as f64,
+            ops::sq_sum(&pex[j][2]),
+            1e-3,
+        )
+        .unwrap();
+    }
+}
+
+/// The kernel-independent oracle: engine gradients on a conv stack match
+/// central finite differences of the mean loss, for every weighted layer
+/// (conv weights, conv bias row, dense weights). The max-pool makes the
+/// loss piecewise-smooth, so probes whose two-step FD estimates disagree
+/// (an argmax flipped inside the probe interval) are skipped — the same
+/// treatment `ops` gives the relu kink.
+#[test]
+fn conv_stack_gradients_match_finite_difference() {
+    let _guard = flops_guard();
+    for loss in [Loss::SoftmaxCe, Loss::Mse] {
+        let m = 3;
+        let stack = cnn_stack("tanh", loss, m);
+        let (params, x, y) = batch(&stack, m, 7);
+        let mut engine = FusedEngine::from_stack(stack.clone());
+        engine.step(&params, &x, &y, EngineMode::Mean);
+        let grads: Vec<Tensor> = engine.grads().to_vec();
+        let mut rng = Rng::new(99);
+        let mut checked = 0usize;
+        for li in 0..3 {
+            let (rows, cols) = (params[li].dims()[0], params[li].dims()[1]);
+            // probe random coordinates plus one bias-row coordinate
+            let mut probes: Vec<(usize, usize)> = (0..4)
+                .map(|_| {
+                    (
+                        rng.next_below(rows as u64) as usize,
+                        rng.next_below(cols as u64) as usize,
+                    )
+                })
+                .collect();
+            probes.push((rows - 1, 0)); // folded bias
+            for (r, c) in probes {
+                let fd_at = |h: f32, engine: &mut FusedEngine| {
+                    let mut pp = params.clone();
+                    pp[li].set2(r, c, pp[li].at2(r, c) + h);
+                    let fp = engine.forward_only(&pp, &x, &y);
+                    let mut pm = params.clone();
+                    pm[li].set2(r, c, pm[li].at2(r, c) - h);
+                    let fm = engine.forward_only(&pm, &x, &y);
+                    (fp - fm) / (2.0 * h)
+                };
+                let fd1 = fd_at(1e-2, &mut engine);
+                let fd2 = fd_at(5e-3, &mut engine);
+                if (fd1 - fd2).abs() > 0.2 * fd1.abs().max(fd2.abs()).max(0.01) {
+                    continue; // pool argmax flipped inside the interval
+                }
+                prop::assert_close(grads[li].at2(r, c) as f64, fd1 as f64, 5e-2)
+                    .map_err(|e| format!("{loss:?} layer {li} ({r},{c}): {e}"))
+                    .unwrap();
+                checked += 1;
+            }
+        }
+        assert!(checked >= 8, "too many probes skipped as kinks: {checked}");
+    }
+}
+
+/// §6 on conv stacks: clip mode equals explicitly clipping the
+/// materialized per-example gradients.
+#[test]
+fn conv_clip_mode_matches_materialized_clipping() {
+    let _guard = flops_guard();
+    let m = 5;
+    let stack = cnn_stack("relu", Loss::SoftmaxCe, m);
+    let (params, x, y) = batch(&stack, m, 21);
+    let mut engine = FusedEngine::from_stack(stack.clone());
+    let c = 0.4f32;
+    let stats = engine.step(&params, &x, &y, EngineMode::Clip { c, mean: false });
+    let pex = materialized_per_example(&stack, &params, &x, &y);
+    let mut clipped = 0usize;
+    for li in 0..3 {
+        let mut want = Tensor::zeros(engine.grads()[li].dims().to_vec());
+        for g in pex.iter() {
+            let s: f64 = g.iter().map(ops::sq_sum).sum();
+            let coef = (c as f64 / s.max(1e-30).sqrt()).min(1.0) as f32;
+            if li == 0 && coef < 1.0 {
+                clipped += 1;
+            }
+            ops::axpy(&mut want, coef, &g[li]);
+        }
+        prop::assert_all_close(engine.grads()[li].data(), want.data(), 5e-3)
+            .map_err(|e| format!("layer {li}: {e}"))
+            .unwrap();
+    }
+    assert_eq!(stats.clip_frac, Some(clipped as f32 / m as f32));
+}
+
+/// Flop identity: a LayerTap on a conv stack adds no matmul/im2col work
+/// in any mode, and the gradients are bitwise unchanged.
+#[test]
+fn conv_layer_tap_adds_zero_flops() {
+    let _guard = flops_guard();
+    let m = 8;
+    let stack = cnn_stack("gelu", Loss::SoftmaxCe, m);
+    let (params, x, y) = batch(&stack, m, 33);
+    let mut engine = FusedEngine::from_stack(stack.clone());
+    for mode in [
+        EngineMode::Mean,
+        EngineMode::Clip { c: 0.5, mean: true },
+        EngineMode::Normalize { target: 1.0 },
+    ] {
+        pegrad::nn::reset_flops();
+        engine.step(&params, &x, &y, mode);
+        let plain = pegrad::nn::read_flops();
+        let plain_grads: Vec<Tensor> = engine.grads().to_vec();
+        let mut tap = RecordingTap::default();
+        pegrad::nn::reset_flops();
+        engine.step_streamed(&params, &x, &y, mode, None, Some(&mut tap));
+        assert_eq!(
+            plain,
+            pegrad::nn::read_flops(),
+            "mode {mode:?}: tap changed the conv-stack flop count"
+        );
+        // one on_layer per WEIGHTED layer, top-down; glue layers silent
+        let order: Vec<usize> = tap.layers.iter().map(|(l, _)| *l).collect();
+        assert_eq!(order, vec![2, 1, 0], "mode {mode:?}");
+        for (a, b) in plain_grads.iter().zip(engine.grads()) {
+            assert_eq!(a.data(), b.data(), "mode {mode:?}: tap perturbed gradients");
+        }
+    }
+}
+
+/// Batch-size tolerance on conv stacks: a shrunken batch in a reused
+/// engine is bitwise identical to a fresh engine of exactly that size.
+#[test]
+fn conv_engine_serves_smaller_batches_bitwise() {
+    let _guard = flops_guard();
+    let stack = cnn_stack("relu", Loss::SoftmaxCe, 8);
+    let (params, x, y) = batch(&stack, 8, 55);
+    let small_m = 3;
+    let xs = Tensor::new(
+        vec![small_m, stack.in_len()],
+        x.data()[..small_m * stack.in_len()].to_vec(),
+    );
+    let ys = y.gather(&(0..small_m).collect::<Vec<_>>());
+    let mut big = FusedEngine::from_stack(stack.clone());
+    big.step(&params, &x, &y, EngineMode::Mean); // dirty at m=8
+    for mode in [
+        EngineMode::Mean,
+        EngineMode::Clip { c: 0.3, mean: true },
+        EngineMode::Normalize { target: 1.0 },
+    ] {
+        big.step(&params, &xs, &ys, mode);
+        let mut fresh = FusedEngine::from_stack(StackSpec {
+            m: small_m,
+            ..stack.clone()
+        });
+        fresh.step(&params, &xs, &ys, mode);
+        assert_eq!(big.s_total(), fresh.s_total(), "{mode:?} norms diverged");
+        for (a, b) in big.grads().iter().zip(fresh.grads()) {
+            assert_eq!(a.data(), b.data(), "{mode:?} grads diverged");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// digits_conv trainer scenario
+// ---------------------------------------------------------------------------
+
+fn digits_conv_cfg(name: &str) -> Config {
+    let mut cfg = Config::default();
+    cfg.run_name = name.into();
+    cfg.mode = RunMode::RustPegrad;
+    cfg.model_stack =
+        "input 12x12x1, conv 8 k3 relu, pool 2, conv 16 k3 relu, flatten, dense 10".into();
+    cfg.model_loss = "softmax_ce".into();
+    cfg.model_m = 16;
+    cfg.data = DataKind::Digits;
+    cfg.data_n = 1024;
+    cfg.steps = 150;
+    cfg.eval_every = 0;
+    cfg.sampler = SamplerKind::Importance;
+    cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.05 };
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("pegrad-conv-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+#[test]
+fn digits_conv_scenario_trains() {
+    let _guard = flops_guard();
+    let mut cfg = digits_conv_cfg("it-digits-conv");
+    cfg.steps = 200;
+    cfg.eval_every = 100;
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    let k = 10;
+    let early: f32 =
+        summary.curve[..k].iter().map(|&(_, l)| l).sum::<f32>() / k as f32;
+    let late: f32 = summary.curve[summary.curve.len() - k..]
+        .iter()
+        .map(|&(_, l)| l)
+        .sum::<f32>()
+        / k as f32;
+    assert!(late < early * 0.85, "conv loss did not fall: {early} -> {late}");
+    assert!(
+        summary.eval_accuracy.unwrap() > 0.35,
+        "digits CNN should comfortably beat the 10% chance rate, got {:?}",
+        summary.eval_accuracy
+    );
+}
+
+#[test]
+fn digits_conv_clipped_mode_runs() {
+    let _guard = flops_guard();
+    let mut cfg = digits_conv_cfg("it-digits-conv-dp");
+    cfg.mode = RunMode::RustClipped;
+    cfg.steps = 40;
+    cfg.privacy = Some(PrivacyConfig {
+        clip_c: 2.0,
+        noise_sigma: 0.5,
+        delta: 1e-5,
+    });
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    assert!(summary.final_loss.is_finite());
+    assert!(summary.epsilon.unwrap() > 0.0);
+}
+
+#[test]
+fn digits_conv_checkpoint_resume_continues() {
+    let _guard = flops_guard();
+    let mut cfg = digits_conv_cfg("it-digits-conv-ckpt");
+    cfg.steps = 30;
+    let mut tr = Trainer::new(cfg.clone()).unwrap();
+    tr.run().unwrap();
+    tr.save_checkpoint().unwrap();
+    let ck_path = tr.metrics.dir().join("ckpt-000030.bin");
+    assert!(ck_path.exists());
+
+    let ck = Checkpoint::load(&ck_path).unwrap();
+    assert_eq!(ck.step, 30);
+    // conv weight shapes round-trip through the checkpoint
+    assert_eq!(ck.params[0].dims(), &[10, 8]);
+    assert_eq!(ck.params[1].dims(), &[73, 16]);
+    assert_eq!(ck.params[2].dims(), &[145, 10]);
+    let mut cfg2 = cfg;
+    cfg2.run_name = "it-digits-conv-resumed".into();
+    cfg2.steps = 10;
+    let mut tr2 = Trainer::new(cfg2).unwrap();
+    tr2.restore(ck).unwrap();
+    let summary = tr2.run().unwrap();
+    assert_eq!(summary.curve.first().unwrap().0, 30);
+    assert_eq!(summary.curve.last().unwrap().0, 39);
+}
+
+/// Telemetry rides conv stacks: `pegrad monitor`-style run over the
+/// digits CNN produces the standard report with one stream per WEIGHTED
+/// layer.
+#[test]
+fn digits_conv_emits_telemetry() {
+    let _guard = flops_guard();
+    let mut cfg = digits_conv_cfg("it-digits-conv-telem");
+    cfg.steps = 40;
+    cfg.telemetry.enabled = true;
+    cfg.telemetry.warmup_steps = 5;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let summary = tr.run().unwrap();
+    let path = summary.telemetry_path.expect("telemetry path reported");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = pegrad::util::Json::parse(&text).unwrap();
+    assert_eq!(j.get("steps").unwrap().as_usize(), Some(40));
+    // 3 weighted layers (conv, conv, dense) — pool/flatten emit nothing
+    assert_eq!(j.get("layers").unwrap().as_arr().unwrap().len(), 3);
+    assert_eq!(
+        j.get("total")
+            .unwrap()
+            .get("histogram")
+            .unwrap()
+            .get("total")
+            .unwrap()
+            .as_usize(),
+        Some(40 * 16)
+    );
+}

@@ -264,6 +264,58 @@ fn cli_monitor_emits_report() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// `pegrad monitor --baseline`: two identical runs produce a no-drift
+/// summary; the drift file lands in the run dir (satellite: cross-run
+/// telemetry diffing).
+#[test]
+fn cli_monitor_baseline_diff_detects_no_drift_on_identical_runs() {
+    let dir =
+        std::env::temp_dir().join(format!("pegrad-telem-base-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let first = dir.join("first.json");
+    let run = |name: &str, extra: &[String]| {
+        let mut argv = vec![
+            "monitor".to_string(),
+            "--steps".into(),
+            "20".into(),
+            "--set".into(),
+            format!("out_dir={}", dir.to_string_lossy()),
+            "--set".into(),
+            format!("run_name={name}"),
+            "--set".into(),
+            "seed=3".into(),
+        ];
+        argv.extend(extra.iter().cloned());
+        pegrad::cli::commands::run(argv).unwrap();
+    };
+    run(
+        "base",
+        &["--out".into(), first.to_string_lossy().into_owned()],
+    );
+    run(
+        "current",
+        &["--baseline".into(), first.to_string_lossy().into_owned()],
+    );
+    let drift = load_report(&dir.join("current").join("telemetry-drift.json"));
+    assert_eq!(drift.get("drifted").unwrap().as_bool(), Some(false));
+    assert_eq!(drift.get("drift_count").unwrap().as_usize(), Some(0));
+    assert_eq!(
+        drift.get("layer_count_matches").unwrap().as_bool(),
+        Some(true)
+    );
+    // a bogus baseline path fails fast, before training
+    let err = pegrad::cli::commands::run(vec![
+        "monitor".into(),
+        "--baseline".into(),
+        dir.join("nope.json").to_string_lossy().into_owned(),
+    ])
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("nope.json"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Artifact modes must refuse `pegrad monitor` with a readable error.
 #[test]
 fn cli_monitor_rejects_artifact_modes() {
