@@ -6,3 +6,15 @@ pub mod report;
 
 pub use harness::{bench_fn, BenchResult, BenchSpec};
 pub use report::Table;
+
+/// Absolute path under the WORKSPACE root (one level above this
+/// package). Bench artifacts (`BENCH_*.json`, `bench_results/`) belong
+/// there regardless of the invoking working directory — `cargo bench`
+/// runs bench binaries with cwd = the package root (`rust/`), while the
+/// CI perf gate and the artifact upload read from the repo root.
+pub fn workspace_path(rel: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."))
+        .join(rel)
+}

@@ -499,6 +499,31 @@ mod tests {
     }
 
     #[test]
+    fn parse_strided_model_stack() {
+        // the PR-4 DSL extensions round-trip through config validation:
+        // strided conv (sN), padded conv (pN), average pooling
+        let cfg = Config::from_toml(
+            r#"
+            mode = "rust_pegrad"
+
+            [model]
+            stack = "input 12x12x1, conv 8 k3 p1 relu, avgpool 2, conv 16 k3 s2 relu, flatten, dense 10"
+            m = 32
+            "#,
+        )
+        .unwrap();
+        let layers = crate::nn::layers::StackSpec::parse_layers(&cfg.model_stack).unwrap();
+        assert_eq!(layers.len(), 5);
+        // bad stride rejected at validation time, like any stack error
+        let err = Config::from_toml(
+            "mode = \"rust_pegrad\"\n[model]\nstack = \"input 12x12x1, conv 8 k3 s0 relu, flatten, dense 10\"",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("stride"), "{err}");
+    }
+
+    #[test]
     fn parse_telemetry_section() {
         let cfg = Config::from_toml(
             r#"

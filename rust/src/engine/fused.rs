@@ -7,16 +7,18 @@
 //! * forward: each [`crate::nn::layers::Layer`] writes its
 //!   pre-activation output into the engine's ping-pong buffer and
 //!   retains its own input-side state (dense: augmented rows + `Haug`
-//!   norms; conv: the im2col unfold); the engine applies `phi` in place
-//!   and stores `phi'(z)` so the backward never re-evaluates
-//!   activations;
+//!   norms; conv: the raw input — the implicit-GEMM kernels gather
+//!   patches from it on the fly, so no im2col unfold is ever
+//!   materialized); the engine applies `phi` in place and stores
+//!   `phi'(z)` so the backward never re-evaluates activations;
 //! * backward: layers are walked top-down; each weighted layer emits its
 //!   per-example squared norms `s_j^{(l)}` **during** the traversal
 //!   (dense: the §4 factorization fused into the backprop band kernel;
-//!   conv: `||U_j^T V_j||²` from a band-local scratch, per Rochette et
-//!   al. — see `nn::layers`), and the delta is dropped as soon as the
-//!   previous layer's is formed — O(1) layers of deltas live in Mean
-//!   mode;
+//!   conv: `||U_j^T V_j||²` from a band-local scratch — or the
+//!   size-dispatched Gram form `⟨U_jU_jᵀ, V_jV_jᵀ⟩` on wide layers in
+//!   the §6 modes, per Rochette et al. — see `nn::layers`), and the
+//!   delta is dropped as soon as the previous layer's is formed — O(1)
+//!   layers of deltas live in Mean mode;
 //! * gradients: Mean mode folds the per-example coefficients into the
 //!   same kernels that compute the norms
 //!   ([`crate::tensor::ops::matmul_tn_coef_acc_slices`] for dense,
@@ -37,7 +39,7 @@
 //! operates on the leading `m` rows, so a shrunken batch is bitwise
 //! identical to a fresh engine built for that size.
 
-use crate::nn::layers::{Layer, StackSpec};
+use crate::nn::layers::{ConvImpl, Layer, StackSpec};
 use crate::nn::loss::Targets;
 use crate::nn::ModelSpec;
 use crate::pegrad::PerExampleNorms;
@@ -94,10 +96,22 @@ impl FusedEngine {
         FusedEngine::from_stack(StackSpec::from_dense(&spec))
     }
 
-    /// Build the engine for an arbitrary layer stack.
+    /// Build the engine for an arbitrary layer stack (conv layers on the
+    /// default fused implicit-GEMM kernels).
     pub fn from_stack(stack: StackSpec) -> FusedEngine {
-        let layers: Vec<Box<dyn Layer>> =
-            stack.layers.iter().map(|l| l.build(stack.m)).collect();
+        FusedEngine::from_stack_conv(stack, ConvImpl::Implicit)
+    }
+
+    /// [`FusedEngine::from_stack`] with an explicit conv implementation.
+    /// `ConvImpl::Im2col` rebuilds the PR-3 materialized-unfold layers —
+    /// the baseline `benches/e10_conv.rs` pits the implicit path against
+    /// (same arithmetic bitwise, ~K× more live memory per conv layer).
+    pub fn from_stack_conv(stack: StackSpec, imp: ConvImpl) -> FusedEngine {
+        let layers: Vec<Box<dyn Layer>> = stack
+            .layers
+            .iter()
+            .map(|l| l.build_conv(stack.m, imp))
+            .collect();
         let param_idx = stack.param_layers();
         let ws = Workspace::new(&stack);
         FusedEngine {

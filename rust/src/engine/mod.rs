@@ -8,7 +8,8 @@
 //!   network (dense configs map onto dense-only stacks via
 //!   `StackSpec::from_dense`, so every `ModelSpec` runs unchanged); each
 //!   layer retains its own input-side state (dense: `Haug^(i-1)` with the
-//!   bias column folded; conv: the im2col unfold) in buffers allocated
+//!   bias column folded; conv: the raw input — patches are gathered
+//!   implicitly inside the kernels, never unfolded) in buffers allocated
 //!   once at engine construction.
 //! * **§4 (factored norms)** — dense layers stream
 //!   `s_j^(i) = ||Zbar_j^(i)||²·||Haug_j^(i-1)||²`: the `Haug` factor is

@@ -7,9 +7,13 @@
 //! every kernel operates on the leading `m` rows. This is the memory
 //! half of the §5 argument: the trick's extra state is O(m·n) scalars,
 //! not O(m·params) materialized per-example gradients. (Layer-local
-//! state — augmented/unfolded inputs, pooling argmaxes, §6 retention —
-//! lives inside each [`crate::nn::layers::Layer`]; the engine sums it
-//! into [`crate::engine::FusedEngine::live_bytes`].)
+//! state — augmented dense rows, raw conv inputs, pooling argmaxes, §6
+//! retention — lives inside each [`crate::nn::layers::Layer`]; the
+//! engine sums it into [`crate::engine::FusedEngine::live_bytes`].
+//! Since the implicit-GEMM rework there is no im2col unfold anywhere in
+//! the workspace or the layers: a conv layer's per-batch state is its
+//! `[m, in_len]` input, ~K× smaller than the `[m, L·(K+1)]` unfold the
+//! PR-3 path kept alive.)
 
 use crate::nn::layers::StackSpec;
 use crate::tensor::ops::Activation;

@@ -1,80 +1,194 @@
-//! The im2col convolution layer with Rochette-style streamed
-//! per-example gradient norms (see the module docs in
-//! [`super`] for the derivation).
+//! The convolution layer with Rochette-style streamed per-example
+//! gradient norms (see the module docs in [`super`] for the derivation),
+//! running on a **fused implicit-GEMM** kernel by default.
 //!
-//! Forward: `im2col` unfolds the NHWC input into `U` `[m·L, K+1]` (bias
-//! column folded), then one batched matmul `Z = U W` gives all output
-//! positions. Backward, per example j and entirely inside one band-local
-//! scratch:
+//! ## Implicit GEMM (the memory argument)
 //!
-//! * `G_j = U_j^T V_j` (the example's weight gradient) is formed in a
+//! The PR-3 layer materialized the full im2col unfold `U` —
+//! `m · L · (K+1)` floats (`L` output positions, `K = k²·c_in`) — which
+//! dominates live memory at large batch: the unfold is `~K×` larger than
+//! the input it was gathered from. The implicit path never builds it:
+//! every kernel (forward matmul, backward `G_j = U_jᵀV_j`, §6 replay)
+//! gathers one `[K+1]` patch row at a time ([`gather_patch`]) inside its
+//! band-local loop, reading straight from the retained raw input
+//! (`[m, in_len]` — the only per-batch state the layer keeps). Patch
+//! values are bitwise identical to the unfold, and the forward
+//! accumulates each output row in [`ops`]'s block order, so the two
+//! implementations produce bitwise-equal results; the im2col variant
+//! ([`ConvImpl::Im2col`]) is kept as the baseline the e10 bench and the
+//! cross-implementation tests compare against.
+//!
+//! ## Backward, per example j and entirely inside one band-local scratch
+//!
+//! * `G_j = U_jᵀV_j` (the example's weight gradient) is formed in a
 //!   `[K+1, c_out]` scratch, its squared Frobenius norm streamed out as
 //!   `s_j`, and — in Mean mode — `coef_j·G_j` folded into a per-band
 //!   gradient partial. Per-example gradients are never materialized
 //!   (`O(K·c_out)` scratch per worker vs the naive `O(m·K·c_out)`).
+//! * in the §6 retention modes the layer **size-dispatches** the norm:
+//!   when `L² < K·c_out` the Gram form `s_j = ⟨U_jU_jᵀ, V_jV_jᵀ⟩` is
+//!   cheaper than forming `G_j` at all (see [`super`] for the identity),
+//!   and the retention backward computes it from two `[L, L]` Gram
+//!   accumulations instead of the `[K+1, c_out]` product. Mean mode
+//!   always takes the `G_j` form — the same scratch IS the gradient
+//!   accumulation there, so the Gram form would save nothing.
 //! * the input gradient re-uses the same traversal: for every position,
-//!   `dU = V W^T` rows are scattered back onto the input pixels
-//!   (col2im), then multiplied by the previous layer's `phi'`.
+//!   `dU = V Wᵀ` rows are scattered back onto the input pixels
+//!   ([`scatter_patch_add`]), then multiplied by the previous layer's
+//!   `phi'`.
+//!
+//! ## §6 replay and the degenerate-coefficient shortcut
+//!
+//! Clip/normalize modes retain `V_j` and replay the accumulation
+//! `grad += Σ_j coef_j·G_j` once the coefficients are known. When the
+//! `G_j` form ran (no Gram dispatch), the retention backward also banks
+//! the **unweighted** sum `Σ_j G_j` for free (one extra AXPY per
+//! example over scratch that is already hot); if the coefficient vector
+//! turns out degenerate — all entries equal, e.g. all `1` when no
+//! example clips, or all `1/m` under mean-clipping — the replay matmul
+//! is skipped entirely and the banked sum is rescaled in `O(K·c_out)`.
 //!
 //! Bands split over examples on the persistent worker pool; every
 //! example's outputs are disjoint, so banding is bitwise identical to
 //! the serial loop.
 
-use crate::tensor::conv::ConvGeom;
+use crate::tensor::conv::{self, gather_patch, scatter_patch_add, ConvGeom};
 use crate::tensor::{ops, Tensor};
 use crate::util::threadpool;
 
 use super::{Layer, LayerSpec};
 
-/// Below this many G-matmul multiply-adds the backward stays
+/// Below this many G-matmul multiply-adds the conv kernels stay
 /// single-threaded.
 const CONV_PAR_THRESHOLD: usize = 64 * 64 * 16;
+
+/// Which convolution kernel implementation a [`ConvLayer`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvImpl {
+    /// Fused implicit GEMM (default): patches are gathered inside the
+    /// band kernels; live state is the `[m, in_len]` raw input.
+    Implicit,
+    /// Materialized im2col baseline (PR 3): the `[m, L·(K+1)]` unfold is
+    /// built by the forward and re-read by every other pass. Kept for
+    /// the e10 bench comparison and as a cross-implementation oracle.
+    Im2col,
+}
+
+/// Where a backward/replay band reads its patch rows from.
+#[derive(Clone, Copy)]
+enum PatchSrc<'a> {
+    /// The materialized `[m, L·(K+1)]` im2col unfold.
+    Cols(&'a [f32]),
+    /// Raw NHWC inputs `[m, in_len]`; rows gathered on the fly.
+    Raw(&'a [f32]),
+}
+
+impl<'a> PatchSrc<'a> {
+    /// The `[K+1]` patch row of example `j`, position `li` — either a
+    /// slice of the unfold or a fresh gather into `scratch`.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn row<'b>(
+        &self,
+        geom: &ConvGeom,
+        l: usize,
+        kp1: usize,
+        in_len: usize,
+        j: usize,
+        li: usize,
+        scratch: &'b mut [f32],
+    ) -> &'b [f32]
+    where
+        'a: 'b,
+    {
+        match *self {
+            PatchSrc::Cols(cols) => &cols[(j * l + li) * kp1..(j * l + li + 1) * kp1],
+            PatchSrc::Raw(x) => {
+                gather_patch(geom, &x[j * in_len..(j + 1) * in_len], li, scratch);
+                scratch
+            }
+        }
+    }
+}
 
 pub struct ConvLayer {
     spec: LayerSpec,
     geom: ConvGeom,
     out_ch: usize,
     m_max: usize,
+    imp: ConvImpl,
     /// L = number of output positions.
     l: usize,
     /// K+1 = patch length + folded bias column.
     kp1: usize,
-    /// Unfolded inputs `[m_max, L·(K+1)]`, written by forward.
+    /// Implicit path: the retained raw NHWC input `[m_max, in_len]`
+    /// (the backward and §6 replay re-gather patches from it).
+    xin: Vec<f32>,
+    /// Im2col path: unfolded inputs `[m_max, L·(K+1)]`, written by
+    /// forward.
     ucols: Vec<f32>,
     /// Per-band `[K+1, c_out]` G scratch (one block per worker band).
     gbuf: Vec<f32>,
-    /// Per-band gradient partials `Σ_j coef_j·G_j` (Mean mode).
+    /// Per-band gradient partials `Σ_j coef_j·G_j`.
     gpartial: Vec<f32>,
     /// Per-band `dU` row scratch `[K]` for the col2im scatter.
     dubuf: Vec<f32>,
-    /// Retained deltas `[m_max, L·c_out]` + expanded coefficient rows
-    /// for the §6 deferred accumulation (lazily allocated).
+    /// Per-band `[K+1]` patch-row scratch for the implicit gathers.
+    pbuf: Vec<f32>,
+    /// Per-band Gram scratch `[L·(K+1) + L·L]` (`U_j` staging + `V_jV_jᵀ`);
+    /// allocated with retention iff the Gram form dispatches.
+    grambuf: Vec<f32>,
+    /// Unweighted `Σ_j G_j` banked by the G-form retention backward —
+    /// backs the degenerate-coefficient replay shortcut.
+    plain_sum: Vec<f32>,
+    plain_valid: bool,
+    /// Retained deltas `[m_max, L·c_out]` for the §6 deferred
+    /// accumulation (lazily allocated).
     retained: Vec<f32>,
-    coef_rows: Vec<f32>,
 }
 
 impl ConvLayer {
     pub fn new(spec: LayerSpec, m_max: usize) -> ConvLayer {
+        ConvLayer::with_impl(spec, m_max, ConvImpl::Implicit)
+    }
+
+    pub fn with_impl(spec: LayerSpec, m_max: usize, imp: ConvImpl) -> ConvLayer {
         let LayerSpec::Conv2d { geom, out_ch, .. } = spec else {
             panic!("ConvLayer::new needs a Conv2d spec, got {}", spec.name());
         };
         let l = geom.positions();
         let kp1 = geom.patch_len() + 1;
         let nb = threadpool::bands();
+        let (xin, ucols) = match imp {
+            ConvImpl::Implicit => (vec![0.0; m_max * geom.in_len()], Vec::new()),
+            ConvImpl::Im2col => (Vec::new(), vec![0.0; m_max * l * kp1]),
+        };
         ConvLayer {
             spec,
             geom,
             out_ch,
             m_max,
+            imp,
             l,
             kp1,
-            ucols: vec![0.0; m_max * l * kp1],
+            xin,
+            ucols,
             gbuf: vec![0.0; nb * kp1 * out_ch],
             gpartial: vec![0.0; nb * kp1 * out_ch],
             dubuf: vec![0.0; nb * (kp1 - 1)],
+            pbuf: vec![0.0; nb * kp1],
+            grambuf: Vec::new(),
+            plain_sum: Vec::new(),
+            plain_valid: false,
             retained: Vec::new(),
-            coef_rows: Vec::new(),
         }
+    }
+
+    /// The size dispatch (ISSUE 4): the Gram form `⟨U_jU_jᵀ, V_jV_jᵀ⟩`
+    /// replaces `‖U_jᵀV_j‖²` in the §6 retention backward when
+    /// `L² < K·c_out`.
+    pub fn uses_gram(&self) -> bool {
+        self.l * self.l < self.geom.patch_len() * self.out_ch
     }
 
     fn bands_for(&self, m: usize) -> usize {
@@ -82,6 +196,13 @@ impl ConvLayer {
             1
         } else {
             threadpool::bands().min(m)
+        }
+    }
+
+    fn patch_src<'a>(xin: &'a [f32], ucols: &'a [f32], imp: ConvImpl) -> PatchSrc<'a> {
+        match imp {
+            ConvImpl::Implicit => PatchSrc::Raw(xin),
+            ConvImpl::Im2col => PatchSrc::Cols(ucols),
         }
     }
 }
@@ -95,16 +216,46 @@ impl Layer for ConvLayer {
         let w = w.expect("conv layer is weighted");
         debug_assert!(m <= self.m_max);
         let (l, kp1, co) = (self.l, self.kp1, self.out_ch);
-        crate::tensor::conv::im2col(&self.geom, &x[..m * self.geom.in_len()],
-            &mut self.ucols[..m * l * kp1], m);
-        ops::matmul_into_slices(
-            &self.ucols[..m * l * kp1],
-            w.data(),
-            &mut z[..m * l * co],
-            m * l,
-            kp1,
-            co,
-        );
+        let in_len = self.geom.in_len();
+        match self.imp {
+            ConvImpl::Im2col => {
+                conv::im2col(
+                    &self.geom,
+                    &x[..m * in_len],
+                    &mut self.ucols[..m * l * kp1],
+                    m,
+                );
+                ops::matmul_into_slices(
+                    &self.ucols[..m * l * kp1],
+                    w.data(),
+                    &mut z[..m * l * co],
+                    m * l,
+                    kp1,
+                    co,
+                );
+            }
+            ConvImpl::Implicit => {
+                self.xin[..m * in_len].copy_from_slice(&x[..m * in_len]);
+                let nb = self.bands_for(m);
+                let rows_per = m.div_ceil(nb);
+                let nb = m.div_ceil(rows_per);
+                let geom = self.geom;
+                let wdat = w.data();
+                let xin = &self.xin[..m * in_len];
+                let jobs: Vec<threadpool::ScopedJob> = z[..m * l * co]
+                    .chunks_mut(rows_per * l * co)
+                    .zip(self.pbuf[..nb * kp1].chunks_mut(kp1))
+                    .enumerate()
+                    .map(|(bi, (chunk, pb))| {
+                        let j0 = bi * rows_per;
+                        Box::new(move || {
+                            conv_fwd_band(&geom, co, wdat, xin, chunk, j0, pb);
+                        }) as threadpool::ScopedJob
+                    })
+                    .collect();
+                threadpool::scope(jobs);
+            }
+        }
         crate::nn::count_flops(2 * (m * l) as u64 * kp1 as u64 * co as u64);
     }
 
@@ -122,7 +273,9 @@ impl Layer for ConvLayer {
     ) {
         let w = w.expect("conv layer is weighted");
         let (l, kp1, co) = (self.l, self.kp1, self.out_ch);
-        let in_len = self.geom.in_len();
+        let geom = self.geom;
+        let imp = self.imp;
+        let in_len = geom.in_len();
         debug_assert_eq!(delta.len(), m * l * co);
         let fused_accum = match (&coef, &grad) {
             (Some(_), Some(_)) => true,
@@ -136,10 +289,18 @@ impl Layer for ConvLayer {
             }
             _ => panic!("conv backward: coef and grad must be both Some or both None"),
         };
-        // G_j = U_j^T V_j per example (the norm stream — and in Mean mode
-        // also the gradient accumulation), plus the col2im input gradient.
-        crate::nn::count_flops(2 * (m * l) as u64 * kp1 as u64 * co as u64);
+        // size dispatch: the Gram form only ever pays off when the norm
+        // is the sole product of the pass (retention mode — Mean needs
+        // G_j for the accumulation anyway)
+        let gram = !fused_accum && s.is_some() && self.uses_gram();
         let need_dx = dx.is_some();
+        // analytic flop counts: G form = one gradient matmul; Gram form
+        // = L² inner products over both factors; dx = one more matmul
+        if gram {
+            crate::nn::count_flops((m * l * l) as u64 * (kp1 + co) as u64);
+        } else {
+            crate::nn::count_flops(2 * (m * l) as u64 * kp1 as u64 * co as u64);
+        }
         if need_dx {
             crate::nn::count_flops(2 * (m * l) as u64 * kp1 as u64 * co as u64);
         }
@@ -151,8 +312,21 @@ impl Layer for ConvLayer {
             *v = 0.0;
         }
         {
-            let geom = self.geom;
-            let ucols = &self.ucols[..m * l * kp1];
+            let ConvLayer {
+                xin,
+                ucols,
+                gbuf,
+                gpartial,
+                dubuf,
+                pbuf,
+                grambuf,
+                ..
+            } = self;
+            let src = ConvLayer::patch_src(
+                &xin[..xin.len().min(m * in_len)],
+                &ucols[..ucols.len().min(m * l * kp1)],
+                imp,
+            );
             let wdat = w.data();
             let mut s_chunks: Vec<Option<&mut [f32]>> = match s {
                 Some(sl) => sl[..m].chunks_mut(rows_per).map(Some).collect(),
@@ -162,27 +336,46 @@ impl Layer for ConvLayer {
                 Some(d) => d[..m * in_len].chunks_mut(rows_per * in_len).map(Some).collect(),
                 None => (0..nb).map(|_| None).collect(),
             };
-            let g_chunks: Vec<&mut [f32]> = self.gbuf[..nb * gsz].chunks_mut(gsz).collect();
-            let p_chunks: Vec<&mut [f32]> =
-                self.gpartial[..nb * gsz].chunks_mut(gsz).collect();
-            let du_chunks: Vec<&mut [f32]> =
-                self.dubuf[..nb * (kp1 - 1)].chunks_mut(kp1 - 1).collect();
+            let du_chunks = dubuf[..nb * (kp1 - 1)].chunks_mut(kp1 - 1);
             let mut jobs: Vec<threadpool::ScopedJob> = Vec::with_capacity(nb);
-            for (bi, (((g_b, p_b), du_b), (s_b, dx_b))) in g_chunks
-                .into_iter()
-                .zip(p_chunks)
-                .zip(du_chunks)
-                .zip(s_chunks.drain(..).zip(dx_chunks.drain(..)))
-                .enumerate()
-            {
-                let j0 = bi * rows_per;
-                let j1 = (j0 + rows_per).min(m);
-                jobs.push(Box::new(move || {
-                    conv_bwd_band(
-                        &geom, co, ucols, delta, wdat, dphi_prev, coef, j0, j1, s_b, dx_b,
-                        need_dx, g_b, p_b, du_b,
-                    );
-                }) as threadpool::ScopedJob);
+            if gram {
+                let gram_sz = l * kp1 + l * l;
+                for (bi, ((gr_b, du_b), (s_b, dx_b))) in grambuf[..nb * gram_sz]
+                    .chunks_mut(gram_sz)
+                    .zip(du_chunks)
+                    .zip(s_chunks.drain(..).zip(dx_chunks.drain(..)))
+                    .enumerate()
+                {
+                    let j0 = bi * rows_per;
+                    let j1 = (j0 + rows_per).min(m);
+                    jobs.push(Box::new(move || {
+                        conv_bwd_band_gram(
+                            &geom, co, src, delta, wdat, dphi_prev, j0, j1, s_b, dx_b,
+                            need_dx, gr_b, du_b,
+                        );
+                    }) as threadpool::ScopedJob);
+                }
+            } else {
+                // retention without Gram banks the unweighted Σ_j G_j for
+                // the degenerate-coefficient replay shortcut
+                let accum_unit = !fused_accum;
+                for (bi, ((((g_b, p_b), du_b), pr_b), (s_b, dx_b))) in gbuf[..nb * gsz]
+                    .chunks_mut(gsz)
+                    .zip(gpartial[..nb * gsz].chunks_mut(gsz))
+                    .zip(du_chunks)
+                    .zip(pbuf[..nb * kp1].chunks_mut(kp1))
+                    .zip(s_chunks.drain(..).zip(dx_chunks.drain(..)))
+                    .enumerate()
+                {
+                    let j0 = bi * rows_per;
+                    let j1 = (j0 + rows_per).min(m);
+                    jobs.push(Box::new(move || {
+                        conv_bwd_band(
+                            &geom, co, src, delta, wdat, dphi_prev, coef, accum_unit, j0,
+                            j1, s_b, dx_b, need_dx, g_b, p_b, du_b, pr_b,
+                        );
+                    }) as threadpool::ScopedJob);
+                }
             }
             threadpool::scope(jobs);
         }
@@ -194,68 +387,209 @@ impl Layer for ConvLayer {
                     *gv += pv;
                 }
             }
+        } else if !gram {
+            for v in self.plain_sum.iter_mut() {
+                *v = 0.0;
+            }
+            for b in 0..nb {
+                for (pv, &gp) in self
+                    .plain_sum
+                    .iter_mut()
+                    .zip(&self.gpartial[b * gsz..(b + 1) * gsz])
+                {
+                    *pv += gp;
+                }
+            }
         }
+        self.plain_valid = !fused_accum && !gram;
     }
 
     fn accumulate(&mut self, coef: &[f32], grad: &mut Tensor, m: usize) {
         let (l, kp1, co) = (self.l, self.kp1, self.out_ch);
-        // §6 replay: one coefficient-weighted matmul over the retained
-        // deltas, coefficients expanded to all L rows of each example.
-        for (j, &c) in coef[..m].iter().enumerate() {
-            for v in self.coef_rows[j * l..(j + 1) * l].iter_mut() {
-                *v = c;
+        let gsz = kp1 * co;
+        // §6 shortcut: a degenerate (all-equal) coefficient vector — all
+        // 1s when nothing clipped, all 1/m under mean-clipping — makes
+        // the replay a rescale of the banked unweighted sum.
+        if self.plain_valid && m >= 1 {
+            let c0 = coef[0];
+            if coef[..m].iter().all(|&c| c == c0) {
+                for (gv, &pv) in grad.data_mut().iter_mut().zip(&self.plain_sum) {
+                    *gv += c0 * pv;
+                }
+                crate::nn::count_flops(2 * gsz as u64);
+                return;
             }
         }
-        ops::matmul_tn_coef_acc_slices(
-            &self.ucols[..m * l * kp1],
-            &self.retained[..m * l * co],
-            Some(&self.coef_rows[..m * l]),
-            grad.data_mut(),
-            m * l,
-            kp1,
-            co,
-        );
+        // replay: one coefficient-weighted gradient matmul over the
+        // retained deltas, patch rows gathered/sliced band-locally
+        let nb = self.bands_for(m);
+        let rows_per = m.div_ceil(nb);
+        let nb = m.div_ceil(rows_per);
+        for v in self.gpartial[..nb * gsz].iter_mut() {
+            *v = 0.0;
+        }
+        let geom = self.geom;
+        let imp = self.imp;
+        let in_len = geom.in_len();
+        {
+            let ConvLayer {
+                xin,
+                ucols,
+                gpartial,
+                pbuf,
+                retained,
+                ..
+            } = self;
+            let src = ConvLayer::patch_src(
+                &xin[..xin.len().min(m * in_len)],
+                &ucols[..ucols.len().min(m * l * kp1)],
+                imp,
+            );
+            let ret = &retained[..m * l * co];
+            let jobs: Vec<threadpool::ScopedJob> = gpartial[..nb * gsz]
+                .chunks_mut(gsz)
+                .zip(pbuf[..nb * kp1].chunks_mut(kp1))
+                .enumerate()
+                .map(|(bi, (p_b, pr_b))| {
+                    let j0 = bi * rows_per;
+                    let j1 = (j0 + rows_per).min(m);
+                    Box::new(move || {
+                        conv_replay_band(&geom, co, src, ret, coef, j0, j1, p_b, pr_b);
+                    }) as threadpool::ScopedJob
+                })
+                .collect();
+            threadpool::scope(jobs);
+        }
+        let g = grad.data_mut();
+        for b in 0..nb {
+            for (gv, &pv) in g.iter_mut().zip(&self.gpartial[b * gsz..(b + 1) * gsz]) {
+                *gv += pv;
+            }
+        }
         crate::nn::count_flops(2 * (m * l) as u64 * kp1 as u64 * co as u64);
     }
 
     fn ensure_retention(&mut self) {
         if self.retained.is_empty() {
             self.retained = vec![0.0; self.m_max * self.l * self.out_ch];
-            self.coef_rows = vec![0.0; self.m_max * self.l];
+            self.plain_sum = vec![0.0; self.kp1 * self.out_ch];
+            if self.uses_gram() {
+                let nb = threadpool::bands();
+                self.grambuf = vec![0.0; nb * (self.l * self.kp1 + self.l * self.l)];
+            }
         }
     }
 
     fn state_bytes(&self) -> usize {
-        4 * (self.ucols.len()
+        4 * (self.xin.len()
+            + self.ucols.len()
             + self.gbuf.len()
             + self.gpartial.len()
             + self.dubuf.len()
-            + self.retained.len()
-            + self.coef_rows.len())
+            + self.pbuf.len()
+            + self.grambuf.len()
+            + self.plain_sum.len()
+            + self.retained.len())
     }
 }
 
-/// One example band of the conv backward. For each example j in
+/// One example band of the implicit-GEMM forward: for each (example,
+/// position), gather the `[K+1]` patch row and accumulate `z = u W` in
+/// the same [`ops`] block order as the materialized matmul — bitwise
+/// identical to im2col + [`ops::matmul_into_slices`].
+fn conv_fwd_band(
+    geom: &ConvGeom,
+    co: usize,
+    w: &[f32],
+    x: &[f32],
+    z: &mut [f32],
+    j0: usize,
+    pb: &mut [f32],
+) {
+    let l = geom.positions();
+    let kp1 = geom.patch_len() + 1;
+    let in_len = geom.in_len();
+    for (dj, zj) in z.chunks_mut(l * co).enumerate() {
+        let xj = &x[(j0 + dj) * in_len..(j0 + dj + 1) * in_len];
+        for (li, zrow) in zj.chunks_mut(co).enumerate() {
+            gather_patch(geom, xj, li, pb);
+            for v in zrow.iter_mut() {
+                *v = 0.0;
+            }
+            for kb in (0..kp1).step_by(ops::BLOCK) {
+                let k_end = (kb + ops::BLOCK).min(kp1);
+                for (p, &f) in pb[kb..k_end].iter().enumerate() {
+                    if f == 0.0 {
+                        continue; // relu sparsity, same win as matmul_band
+                    }
+                    let wrow = &w[(kb + p) * co..(kb + p + 1) * co];
+                    for (zv, &wv) in zrow.iter_mut().zip(wrow) {
+                        *zv += f * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Input gradient of one example: per position, `dU row = V row · Wᵀ`
+/// (bias column skipped), scatter-added onto `dx`, then the previous
+/// layer's `phi'` applied.
+fn conv_dx_example(
+    geom: &ConvGeom,
+    co: usize,
+    v_j: &[f32],
+    w: &[f32],
+    dub: &mut [f32],
+    dx_j: &mut [f32],
+    dphi_row: Option<&[f32]>,
+) {
+    let l = geom.positions();
+    let kc = geom.patch_len();
+    for v in dx_j.iter_mut() {
+        *v = 0.0;
+    }
+    for li in 0..l {
+        let vrow = &v_j[li * co..(li + 1) * co];
+        for p in 0..kc {
+            let wrow = &w[p * co..(p + 1) * co];
+            let mut dot = 0f32;
+            for (&vv, &wv) in vrow.iter().zip(wrow) {
+                dot += vv * wv;
+            }
+            dub[p] = dot;
+        }
+        scatter_patch_add(geom, dub, li, dx_j);
+    }
+    if let Some(dphi) = dphi_row {
+        for (d, &p) in dx_j.iter_mut().zip(dphi) {
+            *d *= p;
+        }
+    }
+}
+
+/// One example band of the G-form conv backward. For each example j in
 /// `[j0, j1)`:
 ///
-/// 1. `G_j = U_j^T V_j` into the band-local `gbuf` (tn accumulation over
-///    positions — never materialized per example beyond this scratch);
+/// 1. `G_j = U_jᵀV_j` into the band-local `gbuf` (tn accumulation over
+///    positions, patch rows gathered or sliced via `src` — never
+///    materialized per example beyond this scratch);
 /// 2. `s[j] = ||G_j||_F²` (f64 accumulation, row-major — the same order
 ///    `ops::sq_sum` walks a materialized gradient, so the streamed value
 ///    matches the materialized oracle bitwise);
-/// 3. Mean mode: `partial += coef_j · G_j`;
-/// 4. input gradient: per position, `dU row = V row · W^T` (bias column
-///    skipped) scattered col2im-style onto `dx`, then the previous
-///    layer's `phi'` applied.
+/// 3. Mean mode: `partial += coef_j · G_j`; retention (`accum_unit`):
+///    `partial += G_j` (the degenerate-replay bank);
+/// 4. input gradient via [`conv_dx_example`].
 #[allow(clippy::too_many_arguments)]
 fn conv_bwd_band(
     geom: &ConvGeom,
     co: usize,
-    ucols: &[f32],
+    src: PatchSrc<'_>,
     delta: &[f32],
     w: &[f32],
     dphi: Option<&[f32]>,
     coef: Option<&[f32]>,
+    accum_unit: bool,
     j0: usize,
     j1: usize,
     mut s: Option<&mut [f32]>,
@@ -264,22 +598,19 @@ fn conv_bwd_band(
     gbuf: &mut [f32],
     partial: &mut [f32],
     dub: &mut [f32],
+    prow: &mut [f32],
 ) {
     let l = geom.positions();
     let kp1 = geom.patch_len() + 1;
-    let kc = geom.patch_len();
     let in_len = geom.in_len();
-    let (out_w, k, ch) = (geom.out_w(), geom.k, geom.in_ch);
-    let row_stride = geom.in_w * ch;
     for j in j0..j1 {
-        let u_j = &ucols[j * l * kp1..(j + 1) * l * kp1];
         let v_j = &delta[j * l * co..(j + 1) * l * co];
         // ---- G_j = U_j^T V_j into scratch --------------------------------
         for v in gbuf.iter_mut() {
             *v = 0.0;
         }
         for li in 0..l {
-            let urow = &u_j[li * kp1..(li + 1) * kp1];
+            let urow = src.row(geom, l, kp1, in_len, j, li, prow);
             let vrow = &v_j[li * co..(li + 1) * co];
             for (p, &f) in urow.iter().enumerate() {
                 if f == 0.0 {
@@ -291,7 +622,7 @@ fn conv_bwd_band(
                 }
             }
         }
-        // ---- streamed norm + Mean-mode accumulation ----------------------
+        // ---- streamed norm + accumulation --------------------------------
         if let Some(s) = s.as_deref_mut() {
             let mut acc = 0f64;
             for &g in gbuf.iter() {
@@ -306,38 +637,137 @@ fn conv_bwd_band(
                     *pv += cj * gv;
                 }
             }
+        } else if accum_unit {
+            for (pv, &gv) in partial.iter_mut().zip(gbuf.iter()) {
+                *pv += gv;
+            }
         }
-        // ---- input gradient: dU = V W^T, scattered (col2im) -------------
+        // ---- input gradient ----------------------------------------------
         if need_dx {
             let dx_j = {
                 let dxs = dx.as_deref_mut().expect("need_dx implies dx band");
                 &mut dxs[(j - j0) * in_len..(j - j0 + 1) * in_len]
             };
-            for v in dx_j.iter_mut() {
-                *v = 0.0;
-            }
-            for li in 0..l {
-                let vrow = &v_j[li * co..(li + 1) * co];
-                for p in 0..kc {
-                    let wrow = &w[p * co..(p + 1) * co];
+            let dphi_row = dphi.map(|d| &d[j * in_len..(j + 1) * in_len]);
+            conv_dx_example(geom, co, v_j, w, dub, dx_j, dphi_row);
+        }
+    }
+}
+
+/// One example band of the Gram-form retention backward (`L² < K·c_out`):
+/// `s_j = ⟨U_jU_jᵀ, V_jV_jᵀ⟩` computed from the two `[L, L]` Gram
+/// matrices — `G_j` is never formed. `B = V_jV_jᵀ` fills the band-local
+/// upper triangle; the `U` inner products stream against it with the
+/// symmetry factor 2, f64-accumulated. The input gradient is the same
+/// [`conv_dx_example`] as the G form.
+#[allow(clippy::too_many_arguments)]
+fn conv_bwd_band_gram(
+    geom: &ConvGeom,
+    co: usize,
+    src: PatchSrc<'_>,
+    delta: &[f32],
+    w: &[f32],
+    dphi: Option<&[f32]>,
+    j0: usize,
+    j1: usize,
+    mut s: Option<&mut [f32]>,
+    mut dx: Option<&mut [f32]>,
+    need_dx: bool,
+    gram: &mut [f32],
+    dub: &mut [f32],
+) {
+    let l = geom.positions();
+    let kp1 = geom.patch_len() + 1;
+    let in_len = geom.in_len();
+    for j in j0..j1 {
+        let v_j = &delta[j * l * co..(j + 1) * l * co];
+        if let Some(s) = s.as_deref_mut() {
+            let (ubuf, bbuf) = gram.split_at_mut(l * kp1);
+            let urows: &[f32] = match src {
+                PatchSrc::Cols(cols) => &cols[j * l * kp1..(j + 1) * l * kp1],
+                PatchSrc::Raw(x) => {
+                    let xj = &x[j * in_len..(j + 1) * in_len];
+                    for (li, ur) in ubuf.chunks_mut(kp1).enumerate() {
+                        gather_patch(geom, xj, li, ur);
+                    }
+                    ubuf
+                }
+            };
+            for a in 0..l {
+                let va = &v_j[a * co..(a + 1) * co];
+                for b in a..l {
+                    let vb = &v_j[b * co..(b + 1) * co];
                     let mut dot = 0f32;
-                    for (&vv, &wv) in vrow.iter().zip(wrow) {
-                        dot += vv * wv;
+                    for (&x1, &x2) in va.iter().zip(vb) {
+                        dot += x1 * x2;
                     }
-                    dub[p] = dot;
-                }
-                let (oy, ox) = (li / out_w, li % out_w);
-                for ky in 0..k {
-                    let dst = &mut dx_j[(oy + ky) * row_stride + ox * ch..][..k * ch];
-                    for (d, &v) in dst.iter_mut().zip(&dub[ky * k * ch..(ky + 1) * k * ch]) {
-                        *d += v;
-                    }
+                    bbuf[a * l + b] = dot;
                 }
             }
-            if let Some(dphi) = dphi {
-                let drow = &dphi[j * in_len..(j + 1) * in_len];
-                for (d, &p) in dx_j.iter_mut().zip(drow) {
-                    *d *= p;
+            let mut acc = 0f64;
+            for a in 0..l {
+                let ua = &urows[a * kp1..(a + 1) * kp1];
+                let mut saa = 0f32;
+                for &v in ua {
+                    saa += v * v;
+                }
+                acc += saa as f64 * bbuf[a * l + a] as f64;
+                for b in a + 1..l {
+                    let ub = &urows[b * kp1..(b + 1) * kp1];
+                    let mut sab = 0f32;
+                    for (&x1, &x2) in ua.iter().zip(ub) {
+                        sab += x1 * x2;
+                    }
+                    acc += 2.0 * sab as f64 * bbuf[a * l + b] as f64;
+                }
+            }
+            s[j - j0] = acc as f32;
+        }
+        if need_dx {
+            let dx_j = {
+                let dxs = dx.as_deref_mut().expect("need_dx implies dx band");
+                &mut dxs[(j - j0) * in_len..(j - j0 + 1) * in_len]
+            };
+            let dphi_row = dphi.map(|d| &d[j * in_len..(j + 1) * in_len]);
+            conv_dx_example(geom, co, v_j, w, dub, dx_j, dphi_row);
+        }
+    }
+}
+
+/// One example band of the §6 replay: `partial += Σ_j coef_j · U_jᵀV_j`
+/// over the retained deltas, patch rows gathered or sliced via `src`.
+#[allow(clippy::too_many_arguments)]
+fn conv_replay_band(
+    geom: &ConvGeom,
+    co: usize,
+    src: PatchSrc<'_>,
+    retained: &[f32],
+    coef: &[f32],
+    j0: usize,
+    j1: usize,
+    partial: &mut [f32],
+    prow: &mut [f32],
+) {
+    let l = geom.positions();
+    let kp1 = geom.patch_len() + 1;
+    let in_len = geom.in_len();
+    for j in j0..j1 {
+        let cj = coef[j];
+        if cj == 0.0 {
+            continue;
+        }
+        let v_j = &retained[j * l * co..(j + 1) * l * co];
+        for li in 0..l {
+            let urow = src.row(geom, l, kp1, in_len, j, li, prow);
+            let vrow = &v_j[li * co..(li + 1) * co];
+            for (p, &f) in urow.iter().enumerate() {
+                if f == 0.0 {
+                    continue;
+                }
+                let fw = f * cj;
+                let grow = &mut partial[p * co..(p + 1) * co];
+                for (gv, &vv) in grow.iter_mut().zip(vrow) {
+                    *gv += fw * vv;
                 }
             }
         }
@@ -353,124 +783,83 @@ mod tests {
 
     fn conv_spec() -> LayerSpec {
         LayerSpec::Conv2d {
-            geom: ConvGeom {
-                in_h: 5,
-                in_w: 5,
-                in_ch: 2,
-                k: 3,
-            },
+            geom: ConvGeom::unit(5, 5, 2, 3),
             out_ch: 4,
             act: Activation::Tanh,
         }
     }
 
-    fn setup(m: usize) -> (ConvLayer, Tensor, Tensor, Tensor) {
+    fn setup(m: usize, imp: ConvImpl) -> (ConvLayer, Tensor, Tensor, Tensor) {
         let spec = conv_spec();
         let mut rng = Rng::new(31);
         let w = Tensor::randn(vec![spec.weight_shape().unwrap().0, 4], &mut rng);
         let x = Tensor::randn(vec![m, spec.in_len()], &mut rng);
         let delta = Tensor::randn(vec![m, spec.out_len()], &mut rng);
-        (ConvLayer::new(spec, m), w, x, delta)
+        (ConvLayer::with_impl(spec, m, imp), w, x, delta)
     }
 
-    /// Independent oracle: per-example G via ops::matmul_tn on the
-    /// unfolded patches.
-    fn oracle_grad(layer: &ConvLayer, w_rows: usize, j: usize, delta: &Tensor) -> Tensor {
-        let (l, kp1, co) = (layer.l, layer.kp1, layer.out_ch);
-        let u = Tensor::new(
-            vec![l, kp1],
-            layer.ucols[j * l * kp1..(j + 1) * l * kp1].to_vec(),
-        );
+    /// Independent oracle: per-example G via ops::matmul_tn on a fresh
+    /// unfold of the raw input (no layer state involved).
+    fn oracle_grad(geom: &ConvGeom, co: usize, x: &Tensor, j: usize, delta: &Tensor) -> Tensor {
+        let (l, kp1) = (geom.positions(), geom.patch_len() + 1);
+        let mut ucols = vec![0f32; l * kp1];
+        conv::im2col(geom, &x.data()[j * geom.in_len()..(j + 1) * geom.in_len()], &mut ucols, 1);
+        let u = Tensor::new(vec![l, kp1], ucols);
         let v = Tensor::new(vec![l, co], delta.data()[j * l * co..(j + 1) * l * co].to_vec());
-        assert_eq!(w_rows, kp1);
         ops::matmul_tn(&u, &v)
     }
 
     #[test]
     fn grads_and_norms_match_unfolded_oracle() {
-        let m = 3;
-        let (mut layer, w, x, delta) = setup(m);
-        let mut z = vec![0f32; m * layer.spec.out_len()];
-        layer.forward(Some(&w), x.data(), &mut z, m);
-        let coef = vec![1.0f32; m];
-        let mut grad = Tensor::zeros(vec![layer.kp1, 4]);
-        let mut s = vec![0f32; m];
-        layer.backward(
-            Some(&w),
-            delta.data(),
-            None,
-            None,
-            Some(&mut s),
-            Some(&coef),
-            Some(&mut grad),
-            m,
-        );
-        let mut want = Tensor::zeros(vec![layer.kp1, 4]);
-        for j in 0..m {
-            let g = oracle_grad(&layer, layer.kp1, j, &delta);
-            prop::assert_close(s[j] as f64, ops::sq_sum(&g), 1e-3)
-                .map_err(|e| format!("example {j} norm: {e}"))
-                .unwrap();
-            ops::axpy(&mut want, 1.0, &g);
-        }
-        prop::assert_all_close(grad.data(), want.data(), 1e-3).unwrap();
-    }
-
-    #[test]
-    fn retention_replays_accumulation() {
-        let m = 4;
-        let (mut layer, w, x, delta) = setup(m);
-        let mut z = vec![0f32; m * layer.spec.out_len()];
-        layer.forward(Some(&w), x.data(), &mut z, m);
-        layer.ensure_retention();
-        let mut s = vec![0f32; m];
-        layer.backward(
-            Some(&w),
-            delta.data(),
-            None,
-            None,
-            Some(&mut s),
-            None,
-            None,
-            m,
-        );
-        let coef = [0.5f32, 0.0, 2.0, 1.0];
-        let mut grad = Tensor::zeros(vec![layer.kp1, 4]);
-        layer.accumulate(&coef, &mut grad, m);
-        let mut want = Tensor::zeros(vec![layer.kp1, 4]);
-        for (j, &c) in coef.iter().enumerate() {
-            let g = oracle_grad(&layer, layer.kp1, j, &delta);
-            ops::axpy(&mut want, c, &g);
-        }
-        prop::assert_all_close(grad.data(), want.data(), 1e-3).unwrap();
-    }
-
-    #[test]
-    fn banded_backward_bitwise_matches_single_band() {
-        // big enough that bands_for(m) > 1
-        let spec = LayerSpec::Conv2d {
-            geom: ConvGeom {
-                in_h: 12,
-                in_w: 12,
-                in_ch: 2,
-                k: 3,
-            },
-            out_ch: 8,
-            act: Activation::Relu,
-        };
-        let m = 64;
-        let mut rng = Rng::new(8);
-        let w = Tensor::randn(vec![spec.weight_shape().unwrap().0, 8], &mut rng);
-        let x = Tensor::randn(vec![m, spec.in_len()], &mut rng);
-        let delta = Tensor::randn(vec![m, spec.out_len()], &mut rng);
-        let dphi = Tensor::randn(vec![m, spec.in_len()], &mut rng);
-        let run = |mut layer: ConvLayer| {
+        for imp in [ConvImpl::Implicit, ConvImpl::Im2col] {
+            let m = 3;
+            let (mut layer, w, x, delta) = setup(m, imp);
             let mut z = vec![0f32; m * layer.spec.out_len()];
             layer.forward(Some(&w), x.data(), &mut z, m);
+            let coef = vec![1.0f32; m];
+            let mut grad = Tensor::zeros(vec![layer.kp1, 4]);
             let mut s = vec![0f32; m];
-            let mut dx = vec![0f32; m * layer.spec.in_len()];
+            layer.backward(
+                Some(&w),
+                delta.data(),
+                None,
+                None,
+                Some(&mut s),
+                Some(&coef),
+                Some(&mut grad),
+                m,
+            );
+            let mut want = Tensor::zeros(vec![layer.kp1, 4]);
+            for j in 0..m {
+                let g = oracle_grad(&layer.geom, 4, &x, j, &delta);
+                prop::assert_close(s[j] as f64, ops::sq_sum(&g), 1e-3)
+                    .map_err(|e| format!("{imp:?} example {j} norm: {e}"))
+                    .unwrap();
+                ops::axpy(&mut want, 1.0, &g);
+            }
+            prop::assert_all_close(grad.data(), want.data(), 1e-3).unwrap();
+        }
+    }
+
+    /// The tentpole parity guarantee: implicit GEMM == im2col baseline
+    /// BITWISE — forward outputs, streamed norms, Mean-mode gradients,
+    /// input gradients, and the §6 replay.
+    #[test]
+    fn implicit_matches_im2col_bitwise() {
+        let m = 5;
+        let (mut imp, w, x, delta) = setup(m, ConvImpl::Implicit);
+        let (mut base, ..) = setup(m, ConvImpl::Im2col);
+        let out_len = imp.spec.out_len();
+        let in_len = imp.spec.in_len();
+        let mut rng = Rng::new(77);
+        let dphi = Tensor::rand(vec![m, in_len], 0.1, 1.0, &mut rng);
+        let run = |layer: &mut ConvLayer| {
+            let mut z = vec![0f32; m * out_len];
+            layer.forward(Some(&w), x.data(), &mut z, m);
             let coef = vec![1.0 / m as f32; m];
-            let mut grad = Tensor::zeros(vec![layer.kp1, 8]);
+            let mut grad = Tensor::zeros(vec![layer.kp1, 4]);
+            let mut s = vec![0f32; m];
+            let mut dx = vec![0f32; m * in_len];
             layer.backward(
                 Some(&w),
                 delta.data(),
@@ -481,55 +870,315 @@ mod tests {
                 Some(&mut grad),
                 m,
             );
-            (s, dx, grad)
-        };
-        let layer = ConvLayer::new(spec.clone(), m);
-        let (s_par, dx_par, grad_par) = run(layer);
-        // single-band reference: force one band by shrinking the scratch
-        let mut solo = ConvLayer::new(spec, m);
-        let (s_ser, dx_ser, grad_ser) = {
-            let mut z = vec![0f32; m * solo.spec.out_len()];
-            solo.forward(Some(&w), x.data(), &mut z, m);
-            let mut s = vec![0f32; m];
-            let mut dx = vec![0f32; m * solo.spec.in_len()];
-            let gsz = solo.kp1 * 8;
-            for v in solo.gpartial[..gsz].iter_mut() {
-                *v = 0.0;
-            }
-            let (gb, pb) = (&mut solo.gbuf[..gsz], &mut solo.gpartial[..gsz]);
-            let coef = vec![1.0 / m as f32; m];
-            conv_bwd_band(
-                &ConvGeom {
-                    in_h: 12,
-                    in_w: 12,
-                    in_ch: 2,
-                    k: 3,
-                },
-                8,
-                &solo.ucols[..],
+            // §6 replay on the same step state
+            layer.ensure_retention();
+            let mut s2 = vec![0f32; m];
+            layer.backward(
+                Some(&w),
                 delta.data(),
-                w.data(),
-                Some(dphi.data()),
-                Some(&coef),
-                0,
+                None,
+                None,
+                Some(&mut s2),
+                None,
+                None,
                 m,
-                Some(&mut s),
-                Some(&mut dx),
-                true,
-                gb,
-                pb,
-                &mut solo.dubuf[..solo.kp1 - 1],
             );
-            let mut grad = Tensor::zeros(vec![solo.kp1, 8]);
-            for (gv, &pv) in grad.data_mut().iter_mut().zip(pb.iter()) {
-                *gv += pv;
-            }
-            (s, dx, grad)
+            let rcoef: Vec<f32> = (0..m).map(|j| 0.1 + 0.2 * j as f32).collect();
+            let mut rgrad = Tensor::zeros(vec![layer.kp1, 4]);
+            layer.accumulate(&rcoef, &mut rgrad, m);
+            (z, s, dx, grad, s2, rgrad)
         };
+        let a = run(&mut imp);
+        let b = run(&mut base);
+        assert_eq!(a.0, b.0, "forward diverged across implementations");
+        assert_eq!(a.1, b.1, "streamed norms diverged");
+        assert_eq!(a.2, b.2, "input gradients diverged");
+        assert_eq!(a.3.data(), b.3.data(), "Mean-mode gradients diverged");
+        assert_eq!(a.4, b.4, "retention norms diverged");
+        assert_eq!(a.5.data(), b.5.data(), "replay gradients diverged");
+    }
+
+    #[test]
+    fn retention_replays_accumulation() {
+        for imp in [ConvImpl::Implicit, ConvImpl::Im2col] {
+            let m = 4;
+            let (mut layer, w, x, delta) = setup(m, imp);
+            let mut z = vec![0f32; m * layer.spec.out_len()];
+            layer.forward(Some(&w), x.data(), &mut z, m);
+            layer.ensure_retention();
+            let mut s = vec![0f32; m];
+            layer.backward(
+                Some(&w),
+                delta.data(),
+                None,
+                None,
+                Some(&mut s),
+                None,
+                None,
+                m,
+            );
+            let coef = [0.5f32, 0.0, 2.0, 1.0];
+            let mut grad = Tensor::zeros(vec![layer.kp1, 4]);
+            layer.accumulate(&coef, &mut grad, m);
+            let mut want = Tensor::zeros(vec![layer.kp1, 4]);
+            for (j, &c) in coef.iter().enumerate() {
+                let g = oracle_grad(&layer.geom, 4, &x, j, &delta);
+                ops::axpy(&mut want, c, &g);
+            }
+            prop::assert_all_close(grad.data(), want.data(), 1e-3).unwrap();
+        }
+    }
+
+    /// The degenerate-coefficient shortcut: an all-equal coefficient
+    /// vector skips the replay matmul and rescales the banked Σ_j G_j —
+    /// same answer as the full replay to tight tolerance.
+    #[test]
+    fn degenerate_coef_shortcut_matches_full_replay() {
+        let m = 4;
+        let (mut layer, w, x, delta) = setup(m, ConvImpl::Implicit);
+        assert!(!layer.uses_gram(), "test geometry must take the G form");
+        let mut z = vec![0f32; m * layer.spec.out_len()];
+        layer.forward(Some(&w), x.data(), &mut z, m);
+        layer.ensure_retention();
+        let mut s = vec![0f32; m];
+        layer.backward(Some(&w), delta.data(), None, None, Some(&mut s), None, None, m);
+        assert!(layer.plain_valid, "G-form retention must bank the plain sum");
+        // uniform vector takes the shortcut
+        let mut fast = Tensor::zeros(vec![layer.kp1, 4]);
+        layer.accumulate(&[0.25; 4], &mut fast, m);
+        // perturb one entry to force the full replay on identical state
+        let mut slow = Tensor::zeros(vec![layer.kp1, 4]);
+        layer.accumulate(&[0.25, 0.25, 0.25, 0.25 + 1e-8], &mut slow, m);
+        prop::assert_all_close(fast.data(), slow.data(), 1e-4).unwrap();
+        // and both match the oracle
+        let mut want = Tensor::zeros(vec![layer.kp1, 4]);
+        for j in 0..m {
+            ops::axpy(&mut want, 0.25, &oracle_grad(&layer.geom, 4, &x, j, &delta));
+        }
+        prop::assert_all_close(fast.data(), want.data(), 1e-3).unwrap();
+    }
+
+    /// The Gram dispatch: on a wide layer (L² < K·c_out) the retention
+    /// backward's norms come from ⟨UUᵀ, VVᵀ⟩ — not bitwise-equal to the
+    /// G form, but within tight tolerance of it and of the materialized
+    /// oracle.
+    #[test]
+    fn gram_dispatch_norms_match_g_form_and_oracle() {
+        let spec = LayerSpec::Conv2d {
+            geom: ConvGeom::unit(4, 4, 2, 3),
+            out_ch: 8,
+            act: Activation::Tanh,
+        };
+        let m = 5;
+        let mut rng = Rng::new(13);
+        let w = Tensor::randn(vec![spec.weight_shape().unwrap().0, 8], &mut rng);
+        let x = Tensor::randn(vec![m, spec.in_len()], &mut rng);
+        let delta = Tensor::randn(vec![m, spec.out_len()], &mut rng);
+        let mut layer = ConvLayer::new(spec, m);
+        assert!(layer.uses_gram(), "L=4, K*c_out=144: the Gram form must dispatch");
+        let mut z = vec![0f32; m * layer.spec.out_len()];
+        layer.forward(Some(&w), x.data(), &mut z, m);
+        // G-form norms via Mean mode on the same state
+        let coef = vec![1.0f32; m];
+        let mut grad = Tensor::zeros(vec![layer.kp1, 8]);
+        let mut s_g = vec![0f32; m];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            None,
+            None,
+            Some(&mut s_g),
+            Some(&coef),
+            Some(&mut grad),
+            m,
+        );
+        // Gram-form norms via the retention path
+        layer.ensure_retention();
+        let mut s_gram = vec![0f32; m];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            None,
+            None,
+            Some(&mut s_gram),
+            None,
+            None,
+            m,
+        );
+        assert!(!layer.plain_valid, "Gram retention cannot bank the plain sum");
+        for j in 0..m {
+            prop::assert_close(s_gram[j] as f64, s_g[j] as f64, 1e-4)
+                .map_err(|e| format!("example {j} Gram vs G form: {e}"))
+                .unwrap();
+            let want = ops::sq_sum(&oracle_grad(&layer.geom, 8, &x, j, &delta));
+            prop::assert_close(s_gram[j] as f64, want, 1e-3)
+                .map_err(|e| format!("example {j} Gram vs oracle: {e}"))
+                .unwrap();
+        }
+        // the replay (no shortcut available) still matches the oracle
+        let rcoef: Vec<f32> = (0..m).map(|j| 0.2 + 0.1 * j as f32).collect();
+        let mut rgrad = Tensor::zeros(vec![layer.kp1, 8]);
+        layer.accumulate(&rcoef, &mut rgrad, m);
+        let mut want = Tensor::zeros(vec![layer.kp1, 8]);
+        for (j, &c) in rcoef.iter().enumerate() {
+            ops::axpy(&mut want, c, &oracle_grad(&layer.geom, 8, &x, j, &delta));
+        }
+        prop::assert_all_close(rgrad.data(), want.data(), 1e-3).unwrap();
+    }
+
+    /// Strided + padded geometry runs the same contracts: norms and
+    /// grads match the unfolded oracle, dx matches the col2im oracle.
+    #[test]
+    fn strided_padded_layer_matches_oracle() {
+        let geom = ConvGeom {
+            in_h: 7,
+            in_w: 7,
+            in_ch: 2,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        };
+        let spec = LayerSpec::Conv2d {
+            geom,
+            out_ch: 5,
+            act: Activation::Relu,
+        };
+        let m = 4;
+        let mut rng = Rng::new(23);
+        let w = Tensor::randn(vec![spec.weight_shape().unwrap().0, 5], &mut rng);
+        let x = Tensor::randn(vec![m, spec.in_len()], &mut rng);
+        let delta = Tensor::randn(vec![m, spec.out_len()], &mut rng);
+        let mut layer = ConvLayer::new(spec, m);
+        let mut z = vec![0f32; m * layer.spec.out_len()];
+        layer.forward(Some(&w), x.data(), &mut z, m);
+        let coef = vec![1.0f32; m];
+        let mut grad = Tensor::zeros(vec![layer.kp1, 5]);
+        let mut s = vec![0f32; m];
+        let mut dx = vec![0f32; m * layer.spec.in_len()];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            Some(&mut dx),
+            None,
+            Some(&mut s),
+            Some(&coef),
+            Some(&mut grad),
+            m,
+        );
+        let (l, kp1, co) = (layer.l, layer.kp1, 5usize);
+        let mut want = Tensor::zeros(vec![kp1, co]);
+        for j in 0..m {
+            let g = oracle_grad(&geom, co, &x, j, &delta);
+            prop::assert_close(s[j] as f64, ops::sq_sum(&g), 1e-3)
+                .map_err(|e| format!("example {j}: {e}"))
+                .unwrap();
+            ops::axpy(&mut want, 1.0, &g);
+            // dx oracle: du = V W^T (bias row dropped), col2im'd
+            let kc = geom.patch_len();
+            let mut du = vec![0f32; l * kc];
+            for li in 0..l {
+                for p in 0..kc {
+                    let mut dot = 0f64;
+                    for o in 0..co {
+                        dot += delta.data()[(j * l + li) * co + o] as f64
+                            * w.data()[p * co + o] as f64;
+                    }
+                    du[li * kc + p] = dot as f32;
+                }
+            }
+            let mut dxo = vec![0f32; geom.in_len()];
+            conv::col2im_example(&geom, &du, &mut dxo);
+            prop::assert_all_close(&dx[j * geom.in_len()..(j + 1) * geom.in_len()], &dxo, 1e-3)
+                .map_err(|e| format!("example {j} dx: {e}"))
+                .unwrap();
+        }
+        prop::assert_all_close(grad.data(), want.data(), 1e-3).unwrap();
+    }
+
+    #[test]
+    fn banded_backward_bitwise_matches_single_band() {
+        // big enough that bands_for(m) > 1
+        let geom = ConvGeom::unit(12, 12, 2, 3);
+        let spec = LayerSpec::Conv2d {
+            geom,
+            out_ch: 8,
+            act: Activation::Relu,
+        };
+        let m = 64;
+        let mut rng = Rng::new(8);
+        let w = Tensor::randn(vec![spec.weight_shape().unwrap().0, 8], &mut rng);
+        let x = Tensor::randn(vec![m, spec.in_len()], &mut rng);
+        let delta = Tensor::randn(vec![m, spec.out_len()], &mut rng);
+        let dphi = Tensor::randn(vec![m, spec.in_len()], &mut rng);
+        let mut layer = ConvLayer::new(spec, m);
+        // (bands_for(m) > 1 on any multi-core host — the comparison below
+        // is valid either way)
+        let mut z = vec![0f32; m * layer.spec.out_len()];
+        layer.forward(Some(&w), x.data(), &mut z, m);
+        let mut s_par = vec![0f32; m];
+        let mut dx_par = vec![0f32; m * layer.spec.in_len()];
+        let coef = vec![1.0 / m as f32; m];
+        let mut grad_par = Tensor::zeros(vec![layer.kp1, 8]);
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            Some(&mut dx_par),
+            Some(dphi.data()),
+            Some(&mut s_par),
+            Some(&coef),
+            Some(&mut grad_par),
+            m,
+        );
+        // single-band reference: one conv_bwd_band call over everything
+        let gsz = layer.kp1 * 8;
+        let mut gb = vec![0f32; gsz];
+        let mut pb = vec![0f32; gsz];
+        let mut dub = vec![0f32; layer.kp1 - 1];
+        let mut prow = vec![0f32; layer.kp1];
+        let mut s_ser = vec![0f32; m];
+        let mut dx_ser = vec![0f32; m * layer.spec.in_len()];
+        conv_bwd_band(
+            &geom,
+            8,
+            PatchSrc::Raw(&layer.xin[..m * geom.in_len()]),
+            delta.data(),
+            w.data(),
+            Some(dphi.data()),
+            Some(&coef),
+            false,
+            0,
+            m,
+            Some(&mut s_ser),
+            Some(&mut dx_ser),
+            true,
+            &mut gb,
+            &mut pb,
+            &mut dub,
+            &mut prow,
+        );
+        let mut grad_ser = Tensor::zeros(vec![layer.kp1, 8]);
+        for (gv, &pv) in grad_ser.data_mut().iter_mut().zip(pb.iter()) {
+            *gv += pv;
+        }
         assert_eq!(s_par, s_ser, "streamed norms diverged under banding");
         assert_eq!(dx_par, dx_ser, "input gradient diverged under banding");
         // gradient partial reduction order differs (per-band partials) —
         // tolerance, not bitwise
         prop::assert_all_close(grad_par.data(), grad_ser.data(), 1e-4).unwrap();
+    }
+
+    /// The implicit path's memory claim, concretely: its live state is
+    /// smaller than the im2col baseline's (the unfold is ~K× the input).
+    #[test]
+    fn implicit_state_is_smaller_than_im2col() {
+        let spec = conv_spec();
+        let implicit = ConvLayer::with_impl(spec.clone(), 64, ConvImpl::Implicit);
+        let im2col = ConvLayer::with_impl(spec, 64, ConvImpl::Im2col);
+        assert!(
+            implicit.state_bytes() < im2col.state_bytes(),
+            "implicit {} >= im2col {}",
+            implicit.state_bytes(),
+            im2col.state_bytes()
+        );
     }
 }

@@ -1,9 +1,10 @@
 //! Heterogeneous layer stacks with streamed per-example gradient norms.
 //!
 //! This subsystem generalizes the dense-only model path (`ModelSpec` /
-//! `Mlp`) to a list of [`LayerSpec`]s — dense, convolutional, and the
-//! pooling/flatten glue between them — behind one [`Layer`] trait that
-//! [`crate::engine::FusedEngine`] drives with zero per-step allocations.
+//! `Mlp`) to a list of [`LayerSpec`]s — dense, convolutional (strided /
+//! padded), and the pooling/flatten glue between them — behind one
+//! [`Layer`] trait that [`crate::engine::FusedEngine`] drives with zero
+//! per-step allocations.
 //!
 //! ## How the paper's trick extends to convolutions (Rochette et al. 2019)
 //!
@@ -28,8 +29,8 @@
 //! The rank-1 factorization no longer applies (dense is the `L = 1`
 //! special case), but the *efficiency* claim survives, which is
 //! Rochette et al.'s observation: both quantities the product needs —
-//! `U_j` (materialized by the forward's im2col) and `V_j` (produced by
-//! the batched backward) — already exist, so per-example norms cost one
+//! `U_j` (gathered from the layer input) and `V_j` (produced by the
+//! batched backward) — already exist, so per-example norms cost one
 //! gradient-matmul worth of flops `O(m·L·K·c_out)` instead of m separate
 //! backward passes, and in Mean mode that matmul IS the gradient
 //! accumulation `Σ_j coef_j·G_j` the optimizer needs anyway: each `G_j`
@@ -37,6 +38,44 @@
 //! and its contribution accumulated — per-example weight gradients are
 //! never materialized (`O(K·c_out)` live scratch per worker, not
 //! `O(m·K·c_out)`).
+//!
+//! ## The Gram-trick size dispatch
+//!
+//! Rochette et al. derive a second form of the same norm. Using the
+//! cyclic trace identity,
+//!
+//! ```text
+//! s_j = ||U_jᵀV_j||_F² = tr(V_jᵀU_j U_jᵀV_j)
+//!     = tr((U_jU_jᵀ)(V_jV_jᵀ)) = ⟨U_jU_jᵀ, V_jV_jᵀ⟩
+//! ```
+//!
+//! — the Frobenius inner product of two `L×L` Gram matrices. Forming
+//! `G_j` costs `O(L·K·c_out)`; forming both Grams costs
+//! `O(L²·(K + c_out))`. For *wide* layers (few positions, many
+//! channels) the Gram pair is far cheaper, so the conv backward
+//! **size-dispatches**: when `L² < K·c_out` the §6 retention path (which
+//! needs only the norm — the gradient is replayed later) computes
+//! `⟨U_jU_jᵀ, V_jV_jᵀ⟩` and never forms `G_j`; otherwise it takes the
+//! `G_j` form. Mean mode always forms `G_j` — there the same scratch is
+//! the gradient accumulation, so the Gram form would add work, not save
+//! it. The two forms are numerically equivalent but not bitwise; both
+//! are tested against the materialized per-example oracle.
+//!
+//! ## Implicit GEMM (the memory argument)
+//!
+//! A materialized im2col unfold costs `m·L·(K+1)` floats — for a k×k
+//! conv that is ~k² copies of the input, and it dominates live memory at
+//! large m (e.g. the digits CNN at m=256: the unfold is ~7× the raw
+//! batch). The conv kernels therefore gather each `[K+1]` patch row
+//! on the fly inside the band-parallel matmul loops
+//! ([`crate::tensor::conv::gather_patch`]) — forward, backward and §6
+//! replay all stream patches band-locally, and the layer's only
+//! per-batch state is the raw `[m, in_len]` input. The gather re-runs
+//! once per pass, but it is `O(m·L·K)` copies against `O(m·L·K·c_out)`
+//! matmul flops — the arithmetic hides it, which is exactly the
+//! implicit-GEMM bet. See `benches/e10_conv.rs` for the measured
+//! memory/time comparison against the retained im2col baseline
+//! ([`conv2d::ConvImpl::Im2col`]).
 //!
 //! In the §6 coefficient modes (clip / normalize) the coefficients
 //! depend on the full norms, so conv layers retain `V_j` (the analogue
@@ -46,6 +85,11 @@
 //! "one extra matmul" — net zero); for conv the norm pass itself already
 //! cost a gradient matmul, so §6 conv steps pay one extra
 //! `O(m·L·K·c_out)` term — the price of losing the rank-1 structure.
+//! Two escapes soften it: the Gram dispatch above removes the *norm*
+//! matmul on wide layers, and when the coefficient vector comes out
+//! degenerate (all equal — e.g. nothing clipped) the replay is skipped
+//! entirely in favor of the banked unweighted sum (see
+//! [`conv2d::ConvLayer`]).
 //!
 //! ## Traversal contract
 //!
@@ -62,9 +106,9 @@ pub mod dense;
 pub mod pool;
 pub mod stack;
 
-pub use conv2d::ConvLayer;
+pub use conv2d::{ConvImpl, ConvLayer};
 pub use dense::DenseLayer;
-pub use pool::{FlattenLayer, MaxPoolLayer};
+pub use pool::{AvgPoolLayer, FlattenLayer, MaxPoolLayer};
 pub use stack::StackSpec;
 
 use crate::tensor::conv::ConvGeom;
@@ -83,8 +127,8 @@ pub enum LayerSpec {
         out_dim: usize,
         act: Activation,
     },
-    /// Stride-1 valid k×k convolution, W `[(k·k·in_ch + 1), out_ch]`
-    /// with the bias folded as the last row.
+    /// k×k convolution (stride/pad in the geometry), W
+    /// `[(k·k·in_ch + 1), out_ch]` with the bias folded as the last row.
     Conv2d {
         geom: ConvGeom,
         out_ch: usize,
@@ -93,6 +137,15 @@ pub enum LayerSpec {
     /// Non-overlapping k×k max pooling (stride k); requires `k` to
     /// divide both spatial dims.
     MaxPool2d {
+        in_h: usize,
+        in_w: usize,
+        ch: usize,
+        k: usize,
+    },
+    /// Non-overlapping k×k average pooling (stride k); requires `k` to
+    /// divide both spatial dims. Smooth everywhere (no argmax), so
+    /// finite-difference checks need no kink filtering.
+    AvgPool2d {
         in_h: usize,
         in_w: usize,
         ch: usize,
@@ -109,6 +162,7 @@ impl LayerSpec {
             LayerSpec::Dense { .. } => "dense",
             LayerSpec::Conv2d { .. } => "conv2d",
             LayerSpec::MaxPool2d { .. } => "maxpool2d",
+            LayerSpec::AvgPool2d { .. } => "avgpool2d",
             LayerSpec::Flatten { .. } => "flatten",
         }
     }
@@ -118,7 +172,8 @@ impl LayerSpec {
         match self {
             LayerSpec::Dense { in_dim, .. } => *in_dim,
             LayerSpec::Conv2d { geom, .. } => geom.in_len(),
-            LayerSpec::MaxPool2d { in_h, in_w, ch, .. } => in_h * in_w * ch,
+            LayerSpec::MaxPool2d { in_h, in_w, ch, .. }
+            | LayerSpec::AvgPool2d { in_h, in_w, ch, .. } => in_h * in_w * ch,
             LayerSpec::Flatten { len } => *len,
         }
     }
@@ -128,7 +183,8 @@ impl LayerSpec {
         match self {
             LayerSpec::Dense { out_dim, .. } => *out_dim,
             LayerSpec::Conv2d { geom, out_ch, .. } => geom.positions() * out_ch,
-            LayerSpec::MaxPool2d { in_h, in_w, ch, k } => (in_h / k) * (in_w / k) * ch,
+            LayerSpec::MaxPool2d { in_h, in_w, ch, k }
+            | LayerSpec::AvgPool2d { in_h, in_w, ch, k } => (in_h / k) * (in_w / k) * ch,
             LayerSpec::Flatten { len } => *len,
         }
     }
@@ -139,7 +195,8 @@ impl LayerSpec {
             LayerSpec::Conv2d { geom, out_ch, .. } => {
                 Some((geom.out_h(), geom.out_w(), *out_ch))
             }
-            LayerSpec::MaxPool2d { in_h, in_w, ch, k } => {
+            LayerSpec::MaxPool2d { in_h, in_w, ch, k }
+            | LayerSpec::AvgPool2d { in_h, in_w, ch, k } => {
                 Some((in_h / k, in_w / k, *ch))
             }
             _ => None,
@@ -181,12 +238,23 @@ impl LayerSpec {
         }
     }
 
-    /// Build this spec's runtime kernel with buffers for `m_max` rows.
+    /// Build this spec's runtime kernel with buffers for `m_max` rows
+    /// (conv layers on the default implicit-GEMM implementation).
     pub fn build(&self, m_max: usize) -> Box<dyn Layer> {
+        self.build_conv(m_max, ConvImpl::Implicit)
+    }
+
+    /// [`LayerSpec::build`] with an explicit conv implementation —
+    /// non-conv layers ignore it. The bench/tests use this to pit the
+    /// implicit-GEMM path against the im2col baseline.
+    pub fn build_conv(&self, m_max: usize, imp: ConvImpl) -> Box<dyn Layer> {
         match self {
             LayerSpec::Dense { .. } => Box::new(DenseLayer::new(self.clone(), m_max)),
-            LayerSpec::Conv2d { .. } => Box::new(ConvLayer::new(self.clone(), m_max)),
+            LayerSpec::Conv2d { .. } => {
+                Box::new(ConvLayer::with_impl(self.clone(), m_max, imp))
+            }
             LayerSpec::MaxPool2d { .. } => Box::new(MaxPoolLayer::new(self.clone(), m_max)),
+            LayerSpec::AvgPool2d { .. } => Box::new(AvgPoolLayer::new(self.clone())),
             LayerSpec::Flatten { .. } => Box::new(FlattenLayer::new(self.clone())),
         }
     }
@@ -202,8 +270,9 @@ pub trait Layer: Send {
 
     /// Compute the pre-activation output `z` `[m, out_len]` from `x`
     /// `[m, in_len]`, retaining whatever the backward pass needs
-    /// (augmented/unfolded inputs). `w` is `Some` exactly for weighted
-    /// layers. The driver applies the activation to `z` afterwards.
+    /// (augmented rows / the raw conv input). `w` is `Some` exactly for
+    /// weighted layers. The driver applies the activation to `z`
+    /// afterwards.
     fn forward(&mut self, w: Option<&Tensor>, x: &[f32], z: &mut [f32], m: usize);
 
     /// Streaming backward for one layer, given `delta = dL/dz`
@@ -255,12 +324,7 @@ mod tests {
     #[test]
     fn spec_shape_arithmetic() {
         let conv = LayerSpec::Conv2d {
-            geom: ConvGeom {
-                in_h: 12,
-                in_w: 12,
-                in_ch: 1,
-                k: 3,
-            },
+            geom: ConvGeom::unit(12, 12, 1, 3),
             out_ch: 8,
             act: Activation::Relu,
         };
@@ -290,5 +354,51 @@ mod tests {
         assert_eq!(dense.weight_shape(), Some((201, 10)));
         let flat = LayerSpec::Flatten { len: 200 };
         assert_eq!(flat.in_len(), flat.out_len());
+    }
+
+    #[test]
+    fn strided_padded_and_avgpool_shape_arithmetic() {
+        // 'same' conv at stride 1 pad 1 keeps 12x12; strided halves it
+        let same = LayerSpec::Conv2d {
+            geom: ConvGeom {
+                in_h: 12,
+                in_w: 12,
+                in_ch: 1,
+                k: 3,
+                stride: 1,
+                pad: 1,
+            },
+            out_ch: 8,
+            act: Activation::Relu,
+        };
+        assert_eq!(same.out_hwc(), Some((12, 12, 8)));
+        assert_eq!(same.out_len(), 144 * 8);
+        let strided = LayerSpec::Conv2d {
+            geom: ConvGeom {
+                in_h: 6,
+                in_w: 6,
+                in_ch: 8,
+                k: 3,
+                stride: 2,
+                pad: 0,
+            },
+            out_ch: 16,
+            act: Activation::Relu,
+        };
+        assert_eq!(strided.out_hwc(), Some((2, 2, 16)));
+        assert_eq!(strided.weight_shape(), Some((73, 16)));
+
+        let avg = LayerSpec::AvgPool2d {
+            in_h: 12,
+            in_w: 12,
+            ch: 8,
+            k: 2,
+        };
+        assert_eq!(avg.name(), "avgpool2d");
+        assert_eq!(avg.in_len(), 144 * 8);
+        assert_eq!(avg.out_len(), 36 * 8);
+        assert_eq!(avg.out_hwc(), Some((6, 6, 8)));
+        assert_eq!(avg.weight_shape(), None);
+        assert_eq!(avg.activation(), Activation::Identity);
     }
 }

@@ -1,5 +1,5 @@
-//! Parameterless glue layers: non-overlapping max pooling and the
-//! flatten marker. Neither has weights, so neither emits a per-example
+//! Parameterless glue layers: non-overlapping max/average pooling and
+//! the flatten marker. None has weights, so none emits a per-example
 //! norm stream — a [`crate::telemetry::LayerTap`] on a conv stack sees
 //! only the weighted layers, exactly like the dense stack.
 
@@ -114,6 +114,116 @@ impl Layer for MaxPoolLayer {
 
     fn state_bytes(&self) -> usize {
         4 * self.argmax.len()
+    }
+}
+
+/// Non-overlapping k×k average pooling on NHWC maps (stride k). Linear
+/// and smooth: the forward is a window mean, the backward spreads each
+/// delta uniformly (`/k²`) over its window — no per-example state at
+/// all, so the layer is stateless.
+pub struct AvgPoolLayer {
+    spec: LayerSpec,
+    in_h: usize,
+    in_w: usize,
+    ch: usize,
+    k: usize,
+    out_len: usize,
+}
+
+impl AvgPoolLayer {
+    pub fn new(spec: LayerSpec) -> AvgPoolLayer {
+        let LayerSpec::AvgPool2d { in_h, in_w, ch, k } = spec else {
+            panic!("AvgPoolLayer::new needs an AvgPool2d spec, got {}", spec.name());
+        };
+        assert!(k > 0 && in_h % k == 0 && in_w % k == 0,
+            "avgpool2d k={k} must divide the {in_h}x{in_w} input");
+        let out_len = (in_h / k) * (in_w / k) * ch;
+        AvgPoolLayer {
+            spec,
+            in_h,
+            in_w,
+            ch,
+            k,
+            out_len,
+        }
+    }
+}
+
+impl Layer for AvgPoolLayer {
+    fn spec(&self) -> &LayerSpec {
+        &self.spec
+    }
+
+    fn forward(&mut self, w: Option<&Tensor>, x: &[f32], z: &mut [f32], m: usize) {
+        debug_assert!(w.is_none());
+        let (k, ch) = (self.k, self.ch);
+        let (out_h, out_w) = (self.in_h / k, self.in_w / k);
+        let in_len = self.in_h * self.in_w * ch;
+        let row_stride = self.in_w * ch;
+        let inv = 1.0 / (k * k) as f32;
+        for j in 0..m {
+            let xj = &x[j * in_len..(j + 1) * in_len];
+            let zj = &mut z[j * self.out_len..(j + 1) * self.out_len];
+            for oy in 0..out_h {
+                for ox in 0..out_w {
+                    for c in 0..ch {
+                        let mut acc = 0f32;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                acc += xj[(oy * k + ky) * row_stride + (ox * k + kx) * ch + c];
+                            }
+                        }
+                        zj[(oy * out_w + ox) * ch + c] = acc * inv;
+                    }
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &mut self,
+        _w: Option<&Tensor>,
+        delta: &[f32],
+        dx: Option<&mut [f32]>,
+        dphi_prev: Option<&[f32]>,
+        s: Option<&mut [f32]>,
+        _coef: Option<&[f32]>,
+        _grad: Option<&mut Tensor>,
+        m: usize,
+    ) {
+        debug_assert!(s.is_none(), "parameterless layer has no norm stream");
+        let Some(dx) = dx else { return };
+        let (k, ch) = (self.k, self.ch);
+        let (out_h, out_w) = (self.in_h / k, self.in_w / k);
+        let in_len = self.in_h * self.in_w * ch;
+        let row_stride = self.in_w * ch;
+        let inv = 1.0 / (k * k) as f32;
+        for j in 0..m {
+            let dj = &delta[j * self.out_len..(j + 1) * self.out_len];
+            let xj = &mut dx[j * in_len..(j + 1) * in_len];
+            for oy in 0..out_h {
+                for ox in 0..out_w {
+                    for c in 0..ch {
+                        let d = dj[(oy * out_w + ox) * ch + c] * inv;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                xj[(oy * k + ky) * row_stride + (ox * k + kx) * ch + c] = d;
+                            }
+                        }
+                    }
+                }
+            }
+            if let Some(dphi) = dphi_prev {
+                for (v, &p) in xj.iter_mut().zip(&dphi[j * in_len..(j + 1) * in_len]) {
+                    *v *= p;
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
     }
 }
 
@@ -237,6 +347,64 @@ mod tests {
         for i in 0..12 {
             assert_eq!(dx[i], x[i] * dphi[i]);
         }
+    }
+
+    #[test]
+    fn avgpool_forward_is_window_mean() {
+        let spec = LayerSpec::AvgPool2d {
+            in_h: 4,
+            in_w: 4,
+            ch: 2,
+            k: 2,
+        };
+        let mut layer = AvgPoolLayer::new(spec);
+        // channel-last 4x4x2; channel 0 = index, channel 1 = -index
+        let x: Vec<f32> = (0..16)
+            .flat_map(|i| [i as f32, -(i as f32)])
+            .collect();
+        let mut z = vec![0f32; 8];
+        layer.forward(None, &x, &mut z, 1);
+        // top-left block: indices {0, 1, 4, 5} -> mean 2.5
+        assert_eq!(z[0], 2.5);
+        assert_eq!(z[1], -2.5);
+        // bottom-right block: {10, 11, 14, 15} -> mean 12.5
+        assert_eq!(z[6], 12.5);
+        assert_eq!(z[7], -12.5);
+    }
+
+    #[test]
+    fn avgpool_backward_spreads_delta_and_preserves_totals() {
+        let spec = LayerSpec::AvgPool2d {
+            in_h: 4,
+            in_w: 4,
+            ch: 2,
+            k: 2,
+        };
+        let mut layer = AvgPoolLayer::new(spec);
+        let delta: Vec<f32> = (1..=8).map(|v| v as f32).collect();
+        let mut dx = vec![0f32; 32];
+        layer.backward(None, &delta, Some(&mut dx), None, None, None, None, 1);
+        // every window member gets delta/k², totals preserved
+        assert_eq!(dx[0], 1.0 / 4.0);
+        assert!((dx.iter().sum::<f32>() - delta.iter().sum::<f32>()).abs() < 1e-6);
+        // dphi composes
+        let dphi = vec![2.0f32; 32];
+        let mut dx2 = vec![0f32; 32];
+        layer.backward(None, &delta, Some(&mut dx2), Some(&dphi), None, None, None, 1);
+        for (a, b) in dx.iter().zip(&dx2) {
+            assert_eq!(*b, 2.0 * *a);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn avgpool_rejects_nondividing_k() {
+        AvgPoolLayer::new(LayerSpec::AvgPool2d {
+            in_h: 6,
+            in_w: 5,
+            ch: 1,
+            k: 2,
+        });
     }
 
     #[test]

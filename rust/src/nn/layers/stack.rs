@@ -36,17 +36,30 @@ impl StackSpec {
             // geometry bounds first — out_len() on a too-large kernel
             // would underflow
             if let LayerSpec::Conv2d { geom, .. } = l {
-                if geom.k == 0 || geom.k > geom.in_h || geom.k > geom.in_w {
+                if geom.k == 0 || geom.stride == 0 {
+                    bail!("layer {i}: conv kernel and stride must be >= 1");
+                }
+                if geom.pad >= geom.k {
                     bail!(
-                        "layer {i}: conv kernel {}x{} does not fit a {}x{} input",
+                        "layer {i}: conv padding {} must be smaller than the kernel {}",
+                        geom.pad,
+                        geom.k
+                    );
+                }
+                if geom.k > geom.in_h + 2 * geom.pad || geom.k > geom.in_w + 2 * geom.pad {
+                    bail!(
+                        "layer {i}: conv kernel {}x{} does not fit a {}x{} input (pad {})",
                         geom.k,
                         geom.k,
                         geom.in_h,
-                        geom.in_w
+                        geom.in_w,
+                        geom.pad
                     );
                 }
             }
-            if let LayerSpec::MaxPool2d { in_h, in_w, k, .. } = l {
+            if let LayerSpec::MaxPool2d { in_h, in_w, k, .. }
+            | LayerSpec::AvgPool2d { in_h, in_w, k, .. } = l
+            {
                 if *k == 0 || in_h % k != 0 || in_w % k != 0 {
                     bail!("layer {i}: pool k={k} must divide the {in_h}x{in_w} input");
                 }
@@ -189,12 +202,15 @@ impl StackSpec {
     /// shapes inferred left to right:
     ///
     /// ```text
-    /// input 12x12x1, conv 8 k3 relu, pool 2, conv 16 k3 relu, flatten, dense 10
+    /// input 12x12x1, conv 8 k3 s1 p1 relu, avgpool 2, conv 16 k3 s2 relu, flatten, dense 10
     /// ```
     ///
     /// * `input HxWxC` (spatial) or `input N` (flat) — required first
-    /// * `conv C kK [act]` — stride-1 valid k×k conv, C output channels
+    /// * `conv C kK [sS] [pP] [act]` — k×k conv with C output channels,
+    ///   optional stride `sS` (default 1) and zero padding `pP`
+    ///   (default 0; `p1` with `k3` is a 'same' conv at stride 1)
     /// * `pool K` — non-overlapping k×k max pool
+    /// * `avgpool K` — non-overlapping k×k average pool
     /// * `flatten` — spatial → flat (required before `dense`)
     /// * `dense N [act]` — activation defaults to `identity`
     pub fn parse_layers(text: &str) -> Result<Vec<LayerSpec>> {
@@ -257,20 +273,45 @@ impl StackSpec {
                         .strip_prefix('k')
                         .and_then(|v| v.parse().ok())
                         .ok_or_else(|| anyhow!("'{item}': kernel must look like k3"))?;
-                    let act = parse_act(w.next(), item)?;
+                    // optional sN / pN, then an optional trailing activation
+                    let rest: Vec<&str> = w.by_ref().collect();
+                    let (mut stride, mut pad) = (1usize, 0usize);
+                    let mut act = Activation::Identity;
+                    for (idx, &tok) in rest.iter().enumerate() {
+                        if let Some(v) = tok.strip_prefix('s').and_then(|v| v.parse().ok()) {
+                            stride = v;
+                            continue;
+                        }
+                        if let Some(v) = tok.strip_prefix('p').and_then(|v| v.parse().ok()) {
+                            pad = v;
+                            continue;
+                        }
+                        if idx + 1 != rest.len() {
+                            bail!("'{item}': unexpected token '{tok}'");
+                        }
+                        act = parse_act(Some(tok), item)?;
+                    }
                     let geom = ConvGeom {
                         in_h: h,
                         in_w: wd,
                         in_ch: c,
                         k,
+                        stride,
+                        pad,
                     };
-                    if k == 0 || k > h || k > wd {
-                        bail!("'{item}': kernel {k} does not fit a {h}x{wd} input");
+                    if k == 0 || stride == 0 {
+                        bail!("'{item}': kernel and stride must be >= 1");
+                    }
+                    if pad >= k {
+                        bail!("'{item}': padding {pad} must be smaller than the kernel {k}");
+                    }
+                    if k > h + 2 * pad || k > wd + 2 * pad {
+                        bail!("'{item}': kernel {k} does not fit a {h}x{wd} input (pad {pad})");
                     }
                     cur = Cur::Spatial(geom.out_h(), geom.out_w(), out_ch);
                     layers.push(LayerSpec::Conv2d { geom, out_ch, act });
                 }
-                "pool" => {
+                "pool" | "avgpool" => {
                     let Cur::Spatial(h, wd, c) = cur else {
                         bail!("'{item}': pool needs a spatial input");
                     };
@@ -282,11 +323,20 @@ impl StackSpec {
                     if k == 0 || h % k != 0 || wd % k != 0 {
                         bail!("'{item}': pool {k} must divide the {h}x{wd} input");
                     }
-                    layers.push(LayerSpec::MaxPool2d {
-                        in_h: h,
-                        in_w: wd,
-                        ch: c,
-                        k,
+                    layers.push(if kind == "avgpool" {
+                        LayerSpec::AvgPool2d {
+                            in_h: h,
+                            in_w: wd,
+                            ch: c,
+                            k,
+                        }
+                    } else {
+                        LayerSpec::MaxPool2d {
+                            in_h: h,
+                            in_w: wd,
+                            ch: c,
+                            k,
+                        }
                     });
                     cur = Cur::Spatial(h / k, wd / k, c);
                 }
@@ -356,6 +406,72 @@ mod tests {
         assert_eq!(spec.param_count(), 80 + 73 * 16 + 145 * 10);
         assert!(!spec.is_dense());
         assert!(spec.max_width() >= 800);
+    }
+
+    #[test]
+    fn parses_strided_padded_conv_and_avgpool() {
+        let spec = StackSpec::parse(
+            "input 12x12x1, conv 8 k3 p1 relu, avgpool 2, conv 16 k3 s2 relu, flatten, dense 10",
+            Loss::SoftmaxCe,
+            8,
+        )
+        .unwrap();
+        // conv1 'same': 12x12x8; avgpool: 6x6x8; conv2 s2: 2x2x16; dense 64->10
+        assert_eq!(spec.weight_shapes(), vec![(10, 8), (73, 16), (65, 10)]);
+        assert_eq!(
+            spec.layers[1],
+            LayerSpec::AvgPool2d {
+                in_h: 12,
+                in_w: 12,
+                ch: 8,
+                k: 2
+            }
+        );
+        let LayerSpec::Conv2d { geom, .. } = &spec.layers[0] else {
+            panic!("layer 0 must be conv")
+        };
+        assert_eq!((geom.stride, geom.pad), (1, 1));
+        assert_eq!((geom.out_h(), geom.out_w()), (12, 12));
+        let LayerSpec::Conv2d { geom, .. } = &spec.layers[2] else {
+            panic!("layer 2 must be conv")
+        };
+        assert_eq!((geom.stride, geom.pad), (2, 0));
+        assert_eq!((geom.out_h(), geom.out_w()), (2, 2));
+
+        // s/p in either order; 'sigmoid' is not mistaken for an sN token
+        let spec2 = StackSpec::parse(
+            "input 8x8x1, conv 4 k3 p1 s2 sigmoid, flatten, dense 3",
+            Loss::SoftmaxCe,
+            4,
+        )
+        .unwrap();
+        let LayerSpec::Conv2d { geom, act, .. } = &spec2.layers[0] else {
+            panic!("layer 0 must be conv")
+        };
+        assert_eq!((geom.stride, geom.pad), (2, 1));
+        assert_eq!(*act, Activation::Sigmoid);
+        assert_eq!(spec2.weight_shapes(), vec![(10, 4), (65, 3)]);
+    }
+
+    #[test]
+    fn strided_conv_dsl_errors() {
+        let bad = [
+            ("input 8x8x1, conv 4 k3 s0 relu, flatten, dense 2", "stride must be >= 1"),
+            (
+                "input 8x8x1, conv 4 k3 p3 relu, flatten, dense 2",
+                "must be smaller than the kernel",
+            ),
+            ("input 8x8x1, conv 4 k3 bogus relu, flatten, dense 2", "unexpected token"),
+            ("input 12x12x1, avgpool 5, flatten, dense 2", "must divide"),
+            ("input 16, avgpool 2", "pool needs a spatial input"),
+        ];
+        for (text, needle) in bad {
+            let err = StackSpec::parse(text, Loss::SoftmaxCe, 4)
+                .map(|_| ())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "'{text}': got '{err}'");
+        }
     }
 
     #[test]

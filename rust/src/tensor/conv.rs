@@ -1,4 +1,6 @@
-//! im2col / col2im kernels for the convolutional layer subsystem.
+//! Patch gather/scatter kernels for the convolutional layer subsystem:
+//! the implicit-GEMM inner gather plus the materialized im2col/col2im
+//! baseline built on top of it.
 //!
 //! Layout conventions (shared with `nn::layers::conv`):
 //!
@@ -11,30 +13,53 @@
 //!   `K = k*k*in_ch`, patch column order `(ky, kx, ch)`, and a constant
 //!   `1.0` in the last column — the bias folded exactly like the dense
 //!   path's `Haug` augmentation, so a conv weight is `[K+1, c_out]` with
-//!   the bias as its last row.
+//!   the bias as its last row. Zero-padded positions contribute `0.0`
+//!   patch entries (the bias column stays `1.0`).
 //!
-//! Both kernels fan out across example bands on the persistent worker
-//! pool ([`threadpool::scope`]); each example's rows/outputs are disjoint,
-//! so any banding is bitwise identical to the serial loop.
+//! [`gather_patch`] materializes ONE `[K+1]` patch row at a time — the
+//! implicit-GEMM kernels in `nn::layers::conv2d` call it inside their
+//! matmul loops so the full `[m, L·(K+1)]` unfold never exists.
+//! [`im2col`] (the baseline, kept for the e10 bench comparison and as a
+//! test oracle) is just that gather looped over all positions; both
+//! therefore produce bitwise-identical patch values. Batched im2col fans
+//! out across example bands on the persistent worker pool
+//! ([`threadpool::scope`]); each example's rows/outputs are disjoint, so
+//! any banding is bitwise identical to the serial loop.
 
 use crate::util::threadpool;
 
-/// Static geometry of one stride-1, valid-padding k×k convolution.
+/// Static geometry of one k×k convolution with stride `stride` and
+/// symmetric zero padding `pad` (stride 1 / pad 0 = the original valid
+/// convolution; see [`ConvGeom::unit`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvGeom {
     pub in_h: usize,
     pub in_w: usize,
     pub in_ch: usize,
     pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
 }
 
 impl ConvGeom {
+    /// Stride-1, valid-padding geometry (the PR-3 constructor).
+    pub fn unit(in_h: usize, in_w: usize, in_ch: usize, k: usize) -> ConvGeom {
+        ConvGeom {
+            in_h,
+            in_w,
+            in_ch,
+            k,
+            stride: 1,
+            pad: 0,
+        }
+    }
+
     pub fn out_h(&self) -> usize {
-        self.in_h + 1 - self.k
+        (self.in_h + 2 * self.pad - self.k) / self.stride + 1
     }
 
     pub fn out_w(&self) -> usize {
-        self.in_w + 1 - self.k
+        (self.in_w + 2 * self.pad - self.k) / self.stride + 1
     }
 
     /// Number of output positions L.
@@ -56,23 +81,96 @@ impl ConvGeom {
 /// single-threaded.
 const IM2COL_PAR_THRESHOLD: usize = 1 << 15;
 
-/// Unfold one NHWC example into its `[L, K+1]` patch matrix (bias column
-/// of ones included).
-fn im2col_example(g: &ConvGeom, x: &[f32], u: &mut [f32]) {
-    let (out_h, out_w, k, c) = (g.out_h(), g.out_w(), g.k, g.in_ch);
+/// Gather the `li`-th patch row of one NHWC example into `urow`
+/// (`[K+1]`, bias `1.0` in the last slot) — the implicit-GEMM inner
+/// gather. Out-of-bounds (padded) positions read as `0.0`. Produces
+/// exactly the values an im2col unfold would have materialized for this
+/// row, bitwise.
+pub fn gather_patch(g: &ConvGeom, x: &[f32], li: usize, urow: &mut [f32]) {
+    let (out_w, k, c) = (g.out_w(), g.k, g.in_ch);
     let kp1 = g.patch_len() + 1;
-    let row_stride = g.in_w * c;
     debug_assert_eq!(x.len(), g.in_len());
-    debug_assert_eq!(u.len(), g.positions() * kp1);
-    for oy in 0..out_h {
-        for ox in 0..out_w {
-            let urow = &mut u[(oy * out_w + ox) * kp1..(oy * out_w + ox + 1) * kp1];
-            for ky in 0..k {
-                let src = &x[(oy + ky) * row_stride + ox * c..][..k * c];
-                urow[ky * k * c..(ky + 1) * k * c].copy_from_slice(src);
-            }
-            urow[kp1 - 1] = 1.0;
+    debug_assert_eq!(urow.len(), kp1);
+    let row_stride = g.in_w * c;
+    let (oy, ox) = (li / out_w, li % out_w);
+    if g.pad == 0 {
+        // fast path: every (ky, kx) is in bounds, rows copy contiguously
+        let (y0, x0) = (oy * g.stride, ox * g.stride);
+        for ky in 0..k {
+            let src = &x[(y0 + ky) * row_stride + x0 * c..][..k * c];
+            urow[ky * k * c..(ky + 1) * k * c].copy_from_slice(src);
         }
+    } else {
+        let y0 = (oy * g.stride) as isize - g.pad as isize;
+        let x0 = (ox * g.stride) as isize - g.pad as isize;
+        for ky in 0..k {
+            let dst = &mut urow[ky * k * c..(ky + 1) * k * c];
+            let yy = y0 + ky as isize;
+            if yy < 0 || yy >= g.in_h as isize {
+                dst.fill(0.0);
+                continue;
+            }
+            let kx_lo = (-x0).clamp(0, k as isize) as usize;
+            let kx_hi = (g.in_w as isize - x0).clamp(0, k as isize) as usize;
+            dst[..kx_lo * c].fill(0.0);
+            dst[kx_hi * c..].fill(0.0);
+            if kx_lo < kx_hi {
+                let src0 = yy as usize * row_stride + (x0 + kx_lo as isize) as usize * c;
+                dst[kx_lo * c..kx_hi * c]
+                    .copy_from_slice(&x[src0..src0 + (kx_hi - kx_lo) * c]);
+            }
+        }
+    }
+    urow[kp1 - 1] = 1.0;
+}
+
+/// Scatter-add the `li`-th patch-gradient row `du` (`[K]`, the bias
+/// column already dropped by the caller) onto the NHWC input gradient
+/// `dx` — the col2im inner step, and the adjoint of [`gather_patch`].
+/// Contributions that fell on padding are discarded.
+pub fn scatter_patch_add(g: &ConvGeom, du: &[f32], li: usize, dx: &mut [f32]) {
+    let (out_w, k, c) = (g.out_w(), g.k, g.in_ch);
+    debug_assert_eq!(du.len(), g.patch_len());
+    debug_assert_eq!(dx.len(), g.in_len());
+    let row_stride = g.in_w * c;
+    let (oy, ox) = (li / out_w, li % out_w);
+    if g.pad == 0 {
+        let (y0, x0) = (oy * g.stride, ox * g.stride);
+        for ky in 0..k {
+            let dst = &mut dx[(y0 + ky) * row_stride + x0 * c..][..k * c];
+            for (d, &s) in dst.iter_mut().zip(&du[ky * k * c..(ky + 1) * k * c]) {
+                *d += s;
+            }
+        }
+    } else {
+        let y0 = (oy * g.stride) as isize - g.pad as isize;
+        let x0 = (ox * g.stride) as isize - g.pad as isize;
+        for ky in 0..k {
+            let yy = y0 + ky as isize;
+            if yy < 0 || yy >= g.in_h as isize {
+                continue;
+            }
+            let kx_lo = (-x0).clamp(0, k as isize) as usize;
+            let kx_hi = (g.in_w as isize - x0).clamp(0, k as isize) as usize;
+            if kx_lo >= kx_hi {
+                continue;
+            }
+            let dst0 = yy as usize * row_stride + (x0 + kx_lo as isize) as usize * c;
+            let srow = &du[ky * k * c + kx_lo * c..ky * k * c + kx_hi * c];
+            for (d, &s) in dx[dst0..dst0 + (kx_hi - kx_lo) * c].iter_mut().zip(srow) {
+                *d += s;
+            }
+        }
+    }
+}
+
+/// Unfold one NHWC example into its `[L, K+1]` patch matrix (bias column
+/// of ones included) — [`gather_patch`] looped over every position.
+fn im2col_example(g: &ConvGeom, x: &[f32], u: &mut [f32]) {
+    let kp1 = g.patch_len() + 1;
+    debug_assert_eq!(u.len(), g.positions() * kp1);
+    for (li, urow) in u.chunks_mut(kp1).enumerate() {
+        gather_patch(g, x, li, urow);
     }
 }
 
@@ -113,24 +211,14 @@ pub fn im2col(g: &ConvGeom, x: &[f32], u: &mut [f32], m: usize) {
 /// scatter-adds into the pixels it covered. The inverse of
 /// [`im2col_example`]'s gather.
 pub fn col2im_example(g: &ConvGeom, du: &[f32], dx: &mut [f32]) {
-    let (out_h, out_w, k, c) = (g.out_h(), g.out_w(), g.k, g.in_ch);
     let kc = g.patch_len();
-    let row_stride = g.in_w * c;
     debug_assert_eq!(du.len(), g.positions() * kc);
     debug_assert_eq!(dx.len(), g.in_len());
     for v in dx.iter_mut() {
         *v = 0.0;
     }
-    for oy in 0..out_h {
-        for ox in 0..out_w {
-            let drow = &du[(oy * out_w + ox) * kc..(oy * out_w + ox + 1) * kc];
-            for ky in 0..k {
-                let dst = &mut dx[(oy + ky) * row_stride + ox * c..][..k * c];
-                for (d, &s) in dst.iter_mut().zip(&drow[ky * k * c..(ky + 1) * k * c]) {
-                    *d += s;
-                }
-            }
-        }
+    for (li, drow) in du.chunks(kc).enumerate() {
+        scatter_patch_add(g, drow, li, dx);
     }
 }
 
@@ -140,12 +228,7 @@ mod tests {
     use crate::tensor::{Rng, Tensor};
 
     fn geom() -> ConvGeom {
-        ConvGeom {
-            in_h: 5,
-            in_w: 4,
-            in_ch: 2,
-            k: 3,
-        }
+        ConvGeom::unit(5, 4, 2, 3)
     }
 
     #[test]
@@ -155,6 +238,40 @@ mod tests {
         assert_eq!(g.positions(), 6);
         assert_eq!(g.patch_len(), 18);
         assert_eq!(g.in_len(), 40);
+    }
+
+    #[test]
+    fn strided_padded_geometry() {
+        // 5x5, k3, stride 2, pad 1: out = (5 + 2 - 3)/2 + 1 = 3
+        let g = ConvGeom {
+            in_h: 5,
+            in_w: 5,
+            in_ch: 1,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        };
+        assert_eq!((g.out_h(), g.out_w()), (3, 3));
+        // 'same' conv: 12x12, k3, stride 1, pad 1 keeps the spatial dims
+        let same = ConvGeom {
+            in_h: 12,
+            in_w: 12,
+            in_ch: 3,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        };
+        assert_eq!((same.out_h(), same.out_w()), (12, 12));
+        // stride with flooring: 6x6, k3, stride 2 -> (6-3)/2 + 1 = 2
+        let fl = ConvGeom {
+            in_h: 6,
+            in_w: 6,
+            in_ch: 1,
+            k: 3,
+            stride: 2,
+            pad: 0,
+        };
+        assert_eq!((fl.out_h(), fl.out_w()), (2, 2));
     }
 
     #[test]
@@ -178,15 +295,79 @@ mod tests {
         assert_eq!(urow[kp1 - 1], 1.0);
     }
 
+    /// Reference gather: index arithmetic written the obvious way,
+    /// sharing no code with [`gather_patch`].
+    fn reference_patch(g: &ConvGeom, x: &[f32], li: usize) -> Vec<f32> {
+        let (out_w, k, c) = (g.out_w(), g.k, g.in_ch);
+        let (oy, ox) = (li / out_w, li % out_w);
+        let mut row = vec![0f32; g.patch_len() + 1];
+        for ky in 0..k {
+            for kx in 0..k {
+                for ch in 0..c {
+                    let yy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    let xx = (ox * g.stride + kx) as isize - g.pad as isize;
+                    row[(ky * k + kx) * c + ch] = if yy >= 0
+                        && xx >= 0
+                        && (yy as usize) < g.in_h
+                        && (xx as usize) < g.in_w
+                    {
+                        x[(yy as usize * g.in_w + xx as usize) * c + ch]
+                    } else {
+                        0.0
+                    };
+                }
+            }
+        }
+        row[g.patch_len()] = 1.0;
+        row
+    }
+
+    #[test]
+    fn strided_padded_gather_matches_reference() {
+        let mut rng = Rng::new(3);
+        for g in [
+            ConvGeom {
+                in_h: 7,
+                in_w: 6,
+                in_ch: 2,
+                k: 3,
+                stride: 2,
+                pad: 1,
+            },
+            ConvGeom {
+                in_h: 5,
+                in_w: 5,
+                in_ch: 3,
+                k: 3,
+                stride: 1,
+                pad: 2,
+            },
+            ConvGeom {
+                in_h: 8,
+                in_w: 8,
+                in_ch: 1,
+                k: 2,
+                stride: 2,
+                pad: 0,
+            },
+        ] {
+            let x = Tensor::randn(vec![g.in_len()], &mut rng);
+            let mut urow = vec![0f32; g.patch_len() + 1];
+            for li in 0..g.positions() {
+                gather_patch(&g, x.data(), li, &mut urow);
+                assert_eq!(
+                    urow,
+                    reference_patch(&g, x.data(), li),
+                    "geom {g:?} position {li}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn batched_im2col_parallel_matches_serial_bitwise() {
         // large enough to cross the parallel threshold, ragged band sizes
-        let g = ConvGeom {
-            in_h: 12,
-            in_w: 12,
-            in_ch: 3,
-            k: 3,
-        };
+        let g = ConvGeom::unit(12, 12, 3, 3);
         let m = 37;
         let mut rng = Rng::new(5);
         let x = Tensor::randn(vec![m, g.in_len()], &mut rng);
@@ -208,37 +389,47 @@ mod tests {
     #[test]
     fn col2im_is_adjoint_of_im2col() {
         // <im2col(x), u> == <x, col2im(u)> for random x, u — the defining
-        // property of the gather/scatter pair (bias column excluded).
-        let g = geom();
+        // property of the gather/scatter pair (bias column excluded) —
+        // including strided/padded geometries.
         let mut rng = Rng::new(9);
-        let x = Tensor::randn(vec![g.in_len()], &mut rng);
-        let du = Tensor::randn(vec![g.positions() * g.patch_len()], &mut rng);
-        let kp1 = g.patch_len() + 1;
-        let mut u = vec![0f32; g.positions() * kp1];
-        im2col_example(&g, x.data(), &mut u);
-        let lhs: f64 = (0..g.positions())
-            .flat_map(|l| (0..g.patch_len()).map(move |p| (l, p)))
-            .map(|(l, p)| u[l * kp1 + p] as f64 * du.data()[l * g.patch_len() + p] as f64)
-            .sum();
-        let mut dx = vec![0f32; g.in_len()];
-        col2im_example(&g, du.data(), &mut dx);
-        let rhs: f64 = x
-            .data()
-            .iter()
-            .zip(&dx)
-            .map(|(&a, &b)| a as f64 * b as f64)
-            .sum();
-        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+        for g in [
+            geom(),
+            ConvGeom {
+                in_h: 6,
+                in_w: 7,
+                in_ch: 2,
+                k: 3,
+                stride: 2,
+                pad: 1,
+            },
+        ] {
+            let x = Tensor::randn(vec![g.in_len()], &mut rng);
+            let du = Tensor::randn(vec![g.positions() * g.patch_len()], &mut rng);
+            let kp1 = g.patch_len() + 1;
+            let mut u = vec![0f32; g.positions() * kp1];
+            im2col_example(&g, x.data(), &mut u);
+            let lhs: f64 = (0..g.positions())
+                .flat_map(|l| (0..g.patch_len()).map(move |p| (l, p)))
+                .map(|(l, p)| u[l * kp1 + p] as f64 * du.data()[l * g.patch_len() + p] as f64)
+                .sum();
+            let mut dx = vec![0f32; g.in_len()];
+            col2im_example(&g, du.data(), &mut dx);
+            let rhs: f64 = x
+                .data()
+                .iter()
+                .zip(&dx)
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "{g:?}: {lhs} vs {rhs}"
+            );
+        }
     }
 
     #[test]
     fn k1_conv_is_identity_unfold() {
-        let g = ConvGeom {
-            in_h: 2,
-            in_w: 2,
-            in_ch: 3,
-            k: 1,
-        };
+        let g = ConvGeom::unit(2, 2, 3, 1);
         let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
         let mut u = vec![0f32; g.positions() * 4];
         im2col_example(&g, &x, &mut u);

@@ -241,8 +241,10 @@ pub fn softmax_rows(a: &Tensor) -> Tensor {
 // ---------------------------------------------------------------------------
 
 /// Tile edge for the blocked matmul (f32: 64*64*4B = 16KiB per tile pair —
-/// comfortably L1/L2 resident).
-const BLOCK: usize = 64;
+/// comfortably L1/L2 resident). Shared with the implicit-GEMM conv
+/// forward so a gathered patch row accumulates in the same block order
+/// as [`matmul_into_slices`] — cross-implementation bitwise parity.
+pub(crate) const BLOCK: usize = 64;
 /// Below this many output elements the parallel dispatch overhead wins.
 const PAR_THRESHOLD: usize = 64 * 64 * 4;
 

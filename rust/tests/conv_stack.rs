@@ -11,6 +11,18 @@
 //! * the `digits_conv` trainer scenario end to end, checkpoint resume
 //!   included;
 //! * batch-size tolerance on conv stacks (m ≤ m_max bitwise).
+//!
+//! PR 4 additions (implicit GEMM + size-dispatched Gram norms):
+//!
+//! * strided/padded conv and `AvgPool2d` coverage — finite-difference
+//!   gradients, streamed norms vs the materialized oracle, batch-shrink
+//!   determinism on the implicit-GEMM path;
+//! * implicit-GEMM vs im2col baseline engines bitwise in all modes;
+//! * the Gram-form §6 norms vs the materialized oracle (tolerance — the
+//!   two forms are numerically, not bitwise, equivalent);
+//! * the degenerate-coefficient §6 replay shortcut (huge clip bound →
+//!   all-1 coefficients → replay skipped) against the materialized sum;
+//! * the `digits_conv_strided` scenario end to end + its config file.
 
 use pegrad::config::{Config, DataKind, PrivacyConfig, RunMode, SamplerKind};
 use pegrad::coordinator::{Checkpoint, Trainer};
@@ -331,6 +343,241 @@ fn conv_engine_serves_smaller_batches_bitwise() {
 }
 
 // ---------------------------------------------------------------------------
+// ISSUE 4: strided/padded conv + AvgPool2d + Gram dispatch + implicit GEMM
+// ---------------------------------------------------------------------------
+
+/// Strided (s2) + padded (p1) convs, average pooling, and a second conv
+/// whose geometry (L² = 81 < K·c_out = 96) dispatches the Gram-trick
+/// norm form in the §6 modes.
+fn strided_stack(m: usize) -> StackSpec {
+    StackSpec::parse(
+        "input 8x8x1, conv 4 k3 s2 p1 tanh, conv 6 k2 tanh, avgpool 3, flatten, dense 3",
+        Loss::SoftmaxCe,
+        m,
+    )
+    .unwrap()
+}
+
+/// Streamed norms on the strided/padded/avgpool stack match the
+/// materialized per-example oracle: conv layers bitwise in Mean mode
+/// (both sides run the same G-form arithmetic), dense and totals to
+/// tolerance.
+#[test]
+fn strided_stack_norms_match_materialized_oracle() {
+    let _guard = flops_guard();
+    let m = 6;
+    let stack = strided_stack(m);
+    let (params, x, y) = batch(&stack, m, 0xA4);
+    let mut engine = FusedEngine::from_stack(stack.clone());
+    engine.step(&params, &x, &y, EngineMode::Mean);
+    let streamed = engine.per_example_norms();
+    let pex = materialized_per_example(&stack, &params, &x, &y);
+    for j in 0..m {
+        for li in [0usize, 1] {
+            assert_eq!(
+                streamed.s_layers[j][li],
+                ops::sq_sum(&pex[j][li]) as f32,
+                "example {j} conv layer {li}"
+            );
+        }
+        let total: f64 = pex[j].iter().map(ops::sq_sum).sum();
+        prop::assert_close(streamed.s_total[j] as f64, total, 1e-3).unwrap();
+    }
+}
+
+/// The kernel-independent oracle on the new variants: engine gradients
+/// on the strided/padded/avgpool stack match central finite differences
+/// (avgpool is smooth, tanh everywhere — no kink filtering needed).
+#[test]
+fn strided_stack_gradients_match_finite_difference() {
+    let _guard = flops_guard();
+    for loss in [Loss::SoftmaxCe, Loss::Mse] {
+        let m = 3;
+        let mut stack = strided_stack(m);
+        stack.loss = loss;
+        let (params, x, y) = batch(&stack, m, 11);
+        let mut engine = FusedEngine::from_stack(stack.clone());
+        engine.step(&params, &x, &y, EngineMode::Mean);
+        let grads: Vec<Tensor> = engine.grads().to_vec();
+        let mut rng = Rng::new(5);
+        for li in 0..3 {
+            let (rows, cols) = (params[li].dims()[0], params[li].dims()[1]);
+            let mut probes: Vec<(usize, usize)> = (0..4)
+                .map(|_| {
+                    (
+                        rng.next_below(rows as u64) as usize,
+                        rng.next_below(cols as u64) as usize,
+                    )
+                })
+                .collect();
+            probes.push((rows - 1, 0)); // folded bias
+            for (r, c) in probes {
+                let h = 1e-2f32;
+                let mut pp = params.clone();
+                pp[li].set2(r, c, pp[li].at2(r, c) + h);
+                let fp = engine.forward_only(&pp, &x, &y);
+                let mut pm = params.clone();
+                pm[li].set2(r, c, pm[li].at2(r, c) - h);
+                let fm = engine.forward_only(&pm, &x, &y);
+                let fd = (fp - fm) / (2.0 * h);
+                prop::assert_close(grads[li].at2(r, c) as f64, fd as f64, 5e-2)
+                    .map_err(|e| format!("{loss:?} layer {li} ({r},{c}): {e}"))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+/// §6 on the Gram-dispatching stack: clip-mode gradients equal the
+/// coefficient-weighted sum of materialized per-example gradients, with
+/// the coefficients derived from the engine's own (Gram-form) norms.
+#[test]
+fn strided_stack_clip_and_normalize_match_materialized() {
+    let _guard = flops_guard();
+    let m = 5;
+    let stack = strided_stack(m);
+    let (params, x, y) = batch(&stack, m, 29);
+    let pex = materialized_per_example(&stack, &params, &x, &y);
+    let mut engine = FusedEngine::from_stack(stack.clone());
+    // clip: coefficients from the engine's streamed norms
+    let c = 0.4f32;
+    let stats = engine.step(&params, &x, &y, EngineMode::Clip { c, mean: false });
+    assert!(stats.clip_frac.is_some());
+    // the Gram-form norms agree with the materialized ones to tolerance
+    for (j, g) in pex.iter().enumerate() {
+        let want: f64 = g.iter().map(ops::sq_sum).sum();
+        prop::assert_close(engine.s_total()[j] as f64, want, 1e-3)
+            .map_err(|e| format!("example {j} norm: {e}"))
+            .unwrap();
+    }
+    let coefs: Vec<f32> = engine
+        .s_total()
+        .iter()
+        .map(|&s| (c / s.max(1e-30).sqrt()).min(1.0))
+        .collect();
+    for li in 0..3 {
+        let mut want = Tensor::zeros(engine.grads()[li].dims().to_vec());
+        for (j, g) in pex.iter().enumerate() {
+            ops::axpy(&mut want, coefs[j], &g[li]);
+        }
+        prop::assert_all_close(engine.grads()[li].data(), want.data(), 5e-3)
+            .map_err(|e| format!("clip layer {li}: {e}"))
+            .unwrap();
+    }
+    // normalize: every example rescaled to the target norm
+    let t = 1.5f32;
+    engine.step(&params, &x, &y, EngineMode::Normalize { target: t });
+    let coefs: Vec<f32> = engine
+        .s_total()
+        .iter()
+        .map(|&s| t / s.max(1e-24).sqrt() / m as f32)
+        .collect();
+    for li in 0..3 {
+        let mut want = Tensor::zeros(engine.grads()[li].dims().to_vec());
+        for (j, g) in pex.iter().enumerate() {
+            ops::axpy(&mut want, coefs[j], &g[li]);
+        }
+        prop::assert_all_close(engine.grads()[li].data(), want.data(), 5e-3)
+            .map_err(|e| format!("normalize layer {li}: {e}"))
+            .unwrap();
+    }
+}
+
+/// The degenerate-coefficient replay shortcut, end to end: a clip bound
+/// far above every norm leaves all coefficients at exactly 1, the conv
+/// replay is skipped in favor of the banked sum, and the gradients still
+/// equal the plain sum of materialized per-example gradients.
+#[test]
+fn conv_clip_with_huge_bound_takes_replay_shortcut() {
+    let _guard = flops_guard();
+    let m = 5;
+    let stack = cnn_stack("tanh", Loss::SoftmaxCe, m);
+    let (params, x, y) = batch(&stack, m, 71);
+    let mut engine = FusedEngine::from_stack(stack.clone());
+    let stats = engine.step(&params, &x, &y, EngineMode::Clip { c: 1e6, mean: false });
+    assert_eq!(stats.clip_frac, Some(0.0), "nothing may clip under c=1e6");
+    let pex = materialized_per_example(&stack, &params, &x, &y);
+    for li in 0..3 {
+        let mut want = Tensor::zeros(engine.grads()[li].dims().to_vec());
+        for g in pex.iter() {
+            ops::axpy(&mut want, 1.0, &g[li]);
+        }
+        prop::assert_all_close(engine.grads()[li].data(), want.data(), 5e-3)
+            .map_err(|e| format!("layer {li}: {e}"))
+            .unwrap();
+    }
+}
+
+/// Implicit GEMM vs the im2col baseline at the engine level: bitwise
+/// identical norms, losses and gradients in all three modes on the
+/// strided/padded/Gram-dispatching stack.
+#[test]
+fn implicit_engine_matches_im2col_engine_bitwise() {
+    let _guard = flops_guard();
+    use pegrad::nn::layers::ConvImpl;
+    let m = 6;
+    let stack = strided_stack(m);
+    let (params, x, y) = batch(&stack, m, 83);
+    let mut implicit = FusedEngine::from_stack(stack.clone());
+    let mut baseline = FusedEngine::from_stack_conv(stack.clone(), ConvImpl::Im2col);
+    for mode in [
+        EngineMode::Mean,
+        EngineMode::Clip { c: 0.3, mean: true },
+        EngineMode::Normalize { target: 1.0 },
+    ] {
+        implicit.step(&params, &x, &y, mode);
+        baseline.step(&params, &x, &y, mode);
+        assert_eq!(
+            implicit.s_total(),
+            baseline.s_total(),
+            "{mode:?}: norms diverged across conv implementations"
+        );
+        assert_eq!(implicit.per_ex_loss(), baseline.per_ex_loss(), "{mode:?}");
+        for (a, b) in implicit.grads().iter().zip(baseline.grads()) {
+            assert_eq!(
+                a.data(),
+                b.data(),
+                "{mode:?}: grads diverged across conv implementations"
+            );
+        }
+    }
+}
+
+/// Batch-size tolerance for the implicit-GEMM path on the new variants:
+/// a shrunken batch in a reused engine is bitwise identical to a fresh
+/// engine of exactly that size, in all three modes.
+#[test]
+fn strided_engine_serves_smaller_batches_bitwise() {
+    let _guard = flops_guard();
+    let stack = strided_stack(8);
+    let (params, x, y) = batch(&stack, 8, 91);
+    let small_m = 3;
+    let xs = Tensor::new(
+        vec![small_m, stack.in_len()],
+        x.data()[..small_m * stack.in_len()].to_vec(),
+    );
+    let ys = y.gather(&(0..small_m).collect::<Vec<_>>());
+    let mut big = FusedEngine::from_stack(stack.clone());
+    big.step(&params, &x, &y, EngineMode::Mean); // dirty at m=8
+    for mode in [
+        EngineMode::Mean,
+        EngineMode::Clip { c: 0.3, mean: true },
+        EngineMode::Normalize { target: 1.0 },
+    ] {
+        big.step(&params, &xs, &ys, mode);
+        let mut fresh = FusedEngine::from_stack(StackSpec {
+            m: small_m,
+            ..stack.clone()
+        });
+        fresh.step(&params, &xs, &ys, mode);
+        assert_eq!(big.s_total(), fresh.s_total(), "{mode:?} norms diverged");
+        for (a, b) in big.grads().iter().zip(fresh.grads()) {
+            assert_eq!(a.data(), b.data(), "{mode:?} grads diverged");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // digits_conv trainer scenario
 // ---------------------------------------------------------------------------
 
@@ -419,6 +666,48 @@ fn digits_conv_checkpoint_resume_continues() {
     let summary = tr2.run().unwrap();
     assert_eq!(summary.curve.first().unwrap().0, 30);
     assert_eq!(summary.curve.last().unwrap().0, 39);
+}
+
+/// The checked-in strided scenario file parses and its stack builds —
+/// the same config the CI smoke step trains.
+#[test]
+fn digits_conv_strided_config_parses() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../configs/digits_conv_strided.toml");
+    let cfg = Config::from_file(&path).unwrap();
+    assert_eq!(cfg.mode, RunMode::RustPegrad);
+    let stack = StackSpec::parse(&cfg.model_stack, Loss::SoftmaxCe, cfg.model_m).unwrap();
+    // conv1 'same' 12x12x8, avgpool 6x6x8, conv2 s2 2x2x16, dense 64->10
+    assert_eq!(stack.weight_shapes(), vec![(10, 8), (73, 16), (65, 10)]);
+    assert_eq!(stack.n_layers(), 5);
+}
+
+/// The strided/avgpool CNN trains on the digits scenario end to end
+/// (implicit-GEMM kernels throughout).
+#[test]
+fn digits_conv_strided_scenario_trains() {
+    let _guard = flops_guard();
+    let mut cfg = digits_conv_cfg("it-digits-conv-strided");
+    cfg.model_stack =
+        "input 12x12x1, conv 8 k3 p1 relu, avgpool 2, conv 16 k3 s2 relu, flatten, dense 10"
+            .into();
+    cfg.steps = 200;
+    cfg.eval_every = 100;
+    let summary = Trainer::new(cfg).unwrap().run().unwrap();
+    let k = 10;
+    let early: f32 =
+        summary.curve[..k].iter().map(|&(_, l)| l).sum::<f32>() / k as f32;
+    let late: f32 = summary.curve[summary.curve.len() - k..]
+        .iter()
+        .map(|&(_, l)| l)
+        .sum::<f32>()
+        / k as f32;
+    assert!(late < early * 0.85, "strided conv loss did not fall: {early} -> {late}");
+    assert!(
+        summary.eval_accuracy.unwrap() > 0.3,
+        "strided digits CNN should beat the 10% chance rate, got {:?}",
+        summary.eval_accuracy
+    );
 }
 
 /// Telemetry rides conv stacks: `pegrad monitor`-style run over the
