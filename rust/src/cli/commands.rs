@@ -176,10 +176,10 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
     let summary = tr.run()?;
     let mon = tr.telemetry().expect("monitor mode forces telemetry on");
     if let Some(out) = p.get("out") {
-        mon.write_report(std::path::Path::new(out))?;
+        mon.write_report_with(std::path::Path::new(out), tr.clip_controller())?;
         println!("report written to {out}");
     }
-    let report = mon.report();
+    let report = mon.report_with(tr.clip_controller());
     if p.has("print") {
         println!("{report}");
     }
@@ -195,6 +195,19 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
             "baseline {bpath}: {}\ndrift summary: {}",
             crate::telemetry::diff::render_summary(&diff),
             drift_path.display()
+        );
+    }
+    if let Some(ctrl) = tr.clip_controller() {
+        println!(
+            "adaptive clip: C {:.4} -> {:.4} over {} steps (target p{:.0}, sketch \
+             estimate {})",
+            ctrl.init_bound(),
+            ctrl.bound(),
+            ctrl.steps(),
+            ctrl.config().quantile * 100.0,
+            ctrl.quantile_estimate()
+                .map(|q| format!("{q:.4}"))
+                .unwrap_or_else(|| "n/a".into()),
         );
     }
     let gns = mon

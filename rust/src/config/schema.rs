@@ -6,7 +6,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Result};
 
 use crate::optim::Schedule;
-use crate::telemetry::TelemetryConfig;
+use crate::telemetry::{ClipConfig, TelemetryConfig};
 
 use super::parse::{parse_toml, Value};
 
@@ -136,6 +136,11 @@ pub struct Config {
     /// (histograms, outlier flags, gradient noise scale) for the
     /// rust-engine modes. Off by default.
     pub telemetry: TelemetryConfig,
+    /// `[clip]` section: adaptive quantile-tracked clipping — the §6
+    /// bound `C` (or the normalize target) follows a running quantile of
+    /// the streamed per-example norms (`telemetry::adaptive`). Off by
+    /// default: fixed-`C` configs parse and run bitwise unchanged.
+    pub clip: ClipConfig,
 }
 
 impl Default for Config {
@@ -168,6 +173,7 @@ impl Default for Config {
             model_stack: String::new(),
             normalize_target: 1.0,
             telemetry: TelemetryConfig::default(),
+            clip: ClipConfig::default(),
         }
     }
 }
@@ -231,6 +237,35 @@ impl Config {
                  (rust_pegrad|rust_clipped|rust_normalized): the layer taps \
                  stream out of the in-process fused engine, not the AOT artifacts"
             );
+        }
+        self.clip.validate()?;
+        if self.clip.adaptive {
+            if !self.mode.is_rust_engine() {
+                bail!(
+                    "clip.adaptive requires a rust-engine mode \
+                     (rust_pegrad|rust_clipped|rust_normalized): the controller \
+                     consumes the fused engine's streamed per-example norms"
+                );
+            }
+            // the controller starts at the mode's fixed bound and holds
+            // it through warmup; a start outside the guard band would be
+            // silently clamped, so reject it up front instead
+            let init = match self.mode {
+                RunMode::RustClipped => self.privacy.as_ref().map(|p| p.clip_c),
+                RunMode::RustNormalized => Some(self.normalize_target),
+                _ => None,
+            };
+            if let Some(c0) = init {
+                if !(self.clip.c_min..=self.clip.c_max).contains(&c0) {
+                    bail!(
+                        "clip.adaptive: the initial bound {c0} (privacy.clip_c / \
+                         normalize_target) must lie within [clip.c_min, clip.c_max] \
+                         = [{}, {}]",
+                        self.clip.c_min,
+                        self.clip.c_max
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -371,6 +406,14 @@ fn apply(cfg: &mut Config, map: &BTreeMap<String, Value>) -> Result<()> {
             "telemetry.warmup_steps" => {
                 cfg.telemetry.warmup_steps = v.as_usize().ok_or_else(fail)?
             }
+            "clip.adaptive" => cfg.clip.adaptive = v.as_bool().ok_or_else(fail)?,
+            "clip.quantile" => cfg.clip.quantile = v.as_f64().ok_or_else(fail)?,
+            "clip.eta" => cfg.clip.eta = v.as_f64().ok_or_else(fail)?,
+            "clip.warmup_steps" => {
+                cfg.clip.warmup_steps = v.as_usize().ok_or_else(fail)?
+            }
+            "clip.c_min" => cfg.clip.c_min = v.as_f64().ok_or_else(fail)? as f32,
+            "clip.c_max" => cfg.clip.c_max = v.as_f64().ok_or_else(fail)? as f32,
             other => bail!("unknown config key '{other}'"),
         }
     }
@@ -565,6 +608,113 @@ mod tests {
         cfg.apply_overrides(&[("telemetry.enabled".into(), "true".into())])
             .unwrap();
         assert!(cfg.telemetry.enabled);
+    }
+
+    #[test]
+    fn parse_clip_section() {
+        // full round-trip of the adaptive section (ISSUE 5 satellite)
+        let cfg = Config::from_toml(
+            r#"
+            mode = "rust_clipped"
+
+            [privacy]
+            clip_c = 1.0
+            noise_sigma = 0.8
+
+            [clip]
+            adaptive = true
+            quantile = 0.95
+            eta = 0.5
+            warmup_steps = 25
+            c_min = 0.01
+            c_max = 50.0
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.clip.adaptive);
+        assert_eq!(cfg.clip.quantile, 0.95);
+        assert_eq!(cfg.clip.eta, 0.5);
+        assert_eq!(cfg.clip.warmup_steps, 25);
+        assert_eq!(cfg.clip.c_min, 0.01);
+        assert_eq!(cfg.clip.c_max, 50.0);
+        // override path: --set clip.adaptive=true
+        let mut cfg = Config::from_toml("mode = \"rust_pegrad\"").unwrap();
+        cfg.apply_overrides(&[
+            ("clip.adaptive".into(), "true".into()),
+            ("clip.quantile".into(), "0.8".into()),
+        ])
+        .unwrap();
+        assert!(cfg.clip.adaptive);
+        assert_eq!(cfg.clip.quantile, 0.8);
+    }
+
+    #[test]
+    fn clip_validation() {
+        // quantile outside (0,1) rejected, adaptive or not
+        assert!(Config::from_toml("[clip]\nquantile = 1.0").is_err());
+        assert!(Config::from_toml("[clip]\nquantile = 0").is_err());
+        assert!(Config::from_toml("[clip]\nquantile = 1.5").is_err());
+        // non-positive eta rejected (and eta > 1)
+        assert!(Config::from_toml("[clip]\neta = 0").is_err());
+        assert!(Config::from_toml("[clip]\neta = -0.1").is_err());
+        assert!(Config::from_toml("[clip]\neta = 2").is_err());
+        // non-positive / inverted guard bounds rejected
+        assert!(Config::from_toml("[clip]\nc_min = 0").is_err());
+        assert!(Config::from_toml("[clip]\nc_min = -1").is_err());
+        assert!(Config::from_toml("[clip]\nc_min = 2.0\nc_max = 1.0").is_err());
+        // adaptive needs a rust-engine mode, like telemetry
+        let err = Config::from_toml("mode = \"pegrad\"\n[clip]\nadaptive = true")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rust-engine"), "{err}");
+        // an initial bound outside the guard band would be silently
+        // clamped by the controller — rejected at validation instead
+        let err = Config::from_toml(
+            "mode = \"rust_clipped\"\n[privacy]\nclip_c = 5e4\n[clip]\nadaptive = true",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("initial bound"), "{err}");
+        let err = Config::from_toml(
+            "mode = \"rust_normalized\"\nnormalize_target = 1e-6\n[clip]\nadaptive = true",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("initial bound"), "{err}");
+        // inside the band both modes validate
+        Config::from_toml(
+            "mode = \"rust_clipped\"\n[privacy]\nclip_c = 1.0\n[clip]\nadaptive = true",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn fixed_c_configs_parse_unchanged() {
+        // a pre-ISSUE-5 config (no [clip] section) must come out with the
+        // adaptive machinery off and every other field untouched — the
+        // fixed-C path is selected by default
+        let text = r#"
+            mode = "rust_clipped"
+            steps = 12
+
+            [model]
+            dims = [8, 24, 4]
+            m = 16
+
+            [privacy]
+            clip_c = 1.5
+            noise_sigma = 1.1
+            "#;
+        let cfg = Config::from_toml(text).unwrap();
+        assert_eq!(cfg.clip, crate::telemetry::ClipConfig::default());
+        assert!(!cfg.clip.adaptive);
+        assert_eq!(cfg.privacy.as_ref().unwrap().clip_c, 1.5);
+        assert_eq!(cfg.steps, 12);
+        // parsing twice is deterministic field-for-field
+        let again = Config::from_toml(text).unwrap();
+        assert_eq!(again.clip, cfg.clip);
+        assert_eq!(again.privacy, cfg.privacy);
+        assert_eq!(again.model_dims, cfg.model_dims);
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::runtime::{Manifest, Registry};
 use crate::sampler::{
     ImportanceConfig, ImportanceSampler, Sampler, UniformSampler,
 };
-use crate::telemetry::{LayerTap, TelemetryMonitor};
+use crate::telemetry::{ClipController, LayerTap, TeeTap, TelemetryMonitor};
 use crate::tensor::{ops, Rng, Tensor};
 use crate::util::threadpool::bounded;
 use crate::util::Timer;
@@ -76,6 +76,11 @@ pub struct Trainer {
     /// Streaming gradient-norm telemetry (`[telemetry]` section; rust
     /// modes only — the monitor taps the fused engine's backward pass).
     monitor: Option<TelemetryMonitor>,
+    /// Adaptive quantile-tracked clip bound (`[clip]` section; rust
+    /// modes only). Fed from the same engine tap stream as the monitor;
+    /// actuates the §6 bound in `rust_clipped` (and the target in
+    /// `rust_normalized`), observation-only under `rust_pegrad`.
+    clip: Option<ClipController>,
     pub metrics: MetricsLogger,
     step: usize,
     /// L3-vs-L2 step-time breakdown, filled when `PEGRAD_PROFILE=1`
@@ -197,6 +202,20 @@ impl Trainer {
             }
             mon
         });
+        let clip = cfg.clip.adaptive.then(|| {
+            // the initial bound is whatever the mode would have used as
+            // its fixed constant; the controller starts there and the
+            // warmup keeps it there until the sketch is populated
+            let init_c = match cfg.mode {
+                RunMode::RustClipped => cfg.privacy.as_ref().expect("validated").clip_c,
+                RunMode::RustNormalized => cfg.normalize_target,
+                // observation-only (Mean mode): no fixed bound exists to
+                // inherit, so start inside the guard band — keeps
+                // init_bound()/history[0] consistent in the reports
+                _ => 1.0f32.clamp(cfg.clip.c_min, cfg.clip.c_max),
+            };
+            ClipController::new(&cfg.clip, init_c)
+        });
         let metrics = MetricsLogger::new(&cfg.out_dir, &cfg.run_name, 25)?;
         let profile = std::env::var("PEGRAD_PROFILE")
             .ok()
@@ -217,6 +236,7 @@ impl Trainer {
             optimizer,
             accountant,
             monitor,
+            clip,
             metrics,
             step: 0,
             profile,
@@ -226,6 +246,11 @@ impl Trainer {
     /// The live telemetry monitor, when `[telemetry]` is enabled.
     pub fn telemetry(&self) -> Option<&TelemetryMonitor> {
         self.monitor.as_ref()
+    }
+
+    /// The live adaptive clip controller, when `[clip] adaptive = true`.
+    pub fn clip_controller(&self) -> Option<&ClipController> {
+        self.clip.as_ref()
     }
 
     /// Resume parameters/step/rng from a checkpoint.
@@ -362,7 +387,7 @@ impl Trainer {
                         .metrics
                         .dir()
                         .join(format!("telemetry-{:06}.json", self.step));
-                    if let Err(e) = mon.write_report(&path) {
+                    if let Err(e) = mon.write_report_with(&path, self.clip.as_ref()) {
                         log::warn!("telemetry snapshot failed: {e}");
                     }
                 }
@@ -408,11 +433,20 @@ impl Trainer {
         if let Some(p) = &self.profile {
             log::info!("PEGRAD_PROFILE {}", p.report());
         }
+        if let Some(ctrl) = &self.clip {
+            log::info!(
+                "adaptive clip: C {:.4} -> {:.4} tracking p{:.0} (sketch estimate {:.4})",
+                ctrl.init_bound(),
+                ctrl.bound(),
+                ctrl.config().quantile * 100.0,
+                ctrl.quantile_estimate().unwrap_or(f64::NAN)
+            );
+        }
         // telemetry is observation-only: a failed report write must not
         // turn a completed training run into an error
         let telemetry_path = self.monitor.as_ref().and_then(|mon| {
             let path = self.metrics.dir().join("telemetry.json");
-            match mon.write_report(&path) {
+            match mon.write_report_with(&path, self.clip.as_ref()) {
                 Ok(()) => {
                     log::info!("telemetry report: {}", path.display());
                     Some(path)
@@ -444,14 +478,19 @@ impl Trainer {
     /// the telemetry tap attached when configured), optional DP noise,
     /// optimizer update, sampler feedback. No artifacts, no device I/O.
     fn execute_step_rust(&mut self, batch: &PreparedBatch, lr: f32) -> Result<StepRecord> {
+        // adaptive bound (ISSUE 5): the controller's C — fed by the tap
+        // stream of every PREVIOUS step — replaces the fixed constant in
+        // the §6 coefficient vector; under rust_pegrad it only observes
+        let adaptive_c = self.clip.as_ref().map(|c| c.bound());
         let mode = match self.cfg.mode {
             RunMode::RustPegrad => EngineMode::Mean,
             RunMode::RustClipped => EngineMode::Clip {
-                c: self.cfg.privacy.as_ref().expect("validated").clip_c,
+                c: adaptive_c
+                    .unwrap_or_else(|| self.cfg.privacy.as_ref().expect("validated").clip_c),
                 mean: true,
             },
             RunMode::RustNormalized => EngineMode::Normalize {
-                target: self.cfg.normalize_target,
+                target: adaptive_c.unwrap_or(self.cfg.normalize_target),
             },
             _ => unreachable!("execute_step_rust called for an artifact mode"),
         };
@@ -461,10 +500,20 @@ impl Trainer {
         let weights = matches!(self.cfg.mode, RunMode::RustPegrad)
             .then_some(batch.weights.as_slice());
         let engine = self.engine.as_mut().expect("rust modes own an engine");
-        let tap = self
-            .monitor
-            .as_mut()
-            .map(|m| m as &mut dyn LayerTap);
+        // one tap slot on the engine: monitor, controller, or both tee'd
+        let mut tee;
+        let tap: Option<&mut dyn LayerTap> = match (self.monitor.as_mut(), self.clip.as_mut()) {
+            (Some(m), Some(c)) => {
+                tee = TeeTap {
+                    first: m,
+                    second: c,
+                };
+                Some(&mut tee)
+            }
+            (Some(m), None) => Some(m),
+            (None, Some(c)) => Some(c),
+            (None, None) => None,
+        };
         let stats =
             engine.step_streamed(&self.params, &batch.x, &batch.y, mode, weights, tap);
         // complete the telemetry step BEFORE DP noise: the GNS big-batch
@@ -477,8 +526,12 @@ impl Trainer {
         if let (RunMode::RustClipped, Some(p)) = (self.cfg.mode, self.cfg.privacy.clone()) {
             if p.noise_sigma > 0.0 {
                 // DP-SGD gaussian noise on the MEAN clipped gradient:
-                // sigma * C / m per coordinate, from the run RNG.
-                let scale = p.noise_sigma * p.clip_c / self.stack.m as f32;
+                // sigma * C / m per coordinate, from the run RNG. Under
+                // adaptive clipping the per-step sensitivity is the
+                // CURRENT bound, so the noise scales with it (Andrew et
+                // al. 2021), not with the initial clip_c.
+                let c_used = adaptive_c.unwrap_or(p.clip_c);
+                let scale = p.noise_sigma * c_used / self.stack.m as f32;
                 let rng = &mut self.rng;
                 for g in self.engine.as_mut().unwrap().grads_mut() {
                     for v in g.data_mut() {

@@ -152,6 +152,14 @@ impl FusedEngine {
         &self.ws.norms[..self.ws.last_m]
     }
 
+    /// The per-example coefficient vector the last step folded into its
+    /// gradient accumulation: the (weighted) `1/m` in Mean mode, the §6
+    /// rescale factors in Clip/Normalize — e.g. `min(1, C/‖g_j‖)/m` in
+    /// mean-clip mode, where `C` may come from the adaptive controller.
+    pub fn coefs(&self) -> &[f32] {
+        &self.ws.coef[..self.ws.last_m]
+    }
+
     pub fn per_ex_loss(&self) -> &[f32] {
         &self.ws.per_ex_loss[..self.ws.last_m]
     }
@@ -696,12 +704,9 @@ mod tests {
         let weights: Vec<f32> = (0..6).map(|j| 0.05 + 0.03 * j as f32).collect();
         engine.step_streamed(&mlp.params, &x, &y, EngineMode::Mean, Some(&weights), None);
         let pex = crate::pegrad::naive::per_example_grads(&mlp, &x, &y);
+        let want = crate::pegrad::oracle::weighted_sum(&pex, &weights);
         for i in 0..mlp.spec.n_layers() {
-            let mut want = Tensor::zeros(engine.grads()[i].dims().to_vec());
-            for (j, w) in weights.iter().enumerate() {
-                ops::axpy(&mut want, *w, &pex[j][i]);
-            }
-            prop::assert_all_close(engine.grads()[i].data(), want.data(), 1e-3)
+            prop::assert_all_close(engine.grads()[i].data(), want[i].data(), 1e-3)
                 .map_err(|e| format!("layer {i}: {e}"))
                 .unwrap();
         }

@@ -2,13 +2,19 @@
 //!
 //! These are the *oracle* versions used to cross-validate the PJRT
 //! artifacts and to drive the E1 op-count experiment; the production path
-//! executes the same math inside the AOT-compiled HLO.
+//! executes the same math inside the AOT-compiled HLO. The [`oracle`]
+//! module is the shared materialized per-example-gradient harness every
+//! test and bench oracle now goes through (engine-based batch-1
+//! materialization, exact §6 updates, exact sorted quantiles, and the
+//! exact-quantile adaptive-clip controller).
 
 pub mod clip;
 pub mod flops;
 pub mod goodfellow;
 pub mod naive;
+pub mod oracle;
 
 pub use clip::{clip_coefficients, clip_pipeline_fused, clipped_grads, normalized_grads};
 pub use goodfellow::{per_example_norms, per_example_norms_streamed, PerExampleNorms};
 pub use naive::per_example_norms_naive;
+pub use oracle::{ExactClipController, PerExampleOracle};

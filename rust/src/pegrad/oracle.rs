@@ -1,0 +1,347 @@
+//! The shared materialized per-example-gradient oracle (the test/bench
+//! backbone, ISSUE 5).
+//!
+//! Before this module, three consumers each re-implemented the same
+//! reference machinery: `tests/fused_engine.rs` (clip/normalize the
+//! naive per-example gradients by hand), `tests/conv_stack.rs`
+//! (`materialized_per_example` — batch-1 engine runs) and
+//! `benches/e10_conv.rs` (the solo-engine norm loop). It now lives here
+//! once:
+//!
+//! * [`PerExampleOracle`] — materializes each example's FULL gradient by
+//!   running a batch-1 fused engine with unit weight (the accumulators
+//!   ARE `G_j`); works for every stack the engine runs, dense or conv.
+//!   This is the §3-style oracle: the O(m·params) memory and m-fold
+//!   traversal cost the paper's trick avoids.
+//! * Exact update references on the materialized gradients:
+//!   [`s_totals_of`] (exact squared norms), [`weighted_sum`],
+//!   [`clipped_sum`] / [`clip_coefs`] (§6 clipping),
+//!   [`normalized_mean`] / [`normalize_coefs`] (§6 normalized updates).
+//! * Exact quantile references: [`exact_quantile`] (sorted,
+//!   linear-interpolated — the ground truth every sketch test compares
+//!   against) and [`ExactClipController`] — the adaptive-clipping oracle:
+//!   the same update arithmetic as
+//!   [`crate::telemetry::adaptive::ClipController`] (they share
+//!   [`crate::telemetry::adaptive::clip_update`]) but driven by exact
+//!   sorted quantiles over the retained stream, so any divergence
+//!   between the two controllers is exactly the P² estimation gap.
+
+use crate::engine::{EngineMode, FusedEngine};
+use crate::nn::layers::StackSpec;
+use crate::nn::loss::Targets;
+use crate::telemetry::adaptive::{clip_update, ClipConfig};
+use crate::tensor::{ops, Tensor};
+use crate::util::stats::percentile_sorted;
+
+/// Materialized per-example gradients via batch-1 engine runs.
+///
+/// Reusable: one oracle holds one `m = 1` engine (and its workspace), so
+/// benches can call it in a timing loop without re-allocating.
+pub struct PerExampleOracle {
+    in_len: usize,
+    solo: FusedEngine,
+}
+
+impl PerExampleOracle {
+    pub fn new(stack: &StackSpec) -> PerExampleOracle {
+        PerExampleOracle {
+            in_len: stack.in_len(),
+            solo: FusedEngine::from_stack(StackSpec {
+                m: 1,
+                ..stack.clone()
+            }),
+        }
+    }
+
+    /// Run example `j` through the batch-1 engine with unit weight; the
+    /// engine's accumulators are then exactly `G_j`, one tensor per
+    /// weighted layer, readable via `self.solo.grads()`.
+    fn run_one(&mut self, params: &[Tensor], x: &Tensor, y: &Targets, j: usize) {
+        let xj = Tensor::new(vec![1, self.in_len], x.row(j).to_vec());
+        let yj = y.gather(&[j]);
+        self.solo
+            .step_streamed(params, &xj, &yj, EngineMode::Mean, Some(&[1.0]), None);
+    }
+
+    /// Example `j`'s materialized gradient, one tensor per weighted layer.
+    pub fn example_grads(
+        &mut self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Targets,
+        j: usize,
+    ) -> Vec<Tensor> {
+        self.run_one(params, x, y, j);
+        self.solo.grads().to_vec()
+    }
+
+    /// All m examples' materialized gradients (`[example][layer]`).
+    pub fn all_grads(&mut self, params: &[Tensor], x: &Tensor, y: &Targets) -> Vec<Vec<Tensor>> {
+        (0..x.dims()[0])
+            .map(|j| self.example_grads(params, x, y, j))
+            .collect()
+    }
+
+    /// Exact squared total norm of example `j`, without cloning the
+    /// materialized gradient (the bench hot loop).
+    pub fn s_total_one(&mut self, params: &[Tensor], x: &Tensor, y: &Targets, j: usize) -> f64 {
+        self.run_one(params, x, y, j);
+        self.solo.grads().iter().map(ops::sq_sum).sum()
+    }
+
+    /// Exact squared total norms for a subset of examples (the sampled
+    /// bench oracle).
+    pub fn s_totals_subset(
+        &mut self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Targets,
+        idx: &[usize],
+    ) -> Vec<f64> {
+        idx.iter()
+            .map(|&j| self.s_total_one(params, x, y, j))
+            .collect()
+    }
+
+    /// Exact squared total norms for every example.
+    pub fn s_totals(&mut self, params: &[Tensor], x: &Tensor, y: &Targets) -> Vec<f64> {
+        let idx: Vec<usize> = (0..x.dims()[0]).collect();
+        self.s_totals_subset(params, x, y, &idx)
+    }
+
+    /// Live bytes of the batch-1 engine (the bench memory metric; add
+    /// `m * param_count * 4` for the m materialized gradients a full
+    /// oracle pass must hold).
+    pub fn live_bytes(&self) -> usize {
+        self.solo.live_bytes()
+    }
+}
+
+/// Exact squared total norms from materialized gradients:
+/// `s_j = Σ_l ‖G_j^{(l)}‖²` in f64.
+pub fn s_totals_of(pex: &[Vec<Tensor>]) -> Vec<f64> {
+    pex.iter()
+        .map(|g| g.iter().map(ops::sq_sum).sum())
+        .collect()
+}
+
+/// `Σ_j coef_j · G_j`, layer by layer — the exact reference for every
+/// coefficient-weighted engine mode.
+pub fn weighted_sum(pex: &[Vec<Tensor>], coef: &[f32]) -> Vec<Tensor> {
+    assert_eq!(pex.len(), coef.len(), "one coefficient per example");
+    assert!(!pex.is_empty(), "weighted_sum needs >= 1 example");
+    let n_layers = pex[0].len();
+    (0..n_layers)
+        .map(|li| {
+            let mut acc = Tensor::zeros(pex[0][li].dims().to_vec());
+            for (g, &w) in pex.iter().zip(coef) {
+                ops::axpy(&mut acc, w, &g[li]);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// §6 clip coefficients from exact squared norms:
+/// `coef_j = min(1, C / sqrt(s_j))` (same epsilon guard as the engine).
+pub fn clip_coefs(s_totals: &[f64], c: f32) -> Vec<f32> {
+    s_totals
+        .iter()
+        .map(|&s| (c as f64 / s.max(1e-30).sqrt()).min(1.0) as f32)
+        .collect()
+}
+
+/// Exact §6 clipped gradient SUM over materialized per-example grads
+/// (divide by m for the DP-SGD mean update).
+pub fn clipped_sum(pex: &[Vec<Tensor>], c: f32) -> Vec<Tensor> {
+    weighted_sum(pex, &clip_coefs(&s_totals_of(pex), c))
+}
+
+/// §6 normalize coefficients: every example rescaled to the common norm
+/// `target`, then averaged (`/ m`).
+pub fn normalize_coefs(s_totals: &[f64], target: f32) -> Vec<f32> {
+    let m = s_totals.len() as f32;
+    s_totals
+        .iter()
+        .map(|&s| (target as f64 / s.max(1e-24).sqrt()) as f32 / m)
+        .collect()
+}
+
+/// Exact §6 normalized-update MEAN over materialized per-example grads.
+pub fn normalized_mean(pex: &[Vec<Tensor>], target: f32) -> Vec<Tensor> {
+    weighted_sum(pex, &normalize_coefs(&s_totals_of(pex), target))
+}
+
+/// Exact sorted quantile of a value set (linear interpolation, the
+/// `percentile_sorted` convention); non-finite values are excluded, the
+/// same filter the streaming sketches apply.
+pub fn exact_quantile(values: &[f32], q: f64) -> f64 {
+    let mut s: Vec<f64> = values
+        .iter()
+        .filter(|v| v.is_finite())
+        .map(|&v| v as f64)
+        .collect();
+    assert!(!s.is_empty(), "exact_quantile needs >= 1 finite value");
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, q.clamp(0.0, 1.0) * 100.0)
+}
+
+/// The exact-quantile adaptive-clipping controller: identical update
+/// arithmetic to [`crate::telemetry::adaptive::ClipController`] (shared
+/// [`clip_update`], same warmup and guard semantics) but the quantile
+/// estimate is the EXACT sorted quantile of every norm observed so far.
+/// O(stream) memory and O(n log n) per step — the oracle the sketch
+/// controller is property-tested against, never a production path.
+pub struct ExactClipController {
+    cfg: ClipConfig,
+    values: Vec<f32>,
+    c: f64,
+    steps: u64,
+}
+
+impl ExactClipController {
+    pub fn new(cfg: &ClipConfig, init_c: f32) -> ExactClipController {
+        assert!(init_c > 0.0 && init_c.is_finite(), "init clip bound must be > 0");
+        ExactClipController {
+            cfg: cfg.clone(),
+            values: Vec::new(),
+            c: (init_c as f64).clamp(cfg.c_min as f64, cfg.c_max as f64),
+            steps: 0,
+        }
+    }
+
+    pub fn bound(&self) -> f32 {
+        self.c as f32
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Observe one step's per-example L2 norms (mirror of
+    /// `ClipController::observe_norms`).
+    pub fn observe_norms(&mut self, norms: &[f32]) {
+        self.values.extend(norms.iter().copied().filter(|v| v.is_finite()));
+        self.steps += 1;
+        if self.steps as usize > self.cfg.warmup_steps && !self.values.is_empty() {
+            let q = exact_quantile(&self.values, self.cfg.quantile);
+            self.c = clip_update(self.c, q, &self.cfg);
+        }
+    }
+
+    /// Observe SQUARED totals (the `on_step_end` payload), applying the
+    /// same non-finite-preserving sqrt as the sketch controller.
+    pub fn observe_step_totals(&mut self, s_total: &[f32]) {
+        let norms: Vec<f32> = s_total
+            .iter()
+            .map(|&s| {
+                if s.is_finite() {
+                    s.max(0.0).sqrt()
+                } else {
+                    f32::NAN
+                }
+            })
+            .collect();
+        self.observe_norms(&norms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Loss, Mlp, ModelSpec};
+    use crate::pegrad::naive;
+    use crate::tensor::ops::Activation;
+    use crate::tensor::Rng;
+    use crate::util::prop;
+
+    fn dense_case(m: usize, seed: u64) -> (Mlp, Tensor, Targets, StackSpec) {
+        let spec =
+            ModelSpec::new(vec![5, 8, 4], Activation::Tanh, Loss::SoftmaxCe, m).unwrap();
+        let mut rng = Rng::new(seed);
+        let mlp = Mlp::init(spec.clone(), &mut rng);
+        let x = ops::scale(&Tensor::randn(vec![m, 5], &mut rng), 2.0);
+        let y = Targets::Classes((0..m).map(|j| (j % 4) as i32).collect());
+        let stack = StackSpec::from_dense(&spec);
+        (mlp, x, y, stack)
+    }
+
+    /// The engine-based oracle agrees with the INDEPENDENT Mlp-based
+    /// naive oracle (m batch-1 reference backward passes) on dense
+    /// stacks — the two materializations share no kernels beyond ops.
+    #[test]
+    fn oracle_matches_mlp_naive_oracle() {
+        let (mlp, x, y, stack) = dense_case(5, 31);
+        let mut oracle = PerExampleOracle::new(&stack);
+        let ours = oracle.all_grads(&mlp.params, &x, &y);
+        let naive = naive::per_example_grads(&mlp, &x, &y);
+        for j in 0..5 {
+            for (li, (a, b)) in ours[j].iter().zip(&naive[j]).enumerate() {
+                prop::assert_all_close(a.data(), b.data(), 1e-3)
+                    .map_err(|e| format!("example {j} layer {li}: {e}"))
+                    .unwrap();
+            }
+        }
+        let s = oracle.s_totals(&mlp.params, &x, &y);
+        let s_of = s_totals_of(&ours);
+        for (a, b) in s.iter().zip(&s_of) {
+            prop::assert_close(*a, *b, 1e-6).unwrap();
+        }
+    }
+
+    /// clipped_sum / normalized_mean agree with the two-pass §6
+    /// reference pipeline on the same model.
+    #[test]
+    fn exact_updates_match_two_pass_reference() {
+        let (mlp, x, y, stack) = dense_case(6, 57);
+        let mut oracle = PerExampleOracle::new(&stack);
+        let pex = oracle.all_grads(&mlp.params, &x, &y);
+        let (fwd, bwd) = mlp.forward_backward(&x, &y);
+        let c = 0.4f32;
+        let (want, _, _) = crate::pegrad::clip::clip_pipeline(&mlp, &fwd, &bwd, c);
+        for (a, b) in clipped_sum(&pex, c).iter().zip(&want) {
+            prop::assert_all_close(a.data(), b.data(), 5e-3).unwrap();
+        }
+        let norms = crate::pegrad::per_example_norms(&fwd, &bwd);
+        let t = 1.5f32;
+        let want_n = crate::pegrad::normalized_grads(&fwd, &bwd, &norms, t);
+        for (a, b) in normalized_mean(&pex, t).iter().zip(&want_n) {
+            prop::assert_all_close(a.data(), b.data(), 5e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn exact_quantile_matches_percentile_convention() {
+        let v: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        assert!((exact_quantile(&v, 0.5) - 50.5).abs() < 1e-9);
+        assert_eq!(exact_quantile(&v, 0.0), 1.0);
+        assert_eq!(exact_quantile(&v, 1.0), 100.0);
+        // non-finite excluded
+        assert_eq!(exact_quantile(&[1.0, f32::NAN, 3.0], 1.0), 3.0);
+    }
+
+    /// With a stream whose quantile the P² sketch reproduces exactly
+    /// (constant values), the sketch and exact controllers are
+    /// IDENTICAL step for step — the shared update arithmetic is the
+    /// same code.
+    #[test]
+    fn controllers_identical_on_constant_streams() {
+        let cfg = ClipConfig {
+            adaptive: true,
+            quantile: 0.9,
+            eta: 0.25,
+            warmup_steps: 2,
+            c_min: 1e-3,
+            c_max: 1e3,
+        };
+        let mut sketch = crate::telemetry::ClipController::new(&cfg, 0.5);
+        let mut exact = ExactClipController::new(&cfg, 0.5);
+        let batch = vec![4.0f32; 16];
+        for _ in 0..40 {
+            sketch.observe_norms(&batch);
+            exact.observe_norms(&batch);
+            assert_eq!(sketch.bound(), exact.bound());
+        }
+        assert!((sketch.bound() - 4.0).abs() < 0.05);
+    }
+}

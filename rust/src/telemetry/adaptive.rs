@@ -1,0 +1,435 @@
+//! Adaptive quantile-tracked clipping: close the loop from the streamed
+//! per-example gradient norms back to the §6 clip bound `C`.
+//!
+//! The paper's §6 rescale takes `C` as a fixed constant; the telemetry
+//! subsystem already streams every example's squared gradient norm
+//! through the engine's [`LayerTap`] on every step, at zero extra
+//! traversals. [`ClipController`] consumes exactly that stream (it IS a
+//! `LayerTap`: `on_step_end` feeds the per-example totals into a P²
+//! quantile sketch) and keeps `C` tracking a target quantile of the
+//! running norm distribution — the Andrew et al. 2021 quantile-tracking
+//! idea, realized on the Jain & Chlamtac sketch the telemetry subsystem
+//! already maintains.
+//!
+//! # Update rule
+//!
+//! Let `q̂_t` be the sketch's estimate of the `p`-quantile of all norms
+//! `‖g_j‖` observed through step `t`, and `η ∈ (0, 1]` the adaptation
+//! rate. After each observed step past the warmup,
+//!
+//! ```text
+//! ln C_{t+1} = (1 − η) · ln C_t + η · ln q̂_t        (geometric EMA)
+//! C_{t+1}   ← clamp(C_{t+1}, c_min, c_max)          (guard rails)
+//! ```
+//!
+//! `η = 1` degenerates to the **direct quantile snap** `C_{t+1} = q̂_t`;
+//! smaller `η` moves `C` toward the quantile geometrically (norms span
+//! decades, so the EMA lives in log space — a multiplicative step, never
+//! a sign flip). During the first `warmup_steps` steps the sketch fills
+//! but `C` stays at its initial value, and the floor/ceiling clamp keeps
+//! a corrupted stream (all-zero or exploding norms) from driving `C`
+//! somewhere no gradient survives.
+//!
+//! # Mapping onto the §6 coefficient vector
+//!
+//! The controller owns ONE scalar. The trainer reads `bound()` *before*
+//! the step and passes it as `EngineMode::Clip { c, .. }` (or the
+//! `Normalize` target), so the fused engine builds its per-example
+//! coefficient vector `coef_j = min(1, C_t / ‖g_j‖)` exactly as for a
+//! fixed bound — zero extra traversals, zero extra allocations, and the
+//! §6 rescale stays folded into the gradient matmul. The norms of step
+//! `t` enter the sketch during that same step's backward traversal (the
+//! tap fires before the coefficients are formed), so `C_t` reflects the
+//! stream through step `t − 1`: one step of staleness, the same the
+//! importance sampler's EMA is built around. Under DP-SGD the per-step
+//! sensitivity is the CURRENT bound, so the trainer scales its Gaussian
+//! noise by `σ·C_t/m` (not the initial `clip_c`).
+//!
+//! The exact-arithmetic counterpart driven by sorted quantiles instead
+//! of the sketch lives in [`crate::pegrad::oracle::ExactClipController`]
+//! — both share [`clip_update`], so controller tests reduce to the
+//! sketch-vs-exact quantile gap.
+
+use crate::util::Json;
+
+use super::sketch::P2Quantile;
+use super::LayerTap;
+
+/// Runtime knobs for adaptive clipping (`[clip]` config section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClipConfig {
+    /// Master switch; when false the trainer keeps the fixed-`C` path
+    /// bitwise unchanged (no controller is ever constructed).
+    pub adaptive: bool,
+    /// Target quantile `p ∈ (0,1)` of the per-example norm distribution.
+    pub quantile: f64,
+    /// Adaptation rate `η ∈ (0,1]`; `1` = direct quantile snap, smaller
+    /// values blend geometrically (log-space EMA).
+    pub eta: f64,
+    /// Steps the sketch fills before the first update; `C` stays at its
+    /// initial value until then.
+    pub warmup_steps: usize,
+    /// Floor for the adapted bound (> 0).
+    pub c_min: f32,
+    /// Ceiling for the adapted bound (> `c_min`).
+    pub c_max: f32,
+}
+
+impl Default for ClipConfig {
+    fn default() -> Self {
+        ClipConfig {
+            adaptive: false,
+            quantile: 0.9,
+            eta: 0.25,
+            warmup_steps: 10,
+            c_min: 1e-4,
+            c_max: 1e4,
+        }
+    }
+}
+
+impl ClipConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !(0.0 < self.quantile && self.quantile < 1.0) {
+            anyhow::bail!("clip.quantile must be in (0,1)");
+        }
+        if !(0.0 < self.eta && self.eta <= 1.0) {
+            anyhow::bail!("clip.eta must be in (0,1] (1 = direct quantile snap)");
+        }
+        if !(self.c_min > 0.0 && self.c_min.is_finite()) {
+            anyhow::bail!("clip.c_min must be > 0");
+        }
+        if !(self.c_max > self.c_min && self.c_max.is_finite()) {
+            anyhow::bail!("clip.c_max must be > clip.c_min");
+        }
+        Ok(())
+    }
+}
+
+/// One controller update: move `c` toward the quantile estimate `q_hat`
+/// per the module-docs rule. Shared verbatim by the sketch-driven
+/// [`ClipController`] and the exact-quantile oracle controller so their
+/// divergence is exactly the quantile-estimate gap.
+pub fn clip_update(c: f64, q_hat: f64, cfg: &ClipConfig) -> f64 {
+    let (lo, hi) = (cfg.c_min as f64, cfg.c_max as f64);
+    let q = q_hat.max(1e-12);
+    let next = if cfg.eta >= 1.0 {
+        q // exact snap: skip the ln/exp round-trip
+    } else {
+        ((1.0 - cfg.eta) * c.max(1e-12).ln() + cfg.eta * q.ln()).exp()
+    };
+    next.clamp(lo, hi)
+}
+
+/// Most recent history entries serialized per report. The full history
+/// stays in memory (4 bytes/step — negligible); serializing all of it
+/// into every PERIODIC telemetry snapshot would make total snapshot
+/// cost grow quadratically with step count, so each report carries the
+/// last `HISTORY_JSON_CAP` entries plus the offset they start at.
+pub const HISTORY_JSON_CAP: usize = 4096;
+
+/// The adaptive clip bound, driven by the streamed per-example norms.
+///
+/// Feed it either as a [`LayerTap`] (the trainer hands it the engine's
+/// tap slot, tee'd with the telemetry monitor when both are on) or
+/// directly via [`ClipController::observe_norms`]; read the bound for
+/// the NEXT step via [`ClipController::bound`].
+pub struct ClipController {
+    cfg: ClipConfig,
+    sketch: P2Quantile,
+    c: f64,
+    init_c: f64,
+    steps: u64,
+    /// `history[t]` = the bound in force AFTER observing step `t`
+    /// (i.e. the `C` step `t + 1` will clip with).
+    history: Vec<f32>,
+    last_estimate: Option<f64>,
+}
+
+impl ClipController {
+    /// `init_c` is the bound held through warmup. It is clamped into
+    /// `[c_min, c_max]` as a last-resort guard — the config layer
+    /// rejects adaptive configs whose fixed bound lies outside the
+    /// guard band, so the trainer path never triggers the clamp.
+    pub fn new(cfg: &ClipConfig, init_c: f32) -> ClipController {
+        assert!(init_c > 0.0 && init_c.is_finite(), "init clip bound must be > 0");
+        ClipController {
+            cfg: cfg.clone(),
+            sketch: P2Quantile::new(cfg.quantile),
+            c: (init_c as f64).clamp(cfg.c_min as f64, cfg.c_max as f64),
+            init_c: init_c as f64,
+            steps: 0,
+            history: Vec::with_capacity(1024),
+            last_estimate: None,
+        }
+    }
+
+    /// The bound the next step should clip (or normalize) with.
+    pub fn bound(&self) -> f32 {
+        self.c as f32
+    }
+
+    pub fn init_bound(&self) -> f32 {
+        self.init_c as f32
+    }
+
+    /// Observed steps (one per `observe_norms`/`on_step_end`).
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Per-step bound history (one entry per observed step).
+    pub fn history(&self) -> &[f32] {
+        &self.history
+    }
+
+    /// Most recent sketch estimate of the target quantile.
+    pub fn quantile_estimate(&self) -> Option<f64> {
+        self.last_estimate
+    }
+
+    pub fn config(&self) -> &ClipConfig {
+        &self.cfg
+    }
+
+    /// Observe one step's per-example gradient L2 norms and update the
+    /// bound. Non-finite values are excluded from the sketch (a NaN
+    /// marker would poison every later estimate) but still count toward
+    /// the step.
+    pub fn observe_norms(&mut self, norms: &[f32]) {
+        for &n in norms {
+            self.sketch.push(n); // P² ignores non-finite internally
+        }
+        self.finish_step();
+    }
+
+    /// [`ClipController::observe_norms`] from SQUARED totals (the
+    /// `on_step_end` payload): `‖g_j‖ = sqrt(s_j)`, preserving
+    /// non-finite values so they stay excluded rather than laundering
+    /// into 0. Converts element-wise into the sketch — no allocation on
+    /// the tap path.
+    pub fn observe_step_totals(&mut self, s_total: &[f32]) {
+        for &s in s_total {
+            let n = if s.is_finite() {
+                s.max(0.0).sqrt()
+            } else {
+                f32::NAN
+            };
+            self.sketch.push(n);
+        }
+        self.finish_step();
+    }
+
+    /// The per-step update tail shared by both observe paths: count the
+    /// step, move the bound once past warmup, record the history entry.
+    fn finish_step(&mut self) {
+        self.steps += 1;
+        if self.steps as usize > self.cfg.warmup_steps {
+            if let Some(q) = self.sketch.estimate() {
+                self.last_estimate = Some(q);
+                self.c = clip_update(self.c, q, &self.cfg);
+            }
+        }
+        self.history.push(self.c as f32);
+    }
+
+    /// Report section for the telemetry JSON (`"clip"` key). `history`
+    /// holds the most recent [`HISTORY_JSON_CAP`] per-step bounds;
+    /// `history_offset` is the step index of its first entry (0 until a
+    /// run outgrows the cap).
+    pub fn to_json(&self) -> Json {
+        let tail_start = self.history.len().saturating_sub(HISTORY_JSON_CAP);
+        Json::obj(vec![
+            ("adaptive", Json::Bool(true)),
+            ("quantile", Json::num(self.cfg.quantile)),
+            ("eta", Json::num(self.cfg.eta)),
+            ("warmup_steps", Json::num(self.cfg.warmup_steps as f64)),
+            ("c_min", Json::num(self.cfg.c_min as f64)),
+            ("c_max", Json::num(self.cfg.c_max as f64)),
+            ("init_c", Json::num(self.init_c)),
+            ("steps", Json::num(self.steps as f64)),
+            ("c", Json::num(self.c)),
+            (
+                "quantile_estimate",
+                self.last_estimate.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("history_offset", Json::num(tail_start as f64)),
+            ("history", Json::arr_f32(&self.history[tail_start..])),
+        ])
+    }
+}
+
+impl LayerTap for ClipController {
+    fn on_layer(&mut self, _layer: usize, _s_layer: &[f32]) {
+        // the bound tracks TOTAL norms only; per-layer streams are the
+        // telemetry monitor's business
+    }
+
+    fn on_step_end(&mut self, s_total: &[f32], _per_ex_loss: &[f32]) {
+        self.observe_step_totals(s_total);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(eta: f64, warmup: usize) -> ClipConfig {
+        ClipConfig {
+            adaptive: true,
+            quantile: 0.9,
+            eta,
+            warmup_steps: warmup,
+            c_min: 1e-3,
+            c_max: 1e3,
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        ClipConfig::default().validate().unwrap();
+        let mut c = ClipConfig::default();
+        c.quantile = 1.0;
+        assert!(c.validate().is_err());
+        c.quantile = 0.0;
+        assert!(c.validate().is_err());
+        c.quantile = 0.9;
+        c.eta = 0.0;
+        assert!(c.validate().is_err());
+        c.eta = -0.5;
+        assert!(c.validate().is_err());
+        c.eta = 1.5;
+        assert!(c.validate().is_err());
+        c.eta = 1.0;
+        c.validate().unwrap();
+        c.c_min = 0.0;
+        assert!(c.validate().is_err());
+        c.c_min = 2.0;
+        c.c_max = 1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn warmup_freezes_the_bound() {
+        let mut ctrl = ClipController::new(&cfg(1.0, 5), 1.0);
+        for _ in 0..5 {
+            ctrl.observe_norms(&[10.0, 20.0, 30.0, 40.0]);
+            assert_eq!(ctrl.bound(), 1.0, "bound moved during warmup");
+        }
+        ctrl.observe_norms(&[10.0, 20.0, 30.0, 40.0]);
+        assert_ne!(ctrl.bound(), 1.0, "bound frozen after warmup");
+        assert_eq!(ctrl.history().len(), 6);
+        assert_eq!(ctrl.steps(), 6);
+    }
+
+    #[test]
+    fn snap_converges_to_stream_quantile() {
+        // constant stream of 1..=100: p90 of the multiset is ~90
+        let mut ctrl = ClipController::new(&cfg(1.0, 2), 1.0);
+        let batch: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        for _ in 0..30 {
+            ctrl.observe_norms(&batch);
+        }
+        let c = ctrl.bound();
+        assert!((80.0..=100.0).contains(&c), "snap bound {c} far from p90");
+        let q = ctrl.quantile_estimate().unwrap() as f32;
+        assert_eq!(c, q, "snap must equal the sketch estimate exactly");
+    }
+
+    #[test]
+    fn geometric_update_moves_monotonically_toward_quantile() {
+        // start far below a constant-quantile stream: every update must
+        // increase C, never overshooting the (constant) estimate
+        let mut ctrl = ClipController::new(&cfg(0.25, 1), 0.01);
+        let batch = vec![8.0f32; 64];
+        let mut prev = ctrl.bound();
+        for _ in 0..40 {
+            ctrl.observe_norms(&batch);
+            let c = ctrl.bound();
+            assert!(c >= prev, "geometric update not monotone: {prev} -> {c}");
+            assert!(c <= 8.0 * 1.001, "overshot the quantile: {c}");
+            prev = c;
+        }
+        assert!((prev - 8.0).abs() < 0.1, "did not converge: {prev}");
+    }
+
+    #[test]
+    fn guards_clamp_the_bound() {
+        let mut c = cfg(1.0, 0);
+        c.c_min = 0.5;
+        c.c_max = 2.0;
+        let mut ctrl = ClipController::new(&c, 1.0);
+        ctrl.observe_norms(&[1e6; 8]);
+        assert_eq!(ctrl.bound(), 2.0, "ceiling not applied");
+        let mut low = ClipController::new(&c, 1.0);
+        low.observe_norms(&[1e-9; 8]);
+        assert_eq!(low.bound(), 0.5, "floor not applied");
+    }
+
+    #[test]
+    fn non_finite_norms_do_not_poison() {
+        let mut ctrl = ClipController::new(&cfg(1.0, 0), 1.0);
+        for _ in 0..10 {
+            ctrl.observe_norms(&[1.0, 2.0, f32::NAN, 3.0, f32::INFINITY]);
+        }
+        assert!(ctrl.bound().is_finite());
+        let mut via_totals = ClipController::new(&cfg(1.0, 0), 1.0);
+        for _ in 0..10 {
+            via_totals.observe_step_totals(&[1.0, 4.0, f32::NAN, 9.0, f32::INFINITY]);
+        }
+        assert_eq!(
+            ctrl.bound(),
+            via_totals.bound(),
+            "squared-total path must see the same filtered stream"
+        );
+    }
+
+    #[test]
+    fn tap_feeds_squared_totals() {
+        let mut tap_driven = ClipController::new(&cfg(1.0, 0), 1.0);
+        let mut direct = ClipController::new(&cfg(1.0, 0), 1.0);
+        let s_total = [1.0f32, 4.0, 9.0, 16.0];
+        tap_driven.on_layer(0, &[0.5; 4]); // ignored
+        tap_driven.on_step_end(&s_total, &[0.1; 4]);
+        direct.observe_norms(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(tap_driven.bound(), direct.bound());
+        assert_eq!(tap_driven.history(), direct.history());
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut ctrl = ClipController::new(&cfg(0.5, 1), 2.0);
+        for _ in 0..4 {
+            ctrl.observe_norms(&[1.0, 2.0, 3.0]);
+        }
+        let j = ctrl.to_json();
+        assert_eq!(j.get("steps").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("quantile").unwrap().as_f64(), Some(0.9));
+        assert_eq!(j.get("history").unwrap().as_arr().unwrap().len(), 4);
+        assert!(j.get("c").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_history_is_capped_to_the_recent_tail() {
+        let mut ctrl = ClipController::new(&cfg(1.0, 0), 1.0);
+        for _ in 0..(HISTORY_JSON_CAP + 10) {
+            ctrl.observe_norms(&[1.0]);
+        }
+        let j = ctrl.to_json();
+        assert_eq!(
+            j.get("history").unwrap().as_arr().unwrap().len(),
+            HISTORY_JSON_CAP
+        );
+        assert_eq!(j.get("history_offset").unwrap().as_usize(), Some(10));
+        // the in-memory history is still complete
+        assert_eq!(ctrl.history().len(), HISTORY_JSON_CAP + 10);
+    }
+
+    #[test]
+    fn snap_equals_estimate_without_log_roundtrip() {
+        // eta = 1 must hand back q_hat bit-for-bit (no ln/exp detour)
+        let c = cfg(1.0, 0);
+        let q = 0.123456789f64;
+        assert_eq!(clip_update(5.0, q, &c), q);
+    }
+}

@@ -29,16 +29,24 @@
 //! * [`diff`] — cross-run drift detection: compare two reports
 //!   (histogram total-variation distance, quantile/moment deltas, GNS)
 //!   — the `pegrad monitor --baseline report.json` path.
+//! * [`adaptive`] — the quantile-tracked clip bound: a
+//!   [`adaptive::ClipController`] consumes the same total-norm stream
+//!   through its own [`LayerTap`] impl and keeps the §6 clip bound `C`
+//!   tracking a target quantile of the running norm distribution
+//!   (`[clip]` config section; [`TeeTap`] fans the engine's single tap
+//!   slot into the monitor and the controller when both are on).
 //!
 //! Dependency direction: `engine` and `nn` know only the [`LayerTap`]
 //! trait; everything stateful lives here and is driven by the trainer.
 
+pub mod adaptive;
 pub mod diff;
 pub mod gns;
 pub mod monitor;
 pub mod outlier;
 pub mod sketch;
 
+pub use adaptive::{ClipConfig, ClipController};
 pub use diff::{diff_reports, DiffConfig};
 
 /// Identifying tag every telemetry report carries (`"telemetry"` field);
@@ -88,6 +96,27 @@ impl LayerTap for RecordingTap {
         self.s_total = s_total.to_vec();
         self.per_ex_loss = per_ex_loss.to_vec();
         self.steps_ended += 1;
+    }
+}
+
+/// Fan one norm stream into two sinks. The engine offers a single tap
+/// slot; when a run wants both the telemetry monitor and the adaptive
+/// clip controller on the stream, the trainer tees them — each sink sees
+/// exactly the stream it would have seen alone.
+pub struct TeeTap<'a> {
+    pub first: &'a mut dyn LayerTap,
+    pub second: &'a mut dyn LayerTap,
+}
+
+impl LayerTap for TeeTap<'_> {
+    fn on_layer(&mut self, layer: usize, s_layer: &[f32]) {
+        self.first.on_layer(layer, s_layer);
+        self.second.on_layer(layer, s_layer);
+    }
+
+    fn on_step_end(&mut self, s_total: &[f32], per_ex_loss: &[f32]) {
+        self.first.on_step_end(s_total, per_ex_loss);
+        self.second.on_step_end(s_total, per_ex_loss);
     }
 }
 
@@ -175,6 +204,26 @@ mod tests {
         assert_eq!(s[0], vec![0.0, 10.0]);
         assert_eq!(s[2], vec![2.0, 12.0]);
         assert_eq!(tap.steps_ended, 1);
+    }
+
+    #[test]
+    fn tee_tap_feeds_both_sinks_identically() {
+        let mut a = RecordingTap::default();
+        let mut b = RecordingTap::default();
+        {
+            let mut tee = TeeTap {
+                first: &mut a,
+                second: &mut b,
+            };
+            tee.on_layer(1, &[1.0, 2.0]);
+            tee.on_layer(0, &[3.0, 4.0]);
+            tee.on_step_end(&[4.0, 6.0], &[0.1, 0.2]);
+        }
+        assert_eq!(a.layers, b.layers);
+        assert_eq!(a.s_total, b.s_total);
+        assert_eq!(a.per_ex_loss, b.per_ex_loss);
+        assert_eq!(a.steps_ended, 1);
+        assert_eq!(b.steps_ended, 1);
     }
 
     #[test]

@@ -202,12 +202,32 @@ impl TelemetryMonitor {
         ])
     }
 
+    /// [`TelemetryMonitor::report`] plus the adaptive-clip section when a
+    /// [`super::adaptive::ClipController`] rides the same run: the
+    /// per-step `C` history, the sketch's quantile estimate and the
+    /// controller knobs land under the `"clip"` key.
+    pub fn report_with(&self, clip: Option<&super::adaptive::ClipController>) -> Json {
+        let mut j = self.report();
+        if let (Json::Obj(map), Some(c)) = (&mut j, clip) {
+            map.insert("clip".into(), c.to_json());
+        }
+        j
+    }
+
     pub fn write_report(&self, path: &Path) -> Result<()> {
+        self.write_report_with(path, None)
+    }
+
+    pub fn write_report_with(
+        &self,
+        path: &Path,
+        clip: Option<&super::adaptive::ClipController>,
+    ) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)
                 .with_context(|| format!("creating {}", dir.display()))?;
         }
-        std::fs::write(path, format!("{}\n", self.report()))
+        std::fs::write(path, format!("{}\n", self.report_with(clip)))
             .with_context(|| format!("writing telemetry report {}", path.display()))
     }
 }
@@ -314,6 +334,26 @@ mod tests {
         assert!(gns.get("total").unwrap().get("b_simple").is_some());
         // loss tracked
         assert!(j.get("loss").unwrap().get("mean").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_with_clip_attaches_controller_section() {
+        let cfg = TelemetryConfig::default();
+        let mut mon = TelemetryMonitor::new(&cfg, 2, 4, 8);
+        feed_step(&mut mon, 1.0);
+        let ccfg = crate::telemetry::ClipConfig {
+            adaptive: true,
+            warmup_steps: 0,
+            ..Default::default()
+        };
+        let mut ctrl = crate::telemetry::ClipController::new(&ccfg, 1.0);
+        ctrl.observe_norms(&[1.0, 2.0, 3.0, 4.0]);
+        let j = mon.report_with(Some(&ctrl));
+        let clip = j.get("clip").expect("clip section present");
+        assert_eq!(clip.get("steps").unwrap().as_usize(), Some(1));
+        assert_eq!(clip.get("history").unwrap().as_arr().unwrap().len(), 1);
+        // without a controller the report is byte-identical to report()
+        assert_eq!(mon.report_with(None).to_string(), mon.report().to_string());
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! ISSUE 5 acceptance: adaptive quantile-tracked clipping driven by the
+//! streamed per-example norms, asserted against the shared
+//! `pegrad::oracle` exact-quantile harness.
+//!
+//! * property test: the sketch-driven `ClipController` tracks the
+//!   exact-sorted-quantile `ExactClipController` over randomized norm
+//!   streams (three distributions × several batch sizes × both update
+//!   rules). Documented tolerance: the P² estimate sits within the
+//!   exact `p ± 0.10` rank band on stationary streams (the sketch's own
+//!   property test shows `± 0.06` at ≥ 500 observations; warmup keeps
+//!   the first update past 160), and since both controllers share
+//!   `clip_update` — a per-step contraction, monotone in the quantile
+//!   estimate — the band transfers to the bound with only a small
+//!   multiplicative slack for f32 rounding.
+//! * frozen-controller bitwise equivalence: `[clip] adaptive = true`
+//!   with `warmup_steps > steps` runs the trainer bit-for-bit like the
+//!   fixed-`C` path.
+//! * engine-loop tracking on a dense stack AND the `digits_conv` stack:
+//!   training with the controller actuating `EngineMode::Clip`, the §6
+//!   coefficient vector reflecting the adaptive bound exactly, and the
+//!   final bound inside the exact-oracle band.
+//! * trainer integration for all three rust modes: `rust_clipped`
+//!   (digits_conv scenario + telemetry report with per-step C history),
+//!   `rust_normalized` (adaptive target), `rust_pegrad`
+//!   (observation-only — bitwise no-op on training).
+
+use pegrad::config::{Config, DataKind, PrivacyConfig, RunMode, SamplerKind};
+use pegrad::coordinator::Trainer;
+use pegrad::engine::{EngineMode, FusedEngine};
+use pegrad::nn::layers::StackSpec;
+use pegrad::nn::loss::Targets;
+use pegrad::nn::Loss;
+use pegrad::optim::{Optimizer, Sgd};
+use pegrad::pegrad::oracle::ExactClipController;
+use pegrad::telemetry::{ClipConfig, ClipController};
+use pegrad::tensor::{Rng, Tensor};
+use pegrad::util::{prop, Json};
+
+fn tmp_out(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("pegrad-adaptive-{}-{name}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Exact-oracle band for a sketch-driven bound: two exact controllers at
+/// `p ± eps` (same init/eta/warmup) bracket every admissible trajectory,
+/// because `clip_update` is monotone in the quantile estimate.
+fn oracle_band(
+    cfg: &ClipConfig,
+    eps: f64,
+    init_c: f32,
+) -> (ExactClipController, ExactClipController) {
+    let lo = ClipConfig {
+        quantile: (cfg.quantile - eps).max(0.01),
+        ..cfg.clone()
+    };
+    let hi = ClipConfig {
+        quantile: (cfg.quantile + eps).min(0.999),
+        ..cfg.clone()
+    };
+    (
+        ExactClipController::new(&lo, init_c),
+        ExactClipController::new(&hi, init_c),
+    )
+}
+
+/// Satellite: sketch-driven controller vs the exact sorted-quantile
+/// oracle controller over randomized stationary norm streams.
+#[test]
+fn sketch_controller_tracks_exact_quantile_oracle() {
+    prop::check(12, |g| {
+        let p = *g.choose(&[0.5, 0.9, 0.95]);
+        let eta = *g.choose(&[1.0, 0.25]);
+        let m = *g.choose(&[16usize, 32, 128]);
+        let steps = g.usize_in(40..120);
+        let dist = g.usize_in(0..3);
+        let scale = g.f32_in(0.1..10.0);
+        let cfg = ClipConfig {
+            adaptive: true,
+            quantile: p,
+            eta,
+            warmup_steps: 10,
+            c_min: 1e-6,
+            c_max: 1e6,
+        };
+        let mut sketch = ClipController::new(&cfg, 1.0);
+        let mut exact = ExactClipController::new(&cfg, 1.0);
+        let (mut lo, mut hi) = oracle_band(&cfg, 0.10, 1.0);
+        let mut batch = vec![0f32; m];
+        for _ in 0..steps {
+            for v in batch.iter_mut() {
+                *v = match dist {
+                    0 => g.normal().abs() * scale, // half-normal
+                    1 => g.f32_in(0.0..1.0) * scale + 0.01, // uniform
+                    _ => -(g.f32_in(0.0..1.0).max(1e-6).ln()) * scale, // exponential
+                };
+            }
+            sketch.observe_norms(&batch);
+            exact.observe_norms(&batch);
+            lo.observe_norms(&batch);
+            hi.observe_norms(&batch);
+        }
+        let c = sketch.bound() as f64;
+        let (clo, chi) = (lo.bound() as f64 * 0.95, hi.bound() as f64 * 1.05);
+        prop::require(
+            c.is_finite() && c >= clo && c <= chi,
+            format!(
+                "dist {dist} p={p} eta={eta} m={m} steps={steps}: sketch C {c} \
+                 outside exact-oracle band [{clo}, {chi}] (same-quantile exact C {})",
+                exact.bound()
+            ),
+        )?;
+        // both controllers observed the identical stream shape
+        prop::require(
+            sketch.steps() == exact.steps() && sketch.history().len() == steps,
+            "controller step accounting diverged".to_string(),
+        )
+    });
+}
+
+fn clipped_cfg(name: &str, adaptive: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.run_name = name.into();
+    cfg.mode = RunMode::RustClipped;
+    cfg.model_dims = vec![16, 24, 10];
+    cfg.model_m = 16;
+    cfg.steps = 25;
+    cfg.eval_every = 0;
+    cfg.checkpoint_every = 0;
+    cfg.data = DataKind::Synth;
+    cfg.data_n = 512;
+    cfg.privacy = Some(PrivacyConfig {
+        clip_c: 0.8,
+        noise_sigma: 0.5,
+        delta: 1e-5,
+    });
+    cfg.clip.adaptive = adaptive;
+    cfg.clip.warmup_steps = 10_000; // frozen: warmup outlasts the run
+    cfg.out_dir = tmp_out(name);
+    cfg
+}
+
+/// Satellite: a frozen controller (warmup > steps) is bit-for-bit the
+/// fixed-`C` path — same loss curve, same final parameters, DP noise
+/// included.
+#[test]
+fn frozen_adaptive_controller_is_bitwise_identical_to_fixed_c() {
+    let mut a = Trainer::new(clipped_cfg("frozen", true)).unwrap();
+    let sa = a.run().unwrap();
+    let mut b = Trainer::new(clipped_cfg("fixed", false)).unwrap();
+    let sb = b.run().unwrap();
+    assert_eq!(sa.curve, sb.curve, "adaptive-frozen vs fixed-C loss curves diverged");
+    let pa: Vec<Tensor> = a.params().unwrap().to_vec();
+    let pb: Vec<Tensor> = b.params().unwrap().to_vec();
+    for (x, y) in pa.iter().zip(&pb) {
+        assert_eq!(x.data(), y.data(), "final parameters diverged");
+    }
+    // the frozen controller still observed every step at the init bound
+    let ctrl = a.clip_controller().unwrap();
+    assert_eq!(ctrl.history().len(), 25);
+    assert!(ctrl.history().iter().all(|&c| c == 0.8), "bound moved during warmup");
+    assert!(b.clip_controller().is_none(), "fixed-C run must build no controller");
+}
+
+/// Drive the engine + controller loop directly: the tap feeds the
+/// controller, the controller's bound feeds the next step's §6
+/// coefficients, and exact oracle controllers consume the identical
+/// stream (all starting from C = 1). Returns (per-step losses, sketch
+/// controller, exact, lo, hi).
+fn run_adaptive_loop(
+    stack: &StackSpec,
+    params: &mut [Tensor],
+    x: &Tensor,
+    y: &Targets,
+    cfg: &ClipConfig,
+    steps: usize,
+    lr: f32,
+) -> (
+    Vec<f32>,
+    ClipController,
+    ExactClipController,
+    ExactClipController,
+    ExactClipController,
+) {
+    let m = x.dims()[0];
+    let init_c = 1.0;
+    let mut ctrl = ClipController::new(cfg, init_c);
+    let mut exact = ExactClipController::new(cfg, init_c);
+    let (mut lo, mut hi) = oracle_band(cfg, 0.10, init_c);
+    let mut engine = FusedEngine::from_stack(stack.clone());
+    let mut sgd = Sgd::plain();
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let c = ctrl.bound();
+        let stats = engine.step_streamed(
+            params,
+            x,
+            y,
+            EngineMode::Clip { c, mean: true },
+            None,
+            Some(&mut ctrl),
+        );
+        losses.push(stats.mean_loss);
+        // the identical squared-total stream into the exact oracles
+        exact.observe_step_totals(engine.s_total());
+        lo.observe_step_totals(engine.s_total());
+        hi.observe_step_totals(engine.s_total());
+        // the §6 coefficient vector reflects THIS step's adaptive bound
+        // exactly: min(1, C/||g_j||)/m, bitwise
+        for (w, &s) in engine.coefs().iter().zip(engine.s_total()) {
+            let mut want = (c / s.max(1e-30).sqrt()).min(1.0);
+            want /= m as f32;
+            assert_eq!(*w, want, "coefficient vector != min(1, C/||g_j||)/m");
+        }
+        sgd.step(params, engine.grads(), lr);
+    }
+    (losses, ctrl, exact, lo, hi)
+}
+
+/// Acceptance (dense): adaptive mode trains a dense scenario with `C`
+/// tracking the streamed target quantile, inside the exact-oracle band.
+#[test]
+fn adaptive_dense_engine_loop_tracks_exact_oracle_and_trains() {
+    let m = 32;
+    let stack =
+        StackSpec::parse("input 16, dense 32 tanh, dense 10", Loss::SoftmaxCe, m).unwrap();
+    let mut rng = Rng::new(0xAD);
+    let mut params = stack.init_params(&mut rng);
+    let x = Tensor::randn(vec![m, 16], &mut rng);
+    let y = Targets::Classes((0..m).map(|j| (j % 10) as i32).collect());
+    let cfg = ClipConfig {
+        adaptive: true,
+        quantile: 0.9,
+        eta: 1.0, // direct quantile snap
+        warmup_steps: 5,
+        c_min: 1e-6,
+        c_max: 1e6,
+    };
+    let (losses, ctrl, exact, lo, hi) =
+        run_adaptive_loop(&stack, &mut params, &x, &y, &cfg, 60, 0.01);
+    assert!(
+        *losses.last().unwrap() < losses[0],
+        "adaptive clipping failed to train: {} -> {}",
+        losses[0],
+        losses.last().unwrap()
+    );
+    let c = ctrl.bound();
+    assert_eq!(ctrl.steps(), 60);
+    assert_eq!(ctrl.history().len(), 60);
+    assert_ne!(c, 1.0, "bound never adapted");
+    let (clo, chi) = (lo.bound() * 0.9, hi.bound() * 1.1);
+    assert!(
+        c >= clo && c <= chi,
+        "dense: C {c} outside exact-oracle band [{clo}, {chi}] (exact {})",
+        exact.bound()
+    );
+}
+
+/// Acceptance (conv): the digits_conv stack on real digits data, same
+/// oracle-band tracking assertion — the conv-norm trick means the
+/// controller works unchanged on conv stacks.
+#[test]
+fn adaptive_digits_conv_engine_loop_tracks_exact_oracle() {
+    let m = 16;
+    let stack = StackSpec::parse(
+        "input 12x12x1, conv 8 k3 relu, pool 2, conv 16 k3 relu, flatten, dense 10",
+        Loss::SoftmaxCe,
+        m,
+    )
+    .unwrap();
+    let ds = pegrad::data::digits::generate(&pegrad::data::digits::DigitsConfig {
+        n: m,
+        side: 12,
+        seed: 5,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(0xC0);
+    let mut params = stack.init_params(&mut rng);
+    let (x, y) = (ds.x.clone(), ds.y.clone());
+    let cfg = ClipConfig {
+        adaptive: true,
+        quantile: 0.9,
+        eta: 0.25, // geometric EMA rule on the conv stack
+        warmup_steps: 5,
+        c_min: 1e-6,
+        c_max: 1e6,
+    };
+    let (losses, ctrl, exact, lo, hi) =
+        run_adaptive_loop(&stack, &mut params, &x, &y, &cfg, 40, 0.02);
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let c = ctrl.bound();
+    assert_ne!(c, 1.0, "bound never adapted");
+    // with eta < 1 the bound lags its target geometrically: widen the
+    // band by the residual init-to-target weight (1 - eta)^(steps - warmup)
+    let residual = (1.0f32 - 0.25).powi(40 - 5);
+    assert!(residual < 1e-4, "residual weight not negligible");
+    let (clo, chi) = (lo.bound() * 0.9, hi.bound() * 1.1);
+    assert!(
+        c >= clo && c <= chi,
+        "conv: C {c} outside exact-oracle band [{clo}, {chi}] (exact {})",
+        exact.bound()
+    );
+}
+
+fn adaptive_digits_conv_cfg(name: &str) -> Config {
+    let mut cfg = Config::default();
+    cfg.run_name = name.into();
+    cfg.mode = RunMode::RustClipped;
+    cfg.model_stack =
+        "input 12x12x1, conv 8 k3 relu, pool 2, conv 16 k3 relu, flatten, dense 10".into();
+    cfg.model_loss = "softmax_ce".into();
+    cfg.model_m = 16;
+    cfg.data = DataKind::Digits;
+    cfg.data_n = 1024;
+    cfg.steps = 120;
+    cfg.eval_every = 0;
+    cfg.checkpoint_every = 0;
+    cfg.sampler = SamplerKind::Importance;
+    cfg.schedule = pegrad::optim::Schedule::Constant { lr: 0.05 };
+    cfg.privacy = Some(PrivacyConfig {
+        clip_c: 1.0,
+        noise_sigma: 0.0,
+        delta: 1e-5,
+    });
+    cfg.clip = ClipConfig {
+        adaptive: true,
+        quantile: 0.9,
+        eta: 0.25,
+        warmup_steps: 5,
+        c_min: 1e-4,
+        c_max: 1e4,
+    };
+    cfg.telemetry.enabled = true;
+    cfg.out_dir = tmp_out(name);
+    cfg
+}
+
+/// Acceptance: adaptive mode trains the digits_conv scenario end to end
+/// through the Trainer, with the per-step `C` history in the telemetry
+/// JSON report and the bound consistent with the monitor's own
+/// (histogram) estimate of the same quantile on the same stream.
+#[test]
+fn adaptive_digits_conv_scenario_trains_and_reports() {
+    let cfg = adaptive_digits_conv_cfg("it-conv");
+    let (c_min, c_max) = (cfg.clip.c_min, cfg.clip.c_max);
+    let steps = cfg.steps;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let summary = tr.run().unwrap();
+    let k = 10;
+    let early: f32 = summary.curve[..k].iter().map(|&(_, l)| l).sum::<f32>() / k as f32;
+    let late: f32 = summary.curve[summary.curve.len() - k..]
+        .iter()
+        .map(|&(_, l)| l)
+        .sum::<f32>()
+        / k as f32;
+    assert!(
+        late < early * 0.95,
+        "adaptive clipped conv loss did not fall: {early} -> {late}"
+    );
+    let ctrl = tr.clip_controller().expect("adaptive run owns a controller");
+    assert_eq!(ctrl.history().len(), steps);
+    let c = ctrl.bound();
+    assert!(c.is_finite() && c >= c_min && c <= c_max);
+    assert_ne!(c, 1.0, "bound never adapted");
+    // per-step C history lands in the telemetry report
+    let path = summary.telemetry_path.expect("telemetry report written");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let clip = j.get("clip").expect("clip section in the report");
+    assert_eq!(clip.get("steps").unwrap().as_usize(), Some(steps));
+    assert_eq!(clip.get("history").unwrap().as_arr().unwrap().len(), steps);
+    assert_eq!(clip.get("quantile").unwrap().as_f64(), Some(0.9));
+    prop::assert_close(
+        clip.get("c").unwrap().as_f64().unwrap(),
+        c as f64,
+        1e-6,
+    )
+    .unwrap();
+    // two independent estimators of the same stream quantile agree to a
+    // loose factor: the controller's P² sketch and the monitor's
+    // log-binned histogram
+    let p90 = j
+        .get("total")
+        .unwrap()
+        .get("p90")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    let c = c as f64;
+    assert!(
+        c > p90 * 0.4 && c < p90 * 2.5,
+        "C {c} implausibly far from the histogram p90 {p90}"
+    );
+}
+
+/// rust_normalized integration: the adaptive bound actuates the
+/// normalize target instead of the clip bound.
+#[test]
+fn adaptive_normalized_mode_adapts_the_target() {
+    let mut cfg = Config::default();
+    cfg.run_name = "it-norm".into();
+    cfg.mode = RunMode::RustNormalized;
+    cfg.model_dims = vec![16, 24, 10];
+    cfg.model_m = 16;
+    cfg.normalize_target = 0.5;
+    cfg.data = DataKind::Synth;
+    cfg.data_n = 512;
+    cfg.steps = 30;
+    cfg.eval_every = 0;
+    cfg.clip = ClipConfig {
+        adaptive: true,
+        quantile: 0.5, // median-norm target: a self-tuning normalizer
+        eta: 0.5,
+        warmup_steps: 3,
+        c_min: 1e-4,
+        c_max: 1e4,
+    };
+    cfg.out_dir = tmp_out("it-norm");
+    let mut tr = Trainer::new(cfg).unwrap();
+    let summary = tr.run().unwrap();
+    assert!(summary.final_loss.is_finite());
+    let ctrl = tr.clip_controller().unwrap();
+    assert_eq!(ctrl.history().len(), 30);
+    assert_eq!(ctrl.init_bound(), 0.5, "init target comes from normalize_target");
+    assert_ne!(ctrl.bound(), 0.5, "target never adapted");
+}
+
+/// rust_pegrad integration: under Mean mode the controller observes the
+/// stream (history recorded, bound tracking) but actuates nothing — the
+/// run is bitwise identical to one without the controller.
+#[test]
+fn adaptive_pegrad_mode_is_observation_only() {
+    let mk = |name: &str, adaptive: bool| {
+        let mut cfg = Config::default();
+        cfg.run_name = name.into();
+        cfg.mode = RunMode::RustPegrad;
+        cfg.model_dims = vec![16, 24, 10];
+        cfg.model_m = 16;
+        cfg.data = DataKind::Synth;
+        cfg.data_n = 512;
+        cfg.steps = 20;
+        cfg.eval_every = 0;
+        if adaptive {
+            cfg.clip = ClipConfig {
+                adaptive: true,
+                quantile: 0.9,
+                eta: 1.0,
+                warmup_steps: 2,
+                c_min: 1e-4,
+                c_max: 1e4,
+            };
+        }
+        cfg.out_dir = tmp_out(name);
+        cfg
+    };
+    let mut a = Trainer::new(mk("obs-on", true)).unwrap();
+    let sa = a.run().unwrap();
+    let mut b = Trainer::new(mk("obs-off", false)).unwrap();
+    let sb = b.run().unwrap();
+    assert_eq!(sa.curve, sb.curve, "observation-only controller changed training");
+    let pa: Vec<Tensor> = a.params().unwrap().to_vec();
+    let pb: Vec<Tensor> = b.params().unwrap().to_vec();
+    for (x, y) in pa.iter().zip(&pb) {
+        assert_eq!(x.data(), y.data(), "observation-only controller changed params");
+    }
+    let ctrl = a.clip_controller().unwrap();
+    assert_eq!(ctrl.history().len(), 20);
+    assert_ne!(ctrl.bound(), 1.0, "controller should still track the stream");
+}

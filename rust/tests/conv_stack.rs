@@ -30,6 +30,7 @@ use pegrad::engine::{EngineMode, FusedEngine};
 use pegrad::nn::layers::StackSpec;
 use pegrad::nn::loss::Targets;
 use pegrad::nn::Loss;
+use pegrad::pegrad::oracle::{self, PerExampleOracle};
 use pegrad::telemetry::RecordingTap;
 use pegrad::tensor::{ops, Rng, Tensor};
 use pegrad::util::prop;
@@ -68,26 +69,16 @@ fn batch(stack: &StackSpec, m: usize, seed: u64) -> (Vec<Tensor>, Tensor, Target
 
 /// Materialized oracle: batch-1 engine runs with unit weight — the
 /// returned accumulators ARE the per-example gradients G_j, one layer
-/// each, materialized. Norms come from `ops::sq_sum` over them.
+/// each, materialized. Since ISSUE 5 the implementation lives in the
+/// shared [`pegrad::pegrad::oracle`] module; this wrapper keeps the
+/// call sites short.
 fn materialized_per_example(
     stack: &StackSpec,
     params: &[Tensor],
     x: &Tensor,
     y: &Targets,
 ) -> Vec<Vec<Tensor>> {
-    let m = x.dims()[0];
-    let mut solo = FusedEngine::from_stack(StackSpec {
-        m: 1,
-        ..stack.clone()
-    });
-    (0..m)
-        .map(|j| {
-            let xj = Tensor::new(vec![1, stack.in_len()], x.row(j).to_vec());
-            let yj = y.gather(&[j]);
-            solo.step_streamed(params, &xj, &yj, EngineMode::Mean, Some(&[1.0]), None);
-            solo.grads().to_vec()
-        })
-        .collect()
+    PerExampleOracle::new(stack).all_grads(params, x, y)
 }
 
 /// Acceptance: streamed conv norms == materialized per-example-gradient
@@ -133,12 +124,9 @@ fn streamed_conv_norms_bitwise_match_materialized_oracle() {
                 assert_eq!(tapped[j], streamed.s_layers[j]);
             }
             // mean-mode grads = mean of materialized per-example grads
+            let want = oracle::weighted_sum(&pex, &vec![1.0 / m as f32; m]);
             for li in 0..3 {
-                let mut want = Tensor::zeros(engine.grads()[li].dims().to_vec());
-                for g in pex.iter() {
-                    ops::axpy(&mut want, 1.0 / m as f32, &g[li]);
-                }
-                prop::assert_all_close(engine.grads()[li].data(), want.data(), 1e-3)
+                prop::assert_all_close(engine.grads()[li].data(), want[li].data(), 1e-3)
                     .map_err(|e| format!("{act}/{loss:?} layer {li}: {e}"))
                     .unwrap();
             }
@@ -256,18 +244,11 @@ fn conv_clip_mode_matches_materialized_clipping() {
     let c = 0.4f32;
     let stats = engine.step(&params, &x, &y, EngineMode::Clip { c, mean: false });
     let pex = materialized_per_example(&stack, &params, &x, &y);
-    let mut clipped = 0usize;
+    let coefs = oracle::clip_coefs(&oracle::s_totals_of(&pex), c);
+    let clipped = coefs.iter().filter(|&&w| w < 1.0).count();
+    let want = oracle::weighted_sum(&pex, &coefs);
     for li in 0..3 {
-        let mut want = Tensor::zeros(engine.grads()[li].dims().to_vec());
-        for g in pex.iter() {
-            let s: f64 = g.iter().map(ops::sq_sum).sum();
-            let coef = (c as f64 / s.max(1e-30).sqrt()).min(1.0) as f32;
-            if li == 0 && coef < 1.0 {
-                clipped += 1;
-            }
-            ops::axpy(&mut want, coef, &g[li]);
-        }
-        prop::assert_all_close(engine.grads()[li].data(), want.data(), 5e-3)
+        prop::assert_all_close(engine.grads()[li].data(), want[li].data(), 5e-3)
             .map_err(|e| format!("layer {li}: {e}"))
             .unwrap();
     }
@@ -455,15 +436,14 @@ fn strided_stack_clip_and_normalize_match_materialized() {
         .iter()
         .map(|&s| (c / s.max(1e-30).sqrt()).min(1.0))
         .collect();
+    let want = oracle::weighted_sum(&pex, &coefs);
     for li in 0..3 {
-        let mut want = Tensor::zeros(engine.grads()[li].dims().to_vec());
-        for (j, g) in pex.iter().enumerate() {
-            ops::axpy(&mut want, coefs[j], &g[li]);
-        }
-        prop::assert_all_close(engine.grads()[li].data(), want.data(), 5e-3)
+        prop::assert_all_close(engine.grads()[li].data(), want[li].data(), 5e-3)
             .map_err(|e| format!("clip layer {li}: {e}"))
             .unwrap();
     }
+    // the engine's §6 coefficient vector is exactly these factors
+    assert_eq!(engine.coefs(), &coefs[..]);
     // normalize: every example rescaled to the target norm
     let t = 1.5f32;
     engine.step(&params, &x, &y, EngineMode::Normalize { target: t });
@@ -472,12 +452,9 @@ fn strided_stack_clip_and_normalize_match_materialized() {
         .iter()
         .map(|&s| t / s.max(1e-24).sqrt() / m as f32)
         .collect();
+    let want = oracle::weighted_sum(&pex, &coefs);
     for li in 0..3 {
-        let mut want = Tensor::zeros(engine.grads()[li].dims().to_vec());
-        for (j, g) in pex.iter().enumerate() {
-            ops::axpy(&mut want, coefs[j], &g[li]);
-        }
-        prop::assert_all_close(engine.grads()[li].data(), want.data(), 5e-3)
+        prop::assert_all_close(engine.grads()[li].data(), want[li].data(), 5e-3)
             .map_err(|e| format!("normalize layer {li}: {e}"))
             .unwrap();
     }
@@ -497,12 +474,9 @@ fn conv_clip_with_huge_bound_takes_replay_shortcut() {
     let stats = engine.step(&params, &x, &y, EngineMode::Clip { c: 1e6, mean: false });
     assert_eq!(stats.clip_frac, Some(0.0), "nothing may clip under c=1e6");
     let pex = materialized_per_example(&stack, &params, &x, &y);
+    let want = oracle::clipped_sum(&pex, 1e6);
     for li in 0..3 {
-        let mut want = Tensor::zeros(engine.grads()[li].dims().to_vec());
-        for g in pex.iter() {
-            ops::axpy(&mut want, 1.0, &g[li]);
-        }
-        prop::assert_all_close(engine.grads()[li].data(), want.data(), 5e-3)
+        prop::assert_all_close(engine.grads()[li].data(), want[li].data(), 5e-3)
             .map_err(|e| format!("layer {li}: {e}"))
             .unwrap();
     }
