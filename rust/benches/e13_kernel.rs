@@ -1,0 +1,254 @@
+//! E13 — microkernel-level packed vs scalar, single thread.
+//!
+//! The PR-6 tentpole claim in isolation: the register-blocked
+//! [`PackedKernel`] beats the scalar oracle ≥2× single-thread on the
+//! GEMM and implicit-conv shapes the digits/mnist stacks actually run.
+//! Both kernels are called DIRECTLY (no threadpool, no engine) over the
+//! full row range, so the ratio is pure kernel arithmetic:
+//!
+//! * `gemm` — the mnist dense hidden layer's forward band,
+//!   `[256, 129] @ [129, 128]` (`Haug` × weights, bias column folded);
+//! * `gemm_tn` — the §4/§6 fused accumulation at the same shape
+//!   (contraction over the 256 examples, coefficient-weighted);
+//! * `conv` — the digits stack's second conv as the implicit path runs
+//!   it: per example, `L = 9` patch rows (`K+1 = 73`, `c_out = 16`)
+//!   staged in `PATCH_CHUNK = 8`-row chunks through `matmul_band`;
+//! * `conv_small` — the first digits conv (`K+1 = 10`, `c_out = 8`,
+//!   `L = 100`), reported but ungated: at 8 output channels only one
+//!   vector lane is live, the least favorable shape we run.
+//!
+//! Patch staging buffers are prefilled outside the timed region — the
+//! gather cost is identical for both kernels and would only dilute the
+//! ratio. Operands are randn (zero-free): the scalar kernel's relu
+//! sparsity skip never fires, so this measures the dense-arithmetic
+//! ratio both kernels see on real post-augment/delta operands.
+//!
+//! Emits `BENCH_kernel.json`; `scripts/perf_gate` enforces
+//! `speedup >= 2` on the `gemm` and `conv` rows at m=256.
+//!
+//! [`PackedKernel`]: pegrad::tensor::kernels::PackedKernel
+
+use pegrad::bench::{bench_fn, workspace_path, BenchSpec, Table};
+use pegrad::tensor::kernels::{Microkernel, PACKED, SCALAR};
+use pegrad::tensor::{Rng, Tensor};
+use pegrad::util::Json;
+
+/// Mirrors `nn::layers::conv2d::PATCH_CHUNK` (private there): patch rows
+/// staged per microkernel call on the implicit-conv path.
+const PATCH_CHUNK: usize = 8;
+
+/// The gate threshold perf_gate re-checks from the JSON.
+const GATE: f64 = 2.0;
+
+fn randn(n: usize, rng: &mut Rng) -> Vec<f32> {
+    Tensor::randn(vec![n], rng).into_data()
+}
+
+struct Case {
+    kind: &'static str,
+    label: String,
+    m: usize,
+    k: usize,
+    n: usize,
+    gated: bool,
+    scalar_ms: f64,
+    packed_ms: f64,
+}
+
+impl Case {
+    fn speedup(&self) -> f64 {
+        self.scalar_ms / self.packed_ms
+    }
+}
+
+/// Time `f(kern)` for both kernels after checking they agree bitwise
+/// (randn operands are zero-free, so the GEMM kernels must match
+/// exactly; see `tensor::kernels`).
+fn measure(
+    spec: &BenchSpec,
+    label: &str,
+    mut run: impl FnMut(&'static dyn Microkernel, &mut [f32]),
+    out_len: usize,
+) -> (f64, f64) {
+    let mut cs = vec![0.0f32; out_len];
+    let mut cp = vec![0.0f32; out_len];
+    run(&SCALAR, &mut cs);
+    run(&PACKED, &mut cp);
+    assert_eq!(cs, cp, "{label}: packed kernel diverged from the scalar oracle");
+    let t_scalar = bench_fn(&format!("{label}-scalar"), spec, || {
+        run(&SCALAR, &mut cs);
+        std::hint::black_box(&cs);
+    })
+    .summary
+    .mean;
+    let t_packed = bench_fn(&format!("{label}-packed"), spec, || {
+        run(&PACKED, &mut cp);
+        std::hint::black_box(&cp);
+    })
+    .summary
+    .mean;
+    (t_scalar * 1e3, t_packed * 1e3)
+}
+
+fn main() -> anyhow::Result<()> {
+    pegrad::util::logging::init_with(log::LevelFilter::Warn);
+    let quick = std::env::args().any(|a| a == "--quick");
+    let spec = if quick {
+        BenchSpec::quick()
+    } else {
+        BenchSpec {
+            warmup_secs: 0.1,
+            measure_secs: 0.8,
+            min_samples: 5,
+            max_samples: 80,
+        }
+    };
+    let mut rng = Rng::new(13);
+    let mut cases: Vec<Case> = Vec::new();
+
+    // ---- gemm: mnist dense hidden layer forward band [256,129]x[129,128]
+    {
+        let (m, k, n) = (256usize, 129usize, 128usize);
+        let a = randn(m * k, &mut rng);
+        let b = randn(k * n, &mut rng);
+        let (scalar_ms, packed_ms) = measure(
+            &spec,
+            "gemm",
+            |kern, c| {
+                c.fill(0.0);
+                kern.matmul_band(&a, &b, c, 0, m, k, n);
+            },
+            m * n,
+        );
+        cases.push(Case {
+            kind: "gemm",
+            label: format!("[{m},{k}]@[{k},{n}]"),
+            m,
+            k,
+            n,
+            gated: true,
+            scalar_ms,
+            packed_ms,
+        });
+    }
+
+    // ---- gemm_tn: the fused §6 accumulation at the same dense shape
+    {
+        let (m, k, n) = (256usize, 129usize, 128usize);
+        let a = randn(m * k, &mut rng);
+        let b = randn(m * n, &mut rng);
+        let coef: Vec<f32> = (0..m).map(|j| 0.25 + (j % 7) as f32 * 0.1).collect();
+        let (scalar_ms, packed_ms) = measure(
+            &spec,
+            "gemm_tn",
+            |kern, c| {
+                c.fill(0.0);
+                kern.tn_band(&a, &b, Some(&coef), c, 0, k, k, n, m);
+            },
+            k * n,
+        );
+        cases.push(Case {
+            kind: "gemm_tn",
+            label: format!("[{m},{k}]ᵀdiag[{m}]@[{m},{n}]"),
+            m,
+            k,
+            n,
+            gated: false,
+            scalar_ms,
+            packed_ms,
+        });
+    }
+
+    // ---- conv shapes: staged patch chunks exactly as conv_fwd_band runs
+    // them (prefilled staging — the gather is kernel-independent)
+    for (kind, gated, kp1, co, l) in [
+        ("conv", true, 73usize, 16usize, 9usize),     // digits conv2 (post-pool 5x5x8, k3)
+        ("conv_small", false, 10, 8, 100),            // digits conv1 (12x12x1, k3)
+    ] {
+        let m_ex = 256usize;
+        let patches = randn(m_ex * l * kp1, &mut rng);
+        let w = randn(kp1 * co, &mut rng);
+        let (scalar_ms, packed_ms) = measure(
+            &spec,
+            kind,
+            |kern, z| {
+                z.fill(0.0);
+                for j in 0..m_ex {
+                    let pj = &patches[j * l * kp1..(j + 1) * l * kp1];
+                    let zj = &mut z[j * l * co..(j + 1) * l * co];
+                    let mut li0 = 0;
+                    while li0 < l {
+                        let chunk = (l - li0).min(PATCH_CHUNK);
+                        kern.matmul_band(
+                            &pj[li0 * kp1..(li0 + chunk) * kp1],
+                            &w,
+                            &mut zj[li0 * co..(li0 + chunk) * co],
+                            0,
+                            chunk,
+                            kp1,
+                            co,
+                        );
+                        li0 += chunk;
+                    }
+                }
+            },
+            m_ex * l * co,
+        );
+        cases.push(Case {
+            kind,
+            label: format!("m=256 L={l} [{kp1}]x[{kp1},{co}]"),
+            m: m_ex,
+            k: kp1,
+            n: co,
+            gated,
+            scalar_ms,
+            packed_ms,
+        });
+    }
+
+    let mut table = Table::new(
+        "E13 — packed vs scalar microkernels, single thread (ms)",
+        &["kind", "shape", "scalar", "packed", "speedup", "gate ≥2x"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut gate_ok = true;
+    for c in &cases {
+        let sp = c.speedup();
+        if c.gated && sp < GATE {
+            gate_ok = false;
+        }
+        table.row(vec![
+            c.kind.to_string(),
+            c.label.clone(),
+            format!("{:.4}", c.scalar_ms),
+            format!("{:.4}", c.packed_ms),
+            format!("{sp:.2}"),
+            if c.gated { format!("{}", sp >= GATE) } else { "-".to_string() },
+        ]);
+        rows.push(Json::obj(vec![
+            ("kind", Json::str(c.kind)),
+            ("shape", Json::str(c.label.as_str())),
+            ("m", Json::num(c.m as f64)),
+            ("k", Json::num(c.k as f64)),
+            ("n", Json::num(c.n as f64)),
+            ("gated", Json::Bool(c.gated)),
+            ("scalar_ms", Json::num(c.scalar_ms)),
+            ("packed_ms", Json::num(c.packed_ms)),
+            ("speedup", Json::num(sp)),
+        ]));
+    }
+    table.emit(Some(&workspace_path("bench_results/e13_kernel.csv")));
+    let summary = Json::obj(vec![
+        ("bench", Json::str("e13_kernel")),
+        ("quick", Json::Bool(quick)),
+        ("packed_2x_on_gated_shapes", Json::Bool(gate_ok)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out = workspace_path("BENCH_kernel.json");
+    std::fs::write(&out, format!("{summary}\n"))?;
+    println!("(summary saved to {})", out.display());
+    if !gate_ok {
+        println!("WARNING: packed microkernels under 2x vs scalar on a gated shape.");
+    }
+    Ok(())
+}

@@ -1,12 +1,20 @@
-//! Binary checkpointing: params, optimizer state, RNG, step counter.
+//! Binary checkpointing: params, optimizer state, RNG, step counter,
+//! and (since v2) the adaptive-clip controller state.
 //!
 //! Format (little-endian):
 //! ```text
 //! magic "PEGD" | u32 version | u64 step | [u64;4] rng state
 //! | u32 n_params  | n_params  tensors
 //! | u32 n_opt     | n_opt     tensors
+//! | u32 has_clip  | has_clip == 1 ? clip state : nothing     (v2+)
 //! tensor := u32 rank | u64 dims[rank] | f32 data[numel]
+//! clip   := f64 p | f64 q[5] | f64 n[5] | f64 np[5] | u64 count
+//!         | f64 c | f64 init_c | u64 steps
 //! ```
+//!
+//! Version-1 files (no clip section) still load, with `clip = None` —
+//! a pre-PR-6 checkpoint resumes exactly as before, the controller
+//! simply restarts its warmup.
 
 use std::fs;
 use std::io::{Read, Write};
@@ -14,10 +22,12 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::telemetry::adaptive::ClipState;
+use crate::telemetry::sketch::P2State;
 use crate::tensor::{Rng, Tensor};
 
 const MAGIC: &[u8; 4] = b"PEGD";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
@@ -25,6 +35,9 @@ pub struct Checkpoint {
     pub rng_state: [u64; 4],
     pub params: Vec<Tensor>,
     pub opt_state: Vec<Tensor>,
+    /// Adaptive-clip controller dynamics; `None` on fixed-`C` runs and
+    /// when loading a v1 file.
+    pub clip: Option<ClipState>,
 }
 
 impl Checkpoint {
@@ -34,7 +47,14 @@ impl Checkpoint {
             rng_state: rng.state(),
             params,
             opt_state,
+            clip: None,
         }
+    }
+
+    /// Attach adaptive-clip controller state (builder-style).
+    pub fn with_clip(mut self, clip: Option<ClipState>) -> Self {
+        self.clip = clip;
+        self
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -54,6 +74,13 @@ impl Checkpoint {
             }
             write_tensors(&mut f, &self.params)?;
             write_tensors(&mut f, &self.opt_state)?;
+            match &self.clip {
+                None => f.write_all(&0u32.to_le_bytes())?,
+                Some(cs) => {
+                    f.write_all(&1u32.to_le_bytes())?;
+                    write_clip(&mut f, cs)?;
+                }
+            }
             f.sync_all()?;
         }
         fs::rename(&tmp, path)?;
@@ -69,8 +96,8 @@ impl Checkpoint {
             bail!("{} is not a pegrad checkpoint", path.display());
         }
         let version = read_u32(&mut f)?;
-        if version != VERSION {
-            bail!("checkpoint version {version} != supported {VERSION}");
+        if !(1..=VERSION).contains(&version) {
+            bail!("checkpoint version {version} not in supported range 1..={VERSION}");
         }
         let step = read_u64(&mut f)?;
         let mut rng_state = [0u64; 4];
@@ -79,11 +106,21 @@ impl Checkpoint {
         }
         let params = read_tensors(&mut f)?;
         let opt_state = read_tensors(&mut f)?;
+        let clip = if version >= 2 {
+            match read_u32(&mut f)? {
+                0 => None,
+                1 => Some(read_clip(&mut f)?),
+                other => bail!("bad clip-section flag {other} (corrupt checkpoint?)"),
+            }
+        } else {
+            None
+        };
         Ok(Checkpoint {
             step,
             rng_state,
             params,
             opt_state,
+            clip,
         })
     }
 
@@ -137,6 +174,44 @@ fn read_tensors(f: &mut fs::File) -> Result<Vec<Tensor>> {
     Ok(out)
 }
 
+fn write_clip(f: &mut fs::File, cs: &ClipState) -> Result<()> {
+    f.write_all(&cs.sketch.p.to_le_bytes())?;
+    for arr in [&cs.sketch.q, &cs.sketch.n, &cs.sketch.np] {
+        for v in arr {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    f.write_all(&cs.sketch.count.to_le_bytes())?;
+    f.write_all(&cs.c.to_le_bytes())?;
+    f.write_all(&cs.init_c.to_le_bytes())?;
+    f.write_all(&cs.steps.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_clip(f: &mut fs::File) -> Result<ClipState> {
+    let p = read_f64(f)?;
+    if !(p > 0.0 && p < 1.0) {
+        bail!("implausible clip quantile {p} (corrupt checkpoint?)");
+    }
+    let mut arrs = [[0f64; 5]; 3];
+    for arr in &mut arrs {
+        for v in arr.iter_mut() {
+            *v = read_f64(f)?;
+        }
+    }
+    let [q, n, np] = arrs;
+    let count = read_u64(f)?;
+    let c = read_f64(f)?;
+    let init_c = read_f64(f)?;
+    let steps = read_u64(f)?;
+    Ok(ClipState {
+        sketch: P2State { p, q, n, np, count },
+        c,
+        init_c,
+        steps,
+    })
+}
+
 fn read_u32(f: &mut fs::File) -> Result<u32> {
     let mut b = [0u8; 4];
     f.read_exact(&mut b)?;
@@ -147,6 +222,12 @@ fn read_u64(f: &mut fs::File) -> Result<u64> {
     let mut b = [0u8; 8];
     f.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+fn read_f64(f: &mut fs::File) -> Result<f64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
 }
 
 #[cfg(test)]
@@ -176,6 +257,54 @@ mod tests {
         let mut r1 = rng.clone();
         let mut r2 = back.rng();
         assert_eq!(r1.next_u64(), r2.next_u64());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn clip_state_roundtrips_bitwise() {
+        use crate::telemetry::{ClipConfig, ClipController};
+        let cfg = ClipConfig {
+            adaptive: true,
+            ..ClipConfig::default()
+        };
+        let mut ctrl = ClipController::new(&cfg, 0.8);
+        for i in 0..25 {
+            ctrl.observe_norms(&[1.0 + i as f32, 2.0, 0.5 * i as f32]);
+        }
+        let rng = Rng::new(7);
+        let ck = Checkpoint::new(25, &rng, vec![], vec![]).with_clip(Some(ctrl.snapshot()));
+        let path = tmpfile("clip");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let state = back.clip.expect("clip section lost");
+        assert_eq!(state, ctrl.snapshot(), "clip state not bitwise after roundtrip");
+        // a restored controller continues exactly like the original
+        let mut resumed = ClipController::new(&cfg, 0.8);
+        resumed.restore_state(&state);
+        ctrl.observe_norms(&[3.0, 4.0]);
+        resumed.observe_norms(&[3.0, 4.0]);
+        assert_eq!(ctrl.bound().to_bits(), resumed.bound().to_bits());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn version1_files_still_load_without_clip() {
+        // hand-assemble a minimal v1 file: header + empty tensor lists,
+        // no clip section
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        bytes.extend_from_slice(&17u64.to_le_bytes()); // step
+        for s in Rng::new(3).state() {
+            bytes.extend_from_slice(&s.to_le_bytes());
+        }
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // n_params
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // n_opt
+        let path = tmpfile("v1");
+        std::fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 17);
+        assert!(back.clip.is_none(), "v1 file must load with clip = None");
         let _ = std::fs::remove_file(&path);
     }
 

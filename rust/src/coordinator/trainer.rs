@@ -273,6 +273,14 @@ impl Trainer {
         }
         self.rng = ck.rng();
         self.step = ck.step as usize;
+        if let (Some(ctrl), Some(state)) = (self.clip.as_mut(), ck.clip.as_ref()) {
+            // resume the adaptive bound where the run left it: sketch
+            // markers, current C, and step count all carry over, so the
+            // bound sequence matches an uninterrupted run bitwise. A v1
+            // (or fixed-C) checkpoint has no state — the controller
+            // simply restarts its warmup from the initial bound.
+            ctrl.restore_state(state);
+        }
         self.dev_params = None; // re-upload lazily
         Ok(())
     }
@@ -789,7 +797,8 @@ impl Trainer {
             &self.rng,
             self.params.clone(),
             opt_state,
-        );
+        )
+        .with_clip(self.clip.as_ref().map(|c| c.snapshot()));
         let path = self.metrics.dir().join(format!("ckpt-{:06}.bin", self.step));
         ck.save(&path).context("saving checkpoint")?;
         log::info!("checkpoint saved: {}", path.display());

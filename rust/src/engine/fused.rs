@@ -38,6 +38,13 @@
 //! `m ≤ m_max` (the workspace capacity from the spec); every kernel
 //! operates on the leading `m` rows, so a shrunken batch is bitwise
 //! identical to a fresh engine built for that size.
+//!
+//! Every hot loop named above bottoms out in the
+//! [`crate::tensor::kernels::Microkernel`] dispatch — the scalar oracle
+//! or the packed register-blocked kernels (`scalar-kernels` feature /
+//! `PEGRAD_KERNEL`); all the bitwise couplings the engine tests assert
+//! (streamed vs tap, implicit vs im2col, banded vs serial) compare two
+//! paths through the SAME dispatched kernel, so they hold under either.
 
 use crate::nn::layers::{ConvImpl, Layer, StackSpec};
 use crate::nn::loss::Targets;

@@ -12,11 +12,19 @@
 //! gathers one `[K+1]` patch row at a time ([`gather_patch`]) inside its
 //! band-local loop, reading straight from the retained raw input
 //! (`[m, in_len]` — the only per-batch state the layer keeps). Patch
-//! values are bitwise identical to the unfold, and the forward
-//! accumulates each output row in [`ops`]'s block order, so the two
-//! implementations produce bitwise-equal results; the im2col variant
+//! values are bitwise identical to the unfold, and every GEMM-shaped
+//! pass stages [`PATCH_CHUNK`] patch rows and hands them to the SAME
+//! dispatched [`kernels::Microkernel`] primitives the materialized
+//! matmuls run on ([`Microkernel::matmul_band`] forward,
+//! [`Microkernel::tn_band`] for `G_j` and the replay), so the two
+//! implementations produce bitwise-equal results under either kernel —
+//! and the packed kernel's register tile amortizes each gathered patch
+//! across [`kernels::NR`] output channels at a time. The im2col variant
 //! ([`ConvImpl::Im2col`]) is kept as the baseline the e10 bench and the
 //! cross-implementation tests compare against.
+//!
+//! [`Microkernel::matmul_band`]: crate::tensor::kernels::Microkernel::matmul_band
+//! [`Microkernel::tn_band`]: crate::tensor::kernels::Microkernel::tn_band
 //!
 //! ## Backward, per example j and entirely inside one band-local scratch
 //!
@@ -53,7 +61,7 @@
 //! the serial loop.
 
 use crate::tensor::conv::{self, gather_patch, scatter_patch_add, ConvGeom};
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{kernels, ops, Tensor};
 use crate::util::threadpool;
 
 use super::{Layer, LayerSpec};
@@ -61,6 +69,11 @@ use super::{Layer, LayerSpec};
 /// Below this many G-matmul multiply-adds the conv kernels stay
 /// single-threaded.
 const CONV_PAR_THRESHOLD: usize = 64 * 64 * 16;
+
+/// Patch rows staged per microkernel call (two [`kernels::MR`] register
+/// tiles): gathered rows are reused across the whole output-channel
+/// sweep of one GEMM call instead of one scalar channel loop.
+const PATCH_CHUNK: usize = 2 * kernels::MR;
 
 /// Which convolution kernel implementation a [`ConvLayer`] runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,28 +97,33 @@ enum PatchSrc<'a> {
 }
 
 impl<'a> PatchSrc<'a> {
-    /// The `[K+1]` patch row of example `j`, position `li` — either a
-    /// slice of the unfold or a fresh gather into `scratch`.
+    /// The `[chunk, K+1]` patch rows of example `j`, positions
+    /// `[li0, li0 + chunk)` — either a contiguous slice of the unfold or
+    /// fresh gathers staged into `scratch`.
     #[inline]
     #[allow(clippy::too_many_arguments)]
-    fn row<'b>(
+    fn rows<'b>(
         &self,
         geom: &ConvGeom,
         l: usize,
         kp1: usize,
         in_len: usize,
         j: usize,
-        li: usize,
+        li0: usize,
+        chunk: usize,
         scratch: &'b mut [f32],
     ) -> &'b [f32]
     where
         'a: 'b,
     {
         match *self {
-            PatchSrc::Cols(cols) => &cols[(j * l + li) * kp1..(j * l + li + 1) * kp1],
+            PatchSrc::Cols(cols) => &cols[(j * l + li0) * kp1..(j * l + li0 + chunk) * kp1],
             PatchSrc::Raw(x) => {
-                gather_patch(geom, &x[j * in_len..(j + 1) * in_len], li, scratch);
-                scratch
+                let xj = &x[j * in_len..(j + 1) * in_len];
+                for (ci, pr) in scratch[..chunk * kp1].chunks_mut(kp1).enumerate() {
+                    gather_patch(geom, xj, li0 + ci, pr);
+                }
+                &scratch[..chunk * kp1]
             }
         }
     }
@@ -133,7 +151,8 @@ pub struct ConvLayer {
     gpartial: Vec<f32>,
     /// Per-band `dU` row scratch `[K]` for the col2im scatter.
     dubuf: Vec<f32>,
-    /// Per-band `[K+1]` patch-row scratch for the implicit gathers.
+    /// Per-band `[PATCH_CHUNK, K+1]` patch-staging scratch for the
+    /// implicit gathers.
     pbuf: Vec<f32>,
     /// Per-band Gram scratch `[L·(K+1) + L·L]` (`U_j` staging + `V_jV_jᵀ`);
     /// allocated with retention iff the Gram form dispatches.
@@ -176,7 +195,7 @@ impl ConvLayer {
             gbuf: vec![0.0; nb * kp1 * out_ch],
             gpartial: vec![0.0; nb * kp1 * out_ch],
             dubuf: vec![0.0; nb * (kp1 - 1)],
-            pbuf: vec![0.0; nb * kp1],
+            pbuf: vec![0.0; nb * PATCH_CHUNK * kp1],
             grambuf: Vec::new(),
             plain_sum: Vec::new(),
             plain_valid: false,
@@ -244,7 +263,7 @@ impl Layer for ConvLayer {
                 let xin = &self.xin[..m * in_len];
                 let jobs: Vec<threadpool::ScopedJob> = z[..m * l * co]
                     .chunks_mut(rows_per * l * co)
-                    .zip(self.pbuf[..nb * kp1].chunks_mut(kp1))
+                    .zip(self.pbuf[..nb * PATCH_CHUNK * kp1].chunks_mut(PATCH_CHUNK * kp1))
                     .enumerate()
                     .map(|(bi, (chunk, pb))| {
                         let j0 = bi * rows_per;
@@ -363,7 +382,7 @@ impl Layer for ConvLayer {
                     .chunks_mut(gsz)
                     .zip(gpartial[..nb * gsz].chunks_mut(gsz))
                     .zip(du_chunks)
-                    .zip(pbuf[..nb * kp1].chunks_mut(kp1))
+                    .zip(pbuf[..nb * PATCH_CHUNK * kp1].chunks_mut(PATCH_CHUNK * kp1))
                     .zip(s_chunks.drain(..).zip(dx_chunks.drain(..)))
                     .enumerate()
                 {
@@ -448,7 +467,7 @@ impl Layer for ConvLayer {
             let ret = &retained[..m * l * co];
             let jobs: Vec<threadpool::ScopedJob> = gpartial[..nb * gsz]
                 .chunks_mut(gsz)
-                .zip(pbuf[..nb * kp1].chunks_mut(kp1))
+                .zip(pbuf[..nb * PATCH_CHUNK * kp1].chunks_mut(PATCH_CHUNK * kp1))
                 .enumerate()
                 .map(|(bi, (p_b, pr_b))| {
                     let j0 = bi * rows_per;
@@ -493,10 +512,12 @@ impl Layer for ConvLayer {
     }
 }
 
-/// One example band of the implicit-GEMM forward: for each (example,
-/// position), gather the `[K+1]` patch row and accumulate `z = u W` in
-/// the same [`ops`] block order as the materialized matmul — bitwise
-/// identical to im2col + [`ops::matmul_into_slices`].
+/// One example band of the implicit-GEMM forward: stage [`PATCH_CHUNK`]
+/// gathered `[K+1]` patch rows, zero the matching output tile, and run
+/// the dispatched GEMM band kernel over it — bitwise identical to
+/// im2col + [`ops::matmul_into_slices`] because both sides bottom out
+/// in the SAME [`kernels::Microkernel::matmul_band`] (each output row's
+/// accumulation order depends only on its own patch row).
 fn conv_fwd_band(
     geom: &ConvGeom,
     co: usize,
@@ -509,25 +530,21 @@ fn conv_fwd_band(
     let l = geom.positions();
     let kp1 = geom.patch_len() + 1;
     let in_len = geom.in_len();
+    let kern = kernels::active();
     for (dj, zj) in z.chunks_mut(l * co).enumerate() {
         let xj = &x[(j0 + dj) * in_len..(j0 + dj + 1) * in_len];
-        for (li, zrow) in zj.chunks_mut(co).enumerate() {
-            gather_patch(geom, xj, li, pb);
-            for v in zrow.iter_mut() {
+        let mut li0 = 0;
+        while li0 < l {
+            let chunk = (l - li0).min(PATCH_CHUNK);
+            for (ci, pr) in pb[..chunk * kp1].chunks_mut(kp1).enumerate() {
+                gather_patch(geom, xj, li0 + ci, pr);
+            }
+            let ztile = &mut zj[li0 * co..(li0 + chunk) * co];
+            for v in ztile.iter_mut() {
                 *v = 0.0;
             }
-            for kb in (0..kp1).step_by(ops::BLOCK) {
-                let k_end = (kb + ops::BLOCK).min(kp1);
-                for (p, &f) in pb[kb..k_end].iter().enumerate() {
-                    if f == 0.0 {
-                        continue; // relu sparsity, same win as matmul_band
-                    }
-                    let wrow = &w[(kb + p) * co..(kb + p + 1) * co];
-                    for (zv, &wv) in zrow.iter_mut().zip(wrow) {
-                        *zv += f * wv;
-                    }
-                }
-            }
+            kern.matmul_band(&pb[..chunk * kp1], w, ztile, 0, chunk, kp1, co);
+            li0 += chunk;
         }
     }
 }
@@ -546,19 +563,14 @@ fn conv_dx_example(
 ) {
     let l = geom.positions();
     let kc = geom.patch_len();
+    let kern = kernels::active();
     for v in dx_j.iter_mut() {
         *v = 0.0;
     }
     for li in 0..l {
         let vrow = &v_j[li * co..(li + 1) * co];
-        for p in 0..kc {
-            let wrow = &w[p * co..(p + 1) * co];
-            let mut dot = 0f32;
-            for (&vv, &wv) in vrow.iter().zip(wrow) {
-                dot += vv * wv;
-            }
-            dub[p] = dot;
-        }
+        // bias row p = kc of W excluded from the slice
+        kern.dot_rows(vrow, &w[..kc * co], dub);
         scatter_patch_add(geom, dub, li, dx_j);
     }
     if let Some(dphi) = dphi_row {
@@ -603,32 +615,29 @@ fn conv_bwd_band(
     let l = geom.positions();
     let kp1 = geom.patch_len() + 1;
     let in_len = geom.in_len();
+    let kern = kernels::active();
     for j in j0..j1 {
         let v_j = &delta[j * l * co..(j + 1) * l * co];
         // ---- G_j = U_j^T V_j into scratch --------------------------------
+        // staged PATCH_CHUNK rows at a time through the dispatched tn
+        // kernel (coef None ≡ all-ones: `apj * 1.0` is bitwise `apj`, so
+        // the scalar path reproduces the old per-row loop exactly)
         for v in gbuf.iter_mut() {
             *v = 0.0;
         }
-        for li in 0..l {
-            let urow = src.row(geom, l, kp1, in_len, j, li, prow);
-            let vrow = &v_j[li * co..(li + 1) * co];
-            for (p, &f) in urow.iter().enumerate() {
-                if f == 0.0 {
-                    continue; // relu sparsity, same win as tn_band
-                }
-                let grow = &mut gbuf[p * co..(p + 1) * co];
-                for (gv, &vv) in grow.iter_mut().zip(vrow) {
-                    *gv += f * vv;
-                }
-            }
+        let mut li0 = 0;
+        while li0 < l {
+            let chunk = (l - li0).min(PATCH_CHUNK);
+            let urows = src.rows(geom, l, kp1, in_len, j, li0, chunk, prow);
+            let vrows = &v_j[li0 * co..(li0 + chunk) * co];
+            kern.tn_band(urows, vrows, None, gbuf, 0, kp1, kp1, co, chunk);
+            li0 += chunk;
         }
         // ---- streamed norm + accumulation --------------------------------
+        // same dispatched reduction as `ops::sq_sum` over a materialized
+        // G_j — the streamed-vs-materialized coupling holds per kernel
         if let Some(s) = s.as_deref_mut() {
-            let mut acc = 0f64;
-            for &g in gbuf.iter() {
-                acc += (g as f64) * (g as f64);
-            }
-            s[j - j0] = acc as f32;
+            s[j - j0] = kern.row_sq(gbuf) as f32;
         }
         if let Some(coef) = coef {
             let cj = coef[j];
@@ -659,7 +668,10 @@ fn conv_bwd_band(
 /// matrices — `G_j` is never formed. `B = V_jV_jᵀ` fills the band-local
 /// upper triangle; the `U` inner products stream against it with the
 /// symmetry factor 2, f64-accumulated. The input gradient is the same
-/// [`conv_dx_example`] as the G form.
+/// [`conv_dx_example`] as the G form. This path deliberately stays
+/// scalar: it only ever couples to the G form through tolerance tests
+/// (different summation order by construction), and it dispatches only
+/// on small-L geometries where the GEMM tile has nothing to amortize.
 #[allow(clippy::too_many_arguments)]
 fn conv_bwd_band_gram(
     geom: &ConvGeom,
@@ -751,25 +763,24 @@ fn conv_replay_band(
     let l = geom.positions();
     let kp1 = geom.patch_len() + 1;
     let in_len = geom.in_len();
+    let kern = kernels::active();
+    let mut cvec = [0.0f32; PATCH_CHUNK];
     for j in j0..j1 {
         let cj = coef[j];
         if cj == 0.0 {
             continue;
         }
+        cvec.fill(cj);
         let v_j = &retained[j * l * co..(j + 1) * l * co];
-        for li in 0..l {
-            let urow = src.row(geom, l, kp1, in_len, j, li, prow);
-            let vrow = &v_j[li * co..(li + 1) * co];
-            for (p, &f) in urow.iter().enumerate() {
-                if f == 0.0 {
-                    continue;
-                }
-                let fw = f * cj;
-                let grow = &mut partial[p * co..(p + 1) * co];
-                for (gv, &vv) in grow.iter_mut().zip(vrow) {
-                    *gv += fw * vv;
-                }
-            }
+        let mut li0 = 0;
+        while li0 < l {
+            let chunk = (l - li0).min(PATCH_CHUNK);
+            let urows = src.rows(geom, l, kp1, in_len, j, li0, chunk, prow);
+            let vrows = &v_j[li0 * co..(li0 + chunk) * co];
+            // coef = [cj; chunk]: the kernel's `apj * cj` matches the old
+            // per-row `fw = f * cj` bitwise
+            kern.tn_band(urows, vrows, Some(&cvec[..chunk]), partial, 0, kp1, kp1, co, chunk);
+            li0 += chunk;
         }
     }
 }
@@ -1134,7 +1145,7 @@ mod tests {
         let mut gb = vec![0f32; gsz];
         let mut pb = vec![0f32; gsz];
         let mut dub = vec![0f32; layer.kp1 - 1];
-        let mut prow = vec![0f32; layer.kp1];
+        let mut prow = vec![0f32; PATCH_CHUNK * layer.kp1];
         let mut s_ser = vec![0f32; m];
         let mut dx_ser = vec![0f32; m * layer.spec.in_len()];
         conv_bwd_band(

@@ -5,9 +5,13 @@
 //! backward band kernel accumulates `||zbar_j||²` in f64 inside the same
 //! row visit that forms the input gradient, and the §4 product
 //! `s_j = ||zbar_j||²·||h_aug,j||²` is a single f32 multiply — so the
-//! streamed values match `pegrad::per_example_norms` bitwise.
+//! streamed values match `pegrad::per_example_norms` bitwise. The inner
+//! loops (row dots, squared norms) dispatch through
+//! [`kernels::active`], the same primitives `ops::row_sq_norms` and the
+//! oracle decompositions bottom out in — bitwise couplings hold under
+//! either kernel.
 
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{kernels, ops, Tensor};
 use crate::util::threadpool;
 
 use super::{Layer, LayerSpec};
@@ -172,16 +176,13 @@ pub(crate) fn augment_rows(src: &[f32], m: usize, d: usize, out: &mut [f32], h_s
     debug_assert_eq!(src.len(), m * d);
     debug_assert_eq!(out.len(), m * (d + 1));
     debug_assert_eq!(h_sq.len(), m);
+    let kern = kernels::active();
     for j in 0..m {
         let s = &src[j * d..(j + 1) * d];
         let o = &mut out[j * (d + 1)..(j + 1) * (d + 1)];
-        let mut acc = 0f64;
-        for (ov, &sv) in o[..d].iter_mut().zip(s) {
-            *ov = sv;
-            acc += (sv as f64) * (sv as f64);
-        }
+        o[..d].copy_from_slice(s);
         o[d] = 1.0;
-        h_sq[j] = (acc + 1.0) as f32; // +1: the bias column of Haug
+        h_sq[j] = (kern.row_sq(s) + 1.0) as f32; // +1: the bias column of Haug
     }
 }
 
@@ -189,12 +190,9 @@ pub(crate) fn augment_rows(src: &[f32], m: usize, d: usize, out: &mut [f32], h_s
 pub(crate) fn row_sq_into(src: &[f32], m: usize, d: usize, out: &mut [f32]) {
     debug_assert_eq!(src.len(), m * d);
     debug_assert_eq!(out.len(), m);
-    for j in 0..m {
-        let mut acc = 0f64;
-        for &v in &src[j * d..(j + 1) * d] {
-            acc += (v as f64) * (v as f64);
-        }
-        out[j] = acc as f32;
+    let kern = kernels::active();
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = kern.row_sq(&src[j * d..(j + 1) * d]) as f32;
     }
 }
 
@@ -215,25 +213,17 @@ fn backprop_band(
     j0: usize,
     j1: usize,
 ) {
+    let kern = kernels::active();
     for j in j0..j1 {
         let zrow = &delta[j * d_out..(j + 1) * d_out];
-        let mut acc = 0f64;
-        for &v in zrow {
-            acc += (v as f64) * (v as f64);
-        }
-        z_sq[j - j0] = acc as f32;
-        let drow = dphi.map(|d| &d[j * d_in..(j + 1) * d_in]);
+        z_sq[j - j0] = kern.row_sq(zrow) as f32;
         let orow = &mut out[(j - j0) * d_in..(j - j0 + 1) * d_in];
-        for p in 0..d_in {
-            let wrow = &w[p * d_out..(p + 1) * d_out];
-            let mut dot = 0f32;
-            for (&zv, &wv) in zrow.iter().zip(wrow) {
-                dot += zv * wv;
+        // bias row p = d_in of W excluded — that is `drop_last_col`
+        kern.dot_rows(zrow, &w[..d_in * d_out], orow);
+        if let Some(d) = dphi {
+            for (ov, &dv) in orow.iter_mut().zip(&d[j * d_in..(j + 1) * d_in]) {
+                *ov *= dv;
             }
-            orow[p] = match drow {
-                Some(d) => dot * d[p],
-                None => dot,
-            };
         }
     }
 }

@@ -52,7 +52,7 @@
 
 use crate::util::Json;
 
-use super::sketch::P2Quantile;
+use super::sketch::{P2Quantile, P2State};
 use super::LayerTap;
 
 /// Runtime knobs for adaptive clipping (`[clip]` config section).
@@ -128,6 +128,22 @@ pub fn clip_update(c: f64, q_hat: f64, cfg: &ClipConfig) -> f64 {
 /// last `HISTORY_JSON_CAP` entries plus the offset they start at.
 pub const HISTORY_JSON_CAP: usize = 4096;
 
+/// Checkpointable [`ClipController`] dynamics: the sketch markers, the
+/// current and initial bounds, and the observed-step count — everything
+/// a resumed run needs to produce bitwise the same bound sequence as an
+/// uninterrupted one. The in-memory `history` is telemetry, not
+/// dynamics, and is deliberately NOT part of the state: a resumed
+/// controller restarts its history at the resume step, and
+/// [`ClipController::to_json`] derives `history_offset` from `steps` so
+/// reported step indices stay globally correct across resumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClipState {
+    pub sketch: P2State,
+    pub c: f64,
+    pub init_c: f64,
+    pub steps: u64,
+}
+
 /// The adaptive clip bound, driven by the streamed per-example norms.
 ///
 /// Feed it either as a [`LayerTap`] (the trainer hands it the engine's
@@ -192,6 +208,30 @@ impl ClipController {
         &self.cfg
     }
 
+    /// Snapshot the controller dynamics for a run checkpoint.
+    pub fn snapshot(&self) -> ClipState {
+        ClipState {
+            sketch: self.sketch.state(),
+            c: self.c,
+            init_c: self.init_c,
+            steps: self.steps,
+        }
+    }
+
+    /// Restore checkpointed dynamics into a freshly constructed
+    /// controller. The sketch's target quantile comes from the STATE
+    /// (the markers are only meaningful for the `p` they were tracked
+    /// under); the update rule's `eta`/guard rails keep following the
+    /// live config. History restarts empty at the resume step.
+    pub fn restore_state(&mut self, s: &ClipState) {
+        self.sketch = P2Quantile::from_state(&s.sketch);
+        self.c = s.c;
+        self.init_c = s.init_c;
+        self.steps = s.steps;
+        self.history.clear();
+        self.last_estimate = None;
+    }
+
     /// Observe one step's per-example gradient L2 norms and update the
     /// bound. Non-finite values are excluded from the sketch (a NaN
     /// marker would poison every later estimate) but still count toward
@@ -235,10 +275,14 @@ impl ClipController {
 
     /// Report section for the telemetry JSON (`"clip"` key). `history`
     /// holds the most recent [`HISTORY_JSON_CAP`] per-step bounds;
-    /// `history_offset` is the step index of its first entry (0 until a
-    /// run outgrows the cap).
+    /// `history_offset` is the GLOBAL step index of its first entry (0
+    /// until a run outgrows the cap). The offset is derived from `steps`
+    /// rather than the buffer length so it stays correct after a
+    /// checkpoint resume, where the in-memory buffer restarts empty
+    /// mid-run.
     pub fn to_json(&self) -> Json {
         let tail_start = self.history.len().saturating_sub(HISTORY_JSON_CAP);
+        let history_offset = self.steps as usize - self.history.len() + tail_start;
         Json::obj(vec![
             ("adaptive", Json::Bool(true)),
             ("quantile", Json::num(self.cfg.quantile)),
@@ -253,7 +297,7 @@ impl ClipController {
                 "quantile_estimate",
                 self.last_estimate.map(Json::num).unwrap_or(Json::Null),
             ),
-            ("history_offset", Json::num(tail_start as f64)),
+            ("history_offset", Json::num(history_offset as f64)),
             ("history", Json::arr_f32(&self.history[tail_start..])),
         ])
     }
@@ -423,6 +467,47 @@ mod tests {
         assert_eq!(j.get("history_offset").unwrap().as_usize(), Some(10));
         // the in-memory history is still complete
         assert_eq!(ctrl.history().len(), HISTORY_JSON_CAP + 10);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bitwise() {
+        // run A uninterrupted; run B snapshots mid-stream, restores into
+        // a fresh controller, and continues — bounds must match bitwise
+        let c = cfg(0.25, 3);
+        let mut a = ClipController::new(&c, 0.5);
+        let mut b = ClipController::new(&c, 0.5);
+        let batch: Vec<f32> = (1..=32).map(|i| (i as f32).sqrt()).collect();
+        for _ in 0..7 {
+            a.observe_norms(&batch);
+            b.observe_norms(&batch);
+        }
+        let state = b.snapshot();
+        assert_eq!(state.steps, 7);
+        let mut b2 = ClipController::new(&c, 0.5);
+        b2.restore_state(&state);
+        assert_eq!(b2.bound().to_bits(), a.bound().to_bits());
+        assert_eq!(b2.steps(), 7);
+        assert!(b2.history().is_empty(), "history must restart on resume");
+        for _ in 0..20 {
+            a.observe_norms(&batch);
+            b2.observe_norms(&batch);
+        }
+        assert_eq!(
+            b2.bound().to_bits(),
+            a.bound().to_bits(),
+            "resumed controller diverged from the uninterrupted run"
+        );
+        // resumed history is the tail of the uninterrupted history
+        assert_eq!(b2.history(), &a.history()[7..]);
+        // json offset is global: first resumed entry is step 7
+        assert_eq!(
+            b2.to_json().get("history_offset").unwrap().as_usize(),
+            Some(7)
+        );
+        assert_eq!(
+            a.to_json().get("history_offset").unwrap().as_usize(),
+            Some(0)
+        );
     }
 
     #[test]

@@ -46,7 +46,7 @@ pub mod monitor;
 pub mod outlier;
 pub mod sketch;
 
-pub use adaptive::{ClipConfig, ClipController};
+pub use adaptive::{ClipConfig, ClipController, ClipState};
 pub use diff::{diff_reports, DiffConfig};
 
 /// Identifying tag every telemetry report carries (`"telemetry"` field);
@@ -56,7 +56,7 @@ pub const REPORT_TAG: &str = "pegrad.gradient_norms";
 pub use gns::GnsEstimator;
 pub use monitor::TelemetryMonitor;
 pub use outlier::{OutlierConfig, OutlierDetector};
-pub use sketch::{P2Quantile, StreamingHistogram};
+pub use sketch::{P2Quantile, P2State, StreamingHistogram};
 
 /// Sink for per-layer squared gradient norms streamed out of a backward
 /// traversal. Implementations must not allocate on the hot path (they are

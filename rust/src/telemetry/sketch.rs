@@ -272,6 +272,33 @@ impl P2Quantile {
         self.q[i] + ds * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
     }
 
+    /// Serializable snapshot for run checkpoints. `dn` is omitted: it is
+    /// a pure function of `p` and is recomputed by
+    /// [`P2Quantile::from_state`].
+    pub fn state(&self) -> P2State {
+        P2State {
+            p: self.p,
+            q: self.q,
+            n: self.n,
+            np: self.np,
+            count: self.count,
+        }
+    }
+
+    /// Rebuild a sketch from a checkpointed [`P2State`]. The resumed
+    /// sketch is field-for-field identical to the original — every
+    /// subsequent `push` and `estimate` is bitwise the same as if the
+    /// run had never stopped.
+    pub fn from_state(s: &P2State) -> P2Quantile {
+        assert!(s.p > 0.0 && s.p < 1.0, "checkpointed quantile out of (0,1)");
+        let mut sk = P2Quantile::new(s.p);
+        sk.q = s.q;
+        sk.n = s.n;
+        sk.np = s.np;
+        sk.count = s.count;
+        sk
+    }
+
     /// Current estimate of the `p`-quantile. `None` before any
     /// observation; exact for the first five.
     pub fn estimate(&self) -> Option<f64> {
@@ -289,6 +316,18 @@ impl P2Quantile {
             _ => Some(self.q[2]),
         }
     }
+}
+
+/// Checkpointable [`P2Quantile`] state: the five marker heights, actual
+/// and desired positions, and the observation count. The `dn` increments
+/// are derivable from `p` and deliberately not part of the state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct P2State {
+    pub p: f64,
+    pub q: [f64; 5],
+    pub n: [f64; 5],
+    pub np: [f64; 5],
+    pub count: u64,
 }
 
 #[cfg(test)]
@@ -395,6 +434,38 @@ mod tests {
             prop::require(
                 est >= lo && est <= hi,
                 format!("p={p} n={n}: estimate {est} outside [{lo}, {hi}]"),
+            )
+        });
+    }
+
+    #[test]
+    fn p2_state_roundtrip_is_bitwise() {
+        prop::check(15, |g| {
+            let p = *g.choose(&[0.5, 0.9, 0.99]);
+            let mut live = P2Quantile::new(p);
+            // stop both before AND after the 5-observation bootstrap
+            let warm = g.usize_in(0..40);
+            for _ in 0..warm {
+                live.push(g.normal().abs());
+            }
+            let mut resumed = P2Quantile::from_state(&live.state());
+            prop::require(
+                live.state() == resumed.state(),
+                "restored state differs".to_string(),
+            )?;
+            for _ in 0..g.usize_in(1..200) {
+                let x = g.normal().abs();
+                live.push(x);
+                resumed.push(x);
+            }
+            let (a, b) = (live.estimate(), resumed.estimate());
+            prop::require(
+                match (a, b) {
+                    (None, None) => true,
+                    (Some(x), Some(y)) => x.to_bits() == y.to_bits(),
+                    _ => false,
+                },
+                format!("resumed sketch diverged: {a:?} vs {b:?}"),
             )
         });
     }

@@ -1,0 +1,583 @@
+//! The microkernel layer: every band-parallel hot loop in the crate —
+//! dense/conv forward GEMM, the §4/§6 fused `UᵀV` accumulations, the
+//! backprop row dots, and the squared-norm reductions — bottoms out in
+//! ONE of the five primitives on the [`Microkernel`] trait. Two
+//! implementations exist:
+//!
+//! * [`ScalarKernel`] — the original scalar loops, moved here verbatim
+//!   from `ops.rs` / the layer band kernels. This is the bitwise oracle:
+//!   a `--features scalar-kernels` build reproduces pre-microkernel
+//!   results bit for bit.
+//! * [`PackedKernel`] — register-blocked f32 kernels over
+//!   [`super::simd::F32x8`] lanes with thread-local panel packing of the
+//!   B operand (and the transposed A panel for the `tn` kernel). The
+//!   GEMM-shaped kernels preserve the scalar kernels' per-element
+//!   accumulation ORDER (single accumulator, contraction index
+//!   ascending), so they differ from the scalar oracle only through
+//!   dropped `== 0.0` skips (a `c += 0.0 * b` contributes a signed
+//!   zero); the reductions ([`Microkernel::row_sq`],
+//!   [`Microkernel::dot_rows`]) use multi-lane partial sums and DO
+//!   reassociate, within the tolerance band derived in the
+//!   `tensor::ops` module docs.
+//!
+//! Dispatch: the `scalar-kernels` cargo feature pins [`active`] to the
+//! scalar oracle at compile time; otherwise the `PEGRAD_KERNEL`
+//! environment variable (`scalar` | `packed`, read once per process)
+//! selects at startup, defaulting to packed. Band-parallel callers
+//! resolve `active()` once and hand the `&'static dyn` to their worker
+//! closures, so the per-band dispatch cost is one virtual call.
+
+// The band kernels thread raw slices + explicit dims through fixed
+// signatures shared with the original free functions; bundling them
+// into structs would obscure the 1:1 mapping to the scalar oracle.
+#![allow(clippy::too_many_arguments)]
+
+use super::simd::{F32x8, LANES};
+
+/// Cache-blocking factor of the scalar kernels (rows of B live in L1
+/// across one block of the contraction index). Shared with
+/// `ops::transpose`.
+pub(crate) const BLOCK: usize = 64;
+
+/// Register-tile rows of the packed GEMM (distinct broadcast operands
+/// held across the k loop).
+pub const MR: usize = 4;
+/// Register-tile columns of the packed GEMM (two [`F32x8`] lanes).
+pub const NR: usize = 2 * LANES;
+
+/// The five primitives every dispatched hot loop reduces to. All are
+/// plain slice kernels — banding/threading stays in the callers, so one
+/// implementation serves serial and band-parallel paths identically.
+pub trait Microkernel: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// `C[i - r0, :] += Σ_kk A[i, kk] · B[kk, :]` for `i ∈ [r0, r1)`.
+    /// `a` is the FULL `[*, k]` row-major matrix (absolute row indices),
+    /// `c` is the band's `[(r1 - r0), n]` output chunk.
+    fn matmul_band(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        r0: usize,
+        r1: usize,
+        k: usize,
+        n: usize,
+    );
+
+    /// Fused §4/§6 transposed accumulation over `m` examples:
+    /// `C[p - k0, :] += Σ_j coef[j] · A[j, p] · B[j, :]` for
+    /// `p ∈ [k0, k1)`, with `a: [m, k]`, `b: [m, n]` row-major and
+    /// `coef == None` meaning all-ones. A zero coefficient skips its
+    /// example entirely (the §6 fully-clipped case).
+    fn tn_band(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        coef: Option<&[f32]>,
+        c: &mut [f32],
+        k0: usize,
+        k1: usize,
+        k: usize,
+        n: usize,
+        m: usize,
+    );
+
+    /// Row-batch of dot products: `out[p] = Σ_q v[q] · W[p, q]` where
+    /// `w` holds `out.len()` rows of length `v.len()` (the backprop
+    /// `δ·Wᵀ` inner loop and the conv `dx` patch dots).
+    fn dot_rows(&self, v: &[f32], w: &[f32], out: &mut [f32]);
+
+    /// `Σ x_i²` accumulated in f64 (the §4 norm reductions; shared by
+    /// `row_sq_norms`/`sq_sum` and the streamed layer norms so bitwise
+    /// couplings between them hold under either kernel).
+    fn row_sq(&self, x: &[f32]) -> f64;
+}
+
+// --------------------------------------------------------------- scalar
+
+/// The original scalar band kernels, verbatim (the bitwise oracle).
+pub struct ScalarKernel;
+
+impl Microkernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn matmul_band(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        r0: usize,
+        r1: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for kb in (0..k).step_by(BLOCK) {
+            let k_end = (kb + BLOCK).min(k);
+            for i in r0..r1 {
+                let c_row = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+                for kk in kb..k_end {
+                    let aik = a[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[kk * n..kk * n + n];
+                    for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+
+    fn tn_band(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        coef: Option<&[f32]>,
+        c: &mut [f32],
+        k0: usize,
+        k1: usize,
+        k: usize,
+        n: usize,
+        m: usize,
+    ) {
+        for j in 0..m {
+            let w = coef.map_or(1.0, |cf| cf[j]);
+            if w == 0.0 {
+                continue;
+            }
+            let a_row = &a[j * k..j * k + k];
+            let b_row = &b[j * n..j * n + n];
+            for p in k0..k1 {
+                let apj = a_row[p];
+                if apj == 0.0 {
+                    continue;
+                }
+                let f = apj * w;
+                let c_row = &mut c[(p - k0) * n..(p - k0 + 1) * n];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += f * bv;
+                }
+            }
+        }
+    }
+
+    fn dot_rows(&self, v: &[f32], w: &[f32], out: &mut [f32]) {
+        let n = v.len();
+        for (p, o) in out.iter_mut().enumerate() {
+            let wrow = &w[p * n..(p + 1) * n];
+            let mut dot = 0.0f32;
+            for (&vv, &wv) in v.iter().zip(wrow) {
+                dot += vv * wv;
+            }
+            *o = dot;
+        }
+    }
+
+    fn row_sq(&self, x: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for &v in x {
+            acc += (v as f64) * (v as f64);
+        }
+        acc
+    }
+}
+
+// --------------------------------------------------------------- packed
+
+/// Register-blocked kernels; see the module docs and `tensor::ops` for
+/// the tiling/packing derivation.
+pub struct PackedKernel;
+
+thread_local! {
+    // Panel scratch, per pool worker: packing buffers persist across
+    // band calls so the steady state allocates nothing.
+    static PACK_A: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+    static PACK_B: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+fn with_buf<R>(
+    key: &'static std::thread::LocalKey<std::cell::RefCell<Vec<f32>>>,
+    len: usize,
+    f: impl FnOnce(&mut [f32]) -> R,
+) -> R {
+    key.with(|cell| {
+        let mut v = cell.borrow_mut();
+        if v.len() < len {
+            v.resize(len, 0.0);
+        }
+        f(&mut v[..len])
+    })
+}
+
+/// One register tile: `R` rows × [`NR`] columns of C held in `2R`
+/// [`F32x8`] accumulators across the whole contraction loop. Per output
+/// element this performs `acc = (acc + a·b)` with the contraction index
+/// strictly ascending from the incoming C value — the same per-element
+/// operation sequence as the scalar kernels (order preservation is what
+/// keeps the packed matmul bitwise-aligned with the scalar oracle on
+/// zero-free operands).
+#[inline(always)]
+fn tile16<const R: usize>(
+    a: &[f32],
+    lda: usize,
+    pb: &[f32],
+    coef: Option<&[f32]>,
+    c: &mut [f32],
+    ldc: usize,
+    kdim: usize,
+) {
+    let mut acc = [[F32x8::splat(0.0); 2]; R];
+    for r in 0..R {
+        acc[r][0] = F32x8::load(&c[r * ldc..r * ldc + LANES]);
+        acc[r][1] = F32x8::load(&c[r * ldc + LANES..r * ldc + NR]);
+    }
+    for t in 0..kdim {
+        let w = match coef {
+            Some(cf) => {
+                let w = cf[t];
+                if w == 0.0 {
+                    continue;
+                }
+                Some(w)
+            }
+            None => None,
+        };
+        let bp = &pb[t * NR..t * NR + NR];
+        let b0 = F32x8::load(&bp[..LANES]);
+        let b1 = F32x8::load(&bp[LANES..]);
+        for r in 0..R {
+            let mut av = a[r * lda + t];
+            if let Some(wv) = w {
+                av *= wv;
+            }
+            let s = F32x8::splat(av);
+            acc[r][0] = acc[r][0].add(s.mul(b0));
+            acc[r][1] = acc[r][1].add(s.mul(b1));
+        }
+    }
+    for r in 0..R {
+        acc[r][0].store(&mut c[r * ldc..r * ldc + LANES]);
+        acc[r][1].store(&mut c[r * ldc + LANES..r * ldc + NR]);
+    }
+}
+
+/// Single-lane variant of [`tile16`] for the `LANES`-wide column tail.
+#[inline(always)]
+fn tile8<const R: usize>(
+    a: &[f32],
+    lda: usize,
+    pb: &[f32],
+    coef: Option<&[f32]>,
+    c: &mut [f32],
+    ldc: usize,
+    kdim: usize,
+) {
+    let mut acc = [F32x8::splat(0.0); R];
+    for r in 0..R {
+        acc[r] = F32x8::load(&c[r * ldc..r * ldc + LANES]);
+    }
+    for t in 0..kdim {
+        let w = match coef {
+            Some(cf) => {
+                let w = cf[t];
+                if w == 0.0 {
+                    continue;
+                }
+                Some(w)
+            }
+            None => None,
+        };
+        let b0 = F32x8::load(&pb[t * LANES..t * LANES + LANES]);
+        for r in 0..R {
+            let mut av = a[r * lda + t];
+            if let Some(wv) = w {
+                av *= wv;
+            }
+            acc[r] = acc[r].add(F32x8::splat(av).mul(b0));
+        }
+    }
+    for r in 0..R {
+        acc[r].store(&mut c[r * ldc..r * ldc + LANES]);
+    }
+}
+
+/// Shared packed GEMM core:
+/// `C[r, q] += Σ_t coef[t] · Ā[r, t] · B[t, q]` with `Ā` row-major under
+/// leading dimension `lda` (the contraction index is always the
+/// unit-stride axis of `Ā`, by construction of the two callers), `B`
+/// row-major `[kdim, n]`, `C` row-major `[rows, n]`. B panels of NR
+/// (then LANES) columns are packed contiguous so the inner loop streams
+/// unit-stride; leftover columns run a scalar loop in the same
+/// per-element order.
+fn gemm_acc(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    coef: Option<&[f32]>,
+    c: &mut [f32],
+    rows: usize,
+    n: usize,
+    kdim: usize,
+) {
+    with_buf(&PACK_B, kdim * NR, |pb| {
+        let mut q0 = 0;
+        while q0 + NR <= n {
+            for t in 0..kdim {
+                pb[t * NR..t * NR + NR].copy_from_slice(&b[t * n + q0..t * n + q0 + NR]);
+            }
+            let mut r0 = 0;
+            while r0 < rows {
+                let rr = (rows - r0).min(MR);
+                let ab = &a[r0 * lda..];
+                let cb = &mut c[r0 * n + q0..];
+                match rr {
+                    4 => tile16::<4>(ab, lda, pb, coef, cb, n, kdim),
+                    3 => tile16::<3>(ab, lda, pb, coef, cb, n, kdim),
+                    2 => tile16::<2>(ab, lda, pb, coef, cb, n, kdim),
+                    _ => tile16::<1>(ab, lda, pb, coef, cb, n, kdim),
+                }
+                r0 += rr;
+            }
+            q0 += NR;
+        }
+        if q0 + LANES <= n {
+            for t in 0..kdim {
+                pb[t * LANES..t * LANES + LANES]
+                    .copy_from_slice(&b[t * n + q0..t * n + q0 + LANES]);
+            }
+            let mut r0 = 0;
+            while r0 < rows {
+                let rr = (rows - r0).min(MR);
+                let ab = &a[r0 * lda..];
+                let cb = &mut c[r0 * n + q0..];
+                match rr {
+                    4 => tile8::<4>(ab, lda, pb, coef, cb, n, kdim),
+                    3 => tile8::<3>(ab, lda, pb, coef, cb, n, kdim),
+                    2 => tile8::<2>(ab, lda, pb, coef, cb, n, kdim),
+                    _ => tile8::<1>(ab, lda, pb, coef, cb, n, kdim),
+                }
+                r0 += rr;
+            }
+            q0 += LANES;
+        }
+        if q0 < n {
+            for r in 0..rows {
+                let arow = &a[r * lda..r * lda + kdim];
+                for q in q0..n {
+                    let mut acc = c[r * n + q];
+                    for (t, &av) in arow.iter().enumerate() {
+                        let f = match coef {
+                            Some(cf) => {
+                                let w = cf[t];
+                                if w == 0.0 {
+                                    continue;
+                                }
+                                av * w
+                            }
+                            None => av,
+                        };
+                        acc += f * b[t * n + q];
+                    }
+                    c[r * n + q] = acc;
+                }
+            }
+        }
+    });
+}
+
+impl Microkernel for PackedKernel {
+    fn name(&self) -> &'static str {
+        "packed"
+    }
+
+    fn matmul_band(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        r0: usize,
+        r1: usize,
+        k: usize,
+        n: usize,
+    ) {
+        gemm_acc(&a[r0 * k..r1 * k], k, b, None, c, r1 - r0, n, k);
+    }
+
+    fn tn_band(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        coef: Option<&[f32]>,
+        c: &mut [f32],
+        k0: usize,
+        k1: usize,
+        k: usize,
+        n: usize,
+        m: usize,
+    ) {
+        let rows = k1 - k0;
+        with_buf(&PACK_A, rows * m, |at| {
+            // pack the band's A columns transposed (the "A panel"): the
+            // scalar kernel's stride-k column walk becomes unit-stride
+            // panel rows, and the GEMM core contracts over j ascending —
+            // the same per-element order as the scalar j-outer loop.
+            for j in 0..m {
+                let arow = &a[j * k..j * k + k];
+                for p in k0..k1 {
+                    at[(p - k0) * m + j] = arow[p];
+                }
+            }
+            gemm_acc(at, m, b, coef, c, rows, n, m);
+        });
+    }
+
+    fn dot_rows(&self, v: &[f32], w: &[f32], out: &mut [f32]) {
+        let n = v.len();
+        let split = n - n % LANES;
+        for (p, o) in out.iter_mut().enumerate() {
+            let wrow = &w[p * n..(p + 1) * n];
+            let mut acc = F32x8::splat(0.0);
+            let mut q = 0;
+            while q + LANES <= n {
+                acc = acc.add(F32x8::load(&v[q..q + LANES]).mul(F32x8::load(&wrow[q..q + LANES])));
+                q += LANES;
+            }
+            let mut dot = acc.hsum();
+            for (&vv, &wv) in v[split..].iter().zip(&wrow[split..]) {
+                dot += vv * wv;
+            }
+            *o = dot;
+        }
+    }
+
+    fn row_sq(&self, x: &[f32]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        let mut chunks = x.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            for (a, &v) in acc.iter_mut().zip(ch) {
+                let vd = v as f64;
+                *a += vd * vd;
+            }
+        }
+        for (a, &v) in acc.iter_mut().zip(chunks.remainder()) {
+            let vd = v as f64;
+            *a += vd * vd;
+        }
+        acc.iter().sum()
+    }
+}
+
+// ------------------------------------------------------------- dispatch
+
+/// The scalar oracle instance.
+pub static SCALAR: ScalarKernel = ScalarKernel;
+/// The packed instance (always compiled, so benches/tests can compare
+/// the two regardless of the active dispatch).
+pub static PACKED: PackedKernel = PackedKernel;
+
+/// The kernel every dispatched op routes through.
+#[cfg(feature = "scalar-kernels")]
+pub fn active() -> &'static dyn Microkernel {
+    &SCALAR
+}
+
+/// The kernel every dispatched op routes through: `PEGRAD_KERNEL`
+/// (`scalar` | `packed`), read once per process, defaulting to packed.
+#[cfg(not(feature = "scalar-kernels"))]
+pub fn active() -> &'static dyn Microkernel {
+    use once_cell::sync::Lazy;
+    static ACTIVE: Lazy<&'static dyn Microkernel> =
+        Lazy::new(|| match std::env::var("PEGRAD_KERNEL").as_deref() {
+            Ok("scalar") => &SCALAR,
+            Ok("packed") | Err(_) => &PACKED,
+            Ok(other) => {
+                log::warn!("PEGRAD_KERNEL={other:?} not one of scalar|packed; using packed");
+                &PACKED
+            }
+        });
+    *ACTIVE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn randn_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    #[test]
+    fn active_dispatch_is_consistent() {
+        let k = active();
+        #[cfg(feature = "scalar-kernels")]
+        assert_eq!(k.name(), "scalar");
+        #[cfg(not(feature = "scalar-kernels"))]
+        assert!(k.name() == "scalar" || k.name() == "packed");
+    }
+
+    /// Order preservation: on zero-free operands the packed GEMM kernels
+    /// are BITWISE equal to the scalar oracle (same per-element
+    /// accumulation sequence; only `== 0.0` skips can diverge, by a
+    /// signed zero). Randn operands are zero-free with probability 1.
+    #[test]
+    fn packed_matmul_band_bitwise_on_zero_free_operands() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (4, 8, 16), (5, 3, 21), (7, 129, 37)] {
+            let a = randn_vec(m * k, &mut rng);
+            let b = randn_vec(k * n, &mut rng);
+            let mut cs = vec![0.0f32; m * n];
+            let mut cp = vec![0.0f32; m * n];
+            SCALAR.matmul_band(&a, &b, &mut cs, 0, m, k, n);
+            PACKED.matmul_band(&a, &b, &mut cp, 0, m, k, n);
+            assert_eq!(cs, cp, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn packed_tn_band_bitwise_with_coef() {
+        let mut rng = Rng::new(12);
+        for &(m, k, n) in &[(3usize, 5usize, 9usize), (8, 16, 16), (6, 31, 18)] {
+            let a = randn_vec(m * k, &mut rng);
+            let b = randn_vec(m * n, &mut rng);
+            // coefficient vector with explicit zeros: both kernels skip
+            // those examples outright, so bitwise equality still holds
+            let coef: Vec<f32> =
+                (0..m).map(|j| if j % 3 == 0 { 0.0 } else { 0.5 + j as f32 }).collect();
+            for co in [None, Some(coef.as_slice())] {
+                let mut cs = vec![0.0f32; k * n];
+                let mut cp = vec![0.0f32; k * n];
+                SCALAR.tn_band(&a, &b, co, &mut cs, 0, k, k, n, m);
+                PACKED.tn_band(&a, &b, co, &mut cp, 0, k, k, n, m);
+                assert_eq!(cs, cp, "m={m} k={k} n={n} coef={}", co.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_reductions_within_tolerance() {
+        let mut rng = Rng::new(13);
+        for &n in &[1usize, 7, 8, 9, 63, 64, 65, 1000] {
+            let x = randn_vec(n, &mut rng);
+            let s = SCALAR.row_sq(&x);
+            let p = PACKED.row_sq(&x);
+            assert!(
+                (s - p).abs() <= 1e-9 * s.abs().max(1.0),
+                "n={n}: scalar {s} packed {p}"
+            );
+        }
+        let v = randn_vec(37, &mut rng);
+        let w = randn_vec(5 * 37, &mut rng);
+        let mut os = [0.0f32; 5];
+        let mut op = [0.0f32; 5];
+        SCALAR.dot_rows(&v, &w, &mut os);
+        PACKED.dot_rows(&v, &w, &mut op);
+        for (a, b) in os.iter().zip(op) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}

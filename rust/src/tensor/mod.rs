@@ -8,9 +8,11 @@
 //! baseline the benches compare against.
 
 pub mod conv;
+pub mod kernels;
 pub mod ops;
 pub mod rng;
 pub mod shape;
+pub mod simd;
 
 pub use rng::Rng;
 pub use shape::Shape;

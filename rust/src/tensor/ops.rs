@@ -1,16 +1,63 @@
-//! Tensor operations: elementwise, reductions, activations, and a blocked
-//! cache-friendly parallel matmul.
+//! Tensor operations: elementwise, reductions, activations, and the
+//! dispatched matmul family.
 //!
 //! The matmul family is the performance-relevant part — it backs the rust
 //! reference implementation used as the E1/E2 CPU baseline and the fused
-//! engine's kernels — so it gets a blocked i-k-j loop order (unit-stride
-//! inner loop, FMA-friendly) and row-band parallelism dispatched onto the
-//! persistent worker pool via [`threadpool::scope`], with jobs borrowing
-//! the operands directly (no per-call input copies or thread spawns; band
-//! count from [`threadpool::bands`]).
+//! engine's kernels. Banding/threading lives HERE (row-band parallelism
+//! dispatched onto the persistent worker pool via [`threadpool::scope`],
+//! jobs borrowing the operands directly, band count from
+//! [`threadpool::bands`]); the per-band inner loops live in
+//! [`super::kernels`] behind the [`super::kernels::Microkernel`] trait,
+//! with a scalar oracle and a packed register-blocked implementation.
+//!
+//! # Packing / tiling scheme (the packed kernel)
+//!
+//! All three GEMM-shaped hot loops (`matmul_into`, the §4/§6 fused
+//! `tn` accumulation, and the implicit-conv forward, which reuses
+//! `matmul_band` on gathered patch rows) share one core: an `MR×NR` =
+//! 4×16 register tile of C held in eight 8-lane accumulators across the
+//! entire contraction loop. Per contraction index `t` the kernel
+//! broadcasts one A element per tile row (`splat`) and streams two
+//! unit-stride lanes of B, so each C element costs 2 memory touches per
+//! `4·16` multiply-adds instead of the scalar kernel's
+//! load-modify-store of the whole C row per `(i, t)` pair — that
+//! arithmetic-intensity jump (C traffic divided by `MR`, B traffic
+//! amortized across the tile) is where the ≥2× single-thread gate in
+//! `benches/e13_kernel.rs` comes from. B panels of NR columns are
+//! packed contiguous per panel (thread-local scratch, amortized across
+//! all row tiles of the band) so the inner loop reads one dense stream;
+//! for the `tn` kernel the band's A columns are packed transposed once
+//! per call, turning its stride-`k` column walk into unit-stride panel
+//! rows. Column remainders fall to an 8-wide tile, then a scalar tail;
+//! row remainders monomorphize the tile height (`R ∈ {1,2,3,4}`).
+//!
+//! # Why the error is bounded (the tolerance argument)
+//!
+//! The packed GEMM kernels do NOT reassociate: each output element
+//! keeps a single accumulator and adds `a·b` terms with the contraction
+//! index strictly ascending — the same per-element operation sequence
+//! as the scalar oracle (and no `mul_add`, so per-term rounding is
+//! identical too). Their only divergence from the scalar path is the
+//! dropped `== 0.0` sparsity skips, which can flip a `-0.0` to `+0.0`
+//! (`x + 0.0·b`); on finite data the values are otherwise bit-equal,
+//! which is what keeps the implicit-conv-vs-im2col and
+//! streamed-vs-materialized bitwise test couplings intact under the
+//! packed dispatch. The REDUCTIONS do reassociate: `row_sq` folds into
+//! 8 f64 partial sums (error for n terms bounded by `~log₂(8)·n·ε_f64`
+//! of the running magnitude before the f32 round — many orders below
+//! the f32 quantum, so the f32 results virtually always agree bit for
+//! bit), and `dot_rows` folds f32 products into 8 f32 lanes + an
+//! in-order horizontal sum: a classic forward-error bound of
+//! `(n/8 + 8)·ε_f32·Σ|v_q·w_q|` vs the scalar dot's `n·ε_f32` — same
+//! magnitude, different grouping, hence the documented relative band of
+//! `1e-4` (`tests/kernels.rs`) on normalized data rather than bitwise
+//! equality. Everything bitwise-coupled across code paths routes
+//! through the SAME dispatched primitive, so those couplings are
+//! kernel-independent by construction.
 
 use crate::util::threadpool;
 
+use super::kernels;
 use super::Tensor;
 
 // ---------------------------------------------------------------------------
@@ -83,22 +130,24 @@ pub fn mean(a: &Tensor) -> f32 {
 }
 
 /// Sum of squares of every element (||a||_F^2).
+///
+/// Dispatched through [`kernels::active`] so every `sq_sum`-vs-streamed
+/// bitwise coupling in the test suite compares like with like whichever
+/// kernel is selected.
 pub fn sq_sum(a: &Tensor) -> f64 {
-    a.data().iter().map(|&x| (x as f64) * (x as f64)).sum()
+    kernels::active().row_sq(a.data())
 }
 
 /// Row-wise sum of squares of a rank-2 tensor — the paper's O(mp) kernel,
 /// rust reference version (f64 accumulator mirrors the f32-accumulate
-/// Pallas kernel closely enough at our scales).
+/// Pallas kernel closely enough at our scales). Dispatched per row through
+/// [`kernels::active`].
 pub fn row_sq_norms(a: &Tensor) -> Vec<f32> {
     let m = a.dims()[0];
+    let kern = kernels::active();
     let mut out = vec![0f32; m];
-    for i in 0..m {
-        let mut acc = 0f64;
-        for &v in a.row(i) {
-            acc += (v as f64) * (v as f64);
-        }
-        out[i] = acc as f32;
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = kern.row_sq(a.row(i)) as f32;
     }
     out
 }
@@ -240,11 +289,7 @@ pub fn softmax_rows(a: &Tensor) -> Tensor {
 // Matmul family
 // ---------------------------------------------------------------------------
 
-/// Tile edge for the blocked matmul (f32: 64*64*4B = 16KiB per tile pair —
-/// comfortably L1/L2 resident). Shared with the implicit-GEMM conv
-/// forward so a gathered patch row accumulates in the same block order
-/// as [`matmul_into_slices`] — cross-implementation bitwise parity.
-pub(crate) const BLOCK: usize = 64;
+pub(crate) use super::kernels::BLOCK;
 /// Below this many output elements the parallel dispatch overhead wins.
 const PAR_THRESHOLD: usize = 64 * 64 * 4;
 
@@ -302,26 +347,6 @@ pub fn transpose(a: &Tensor) -> Tensor {
     out
 }
 
-/// Blocked i-k-j kernel over a row band [r0, r1).
-fn matmul_band(a: &[f32], b: &[f32], c: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
-    for kb in (0..k).step_by(BLOCK) {
-        let k_end = (kb + BLOCK).min(k);
-        for i in r0..r1 {
-            let c_row = &mut c[(i - r0) * n..(i - r0 + 1) * n];
-            for kk in kb..k_end {
-                let aik = a[i * k + kk];
-                if aik == 0.0 {
-                    continue; // relu sparsity win in the reference impl
-                }
-                let b_row = &b[kk * n..kk * n + n];
-                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                    *cv += aik * bv;
-                }
-            }
-        }
-    }
-}
-
 /// Accumulating blocked matmul over row bands. The pooled workers borrow
 /// the operands directly — no input cloning, no output assembly copy
 /// (each band job owns a disjoint `chunks_mut` band of `c`), and the
@@ -333,8 +358,9 @@ fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    let kern = kernels::active();
     if m * n <= PAR_THRESHOLD || m == 1 {
-        matmul_band(a, b, c, 0, m, k, n);
+        kern.matmul_band(a, b, c, 0, m, k, n);
         return;
     }
     let bands = threadpool::bands().min(m);
@@ -345,7 +371,8 @@ fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
         .map(|(bi, chunk)| {
             let r0 = bi * rows_per;
             let r1 = r0 + chunk.len() / n;
-            Box::new(move || matmul_band(a, b, chunk, r0, r1, k, n)) as threadpool::ScopedJob
+            Box::new(move || kern.matmul_band(a, b, chunk, r0, r1, k, n))
+                as threadpool::ScopedJob
         })
         .collect();
     threadpool::scope(jobs);
@@ -402,46 +429,11 @@ pub fn scale_rows_into(a: &Tensor, coef: &[f32], out: &mut Tensor) {
     }
 }
 
-/// One output row band of `C += A^T diag(coef) B` (A [m,k], B [m,n]).
-/// This is the paper-§6 rescale-recompute collapsed into a single kernel:
-/// the row rescale `diag(coef)·B` never materializes.
-fn tn_band(
-    a: &[f32],
-    b: &[f32],
-    coef: Option<&[f32]>,
-    c: &mut [f32],
-    k0: usize,
-    k1: usize,
-    k: usize,
-    n: usize,
-    m: usize,
-) {
-    for j in 0..m {
-        let w = match coef {
-            Some(cf) => cf[j],
-            None => 1.0,
-        };
-        if w == 0.0 {
-            continue;
-        }
-        let a_row = &a[j * k..j * k + k];
-        let b_row = &b[j * n..j * n + n];
-        for p in k0..k1 {
-            let apj = a_row[p];
-            if apj == 0.0 {
-                continue; // relu sparsity in Haug, same win as matmul_band
-            }
-            let f = apj * w;
-            let c_row = &mut c[(p - k0) * n..(p - k0 + 1) * n];
-            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                *cv += f * bv;
-            }
-        }
-    }
-}
-
 /// C += A^T diag(coef) B on raw slices (coef `None` = identity), row-band
-/// parallel over the k output rows on the persistent worker pool.
+/// parallel over the k output rows on the persistent worker pool. This is
+/// the paper-§6 rescale-recompute collapsed into a single kernel: the row
+/// rescale `diag(coef)·B` never materializes. Per-band inner loops come
+/// from [`kernels::active`].
 pub fn matmul_tn_coef_acc_slices(
     a: &[f32],
     b: &[f32],
@@ -457,8 +449,9 @@ pub fn matmul_tn_coef_acc_slices(
     if let Some(cf) = coef {
         assert_eq!(cf.len(), m, "coef length must equal contraction dim");
     }
+    let kern = kernels::active();
     if k * n <= PAR_THRESHOLD || k == 1 {
-        tn_band(a, b, coef, c, 0, k, k, n, m);
+        kern.tn_band(a, b, coef, c, 0, k, k, n, m);
         return;
     }
     let bands = threadpool::bands().min(k);
@@ -469,7 +462,7 @@ pub fn matmul_tn_coef_acc_slices(
         .map(|(bi, chunk)| {
             let k0 = bi * rows_per;
             let k1 = k0 + chunk.len() / n;
-            Box::new(move || tn_band(a, b, coef, chunk, k0, k1, k, n, m))
+            Box::new(move || kern.tn_band(a, b, coef, chunk, k0, k1, k, n, m))
                 as threadpool::ScopedJob
         })
         .collect();

@@ -1,0 +1,111 @@
+//! Fixed-width f32 lane arithmetic for the packed microkernels.
+//!
+//! The vendored registry has no `wide`/`packed_simd`, and baseline
+//! x86-64 has no guaranteed FMA, so this module is deliberately plain:
+//! a `[f32; 8]` value type whose lane-wise `add`/`mul` loops LLVM
+//! auto-vectorizes into SSE/AVX at `opt-level >= 2`. Eight lanes is one
+//! AVX register (or two SSE registers) — wide enough to saturate the
+//! FP pipes, narrow enough that a 4×16 register tile (8 accumulators)
+//! plus operands fits the 16 architectural vector registers.
+//!
+//! Two rules keep the packed kernels numerically honest
+//! (see `tensor::ops` module docs for the full argument):
+//!
+//! * **No `mul_add`.** Baseline targets lower it to a libm call, and a
+//!   fused multiply-add would change the per-element rounding relative
+//!   to the scalar oracle. `add(a.mul(b))` keeps the exact
+//!   multiply-then-add sequence the scalar kernels perform.
+//! * **In-order horizontal sums.** [`F32x8::hsum`] folds lanes
+//!   left-to-right so reductions stay deterministic across runs and
+//!   thread counts.
+
+/// Lane count of the packed kernels' vector type.
+pub const LANES: usize = 8;
+
+/// Eight f32 lanes; a plain value type the optimizer keeps in one
+/// vector register.
+#[derive(Debug, Clone, Copy)]
+pub struct F32x8(pub [f32; LANES]);
+
+impl F32x8 {
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; LANES])
+    }
+
+    /// Load the first [`LANES`] values of `s`.
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32x8 {
+        let mut v = [0.0f32; LANES];
+        v.copy_from_slice(&s[..LANES]);
+        F32x8(v)
+    }
+
+    /// Store into the first [`LANES`] slots of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..LANES].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn add(mut self, o: F32x8) -> F32x8 {
+        for (a, b) in self.0.iter_mut().zip(o.0) {
+            *a += b;
+        }
+        self
+    }
+
+    #[inline(always)]
+    pub fn mul(mut self, o: F32x8) -> F32x8 {
+        for (a, b) in self.0.iter_mut().zip(o.0) {
+            *a *= b;
+        }
+        self
+    }
+
+    /// Left-to-right horizontal sum (deterministic lane order).
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        let mut s = 0.0f32;
+        for v in self.0 {
+            s += v;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_ops_elementwise() {
+        let a = F32x8([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = F32x8::splat(2.0);
+        assert_eq!(a.add(b).0, [3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(a.mul(b).0, [2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0, 16.0]);
+        assert_eq!(a.hsum(), 36.0);
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let src = [1.0f32, -2.0, 3.0, -4.0, 5.0, -6.0, 7.0, -8.0, 99.0];
+        let v = F32x8::load(&src);
+        let mut dst = [0.0f32; 10];
+        v.store(&mut dst);
+        assert_eq!(&dst[..8], &src[..8]);
+        assert_eq!(dst[8], 0.0, "store must touch exactly LANES slots");
+    }
+
+    #[test]
+    fn hsum_is_left_to_right() {
+        // a lane order-dependent case: (big + tiny) loses the tiny bit,
+        // so the left-to-right spec pins which partials absorb which
+        let v = F32x8([1e8, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        let mut want = 0.0f32;
+        for x in v.0 {
+            want += x;
+        }
+        assert_eq!(v.hsum(), want);
+    }
+}

@@ -25,7 +25,7 @@
 //!   (observation-only — bitwise no-op on training).
 
 use pegrad::config::{Config, DataKind, PrivacyConfig, RunMode, SamplerKind};
-use pegrad::coordinator::Trainer;
+use pegrad::coordinator::{Checkpoint, Trainer};
 use pegrad::engine::{EngineMode, FusedEngine};
 use pegrad::nn::layers::StackSpec;
 use pegrad::nn::loss::Targets;
@@ -392,6 +392,95 @@ fn adaptive_digits_conv_scenario_trains_and_reports() {
         c > p90 * 0.4 && c < p90 * 2.5,
         "C {c} implausibly far from the histogram p90 {p90}"
     );
+}
+
+fn resume_cfg(name: &str, steps: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.run_name = name.into();
+    cfg.mode = RunMode::RustClipped;
+    cfg.model_dims = vec![16, 24, 10];
+    cfg.model_m = 16;
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.checkpoint_every = 0;
+    cfg.data = DataKind::Synth;
+    cfg.data_n = 512;
+    // selection state must live entirely in the checkpointed RNG: the
+    // uniform sampler is stateless, and noiseless DP keeps the RNG
+    // stream purely selection-driven
+    cfg.sampler = SamplerKind::Uniform;
+    cfg.privacy = Some(PrivacyConfig {
+        clip_c: 0.8,
+        noise_sigma: 0.0,
+        delta: 1e-5,
+    });
+    cfg.clip = ClipConfig {
+        adaptive: true,
+        quantile: 0.9,
+        eta: 0.25,
+        warmup_steps: 4,
+        c_min: 1e-4,
+        c_max: 1e4,
+    };
+    cfg.out_dir = tmp_out(name);
+    cfg
+}
+
+/// Satellite (PR-6): a checkpointed adaptive run resumes with the
+/// controller state restored — the split run's loss curve, parameters,
+/// AND the adaptive bound trajectory all match an uninterrupted run
+/// bitwise. Without the clip section in the checkpoint, the resumed
+/// controller would restart its warmup at `clip_c` and the bound
+/// sequences would diverge immediately.
+#[test]
+fn checkpoint_resume_tracks_uninterrupted_run_bitwise() {
+    // A: 30 uninterrupted steps
+    let mut a = Trainer::new(resume_cfg("res-full", 30)).unwrap();
+    let sa = a.run().unwrap();
+
+    // B: 15 steps, checkpoint, restore into a FRESH trainer, 15 more
+    let cfg_b = resume_cfg("res-split", 15);
+    let ck_path = std::path::Path::new(&cfg_b.out_dir)
+        .join(&cfg_b.run_name)
+        .join("ckpt-000015.bin");
+    let mut b1 = Trainer::new(cfg_b).unwrap();
+    let sb1 = b1.run().unwrap();
+    b1.save_checkpoint().unwrap();
+    let half_bound = b1.clip_controller().unwrap().bound();
+    drop(b1);
+
+    let ck = Checkpoint::load(&ck_path).unwrap();
+    let state = ck.clip.clone().expect("adaptive run checkpoints clip state");
+    assert_eq!(state.steps, 15);
+    let mut b2 = Trainer::new(resume_cfg("res-split2", 15)).unwrap();
+    b2.restore(ck).unwrap();
+    assert_eq!(
+        b2.clip_controller().unwrap().bound().to_bits(),
+        half_bound.to_bits(),
+        "restored bound != bound at checkpoint time"
+    );
+    let sb2 = b2.run().unwrap();
+
+    // loss curves: A's curve is B1's then B2's, bitwise
+    let curve_b: Vec<(usize, f32)> =
+        sb1.curve.iter().chain(&sb2.curve).copied().collect();
+    assert_eq!(sa.curve, curve_b, "split-run loss curve diverged");
+
+    // final parameters bitwise
+    let pa: Vec<Tensor> = a.params().unwrap().to_vec();
+    let pb: Vec<Tensor> = b2.params().unwrap().to_vec();
+    for (x, y) in pa.iter().zip(&pb) {
+        assert_eq!(x.data(), y.data(), "resumed params diverged");
+    }
+
+    // the adaptive bound tracked identically: the resumed controller's
+    // history is the tail of the uninterrupted one, and the final
+    // bounds agree bitwise
+    let ca = a.clip_controller().unwrap();
+    let cb = b2.clip_controller().unwrap();
+    assert_eq!(cb.steps(), 30);
+    assert_eq!(cb.history(), &ca.history()[15..], "resumed bound trajectory diverged");
+    assert_eq!(cb.bound().to_bits(), ca.bound().to_bits());
 }
 
 /// rust_normalized integration: the adaptive bound actuates the

@@ -1,0 +1,332 @@
+//! PR-6 microkernel contracts (see `tensor::ops` module docs for the
+//! derivation these tests pin down):
+//!
+//! 1. **GEMM kernels are value-equal across implementations.** The
+//!    packed `matmul_band`/`tn_band` preserve the scalar oracle's
+//!    per-element accumulation order, so on any finite operands —
+//!    including zero-sprinkled ones, where the scalar sparsity skips
+//!    fire — the outputs are equal under `==` (bitwise modulo signed
+//!    zeros, which f32 `PartialEq` equates). Property-tested across odd
+//!    shapes and remainder tails: `m` below the register-tile height,
+//!    `n` off the 16/8-lane panels, `k` below the lane width.
+//! 2. **Reductions hold a documented tolerance band.** `row_sq` (8 f64
+//!    partial sums) stays within relative `1e-9` of the sequential
+//!    oracle; `dot_rows` (8 f32 lanes + in-order horizontal sum) stays
+//!    within `1e-4` of the scalar dot, scaled by `Σ|v_q·w_q|` (the
+//!    forward-error yardstick — both kernels' errors are bounded by
+//!    `~(n/8 + 8)·ε` of that sum).
+//! 3. **The scalar oracle is verbatim.** An inline reimplementation of
+//!    the pre-PR-6 loops must match `ScalarKernel` bitwise, so a
+//!    `--features scalar-kernels` build reproduces historical results
+//!    bit for bit.
+
+use pegrad::tensor::kernels::{Microkernel, PACKED, SCALAR};
+use pegrad::tensor::Rng;
+use pegrad::util::prop;
+
+/// Documented relative band for the reassociated `dot_rows` reduction,
+/// scaled by `Σ|v_q·w_q|`.
+const DOT_TOL: f64 = 1e-4;
+/// Documented relative band for the 8-way f64 `row_sq` reduction.
+const ROW_SQ_TOL: f64 = 1e-9;
+
+/// Random operand with zeros sprinkled in (~1 in 4, a few negative
+/// zeros) so the scalar kernels' `== 0.0` sparsity skips actually fire.
+fn sprinkled(n: usize, g: &mut prop::Gen) -> Vec<f32> {
+    (0..n)
+        .map(|_| match g.usize_in(0..8) {
+            0 | 1 => 0.0,
+            2 => -0.0,
+            _ => g.normal(),
+        })
+        .collect()
+}
+
+#[test]
+fn packed_matmul_band_value_equals_scalar_across_shapes() {
+    prop::check(60, |g| {
+        // deliberately straddle every tail: m around MR=4, n around
+        // NR=16 and LANES=8, k down to 1 (below the lane width)
+        let m = g.usize_in(1..11);
+        let k = g.usize_in(1..24);
+        let n = g.usize_in(1..40);
+        let a = sprinkled(m * k, g);
+        let b = sprinkled(k * n, g);
+        // split the rows at an arbitrary point: the band kernels take
+        // ABSOLUTE row indices into the full A
+        let r_split = g.usize_in(0..m + 1);
+        let mut cs = vec![0.0f32; m * n];
+        let mut cp = vec![0.0f32; m * n];
+        for (c, kern) in [
+            (&mut cs, &SCALAR as &dyn Microkernel),
+            (&mut cp, &PACKED as &dyn Microkernel),
+        ] {
+            if r_split > 0 {
+                kern.matmul_band(&a, &b, &mut c[..r_split * n], 0, r_split, k, n);
+            }
+            if r_split < m {
+                kern.matmul_band(&a, &b, &mut c[r_split * n..], r_split, m, k, n);
+            }
+        }
+        prop::require(
+            cs == cp,
+            format!("m={m} k={k} n={n} split={r_split}: packed != scalar"),
+        )
+    });
+}
+
+#[test]
+fn packed_tn_band_value_equals_scalar_across_shapes_and_bands() {
+    prop::check(60, |g| {
+        let m = g.usize_in(1..14); // contraction (examples)
+        let k = g.usize_in(1..24); // output rows
+        let n = g.usize_in(1..40); // output cols
+        let a = sprinkled(m * k, g);
+        let b = sprinkled(m * n, g);
+        // coefficient vector with zero/negative/ordinary entries, or None
+        let coef: Option<Vec<f32>> = if g.bool() {
+            Some(
+                (0..m)
+                    .map(|_| match g.usize_in(0..4) {
+                        0 => 0.0,
+                        1 => -1.5,
+                        _ => g.f32_in(0.1..2.0),
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        // an arbitrary sub-band [k0, k1) of the output rows
+        let k0 = g.usize_in(0..k);
+        let k1 = g.usize_in(k0..k) + 1;
+        let rows = k1 - k0;
+        // accumulate onto nonzero initial contents
+        let init = sprinkled(rows * n, g);
+        let mut cs = init.clone();
+        let mut cp = init;
+        let cf = coef.as_deref();
+        SCALAR.tn_band(&a, &b, cf, &mut cs, k0, k1, k, n, m);
+        PACKED.tn_band(&a, &b, cf, &mut cp, k0, k1, k, n, m);
+        prop::require(
+            cs == cp,
+            format!(
+                "m={m} k={k} n={n} band=[{k0},{k1}) coef={}: packed != scalar",
+                cf.is_some()
+            ),
+        )
+    });
+}
+
+#[test]
+fn packed_row_sq_within_documented_band() {
+    prop::check(80, |g| {
+        // lengths below, at, and far above the 8-lane width
+        let x = sprinkled(g.usize_in(1..600), g);
+        let s = SCALAR.row_sq(&x);
+        let p = PACKED.row_sq(&x);
+        prop::require(
+            (s - p).abs() <= ROW_SQ_TOL * s.abs().max(1e-30),
+            format!("len={}: row_sq {s} vs {p}", x.len()),
+        )
+    });
+}
+
+#[test]
+fn packed_dot_rows_within_documented_band() {
+    prop::check(80, |g| {
+        let n = g.usize_in(1..60); // includes n < LANES
+        let rows = g.usize_in(1..12);
+        let v = sprinkled(n, g);
+        let w = sprinkled(rows * n, g);
+        let mut os = vec![0.0f32; rows];
+        let mut op = vec![0.0f32; rows];
+        SCALAR.dot_rows(&v, &w, &mut os);
+        PACKED.dot_rows(&v, &w, &mut op);
+        for p in 0..rows {
+            // forward-error yardstick: both kernels' errors are bounded
+            // by a small multiple of ε times this sum
+            let scale: f64 = v
+                .iter()
+                .zip(&w[p * n..(p + 1) * n])
+                .map(|(&a, &b)| (a as f64 * b as f64).abs())
+                .sum::<f64>()
+                .max(1e-30);
+            let (a, b) = (os[p] as f64, op[p] as f64);
+            prop::require(
+                (a - b).abs() <= DOT_TOL * scale,
+                format!("n={n} row {p}: dot {a} vs {b} (scale {scale})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scalar-oracle verbatim guards: inline reimplementations of the
+// pre-PR-6 loops (including the BLOCK = 64 stepping) must match
+// ScalarKernel bit for bit.
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn reference_matmul_band(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+) {
+    const BLOCK: usize = 64;
+    for kb in (0..k).step_by(BLOCK) {
+        let k_end = (kb + BLOCK).min(k);
+        for i in r0..r1 {
+            let c_row = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+            for kk in kb..k_end {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = &b[kk * n..kk * n + n];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn reference_tn_band(
+    a: &[f32],
+    b: &[f32],
+    coef: Option<&[f32]>,
+    c: &mut [f32],
+    k0: usize,
+    k1: usize,
+    k: usize,
+    n: usize,
+    m: usize,
+) {
+    for j in 0..m {
+        let w = match coef {
+            Some(cf) => cf[j],
+            None => 1.0,
+        };
+        if w == 0.0 {
+            continue;
+        }
+        let a_row = &a[j * k..j * k + k];
+        let b_row = &b[j * n..j * n + n];
+        for p in k0..k1 {
+            let apj = a_row[p];
+            if apj == 0.0 {
+                continue;
+            }
+            let f = apj * w;
+            let c_row = &mut c[(p - k0) * n..(p - k0 + 1) * n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += f * bv;
+            }
+        }
+    }
+}
+
+#[test]
+fn scalar_kernel_is_the_verbatim_oracle() {
+    prop::check(40, |g| {
+        let m = g.usize_in(1..10);
+        let k = g.usize_in(1..150); // crosses the BLOCK=64 stepping
+        let n = g.usize_in(1..30);
+        let a = sprinkled(m * k, g);
+        let b = sprinkled(k * n, g);
+        let mut want = vec![0.0f32; m * n];
+        let mut got = vec![0.0f32; m * n];
+        reference_matmul_band(&a, &b, &mut want, 0, m, k, n);
+        SCALAR.matmul_band(&a, &b, &mut got, 0, m, k, n);
+        prop::require(
+            want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+            format!("matmul_band m={m} k={k} n={n}: ScalarKernel not verbatim"),
+        )?;
+
+        let b2 = sprinkled(m * n, g);
+        let coef: Vec<f32> = (0..m).map(|j| if j % 3 == 0 { 0.0 } else { g.normal() }).collect();
+        let mut want = vec![0.0f32; k * n];
+        let mut got = vec![0.0f32; k * n];
+        reference_tn_band(&a, &b2, Some(&coef), &mut want, 0, k, k, n, m);
+        SCALAR.tn_band(&a, &b2, Some(&coef), &mut got, 0, k, k, n, m);
+        prop::require(
+            want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+            format!("tn_band m={m} k={k} n={n}: ScalarKernel not verbatim"),
+        )
+    });
+}
+
+#[test]
+fn scalar_reductions_are_the_verbatim_oracle() {
+    prop::check(40, |g| {
+        let x = sprinkled(g.usize_in(1..200), g);
+        let mut want = 0.0f64;
+        for &v in &x {
+            want += (v as f64) * (v as f64);
+        }
+        prop::require(
+            want.to_bits() == SCALAR.row_sq(&x).to_bits(),
+            "row_sq: ScalarKernel not verbatim".to_string(),
+        )?;
+
+        let n = g.usize_in(1..40);
+        let rows = g.usize_in(1..8);
+        let v = sprinkled(n, g);
+        let w = sprinkled(rows * n, g);
+        let mut got = vec![0.0f32; rows];
+        SCALAR.dot_rows(&v, &w, &mut got);
+        for (p, &gv) in got.iter().enumerate() {
+            let mut dot = 0.0f32;
+            for (&vv, &wv) in v.iter().zip(&w[p * n..(p + 1) * n]) {
+                dot += vv * wv;
+            }
+            prop::require(
+                dot.to_bits() == gv.to_bits(),
+                format!("dot_rows row {p}: ScalarKernel not verbatim"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Under `--features scalar-kernels` the runtime dispatch MUST resolve
+/// to the scalar oracle regardless of the environment — this is the
+/// bitwise-reproducibility build the historical results pin against.
+#[cfg(feature = "scalar-kernels")]
+#[test]
+fn scalar_feature_pins_the_dispatch() {
+    assert_eq!(pegrad::tensor::kernels::active().name(), "scalar");
+}
+
+/// Whatever kernel is active, the high-level ops must agree with a
+/// naive f64 reference to the engine-wide tolerance — the same bound the
+/// engine/oracle cross-checks rely on.
+#[test]
+fn active_kernel_matmul_matches_naive_reference() {
+    use pegrad::tensor::{ops, Tensor};
+    let mut rng = Rng::new(99);
+    let (m, k, n) = (23, 130, 17);
+    let a = Tensor::randn(vec![m, k], &mut rng);
+    let b = Tensor::randn(vec![k, n], &mut rng);
+    let got = ops::matmul(&a, &b);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for t in 0..k {
+                acc += a.at2(i, t) as f64 * b.at2(t, j) as f64;
+            }
+            let g = got.at2(i, j) as f64;
+            assert!(
+                (g - acc).abs() <= 1e-3 * acc.abs().max(1.0),
+                "({i},{j}): {g} vs {acc}"
+            );
+        }
+    }
+}
