@@ -35,7 +35,9 @@ pub fn usage() -> String {
      \x20              pure-rust fused engine — no artifacts or PJRT needed\n\
      \x20 monitor      train with streaming gradient-norm telemetry: per-layer\n\
      \x20              histograms/quantiles, outlier flags, gradient noise\n\
-     \x20              scale — emitted as a JSON report (rust modes only)\n\
+     \x20              scale — emitted as a JSON report (rust modes only);\n\
+     \x20              --baseline diffs a previous run's stream, --follow\n\
+     \x20              tails a live telemetry.jsonl/trace.jsonl\n\
      \x20 norms        compute per-example gradient norms for a fresh batch\n\
      \x20              (--rust uses the fused engine instead of artifacts)\n\
      \x20 inspect      show artifact manifest contents\n\
@@ -126,8 +128,20 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
         ArgSpec::opt("out", "also write the report to this path"),
         ArgSpec::opt(
             "baseline",
-            "previous telemetry.json to diff against: emits a drift summary \
-             (norm histograms/quantiles, loss, gradient noise scale)",
+            "previous telemetry.json snapshot OR telemetry.jsonl stream to \
+             diff against (streams to the last report in O(1) memory): \
+             emits a drift summary (norm histograms/quantiles, loss, \
+             gradient noise scale)",
+        ),
+        ArgSpec::opt(
+            "follow",
+            "tail an existing telemetry.jsonl/trace.jsonl stream instead of \
+             training: prints one summary line per appended record",
+        ),
+        ArgSpec::opt(
+            "idle-exit",
+            "with --follow: exit once this many seconds pass without a new \
+             line (default: follow until interrupted)",
         ),
         ArgSpec::switch("print", "print the report JSON to stdout"),
         ArgSpec::switch("help", "show options"),
@@ -136,6 +150,9 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
     if p.has("help") {
         println!("pegrad monitor options:\n{}", help(&specs));
         return Ok(());
+    }
+    if let Some(path) = p.get("follow") {
+        return follow_stream(std::path::Path::new(path), p.get_f64("idle-exit")?);
     }
     let mut cfg = match p.get("config") {
         Some(path) => Config::from_file(std::path::Path::new(path))?,
@@ -160,13 +177,12 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
     cfg.validate()?;
 
     // load AND shape-check the baseline BEFORE the run so a bad path or
-    // a non-report file fails fast instead of after minutes of training
+    // a non-report file fails fast instead of after minutes of training;
+    // load_report streams a .jsonl history to its LAST report in O(1)
+    // memory and still accepts the legacy single-object telemetry.json
     let baseline = match p.get("baseline") {
         Some(path) => {
-            let j = Json::parse_file(std::path::Path::new(path))?;
-            if !crate::telemetry::diff::is_report(&j) {
-                bail!("--baseline {path} is not a pegrad telemetry report");
-            }
+            let j = crate::telemetry::diff::load_report(std::path::Path::new(path))?;
             Some((path.to_string(), j))
         }
         None => None,
@@ -236,6 +252,78 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
             .unwrap_or_default(),
     );
     Ok(())
+}
+
+/// `pegrad monitor --follow`: tail an append-only JSONL stream
+/// (`telemetry.jsonl` or `trace.jsonl`, see docs/observability.md),
+/// printing one summary line per complete appended record. Torn trailing
+/// lines (a record mid-write) are left in the buffer until their newline
+/// arrives, so a record is never parsed half-written. `idle_exit` bounds
+/// the wait for CI smokes; interactive use follows until interrupted.
+fn follow_stream(path: &std::path::Path, idle_exit: Option<f64>) -> Result<()> {
+    use std::io::BufRead;
+    let file = std::fs::File::open(path)
+        .map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut buf = String::new();
+    let mut idle = std::time::Instant::now();
+    log::info!("following {}", path.display());
+    loop {
+        let n = reader
+            .read_line(&mut buf)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        if n == 0 || !buf.ends_with('\n') {
+            if let Some(limit) = idle_exit {
+                if idle.elapsed().as_secs_f64() >= limit {
+                    return Ok(());
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            continue;
+        }
+        idle = std::time::Instant::now();
+        let line = buf.trim();
+        if !line.is_empty() {
+            match Json::parse(line) {
+                Ok(j) => println!("{}", render_stream_line(&j)),
+                Err(e) => log::warn!("skipping unparsable line: {e}"),
+            }
+        }
+        buf.clear();
+    }
+}
+
+/// One human line per stream record; unknown records echo verbatim.
+fn render_stream_line(j: &Json) -> String {
+    let num = |j: &Json, path: &[&str]| -> Option<f64> {
+        let mut cur = j;
+        for k in path {
+            cur = cur.get(k)?;
+        }
+        cur.as_f64()
+    };
+    let fmt = |v: Option<f64>| v.map(|v| format!("{v:.3}")).unwrap_or_else(|| "n/a".into());
+    if j.get("trace").and_then(Json::as_str) == Some(crate::trace::TRACE_TAG) {
+        format!(
+            "trace step {}: step_ms p50 {} p99 {}, pool utilization {}, \
+             {} dropped",
+            num(j, &["step"]).unwrap_or(f64::NAN),
+            fmt(num(j, &["step_ms", "p50"])),
+            fmt(num(j, &["step_ms", "p99"])),
+            fmt(num(j, &["pool", "utilization"])),
+            num(j, &["reports_dropped"]).unwrap_or(0.0),
+        )
+    } else if crate::telemetry::diff::is_report(j) {
+        format!(
+            "telemetry after {} steps: loss mean {}, total-norm p50 {} p99 {}",
+            num(j, &["steps"]).unwrap_or(f64::NAN),
+            fmt(num(j, &["loss", "mean"])),
+            fmt(num(j, &["total", "p50"])),
+            fmt(num(j, &["total", "p99"])),
+        )
+    } else {
+        j.to_string()
+    }
 }
 
 fn cmd_norms(argv: &[String]) -> Result<()> {

@@ -7,6 +7,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::optim::Schedule;
 use crate::telemetry::{ClipConfig, TelemetryConfig};
+use crate::trace::TraceConfig;
 
 use super::parse::{parse_toml, Value};
 
@@ -141,6 +142,12 @@ pub struct Config {
     /// the streamed per-example norms (`telemetry::adaptive`). Off by
     /// default: fixed-`C` configs parse and run bitwise unchanged.
     pub clip: ClipConfig,
+    /// `[trace]` section: the observability layer — per-phase span
+    /// timings, kernel dispatch counters, pool utilization and step
+    /// latency sketches streamed to `trace.jsonl` (`trace` module,
+    /// docs/observability.md). Off by default: a disabled trace is
+    /// bitwise-identical to a build without the subsystem.
+    pub trace: TraceConfig,
 }
 
 impl Default for Config {
@@ -174,6 +181,7 @@ impl Default for Config {
             normalize_target: 1.0,
             telemetry: TelemetryConfig::default(),
             clip: ClipConfig::default(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -236,6 +244,14 @@ impl Config {
                 "telemetry.enabled requires a rust-engine mode \
                  (rust_pegrad|rust_clipped|rust_normalized): the layer taps \
                  stream out of the in-process fused engine, not the AOT artifacts"
+            );
+        }
+        self.trace.validate()?;
+        if self.trace.enabled && !self.mode.is_rust_engine() {
+            bail!(
+                "trace.enabled requires a rust-engine mode \
+                 (rust_pegrad|rust_clipped|rust_normalized): the span \
+                 instrumentation lives in the in-process fused engine"
             );
         }
         self.clip.validate()?;
@@ -414,6 +430,9 @@ fn apply(cfg: &mut Config, map: &BTreeMap<String, Value>) -> Result<()> {
             }
             "clip.c_min" => cfg.clip.c_min = v.as_f64().ok_or_else(fail)? as f32,
             "clip.c_max" => cfg.clip.c_max = v.as_f64().ok_or_else(fail)? as f32,
+            "trace.enabled" => cfg.trace.enabled = v.as_bool().ok_or_else(fail)?,
+            "trace.every" => cfg.trace.every = v.as_usize().ok_or_else(fail)?,
+            "trace.buffer" => cfg.trace.buffer = v.as_usize().ok_or_else(fail)?,
             other => bail!("unknown config key '{other}'"),
         }
     }
@@ -608,6 +627,47 @@ mod tests {
         cfg.apply_overrides(&[("telemetry.enabled".into(), "true".into())])
             .unwrap();
         assert!(cfg.telemetry.enabled);
+    }
+
+    #[test]
+    fn parse_trace_section() {
+        let cfg = Config::from_toml(
+            r#"
+            mode = "rust_clipped"
+
+            [trace]
+            enabled = true
+            every = 10
+            buffer = 256
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.trace.enabled);
+        assert_eq!(cfg.trace.every, 10);
+        assert_eq!(cfg.trace.buffer, 256);
+        // defaults: off, valid — a silent repo stays bitwise-identical
+        assert!(!Config::default().trace.enabled);
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn trace_validation() {
+        // artifact modes have no fused engine to instrument
+        let err = Config::from_toml("mode = \"pegrad\"\n[trace]\nenabled = true")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rust-engine"), "{err}");
+        // bad knobs rejected even when disabled
+        assert!(Config::from_toml("[trace]\nbuffer = 0").is_err());
+        // override path: --set trace.enabled=true
+        let mut cfg = Config::from_toml("mode = \"rust_pegrad\"").unwrap();
+        cfg.apply_overrides(&[
+            ("trace.enabled".into(), "true".into()),
+            ("trace.every".into(), "5".into()),
+        ])
+        .unwrap();
+        assert!(cfg.trace.enabled);
+        assert_eq!(cfg.trace.every, 5);
     }
 
     #[test]

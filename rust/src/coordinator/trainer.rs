@@ -336,6 +336,45 @@ impl Trainer {
         let m = self.stack.m;
         let total = Timer::start();
 
+        // observability (ISSUE 7): step tracing + JSONL streams. Both are
+        // observation-only — a failed open degrades to a warning, and the
+        // hot path only ever enqueues (the writer thread owns the disk).
+        let tracing = self.cfg.trace.enabled;
+        if tracing {
+            crate::trace::set_enabled(true);
+        }
+        let mut recorder = tracing.then(|| {
+            crate::trace::Recorder::new(&self.cfg.trace, crate::util::threadpool::bands())
+        });
+        let trace_writer = tracing
+            .then(|| {
+                let path = self.metrics.dir().join("trace.jsonl");
+                match crate::trace::StreamWriter::create(&path, self.cfg.trace.buffer) {
+                    Ok(w) => Some(w),
+                    Err(e) => {
+                        log::warn!("trace stream disabled: {e}");
+                        None
+                    }
+                }
+            })
+            .flatten();
+        // telemetry reports stream to the same run dir; the old periodic
+        // `telemetry-NNNNNN.json` snapshot files are replaced by one
+        // appended line per report interval (the final `telemetry.json`
+        // snapshot below is unchanged)
+        let telemetry_writer = (self.monitor.is_some() && self.cfg.telemetry.every > 0)
+            .then(|| {
+                let path = self.metrics.dir().join("telemetry.jsonl");
+                match crate::trace::StreamWriter::create(&path, self.cfg.trace.buffer) {
+                    Ok(w) => Some(w),
+                    Err(e) => {
+                        log::warn!("telemetry stream disabled: {e}");
+                        None
+                    }
+                }
+            })
+            .flatten();
+
         // gather-prefetch pipeline (selection inline, gather overlapped)
         let depth = self.cfg.prefetch_depth;
         let (sel_tx, prefetcher) = if depth > 0 {
@@ -374,7 +413,10 @@ impl Trainer {
                         tx.send((self.step + 1, sel))
                             .map_err(|_| anyhow!("prefetcher died"))?;
                     }
-                    _ => pending = Some(prepare(&self.train, &sel, self.step + 1)),
+                    _ => {
+                        let _sp = crate::trace::span(crate::trace::Phase::DataLoad);
+                        pending = Some(prepare(&self.train, &sel, self.step + 1));
+                    }
                 }
                 if let Some(p) = &mut self.profile {
                     p.sample_gather += tsel.secs();
@@ -383,20 +425,32 @@ impl Trainer {
 
             let lr = self.cfg.schedule.at(self.step);
             let t = Timer::start();
-            let rec = self.execute_step(entry.as_ref(), &batch, lr)?;
+            let rec = {
+                let _sp = crate::trace::span(crate::trace::Phase::Step);
+                self.execute_step(entry.as_ref(), &batch, lr)?
+            };
             let step_ms = t.millis();
             curve.push((self.step, rec.loss));
             self.metrics.record(&StepRecord { step_ms, ..rec });
 
+            if let Some(rec_tr) = recorder.as_mut() {
+                rec_tr.end_step(self.step as u64, (step_ms * 1e6) as u64);
+                let every = self.cfg.trace.every;
+                if every > 0 && self.step > 0 && self.step % every == 0 {
+                    if let Some(w) = &trace_writer {
+                        let _sp = crate::trace::span(crate::trace::Phase::Report);
+                        let line = rec_tr.record(self.step as u64, w.reports_dropped());
+                        w.enqueue(line.to_string());
+                    }
+                }
+            }
+
             if let Some(mon) = &self.monitor {
                 let every = self.cfg.telemetry.every;
                 if every > 0 && self.step > 0 && self.step % every == 0 {
-                    let path = self
-                        .metrics
-                        .dir()
-                        .join(format!("telemetry-{:06}.json", self.step));
-                    if let Err(e) = mon.write_report_with(&path, self.clip.as_ref()) {
-                        log::warn!("telemetry snapshot failed: {e}");
+                    if let Some(w) = &telemetry_writer {
+                        let _sp = crate::trace::span(crate::trace::Phase::Report);
+                        w.enqueue(mon.report_with(self.clip.as_ref()).to_string());
                     }
                 }
             }
@@ -412,11 +466,13 @@ impl Trainer {
                 && self.step > 0
                 && self.step % self.cfg.checkpoint_every == 0
             {
+                let _sp = crate::trace::span(crate::trace::Phase::Checkpoint);
                 self.save_checkpoint()?;
             }
 
             self.step += 1;
             if depth > 0 && self.step < end_step {
+                let _sp = crate::trace::span(crate::trace::Phase::DataLoad);
                 pending = Some(
                     prefetcher
                         .as_ref()
@@ -427,6 +483,35 @@ impl Trainer {
             }
         }
         drop(sel_tx);
+
+        // close the streams: one final line each, then drain the writer
+        // threads (the only place training waits on the disk — after the
+        // last step, not during one)
+        if let (Some(rec_tr), Some(w)) = (recorder.as_mut(), &trace_writer) {
+            let last = self.step.saturating_sub(1) as u64;
+            w.enqueue(rec_tr.record(last, w.reports_dropped()).to_string());
+        }
+        if let (Some(mon), Some(w)) = (&self.monitor, &telemetry_writer) {
+            w.enqueue(mon.report_with(self.clip.as_ref()).to_string());
+        }
+        if let Some(w) = trace_writer {
+            let dropped = w.finish();
+            if dropped > 0 {
+                log::warn!("trace stream: {dropped} lines dropped (writer backpressure)");
+            }
+            log::info!("trace stream: {}", self.metrics.dir().join("trace.jsonl").display());
+        }
+        if let Some(w) = telemetry_writer {
+            let dropped = w.finish();
+            if dropped > 0 {
+                log::warn!(
+                    "telemetry stream: {dropped} lines dropped (writer backpressure)"
+                );
+            }
+        }
+        if tracing {
+            crate::trace::set_enabled(false);
+        }
 
         self.sync_params_to_host()?;
         let (eval_loss, eval_acc) = self.evaluate(fwd_entry.as_ref())?;

@@ -284,6 +284,7 @@ impl FusedEngine {
         self.ws.last_m = m;
 
         // ---------------- forward --------------------------------------
+        let sp = crate::trace::span(crate::trace::Phase::Forward);
         forward_pass(
             &self.stack,
             &mut self.layers,
@@ -293,8 +294,10 @@ impl FusedEngine {
             y,
             m,
         );
+        drop(sp);
 
         // ---------------- backward (streaming norms) -------------------
+        let sp = crate::trace::span(crate::trace::Phase::Backward);
         let stack = &self.stack;
         let n = stack.n_layers();
         let out_len = stack.out_len();
@@ -384,8 +387,10 @@ impl FusedEngine {
                 std::mem::swap(ping, pong);
             }
         }
+        drop(sp);
 
         // ---------------- §4 totals -------------------------------------
+        let sp = crate::trace::span(crate::trace::Phase::Norms);
         for j in 0..m {
             let mut s = 0f32;
             for row in s_param.iter() {
@@ -397,8 +402,10 @@ impl FusedEngine {
         if let Some(t) = &mut tap {
             t.on_step_end(&s_total[..m], &per_ex_loss[..m]);
         }
+        drop(sp);
 
         // ---------------- §6 coefficients + deferred accumulation ------
+        let sp = crate::trace::span(crate::trace::Phase::Replay);
         let mut clip_frac = None;
         match mode {
             EngineMode::Mean => {}
@@ -428,6 +435,7 @@ impl FusedEngine {
                 self.layers[li].accumulate(&coef[..m], &mut grads[wi], m);
             }
         }
+        drop(sp);
 
         let mean_loss = per_ex_loss[..m].iter().sum::<f32>() / m as f32;
         EngineStats {

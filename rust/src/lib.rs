@@ -30,6 +30,7 @@ pub mod runtime;
 pub mod sampler;
 pub mod telemetry;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result alias.

@@ -121,21 +121,14 @@ pub fn clip_update(c: f64, q_hat: f64, cfg: &ClipConfig) -> f64 {
     next.clamp(lo, hi)
 }
 
-/// Most recent history entries serialized per report. The full history
-/// stays in memory (4 bytes/step — negligible); serializing all of it
-/// into every PERIODIC telemetry snapshot would make total snapshot
-/// cost grow quadratically with step count, so each report carries the
-/// last `HISTORY_JSON_CAP` entries plus the offset they start at.
-pub const HISTORY_JSON_CAP: usize = 4096;
-
 /// Checkpointable [`ClipController`] dynamics: the sketch markers, the
 /// current and initial bounds, and the observed-step count — everything
 /// a resumed run needs to produce bitwise the same bound sequence as an
 /// uninterrupted one. The in-memory `history` is telemetry, not
 /// dynamics, and is deliberately NOT part of the state: a resumed
-/// controller restarts its history at the resume step, and
-/// [`ClipController::to_json`] derives `history_offset` from `steps` so
-/// reported step indices stay globally correct across resumes.
+/// controller restarts its history at the resume step (the appended
+/// `telemetry.jsonl` stream is the durable full-run record — see
+/// `docs/observability.md`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClipState {
     pub sketch: P2State,
@@ -274,15 +267,12 @@ impl ClipController {
     }
 
     /// Report section for the telemetry JSON (`"clip"` key). `history`
-    /// holds the most recent [`HISTORY_JSON_CAP`] per-step bounds;
-    /// `history_offset` is the GLOBAL step index of its first entry (0
-    /// until a run outgrows the cap). The offset is derived from `steps`
-    /// rather than the buffer length so it stays correct after a
-    /// checkpoint resume, where the in-memory buffer restarts empty
-    /// mid-run.
+    /// is the full in-memory per-step bound sequence since construction
+    /// (or since the last checkpoint resume) — the final snapshot keeps
+    /// every entry. There is no serialization cap anymore: million-step
+    /// histories live in the appended `telemetry.jsonl` stream, which a
+    /// reader diffs in O(1) memory, not in any single report object.
     pub fn to_json(&self) -> Json {
-        let tail_start = self.history.len().saturating_sub(HISTORY_JSON_CAP);
-        let history_offset = self.steps as usize - self.history.len() + tail_start;
         Json::obj(vec![
             ("adaptive", Json::Bool(true)),
             ("quantile", Json::num(self.cfg.quantile)),
@@ -297,8 +287,7 @@ impl ClipController {
                 "quantile_estimate",
                 self.last_estimate.map(Json::num).unwrap_or(Json::Null),
             ),
-            ("history_offset", Json::num(history_offset as f64)),
-            ("history", Json::arr_f32(&self.history[tail_start..])),
+            ("history", Json::arr_f32(&self.history)),
         ])
     }
 }
@@ -454,19 +443,17 @@ mod tests {
     }
 
     #[test]
-    fn json_history_is_capped_to_the_recent_tail() {
+    fn json_history_is_uncapped() {
+        // the tail cap is gone (ISSUE 7): the final snapshot serializes
+        // the whole in-memory history; long-run readers stream
+        // telemetry.jsonl instead of any single report object
         let mut ctrl = ClipController::new(&cfg(1.0, 0), 1.0);
-        for _ in 0..(HISTORY_JSON_CAP + 10) {
+        for _ in 0..5000 {
             ctrl.observe_norms(&[1.0]);
         }
         let j = ctrl.to_json();
-        assert_eq!(
-            j.get("history").unwrap().as_arr().unwrap().len(),
-            HISTORY_JSON_CAP
-        );
-        assert_eq!(j.get("history_offset").unwrap().as_usize(), Some(10));
-        // the in-memory history is still complete
-        assert_eq!(ctrl.history().len(), HISTORY_JSON_CAP + 10);
+        assert_eq!(j.get("history").unwrap().as_arr().unwrap().len(), 5000);
+        assert!(j.get("history_offset").is_none(), "offset plumbing retired");
     }
 
     #[test]
@@ -499,15 +486,6 @@ mod tests {
         );
         // resumed history is the tail of the uninterrupted history
         assert_eq!(b2.history(), &a.history()[7..]);
-        // json offset is global: first resumed entry is step 7
-        assert_eq!(
-            b2.to_json().get("history_offset").unwrap().as_usize(),
-            Some(7)
-        );
-        assert_eq!(
-            a.to_json().get("history_offset").unwrap().as_usize(),
-            Some(0)
-        );
     }
 
     #[test]

@@ -16,9 +16,11 @@
 //! drifts when its relative delta exceeds `rel_threshold` (or, for the
 //! histogram, when the TV distance exceeds `tv_threshold`).
 
+use std::path::Path;
+
 use anyhow::{anyhow, Result};
 
-use crate::util::Json;
+use crate::util::{Json, JsonlReader};
 
 /// Drift thresholds; defaults are deliberately loose — the diff is a
 /// smoke alarm, not a bitwise gate.
@@ -43,6 +45,40 @@ impl Default for DiffConfig {
 /// the CLI uses it to fail fast on a bad `--baseline` before training.)
 pub fn is_report(j: &Json) -> bool {
     j.get("telemetry").and_then(Json::as_str) == Some(super::REPORT_TAG)
+}
+
+/// Load a telemetry report from `path`, which may be either a
+/// single-object `telemetry.json` snapshot or an appended
+/// `telemetry.jsonl` stream (`docs/observability.md`). The file is
+/// streamed line-at-a-time and only the MOST RECENT report object is
+/// kept, so diffing a million-interval history costs O(longest line)
+/// memory, not O(file). A legacy multi-line object file (no parseable
+/// JSONL lines) falls back to a whole-file parse for compatibility.
+pub fn load_report(path: &Path) -> Result<Json> {
+    let mut last: Option<Json> = None;
+    let mut torn_lines = false;
+    for item in JsonlReader::open(path)? {
+        match item {
+            Ok(j) if is_report(&j) => last = Some(j),
+            Ok(_) => {} // e.g. a trace line in a mixed directory copy
+            Err(_) => torn_lines = true,
+        }
+    }
+    if let Some(j) = last {
+        return Ok(j);
+    }
+    if torn_lines {
+        // not line-delimited — pre-stream snapshots could in principle
+        // be reformatted; parse the whole file as one object instead
+        let j = Json::parse_file(path)?;
+        if is_report(&j) {
+            return Ok(j);
+        }
+    }
+    Err(anyhow!(
+        "{}: no pegrad telemetry report found",
+        path.display()
+    ))
 }
 
 fn rel_delta(base: f64, cur: f64) -> f64 {
@@ -311,6 +347,36 @@ mod tests {
         let real = monitor_report(1.0, 2);
         assert!(diff_reports(&bogus, &real, &DiffConfig::default()).is_err());
         assert!(diff_reports(&real, &bogus, &DiffConfig::default()).is_err());
+    }
+
+    #[test]
+    fn load_report_streams_to_the_last_report_line() {
+        let dir = std::env::temp_dir().join(format!("pegrad-diff-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // a jsonl stream: several report intervals, last one is the
+        // 9-step report — plus a foreign line the loader must skip
+        let path = dir.join("telemetry.jsonl");
+        let mut text = String::new();
+        for steps in [3usize, 6, 9] {
+            text.push_str(&monitor_report(1.0, steps).to_string());
+            text.push('\n');
+        }
+        text.push_str("{\"v\":1,\"trace\":\"pegrad.trace\"}\n");
+        std::fs::write(&path, text).unwrap();
+        let j = load_report(&path).unwrap();
+        assert_eq!(j.get("steps").unwrap().as_usize(), Some(9));
+        // a legacy single-object snapshot file loads too
+        let legacy = dir.join("telemetry.json");
+        std::fs::write(&legacy, format!("{}\n", monitor_report(2.0, 4))).unwrap();
+        assert_eq!(
+            load_report(&legacy).unwrap().get("steps").unwrap().as_usize(),
+            Some(4)
+        );
+        // a file with no report at all is an error
+        let bogus = dir.join("bogus.json");
+        std::fs::write(&bogus, "{\"hello\": 1}\n").unwrap();
+        assert!(load_report(&bogus).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

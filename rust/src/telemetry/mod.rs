@@ -28,7 +28,9 @@
 //!   `pegrad monitor` / the trainer's `[telemetry]` section emit.
 //! * [`diff`] — cross-run drift detection: compare two reports
 //!   (histogram total-variation distance, quantile/moment deltas, GNS)
-//!   — the `pegrad monitor --baseline report.json` path.
+//!   — the `pegrad monitor --baseline` path. Baselines may be either a
+//!   final `telemetry.json` snapshot or an appended `telemetry.jsonl`
+//!   stream, which [`diff::load_report`] reads in O(1) memory.
 //! * [`adaptive`] — the quantile-tracked clip bound: a
 //!   [`adaptive::ClipController`] consumes the same total-norm stream
 //!   through its own [`LayerTap`] impl and keeps the §6 clip bound `C`
@@ -38,6 +40,13 @@
 //!
 //! Dependency direction: `engine` and `nn` know only the [`LayerTap`]
 //! trait; everything stateful lives here and is driven by the trainer.
+//!
+//! Emission: the trainer appends one report per `[telemetry] every`
+//! interval as a line of `telemetry.jsonl` in the run directory (via the
+//! off-hot-path [`crate::trace::StreamWriter`]) plus the final
+//! `telemetry.json` snapshot. The versioned line schema, the paired
+//! `trace.jsonl` step-tracing stream and the overhead guarantees are
+//! documented in `docs/observability.md`.
 
 pub mod adaptive;
 pub mod diff;

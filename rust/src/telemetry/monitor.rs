@@ -165,9 +165,12 @@ impl TelemetryMonitor {
         self.steps += 1;
     }
 
-    /// The full JSON report (see module docs for the schema).
+    /// The full JSON report (see module docs and `docs/observability.md`
+    /// for the versioned line schema — the same object is one line of
+    /// `telemetry.jsonl` and the final `telemetry.json` snapshot).
     pub fn report(&self) -> Json {
         Json::obj(vec![
+            ("v", Json::num(crate::trace::SCHEMA_VERSION as f64)),
             ("telemetry", Json::str(super::REPORT_TAG)),
             ("steps", Json::num(self.steps as f64)),
             ("m", Json::num(self.m as f64)),

@@ -94,6 +94,47 @@ pub trait Microkernel: Send + Sync {
     fn row_sq(&self, x: &[f32]) -> f64;
 }
 
+// ----------------------------------------------------------- dispatch trace
+
+// Per-dispatch counters for the trace subsystem: kind, band rows
+// processed, f32 bytes touched (operands + output). One relaxed-load
+// branch when tracing is off; shared by both implementations so the
+// counts are kernel-independent.
+
+#[inline]
+fn trace_matmul_band(r0: usize, r1: usize, k: usize, n: usize) {
+    let rows = (r1 - r0) as u64;
+    crate::trace::count_kernel(
+        crate::trace::KernelKind::MatmulBand,
+        rows,
+        4 * (rows * k as u64 + (k * n) as u64 + rows * n as u64),
+    );
+}
+
+#[inline]
+fn trace_tn_band(k0: usize, k1: usize, k: usize, n: usize, m: usize) {
+    let rows = (k1 - k0) as u64;
+    crate::trace::count_kernel(
+        crate::trace::KernelKind::TnBand,
+        rows,
+        4 * ((m * k) as u64 + (m * n) as u64 + rows * n as u64),
+    );
+}
+
+#[inline]
+fn trace_dot_rows(v_len: usize, rows: usize) {
+    crate::trace::count_kernel(
+        crate::trace::KernelKind::DotRows,
+        rows as u64,
+        4 * ((v_len + rows * v_len + rows) as u64),
+    );
+}
+
+#[inline]
+fn trace_row_sq(len: usize) {
+    crate::trace::count_kernel(crate::trace::KernelKind::RowSq, 1, 4 * len as u64);
+}
+
 // --------------------------------------------------------------- scalar
 
 /// The original scalar band kernels, verbatim (the bitwise oracle).
@@ -114,6 +155,7 @@ impl Microkernel for ScalarKernel {
         k: usize,
         n: usize,
     ) {
+        trace_matmul_band(r0, r1, k, n);
         for kb in (0..k).step_by(BLOCK) {
             let k_end = (kb + BLOCK).min(k);
             for i in r0..r1 {
@@ -144,6 +186,7 @@ impl Microkernel for ScalarKernel {
         n: usize,
         m: usize,
     ) {
+        trace_tn_band(k0, k1, k, n, m);
         for j in 0..m {
             let w = coef.map_or(1.0, |cf| cf[j]);
             if w == 0.0 {
@@ -166,6 +209,7 @@ impl Microkernel for ScalarKernel {
     }
 
     fn dot_rows(&self, v: &[f32], w: &[f32], out: &mut [f32]) {
+        trace_dot_rows(v.len(), out.len());
         let n = v.len();
         for (p, o) in out.iter_mut().enumerate() {
             let wrow = &w[p * n..(p + 1) * n];
@@ -178,6 +222,7 @@ impl Microkernel for ScalarKernel {
     }
 
     fn row_sq(&self, x: &[f32]) -> f64 {
+        trace_row_sq(x.len());
         let mut acc = 0.0f64;
         for &v in x {
             acc += (v as f64) * (v as f64);
@@ -404,6 +449,7 @@ impl Microkernel for PackedKernel {
         k: usize,
         n: usize,
     ) {
+        trace_matmul_band(r0, r1, k, n);
         gemm_acc(&a[r0 * k..r1 * k], k, b, None, c, r1 - r0, n, k);
     }
 
@@ -419,6 +465,7 @@ impl Microkernel for PackedKernel {
         n: usize,
         m: usize,
     ) {
+        trace_tn_band(k0, k1, k, n, m);
         let rows = k1 - k0;
         with_buf(&PACK_A, rows * m, |at| {
             // pack the band's A columns transposed (the "A panel"): the
@@ -436,6 +483,7 @@ impl Microkernel for PackedKernel {
     }
 
     fn dot_rows(&self, v: &[f32], w: &[f32], out: &mut [f32]) {
+        trace_dot_rows(v.len(), out.len());
         let n = v.len();
         let split = n - n % LANES;
         for (p, o) in out.iter_mut().enumerate() {
@@ -455,6 +503,7 @@ impl Microkernel for PackedKernel {
     }
 
     fn row_sq(&self, x: &[f32]) -> f64 {
+        trace_row_sq(x.len());
         let mut acc = [0.0f64; LANES];
         let mut chunks = x.chunks_exact(LANES);
         for ch in chunks.by_ref() {

@@ -1,0 +1,637 @@
+//! Zero-overhead-when-off step tracing: where does a training step spend
+//! its time?
+//!
+//! The paper's pitch is that per-example gradient norms come "for free"
+//! inside the existing backward pass. This subsystem is how the repo
+//! *proves where the time goes*: per-phase span timings in the fused
+//! engine (forward / per-layer backward / §4 norm bands / §6 replay),
+//! per-dispatch microkernel counters (`tensor::kernels`), per-worker
+//! busy/idle accounting in `util::threadpool`, and the trainer's own
+//! step phases (data load / step / checkpoint / report), aggregated into
+//! per-step records plus streaming P² p50/p95/p99 step-latency sketches
+//! (reusing [`crate::telemetry::sketch`]).
+//!
+//! Design constraints (see `docs/observability.md` for the emitted
+//! `trace.jsonl` line schema and the overhead guarantees):
+//!
+//! * **Off is free.** All instrumentation points are guarded by one
+//!   process-global relaxed [`AtomicBool`]; with `trace.enabled = false`
+//!   (the default) every [`span`] / [`count_kernel`] call collapses to a
+//!   single predictable branch, touches no clock, and the training math
+//!   is bitwise identical (proved by `tests/trace.rs`).
+//! * **On is cheap and lock-free.** Spans read the monotonic clock
+//!   ([`std::time::Instant`]) and `fetch_add` into pre-allocated relaxed
+//!   atomics — no locks, no allocation on the hot path. The per-step
+//!   record ring in [`Recorder`] is pre-allocated at construction.
+//! * **A slow disk can never stall a step.** Emission goes through
+//!   [`writer::StreamWriter`]: the hot path only enqueues a formatted
+//!   line; a dedicated writer thread swaps double buffers and does the
+//!   IO. A blocked sink drops lines into a counted `reports_dropped`
+//!   stat instead of blocking training.
+//!
+//! Dependency direction mirrors [`crate::telemetry::LayerTap`]: the
+//! engine, kernels and threadpool know only the free functions here
+//! ([`span`], [`count_kernel`], [`pool_busy`]); all aggregation state
+//! lives in [`Recorder`], which is owned and driven by the trainer.
+
+pub mod writer;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::telemetry::sketch::P2Quantile;
+use crate::util::Json;
+
+pub use writer::StreamWriter;
+
+/// Identifying tag every trace record carries (`"trace"` field), the
+/// dual of [`crate::telemetry::REPORT_TAG`].
+pub const TRACE_TAG: &str = "pegrad.trace";
+
+/// Line-schema version stamped into every JSONL record (`"v"` field);
+/// bump when a field changes meaning. Documented in
+/// `docs/observability.md`.
+pub const SCHEMA_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Span taxonomy
+// ---------------------------------------------------------------------------
+
+/// The fixed span taxonomy. Engine phases cover one fused traversal;
+/// trainer phases cover the step loop around it. `Step` nests the four
+/// engine phases (plus tap/optimizer time), so engine spans never sum to
+/// the full step — the gap is the tap + optimizer + bookkeeping cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    /// Fused engine: the forward traversal.
+    Forward = 0,
+    /// Fused engine: the backward traversal (per-layer `backward` calls
+    /// and tap notifications).
+    Backward = 1,
+    /// Fused engine: the §4 norm-band totals (`s_total`, per-example
+    /// norms).
+    Norms = 2,
+    /// Fused engine: the §6 coefficient replay (`accumulate` over
+    /// retained bands).
+    Replay = 3,
+    /// Trainer: waiting on the prefetcher for the next batch.
+    DataLoad = 4,
+    /// Trainer: one whole `execute_step` (engine + tap + DP noise +
+    /// optimizer + sampler observation).
+    Step = 5,
+    /// Trainer: checkpoint serialization.
+    Checkpoint = 6,
+    /// Trainer: telemetry/trace report formatting + enqueue.
+    Report = 7,
+}
+
+/// Number of [`Phase`] variants (array sizes below).
+pub const PHASE_COUNT: usize = 8;
+
+impl Phase {
+    /// All phases in `repr` order.
+    pub const ALL: [Phase; PHASE_COUNT] = [
+        Phase::Forward,
+        Phase::Backward,
+        Phase::Norms,
+        Phase::Replay,
+        Phase::DataLoad,
+        Phase::Step,
+        Phase::Checkpoint,
+        Phase::Report,
+    ];
+
+    /// Stable snake_case name used as the JSONL `spans` object key.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Forward => "forward",
+            Phase::Backward => "backward",
+            Phase::Norms => "norms",
+            Phase::Replay => "replay",
+            Phase::DataLoad => "data_load",
+            Phase::Step => "step",
+            Phase::Checkpoint => "checkpoint",
+            Phase::Report => "report",
+        }
+    }
+}
+
+/// Microkernel dispatch kinds counted by [`count_kernel`] (one per
+/// [`crate::tensor::kernels::Microkernel`] trait method).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum KernelKind {
+    MatmulBand = 0,
+    TnBand = 1,
+    DotRows = 2,
+    RowSq = 3,
+}
+
+/// Number of [`KernelKind`] variants.
+pub const KERNEL_KIND_COUNT: usize = 4;
+
+impl KernelKind {
+    /// All kinds in `repr` order.
+    pub const ALL: [KernelKind; KERNEL_KIND_COUNT] = [
+        KernelKind::MatmulBand,
+        KernelKind::TnBand,
+        KernelKind::DotRows,
+        KernelKind::RowSq,
+    ];
+
+    /// Stable snake_case name used as the JSONL `kernels` object key.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::MatmulBand => "matmul_band",
+            KernelKind::TnBand => "tn_band",
+            KernelKind::DotRows => "dot_rows",
+            KernelKind::RowSq => "row_sq",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global lock-free counters
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+// `const` items are the only way to array-initialize atomics.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static PHASE_NANOS: [AtomicU64; PHASE_COUNT] = [ZERO; PHASE_COUNT];
+static PHASE_COUNTS: [AtomicU64; PHASE_COUNT] = [ZERO; PHASE_COUNT];
+static KERNEL_CALLS: [AtomicU64; KERNEL_KIND_COUNT] = [ZERO; KERNEL_KIND_COUNT];
+static KERNEL_BANDS: [AtomicU64; KERNEL_KIND_COUNT] = [ZERO; KERNEL_KIND_COUNT];
+static KERNEL_BYTES: [AtomicU64; KERNEL_KIND_COUNT] = [ZERO; KERNEL_KIND_COUNT];
+static POOL_BUSY_NANOS: AtomicU64 = AtomicU64::new(0);
+static POOL_JOBS: AtomicU64 = AtomicU64::new(0);
+
+/// Flip the process-global trace switch. The trainer sets this once per
+/// run from `trace.enabled`; benches/tests toggle it around timed loops.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is tracing on? One relaxed load — the whole cost of every
+/// instrumentation point when tracing is off.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// RAII span: created by [`span`], accumulates its elapsed nanos into
+/// the phase counters on drop. When tracing is off it holds no clock
+/// reading and drop is a no-op.
+pub struct Span {
+    phase: Phase,
+    start: Option<Instant>,
+}
+
+/// Open a span for `phase`. Off hot path cost: one relaxed load + one
+/// branch; no clock read, no allocation.
+#[inline]
+pub fn span(phase: Phase) -> Span {
+    Span {
+        phase,
+        start: if enabled() { Some(Instant::now()) } else { None },
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let ns = t0.elapsed().as_nanos() as u64;
+            PHASE_NANOS[self.phase as usize].fetch_add(ns, Ordering::Relaxed);
+            PHASE_COUNTS[self.phase as usize].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Count one microkernel dispatch: `bands` band-columns (or rows)
+/// processed, `bytes` of f32 data touched. Called by both `kernels`
+/// implementations; no-op (one branch) when tracing is off.
+#[inline]
+pub fn count_kernel(kind: KernelKind, bands: u64, bytes: u64) {
+    if !enabled() {
+        return;
+    }
+    let i = kind as usize;
+    KERNEL_CALLS[i].fetch_add(1, Ordering::Relaxed);
+    KERNEL_BANDS[i].fetch_add(bands, Ordering::Relaxed);
+    KERNEL_BYTES[i].fetch_add(bytes, Ordering::Relaxed);
+}
+
+/// Account `ns` nanoseconds of worker busy time (one executed job).
+/// Called by the `util::threadpool` worker loop; no-op when off.
+#[inline]
+pub fn pool_busy(ns: u64) {
+    if enabled() {
+        POOL_BUSY_NANOS.fetch_add(ns, Ordering::Relaxed);
+        POOL_JOBS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time copy of every global counter. Consumers diff two
+/// snapshots (`wrapping_sub`) — the globals are monotone and never reset
+/// during a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub phase_nanos: [u64; PHASE_COUNT],
+    pub phase_counts: [u64; PHASE_COUNT],
+    pub kernel_calls: [u64; KERNEL_KIND_COUNT],
+    pub kernel_bands: [u64; KERNEL_KIND_COUNT],
+    pub kernel_bytes: [u64; KERNEL_KIND_COUNT],
+    pub pool_busy_nanos: u64,
+    pub pool_jobs: u64,
+}
+
+/// Snapshot all counters (relaxed loads).
+pub fn counters() -> CounterSnapshot {
+    let mut s = CounterSnapshot::default();
+    for i in 0..PHASE_COUNT {
+        s.phase_nanos[i] = PHASE_NANOS[i].load(Ordering::Relaxed);
+        s.phase_counts[i] = PHASE_COUNTS[i].load(Ordering::Relaxed);
+    }
+    for i in 0..KERNEL_KIND_COUNT {
+        s.kernel_calls[i] = KERNEL_CALLS[i].load(Ordering::Relaxed);
+        s.kernel_bands[i] = KERNEL_BANDS[i].load(Ordering::Relaxed);
+        s.kernel_bytes[i] = KERNEL_BYTES[i].load(Ordering::Relaxed);
+    }
+    s.pool_busy_nanos = POOL_BUSY_NANOS.load(Ordering::Relaxed);
+    s.pool_jobs = POOL_JOBS.load(Ordering::Relaxed);
+    s
+}
+
+/// Zero every global counter. For benches/tests between runs — NOT
+/// thread-safe against a concurrently-stepping trainer (the [`Recorder`]
+/// diffs snapshots instead of resetting, precisely so runs never race a
+/// reset).
+pub fn reset_counters() {
+    for i in 0..PHASE_COUNT {
+        PHASE_NANOS[i].store(0, Ordering::Relaxed);
+        PHASE_COUNTS[i].store(0, Ordering::Relaxed);
+    }
+    for i in 0..KERNEL_KIND_COUNT {
+        KERNEL_CALLS[i].store(0, Ordering::Relaxed);
+        KERNEL_BANDS[i].store(0, Ordering::Relaxed);
+        KERNEL_BYTES[i].store(0, Ordering::Relaxed);
+    }
+    POOL_BUSY_NANOS.store(0, Ordering::Relaxed);
+    POOL_JOBS.store(0, Ordering::Relaxed);
+}
+
+fn delta(a: &CounterSnapshot, b: &CounterSnapshot) -> CounterSnapshot {
+    let mut d = CounterSnapshot::default();
+    for i in 0..PHASE_COUNT {
+        d.phase_nanos[i] = b.phase_nanos[i].wrapping_sub(a.phase_nanos[i]);
+        d.phase_counts[i] = b.phase_counts[i].wrapping_sub(a.phase_counts[i]);
+    }
+    for i in 0..KERNEL_KIND_COUNT {
+        d.kernel_calls[i] = b.kernel_calls[i].wrapping_sub(a.kernel_calls[i]);
+        d.kernel_bands[i] = b.kernel_bands[i].wrapping_sub(a.kernel_bands[i]);
+        d.kernel_bytes[i] = b.kernel_bytes[i].wrapping_sub(a.kernel_bytes[i]);
+    }
+    d.pool_busy_nanos = b.pool_busy_nanos.wrapping_sub(a.pool_busy_nanos);
+    d.pool_jobs = b.pool_jobs.wrapping_sub(a.pool_jobs);
+    d
+}
+
+fn ms(nanos: u64) -> f64 {
+    nanos as f64 / 1e6
+}
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// Runtime knobs for the trace subsystem (`[trace]` config section; see
+/// `config::schema`). `enabled = false` (the default) is the
+/// "off" state the overhead guarantees are stated against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Master switch; when false the trainer builds no [`Recorder`], no
+    /// writer threads, and every instrumentation point is a dead branch.
+    pub enabled: bool,
+    /// Emit one `trace.jsonl` record every N steps (0 = final record
+    /// only).
+    pub every: usize,
+    /// Per-step ring capacity in [`Recorder`] and the writer queue depth
+    /// (lines buffered before `reports_dropped` starts counting).
+    pub buffer: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            enabled: false,
+            every: 25,
+            buffer: 1024,
+        }
+    }
+}
+
+impl TraceConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.buffer == 0 {
+            anyhow::bail!("trace.buffer must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-step recorder + interval aggregation
+// ---------------------------------------------------------------------------
+
+/// One ring slot: the phase-span breakdown of a single training step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepSpans {
+    pub step: u64,
+    /// Whole-step wall time as measured by the trainer's step timer.
+    pub step_nanos: u64,
+    /// Per-phase nanos attributed to this step (delta of the global
+    /// counters across the step).
+    pub phase_nanos: [u64; PHASE_COUNT],
+}
+
+/// Aggregates the global counters into per-step records (pre-allocated
+/// ring), streaming P² step-latency sketches, and per-interval JSONL
+/// records. Owned by the trainer; only constructed when
+/// `trace.enabled = true`.
+pub struct Recorder {
+    workers: usize,
+    ring: Vec<StepSpans>,
+    head: usize,
+    filled: usize,
+    p50: P2Quantile,
+    p95: P2Quantile,
+    p99: P2Quantile,
+    /// Snapshot at the end of the previous step (per-step deltas).
+    step_base: CounterSnapshot,
+    /// Snapshot at the last emitted record (per-interval deltas).
+    interval_base: CounterSnapshot,
+    interval_start: Instant,
+    interval_step_nanos: u64,
+    interval_steps: u64,
+    last_step_nanos: u64,
+    steps: u64,
+}
+
+impl Recorder {
+    /// `workers` is the threadpool size (utilization denominator);
+    /// `buffer` the per-step ring capacity.
+    pub fn new(cfg: &TraceConfig, workers: usize) -> Self {
+        let now = counters();
+        Recorder {
+            workers: workers.max(1),
+            ring: vec![StepSpans::default(); cfg.buffer.max(1)],
+            head: 0,
+            filled: 0,
+            p50: P2Quantile::new(0.5),
+            p95: P2Quantile::new(0.95),
+            p99: P2Quantile::new(0.99),
+            step_base: now,
+            interval_base: now,
+            interval_start: Instant::now(),
+            interval_step_nanos: 0,
+            interval_steps: 0,
+            last_step_nanos: 0,
+            steps: 0,
+        }
+    }
+
+    /// Record the end of step `step` which took `step_nanos` wall time.
+    /// Fixed work, no allocation: a counter snapshot, one ring write,
+    /// three sketch pushes.
+    pub fn end_step(&mut self, step: u64, step_nanos: u64) {
+        let now = counters();
+        let d = delta(&self.step_base, &now);
+        self.step_base = now;
+        self.ring[self.head] = StepSpans {
+            step,
+            step_nanos,
+            phase_nanos: d.phase_nanos,
+        };
+        self.head = (self.head + 1) % self.ring.len();
+        self.filled = (self.filled + 1).min(self.ring.len());
+        let step_ms = ms(step_nanos) as f32;
+        self.p50.push(step_ms);
+        self.p95.push(step_ms);
+        self.p99.push(step_ms);
+        self.interval_step_nanos += step_nanos;
+        self.interval_steps += 1;
+        self.last_step_nanos = step_nanos;
+        self.steps += 1;
+    }
+
+    /// Total steps recorded.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// The most recent per-step record, if any step completed.
+    pub fn last_step(&self) -> Option<&StepSpans> {
+        if self.filled == 0 {
+            return None;
+        }
+        let i = (self.head + self.ring.len() - 1) % self.ring.len();
+        Some(&self.ring[i])
+    }
+
+    /// Step-latency quantile estimates in ms (None before any step).
+    pub fn latency_quantiles(&self) -> (Option<f64>, Option<f64>, Option<f64>) {
+        (self.p50.estimate(), self.p95.estimate(), self.p99.estimate())
+    }
+
+    /// Pool utilization over the current interval: busy worker-nanos
+    /// divided by wall-nanos × workers, clamped to [0,1].
+    pub fn interval_utilization(&self) -> f64 {
+        let now = counters();
+        let busy = now.pool_busy_nanos.wrapping_sub(self.interval_base.pool_busy_nanos);
+        let wall = self.interval_start.elapsed().as_nanos() as u64;
+        if wall == 0 {
+            return 0.0;
+        }
+        (busy as f64 / (wall as f64 * self.workers as f64)).min(1.0)
+    }
+
+    /// Build one `trace.jsonl` record covering everything since the last
+    /// `record` call (or construction), then reset the interval
+    /// accumulators. `reports_dropped` is the writer's running drop
+    /// counter — stamped into the line so a reader can see backpressure
+    /// without the writer's side channel.
+    pub fn record(&mut self, step: u64, reports_dropped: u64) -> Json {
+        let now = counters();
+        let d = delta(&self.interval_base, &now);
+        let wall = self.interval_start.elapsed().as_nanos() as u64;
+
+        let spans: Vec<(&str, Json)> = Phase::ALL
+            .iter()
+            .map(|&p| {
+                let i = p as usize;
+                (
+                    p.name(),
+                    Json::obj(vec![
+                        ("ms", Json::num(ms(d.phase_nanos[i]))),
+                        ("count", Json::num(d.phase_counts[i] as f64)),
+                    ]),
+                )
+            })
+            .collect();
+
+        let kernels: Vec<(&str, Json)> = KernelKind::ALL
+            .iter()
+            .map(|&k| {
+                let i = k as usize;
+                (
+                    k.name(),
+                    Json::obj(vec![
+                        ("calls", Json::num(d.kernel_calls[i] as f64)),
+                        ("bands", Json::num(d.kernel_bands[i] as f64)),
+                        ("bytes", Json::num(d.kernel_bytes[i] as f64)),
+                    ]),
+                )
+            })
+            .collect();
+
+        let utilization = if wall == 0 {
+            0.0
+        } else {
+            (d.pool_busy_nanos as f64 / (wall as f64 * self.workers as f64)).min(1.0)
+        };
+        let mean_ms = if self.interval_steps == 0 {
+            0.0
+        } else {
+            ms(self.interval_step_nanos) / self.interval_steps as f64
+        };
+        let opt_num = |q: Option<f64>| q.map(Json::num).unwrap_or(Json::Null);
+
+        let out = Json::obj(vec![
+            ("v", Json::num(SCHEMA_VERSION as f64)),
+            ("trace", Json::str(TRACE_TAG)),
+            ("step", Json::num(step as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("interval_steps", Json::num(self.interval_steps as f64)),
+            ("interval_ms", Json::num(ms(wall))),
+            ("spans", Json::obj(spans)),
+            ("kernels", Json::obj(kernels)),
+            (
+                "pool",
+                Json::obj(vec![
+                    ("workers", Json::num(self.workers as f64)),
+                    ("busy_ms", Json::num(ms(d.pool_busy_nanos))),
+                    ("jobs", Json::num(d.pool_jobs as f64)),
+                    ("utilization", Json::num(utilization)),
+                ]),
+            ),
+            (
+                "step_ms",
+                Json::obj(vec![
+                    ("last", Json::num(ms(self.last_step_nanos))),
+                    ("mean", Json::num(mean_ms)),
+                    ("p50", opt_num(self.p50.estimate())),
+                    ("p95", opt_num(self.p95.estimate())),
+                    ("p99", opt_num(self.p99.estimate())),
+                ]),
+            ),
+            ("reports_dropped", Json::num(reports_dropped as f64)),
+        ]);
+
+        self.interval_base = now;
+        self.interval_start = Instant::now();
+        self.interval_step_nanos = 0;
+        self.interval_steps = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests in this crate share the global counters; serialize on this
+    /// lock so enable/reset cycles don't race.
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn spans_are_noops_when_disabled() {
+        let _g = guard();
+        set_enabled(false);
+        let before = counters();
+        {
+            let _s = span(Phase::Forward);
+            std::hint::black_box(17u64);
+        }
+        count_kernel(KernelKind::MatmulBand, 4, 1024);
+        pool_busy(999);
+        let after = counters();
+        assert_eq!(before, after, "disabled tracing mutated a counter");
+    }
+
+    #[test]
+    fn spans_accumulate_when_enabled() {
+        let _g = guard();
+        reset_counters();
+        set_enabled(true);
+        {
+            let _s = span(Phase::Backward);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        count_kernel(KernelKind::TnBand, 3, 768);
+        pool_busy(1_000_000);
+        set_enabled(false);
+        let s = counters();
+        assert!(s.phase_nanos[Phase::Backward as usize] >= 1_000_000);
+        assert_eq!(s.phase_counts[Phase::Backward as usize], 1);
+        assert_eq!(s.kernel_calls[KernelKind::TnBand as usize], 1);
+        assert_eq!(s.kernel_bands[KernelKind::TnBand as usize], 3);
+        assert_eq!(s.kernel_bytes[KernelKind::TnBand as usize], 768);
+        assert_eq!(s.pool_busy_nanos, 1_000_000);
+        assert_eq!(s.pool_jobs, 1);
+        reset_counters();
+    }
+
+    #[test]
+    fn recorder_ring_wraps_and_record_resets_interval() {
+        let _g = guard();
+        reset_counters();
+        let cfg = TraceConfig {
+            enabled: true,
+            every: 1,
+            buffer: 4,
+        };
+        let mut rec = Recorder::new(&cfg, 2);
+        for step in 0..6u64 {
+            rec.end_step(step, (step + 1) * 1_000_000);
+        }
+        assert_eq!(rec.steps(), 6);
+        assert_eq!(rec.last_step().unwrap().step, 5);
+        let j = rec.record(5, 0);
+        assert_eq!(j.get("v").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("trace").unwrap().as_str(), Some(TRACE_TAG));
+        assert_eq!(j.get("interval_steps").unwrap().as_usize(), Some(6));
+        let sm = j.get("step_ms").unwrap();
+        // 6 samples > 5 -> the P² estimates exist and are ordered
+        let p50 = sm.get("p50").unwrap().as_f64().unwrap();
+        let p99 = sm.get("p99").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        // a second record right away covers an empty interval
+        let j2 = rec.record(5, 0);
+        assert_eq!(j2.get("interval_steps").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut c = TraceConfig::default();
+        assert!(!c.enabled, "tracing must default off");
+        c.validate().unwrap();
+        c.buffer = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Append-only JSONL stream writer with an off-hot-path IO thread.
+//!
+//! The hot path ([`StreamWriter::enqueue`]) pushes one pre-formatted
+//! line into a bounded front buffer under a mutex held for O(1) work —
+//! never across disk IO. A dedicated writer thread swaps the front
+//! buffer for its empty back buffer (the double-buffer swap, also O(1)
+//! under the lock) and performs all writes with the lock released, so a
+//! slow or blocked sink can never stall the thread that trains: once
+//! the front buffer holds `cap` pending lines, further enqueues drop
+//! and are counted in [`StreamWriter::reports_dropped`].
+//!
+//! Line integrity: exactly one thread writes the sink, one
+//! `write_all(line) + write_all(b"\n")` pair per record — lines are
+//! never torn or interleaved (asserted by the backpressure test in
+//! `tests/trace.rs`). Schemas for the two streams the trainer emits
+//! (`telemetry.jsonl`, `trace.jsonl`) are documented in
+//! `docs/observability.md`.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+struct Shared {
+    /// Front buffer: the hot path pushes, the writer thread swaps out.
+    queue: Mutex<Vec<String>>,
+    wake: Condvar,
+    cap: usize,
+    shutdown: AtomicBool,
+    dropped: AtomicU64,
+    written: AtomicU64,
+}
+
+/// Handle to one append-only JSONL stream. Dropping it (or calling
+/// [`StreamWriter::finish`]) signals shutdown and joins the writer
+/// thread after it drains every line still queued.
+pub struct StreamWriter {
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl StreamWriter {
+    /// Open `path` for append (creating parent dirs) and start the
+    /// writer thread. `cap` bounds the pending-line queue.
+    pub fn create(path: &Path, cap: usize) -> crate::Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Self::spawn(Box::new(file), cap))
+    }
+
+    /// Writer over an arbitrary sink — tests inject blocking or
+    /// in-memory sinks here.
+    pub fn with_sink(sink: Box<dyn Write + Send>, cap: usize) -> Self {
+        Self::spawn(sink, cap)
+    }
+
+    fn spawn(mut sink: Box<dyn Write + Send>, cap: usize) -> Self {
+        let cap = cap.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::with_capacity(cap)),
+            wake: Condvar::new(),
+            cap,
+            shutdown: AtomicBool::new(false),
+            dropped: AtomicU64::new(0),
+            written: AtomicU64::new(0),
+        });
+        let s = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("pegrad-jsonl-writer".into())
+            .spawn(move || {
+                let mut back: Vec<String> = Vec::with_capacity(s.cap);
+                loop {
+                    {
+                        let mut q = s.queue.lock().unwrap_or_else(|e| e.into_inner());
+                        while q.is_empty() && !s.shutdown.load(Ordering::Acquire) {
+                            q = s.wake.wait(q).unwrap_or_else(|e| e.into_inner());
+                        }
+                        // O(1) double-buffer swap; IO happens below with
+                        // the queue lock released so enqueues never wait
+                        // on the disk.
+                        std::mem::swap(&mut *q, &mut back);
+                    }
+                    for line in back.drain(..) {
+                        let ok = sink
+                            .write_all(line.as_bytes())
+                            .and_then(|_| sink.write_all(b"\n"))
+                            .is_ok();
+                        if ok {
+                            s.written.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            s.dropped.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    let _ = sink.flush();
+                    if s.shutdown.load(Ordering::Acquire) {
+                        let q = s.queue.lock().unwrap_or_else(|e| e.into_inner());
+                        if q.is_empty() {
+                            break;
+                        }
+                        // lines raced in after the swap: loop to drain
+                    }
+                }
+            })
+            .expect("spawning the JSONL writer thread");
+        StreamWriter {
+            shared,
+            handle: Some(handle),
+        }
+    }
+
+    /// Enqueue one line (without trailing newline; embedded newlines
+    /// would tear the stream and are rejected as a drop). Returns false
+    /// when the line was dropped because the queue is full — the "slow
+    /// disk" backpressure path. Never blocks on IO.
+    pub fn enqueue(&self, line: String) -> bool {
+        if line.contains('\n') {
+            self.shared.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        {
+            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            if q.len() >= self.shared.cap {
+                drop(q);
+                self.shared.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            q.push(line);
+        }
+        self.shared.wake.notify_one();
+        true
+    }
+
+    /// Lines dropped so far (full queue, write error, embedded newline).
+    pub fn reports_dropped(&self) -> u64 {
+        self.shared.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Lines successfully handed to the sink.
+    pub fn lines_written(&self) -> u64 {
+        self.shared.written.load(Ordering::Relaxed)
+    }
+
+    /// Drain, join the writer thread, and return the final drop count.
+    pub fn finish(mut self) -> u64 {
+        self.close();
+        self.shared.dropped.load(Ordering::Relaxed)
+    }
+
+    fn close(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.wake.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StreamWriter {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    /// In-memory sink shared with the test through an Arc.
+    #[derive(Clone, Default)]
+    struct VecSink(Arc<StdMutex<Vec<u8>>>);
+
+    impl Write for VecSink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn writes_every_line_in_order() {
+        let sink = VecSink::default();
+        let w = StreamWriter::with_sink(Box::new(sink.clone()), 64);
+        for i in 0..50 {
+            assert!(w.enqueue(format!("{{\"i\":{i}}}")));
+        }
+        assert_eq!(w.finish(), 0);
+        let bytes = sink.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 50);
+        for (i, line) in lines.iter().enumerate() {
+            assert_eq!(*line, format!("{{\"i\":{i}}}"));
+        }
+    }
+
+    #[test]
+    fn embedded_newline_is_dropped_not_torn() {
+        let sink = VecSink::default();
+        let w = StreamWriter::with_sink(Box::new(sink.clone()), 8);
+        assert!(!w.enqueue("bad\nline".into()));
+        assert!(w.enqueue("good".into()));
+        assert_eq!(w.finish(), 1);
+        let bytes = sink.0.lock().unwrap().clone();
+        assert_eq!(String::from_utf8(bytes).unwrap(), "good\n");
+    }
+}

@@ -192,6 +192,75 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Streaming line-at-a-time reader over an append-only JSONL stream
+/// (`telemetry.jsonl` / `trace.jsonl`; schemas in
+/// `docs/observability.md`).
+///
+/// Memory is O(longest line), independent of stream length: one reused
+/// line buffer, one parsed [`Json`] value alive at a time — a
+/// million-interval history diffs without ever materializing a
+/// whole-file tree. Blank lines are skipped (a crashed writer may leave
+/// a trailing one); a torn/invalid line surfaces as an `Err` item with
+/// its line number so callers can choose to stop or skip.
+pub struct JsonlReader<R: std::io::BufRead> {
+    src: R,
+    buf: String,
+    line_no: usize,
+}
+
+impl JsonlReader<std::io::BufReader<std::fs::File>> {
+    /// Open a JSONL file for streaming.
+    pub fn open(path: &std::path::Path) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
+        Ok(Self::new(std::io::BufReader::new(file)))
+    }
+}
+
+impl<R: std::io::BufRead> JsonlReader<R> {
+    pub fn new(src: R) -> Self {
+        JsonlReader {
+            src,
+            buf: String::new(),
+            line_no: 0,
+        }
+    }
+
+    /// 1-based number of the line the last item came from.
+    pub fn line_no(&self) -> usize {
+        self.line_no
+    }
+
+    /// Next parsed line; `None` at end of stream.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<Result<Json>> {
+        loop {
+            self.buf.clear();
+            match self.src.read_line(&mut self.buf) {
+                Ok(0) => return None,
+                Ok(_) => {}
+                Err(e) => return Some(Err(anyhow!("reading line {}: {e}", self.line_no + 1))),
+            }
+            self.line_no += 1;
+            let line = self.buf.trim();
+            if line.is_empty() {
+                continue;
+            }
+            return Some(
+                Json::parse(line).map_err(|e| anyhow!("line {}: {e}", self.line_no)),
+            );
+        }
+    }
+}
+
+impl<R: std::io::BufRead> Iterator for JsonlReader<R> {
+    type Item = Result<Json>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        JsonlReader::next(self)
+    }
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -457,5 +526,36 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{ }").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn jsonl_reader_streams_lines_and_skips_blanks() {
+        let text = "{\"a\":1}\n\n{\"a\":2}\n{\"a\":3}";
+        let mut r = JsonlReader::new(std::io::Cursor::new(text));
+        let mut seen = Vec::new();
+        while let Some(item) = r.next() {
+            seen.push(item.unwrap().get("a").unwrap().as_i64().unwrap());
+        }
+        assert_eq!(seen, vec![1, 2, 3]);
+        assert_eq!(r.line_no(), 4);
+    }
+
+    #[test]
+    fn jsonl_reader_reports_torn_line_with_number() {
+        let text = "{\"ok\":true}\n{\"torn\":";
+        let mut r = JsonlReader::new(std::io::Cursor::new(text));
+        assert!(r.next().unwrap().is_ok());
+        let err = r.next().unwrap().unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(r.next().is_none());
+    }
+
+    #[test]
+    fn jsonl_reader_is_an_iterator() {
+        let text = "1\n2\n3\n";
+        let vals: Vec<i64> = JsonlReader::new(std::io::Cursor::new(text))
+            .map(|j| j.unwrap().as_i64().unwrap())
+            .collect();
+        assert_eq!(vals, vec![1, 2, 3]);
     }
 }

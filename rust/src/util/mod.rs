@@ -12,6 +12,6 @@ pub mod stats;
 pub mod threadpool;
 pub mod timer;
 
-pub use json::Json;
+pub use json::{Json, JsonlReader};
 pub use stats::Summary;
 pub use timer::Timer;

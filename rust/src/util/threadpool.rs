@@ -46,7 +46,20 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            // Busy/idle split: time inside `job()` is busy,
+                            // time blocked in `recv()` is idle — the trace
+                            // subsystem derives pool utilization from the
+                            // busy total alone (idle = wall − busy). Off
+                            // path: one dead branch, no clock read.
+                            Ok(job) => {
+                                if crate::trace::enabled() {
+                                    let t0 = std::time::Instant::now();
+                                    job();
+                                    crate::trace::pool_busy(t0.elapsed().as_nanos() as u64);
+                                } else {
+                                    job();
+                                }
+                            }
                             Err(_) => break, // pool dropped
                         }
                     })

@@ -165,15 +165,26 @@ fn trainer_emits_telemetry_classification() {
         j.get("gns").unwrap().get("unbiased").unwrap().as_bool(),
         Some(false)
     );
-    // periodic snapshots
+    // periodic reports stream to telemetry.jsonl — one appended line per
+    // interval plus the final line (the old per-step telemetry-NNNNNN.json
+    // snapshot files are gone; see docs/observability.md)
     let dir = path.parent().unwrap();
-    for step in [25, 50, 75] {
-        let snap = dir.join(format!("telemetry-{step:06}.json"));
-        assert!(snap.exists(), "missing snapshot {}", snap.display());
-        let sj = load_report(&snap);
-        // snapshots land after the step executes -> step+1 steps recorded
-        assert_eq!(sj.get("steps").unwrap().as_usize().unwrap(), step + 1);
+    let stream = dir.join("telemetry.jsonl");
+    assert!(stream.exists(), "missing stream {}", stream.display());
+    let lines: Vec<Json> = pegrad::util::JsonlReader::open(&stream)
+        .unwrap()
+        .collect::<Result<Vec<_>, _>>()
+        .unwrap();
+    assert_eq!(lines.len(), 4, "3 intervals + final line");
+    // reports land after the step executes -> step+1 steps recorded
+    for (line, steps) in lines.iter().zip([26usize, 51, 76, 80]) {
+        assert_eq!(line.get("v").unwrap().as_usize(), Some(1));
+        assert_eq!(line.get("steps").unwrap().as_usize().unwrap(), steps);
     }
+    assert!(
+        !dir.join("telemetry-000025.json").exists(),
+        "per-step snapshot files must be retired"
+    );
     // live monitor agrees with the serialized report
     let mon = tr.telemetry().unwrap();
     assert_eq!(mon.steps(), 80);

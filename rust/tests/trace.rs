@@ -1,0 +1,302 @@
+//! Observability acceptance (ISSUE 7): tracing must be free when off,
+//! observation-only when on, and the JSONL streams must survive a
+//! blocked disk without stalling or tearing.
+//!
+//! The trace counters, the flop counter and the `trace.enabled` switch
+//! are process-global, so every test here serializes on one lock.
+
+use pegrad::config::{Config, DataKind, RunMode};
+use pegrad::coordinator::Trainer;
+use pegrad::engine::{EngineMode, FusedEngine};
+use pegrad::nn::loss::Targets;
+use pegrad::nn::{Loss, Mlp, ModelSpec};
+use pegrad::tensor::ops::Activation;
+use pegrad::tensor::{Rng, Tensor};
+use pegrad::trace::{self, StreamWriter};
+use pegrad::util::{Json, JsonlReader};
+
+static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn trace_cfg(name: &str, trace_on: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.run_name = name.into();
+    cfg.mode = RunMode::RustPegrad;
+    cfg.steps = 30;
+    cfg.data = DataKind::Synth;
+    cfg.data_n = 512;
+    cfg.eval_every = 0;
+    cfg.checkpoint_every = 0;
+    cfg.model_dims = vec![16, 32, 10];
+    cfg.model_activation = "relu".into();
+    cfg.model_loss = "softmax_ce".into();
+    cfg.model_m = 16;
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("pegrad-trace-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    cfg.trace.enabled = trace_on;
+    cfg.trace.every = 10;
+    cfg
+}
+
+fn run_params(cfg: Config) -> Vec<Tensor> {
+    let mut tr = Trainer::new(cfg).unwrap();
+    tr.run().unwrap();
+    tr.params().unwrap().to_vec()
+}
+
+/// Tracing is observation-only: a traced run produces bitwise-identical
+/// parameters to the default untraced run (which also proves the off
+/// path never perturbs the math — both sides run the same kernels).
+#[test]
+fn tracing_leaves_parameters_bitwise_unchanged() {
+    let _g = guard();
+    let untraced = run_params(trace_cfg("trace-off", false));
+    let traced = run_params(trace_cfg("trace-on", true));
+    assert_eq!(untraced.len(), traced.len());
+    for (a, b) in untraced.iter().zip(&traced) {
+        assert_eq!(a.data(), b.data(), "tracing changed the training math");
+    }
+}
+
+/// Exact flop identity: the engine costs exactly one forward + one
+/// backward traversal of matmul flops with tracing OFF *and* with
+/// tracing ON — spans and kernel counters add zero matmul work.
+#[test]
+fn tracing_adds_zero_matmul_flops() {
+    let _g = guard();
+    let spec =
+        ModelSpec::new(vec![12, 24, 18, 6], Activation::Relu, Loss::SoftmaxCe, 16).unwrap();
+    let mut rng = Rng::new(11);
+    let mlp = Mlp::init(spec.clone(), &mut rng);
+    let x = Tensor::randn(vec![16, 12], &mut rng);
+    let y = Targets::Classes((0..16).map(|j| (j % 6) as i32).collect());
+    let analytic = spec.flops_forward(16) + spec.flops_backward(16);
+    let mut engine = FusedEngine::new(spec);
+    for on in [false, true] {
+        trace::set_enabled(on);
+        pegrad::nn::reset_flops();
+        engine.step(&mlp.params, &x, &y, EngineMode::Mean);
+        let measured = pegrad::nn::read_flops();
+        assert_eq!(
+            measured, analytic,
+            "tracing {on}: engine must cost exactly fwd+bwd matmul flops"
+        );
+    }
+    trace::set_enabled(false);
+    // and with tracing off, the global counters never moved during the
+    // untraced step (the off path is a dead branch, not a cheap write)
+    let before = trace::counters();
+    engine.step(&mlp.params, &x, &y, EngineMode::Mean);
+    assert_eq!(before, trace::counters(), "off-path instrumentation wrote");
+}
+
+/// A traced run lands schema-valid `trace.jsonl` lines in the run dir:
+/// versioned, tagged, with span/kernel/pool/step_ms sections consistent
+/// with the work the run actually did.
+#[test]
+fn traced_run_emits_schema_valid_trace_stream() {
+    let _g = guard();
+    let cfg = trace_cfg("trace-stream", true);
+    let out_dir = std::path::PathBuf::from(&cfg.out_dir).join("trace-stream");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let mut tr = Trainer::new(cfg).unwrap();
+    tr.run().unwrap();
+    let path = tr.metrics.dir().join("trace.jsonl");
+    assert!(path.exists(), "missing {}", path.display());
+    let lines: Vec<Json> = JsonlReader::open(&path)
+        .unwrap()
+        .collect::<Result<Vec<_>, _>>()
+        .unwrap();
+    // 30 steps, every=10 -> records at 10 and 20, plus the final record
+    assert_eq!(lines.len(), 3, "2 intervals + final line");
+    let mut steps_seen = 0usize;
+    for j in &lines {
+        assert_eq!(j.get("v").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("trace").unwrap().as_str(), Some("pegrad.trace"));
+        steps_seen += j.get("interval_steps").unwrap().as_usize().unwrap();
+        let spans = j.get("spans").unwrap();
+        for name in ["forward", "backward", "norms", "replay", "data_load", "step",
+                     "checkpoint", "report"] {
+            let s = spans.get(name).unwrap_or_else(|| panic!("span {name} missing"));
+            assert!(s.get("ms").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        // every step runs a forward and a backward
+        let per = |n: &str, k: &str| spans.get(n).unwrap().get(k).unwrap().as_usize().unwrap();
+        assert_eq!(per("forward", "count"), per("backward", "count"));
+        let kernels = j.get("kernels").unwrap();
+        let calls: usize = ["matmul_band", "tn_band", "dot_rows", "row_sq"]
+            .iter()
+            .map(|k| kernels.get(k).unwrap().get("calls").unwrap().as_usize().unwrap())
+            .sum();
+        assert!(calls > 0, "a dense step dispatches microkernels");
+        let pool = j.get("pool").unwrap();
+        assert!(pool.get("workers").unwrap().as_usize().unwrap() >= 1);
+        let util = pool.get("utilization").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&util), "utilization {util} out of range");
+        let sm = j.get("step_ms").unwrap();
+        assert!(sm.get("last").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("reports_dropped").unwrap().as_usize(), Some(0));
+    }
+    // intervals partition the run: every one of the 30 steps is counted
+    // exactly once across the stream
+    assert_eq!(steps_seen, 30);
+    let last = lines.last().unwrap();
+    assert_eq!(last.get("steps").unwrap().as_usize(), Some(30));
+    let p50 = last.get("step_ms").unwrap().get("p50").unwrap().as_f64().unwrap();
+    let p99 = last.get("step_ms").unwrap().get("p99").unwrap().as_f64().unwrap();
+    assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+}
+
+/// A sink whose writes block until the test opens the gate — the "disk
+/// wedged" scenario for the backpressure test.
+struct BlockingSink {
+    gate: std::sync::Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+    out: std::sync::Arc<std::sync::Mutex<Vec<u8>>>,
+}
+
+impl std::io::Write for BlockingSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let (lock, cv) = &*self.gate;
+        let mut blocked = lock.lock().unwrap();
+        while *blocked {
+            blocked = cv.wait(blocked).unwrap();
+        }
+        self.out.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Writer backpressure: with the sink wedged, enqueues keep returning
+/// immediately (steps would proceed), overflow is counted in
+/// `reports_dropped`, and after the sink unblocks every surviving line
+/// is complete — no torn or interleaved records.
+#[test]
+fn blocked_sink_drops_counted_lines_without_tearing() {
+    let gate = std::sync::Arc::new((std::sync::Mutex::new(true), std::sync::Condvar::new()));
+    let out = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    let w = StreamWriter::with_sink(
+        Box::new(BlockingSink {
+            gate: std::sync::Arc::clone(&gate),
+            out: std::sync::Arc::clone(&out),
+        }),
+        4,
+    );
+    let mut accepted = 0usize;
+    for i in 0..64 {
+        if w.enqueue(format!("{{\"line\":{i}}}")) {
+            accepted += 1;
+        }
+    }
+    // the queue bounds pending lines: most of the burst was dropped, the
+    // hot path never blocked on the wedged sink to find out
+    assert!(accepted <= 4 + 1 + 4, "queue cap not enforced: {accepted}");
+    let dropped_while_blocked = w.reports_dropped();
+    assert_eq!(dropped_while_blocked as usize, 64 - accepted);
+    // open the gate; finish() drains what survived and reports the drops
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = false;
+        cv.notify_all();
+    }
+    let dropped = w.finish();
+    assert_eq!(dropped, dropped_while_blocked);
+    let bytes = out.lock().unwrap().clone();
+    let text = String::from_utf8(bytes).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), accepted, "every accepted line was written");
+    let mut prev = -1i64;
+    for line in lines {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("torn line {line:?}: {e}"));
+        let i = j.get("line").unwrap().as_usize().unwrap() as i64;
+        assert!(i > prev, "lines out of order: {i} after {prev}");
+        prev = i;
+    }
+}
+
+/// Satellite: `monitor --baseline` diffs a 100k-line stream in O(1)
+/// memory — the loader streams to the LAST report line instead of
+/// holding the history. The history here is 100k report-tagged lines
+/// with a full telemetry report as the final entry.
+#[test]
+fn baseline_loader_streams_hundred_thousand_line_history() {
+    let _g = guard();
+    let dir = std::env::temp_dir().join(format!("pegrad-trace-100k-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("telemetry.jsonl");
+    {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        for i in 0..99_999u64 {
+            writeln!(f, "{{\"v\":1,\"telemetry\":\"pegrad.gradient_norms\",\"steps\":{i}}}")
+                .unwrap();
+        }
+        // the real final report comes from an actual traced+telemetered
+        // run so the diff below exercises the full schema
+        let mut tr = Trainer::new({
+            let mut cfg = trace_cfg("trace-100k", false);
+            cfg.telemetry.enabled = true;
+            cfg.steps = 20;
+            cfg
+        })
+        .unwrap();
+        tr.run().unwrap();
+        let report = tr.telemetry().unwrap().report_with(None);
+        writeln!(f, "{report}").unwrap();
+    }
+    let last = pegrad::telemetry::diff::load_report(&path).unwrap();
+    assert_eq!(last.get("steps").unwrap().as_usize(), Some(20));
+    assert!(last.get("total").is_some(), "loader picked a stub line");
+    // identical reports diff clean through the same streamed loader
+    let diff = pegrad::telemetry::diff_reports(
+        &last,
+        &last,
+        &pegrad::telemetry::DiffConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(diff.get("drifted").unwrap().as_bool(), Some(false));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `pegrad monitor --follow` with `--idle-exit` tails an existing stream
+/// and terminates once the stream goes quiet — the CI smoke path.
+#[test]
+fn cli_follow_tails_a_stream_and_idle_exits() {
+    let dir = std::env::temp_dir().join(format!("pegrad-trace-follow-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    std::fs::write(
+        &path,
+        "{\"v\":1,\"trace\":\"pegrad.trace\",\"step\":10,\"reports_dropped\":0}\n",
+    )
+    .unwrap();
+    pegrad::cli::commands::run(vec![
+        "monitor".into(),
+        "--follow".into(),
+        path.to_string_lossy().into_owned(),
+        "--idle-exit".into(),
+        "0.2".into(),
+    ])
+    .unwrap();
+    // a missing stream is a readable error, not a hang
+    let err = pegrad::cli::commands::run(vec![
+        "monitor".into(),
+        "--follow".into(),
+        dir.join("nope.jsonl").to_string_lossy().into_owned(),
+        "--idle-exit".into(),
+        "0.2".into(),
+    ])
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("nope.jsonl"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
