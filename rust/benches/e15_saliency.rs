@@ -1,0 +1,160 @@
+//! E15: saliency-map overhead — the fused Mean step with per-position
+//! gradient-norm maps OFF (the default), maps OFF with a layer tap
+//! attached, and maps ON feeding a full [`pegrad::telemetry::SaliencyTap`]
+//! (per-layer map staging + the EMA merge for a tracked top-N set), vs
+//! the plain baseline step.
+//!
+//! The observability pitch (ISSUE 8) extends ISSUE 7's contract to the
+//! map taps: OFF is bitwise- and flop-identical to a run that never
+//! heard of saliency (asserted here before timing — the pre-check, not
+//! a benchmark), ON pays only band-local arithmetic plus one `memcpy`
+//! of each layer's `[m, L]` map block per step. Acceptance gate
+//! (enforced by `scripts/perf_gate` in CI): < 10% step-time overhead
+//! with maps ON at m = 256 on the digits conv stack.
+//!
+//! All inputs come from fixed seeds — the numbers are commit-independent
+//! apart from the code under test. Emits `BENCH_saliency.json`.
+
+use pegrad::bench::{bench_fn, BenchSpec, Table};
+use pegrad::engine::{EngineMode, FusedEngine};
+use pegrad::nn::layers::StackSpec;
+use pegrad::nn::loss::Targets;
+use pegrad::nn::Loss;
+use pegrad::telemetry::{
+    AuditConfig, FlagState, OutlierConfig, OutlierDetector, SaliencyTap,
+};
+use pegrad::tensor::{Rng, Tensor};
+use pegrad::util::Json;
+
+const CONV_STACK: &str =
+    "input 12x12x1, conv 8 k3 relu, pool 2, conv 16 k3 relu, flatten, dense 10";
+
+fn main() -> anyhow::Result<()> {
+    pegrad::util::logging::init_with(log::LevelFilter::Warn);
+    let quick = std::env::args().any(|a| a == "--quick");
+    let spec_bench = if quick {
+        BenchSpec::quick()
+    } else {
+        BenchSpec {
+            warmup_secs: 0.1,
+            measure_secs: 0.8,
+            min_samples: 3,
+            max_samples: 40,
+        }
+    };
+
+    let mut table = Table::new(
+        "E15 — saliency maps off/on vs baseline fused step (ms)",
+        &["model", "m", "baseline", "maps_off", "maps_on", "off_ovh", "on_ovh"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut ok_at_256 = true;
+    let mut bitwise_ok = true;
+
+    for m in [32usize, 256] {
+        let stack = StackSpec::parse(CONV_STACK, Loss::SoftmaxCe, m).unwrap();
+        let mut rng = Rng::new(15);
+        let params = stack.init_params(&mut rng);
+        let x = Tensor::randn(vec![m, stack.in_len()], &mut rng);
+        let y = Targets::Classes((0..m).map(|j| (j % stack.out_len()) as i32).collect());
+
+        // --- pre-check (not a benchmark): maps-off is bitwise identical
+        // to the baseline, and maps-on leaves the training math alone
+        let mut engine = FusedEngine::from_stack(stack.clone());
+        engine.step(&params, &x, &y, EngineMode::Mean);
+        let want: Vec<Tensor> = engine.grads().to_vec();
+        let acfg = AuditConfig {
+            enabled: true,
+            top_n: 16,
+            ..Default::default()
+        };
+        let mut tap = SaliencyTap::new(&stack.map_shapes(), m, &acfg);
+        engine.step_streamed(&params, &x, &y, EngineMode::Mean, None, Some(&mut tap));
+        for (a, b) in engine.grads().iter().zip(&want) {
+            bitwise_ok &= a.data() == b.data();
+        }
+        let mut on_engine = FusedEngine::from_stack(stack.clone());
+        on_engine.enable_saliency();
+        on_engine.step_streamed(&params, &x, &y, EngineMode::Mean, None, Some(&mut tap));
+        for (a, b) in on_engine.grads().iter().zip(&want) {
+            bitwise_ok &= a.data() == b.data();
+        }
+        assert!(bitwise_ok, "m={m}: saliency perturbed the gradients");
+
+        // a detector with a seeded top set, so the maps-on loop pays the
+        // real EMA merge for `top_n` tracked examples every step
+        let mut det = OutlierDetector::new(m, OutlierConfig::default());
+        let mut counts = vec![0u32; m];
+        for (i, c) in counts.iter_mut().enumerate().take(16) {
+            *c = (16 - i) as u32;
+        }
+        det.restore_flags(&FlagState {
+            counts,
+            steps: 10,
+            total_flags: 136,
+        });
+        let indices: Vec<usize> = (0..m).collect();
+
+        let t_base = bench_fn(&format!("conv/m{m}/baseline"), &spec_bench, || {
+            engine.step(&params, &x, &y, EngineMode::Mean);
+            std::hint::black_box(engine.s_total());
+        })
+        .mean_ms();
+
+        let t_off = bench_fn(&format!("conv/m{m}/maps_off"), &spec_bench, || {
+            engine.step_streamed(&params, &x, &y, EngineMode::Mean, None, Some(&mut tap));
+            std::hint::black_box(engine.s_total());
+        })
+        .mean_ms();
+
+        let t_on = bench_fn(&format!("conv/m{m}/maps_on"), &spec_bench, || {
+            on_engine.step_streamed(&params, &x, &y, EngineMode::Mean, None, Some(&mut tap));
+            tap.end_step(&indices, &det);
+            std::hint::black_box(on_engine.s_total());
+        })
+        .mean_ms();
+
+        let off_ovh = t_off / t_base - 1.0;
+        let on_ovh = t_on / t_base - 1.0;
+        if m == 256 && on_ovh >= 0.10 {
+            ok_at_256 = false;
+        }
+        table.row(vec![
+            "conv".to_string(),
+            m.to_string(),
+            format!("{t_base:.3}"),
+            format!("{t_off:.3}"),
+            format!("{t_on:.3}"),
+            format!("{:+.1}%", off_ovh * 100.0),
+            format!("{:+.1}%", on_ovh * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("model", Json::str("conv")),
+            ("m", Json::num(m as f64)),
+            ("baseline_ms", Json::num(t_base)),
+            ("maps_off_ms", Json::num(t_off)),
+            ("maps_on_ms", Json::num(t_on)),
+            ("maps_off_overhead_frac", Json::num(off_ovh)),
+            ("overhead_frac", Json::num(on_ovh)),
+        ]));
+    }
+
+    table.emit(Some(&pegrad::bench::workspace_path(
+        "bench_results/e15_saliency.csv",
+    )));
+    let summary = Json::obj(vec![
+        ("bench", Json::str("e15_saliency")),
+        ("conv_stack", Json::str(CONV_STACK)),
+        ("quick", Json::Bool(quick)),
+        ("maps_off_bitwise", Json::Bool(bitwise_ok)),
+        ("saliency_overhead_under_10pct_at_m256", Json::Bool(ok_at_256)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out = pegrad::bench::workspace_path("BENCH_saliency.json");
+    std::fs::write(&out, format!("{summary}\n"))?;
+    println!("(summary saved to {})", out.display());
+    if !ok_at_256 {
+        println!("WARNING: saliency maps-on overhead exceeded 10% at m=256 on this host.");
+    }
+    Ok(())
+}

@@ -3,6 +3,7 @@
 //! ```text
 //! pegrad train      --config cfg.toml [--set k=v ...]   train a model
 //! pegrad monitor    --config cfg.toml [--steps 200]     train + stream gradient-norm telemetry
+//! pegrad audit      --config cfg.toml [--prune 64]      train -> rank -> map -> prune -> retrain
 //! pegrad norms      --preset tiny [--n 256]             per-example norms -> jsonl
 //! pegrad inspect    [--artifacts DIR]                   list artifact presets/entries
 //! pegrad accountant --q 0.01 --sigma 1.1 --steps 10000  DP epsilon calculator
@@ -37,7 +38,12 @@ pub fn usage() -> String {
      \x20              histograms/quantiles, outlier flags, gradient noise\n\
      \x20              scale — emitted as a JSON report (rust modes only);\n\
      \x20              --baseline diffs a previous run's stream, --follow\n\
-     \x20              tails a live telemetry.jsonl/trace.jsonl\n\
+     \x20              tails a live telemetry.jsonl/trace.jsonl/saliency.jsonl\n\
+     \x20 audit        end-to-end dataset audit (rust modes only): train with\n\
+     \x20              gradient-norm saliency taps on, rank examples by\n\
+     \x20              persistent outlier flags, dump per-position saliency\n\
+     \x20              maps, prune the worst offenders, retrain, and report\n\
+     \x20              the quality delta in audit.json\n\
      \x20 norms        compute per-example gradient norms for a fresh batch\n\
      \x20              (--rust uses the fused engine instead of artifacts)\n\
      \x20 inspect      show artifact manifest contents\n\
@@ -56,6 +62,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&rest),
         "monitor" => cmd_monitor(&rest),
+        "audit" => cmd_audit(&rest),
         "norms" => cmd_norms(&rest),
         "inspect" => cmd_inspect(&rest),
         "accountant" => cmd_accountant(&rest),
@@ -135,8 +142,9 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
         ),
         ArgSpec::opt(
             "follow",
-            "tail an existing telemetry.jsonl/trace.jsonl stream instead of \
-             training: prints one summary line per appended record",
+            "tail an existing telemetry.jsonl/trace.jsonl/saliency.jsonl \
+             stream instead of training: prints one summary line per \
+             appended record",
         ),
         ArgSpec::opt(
             "idle-exit",
@@ -255,8 +263,9 @@ fn cmd_monitor(argv: &[String]) -> Result<()> {
 }
 
 /// `pegrad monitor --follow`: tail an append-only JSONL stream
-/// (`telemetry.jsonl` or `trace.jsonl`, see docs/observability.md),
-/// printing one summary line per complete appended record. Torn trailing
+/// (`telemetry.jsonl`, `trace.jsonl` or `saliency.jsonl`, see
+/// docs/observability.md), printing one summary line per complete
+/// appended record. Torn trailing
 /// lines (a record mid-write) are left in the buffer until their newline
 /// arrives, so a record is never parsed half-written. `idle_exit` bounds
 /// the wait for CI smokes; interactive use follows until interrupted.
@@ -313,17 +322,264 @@ fn render_stream_line(j: &Json) -> String {
             fmt(num(j, &["pool", "utilization"])),
             num(j, &["reports_dropped"]).unwrap_or(0.0),
         )
-    } else if crate::telemetry::diff::is_report(j) {
+    } else if j.get("saliency").and_then(Json::as_str)
+        == Some(crate::telemetry::SALIENCY_TAG)
+    {
+        // one line per saliency record: tracked-set size plus the first
+        // (= highest flag count) tracked examples, `index(xflags)`
+        let top = j
+            .get("examples")
+            .and_then(Json::as_arr)
+            .map(|v| {
+                v.iter()
+                    .take(3)
+                    .filter_map(|e| {
+                        let i = e.get("index")?.as_usize()?;
+                        let c = e.get("flags")?.as_usize()?;
+                        Some(format!("{i}(x{c})"))
+                    })
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            })
+            .unwrap_or_default();
         format!(
-            "telemetry after {} steps: loss mean {}, total-norm p50 {} p99 {}",
+            "saliency step {}: {} of top-{} flagged examples tracked{}",
+            num(j, &["step"]).unwrap_or(f64::NAN),
+            num(j, &["tracked"]).unwrap_or(0.0),
+            num(j, &["top_n"]).unwrap_or(0.0),
+            if top.is_empty() {
+                String::new()
+            } else {
+                format!(", top flagged: {top}")
+            },
+        )
+    } else if crate::telemetry::diff::is_report(j) {
+        // when the report carries persistent flag counts, append a
+        // "top flagged examples" summary so a follow session surfaces
+        // the audit-pipeline ranking without opening the report
+        let top = j
+            .get("outliers")
+            .and_then(|o| o.get("flagged_examples"))
+            .and_then(Json::as_arr)
+            .map(|v| {
+                v.iter()
+                    .take(3)
+                    .filter_map(|e| {
+                        let i = e.get("index")?.as_usize()?;
+                        let c = e.get("flags")?.as_usize()?;
+                        (c > 0).then(|| format!("{i}(x{c})"))
+                    })
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            })
+            .unwrap_or_default();
+        format!(
+            "telemetry after {} steps: loss mean {}, total-norm p50 {} p99 {}{}",
             num(j, &["steps"]).unwrap_or(f64::NAN),
             fmt(num(j, &["loss", "mean"])),
             fmt(num(j, &["total", "p50"])),
             fmt(num(j, &["total", "p99"])),
+            if top.is_empty() {
+                String::new()
+            } else {
+                format!(", top flagged: {top}")
+            },
         )
     } else {
         j.to_string()
     }
+}
+
+/// `pegrad audit`: the end-to-end dataset-audit pipeline (rust-engine
+/// modes only; see docs/observability.md).
+///
+/// Phase 1 trains with the saliency tap and outlier telemetry forced on:
+/// the engine emits per-position gradient-norm maps, the tap keeps
+/// EMA-smoothed maps for the most persistently flagged examples, and the
+/// run dir collects `saliency.jsonl` plus PGM/CSV map dumps. Phase 2
+/// prunes the `[audit] prune` highest-flag-count examples and retrains
+/// from scratch on the reduced set. `audit.json` records both evals, the
+/// quality delta, the pruned indices + flag counts, and the map/stream
+/// paths — the artifact a data-quality review actually consumes.
+fn cmd_audit(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        ArgSpec::opt(
+            "config",
+            "TOML config (must use a rust-engine mode; default: rust_pegrad on synth data)",
+        ),
+        ArgSpec::opt("steps", "override the step count (applies to both phases)"),
+        ArgSpec::opt("prune", "override [audit] prune: examples removed before the retrain"),
+        ArgSpec::switch("print", "print audit.json to stdout"),
+        ArgSpec::switch("help", "show options"),
+    ];
+    let p = parse(argv, &specs)?;
+    if p.has("help") {
+        println!("pegrad audit options:\n{}", help(&specs));
+        return Ok(());
+    }
+    let mut cfg = match p.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config {
+            mode: RunMode::RustPegrad,
+            run_name: "audit".into(),
+            ..Config::default()
+        },
+    };
+    cfg.apply_overrides(&p.overrides)?;
+    if !cfg.mode.is_rust_engine() {
+        bail!(
+            "pegrad audit taps the in-process fused engine; set mode = \
+             \"rust_pegrad\" | \"rust_clipped\" | \"rust_normalized\" (got '{}')",
+            cfg.mode.name()
+        );
+    }
+    // the pipeline forces its own instrumentation on: the saliency tap
+    // ranks examples by the outlier detector's persistent flag counts
+    cfg.telemetry.enabled = true;
+    cfg.audit.enabled = true;
+    if let Some(steps) = p.get_usize("steps")? {
+        cfg.steps = steps;
+    }
+    if let Some(prune) = p.get_usize("prune")? {
+        cfg.audit.prune = prune;
+    }
+    cfg.validate()?;
+    // phase 2 retrains WITHOUT instrumentation — the maps-off path is
+    // bitwise-identical to a plain run, so the quality delta measures the
+    // pruning alone
+    let retrain_cfg = Config {
+        run_name: format!("{}-retrain", cfg.run_name),
+        telemetry: crate::telemetry::TelemetryConfig {
+            enabled: false,
+            ..cfg.telemetry.clone()
+        },
+        audit: crate::telemetry::AuditConfig {
+            enabled: false,
+            ..cfg.audit.clone()
+        },
+        ..cfg.clone()
+    };
+    let prune_n = cfg.audit.prune;
+
+    log::info!("audit phase 1/2: instrumented training run ({} steps)", cfg.steps);
+    let mut tr = Trainer::new(cfg)?;
+    let summary = tr.run()?;
+    let (base_loss, base_acc) = tr.evaluate_now()?;
+    let mon = tr.telemetry().expect("audit forces telemetry on");
+    let flagged = mon.outliers().top_flagged(prune_n);
+    let pruned: Vec<usize> = flagged.iter().map(|&(i, _)| i).collect();
+    let maps = tr.saliency_maps.clone();
+    let run_dir = tr.metrics.dir().to_path_buf();
+    println!(
+        "phase 1: eval loss {base_loss:.4}{}; {} flagged examples to prune; \
+         {} saliency map files in {}",
+        base_acc
+            .map(|a| format!(" acc {:.1}%", a * 100.0))
+            .unwrap_or_default(),
+        pruned.len(),
+        maps.len(),
+        run_dir.display(),
+    );
+
+    log::info!(
+        "audit phase 2/2: retraining without the {} pruned examples",
+        pruned.len()
+    );
+    let mut tr2 = Trainer::new_pruned(retrain_cfg, &pruned)?;
+    tr2.run()?;
+    let (re_loss, re_acc) = tr2.evaluate_now()?;
+
+    let eval_obj = |loss: f32, acc: Option<f32>| {
+        Json::obj(vec![
+            ("loss", Json::num(loss as f64)),
+            (
+                "accuracy",
+                acc.map(|a| Json::num(a as f64)).unwrap_or(Json::Null),
+            ),
+        ])
+    };
+    let audit = Json::obj(vec![
+        ("v", Json::num(1.0)),
+        ("audit", Json::str("pegrad.audit")),
+        ("steps", Json::num(summary.steps as f64)),
+        ("baseline", eval_obj(base_loss, base_acc)),
+        ("retrained", eval_obj(re_loss, re_acc)),
+        (
+            "delta",
+            Json::obj(vec![
+                ("loss", Json::num((re_loss - base_loss) as f64)),
+                (
+                    "accuracy",
+                    match (base_acc, re_acc) {
+                        (Some(b), Some(r)) => Json::num((r - b) as f64),
+                        _ => Json::Null,
+                    },
+                ),
+            ]),
+        ),
+        ("pruned", Json::arr_usize(&pruned)),
+        (
+            "flags",
+            Json::Arr(
+                flagged
+                    .iter()
+                    .map(|&(i, c)| {
+                        Json::obj(vec![
+                            ("index", Json::num(i as f64)),
+                            ("flags", Json::num(c as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "maps",
+            Json::Arr(
+                maps.iter()
+                    .map(|p| Json::str(p.display().to_string()))
+                    .collect(),
+            ),
+        ),
+        (
+            "streams",
+            Json::obj(vec![
+                (
+                    "saliency",
+                    Json::str(run_dir.join("saliency.jsonl").display().to_string()),
+                ),
+                (
+                    "telemetry",
+                    summary
+                        .telemetry_path
+                        .as_ref()
+                        .map(|p| Json::str(p.display().to_string()))
+                        .unwrap_or(Json::Null),
+                ),
+            ]),
+        ),
+    ]);
+    let out_path = run_dir.join("audit.json");
+    std::fs::write(&out_path, format!("{audit}\n"))?;
+    if p.has("print") {
+        println!("{audit}");
+    }
+    println!(
+        "audit: loss {base_loss:.4} -> {re_loss:.4} ({:+.4}){} after pruning {} examples\n\
+         audit.json: {}",
+        re_loss - base_loss,
+        match (base_acc, re_acc) {
+            (Some(b), Some(r)) => format!(
+                ", acc {:.1}% -> {:.1}% ({:+.1}pt)",
+                b * 100.0,
+                r * 100.0,
+                (r - b) * 100.0
+            ),
+            _ => String::new(),
+        },
+        pruned.len(),
+        out_path.display(),
+    );
+    Ok(())
 }
 
 fn cmd_norms(argv: &[String]) -> Result<()> {

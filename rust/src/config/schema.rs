@@ -6,7 +6,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Result};
 
 use crate::optim::Schedule;
-use crate::telemetry::{ClipConfig, TelemetryConfig};
+use crate::telemetry::{AuditConfig, ClipConfig, TelemetryConfig};
 use crate::trace::TraceConfig;
 
 use super::parse::{parse_toml, Value};
@@ -148,6 +148,13 @@ pub struct Config {
     /// docs/observability.md). Off by default: a disabled trace is
     /// bitwise-identical to a build without the subsystem.
     pub trace: TraceConfig,
+    /// `[audit]` section: NormGrad-style per-position saliency maps for
+    /// persistently flagged examples, streamed to `saliency.jsonl`, and
+    /// the `pegrad audit` train→rank→prune→retrain pipeline
+    /// (`telemetry::saliency`, docs/observability.md). Off by default:
+    /// the map machinery adds zero work and the step stays
+    /// bitwise-identical.
+    pub audit: AuditConfig,
 }
 
 impl Default for Config {
@@ -182,6 +189,7 @@ impl Default for Config {
             telemetry: TelemetryConfig::default(),
             clip: ClipConfig::default(),
             trace: TraceConfig::default(),
+            audit: AuditConfig::default(),
         }
     }
 }
@@ -253,6 +261,23 @@ impl Config {
                  (rust_pegrad|rust_clipped|rust_normalized): the span \
                  instrumentation lives in the in-process fused engine"
             );
+        }
+        self.audit.validate()?;
+        if self.audit.enabled {
+            if !self.mode.is_rust_engine() {
+                bail!(
+                    "audit.enabled requires a rust-engine mode \
+                     (rust_pegrad|rust_clipped|rust_normalized): the saliency \
+                     maps stream out of the in-process fused engine"
+                );
+            }
+            if !self.telemetry.enabled {
+                bail!(
+                    "audit.enabled requires telemetry.enabled = true: the \
+                     saliency tap ranks examples by the outlier detector's \
+                     persistent flag counts"
+                );
+            }
         }
         self.clip.validate()?;
         if self.clip.adaptive {
@@ -433,6 +458,11 @@ fn apply(cfg: &mut Config, map: &BTreeMap<String, Value>) -> Result<()> {
             "trace.enabled" => cfg.trace.enabled = v.as_bool().ok_or_else(fail)?,
             "trace.every" => cfg.trace.every = v.as_usize().ok_or_else(fail)?,
             "trace.buffer" => cfg.trace.buffer = v.as_usize().ok_or_else(fail)?,
+            "audit.enabled" => cfg.audit.enabled = v.as_bool().ok_or_else(fail)?,
+            "audit.every" => cfg.audit.every = v.as_usize().ok_or_else(fail)?,
+            "audit.top_n" => cfg.audit.top_n = v.as_usize().ok_or_else(fail)?,
+            "audit.ema" => cfg.audit.ema = v.as_f64().ok_or_else(fail)?,
+            "audit.prune" => cfg.audit.prune = v.as_usize().ok_or_else(fail)?,
             other => bail!("unknown config key '{other}'"),
         }
     }
@@ -668,6 +698,64 @@ mod tests {
         .unwrap();
         assert!(cfg.trace.enabled);
         assert_eq!(cfg.trace.every, 5);
+    }
+
+    #[test]
+    fn parse_audit_section() {
+        let cfg = Config::from_toml(
+            r#"
+            mode = "rust_pegrad"
+
+            [telemetry]
+            enabled = true
+
+            [audit]
+            enabled = true
+            every = 50
+            top_n = 8
+            ema = 0.8
+            prune = 64
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.audit.enabled);
+        assert_eq!(cfg.audit.every, 50);
+        assert_eq!(cfg.audit.top_n, 8);
+        assert_eq!(cfg.audit.ema, 0.8);
+        assert_eq!(cfg.audit.prune, 64);
+        // defaults: off, valid — configs without the section are untouched
+        assert!(!Config::default().audit.enabled);
+        // override path: --set audit.enabled=true
+        let mut cfg = Config::from_toml(
+            "mode = \"rust_pegrad\"\n[telemetry]\nenabled = true",
+        )
+        .unwrap();
+        cfg.apply_overrides(&[
+            ("audit.enabled".into(), "true".into()),
+            ("audit.top_n".into(), "4".into()),
+        ])
+        .unwrap();
+        assert!(cfg.audit.enabled);
+        assert_eq!(cfg.audit.top_n, 4);
+    }
+
+    #[test]
+    fn audit_validation() {
+        // bad knobs rejected even when disabled
+        assert!(Config::from_toml("[audit]\ntop_n = 0").is_err());
+        assert!(Config::from_toml("[audit]\nema = 1.0").is_err());
+        assert!(Config::from_toml("[audit]\nprune = 0").is_err());
+        // artifact modes have no map taps
+        let err = Config::from_toml("mode = \"pegrad\"\n[audit]\nenabled = true")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rust-engine"), "{err}");
+        // the ranking comes from the outlier detector, so telemetry must
+        // be on
+        let err = Config::from_toml("mode = \"rust_pegrad\"\n[audit]\nenabled = true")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("telemetry.enabled"), "{err}");
     }
 
     #[test]

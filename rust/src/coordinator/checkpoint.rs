@@ -1,5 +1,6 @@
 //! Binary checkpointing: params, optimizer state, RNG, step counter,
-//! and (since v2) the adaptive-clip controller state.
+//! (since v2) the adaptive-clip controller state, and (since v3) the
+//! outlier detector's persistent flag counts.
 //!
 //! Format (little-endian):
 //! ```text
@@ -7,14 +8,21 @@
 //! | u32 n_params  | n_params  tensors
 //! | u32 n_opt     | n_opt     tensors
 //! | u32 has_clip  | has_clip == 1 ? clip state : nothing     (v2+)
+//! | u32 has_flags | has_flags == 1 ? flag state : nothing    (v3+)
 //! tensor := u32 rank | u64 dims[rank] | f32 data[numel]
 //! clip   := f64 p | f64 q[5] | f64 n[5] | f64 np[5] | u64 count
 //!         | f64 c | f64 init_c | u64 steps
+//! flags  := u32 n | u32 counts[n] | u64 steps | u64 total_flags
 //! ```
 //!
-//! Version-1 files (no clip section) still load, with `clip = None` —
-//! a pre-PR-6 checkpoint resumes exactly as before, the controller
-//! simply restarts its warmup.
+//! Older files still load: a v1 checkpoint (no clip section) resumes
+//! with `clip = None` exactly as before, a v2 checkpoint (no flags
+//! section) with `flags = None` — the detector simply restarts its flag
+//! history, the same behavior those builds always had. Only the
+//! persistent flag COUNTS are checkpointed, not the running P²/Welford
+//! threshold statistics: those re-warm within `warmup_steps`, while a
+//! reset flag history would silently skew a `pegrad audit` ranking
+//! across a resume.
 
 use std::fs;
 use std::io::{Read, Write};
@@ -24,10 +32,11 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::telemetry::adaptive::ClipState;
 use crate::telemetry::sketch::P2State;
+use crate::telemetry::FlagState;
 use crate::tensor::{Rng, Tensor};
 
 const MAGIC: &[u8; 4] = b"PEGD";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
@@ -38,6 +47,9 @@ pub struct Checkpoint {
     /// Adaptive-clip controller dynamics; `None` on fixed-`C` runs and
     /// when loading a v1 file.
     pub clip: Option<ClipState>,
+    /// Outlier-detector persistent flag counts (the audit ranking);
+    /// `None` on telemetry-off runs and when loading a v1/v2 file.
+    pub flags: Option<FlagState>,
 }
 
 impl Checkpoint {
@@ -48,12 +60,19 @@ impl Checkpoint {
             params,
             opt_state,
             clip: None,
+            flags: None,
         }
     }
 
     /// Attach adaptive-clip controller state (builder-style).
     pub fn with_clip(mut self, clip: Option<ClipState>) -> Self {
         self.clip = clip;
+        self
+    }
+
+    /// Attach outlier-detector flag counts (builder-style, v3).
+    pub fn with_flags(mut self, flags: Option<FlagState>) -> Self {
+        self.flags = flags;
         self
     }
 
@@ -79,6 +98,13 @@ impl Checkpoint {
                 Some(cs) => {
                     f.write_all(&1u32.to_le_bytes())?;
                     write_clip(&mut f, cs)?;
+                }
+            }
+            match &self.flags {
+                None => f.write_all(&0u32.to_le_bytes())?,
+                Some(fs) => {
+                    f.write_all(&1u32.to_le_bytes())?;
+                    write_flags(&mut f, fs)?;
                 }
             }
             f.sync_all()?;
@@ -115,12 +141,22 @@ impl Checkpoint {
         } else {
             None
         };
+        let flags = if version >= 3 {
+            match read_u32(&mut f)? {
+                0 => None,
+                1 => Some(read_flags(&mut f)?),
+                other => bail!("bad flags-section flag {other} (corrupt checkpoint?)"),
+            }
+        } else {
+            None
+        };
         Ok(Checkpoint {
             step,
             rng_state,
             params,
             opt_state,
             clip,
+            flags,
         })
     }
 
@@ -209,6 +245,34 @@ fn read_clip(f: &mut fs::File) -> Result<ClipState> {
         c,
         init_c,
         steps,
+    })
+}
+
+fn write_flags(f: &mut fs::File, fs: &FlagState) -> Result<()> {
+    f.write_all(&(fs.counts.len() as u32).to_le_bytes())?;
+    for &c in &fs.counts {
+        f.write_all(&c.to_le_bytes())?;
+    }
+    f.write_all(&fs.steps.to_le_bytes())?;
+    f.write_all(&fs.total_flags.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_flags(f: &mut fs::File) -> Result<FlagState> {
+    let n = read_u32(f)? as usize;
+    if n > 1 << 28 {
+        bail!("implausible flag-table size {n} (corrupt checkpoint?)");
+    }
+    let mut counts = Vec::with_capacity(n);
+    for _ in 0..n {
+        counts.push(read_u32(f)?);
+    }
+    let steps = read_u64(f)?;
+    let total_flags = read_u64(f)?;
+    Ok(FlagState {
+        counts,
+        steps,
+        total_flags,
     })
 }
 
@@ -305,6 +369,57 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.step, 17);
         assert!(back.clip.is_none(), "v1 file must load with clip = None");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flag_state_roundtrips_exactly() {
+        use crate::telemetry::{OutlierConfig, OutlierDetector};
+        let mut det = OutlierDetector::new(
+            16,
+            OutlierConfig {
+                warmup_steps: 0,
+                ..Default::default()
+            },
+        );
+        for _ in 0..10 {
+            det.observe(&[0, 1, 2], &[1.0, 1.0, 1.0]);
+        }
+        det.observe(&[7], &[1000.0]);
+        let rng = Rng::new(5);
+        let ck = Checkpoint::new(11, &rng, vec![], vec![]).with_flags(Some(det.flag_state()));
+        let path = tmpfile("flags");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let state = back.flags.expect("flags section lost");
+        assert_eq!(state, det.flag_state(), "flag state not exact after roundtrip");
+        // a restored detector ranks identically
+        let mut resumed = OutlierDetector::new(16, OutlierConfig::default());
+        resumed.restore_flags(&state);
+        assert_eq!(resumed.top_flagged(4), det.top_flagged(4));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn version2_files_still_load_without_flags() {
+        // hand-assemble a minimal v2 file: header + empty tensor lists +
+        // empty clip section, no flags section
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // version 2
+        bytes.extend_from_slice(&23u64.to_le_bytes()); // step
+        for s in Rng::new(3).state() {
+            bytes.extend_from_slice(&s.to_le_bytes());
+        }
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // n_params
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // n_opt
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // has_clip = 0
+        let path = tmpfile("v2");
+        std::fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 23);
+        assert!(back.clip.is_none());
+        assert!(back.flags.is_none(), "v2 file must load with flags = None");
         let _ = std::fs::remove_file(&path);
     }
 

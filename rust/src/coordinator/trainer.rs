@@ -26,7 +26,7 @@ use crate::runtime::{Manifest, Registry};
 use crate::sampler::{
     ImportanceConfig, ImportanceSampler, Sampler, UniformSampler,
 };
-use crate::telemetry::{ClipController, LayerTap, TeeTap, TelemetryMonitor};
+use crate::telemetry::{ClipController, LayerTap, SaliencyTap, TeeTap, TelemetryMonitor};
 use crate::tensor::{ops, Rng, Tensor};
 use crate::util::threadpool::bounded;
 use crate::util::Timer;
@@ -81,6 +81,13 @@ pub struct Trainer {
     /// actuates the §6 bound in `rust_clipped` (and the target in
     /// `rust_normalized`), observation-only under `rust_pegrad`.
     clip: Option<ClipController>,
+    /// Per-position saliency accumulator (`[audit]` section; rust modes
+    /// only). Tees onto the same engine tap stream; tracks EMA maps for
+    /// the outlier detector's top-N flagged examples.
+    saliency: Option<SaliencyTap>,
+    /// Saliency map dump paths from the end of the last `run()`
+    /// (`[audit]` runs only; `pegrad audit` records them in audit.json).
+    pub saliency_maps: Vec<std::path::PathBuf>,
     pub metrics: MetricsLogger,
     step: usize,
     /// L3-vs-L2 step-time breakdown, filled when `PEGRAD_PROFILE=1`
@@ -139,10 +146,17 @@ impl Trainer {
             let stack = StackSpec::from_dense(&spec);
             (Some(registry), Some(spec), stack)
         };
-        let engine = cfg
+        let mut engine = cfg
             .mode
             .is_rust_engine()
             .then(|| FusedEngine::from_stack(stack.clone()));
+        if cfg.audit.enabled {
+            // validated: audit requires a rust-engine mode + telemetry
+            engine
+                .as_mut()
+                .expect("validated: audit requires a rust-engine mode")
+                .enable_saliency();
+        }
 
         let mut rng = Rng::new(cfg.seed);
         let (train, eval) = build_datasets(&cfg, &stack, &mut rng)?;
@@ -216,6 +230,10 @@ impl Trainer {
             };
             ClipController::new(&cfg.clip, init_c)
         });
+        let saliency = cfg
+            .audit
+            .enabled
+            .then(|| SaliencyTap::new(&stack.map_shapes(), stack.m, &cfg.audit));
         let metrics = MetricsLogger::new(&cfg.out_dir, &cfg.run_name, 25)?;
         let profile = std::env::var("PEGRAD_PROFILE")
             .ok()
@@ -237,10 +255,69 @@ impl Trainer {
             accountant,
             monitor,
             clip,
+            saliency,
+            saliency_maps: Vec::new(),
             metrics,
             step: 0,
             profile,
         })
+    }
+
+    /// [`Trainer::new`] minus the given training examples: the audit
+    /// retrain phase. The train split is generated identically (same
+    /// seed, same distribution), then the excluded dataset indices are
+    /// dropped; the sampler, telemetry flag table and accountant are
+    /// rebuilt for the smaller set. Eval stays untouched so the quality
+    /// delta compares like with like.
+    pub fn new_pruned(cfg: Config, excluded: &[usize]) -> Result<Trainer> {
+        let mut tr = Trainer::new(cfg)?;
+        if excluded.is_empty() {
+            return Ok(tr);
+        }
+        let keep: Vec<usize> = (0..tr.train.len())
+            .filter(|i| !excluded.contains(i))
+            .collect();
+        if keep.len() < tr.stack.m {
+            bail!(
+                "pruning {} examples leaves {} < m = {} training rows",
+                excluded.len(),
+                keep.len(),
+                tr.stack.m
+            );
+        }
+        tr.train = tr
+            .train
+            .subset(&keep, format!("{}-pruned", tr.train.name));
+        tr.sampler = match tr.cfg.sampler {
+            SamplerKind::Uniform => Box::new(UniformSampler::new(tr.train.len())),
+            SamplerKind::Importance => Box::new(ImportanceSampler::new(
+                tr.train.len(),
+                ImportanceConfig {
+                    ema_lambda: tr.cfg.sampler_lambda,
+                    floor: tr.cfg.sampler_floor,
+                    ..Default::default()
+                },
+            )),
+        };
+        if tr.monitor.is_some() {
+            let mut mon = TelemetryMonitor::new(
+                &tr.cfg.telemetry,
+                tr.stack.n_params(),
+                tr.stack.m,
+                tr.train.len(),
+            );
+            if tr.cfg.sampler != SamplerKind::Uniform || tr.cfg.mode != RunMode::RustPegrad {
+                mon.mark_weighted_gradients();
+            }
+            tr.monitor = Some(mon);
+        }
+        if let Some(p) = tr.cfg.privacy.as_ref() {
+            let q = (tr.stack.m as f64 / tr.train.len() as f64).min(1.0);
+            let mut a = RdpAccountant::new(q, p.noise_sigma.max(1e-6) as f64);
+            a.observe_steps(0);
+            tr.accountant = Some(a);
+        }
+        Ok(tr)
     }
 
     /// The live telemetry monitor, when `[telemetry]` is enabled.
@@ -251,6 +328,20 @@ impl Trainer {
     /// The live adaptive clip controller, when `[clip] adaptive = true`.
     pub fn clip_controller(&self) -> Option<&ClipController> {
         self.clip.as_ref()
+    }
+
+    /// The live saliency tap, when `[audit]` is enabled.
+    pub fn saliency(&self) -> Option<&SaliencyTap> {
+        self.saliency.as_ref()
+    }
+
+    /// Evaluate the CURRENT parameters on the eval split (rust-engine
+    /// modes only — the audit pipeline's before/after quality probe).
+    pub fn evaluate_now(&mut self) -> Result<(f32, Option<f32>)> {
+        if !self.cfg.mode.is_rust_engine() {
+            bail!("evaluate_now supports the rust-engine modes only");
+        }
+        self.evaluate(None)
     }
 
     /// Resume parameters/step/rng from a checkpoint.
@@ -280,6 +371,13 @@ impl Trainer {
             // (or fixed-C) checkpoint has no state — the controller
             // simply restarts its warmup from the initial bound.
             ctrl.restore_state(state);
+        }
+        if let (Some(mon), Some(fl)) = (self.monitor.as_mut(), ck.flags.as_ref()) {
+            // resume the persistent audit flag counts (v3): the ranking
+            // carries over; the threshold statistics deliberately re-warm
+            // (see coordinator::checkpoint module docs). A v1/v2 file has
+            // no flags — the detector restarts its history as before.
+            mon.outliers_mut().restore_flags(fl);
         }
         self.dev_params = None; // re-upload lazily
         Ok(())
@@ -374,6 +472,23 @@ impl Trainer {
                 }
             })
             .flatten();
+        // saliency summary lines (`[audit]` runs): periodic when
+        // audit.every > 0, always one final line — the stream exists
+        // whenever the tap does
+        let saliency_writer = self
+            .saliency
+            .is_some()
+            .then(|| {
+                let path = self.metrics.dir().join("saliency.jsonl");
+                match crate::trace::StreamWriter::create(&path, self.cfg.trace.buffer) {
+                    Ok(w) => Some(w),
+                    Err(e) => {
+                        log::warn!("saliency stream disabled: {e}");
+                        None
+                    }
+                }
+            })
+            .flatten();
 
         // gather-prefetch pipeline (selection inline, gather overlapped)
         let depth = self.cfg.prefetch_depth;
@@ -455,6 +570,16 @@ impl Trainer {
                 }
             }
 
+            if let Some(sal) = &self.saliency {
+                let every = self.cfg.audit.every;
+                if every > 0 && self.step > 0 && self.step % every == 0 {
+                    if let Some(w) = &saliency_writer {
+                        let _sp = crate::trace::span(crate::trace::Phase::Report);
+                        w.enqueue(sal.render_line(self.step).to_string());
+                    }
+                }
+            }
+
             if self.cfg.eval_every > 0
                 && self.step > 0
                 && self.step % self.cfg.eval_every == 0
@@ -494,6 +619,10 @@ impl Trainer {
         if let (Some(mon), Some(w)) = (&self.monitor, &telemetry_writer) {
             w.enqueue(mon.report_with(self.clip.as_ref()).to_string());
         }
+        if let (Some(sal), Some(w)) = (&self.saliency, &saliency_writer) {
+            let last = self.step.saturating_sub(1);
+            w.enqueue(sal.render_line(last).to_string());
+        }
         if let Some(w) = trace_writer {
             let dropped = w.finish();
             if dropped > 0 {
@@ -507,6 +636,33 @@ impl Trainer {
                 log::warn!(
                     "telemetry stream: {dropped} lines dropped (writer backpressure)"
                 );
+            }
+        }
+        if let Some(w) = saliency_writer {
+            let dropped = w.finish();
+            if dropped > 0 {
+                log::warn!(
+                    "saliency stream: {dropped} lines dropped (writer backpressure)"
+                );
+            }
+            log::info!(
+                "saliency stream: {}",
+                self.metrics.dir().join("saliency.jsonl").display()
+            );
+        }
+        // dump the tracked maps (observation-only: a failed dump must not
+        // fail the run) and remember the paths for `pegrad audit`
+        if let Some(sal) = &self.saliency {
+            match sal.write_maps(self.metrics.dir()) {
+                Ok(paths) => {
+                    log::info!(
+                        "saliency maps: {} files under {}",
+                        paths.len(),
+                        self.metrics.dir().join("saliency").display()
+                    );
+                    self.saliency_maps = paths;
+                }
+                Err(e) => log::warn!("saliency map dump failed: {e}"),
             }
         }
         if tracing {
@@ -593,19 +749,52 @@ impl Trainer {
         let weights = matches!(self.cfg.mode, RunMode::RustPegrad)
             .then_some(batch.weights.as_slice());
         let engine = self.engine.as_mut().expect("rust modes own an engine");
-        // one tap slot on the engine: monitor, controller, or both tee'd
+        // one tap slot on the engine: monitor, controller and/or the
+        // saliency tap, tee'd as needed (TeeTap nests, so three sinks are
+        // two tees) — each sink sees exactly the stream it would alone
+        let mut tee_inner;
         let mut tee;
-        let tap: Option<&mut dyn LayerTap> = match (self.monitor.as_mut(), self.clip.as_mut()) {
-            (Some(m), Some(c)) => {
+        let tap: Option<&mut dyn LayerTap> = match (
+            self.monitor.as_mut(),
+            self.clip.as_mut(),
+            self.saliency.as_mut(),
+        ) {
+            (Some(m), Some(c), Some(s)) => {
+                tee_inner = TeeTap {
+                    first: c,
+                    second: s,
+                };
+                tee = TeeTap {
+                    first: m,
+                    second: &mut tee_inner,
+                };
+                Some(&mut tee)
+            }
+            (Some(m), Some(c), None) => {
                 tee = TeeTap {
                     first: m,
                     second: c,
                 };
                 Some(&mut tee)
             }
-            (Some(m), None) => Some(m),
-            (None, Some(c)) => Some(c),
-            (None, None) => None,
+            (Some(m), None, Some(s)) => {
+                tee = TeeTap {
+                    first: m,
+                    second: s,
+                };
+                Some(&mut tee)
+            }
+            (None, Some(c), Some(s)) => {
+                tee = TeeTap {
+                    first: c,
+                    second: s,
+                };
+                Some(&mut tee)
+            }
+            (Some(m), None, None) => Some(m),
+            (None, Some(c), None) => Some(c),
+            (None, None, Some(s)) => Some(s),
+            (None, None, None) => None,
         };
         let stats =
             engine.step_streamed(&self.params, &batch.x, &batch.y, mode, weights, tap);
@@ -614,6 +803,11 @@ impl Trainer {
         // the clipped mean in clipped mode), not the privacy noise
         if let Some(mon) = self.monitor.as_mut() {
             mon.end_step(&batch.indices, self.engine.as_ref().unwrap().grads());
+        }
+        // then fold the staged maps into the tracked flagged set — the
+        // detector's counts are current as of the end_step above
+        if let (Some(sal), Some(mon)) = (self.saliency.as_mut(), self.monitor.as_ref()) {
+            sal.end_step(&batch.indices, mon.outliers());
         }
 
         if let (RunMode::RustClipped, Some(p)) = (self.cfg.mode, self.cfg.privacy.clone()) {
@@ -883,7 +1077,8 @@ impl Trainer {
             self.params.clone(),
             opt_state,
         )
-        .with_clip(self.clip.as_ref().map(|c| c.snapshot()));
+        .with_clip(self.clip.as_ref().map(|c| c.snapshot()))
+        .with_flags(self.monitor.as_ref().map(|m| m.outliers().flag_state()));
         let path = self.metrics.dir().join(format!("ckpt-{:06}.bin", self.step));
         ck.save(&path).context("saving checkpoint")?;
         log::info!("checkpoint saved: {}", path.display());

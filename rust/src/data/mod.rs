@@ -58,6 +58,18 @@ impl Dataset {
         (x, self.y.gather(idx))
     }
 
+    /// A new dataset containing exactly the given examples, in order —
+    /// the `pegrad audit` prune step trains the retention phase on
+    /// `subset(kept)` of the original training split.
+    pub fn subset(&self, idx: &[usize], name: impl Into<String>) -> Dataset {
+        let (x, y) = self.batch(idx);
+        Dataset {
+            x,
+            y,
+            name: name.into(),
+        }
+    }
+
     /// Split off the last `frac` of examples as an eval set.
     pub fn split_eval(&self, frac: f32) -> (Dataset, Dataset) {
         assert!((0.0..1.0).contains(&frac));
@@ -108,6 +120,17 @@ mod tests {
         assert_eq!(x.row(0), &[4., 5.]);
         assert_eq!(x.row(1), &[0., 1.]);
         assert_eq!(y, Targets::Classes(vec![0, 0]));
+    }
+
+    #[test]
+    fn subset_keeps_exactly_the_given_rows() {
+        let d = tiny();
+        let s = d.subset(&[3, 1], "pruned");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.x.row(0), &[6., 7.]);
+        assert_eq!(s.x.row(1), &[2., 3.]);
+        assert_eq!(s.y, Targets::Classes(vec![1, 1]));
+        assert_eq!(s.name, "pruned");
     }
 
     #[test]

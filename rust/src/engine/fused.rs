@@ -94,6 +94,8 @@ pub struct FusedEngine {
     param_idx: Vec<usize>,
     ws: Workspace,
     retention_ready: bool,
+    /// Per-position saliency maps requested ([`FusedEngine::enable_saliency`]).
+    saliency: bool,
 }
 
 impl FusedEngine {
@@ -127,7 +129,41 @@ impl FusedEngine {
             param_idx,
             ws,
             retention_ready: false,
+            saliency: false,
         }
+    }
+
+    /// Turn on NormGrad-style per-position saliency maps (PR 8): every
+    /// weighted layer allocates its `[m_max, L]` map buffer and the
+    /// backward traversal streams `s_j[p] = ||u_p||²·||v_p||²` rows to
+    /// the tap's [`LayerTap::on_layer_map`] right after `on_layer`.
+    /// Off (the default) the step is bitwise- and flop-identical to an
+    /// engine without this feature — `tests/saliency.rs` proves both.
+    pub fn enable_saliency(&mut self) {
+        for &i in &self.param_idx {
+            self.layers[i].enable_maps();
+        }
+        self.saliency = true;
+    }
+
+    pub fn saliency_enabled(&self) -> bool {
+        self.saliency
+    }
+
+    /// Per-position map length of weighted layer `wi` (conv: `out_h ·
+    /// out_w`; dense: 1).
+    pub fn map_len(&self, wi: usize) -> usize {
+        self.layers[self.param_idx[wi]].map_len()
+    }
+
+    /// Last step's per-position maps of weighted layer `wi`, row-major
+    /// `[last_m, map_len]`. `None` until [`FusedEngine::enable_saliency`].
+    pub fn layer_maps(&self, wi: usize) -> Option<&[f32]> {
+        let li = self.param_idx[wi];
+        let mlen = self.layers[li].map_len();
+        self.layers[li]
+            .maps()
+            .map(|mp| &mp[..self.ws.last_m * mlen])
     }
 
     pub fn stack(&self) -> &StackSpec {
@@ -377,10 +413,17 @@ impl FusedEngine {
                 m,
             );
             // stream this layer's §4 norms out while they are hot — the
-            // tap sees s_j^(l) in the same traversal that produced them
+            // tap sees s_j^(l) in the same traversal that produced them,
+            // and (saliency enabled) the per-position maps right after
             if has_w {
                 if let Some(t) = &mut tap {
                     t.on_layer(wi, &s_param[wi][..m]);
+                    if self.saliency {
+                        let mlen = self.layers[i].map_len();
+                        if let Some(maps) = self.layers[i].maps() {
+                            t.on_layer_map(wi, mlen, &maps[..m * mlen]);
+                        }
+                    }
                 }
             }
             if need_dx {

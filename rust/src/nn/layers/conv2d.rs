@@ -164,6 +164,13 @@ pub struct ConvLayer {
     /// Retained deltas `[m_max, L·c_out]` for the §6 deferred
     /// accumulation (lazily allocated).
     retained: Vec<f32>,
+    /// Per-position saliency maps `[m_max, L]` (NormGrad, PR 8):
+    /// `maps[j·L + p] = ||U_j[p]||²·||V_j[p]||²` — the rank-1
+    /// per-position term of the streamed norm. Empty (the default)
+    /// means disabled: the backward takes no extra branches inside the
+    /// kernels and stays bitwise- and flop-identical
+    /// (see `tests/saliency.rs` and `docs/observability.md`).
+    maps: Vec<f32>,
 }
 
 impl ConvLayer {
@@ -200,6 +207,7 @@ impl ConvLayer {
             plain_sum: Vec::new(),
             plain_valid: false,
             retained: Vec::new(),
+            maps: Vec::new(),
         }
     }
 
@@ -330,6 +338,7 @@ impl Layer for ConvLayer {
         for v in self.gpartial[..nb * gsz].iter_mut() {
             *v = 0.0;
         }
+        let maps_on = !self.maps.is_empty();
         {
             let ConvLayer {
                 xin,
@@ -339,6 +348,7 @@ impl Layer for ConvLayer {
                 dubuf,
                 pbuf,
                 grambuf,
+                maps,
                 ..
             } = self;
             let src = ConvLayer::patch_src(
@@ -355,14 +365,20 @@ impl Layer for ConvLayer {
                 Some(d) => d[..m * in_len].chunks_mut(rows_per * in_len).map(Some).collect(),
                 None => (0..nb).map(|_| None).collect(),
             };
+            let mut map_chunks: Vec<Option<&mut [f32]>> = if maps_on {
+                maps[..m * l].chunks_mut(rows_per * l).map(Some).collect()
+            } else {
+                (0..nb).map(|_| None).collect()
+            };
             let du_chunks = dubuf[..nb * (kp1 - 1)].chunks_mut(kp1 - 1);
             let mut jobs: Vec<threadpool::ScopedJob> = Vec::with_capacity(nb);
             if gram {
                 let gram_sz = l * kp1 + l * l;
-                for (bi, ((gr_b, du_b), (s_b, dx_b))) in grambuf[..nb * gram_sz]
+                for (bi, (((gr_b, du_b), (s_b, dx_b)), map_b)) in grambuf[..nb * gram_sz]
                     .chunks_mut(gram_sz)
                     .zip(du_chunks)
                     .zip(s_chunks.drain(..).zip(dx_chunks.drain(..)))
+                    .zip(map_chunks.drain(..))
                     .enumerate()
                 {
                     let j0 = bi * rows_per;
@@ -370,7 +386,7 @@ impl Layer for ConvLayer {
                     jobs.push(Box::new(move || {
                         conv_bwd_band_gram(
                             &geom, co, src, delta, wdat, dphi_prev, j0, j1, s_b, dx_b,
-                            need_dx, gr_b, du_b,
+                            map_b, need_dx, gr_b, du_b,
                         );
                     }) as threadpool::ScopedJob);
                 }
@@ -378,12 +394,13 @@ impl Layer for ConvLayer {
                 // retention without Gram banks the unweighted Σ_j G_j for
                 // the degenerate-coefficient replay shortcut
                 let accum_unit = !fused_accum;
-                for (bi, ((((g_b, p_b), du_b), pr_b), (s_b, dx_b))) in gbuf[..nb * gsz]
+                for (bi, (((((g_b, p_b), du_b), pr_b), (s_b, dx_b)), map_b)) in gbuf[..nb * gsz]
                     .chunks_mut(gsz)
                     .zip(gpartial[..nb * gsz].chunks_mut(gsz))
                     .zip(du_chunks)
                     .zip(pbuf[..nb * PATCH_CHUNK * kp1].chunks_mut(PATCH_CHUNK * kp1))
                     .zip(s_chunks.drain(..).zip(dx_chunks.drain(..)))
+                    .zip(map_chunks.drain(..))
                     .enumerate()
                 {
                     let j0 = bi * rows_per;
@@ -391,7 +408,7 @@ impl Layer for ConvLayer {
                     jobs.push(Box::new(move || {
                         conv_bwd_band(
                             &geom, co, src, delta, wdat, dphi_prev, coef, accum_unit, j0,
-                            j1, s_b, dx_b, need_dx, g_b, p_b, du_b, pr_b,
+                            j1, s_b, dx_b, map_b, need_dx, g_b, p_b, du_b, pr_b,
                         );
                     }) as threadpool::ScopedJob);
                 }
@@ -508,7 +525,22 @@ impl Layer for ConvLayer {
             + self.pbuf.len()
             + self.grambuf.len()
             + self.plain_sum.len()
-            + self.retained.len())
+            + self.retained.len()
+            + self.maps.len())
+    }
+
+    fn map_len(&self) -> usize {
+        self.l
+    }
+
+    fn enable_maps(&mut self) {
+        if self.maps.is_empty() {
+            self.maps = vec![0.0; self.m_max * self.l];
+        }
+    }
+
+    fn maps(&self) -> Option<&[f32]> {
+        (!self.maps.is_empty()).then_some(self.maps.as_slice())
     }
 }
 
@@ -591,7 +623,12 @@ fn conv_dx_example(
 ///    matches the materialized oracle bitwise);
 /// 3. Mean mode: `partial += coef_j · G_j`; retention (`accum_unit`):
 ///    `partial += G_j` (the degenerate-replay bank);
-/// 4. input gradient via [`conv_dx_example`].
+/// 4. input gradient via [`conv_dx_example`];
+/// 5. when a `maps` band is handed in (saliency enabled), the
+///    per-position rank-1 norms `maps[(j-j0)·L + p] = ||u_p||²·||v_p||²`
+///    fall out of the already-staged patch/delta rows — `u_p v_pᵀ` is
+///    rank-1, so its Frobenius norm factors. `maps = None` (default)
+///    takes no branch inside the chunk loop.
 #[allow(clippy::too_many_arguments)]
 fn conv_bwd_band(
     geom: &ConvGeom,
@@ -606,6 +643,7 @@ fn conv_bwd_band(
     j1: usize,
     mut s: Option<&mut [f32]>,
     mut dx: Option<&mut [f32]>,
+    mut maps: Option<&mut [f32]>,
     need_dx: bool,
     gbuf: &mut [f32],
     partial: &mut [f32],
@@ -631,6 +669,14 @@ fn conv_bwd_band(
             let urows = src.rows(geom, l, kp1, in_len, j, li0, chunk, prow);
             let vrows = &v_j[li0 * co..(li0 + chunk) * co];
             kern.tn_band(urows, vrows, None, gbuf, 0, kp1, kp1, co, chunk);
+            if let Some(mp) = maps.as_deref_mut() {
+                let mrow = &mut mp[(j - j0) * l..(j - j0 + 1) * l];
+                for ci in 0..chunk {
+                    let u_sq = kern.row_sq(&urows[ci * kp1..(ci + 1) * kp1]);
+                    let v_sq = kern.row_sq(&vrows[ci * co..(ci + 1) * co]);
+                    mrow[li0 + ci] = (u_sq * v_sq) as f32;
+                }
+            }
             li0 += chunk;
         }
         // ---- streamed norm + accumulation --------------------------------
@@ -672,6 +718,14 @@ fn conv_bwd_band(
 /// scalar: it only ever couples to the G form through tolerance tests
 /// (different summation order by construction), and it dispatches only
 /// on small-L geometries where the GEMM tile has nothing to amortize.
+///
+/// Saliency maps here are **free**: the per-position rank-1 norms are
+/// exactly the diagonal products `saa · bbuf[a·L + a]` the Gram sum
+/// already forms (a different accumulation order than the G form's
+/// `row_sq` products, so maps couple to the G form through the same
+/// tolerance band the norms do — see `docs/observability.md`). Maps
+/// require the norm pass (`s = Some`), which every engine backward
+/// provides for weighted layers.
 #[allow(clippy::too_many_arguments)]
 fn conv_bwd_band_gram(
     geom: &ConvGeom,
@@ -684,6 +738,7 @@ fn conv_bwd_band_gram(
     j1: usize,
     mut s: Option<&mut [f32]>,
     mut dx: Option<&mut [f32]>,
+    mut maps: Option<&mut [f32]>,
     need_dx: bool,
     gram: &mut [f32],
     dub: &mut [f32],
@@ -724,6 +779,9 @@ fn conv_bwd_band_gram(
                     saa += v * v;
                 }
                 acc += saa as f64 * bbuf[a * l + a] as f64;
+                if let Some(mp) = maps.as_deref_mut() {
+                    mp[(j - j0) * l + a] = (saa as f64 * bbuf[a * l + a] as f64) as f32;
+                }
                 for b in a + 1..l {
                     let ub = &urows[b * kp1..(b + 1) * kp1];
                     let mut sab = 0f32;
@@ -1161,6 +1219,7 @@ mod tests {
             m,
             Some(&mut s_ser),
             Some(&mut dx_ser),
+            None,
             true,
             &mut gb,
             &mut pb,
@@ -1176,6 +1235,105 @@ mod tests {
         // gradient partial reduction order differs (per-band partials) —
         // tolerance, not bitwise
         prop::assert_all_close(grad_par.data(), grad_ser.data(), 1e-4).unwrap();
+    }
+
+    /// Saliency maps (PR 8): per-position values equal the rank-1
+    /// factorization `||u_p||²·||v_p||²` computed from a fresh unfold,
+    /// bitwise across the implicit and im2col implementations; summed
+    /// over positions they upper-bound nothing and need not match
+    /// `s_j` (cross terms), but each entry must match the oracle.
+    #[test]
+    fn per_position_maps_match_rank1_oracle() {
+        let mut got: Vec<Vec<f32>> = Vec::new();
+        for imp in [ConvImpl::Implicit, ConvImpl::Im2col] {
+            let m = 3;
+            let (mut layer, w, x, delta) = setup(m, imp);
+            layer.enable_maps();
+            assert_eq!(layer.map_len(), layer.l);
+            let mut z = vec![0f32; m * layer.spec.out_len()];
+            layer.forward(Some(&w), x.data(), &mut z, m);
+            let coef = vec![1.0f32; m];
+            let mut grad = Tensor::zeros(vec![layer.kp1, 4]);
+            let mut s = vec![0f32; m];
+            layer.backward(
+                Some(&w),
+                delta.data(),
+                None,
+                None,
+                Some(&mut s),
+                Some(&coef),
+                Some(&mut grad),
+                m,
+            );
+            let (l, kp1, co) = (layer.l, layer.kp1, 4usize);
+            let maps = layer.maps().expect("maps enabled").to_vec();
+            for j in 0..m {
+                let mut ucols = vec![0f32; l * kp1];
+                conv::im2col(
+                    &layer.geom,
+                    &x.data()[j * layer.geom.in_len()..(j + 1) * layer.geom.in_len()],
+                    &mut ucols,
+                    1,
+                );
+                for p in 0..l {
+                    let u_sq: f64 = ucols[p * kp1..(p + 1) * kp1]
+                        .iter()
+                        .map(|&v| v as f64 * v as f64)
+                        .sum();
+                    let v_sq: f64 = delta.data()[(j * l + p) * co..(j * l + p + 1) * co]
+                        .iter()
+                        .map(|&v| v as f64 * v as f64)
+                        .sum();
+                    prop::assert_close(maps[j * l + p] as f64, u_sq * v_sq, 1e-4)
+                        .map_err(|e| format!("{imp:?} example {j} pos {p}: {e}"))
+                        .unwrap();
+                }
+            }
+            got.push(maps);
+        }
+        assert_eq!(got[0], got[1], "maps diverged across implementations");
+    }
+
+    /// Gram-dispatch maps come from the Gram diagonal — not bitwise vs
+    /// the G form, but within the same tolerance band as the norms.
+    #[test]
+    fn gram_maps_match_g_form_within_band() {
+        let spec = LayerSpec::Conv2d {
+            geom: ConvGeom::unit(4, 4, 2, 3),
+            out_ch: 8,
+            act: Activation::Tanh,
+        };
+        let m = 4;
+        let mut rng = Rng::new(17);
+        let w = Tensor::randn(vec![spec.weight_shape().unwrap().0, 8], &mut rng);
+        let x = Tensor::randn(vec![m, spec.in_len()], &mut rng);
+        let delta = Tensor::randn(vec![m, spec.out_len()], &mut rng);
+        let mut layer = ConvLayer::new(spec, m);
+        assert!(layer.uses_gram());
+        layer.enable_maps();
+        let mut z = vec![0f32; m * layer.spec.out_len()];
+        layer.forward(Some(&w), x.data(), &mut z, m);
+        // G-form maps via Mean mode
+        let coef = vec![1.0f32; m];
+        let mut grad = Tensor::zeros(vec![layer.kp1, 8]);
+        let mut s = vec![0f32; m];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            None,
+            None,
+            Some(&mut s),
+            Some(&coef),
+            Some(&mut grad),
+            m,
+        );
+        let g_maps = layer.maps().unwrap()[..m * layer.l].to_vec();
+        // Gram-form maps via the retention path on the same state
+        layer.ensure_retention();
+        let mut s2 = vec![0f32; m];
+        layer.backward(Some(&w), delta.data(), None, None, Some(&mut s2), None, None, m);
+        let gram_maps = layer.maps().unwrap()[..m * layer.l].to_vec();
+        prop::assert_all_close(&gram_maps, &g_maps, 1e-4).unwrap();
     }
 
     /// The implicit path's memory claim, concretely: its live state is

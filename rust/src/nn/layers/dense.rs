@@ -35,6 +35,11 @@ pub struct DenseLayer {
     /// Retained `Zbar` copy for the §6 deferred accumulation
     /// (lazily allocated on the first clip/normalize step).
     retained: Vec<f32>,
+    /// Per-example saliency scalars `[m_max]` (PR 8): dense is the
+    /// `L = 1` case of the per-position maps, so the map entry IS the
+    /// §4 product `z_sq·h_sq` already formed for `s`. Empty = disabled
+    /// (the default) — no extra arithmetic on the off path.
+    maps: Vec<f32>,
 }
 
 impl DenseLayer {
@@ -51,6 +56,7 @@ impl DenseLayer {
             h_sq: vec![0.0; m_max],
             z_sq: vec![0.0; m_max],
             retained: Vec::new(),
+            maps: Vec::new(),
         }
     }
 }
@@ -143,6 +149,14 @@ impl Layer for DenseLayer {
                 *sv = z * h;
             }
         }
+        if !self.maps.is_empty() {
+            for (mv, (&z, &h)) in self.maps[..m]
+                .iter_mut()
+                .zip(self.z_sq[..m].iter().zip(&self.h_sq[..m]))
+            {
+                *mv = z * h;
+            }
+        }
     }
 
     fn accumulate(&mut self, coef: &[f32], grad: &mut Tensor, m: usize) {
@@ -166,7 +180,25 @@ impl Layer for DenseLayer {
     }
 
     fn state_bytes(&self) -> usize {
-        4 * (self.haug.len() + self.h_sq.len() + self.z_sq.len() + self.retained.len())
+        4 * (self.haug.len()
+            + self.h_sq.len()
+            + self.z_sq.len()
+            + self.retained.len()
+            + self.maps.len())
+    }
+
+    fn map_len(&self) -> usize {
+        1
+    }
+
+    fn enable_maps(&mut self) {
+        if self.maps.is_empty() {
+            self.maps = vec![0.0; self.m_max];
+        }
+    }
+
+    fn maps(&self) -> Option<&[f32]> {
+        (!self.maps.is_empty()).then_some(self.maps.as_slice())
     }
 }
 

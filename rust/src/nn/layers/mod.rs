@@ -100,6 +100,13 @@
 //! pool/flatten glue has no parameters and no stream). A
 //! [`crate::telemetry::LayerTap`] attached to the engine therefore sees
 //! conv layers exactly like dense ones, at zero extra traversals.
+//!
+//! PR 8 extends the same stream spatially: with [`Layer::enable_maps`]
+//! a weighted layer's backward also emits the **per-position** rank-1
+//! norms `s_j[p] = ||U_j[p]||²·||V_j[p]||²` (NormGrad saliency maps,
+//! dense = the `L = 1` scalar), consumed by
+//! `telemetry::saliency::SaliencyTap` and the `pegrad audit` pipeline —
+//! schema and zero-overhead contract in `docs/observability.md`.
 
 pub mod conv2d;
 pub mod dense;
@@ -215,6 +222,18 @@ impl LayerSpec {
         }
     }
 
+    /// Saliency-map grid `(h, w)` of a weighted layer (PR 8): conv
+    /// layers resolve per output position (`out_h × out_w`), dense
+    /// layers contribute one coarse per-layer scalar (`1 × 1`); `None`
+    /// for the parameterless glue layers, which emit no maps.
+    pub fn map_shape(&self) -> Option<(usize, usize)> {
+        match self {
+            LayerSpec::Dense { .. } => Some((1, 1)),
+            LayerSpec::Conv2d { geom, .. } => Some((geom.out_h(), geom.out_w())),
+            _ => None,
+        }
+    }
+
     /// The activation applied to this layer's pre-activation output
     /// (`Identity` for the glue layers).
     pub fn activation(&self) -> Activation {
@@ -312,6 +331,26 @@ pub trait Layer: Send {
     /// Allocate the §6 retention buffer (first clip/normalize step
     /// only). No-op for parameterless layers.
     fn ensure_retention(&mut self) {}
+
+    /// Per-example saliency-map length (PR 8): the number of
+    /// per-position entries this layer's backward can emit per example
+    /// — `L` output positions for conv, `1` for dense, `0` (no maps)
+    /// for the parameterless glue. See `docs/observability.md`.
+    fn map_len(&self) -> usize {
+        0
+    }
+
+    /// Lazily allocate map storage; subsequent [`Layer::backward`]
+    /// calls fill it. Default no-op (layers without maps). Off — the
+    /// default — must stay bitwise- and flop-identical, same contract
+    /// as `trace/` (`tests/saliency.rs`).
+    fn enable_maps(&mut self) {}
+
+    /// The maps the last backward filled, row-major
+    /// `[m_max, map_len]`; `None` until [`Layer::enable_maps`].
+    fn maps(&self) -> Option<&[f32]> {
+        None
+    }
 
     /// Bytes of live f32/index state held (the peak-memory metric).
     fn state_bytes(&self) -> usize;

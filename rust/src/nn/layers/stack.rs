@@ -140,6 +140,17 @@ impl StackSpec {
             .collect()
     }
 
+    /// Saliency-map grids `(h, w)` per WEIGHTED layer, in `param_layers`
+    /// order (PR 8): conv layers resolve per output position, dense
+    /// layers are the coarse `1×1` scalar. Indexed by the same `wi` the
+    /// `LayerTap::on_layer`/`on_layer_map` callbacks carry.
+    pub fn map_shapes(&self) -> Vec<(usize, usize)> {
+        self.layers
+            .iter()
+            .filter_map(LayerSpec::map_shape)
+            .collect()
+    }
+
     pub fn param_count(&self) -> usize {
         self.weight_shapes().iter().map(|&(a, b)| a * b).sum()
     }
@@ -406,6 +417,7 @@ mod tests {
         assert_eq!(spec.param_count(), 80 + 73 * 16 + 145 * 10);
         assert!(!spec.is_dense());
         assert!(spec.max_width() >= 800);
+        assert_eq!(spec.map_shapes(), vec![(10, 10), (3, 3), (1, 1)]);
     }
 
     #[test]

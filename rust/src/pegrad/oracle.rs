@@ -75,6 +75,33 @@ impl PerExampleOracle {
         self.solo.grads().to_vec()
     }
 
+    /// Example `j`'s per-position saliency maps, one vector of length
+    /// `map_len(wi)` per weighted layer: conv layers give the NormGrad
+    /// rank-1 grid `s_j[p] = ||u_p||²·||v_p||²` over output positions,
+    /// dense layers the single per-layer scalar `s_j^(l)`. Enables map
+    /// emission on the batch-1 engine on first use (PR 8 — the
+    /// reference `tests/saliency.rs` compares tap maps against).
+    pub fn example_maps(
+        &mut self,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &Targets,
+        j: usize,
+    ) -> Vec<Vec<f32>> {
+        if !self.solo.saliency_enabled() {
+            self.solo.enable_saliency();
+        }
+        self.run_one(params, x, y, j);
+        (0..params.len())
+            .map(|wi| {
+                self.solo
+                    .layer_maps(wi)
+                    .expect("saliency maps enabled above")
+                    .to_vec()
+            })
+            .collect()
+    }
+
     /// All m examples' materialized gradients (`[example][layer]`).
     pub fn all_grads(&mut self, params: &[Tensor], x: &Tensor, y: &Targets) -> Vec<Vec<Tensor>> {
         (0..x.dims()[0])

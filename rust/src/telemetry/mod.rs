@@ -37,6 +37,13 @@
 //!   tracking a target quantile of the running norm distribution
 //!   (`[clip]` config section; [`TeeTap`] fans the engine's single tap
 //!   slot into the monitor and the controller when both are on).
+//! * [`saliency`] — NormGrad-style per-position saliency maps (PR 8): a
+//!   [`saliency::SaliencyTap`] consumes the optional `on_layer_map`
+//!   stream, EMA-accumulates maps for the top-N persistently-flagged
+//!   examples only (bounded memory), streams `saliency.jsonl` lines and
+//!   dumps PGM/CSV maps — the substrate of the `pegrad audit`
+//!   train→prune→retrain pipeline (`[audit]` config section, schema in
+//!   `docs/observability.md`).
 //!
 //! Dependency direction: `engine` and `nn` know only the [`LayerTap`]
 //! trait; everything stateful lives here and is driven by the trainer.
@@ -53,10 +60,12 @@ pub mod diff;
 pub mod gns;
 pub mod monitor;
 pub mod outlier;
+pub mod saliency;
 pub mod sketch;
 
 pub use adaptive::{ClipConfig, ClipController, ClipState};
 pub use diff::{diff_reports, DiffConfig};
+pub use saliency::{AuditConfig, SaliencyTap, SALIENCY_TAG};
 
 /// Identifying tag every telemetry report carries (`"telemetry"` field);
 /// written by [`monitor::TelemetryMonitor::report`], checked by
@@ -64,7 +73,7 @@ pub use diff::{diff_reports, DiffConfig};
 pub const REPORT_TAG: &str = "pegrad.gradient_norms";
 pub use gns::GnsEstimator;
 pub use monitor::TelemetryMonitor;
-pub use outlier::{OutlierConfig, OutlierDetector};
+pub use outlier::{FlagState, OutlierConfig, OutlierDetector};
 pub use sketch::{P2Quantile, P2State, StreamingHistogram};
 
 /// Sink for per-layer squared gradient norms streamed out of a backward
@@ -80,9 +89,19 @@ pub use sketch::{P2Quantile, P2State, StreamingHistogram};
 ///   layer, the §4 factorization `||Zbar_j^(l)||² · ||Haug_j^(l-1)||²`.
 /// * `on_step_end(s_total, per_ex_loss)` fires once after the traversal
 ///   with the per-example totals `s_total[j] = Σ_l s_j^(l)` and losses.
+/// * `on_layer_map(l, map_len, maps)` fires right after `on_layer(l, ..)`
+///   when the engine has saliency maps enabled
+///   ([`crate::engine::FusedEngine::enable_saliency`], PR 8): `maps` is
+///   row-major `[m, map_len]` with `maps[j·map_len + p]` = example j's
+///   per-position rank-1 norm at output position p (`map_len = L` for
+///   conv, `1` for dense). Default: ignore — existing sinks are
+///   unaffected, and with saliency off (the default) it never fires.
 pub trait LayerTap {
     fn on_layer(&mut self, layer: usize, s_layer: &[f32]);
     fn on_step_end(&mut self, s_total: &[f32], per_ex_loss: &[f32]);
+    fn on_layer_map(&mut self, layer: usize, map_len: usize, maps: &[f32]) {
+        let _ = (layer, map_len, maps);
+    }
 }
 
 /// Recording tap for tests and offline analysis: materializes every
@@ -94,6 +113,8 @@ pub struct RecordingTap {
     pub s_total: Vec<f32>,
     pub per_ex_loss: Vec<f32>,
     pub steps_ended: usize,
+    /// `(layer, map_len, maps)` per `on_layer_map` call, stream order.
+    pub maps: Vec<(usize, usize, Vec<f32>)>,
 }
 
 impl LayerTap for RecordingTap {
@@ -105,6 +126,10 @@ impl LayerTap for RecordingTap {
         self.s_total = s_total.to_vec();
         self.per_ex_loss = per_ex_loss.to_vec();
         self.steps_ended += 1;
+    }
+
+    fn on_layer_map(&mut self, layer: usize, map_len: usize, maps: &[f32]) {
+        self.maps.push((layer, map_len, maps.to_vec()));
     }
 }
 
@@ -126,6 +151,11 @@ impl LayerTap for TeeTap<'_> {
     fn on_step_end(&mut self, s_total: &[f32], per_ex_loss: &[f32]) {
         self.first.on_step_end(s_total, per_ex_loss);
         self.second.on_step_end(s_total, per_ex_loss);
+    }
+
+    fn on_layer_map(&mut self, layer: usize, map_len: usize, maps: &[f32]) {
+        self.first.on_layer_map(layer, map_len, maps);
+        self.second.on_layer_map(layer, map_len, maps);
     }
 }
 
@@ -225,10 +255,14 @@ mod tests {
                 second: &mut b,
             };
             tee.on_layer(1, &[1.0, 2.0]);
+            tee.on_layer_map(1, 1, &[1.0, 2.0]);
             tee.on_layer(0, &[3.0, 4.0]);
+            tee.on_layer_map(0, 2, &[1.0, 2.0, 3.0, 4.0]);
             tee.on_step_end(&[4.0, 6.0], &[0.1, 0.2]);
         }
         assert_eq!(a.layers, b.layers);
+        assert_eq!(a.maps, b.maps);
+        assert_eq!(a.maps.len(), 2);
         assert_eq!(a.s_total, b.s_total);
         assert_eq!(a.per_ex_loss, b.per_ex_loss);
         assert_eq!(a.steps_ended, 1);

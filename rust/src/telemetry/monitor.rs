@@ -147,6 +147,12 @@ impl TelemetryMonitor {
         &self.outliers
     }
 
+    /// Mutable detector access — the trainer restores checkpointed
+    /// [`super::FlagState`] flag counts through this (PEGD v3, PR 8).
+    pub fn outliers_mut(&mut self) -> &mut OutlierDetector {
+        &mut self.outliers
+    }
+
     pub fn gns(&self) -> &GnsEstimator {
         &self.gns
     }

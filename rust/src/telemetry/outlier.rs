@@ -42,6 +42,19 @@ impl Default for OutlierConfig {
     }
 }
 
+/// The checkpointable slice of an [`OutlierDetector`] (PEGD v3,
+/// PR 8): the persistent per-example flag counts plus the step/total
+/// counters the audit ranking derives from. The running threshold
+/// statistics (P² sketch, Welford) deliberately re-warm after a
+/// resume — they converge within `warmup_steps`, while a reset flag
+/// history would silently skew a `pegrad audit` ranking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlagState {
+    pub counts: Vec<u32>,
+    pub steps: u64,
+    pub total_flags: u64,
+}
+
 /// Streaming detector with persistent per-example flag counts.
 pub struct OutlierDetector {
     cfg: OutlierConfig,
@@ -140,6 +153,30 @@ impl OutlierDetector {
 
     pub fn last_flagged(&self) -> &[usize] {
         &self.last_flagged
+    }
+
+    /// Snapshot the persistent audit state for a checkpoint
+    /// ([`FlagState`], PEGD v3).
+    pub fn flag_state(&self) -> FlagState {
+        FlagState {
+            counts: self.flag_counts.clone(),
+            steps: self.steps as u64,
+            total_flags: self.total_flags,
+        }
+    }
+
+    /// Restore a checkpointed [`FlagState`]. Counts are copied up to the
+    /// current table size (a resized dataset keeps the overlapping
+    /// prefix); threshold statistics are NOT restored — they re-warm.
+    pub fn restore_flags(&mut self, st: &FlagState) {
+        let n = self.flag_counts.len().min(st.counts.len());
+        self.flag_counts[..n].copy_from_slice(&st.counts[..n]);
+        for c in self.flag_counts[n..].iter_mut() {
+            *c = 0;
+        }
+        self.steps = st.steps as usize;
+        self.total_flags = st.total_flags;
+        self.last_flagged.clear();
     }
 
     /// The `k` most-flagged example indices, `(index, count)`, count
@@ -298,6 +335,37 @@ mod tests {
         assert_eq!(det.flag_count(99), 0);
         assert_eq!(det.total_flags(), 0);
         assert!(det.last_flagged().is_empty());
+    }
+
+    #[test]
+    fn flag_state_roundtrips_and_truncates() {
+        let mut det = OutlierDetector::new(
+            8,
+            OutlierConfig {
+                warmup_steps: 0,
+                ..Default::default()
+            },
+        );
+        for _ in 0..10 {
+            det.observe(&[0, 1, 2], &[1.0, 1.0, 1.0]);
+        }
+        det.observe(&[5], &[1000.0]);
+        let st = det.flag_state();
+        assert_eq!(st.counts[5], 1);
+        assert_eq!(st.steps, 11);
+        assert_eq!(st.total_flags, 1);
+        // restore into a same-size detector: identical ranking state
+        let mut fresh = OutlierDetector::new(8, OutlierConfig::default());
+        fresh.restore_flags(&st);
+        assert_eq!(fresh.flag_state(), st);
+        assert_eq!(fresh.top_flagged(2), det.top_flagged(2));
+        // thresholds re-warm: the restored sketch has no mass yet
+        assert!(fresh.threshold_zscore().is_none());
+        // restore into a smaller table keeps the overlapping prefix
+        let mut small = OutlierDetector::new(4, OutlierConfig::default());
+        small.restore_flags(&st);
+        assert_eq!(small.flag_count(5), 0);
+        assert_eq!(small.flag_state().steps, 11);
     }
 
     #[test]

@@ -1,0 +1,480 @@
+//! NormGrad-style per-position saliency maps + the dataset-audit
+//! pipeline substrate (PR 8).
+//!
+//! NormGrad (Rebuffi et al. 2019, 1910.08823 — PAPERS.md) observes that
+//! the per-position contribution of a conv layer's gradient is rank-1:
+//! position `p` contributes `U_j[p]ᵀ V_j[p]` to `G_j`, so its squared
+//! Frobenius norm factors as `||U_j[p]||²·||V_j[p]||²` — "the pixels
+//! that matter for training". The conv backward already stages both
+//! factors band-locally (Rochette et al. layout), so the maps are a
+//! cheap tap extension: [`crate::nn::layers::Layer::enable_maps`] turns
+//! them on per layer, [`crate::engine::FusedEngine::enable_saliency`]
+//! per engine, and the engine forwards them through the optional
+//! [`LayerTap::on_layer_map`] callback. Off (the default) the training
+//! step is bitwise- and flop-identical — same contract as `trace/`,
+//! proven in `tests/saliency.rs` and gated (<10% on-overhead) by
+//! `benches/e15_saliency.rs`.
+//!
+//! [`SaliencyTap`] is the consuming sink: it stages the current batch's
+//! maps per weighted layer, and after each step EMA-merges the rows of
+//! examples that rank in the [`outlier`](super::outlier) detector's
+//! **top-N persistently-flagged set** — bounded memory (`N` maps of
+//! `Σ_l L_l` floats), no matter how long the run or how large the
+//! dataset. Tracked maps stream as versioned `saliency.jsonl` summary
+//! lines through the PR-7 [`crate::trace::StreamWriter`] and dump as
+//! PGM/CSV files at the end of the run. `pegrad audit` chains this
+//! into train → rank → map → prune → retrain → `audit.json`
+//! (see `cli::commands::cmd_audit` and `docs/observability.md`).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+use super::outlier::OutlierDetector;
+use super::LayerTap;
+
+/// Identifying tag every saliency line carries (`"saliency"` field).
+pub const SALIENCY_TAG: &str = "pegrad.saliency";
+
+/// `saliency.jsonl` line schema version.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Runtime knobs for saliency maps + the audit pipeline (`[audit]`
+/// config section; see `config::schema` and `docs/observability.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditConfig {
+    /// Master switch: enables map emission in the engine and the
+    /// saliency tap/stream in the trainer; `pegrad audit` requires it.
+    pub enabled: bool,
+    /// Steps between `saliency.jsonl` lines (0 = final line only).
+    pub every: usize,
+    /// Tracked flagged examples (the bounded-memory cap).
+    pub top_n: usize,
+    /// EMA smoothing factor in `[0,1)`: `acc = ema·acc + (1-ema)·map`.
+    pub ema: f64,
+    /// Examples pruned before the audit retrain (capped by how many
+    /// examples actually carry flags).
+    pub prune: usize,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        AuditConfig {
+            enabled: false,
+            every: 0,
+            top_n: 16,
+            ema: 0.9,
+            prune: 32,
+        }
+    }
+}
+
+impl AuditConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.top_n < 1 {
+            anyhow::bail!("audit.top_n must be >= 1");
+        }
+        if !(0.0..1.0).contains(&self.ema) {
+            anyhow::bail!("audit.ema must be in [0,1)");
+        }
+        if self.prune < 1 {
+            anyhow::bail!("audit.prune must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// One tracked example's EMA-accumulated map (all weighted layers
+/// concatenated in `param_layers` order).
+struct TrackedMap {
+    map: Vec<f32>,
+    /// EMA merge count (1 = the map is a single step's raw values).
+    updates: u64,
+    /// The example's persistent flag count at the last merge.
+    flags: u32,
+}
+
+/// The saliency sink: stages each step's `on_layer_map` stream and
+/// EMA-accumulates maps for the top-N flagged examples only.
+///
+/// The `LayerTap` callbacks copy into preallocated staging (no
+/// allocation on the hot path); the merge/eviction work happens in
+/// [`SaliencyTap::end_step`], which the trainer calls after the engine
+/// step alongside the monitor's own `end_step`.
+pub struct SaliencyTap {
+    /// Per-weighted-layer map grid `(h, w)` (`StackSpec::map_shapes`).
+    shapes: Vec<(usize, usize)>,
+    /// Flattened per-layer map lengths `h·w` and their offsets into the
+    /// concatenated per-example vector.
+    lens: Vec<usize>,
+    offsets: Vec<usize>,
+    total_len: usize,
+    top_n: usize,
+    ema: f32,
+    /// Current batch staging `[m_max, total_len]`.
+    staged: Vec<f32>,
+    last_m: usize,
+    /// Tracked examples by dataset index (size ≤ `top_n`).
+    tracked: BTreeMap<usize, TrackedMap>,
+    steps: usize,
+}
+
+impl SaliencyTap {
+    pub fn new(shapes: &[(usize, usize)], m_max: usize, cfg: &AuditConfig) -> SaliencyTap {
+        let lens: Vec<usize> = shapes.iter().map(|&(h, w)| h * w).collect();
+        let mut offsets = Vec::with_capacity(lens.len());
+        let mut total = 0usize;
+        for &l in &lens {
+            offsets.push(total);
+            total += l;
+        }
+        SaliencyTap {
+            shapes: shapes.to_vec(),
+            lens,
+            offsets,
+            total_len: total,
+            top_n: cfg.top_n.max(1),
+            ema: cfg.ema as f32,
+            staged: vec![0.0; m_max * total],
+            last_m: 0,
+            tracked: BTreeMap::new(),
+            steps: 0,
+        }
+    }
+
+    /// Merge the staged batch into the tracked set: examples in the
+    /// detector's current top-N flagged ranking are EMA-accumulated,
+    /// everything that fell out of the ranking is evicted (bounded
+    /// memory). Call once per step, after the engine traversal.
+    pub fn end_step(&mut self, indices: &[usize], det: &OutlierDetector) {
+        self.steps += 1;
+        let top = det.top_flagged(self.top_n);
+        if top.is_empty() {
+            return;
+        }
+        self.tracked
+            .retain(|idx, _| top.iter().any(|&(i, _)| i == *idx));
+        for (j, &idx) in indices.iter().enumerate().take(self.last_m) {
+            let Some(&(_, flags)) = top.iter().find(|&&(i, _)| i == idx) else {
+                continue;
+            };
+            let row = &self.staged[j * self.total_len..(j + 1) * self.total_len];
+            let e = self.tracked.entry(idx).or_insert_with(|| TrackedMap {
+                map: vec![0.0; self.total_len],
+                updates: 0,
+                flags: 0,
+            });
+            e.flags = flags;
+            if e.updates == 0 {
+                e.map.copy_from_slice(row);
+            } else {
+                let a = self.ema;
+                for (mv, &rv) in e.map.iter_mut().zip(row) {
+                    *mv = a * *mv + (1.0 - a) * rv;
+                }
+            }
+            e.updates += 1;
+        }
+    }
+
+    /// Number of examples currently tracked (≤ `top_n`).
+    pub fn tracked_count(&self) -> usize {
+        self.tracked.len()
+    }
+
+    /// Tracked `(index, flags)` pairs, flag count descending (index
+    /// ascending on ties) — the audit ranking order.
+    pub fn tracked_ranking(&self) -> Vec<(usize, u32)> {
+        let mut v: Vec<(usize, u32)> = self
+            .tracked
+            .iter()
+            .map(|(&i, e)| (i, e.flags))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// One example's accumulated map segment for weighted layer `wi`.
+    pub fn map_of(&self, index: usize, wi: usize) -> Option<&[f32]> {
+        let e = self.tracked.get(&index)?;
+        Some(&e.map[self.offsets[wi]..self.offsets[wi] + self.lens[wi]])
+    }
+
+    /// Render one versioned `saliency.jsonl` line (schema in
+    /// `docs/observability.md`): layer grid descriptors plus per-tracked-
+    /// example summary statistics. Full maps go to the PGM/CSV dumps,
+    /// not the stream — lines stay O(top_n · n_layers).
+    pub fn render_line(&self, step: usize) -> Json {
+        let layers: Vec<Json> = self
+            .shapes
+            .iter()
+            .enumerate()
+            .map(|(wi, &(h, w))| {
+                Json::obj(vec![
+                    ("layer", Json::num(wi as f64)),
+                    ("h", Json::num(h as f64)),
+                    ("w", Json::num(w as f64)),
+                    ("len", Json::num(self.lens[wi] as f64)),
+                ])
+            })
+            .collect();
+        let examples: Vec<Json> = self
+            .tracked_ranking()
+            .iter()
+            .map(|&(idx, flags)| {
+                let e = &self.tracked[&idx];
+                let per_layer: Vec<Json> = (0..self.shapes.len())
+                    .map(|wi| {
+                        let seg = &e.map[self.offsets[wi]..self.offsets[wi] + self.lens[wi]];
+                        // maps are squared norms: 0 is a safe floor (never
+                        // serialize -inf into the stream)
+                        let (mut mx, mut am, mut sum) = (0f32, 0usize, 0f64);
+                        for (p, &v) in seg.iter().enumerate() {
+                            sum += v as f64;
+                            if v > mx {
+                                mx = v;
+                                am = p;
+                            }
+                        }
+                        Json::obj(vec![
+                            ("layer", Json::num(wi as f64)),
+                            ("mean", Json::num(sum / seg.len().max(1) as f64)),
+                            ("max", Json::num(mx as f64)),
+                            ("argmax", Json::num(am as f64)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("index", Json::num(idx as f64)),
+                    ("flags", Json::num(flags as f64)),
+                    ("updates", Json::num(e.updates as f64)),
+                    ("layers", Json::Arr(per_layer)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("v", Json::num(SCHEMA_VERSION as f64)),
+            ("saliency", Json::str(SALIENCY_TAG)),
+            ("step", Json::num(step as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("top_n", Json::num(self.top_n as f64)),
+            ("tracked", Json::num(self.tracked.len() as f64)),
+            ("layers", Json::Arr(layers)),
+            ("examples", Json::Arr(examples)),
+        ])
+    }
+
+    /// Dump the tracked maps into `<dir>/saliency/`: one `maps.csv`
+    /// with every entry (`example,flags,layer,row,col,value`) plus one
+    /// max-normalized ASCII PGM (`P2`) per tracked example per spatial
+    /// layer (grids larger than 1×1). Returns the written paths in
+    /// deterministic order (CSV first, then PGMs by ranking).
+    pub fn write_maps(&self, dir: &Path) -> Result<Vec<PathBuf>> {
+        let sdir = dir.join("saliency");
+        fs::create_dir_all(&sdir)
+            .with_context(|| format!("creating {}", sdir.display()))?;
+        let mut paths = Vec::new();
+        let ranking = self.tracked_ranking();
+        let mut csv = String::from("example,flags,layer,row,col,value\n");
+        for &(idx, flags) in &ranking {
+            let e = &self.tracked[&idx];
+            for (wi, &(h, w)) in self.shapes.iter().enumerate() {
+                let seg = &e.map[self.offsets[wi]..self.offsets[wi] + self.lens[wi]];
+                for r in 0..h {
+                    for c in 0..w {
+                        csv.push_str(&format!(
+                            "{idx},{flags},{wi},{r},{c},{}\n",
+                            seg[r * w + c]
+                        ));
+                    }
+                }
+            }
+        }
+        let csv_path = sdir.join("maps.csv");
+        fs::write(&csv_path, csv)
+            .with_context(|| format!("writing {}", csv_path.display()))?;
+        paths.push(csv_path);
+        for &(idx, _) in &ranking {
+            let e = &self.tracked[&idx];
+            for (wi, &(h, w)) in self.shapes.iter().enumerate() {
+                if h * w <= 1 {
+                    continue;
+                }
+                let seg = &e.map[self.offsets[wi]..self.offsets[wi] + self.lens[wi]];
+                let mx = seg.iter().fold(0f32, |a, &v| a.max(v));
+                let mut pgm = format!("P2\n{w} {h}\n255\n");
+                for r in 0..h {
+                    for c in 0..w {
+                        let v = if mx > 0.0 {
+                            (seg[r * w + c] / mx * 255.0).round() as u32
+                        } else {
+                            0
+                        };
+                        pgm.push_str(&format!("{v} "));
+                    }
+                    pgm.push('\n');
+                }
+                let p = sdir.join(format!("ex{idx:06}_layer{wi}.pgm"));
+                fs::write(&p, pgm).with_context(|| format!("writing {}", p.display()))?;
+                paths.push(p);
+            }
+        }
+        Ok(paths)
+    }
+}
+
+impl LayerTap for SaliencyTap {
+    fn on_layer(&mut self, _layer: usize, _s_layer: &[f32]) {}
+
+    fn on_step_end(&mut self, s_total: &[f32], _per_ex_loss: &[f32]) {
+        self.last_m = s_total.len();
+    }
+
+    fn on_layer_map(&mut self, layer: usize, map_len: usize, maps: &[f32]) {
+        debug_assert_eq!(map_len, self.lens[layer]);
+        let m = maps.len() / map_len.max(1);
+        self.last_m = m;
+        let off = self.offsets[layer];
+        for j in 0..m {
+            self.staged[j * self.total_len + off..j * self.total_len + off + map_len]
+                .copy_from_slice(&maps[j * map_len..(j + 1) * map_len]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::outlier::{FlagState, OutlierConfig};
+    use super::*;
+
+    /// Detector with deterministic flag counts, seeded through the
+    /// checkpoint-restore path so the tests don't depend on threshold
+    /// dynamics.
+    fn flagged_detector(n: usize, hot: &[(usize, u32)]) -> OutlierDetector {
+        let mut det = OutlierDetector::new(n, OutlierConfig::default());
+        let mut counts = vec![0u32; n];
+        let mut total = 0u64;
+        for &(idx, c) in hot {
+            counts[idx] = c;
+            total += c as u64;
+        }
+        det.restore_flags(&FlagState {
+            counts,
+            steps: 10,
+            total_flags: total,
+        });
+        det
+    }
+
+    fn tap_2layer(top_n: usize, ema: f64) -> SaliencyTap {
+        SaliencyTap::new(
+            &[(2, 2), (1, 1)],
+            4,
+            &AuditConfig {
+                enabled: true,
+                top_n,
+                ema,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn tracks_only_top_flagged_with_bounded_memory() {
+        let det = flagged_detector(16, &[(3, 3), (7, 2), (11, 1)]);
+        let mut tap = tap_2layer(2, 0.0);
+        // batch of 4 examples: maps for layer 0 (len 4) and layer 1 (len 1)
+        let l0: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let l1 = [100.0, 101.0, 102.0, 103.0];
+        tap.on_layer_map(1, 1, &l1);
+        tap.on_layer_map(0, 4, &l0);
+        tap.end_step(&[3, 7, 11, 0], &det);
+        // top_n = 2 keeps only the 2 most-flagged (3 then 7); 11 and the
+        // unflagged 0 are not tracked
+        assert_eq!(tap.tracked_count(), 2);
+        assert_eq!(
+            tap.tracked_ranking().iter().map(|t| t.0).collect::<Vec<_>>(),
+            vec![3, 7]
+        );
+        assert_eq!(tap.map_of(3, 0).unwrap(), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(tap.map_of(3, 1).unwrap(), &[100.0]);
+        assert_eq!(tap.map_of(7, 0).unwrap(), &[4.0, 5.0, 6.0, 7.0]);
+        assert!(tap.map_of(11, 0).is_none());
+    }
+
+    #[test]
+    fn ema_merges_and_first_update_copies() {
+        let det = flagged_detector(8, &[(2, 1)]);
+        let mut tap = tap_2layer(1, 0.5);
+        tap.on_layer_map(0, 4, &[8.0, 8.0, 8.0, 8.0]);
+        tap.on_layer_map(1, 1, &[1.0]);
+        tap.end_step(&[2], &det);
+        assert_eq!(tap.map_of(2, 0).unwrap(), &[8.0; 4]);
+        tap.on_layer_map(0, 4, &[0.0, 0.0, 0.0, 0.0]);
+        tap.on_layer_map(1, 1, &[3.0]);
+        tap.end_step(&[2], &det);
+        // 0.5·8 + 0.5·0 = 4
+        assert_eq!(tap.map_of(2, 0).unwrap(), &[4.0; 4]);
+        assert_eq!(tap.map_of(2, 1).unwrap(), &[2.0]);
+    }
+
+    #[test]
+    fn line_schema_and_map_dumps() {
+        let det = flagged_detector(8, &[(5, 1)]);
+        let mut tap = tap_2layer(4, 0.9);
+        tap.on_layer_map(0, 4, &[1.0, 2.0, 3.0, 4.0]);
+        tap.on_layer_map(1, 1, &[9.0]);
+        tap.end_step(&[5], &det);
+        let j = tap.render_line(17);
+        assert_eq!(j.get("v").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("saliency").unwrap().as_str().unwrap(), SALIENCY_TAG);
+        assert_eq!(j.get("step").unwrap().as_usize().unwrap(), 17);
+        assert_eq!(j.get("tracked").unwrap().as_usize().unwrap(), 1);
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].get("len").unwrap().as_usize().unwrap(), 4);
+        let ex = &j.get("examples").unwrap().as_arr().unwrap()[0];
+        assert_eq!(ex.get("index").unwrap().as_usize().unwrap(), 5);
+        let exl = ex.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(exl[0].get("argmax").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(exl[0].get("max").unwrap().as_f64().unwrap(), 4.0);
+        // the line must parse back through the JSONL reader's parser
+        let text = j.to_string();
+        assert!(Json::parse(&text).is_ok(), "line must round-trip: {text}");
+
+        let dir = std::env::temp_dir().join(format!("pegrad-sal-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let paths = tap.write_maps(&dir).unwrap();
+        // CSV + one PGM (layer 0 is 2x2; layer 1 is 1x1 → no PGM)
+        assert_eq!(paths.len(), 2);
+        assert!(paths[0].ends_with("saliency/maps.csv"));
+        let pgm = fs::read_to_string(&paths[1]).unwrap();
+        assert!(pgm.starts_with("P2\n2 2\n255\n"), "{pgm}");
+        assert!(pgm.contains("255"), "max must normalize to 255: {pgm}");
+        let csv = fs::read_to_string(&paths[0]).unwrap();
+        assert!(csv.starts_with("example,flags,layer,row,col,value\n"));
+        assert!(csv.contains("5,"), "tracked example rows present");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn audit_config_validation() {
+        AuditConfig::default().validate().unwrap();
+        let mut c = AuditConfig {
+            top_n: 0,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+        c.top_n = 4;
+        c.ema = 1.0;
+        assert!(c.validate().is_err());
+        c.ema = 0.5;
+        c.prune = 0;
+        assert!(c.validate().is_err());
+    }
+}

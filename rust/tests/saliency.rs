@@ -1,0 +1,413 @@
+//! Saliency-tap + dataset-audit acceptance (ISSUE 8):
+//!
+//! * maps OFF (the default) is bitwise- and flop-identical to a run that
+//!   never heard of saliency — the observability contract from ISSUE 7
+//!   extended to the per-position taps;
+//! * maps ON: the tap's per-position maps equal the materialized
+//!   batch-1 oracle bitwise in Mean mode (both sides run the same
+//!   G-form arithmetic per example), and the §6 Gram-diagonal maps
+//!   agree with the G-form maps to tolerance (documented band — the
+//!   two forms are numerically, not bitwise, equivalent);
+//! * the `pegrad audit` pipeline end to end at tiny sizes: versioned
+//!   `saliency.jsonl`, PGM/CSV map dumps, pruned retrain and the
+//!   `audit.json` quality-delta artifact;
+//! * persistent outlier flag counts survive a checkpoint round trip
+//!   (PEGD v3 — satellite of this PR).
+//!
+//! The flop counter is process-global; tests touching it serialize on
+//! one lock, same as `tests/trace.rs` / `tests/conv_stack.rs`.
+
+use pegrad::config::{Config, DataKind, RunMode};
+use pegrad::coordinator::{Checkpoint, Trainer};
+use pegrad::engine::{EngineMode, FusedEngine};
+use pegrad::nn::layers::StackSpec;
+use pegrad::nn::loss::Targets;
+use pegrad::nn::Loss;
+use pegrad::pegrad::oracle::PerExampleOracle;
+use pegrad::telemetry::RecordingTap;
+use pegrad::tensor::{Rng, Tensor};
+use pegrad::util::{prop, Json, JsonlReader};
+
+static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cnn_stack(m: usize) -> StackSpec {
+    StackSpec::parse(
+        "input 8x8x1, conv 4 k3 relu, pool 2, conv 6 k2 relu, flatten, dense 5",
+        Loss::SoftmaxCe,
+        m,
+    )
+    .unwrap()
+}
+
+/// The conv2 geometry (L² = 81 < K·c_out = 96) dispatches the
+/// Gram-trick norm form — and therefore the Gram-diagonal maps — in
+/// the §6 modes.
+fn gram_stack(m: usize) -> StackSpec {
+    StackSpec::parse(
+        "input 8x8x1, conv 4 k3 s2 p1 tanh, conv 6 k2 tanh, avgpool 3, flatten, dense 3",
+        Loss::SoftmaxCe,
+        m,
+    )
+    .unwrap()
+}
+
+fn batch(stack: &StackSpec, m: usize, seed: u64) -> (Vec<Tensor>, Tensor, Targets) {
+    let mut rng = Rng::new(seed);
+    let params = stack.init_params(&mut rng);
+    let x = Tensor::randn(vec![m, stack.in_len()], &mut rng);
+    let y = Targets::Classes((0..m).map(|j| (j % stack.out_len()) as i32).collect());
+    (params, x, y)
+}
+
+/// The zero-overhead contract: with saliency OFF (the default), a
+/// tapped step costs exactly the same matmul/im2col flops and produces
+/// bitwise-identical gradients as a plain step — and turning maps ON
+/// adds zero *counted* flops too (the map arithmetic rides the bands
+/// already in registers; the <10% wall-clock bound is the bench's job).
+#[test]
+fn saliency_off_is_bitwise_and_flop_identical() {
+    let _g = guard();
+    let m = 8;
+    let stack = cnn_stack(m);
+    let (params, x, y) = batch(&stack, m, 0xE15);
+    for mode in [
+        EngineMode::Mean,
+        EngineMode::Clip { c: 0.5, mean: true },
+        EngineMode::Normalize { target: 1.0 },
+    ] {
+        let mut plain = FusedEngine::from_stack(stack.clone());
+        pegrad::nn::reset_flops();
+        plain.step(&params, &x, &y, mode);
+        let flops_plain = pegrad::nn::read_flops();
+        let want_grads: Vec<Tensor> = plain.grads().to_vec();
+
+        // maps off: tap attached, saliency never enabled
+        let mut off = FusedEngine::from_stack(stack.clone());
+        assert!(!off.saliency_enabled());
+        let mut tap = RecordingTap::default();
+        pegrad::nn::reset_flops();
+        off.step_streamed(&params, &x, &y, mode, None, Some(&mut tap));
+        assert_eq!(
+            pegrad::nn::read_flops(),
+            flops_plain,
+            "{mode:?}: maps-off tap changed the flop count"
+        );
+        assert!(tap.maps.is_empty(), "{mode:?}: maps emitted while disabled");
+        assert!(off.layer_maps(0).is_none(), "{mode:?}: map buffers exist while off");
+        for (a, b) in want_grads.iter().zip(off.grads()) {
+            assert_eq!(a.data(), b.data(), "{mode:?}: maps-off grads diverged");
+        }
+
+        // maps on: grads still bitwise, counted flops still identical
+        let mut on = FusedEngine::from_stack(stack.clone());
+        on.enable_saliency();
+        let mut tap = RecordingTap::default();
+        pegrad::nn::reset_flops();
+        on.step_streamed(&params, &x, &y, mode, None, Some(&mut tap));
+        assert_eq!(
+            pegrad::nn::read_flops(),
+            flops_plain,
+            "{mode:?}: maps-on emission added counted flops"
+        );
+        assert!(!tap.maps.is_empty(), "{mode:?}: no maps emitted while enabled");
+        for (a, b) in want_grads.iter().zip(on.grads()) {
+            assert_eq!(a.data(), b.data(), "{mode:?}: maps-on grads diverged");
+        }
+    }
+}
+
+/// Mean-mode acceptance: the tap's per-position maps equal the
+/// materialized batch-1 oracle BITWISE — engine and oracle run the same
+/// per-example G-form arithmetic, just like the streamed norms they
+/// refine. Also pins the map geometry to `StackSpec::map_shapes` and
+/// the dense scalar to the streamed per-layer norm.
+#[test]
+fn tap_maps_match_per_position_oracle_bitwise() {
+    let _g = guard();
+    let m = 6;
+    let stack = cnn_stack(m);
+    let (params, x, y) = batch(&stack, m, 0x5A1);
+    let shapes = stack.map_shapes();
+    assert_eq!(shapes, vec![(6, 6), (2, 2), (1, 1)]);
+
+    let mut engine = FusedEngine::from_stack(stack.clone());
+    engine.enable_saliency();
+    let mut tap = RecordingTap::default();
+    engine.step_streamed(&params, &x, &y, EngineMode::Mean, None, Some(&mut tap));
+    let streamed = engine.per_example_norms();
+
+    // tap delivery mirrors the engine buffers exactly
+    assert_eq!(tap.maps.len(), 3, "one on_layer_map per weighted layer");
+    for &(wi, map_len, ref maps) in &tap.maps {
+        assert_eq!(map_len, shapes[wi].0 * shapes[wi].1);
+        assert_eq!(maps.len(), m * map_len);
+        assert_eq!(engine.layer_maps(wi).unwrap(), &maps[..]);
+    }
+
+    let mut oracle = PerExampleOracle::new(&stack);
+    for j in 0..m {
+        let want = oracle.example_maps(&params, &x, &y, j);
+        for &(wi, map_len, ref maps) in &tap.maps {
+            assert_eq!(
+                &maps[j * map_len..(j + 1) * map_len],
+                &want[wi][..],
+                "example {j} layer {wi}: tap map must equal the batch-1 oracle bitwise"
+            );
+            // maps are squared norms: nonnegative everywhere
+            assert!(want[wi].iter().all(|&v| v >= 0.0));
+        }
+        // the dense map IS the per-layer scalar the norm stream carries
+        let dense = tap.maps.iter().find(|t| t.0 == 2).unwrap();
+        assert_eq!(dense.2[j], streamed.s_layers[j][2]);
+    }
+}
+
+/// §6 band: on a Gram-dispatching geometry the Clip-mode maps (Gram
+/// diagonal, f32 scalar sums) agree with the Mean-mode maps (G-form,
+/// f64 row squares) to the documented tolerance — numerically, not
+/// bitwise, equivalent, same as the norms they decompose.
+#[test]
+fn gram_maps_agree_with_g_form_within_band() {
+    let _g = guard();
+    let m = 5;
+    let stack = gram_stack(m);
+    let (params, x, y) = batch(&stack, m, 0x6A4);
+
+    let mut g_form = FusedEngine::from_stack(stack.clone());
+    g_form.enable_saliency();
+    g_form.step(&params, &x, &y, EngineMode::Mean);
+
+    let mut gram = FusedEngine::from_stack(stack.clone());
+    gram.enable_saliency();
+    // c high enough that nothing clips: identical effective gradients,
+    // only the norm/map form differs
+    gram.step(&params, &x, &y, EngineMode::Clip { c: 1e6, mean: true });
+
+    for wi in 0..2 {
+        let a = g_form.layer_maps(wi).unwrap();
+        let b = gram.layer_maps(wi).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (p, (&av, &bv)) in a.iter().zip(b).enumerate() {
+            prop::assert_close(av as f64, bv as f64, 1e-3)
+                .map_err(|e| format!("layer {wi} flat position {p}: {e}"))
+                .unwrap();
+        }
+    }
+}
+
+fn audit_cfg_toml(dir: &std::path::Path, run_name: &str) -> String {
+    format!(
+        r#"
+run_name = "{run_name}"
+mode = "rust_pegrad"
+steps = 60
+lr = 0.05
+eval_every = 0
+out_dir = "{}"
+
+[model]
+stack = "input 12x12x1, conv 8 k3 relu, pool 2, conv 16 k3 relu, flatten, dense 10"
+loss = "softmax_ce"
+m = 16
+
+[data]
+kind = "digits"
+n = 256
+
+[telemetry]
+enabled = true
+every = 20
+warmup_steps = 5
+outlier_quantile = 0.75
+
+[audit]
+enabled = true
+every = 20
+top_n = 8
+ema = 0.9
+prune = 16
+"#,
+        dir.display()
+    )
+}
+
+/// The full `pegrad audit` pipeline at tiny sizes: phase-1 instrumented
+/// training emits a versioned `saliency.jsonl` stream and PGM/CSV map
+/// dumps, phase 2 retrains on the pruned set, and `audit.json` lands
+/// with both evals, the delta, and every artifact path.
+#[test]
+fn audit_cli_pipeline_end_to_end() {
+    let _g = guard();
+    let dir = std::env::temp_dir().join(format!("pegrad-audit-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("audit.toml");
+    std::fs::write(&cfg_path, audit_cfg_toml(&dir, "audit-e2e")).unwrap();
+
+    pegrad::cli::commands::run(vec![
+        "audit".into(),
+        "--config".into(),
+        cfg_path.to_string_lossy().into_owned(),
+    ])
+    .unwrap();
+
+    let run_dir = dir.join("audit-e2e");
+
+    // --- saliency.jsonl: versioned, tagged, schema-consistent ---------
+    let stream = run_dir.join("saliency.jsonl");
+    assert!(stream.exists(), "missing {}", stream.display());
+    let lines: Vec<Json> = JsonlReader::open(&stream)
+        .unwrap()
+        .collect::<Result<Vec<_>, _>>()
+        .unwrap();
+    // 60 steps, every=20 -> records at 20 and 40, plus the final line
+    assert!(lines.len() >= 2, "expected periodic + final records, got {}", lines.len());
+    for j in &lines {
+        assert_eq!(j.get("v").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("saliency").unwrap().as_str(), Some("pegrad.saliency"));
+        assert!(j.get("step").unwrap().as_usize().is_some());
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 3, "conv, conv, dense map descriptors");
+        // digits stack: conv1 10x10, conv2 3x3, dense 1x1
+        let dims: Vec<(usize, usize)> = layers
+            .iter()
+            .map(|l| {
+                (
+                    l.get("h").unwrap().as_usize().unwrap(),
+                    l.get("w").unwrap().as_usize().unwrap(),
+                )
+            })
+            .collect();
+        assert_eq!(dims, vec![(10, 10), (3, 3), (1, 1)]);
+        let tracked = j.get("tracked").unwrap().as_usize().unwrap();
+        let examples = j.get("examples").unwrap().as_arr().unwrap();
+        assert_eq!(examples.len(), tracked);
+        for e in examples {
+            assert!(e.get("index").unwrap().as_usize().is_some());
+            assert!(e.get("flags").unwrap().as_usize().unwrap() >= 1);
+            let per_layer = e.get("layers").unwrap().as_arr().unwrap();
+            assert_eq!(per_layer.len(), 3);
+            for l in per_layer {
+                let mean = l.get("mean").unwrap().as_f64().unwrap();
+                let max = l.get("max").unwrap().as_f64().unwrap();
+                assert!(mean >= 0.0 && max >= 0.0 && mean <= max + 1e-12);
+                assert!(l.get("argmax").unwrap().as_usize().is_some());
+            }
+        }
+    }
+    // by the end of 60 steps with a 0.75 outlier quantile the tap MUST
+    // be tracking someone — otherwise the pipeline silently audited
+    // nothing
+    let final_tracked = lines.last().unwrap().get("tracked").unwrap().as_usize().unwrap();
+    assert!(final_tracked >= 1, "no examples tracked after 60 steps");
+
+    // --- map dumps ----------------------------------------------------
+    let csv = run_dir.join("saliency").join("maps.csv");
+    assert!(csv.exists(), "missing {}", csv.display());
+    let text = std::fs::read_to_string(&csv).unwrap();
+    assert!(text.starts_with("example,flags,layer,row,col,value"));
+    assert!(text.lines().count() > 1, "CSV has a header but no map rows");
+    let pgms = std::fs::read_dir(run_dir.join("saliency"))
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().path().extension().map(|x| x == "pgm").unwrap_or(false)
+        })
+        .count();
+    assert!(pgms >= 1, "tracked examples but no PGM maps dumped");
+
+    // --- audit.json ---------------------------------------------------
+    let audit_path = run_dir.join("audit.json");
+    assert!(audit_path.exists(), "missing {}", audit_path.display());
+    let audit = Json::parse(&std::fs::read_to_string(&audit_path).unwrap()).unwrap();
+    assert_eq!(audit.get("v").unwrap().as_usize(), Some(1));
+    assert_eq!(audit.get("audit").unwrap().as_str(), Some("pegrad.audit"));
+    for phase in ["baseline", "retrained"] {
+        let loss = audit.get(phase).unwrap().get("loss").unwrap().as_f64().unwrap();
+        assert!(loss.is_finite(), "{phase} loss not finite");
+    }
+    assert!(audit.get("delta").unwrap().get("loss").unwrap().as_f64().is_some());
+    let pruned = audit.get("pruned").unwrap().as_arr().unwrap();
+    assert!(!pruned.is_empty() && pruned.len() <= 16);
+    assert_eq!(
+        pruned.len(),
+        audit.get("flags").unwrap().as_arr().unwrap().len()
+    );
+    let maps = audit.get("maps").unwrap().as_arr().unwrap();
+    assert!(!maps.is_empty(), "audit.json lists no map files");
+    for m in maps {
+        assert!(
+            std::path::Path::new(m.as_str().unwrap()).exists(),
+            "audit.json references a missing map file"
+        );
+    }
+    let stream_str = stream.to_string_lossy().into_owned();
+    assert_eq!(
+        audit.get("streams").unwrap().get("saliency").unwrap().as_str(),
+        Some(stream_str.as_str())
+    );
+    // phase 2 ran to completion in its own run dir
+    assert!(dir.join("audit-e2e-retrain").exists());
+
+    // --- monitor --follow renders saliency records without choking ----
+    pegrad::cli::commands::run(vec![
+        "monitor".into(),
+        "--follow".into(),
+        stream.to_string_lossy().into_owned(),
+        "--idle-exit".into(),
+        "0.2".into(),
+    ])
+    .unwrap();
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: persistent outlier flag counts ride the PEGD v3
+/// checkpoint — a restored monitor resumes ranking from the saved
+/// counts instead of re-warming from zero.
+#[test]
+fn checkpoint_roundtrips_outlier_flag_counts() {
+    let _g = guard();
+    let mut cfg = Config::default();
+    cfg.run_name = "saliency-ckpt".into();
+    cfg.mode = RunMode::RustPegrad;
+    cfg.steps = 40;
+    cfg.data = DataKind::Synth;
+    cfg.data_n = 512;
+    cfg.eval_every = 0;
+    cfg.checkpoint_every = 0;
+    cfg.model_dims = vec![16, 32, 10];
+    cfg.model_activation = "relu".into();
+    cfg.model_loss = "softmax_ce".into();
+    cfg.model_m = 16;
+    cfg.telemetry.enabled = true;
+    cfg.telemetry.warmup_steps = 5;
+    cfg.telemetry.outlier_quantile = 0.75;
+    cfg.out_dir = std::env::temp_dir()
+        .join(format!("pegrad-saliency-ckpt-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let mut tr = Trainer::new(cfg.clone()).unwrap();
+    tr.run().unwrap();
+    let want = tr.telemetry().unwrap().outliers().flag_state();
+    assert!(want.total_flags > 0, "no flags accrued — test can't prove the roundtrip");
+    tr.save_checkpoint().unwrap();
+    let ck_path = tr.metrics.dir().join("ckpt-000040.bin");
+    let ck = Checkpoint::load(&ck_path).unwrap();
+    let saved = ck.flags.clone().expect("telemetry run checkpoints flag counts");
+    assert_eq!(saved.counts, want.counts);
+    assert_eq!(saved.steps, want.steps);
+    assert_eq!(saved.total_flags, want.total_flags);
+
+    let mut cfg2 = cfg;
+    cfg2.run_name = "saliency-ckpt-resumed".into();
+    let mut tr2 = Trainer::new(cfg2).unwrap();
+    tr2.restore(ck).unwrap();
+    let restored = tr2.telemetry().unwrap().outliers();
+    assert_eq!(restored.total_flags(), want.total_flags);
+    assert_eq!(restored.flag_state().counts, want.counts);
+    let _ = std::fs::remove_dir_all(tr.metrics.dir().parent().unwrap());
+}
