@@ -1,0 +1,197 @@
+//! E12: serving throughput — N identical training runs scheduled by the
+//! `pegrad serve` daemon over the ONE shared scoped-dispatch threadpool,
+//! vs the same work executed serially.
+//!
+//! The serving pitch (ISSUE 9) is that a fleet of small runs should
+//! *overlap*: while one run is between pool dispatches (batch gather,
+//! optimizer update, status bookkeeping) another run's step fills the
+//! idle workers. Acceptance gate (enforced by `scripts/perf_gate` in CI
+//! as the 7th artifact): at N = 4 the aggregate steps/sec is ≥ 2× the
+//! serial single-run rate, and the concurrent p99 step latency stays
+//! ≤ 3× the serial p50 — throughput must not be bought with unbounded
+//! per-step tail latency.
+//!
+//! Before timing, determinism is asserted: every concurrently-scheduled
+//! run produces a loss curve bitwise identical to the serial reference —
+//! sharing the pool perturbs scheduling, never arithmetic.
+//!
+//! All inputs come from fixed seeds — the numbers are commit-independent
+//! apart from the code under test. Emits `BENCH_service.json`.
+
+use pegrad::config::{Config, DataKind, RunMode};
+use pegrad::serve::{RunSpec, ServeOptions, Server};
+use pegrad::util::{Json, Timer};
+
+const DIMS: [usize; 3] = [32, 48, 10];
+const M: usize = 32;
+
+/// The fleet member: a small dense run that leaves pool workers idle
+/// between dispatches — the headroom concurrent scheduling reclaims.
+fn run_cfg(name: &str, out: &str, steps: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.run_name = name.into();
+    cfg.mode = RunMode::RustPegrad;
+    cfg.model_dims = DIMS.to_vec();
+    cfg.model_m = M;
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.checkpoint_every = 0;
+    cfg.data = DataKind::Synth;
+    cfg.data_n = 256;
+    cfg.out_dir = out.into();
+    cfg
+}
+
+fn tmp_out(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("pegrad-e12-{}-{tag}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Percentile over a sorted slice (nearest-rank).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+#[derive(Clone)]
+struct FleetResult {
+    wall_s: f64,
+    aggregate_steps_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    curves: Vec<Vec<(usize, f32)>>,
+}
+
+/// Run an N-run fleet of identical configs through the daemon and
+/// collect aggregate throughput plus the pooled step-latency quantiles.
+fn run_fleet(n: usize, steps: usize, tag: &str) -> anyhow::Result<FleetResult> {
+    let out = tmp_out(tag);
+    let _ = std::fs::remove_dir_all(&out);
+    let mut server = Server::new(ServeOptions {
+        name: format!("e12-{tag}"),
+        out_dir: out.clone(),
+        max_concurrent: n,
+        status_every_ms: 200,
+        ..ServeOptions::default()
+    })?;
+    for i in 0..n {
+        server.enqueue(RunSpec::new(run_cfg(&format!("w{i}"), &out, steps)));
+    }
+    let timer = Timer::start();
+    let report = server.run()?;
+    let wall_s = timer.secs();
+    anyhow::ensure!(
+        report.completed() == n && report.failed() == 0,
+        "fleet n={n}: {} completed, {} failed",
+        report.completed(),
+        report.failed()
+    );
+    let mut lat: Vec<f64> = report.runs.iter().flat_map(|r| r.step_ms.iter().copied()).collect();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let curves = report
+        .runs
+        .iter()
+        .map(|r| r.summary.as_ref().expect("completed run summary").curve.clone())
+        .collect();
+    let _ = std::fs::remove_dir_all(&out);
+    Ok(FleetResult {
+        wall_s,
+        aggregate_steps_per_sec: (n * steps) as f64 / wall_s,
+        p50_ms: pct(&lat, 0.50),
+        p99_ms: pct(&lat, 0.99),
+        curves,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    pegrad::util::logging::init_with(log::LevelFilter::Warn);
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 80 } else { 400 };
+
+    let mut table = pegrad::bench::Table::new(
+        "E12 — serve fleet throughput (N identical runs)",
+        &["n_runs", "wall_s", "agg steps/s", "p50 ms", "p99 ms", "speedup"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    // serial reference first: its rate anchors the speedup, its p50
+    // anchors the tail-latency bound, its curve anchors determinism
+    let serial = run_fleet(1, steps, "n1")?;
+    let mut speedup_n4 = f64::NAN;
+    let mut p99_over_serial_p50 = f64::NAN;
+    let mut deterministic = true;
+
+    for n in [1usize, 2, 4] {
+        let res = if n == 1 {
+            serial.clone()
+        } else {
+            run_fleet(n, steps, &format!("n{n}"))?
+        };
+        // determinism: every fleet member's loss curve is bitwise equal
+        // to the serial reference run
+        for curve in &res.curves {
+            if curve.len() != serial.curves[0].len()
+                || curve
+                    .iter()
+                    .zip(&serial.curves[0])
+                    .any(|(a, b)| a.0 != b.0 || a.1.to_bits() != b.1.to_bits())
+            {
+                deterministic = false;
+            }
+        }
+        let speedup = res.aggregate_steps_per_sec / serial.aggregate_steps_per_sec;
+        if n == 4 {
+            speedup_n4 = speedup;
+            p99_over_serial_p50 = res.p99_ms / serial.p50_ms;
+        }
+        table.row(vec![
+            n.to_string(),
+            format!("{:.2}", res.wall_s),
+            format!("{:.0}", res.aggregate_steps_per_sec),
+            format!("{:.3}", res.p50_ms),
+            format!("{:.3}", res.p99_ms),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("n_runs", Json::num(n as f64)),
+            ("steps_per_run", Json::num(steps as f64)),
+            ("wall_s", Json::num(res.wall_s)),
+            ("aggregate_steps_per_sec", Json::num(res.aggregate_steps_per_sec)),
+            ("step_p50_ms", Json::num(res.p50_ms)),
+            ("step_p99_ms", Json::num(res.p99_ms)),
+            ("speedup_vs_serial", Json::num(speedup)),
+        ]));
+    }
+
+    let gate = speedup_n4 >= 2.0 && p99_over_serial_p50 <= 3.0 && deterministic;
+    table.emit(Some(&pegrad::bench::workspace_path(
+        "bench_results/e12_service.csv",
+    )));
+    let summary = Json::obj(vec![
+        ("bench", Json::str("e12_service")),
+        ("model_dims", Json::arr_usize(&DIMS)),
+        ("m", Json::num(M as f64)),
+        ("quick", Json::Bool(quick)),
+        ("speedup_n4", Json::num(speedup_n4)),
+        ("p99_over_serial_p50", Json::num(p99_over_serial_p50)),
+        ("deterministic", Json::Bool(deterministic)),
+        ("service_gate", Json::Bool(gate)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out = pegrad::bench::workspace_path("BENCH_service.json");
+    std::fs::write(&out, format!("{summary}\n"))?;
+    println!("(summary saved to {})", out.display());
+    if !gate {
+        println!(
+            "WARNING: service gate failed on this host \
+             (speedup_n4={speedup_n4:.2}, p99/p50={p99_over_serial_p50:.2}, \
+             deterministic={deterministic})."
+        );
+    }
+    Ok(())
+}

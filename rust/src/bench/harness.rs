@@ -12,6 +12,7 @@ pub struct BenchSpec {
     pub measure_secs: f64,
     /// hard bounds on sample count.
     pub min_samples: usize,
+    /// Hard upper bound on sample count.
     pub max_samples: usize,
 }
 
@@ -41,15 +42,19 @@ impl BenchSpec {
 /// One benchmark's outcome (times in seconds per iteration).
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Per-iteration timing summary (seconds).
     pub summary: Summary,
 }
 
 impl BenchResult {
+    /// Mean iteration time in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.summary.mean * 1e3
     }
 
+    /// Median iteration time in milliseconds.
     pub fn p50_ms(&self) -> f64 {
         self.summary.p50 * 1e3
     }

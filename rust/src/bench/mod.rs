@@ -1,5 +1,7 @@
 //! Criterion-replacement micro/macro benchmark harness (DESIGN.md §6) and
 //! the report emitters the E1-E7 benches share.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod harness;
 pub mod report;

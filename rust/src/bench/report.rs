@@ -6,12 +6,16 @@ use std::fmt::Write as _;
 /// A simple column-aligned table that renders to markdown and CSV.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Table title.
     pub title: String,
+    /// Column headers.
     pub columns: Vec<String>,
+    /// Row cells, aligned with `columns`.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, columns: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -20,11 +24,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the column count).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.columns.len(), "row arity");
         self.rows.push(cells);
     }
 
+    /// Render as a GitHub-flavored markdown table.
     pub fn to_markdown(&self) -> String {
         let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
         for row in &self.rows {
@@ -51,6 +57,7 @@ impl Table {
         out
     }
 
+    /// Render as CSV (title excluded).
     pub fn to_csv(&self) -> String {
         let mut out = self.columns.join(",");
         out.push('\n');

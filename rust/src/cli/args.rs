@@ -8,14 +8,18 @@ use anyhow::{anyhow, bail, Result};
 /// Declaration of one accepted option.
 #[derive(Debug, Clone)]
 pub struct ArgSpec {
+    /// Long flag name (without the `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
     /// switches take no value
     pub is_switch: bool,
+    /// Default value, shown in help and used when absent.
     pub default: Option<&'static str>,
 }
 
 impl ArgSpec {
+    /// A value-taking option with no default.
     pub fn opt(name: &'static str, help: &'static str) -> ArgSpec {
         ArgSpec {
             name,
@@ -25,6 +29,7 @@ impl ArgSpec {
         }
     }
 
+    /// A value-taking option with a default.
     pub fn with_default(
         name: &'static str,
         help: &'static str,
@@ -38,6 +43,7 @@ impl ArgSpec {
         }
     }
 
+    /// A boolean switch (present or not, takes no value).
     pub fn switch(name: &'static str, help: &'static str) -> ArgSpec {
         ArgSpec {
             name,
@@ -51,18 +57,23 @@ impl ArgSpec {
 /// Parse outcome.
 #[derive(Debug, Clone, Default)]
 pub struct Parsed {
+    /// Option values by flag name (defaults filled in).
     pub values: BTreeMap<String, String>,
+    /// Switches that were present.
     pub switches: Vec<String>,
+    /// Arguments that were not flags, in order.
     pub positionals: Vec<String>,
     /// `--set k=v` accumulations, in order.
     pub overrides: Vec<(String, String)>,
 }
 
 impl Parsed {
+    /// The value of option `name`, if set or defaulted.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// [`Parsed::get`] parsed as `usize` (errors on a bad value).
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
         self.get(name)
             .map(|v| {
@@ -72,6 +83,7 @@ impl Parsed {
             .transpose()
     }
 
+    /// [`Parsed::get`] parsed as `f64` (errors on a bad value).
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
         self.get(name)
             .map(|v| {
@@ -81,6 +93,7 @@ impl Parsed {
             .transpose()
     }
 
+    /// Whether a switch was present.
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }

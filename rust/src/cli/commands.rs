@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! pegrad train      --config cfg.toml [--set k=v ...]   train a model
+//! pegrad serve      --fleet fleet.toml [--spool DIR]    concurrent multi-run daemon
 //! pegrad monitor    --config cfg.toml [--steps 200]     train + stream gradient-norm telemetry
 //! pegrad audit      --config cfg.toml [--prune 64]      train -> rank -> map -> prune -> retrain
 //! pegrad norms      --preset tiny [--n 256]             per-example norms -> jsonl
@@ -25,6 +26,7 @@ use crate::util::Json;
 
 use super::args::{help, parse, ArgSpec, Parsed};
 
+/// Top-level usage text listing every subcommand.
 pub fn usage() -> String {
     "pegrad — Efficient Per-Example Gradient Computations (Goodfellow, 2015)\n\
      \n\
@@ -34,6 +36,11 @@ pub fn usage() -> String {
      \x20 train        run a training loop (per-example norms on the hot path);\n\
      \x20              mode rust_pegrad|rust_clipped|rust_normalized runs the\n\
      \x20              pure-rust fused engine — no artifacts or PJRT needed\n\
+     \x20 serve        concurrent multi-run daemon (rust modes only): schedule\n\
+     \x20              a fleet of configs and/or watch a spool dir, N runs at\n\
+     \x20              a time over the shared threadpool, live serve.jsonl\n\
+     \x20              status stream, graceful shutdown checkpoints every\n\
+     \x20              active run for bitwise resume\n\
      \x20 monitor      train with streaming gradient-norm telemetry: per-layer\n\
      \x20              histograms/quantiles, outlier flags, gradient noise\n\
      \x20              scale — emitted as a JSON report (rust modes only);\n\
@@ -53,6 +60,7 @@ pub fn usage() -> String {
         .to_string()
 }
 
+/// Dispatch `argv` to a subcommand (the `main` entry point).
 pub fn run(argv: Vec<String>) -> Result<()> {
     let Some(cmd) = argv.first().cloned() else {
         println!("{}", usage());
@@ -61,6 +69,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     let rest = argv[1..].to_vec();
     match cmd.as_str() {
         "train" => cmd_train(&rest),
+        "serve" => cmd_serve(&rest),
         "monitor" => cmd_monitor(&rest),
         "audit" => cmd_audit(&rest),
         "norms" => cmd_norms(&rest),
@@ -118,6 +127,110 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             .map(|e| format!("  ε = {e:.3}"))
             .unwrap_or_default(),
     );
+    Ok(())
+}
+
+/// `pegrad serve`: the concurrent multi-run training daemon (rust-engine
+/// modes only; operations guide in docs/serving.md).
+///
+/// Work comes from a fleet spec (`--fleet`, a TOML listing scenario
+/// configs + `[serve]` options) and/or a spool directory (`--spool`,
+/// scanned for dropped config TOMLs while the daemon runs). At most
+/// `--max-concurrent` runs step at once, each on its own driver thread
+/// with its own engine/workspace arena, sharing the one scoped-dispatch
+/// threadpool. A `serve.jsonl` status stream (schema in docs/streams.md)
+/// lands in the session directory — tail it live with
+/// `pegrad monitor --follow`. Shutdown (fleet drained, `--max-seconds`,
+/// or a failed sibling is NOT one — failures are contained) checkpoints
+/// every active run at a clean step boundary for bitwise resume.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        ArgSpec::opt(
+            "fleet",
+            "fleet spec TOML: [serve] options + [fleet] configs (docs/serving.md)",
+        ),
+        ArgSpec::opt(
+            "spool",
+            "watch this directory for dropped run-config TOMLs (*.toml)",
+        ),
+        ArgSpec::opt("name", "serve session name; serve.jsonl lands in out_dir/name"),
+        ArgSpec::opt("out-dir", "parent directory for the session and run dirs"),
+        ArgSpec::opt("max-concurrent", "how many runs step at once"),
+        ArgSpec::opt("status-every-ms", "serve.jsonl status cadence"),
+        ArgSpec::opt(
+            "max-seconds",
+            "graceful-shutdown deadline (default: serve until drained / forever with --spool)",
+        ),
+        ArgSpec::switch("help", "show options"),
+    ];
+    let p = parse(argv, &specs)?;
+    if p.has("help") {
+        println!("pegrad serve options:\n{}", help(&specs));
+        return Ok(());
+    }
+    let (fleet, mut opts) = match p.get("fleet") {
+        Some(path) => crate::serve::Fleet::from_file(std::path::Path::new(path), &p.overrides)?,
+        None => (
+            crate::serve::Fleet::default(),
+            crate::serve::ServeOptions {
+                overrides: p.overrides.clone(),
+                ..crate::serve::ServeOptions::default()
+            },
+        ),
+    };
+    // CLI flags override the fleet spec's [serve] section
+    if let Some(v) = p.get("name") {
+        opts.name = v.to_string();
+    }
+    if let Some(v) = p.get("out-dir") {
+        opts.out_dir = v.to_string();
+    }
+    if let Some(v) = p.get_usize("max-concurrent")? {
+        opts.max_concurrent = v;
+    }
+    if let Some(v) = p.get_usize("status-every-ms")? {
+        opts.status_every_ms = v as u64;
+    }
+    if let Some(v) = p.get_f64("max-seconds")? {
+        opts.max_seconds = Some(v);
+    }
+    if let Some(v) = p.get("spool") {
+        opts.spool = Some(std::path::PathBuf::from(v));
+    }
+    if fleet.specs.is_empty() && opts.spool.is_none() {
+        bail!("pegrad serve needs work: pass --fleet <spec.toml> and/or --spool <dir>");
+    }
+    let mut server = crate::serve::Server::new(opts)?;
+    server.enqueue_fleet(fleet);
+    let report = server.run()?;
+    println!(
+        "serve done in {:.2}s: {} completed, {} interrupted, {} failed, {} skipped\n\
+         status stream: {}",
+        report.elapsed_secs,
+        report.completed(),
+        report.interrupted(),
+        report.failed(),
+        report.skipped.len(),
+        report.status_path.display(),
+    );
+    for r in &report.runs {
+        if r.state == crate::serve::RunState::Interrupted {
+            if let Some(ck) = &r.checkpoint {
+                println!(
+                    "resume '{}' with: pegrad train --config <its config> --resume {}",
+                    r.name,
+                    ck.display()
+                );
+            }
+        }
+    }
+    if report.failed() > 0 {
+        bail!(
+            "{} run(s) failed; see {}",
+            report.failed(),
+            report.status_path.display()
+        );
+    }
     Ok(())
 }
 
@@ -321,6 +434,51 @@ fn render_stream_line(j: &Json) -> String {
             fmt(num(j, &["step_ms", "p99"])),
             fmt(num(j, &["pool", "utilization"])),
             num(j, &["reports_dropped"]).unwrap_or(0.0),
+        )
+    } else if j.get("serve").and_then(Json::as_str) == Some(crate::serve::SERVE_TAG) {
+        let runs = j
+            .get("runs")
+            .and_then(Json::as_arr)
+            .map(|v| {
+                v.iter()
+                    .take(4)
+                    .filter_map(|r| {
+                        let name = r.get("run")?.as_str()?;
+                        let state = r.get("state")?.as_str()?;
+                        Some(if state == "running" {
+                            format!(
+                                "{name} {:.0}/{:.0} ({:.1}/s)",
+                                r.get("step").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                                r.get("steps_total")
+                                    .and_then(Json::as_f64)
+                                    .unwrap_or(f64::NAN),
+                                r.get("steps_per_sec")
+                                    .and_then(Json::as_f64)
+                                    .unwrap_or(0.0),
+                            )
+                        } else {
+                            format!("{name} {state}")
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            })
+            .unwrap_or_default();
+        format!(
+            "serve #{:.0}: {:.0} active, {:.0} queued, {:.0} completed, \
+             {:.0} interrupted, {:.0} failed, pool {:.0}%{}",
+            num(j, &["seq"]).unwrap_or(f64::NAN),
+            num(j, &["active"]).unwrap_or(0.0),
+            num(j, &["queue_depth"]).unwrap_or(0.0),
+            num(j, &["completed"]).unwrap_or(0.0),
+            num(j, &["interrupted"]).unwrap_or(0.0),
+            num(j, &["failed"]).unwrap_or(0.0),
+            num(j, &["pool", "utilization"]).unwrap_or(0.0) * 100.0,
+            if runs.is_empty() {
+                String::new()
+            } else {
+                format!(" — {runs}")
+            },
         )
     } else if j.get("saliency").and_then(Json::as_str)
         == Some(crate::telemetry::SALIENCY_TAG)

@@ -1,5 +1,7 @@
 //! Command-line interface (hand-rolled; `clap` is not vendored —
 //! DESIGN.md §6).
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod args;
 pub mod commands;

@@ -1,4 +1,6 @@
 //! Typed run configuration: schema, TOML-subset parser, presets.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod parse;
 pub mod schema;

@@ -19,14 +19,20 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Result};
 
 #[derive(Debug, Clone, PartialEq)]
+/// A parsed TOML-subset value.
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// A number.
     Num(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// An array of values.
     List(Vec<Value>),
 }
 
 impl Value {
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -34,6 +40,7 @@ impl Value {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -41,12 +48,14 @@ impl Value {
         }
     }
 
+    /// The value as `usize`, if this is a non-negative integral number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             (n >= 0.0 && n.fract() == 0.0).then_some(n as usize)
         })
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -54,9 +63,22 @@ impl Value {
         }
     }
 
+    /// The value as a `usize` list, if this is an all-integral array.
     pub fn as_usize_list(&self) -> Option<Vec<usize>> {
         match self {
             Value::List(v) => v.iter().map(Value::as_usize).collect(),
+            _ => None,
+        }
+    }
+
+    /// The value as a list of strings, `None` otherwise (used by the
+    /// serve fleet spec's `configs = ["a.toml", ...]`).
+    pub fn as_str_list(&self) -> Option<Vec<String>> {
+        match self {
+            Value::List(v) => v
+                .iter()
+                .map(|x| x.as_str().map(str::to_string))
+                .collect(),
             _ => None,
         }
     }
@@ -211,5 +233,15 @@ mod tests {
         let m = parse_toml("a = []\nb = -2.5").unwrap();
         assert_eq!(m["a"], Value::List(vec![]));
         assert_eq!(m["b"], Value::Num(-2.5));
+    }
+
+    #[test]
+    fn string_lists() {
+        let m = parse_toml(r#"configs = ["a.toml", "b.toml"]"#).unwrap();
+        assert_eq!(
+            m["configs"].as_str_list().unwrap(),
+            vec!["a.toml".to_string(), "b.toml".to_string()]
+        );
+        assert!(parse_toml("x = [1, 2]").unwrap()["x"].as_str_list().is_none());
     }
 }

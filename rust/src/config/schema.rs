@@ -33,6 +33,8 @@ pub enum RunMode {
 }
 
 impl RunMode {
+    /// Parse the TOML/CLI spelling (`"vanilla"`, `"rust_pegrad"`, …);
+    /// `None` for an unknown mode.
     pub fn parse(s: &str) -> Option<RunMode> {
         Some(match s {
             "vanilla" => RunMode::Vanilla,
@@ -46,6 +48,7 @@ impl RunMode {
         })
     }
 
+    /// The canonical spelling [`RunMode::parse`] accepts.
     pub fn name(&self) -> &'static str {
         match self {
             RunMode::Vanilla => "vanilla",
@@ -68,61 +71,100 @@ impl RunMode {
     }
 }
 
+/// How the data loader picks minibatch rows (`[sampler]` section).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SamplerKind {
+    /// Uniform with replacement.
     Uniform,
+    /// Gradient-norm importance sampling (paper §1 application) with
+    /// unbiased `1/(n·p_j)` reweighting.
     Importance,
 }
 
+/// Which dataset generator to use (`[data] kind`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DataKind {
+    /// Procedural Gaussian-cluster classification set (`data::synth`).
     Synth,
+    /// Rendered 12×12 digit glyph rasters (`data::digits`).
     Digits,
+    /// Synthetic linear-teacher regression set (`data::regression`).
     Regression,
 }
 
+/// Which optimizer updates the parameters (`[optim] kind`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OptimKind {
+    /// Plain SGD.
     Sgd,
+    /// SGD with momentum.
     Momentum,
+    /// Adam.
     Adam,
 }
 
+/// `[privacy]` section: the §6 DP-SGD parameters, required by the
+/// clipped modes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PrivacyConfig {
+    /// Per-example gradient-norm clip bound `C`.
     pub clip_c: f32,
+    /// Gaussian noise multiplier σ (noise stddev = `σ·C`; 0 = no noise).
     pub noise_sigma: f32,
+    /// Target δ for the RDP accountant's `(ε, δ)` report.
     pub delta: f64,
 }
 
 /// Complete training-run configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Run name; doubles as the run directory name under `out_dir`.
     pub run_name: String,
+    /// AOT artifact preset name (artifact modes only).
     pub preset: String,
+    /// What the trainer does each step.
     pub mode: RunMode,
+    /// Training steps to run.
     pub steps: usize,
+    /// Master seed for data generation, init and selection RNG streams.
     pub seed: u64,
+    /// Learning-rate schedule (`lr = x` is shorthand for constant).
     pub schedule: Schedule,
+    /// Minibatch row selection strategy (`[sampler] kind`).
     pub sampler: SamplerKind,
+    /// Importance-sampler floor: minimum per-example probability mass
+    /// as a fraction of uniform, in `[0, 1)`.
     pub sampler_floor: f32,
+    /// EMA decay for the importance sampler's norm estimates.
     pub sampler_lambda: f32,
+    /// Which dataset generator to use.
     pub data: DataKind,
+    /// Dataset size (training split).
     pub data_n: usize,
+    /// Class-imbalance factor in `(0, 1]` (1 = balanced).
     pub imbalance: f32,
+    /// Fraction of training labels randomly corrupted, in `[0, 1]`.
     pub label_noise: f32,
+    /// Which optimizer updates the parameters.
     pub optim: OptimKind,
+    /// §6 DP parameters; required when `mode` is a clipped variant.
     pub privacy: Option<PrivacyConfig>,
+    /// Steps between held-out evaluations (0 = final eval only).
     pub eval_every: usize,
+    /// Steps between checkpoints (0 = none).
     pub checkpoint_every: usize,
+    /// Parent directory for run directories.
     pub out_dir: String,
+    /// Directory holding the AOT artifact manifest (artifact modes).
     pub artifacts_dir: String,
     /// depth of the gather-prefetch queue (0 = synchronous).
     pub prefetch_depth: usize,
     /// `[model]` section: the network the rust-engine modes build directly
     /// (artifact modes take their model from the manifest preset instead).
     pub model_dims: Vec<usize>,
+    /// Hidden-layer activation for dense `model.dims` models.
     pub model_activation: String,
+    /// Loss name (`"softmax_ce"`, `"mse"`).
     pub model_loss: String,
     /// minibatch size for the rust-engine modes.
     pub model_m: usize,
@@ -195,6 +237,9 @@ impl Default for Config {
 }
 
 impl Config {
+    /// Reject invalid or inconsistent settings with a pointed message —
+    /// every construction path (`from_toml`, overrides, the serve fleet
+    /// loader) funnels through this before a trainer is built.
     pub fn validate(&self) -> Result<()> {
         if self.steps == 0 {
             bail!("steps must be > 0");
@@ -320,6 +365,7 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Read and parse a TOML config file ([`Config::from_toml`]).
     pub fn from_file(path: &Path) -> Result<Config> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;

@@ -38,11 +38,17 @@ use crate::tensor::{Rng, Tensor};
 const MAGIC: &[u8; 4] = b"PEGD";
 const VERSION: u32 = 3;
 
+/// Everything needed to resume a run bitwise: saved on step boundaries
+/// before any RNG lookahead (PEGD binary format, version-checked).
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
+    /// Step count completed when the checkpoint was taken.
     pub step: u64,
+    /// Training RNG state at the step boundary.
     pub rng_state: [u64; 4],
+    /// Model parameters, in layer order.
     pub params: Vec<Tensor>,
+    /// Optimizer state tensors (empty for plain SGD).
     pub opt_state: Vec<Tensor>,
     /// Adaptive-clip controller dynamics; `None` on fixed-`C` runs and
     /// when loading a v1 file.
@@ -53,6 +59,7 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Checkpoint of the core training state (no clip/flag extensions).
     pub fn new(step: u64, rng: &Rng, params: Vec<Tensor>, opt_state: Vec<Tensor>) -> Self {
         Checkpoint {
             step,
@@ -76,43 +83,53 @@ impl Checkpoint {
         self
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            fs::create_dir_all(dir)?;
+    /// Serialize to the on-disk byte format. This is the hot-path half
+    /// of an asynchronous save: rendering is pure memory work, so a
+    /// trainer can serialize inline and hand the bytes to the
+    /// [`trace::BlobWriter`](crate::trace::BlobWriter) thread, which
+    /// owns the disk (write-temp-then-rename, exactly like
+    /// [`Checkpoint::save`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out: Vec<u8> = Vec::new();
+        self.write_into(&mut out)
+            .expect("serializing a checkpoint into memory cannot fail");
+        out
+    }
+
+    fn write_into<W: Write>(&self, f: &mut W) -> Result<()> {
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+        for s in self.rng_state {
+            f.write_all(&s.to_le_bytes())?;
         }
-        // write to a temp file then rename: a crash mid-write must not
-        // destroy the previous checkpoint
-        let tmp = path.with_extension("tmp");
-        {
-            let mut f = fs::File::create(&tmp)?;
-            f.write_all(MAGIC)?;
-            f.write_all(&VERSION.to_le_bytes())?;
-            f.write_all(&self.step.to_le_bytes())?;
-            for s in self.rng_state {
-                f.write_all(&s.to_le_bytes())?;
+        write_tensors(f, &self.params)?;
+        write_tensors(f, &self.opt_state)?;
+        match &self.clip {
+            None => f.write_all(&0u32.to_le_bytes())?,
+            Some(cs) => {
+                f.write_all(&1u32.to_le_bytes())?;
+                write_clip(f, cs)?;
             }
-            write_tensors(&mut f, &self.params)?;
-            write_tensors(&mut f, &self.opt_state)?;
-            match &self.clip {
-                None => f.write_all(&0u32.to_le_bytes())?,
-                Some(cs) => {
-                    f.write_all(&1u32.to_le_bytes())?;
-                    write_clip(&mut f, cs)?;
-                }
-            }
-            match &self.flags {
-                None => f.write_all(&0u32.to_le_bytes())?,
-                Some(fs) => {
-                    f.write_all(&1u32.to_le_bytes())?;
-                    write_flags(&mut f, fs)?;
-                }
-            }
-            f.sync_all()?;
         }
-        fs::rename(&tmp, path)?;
+        match &self.flags {
+            None => f.write_all(&0u32.to_le_bytes())?,
+            Some(fl) => {
+                f.write_all(&1u32.to_le_bytes())?;
+                write_flags(f, fl)?;
+            }
+        }
         Ok(())
     }
 
+    /// Synchronous save: serialize, then write-temp-and-rename (a crash
+    /// mid-write must not destroy the previous checkpoint).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::trace::writer::write_blob_atomic(path, &self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load and validate a PEGD file (v1–v3 accepted).
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let mut f =
             fs::File::open(path).map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
@@ -160,12 +177,13 @@ impl Checkpoint {
         })
     }
 
+    /// Reconstruct the training RNG from the saved state.
     pub fn rng(&self) -> Rng {
         Rng::from_state(self.rng_state)
     }
 }
 
-fn write_tensors(f: &mut fs::File, ts: &[Tensor]) -> Result<()> {
+fn write_tensors<W: Write>(f: &mut W, ts: &[Tensor]) -> Result<()> {
     f.write_all(&(ts.len() as u32).to_le_bytes())?;
     for t in ts {
         f.write_all(&(t.rank() as u32).to_le_bytes())?;
@@ -210,7 +228,7 @@ fn read_tensors(f: &mut fs::File) -> Result<Vec<Tensor>> {
     Ok(out)
 }
 
-fn write_clip(f: &mut fs::File, cs: &ClipState) -> Result<()> {
+fn write_clip<W: Write>(f: &mut W, cs: &ClipState) -> Result<()> {
     f.write_all(&cs.sketch.p.to_le_bytes())?;
     for arr in [&cs.sketch.q, &cs.sketch.n, &cs.sketch.np] {
         for v in arr {
@@ -248,7 +266,7 @@ fn read_clip(f: &mut fs::File) -> Result<ClipState> {
     })
 }
 
-fn write_flags(f: &mut fs::File, fs: &FlagState) -> Result<()> {
+fn write_flags<W: Write>(f: &mut W, fs: &FlagState) -> Result<()> {
     f.write_all(&(fs.counts.len() as u32).to_le_bytes())?;
     for &c in &fs.counts {
         f.write_all(&c.to_le_bytes())?;
@@ -420,6 +438,17 @@ mod tests {
         assert_eq!(back.step, 23);
         assert!(back.clip.is_none());
         assert!(back.flags.is_none(), "v2 file must load with flags = None");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn to_bytes_matches_the_file_save_writes() {
+        let mut rng = Rng::new(4);
+        let params = vec![Tensor::randn(vec![2, 3], &mut rng)];
+        let ck = Checkpoint::new(7, &rng, params, vec![]);
+        let path = tmpfile("bytes");
+        ck.save(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), ck.to_bytes());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -12,14 +12,21 @@ use crate::util::Json;
 /// One training step's measurements.
 #[derive(Debug, Clone)]
 pub struct StepRecord {
+    /// Step index (0-based).
     pub step: usize,
+    /// Minibatch training loss.
     pub loss: f32,
+    /// Learning rate used for this step.
     pub lr: f32,
     /// mean per-example gradient norm (sqrt of s), if computed this step.
     pub mean_norm: Option<f32>,
+    /// Largest per-example gradient norm in the batch, if computed.
     pub max_norm: Option<f32>,
+    /// Fraction of examples clipped this step, if clipping ran.
     pub clip_frac: Option<f32>,
+    /// Cumulative privacy spend after this step, if DP accounting is on.
     pub epsilon: Option<f64>,
+    /// Wall-clock step latency in milliseconds.
     pub step_ms: f64,
 }
 
@@ -52,12 +59,15 @@ pub struct MetricsLogger {
     dir: PathBuf,
     jsonl: Option<fs::File>,
     csv: Option<fs::File>,
+    /// Running loss statistics over every recorded step.
     pub loss_stats: Welford,
+    /// Running step-latency statistics (ms) over every recorded step.
     pub time_stats: Welford,
     console_every: usize,
 }
 
 impl MetricsLogger {
+    /// Create `<out_dir>/<run_name>/` and open `metrics.jsonl` + `metrics.csv`.
     pub fn new(out_dir: &str, run_name: &str, console_every: usize) -> Result<MetricsLogger> {
         let dir = Path::new(out_dir).join(run_name);
         fs::create_dir_all(&dir)?;
@@ -89,10 +99,13 @@ impl MetricsLogger {
         }
     }
 
+    /// The run directory the metrics files live in.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// Record one step: update stats, append the JSONL + CSV rows, and
+    /// print a console line every `console_every` steps.
     pub fn record(&mut self, r: &StepRecord) {
         self.loss_stats.push(r.loss as f64);
         self.time_stats.push(r.step_ms);

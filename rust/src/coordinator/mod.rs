@@ -1,11 +1,16 @@
 //! The L3 training coordinator: the loop that ties sampler → runtime →
 //! optimizer → norm feedback together, with metrics and checkpoints.
+//! (System map: `docs/architecture.md`.)
 //!
 //! Threading model (PJRT wrappers are not `Send` — see
 //! [`crate::runtime::client`]): all artifact execution happens on the
 //! thread that owns the [`Trainer`]; the batch GATHER is overlapped via
 //! the bounded-channel prefetcher in [`crate::data::loader`]. Sampling
 //! itself stays inline because it feeds back on executed norms.
+//! A run's in-flight resources (streams, prefetcher, checkpoint
+//! writer) live in a per-run [`trainer::RunSession`] arena, so many
+//! trainers can step concurrently on their own threads — the `serve`
+//! scheduler's substrate.
 
 pub mod checkpoint;
 pub mod metrics;
@@ -13,4 +18,4 @@ pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use metrics::{MetricsLogger, StepRecord};
-pub use trainer::{RunSummary, Trainer};
+pub use trainer::{RunSession, RunSummary, Trainer};

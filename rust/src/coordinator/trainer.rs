@@ -24,20 +24,26 @@ use crate::privacy::RdpAccountant;
 use crate::runtime::executable::{fetch_f32, Arg, Entry};
 use crate::runtime::{Manifest, Registry};
 use crate::sampler::{
-    ImportanceConfig, ImportanceSampler, Sampler, UniformSampler,
+    Batch, ImportanceConfig, ImportanceSampler, Sampler, UniformSampler,
 };
 use crate::telemetry::{ClipController, LayerTap, SaliencyTap, TeeTap, TelemetryMonitor};
 use crate::tensor::{ops, Rng, Tensor};
-use crate::util::threadpool::bounded;
+use crate::trace::{BlobWriter, StreamWriter};
+use crate::util::threadpool::{bounded, BoundedSender};
 use crate::util::Timer;
 
 /// Final numbers a run reports (EXPERIMENTS.md rows come from this).
 #[derive(Debug, Clone)]
 pub struct RunSummary {
+    /// Steps completed.
     pub steps: usize,
+    /// Training loss of the last step.
     pub final_loss: f32,
+    /// Final eval-set loss, if an eval ran.
     pub eval_loss: Option<f32>,
+    /// Final eval-set accuracy (classification runs only).
     pub eval_accuracy: Option<f32>,
+    /// Mean wall-clock step latency in milliseconds.
     pub mean_step_ms: f64,
     /// (step, train loss) every step — the loss curve.
     pub curve: Vec<(usize, f32)>,
@@ -50,6 +56,7 @@ pub struct RunSummary {
 /// Owns everything a run needs. Single-threaded w.r.t. PJRT (see module
 /// docs); the gather prefetcher is the only helper thread.
 pub struct Trainer {
+    /// The validated run configuration.
     pub cfg: Config,
     /// The model as a heterogeneous layer stack — the shape source of
     /// truth for every mode (dense models map onto dense-only stacks).
@@ -88,6 +95,7 @@ pub struct Trainer {
     /// Saliency map dump paths from the end of the last `run()`
     /// (`[audit]` runs only; `pegrad audit` records them in audit.json).
     pub saliency_maps: Vec<std::path::PathBuf>,
+    /// Metrics sink (`metrics.jsonl` + `.csv`, or a null logger).
     pub metrics: MetricsLogger,
     step: usize,
     /// L3-vs-L2 step-time breakdown, filled when `PEGRAD_PROFILE=1`
@@ -98,14 +106,20 @@ pub struct Trainer {
 /// Accumulated per-phase wall time across a run (seconds).
 #[derive(Debug, Clone, Default)]
 pub struct Profile {
+    /// Seconds spent uploading host buffers to the device.
     pub upload: f64,
+    /// Seconds spent inside the step computation.
     pub execute: f64,
+    /// Seconds spent fetching results back to the host.
     pub fetch: f64,
+    /// Seconds spent sampling indices and gathering the batch.
     pub sample_gather: f64,
+    /// Steps the breakdown covers.
     pub steps: u64,
 }
 
 impl Profile {
+    /// One-line percentage breakdown for the log.
     pub fn report(&self) -> String {
         let total = self.upload + self.execute + self.fetch + self.sample_gather;
         let pct = |x: f64| 100.0 * x / total.max(1e-12);
@@ -121,7 +135,60 @@ impl Profile {
     }
 }
 
+/// Everything a run holds OPEN while it trains: JSONL stream writers,
+/// the gather-prefetch pipeline, the trace recorder, the asynchronous
+/// checkpoint writer, and the loss curve. Created by
+/// [`Trainer::begin_session`], advanced one step at a time by
+/// [`Trainer::step_session`], consumed by [`Trainer::finish_session`].
+///
+/// [`Trainer::run`] drives these three for the one-shot CLI; the
+/// `serve` scheduler drives them directly so it can interleave many
+/// concurrent runs over the shared threadpool and stop any of them at
+/// a clean step boundary (graceful shutdown). Every resource here is
+/// per-run — two sessions on two threads share nothing but the global
+/// threadpool and the process-wide trace counters.
+pub struct RunSession {
+    entry: Option<std::rc::Rc<Entry>>,
+    fwd_entry: Option<std::rc::Rc<Entry>>,
+    total: Timer,
+    tracing: bool,
+    recorder: Option<crate::trace::Recorder>,
+    trace_writer: Option<StreamWriter>,
+    telemetry_writer: Option<StreamWriter>,
+    saliency_writer: Option<StreamWriter>,
+    /// Periodic checkpoints render on the hot path (memory-bound) and
+    /// land on disk via this writer thread — the step loop never waits
+    /// on checkpoint I/O.
+    ckpt_writer: Option<BlobWriter>,
+    sel_tx: Option<BoundedSender<(usize, Batch)>>,
+    prefetcher: Option<Prefetcher>,
+    pending: Option<PreparedBatch>,
+    curve: Vec<(usize, f32)>,
+    end_step: usize,
+    stopped: bool,
+}
+
+impl RunSession {
+    /// The step index this session runs to (exclusive).
+    pub fn end_step(&self) -> usize {
+        self.end_step
+    }
+
+    /// Steps executed so far in THIS session.
+    pub fn steps_executed(&self) -> usize {
+        self.curve.len()
+    }
+
+    /// True once an early `stop` completed: the session executed its
+    /// final step and only [`Trainer::finish_session`] remains.
+    pub fn stopped(&self) -> bool {
+        self.stopped
+    }
+}
+
 impl Trainer {
+    /// Build a trainer from a validated config: datasets, model, engine
+    /// or runtime, sampler, optimizer and telemetry taps.
     pub fn new(cfg: Config) -> Result<Trainer> {
         cfg.validate()?;
         let (registry, dense_spec, stack) = if cfg.mode.is_rust_engine() {
@@ -421,7 +488,24 @@ impl Trainer {
     }
 
     /// Run the configured number of steps; returns the summary.
+    ///
+    /// Thin wrapper over the session API — open a [`RunSession`], step
+    /// it to exhaustion, finish it. The `serve` scheduler calls the
+    /// same three pieces directly so it can interleave many concurrent
+    /// runs and stop any of them at a clean step boundary.
     pub fn run(&mut self) -> Result<RunSummary> {
+        let mut session = self.begin_session()?;
+        while self.step_session(&mut session, false)? {}
+        self.finish_session(session)
+    }
+
+    /// Open a training session: resolve artifact entries, start the
+    /// per-run stream writers and the asynchronous checkpoint writer,
+    /// spin up the gather-prefetch pipeline and prime it with the
+    /// first selection. Every resource lands in the returned
+    /// [`RunSession`]; nothing global is touched except the process
+    /// trace toggle (when `[trace] enabled`).
+    pub fn begin_session(&mut self) -> Result<RunSession> {
         let (entry, fwd_entry) = if self.cfg.mode.is_rust_engine() {
             (None, None)
         } else {
@@ -441,7 +525,7 @@ impl Trainer {
         if tracing {
             crate::trace::set_enabled(true);
         }
-        let mut recorder = tracing.then(|| {
+        let recorder = tracing.then(|| {
             crate::trace::Recorder::new(&self.cfg.trace, crate::util::threadpool::bands())
         });
         let trace_writer = tracing
@@ -489,6 +573,13 @@ impl Trainer {
                 }
             })
             .flatten();
+        // checkpoint I/O off the hot path (ISSUE 9): the step loop
+        // renders checkpoint bytes inline (memory-bound) and enqueues
+        // them; the blob-writer thread owns the temp-write + rename.
+        // Cap 2 — at most one in flight and one queued; on a stalled
+        // disk newer snapshots drop (counted) and the previous
+        // checkpoint on disk stays valid.
+        let ckpt_writer = (self.cfg.checkpoint_every > 0).then(|| BlobWriter::spawn(2));
 
         // gather-prefetch pipeline (selection inline, gather overlapped)
         let depth = self.cfg.prefetch_depth;
@@ -502,7 +593,7 @@ impl Trainer {
 
         // prime the pipeline with the first selection
         let first_sel = self.sampler.sample(m, &mut self.rng);
-        let mut pending: Option<PreparedBatch> = match (&sel_tx, &prefetcher) {
+        let pending: Option<PreparedBatch> = match (&sel_tx, &prefetcher) {
             (Some(tx), Some(pf)) => {
                 tx.send((self.step, first_sel))
                     .map_err(|_| anyhow!("prefetcher died"))?;
@@ -511,126 +602,176 @@ impl Trainer {
             _ => Some(prepare(&self.train, &first_sel, self.step)),
         };
 
-        let mut curve = Vec::with_capacity(self.cfg.steps);
-        let end_step = self.step + self.cfg.steps;
-        while self.step < end_step {
-            let batch = pending.take().expect("pipeline always primed");
-            debug_assert_eq!(batch.step, self.step);
+        Ok(RunSession {
+            entry,
+            fwd_entry,
+            total,
+            tracing,
+            recorder,
+            trace_writer,
+            telemetry_writer,
+            saliency_writer,
+            ckpt_writer,
+            sel_tx,
+            prefetcher,
+            pending,
+            curve: Vec::with_capacity(self.cfg.steps),
+            end_step: self.step + self.cfg.steps,
+            stopped: false,
+        })
+    }
 
-            // dispatch the NEXT selection before executing this step so the
-            // gather overlaps execution (norms are 1 step stale — the
-            // staleness the importance sampler's EMA is built for)
-            if self.step + 1 < end_step {
-                let tsel = Timer::start();
-                let sel = self.sampler.sample(m, &mut self.rng);
-                match (&sel_tx, &prefetcher) {
-                    (Some(tx), Some(_)) => {
-                        tx.send((self.step + 1, sel))
-                            .map_err(|_| anyhow!("prefetcher died"))?;
-                    }
-                    _ => {
-                        let _sp = crate::trace::span(crate::trace::Phase::DataLoad);
-                        pending = Some(prepare(&self.train, &sel, self.step + 1));
-                    }
+    /// Execute ONE step of an open session; returns false once the
+    /// session is exhausted (call [`Trainer::finish_session`] next).
+    ///
+    /// `stop = true` requests a clean early exit: the already-selected
+    /// pending batch still executes (its RNG draw is consumed), but no
+    /// lookahead selection is drawn — the RNG then sits at exactly the
+    /// state an uninterrupted run reaches the same boundary with, which
+    /// is what makes a shutdown checkpoint resume bitwise on noise-free
+    /// runs (`tests/serve.rs` proves it). After a stop the session
+    /// reports [`RunSession::stopped`] and refuses further steps.
+    pub fn step_session(&mut self, s: &mut RunSession, stop: bool) -> Result<bool> {
+        if s.stopped || self.step >= s.end_step {
+            return Ok(false);
+        }
+        let m = self.stack.m;
+        let end_step = if stop { self.step + 1 } else { s.end_step };
+        let batch = s.pending.take().expect("pipeline always primed");
+        debug_assert_eq!(batch.step, self.step);
+
+        // dispatch the NEXT selection before executing this step so the
+        // gather overlaps execution (norms are 1 step stale — the
+        // staleness the importance sampler's EMA is built for)
+        if self.step + 1 < end_step {
+            let tsel = Timer::start();
+            let sel = self.sampler.sample(m, &mut self.rng);
+            match (&s.sel_tx, &s.prefetcher) {
+                (Some(tx), Some(_)) => {
+                    tx.send((self.step + 1, sel))
+                        .map_err(|_| anyhow!("prefetcher died"))?;
                 }
-                if let Some(p) = &mut self.profile {
-                    p.sample_gather += tsel.secs();
-                }
-            }
-
-            let lr = self.cfg.schedule.at(self.step);
-            let t = Timer::start();
-            let rec = {
-                let _sp = crate::trace::span(crate::trace::Phase::Step);
-                self.execute_step(entry.as_ref(), &batch, lr)?
-            };
-            let step_ms = t.millis();
-            curve.push((self.step, rec.loss));
-            self.metrics.record(&StepRecord { step_ms, ..rec });
-
-            if let Some(rec_tr) = recorder.as_mut() {
-                rec_tr.end_step(self.step as u64, (step_ms * 1e6) as u64);
-                let every = self.cfg.trace.every;
-                if every > 0 && self.step > 0 && self.step % every == 0 {
-                    if let Some(w) = &trace_writer {
-                        let _sp = crate::trace::span(crate::trace::Phase::Report);
-                        let line = rec_tr.record(self.step as u64, w.reports_dropped());
-                        w.enqueue(line.to_string());
-                    }
-                }
-            }
-
-            if let Some(mon) = &self.monitor {
-                let every = self.cfg.telemetry.every;
-                if every > 0 && self.step > 0 && self.step % every == 0 {
-                    if let Some(w) = &telemetry_writer {
-                        let _sp = crate::trace::span(crate::trace::Phase::Report);
-                        w.enqueue(mon.report_with(self.clip.as_ref()).to_string());
-                    }
+                _ => {
+                    let _sp = crate::trace::span(crate::trace::Phase::DataLoad);
+                    s.pending = Some(prepare(&self.train, &sel, self.step + 1));
                 }
             }
-
-            if let Some(sal) = &self.saliency {
-                let every = self.cfg.audit.every;
-                if every > 0 && self.step > 0 && self.step % every == 0 {
-                    if let Some(w) = &saliency_writer {
-                        let _sp = crate::trace::span(crate::trace::Phase::Report);
-                        w.enqueue(sal.render_line(self.step).to_string());
-                    }
-                }
-            }
-
-            if self.cfg.eval_every > 0
-                && self.step > 0
-                && self.step % self.cfg.eval_every == 0
-            {
-                let (el, ea) = self.evaluate(fwd_entry.as_ref())?;
-                self.metrics.record_eval(self.step, el, ea);
-            }
-            if self.cfg.checkpoint_every > 0
-                && self.step > 0
-                && self.step % self.cfg.checkpoint_every == 0
-            {
-                let _sp = crate::trace::span(crate::trace::Phase::Checkpoint);
-                self.save_checkpoint()?;
-            }
-
-            self.step += 1;
-            if depth > 0 && self.step < end_step {
-                let _sp = crate::trace::span(crate::trace::Phase::DataLoad);
-                pending = Some(
-                    prefetcher
-                        .as_ref()
-                        .unwrap()
-                        .recv()
-                        .ok_or_else(|| anyhow!("prefetcher closed early"))?,
-                );
+            if let Some(p) = &mut self.profile {
+                p.sample_gather += tsel.secs();
             }
         }
-        drop(sel_tx);
+
+        let lr = self.cfg.schedule.at(self.step);
+        let t = Timer::start();
+        let rec = {
+            let _sp = crate::trace::span(crate::trace::Phase::Step);
+            self.execute_step(s.entry.as_ref(), &batch, lr)?
+        };
+        let step_ms = t.millis();
+        s.curve.push((self.step, rec.loss));
+        self.metrics.record(&StepRecord { step_ms, ..rec });
+
+        if let Some(rec_tr) = s.recorder.as_mut() {
+            rec_tr.end_step(self.step as u64, (step_ms * 1e6) as u64);
+            let every = self.cfg.trace.every;
+            if every > 0 && self.step > 0 && self.step % every == 0 {
+                if let Some(w) = &s.trace_writer {
+                    let _sp = crate::trace::span(crate::trace::Phase::Report);
+                    let line = rec_tr.record(self.step as u64, w.reports_dropped());
+                    w.enqueue(line.to_string());
+                }
+            }
+        }
+
+        if let Some(mon) = &self.monitor {
+            let every = self.cfg.telemetry.every;
+            if every > 0 && self.step > 0 && self.step % every == 0 {
+                if let Some(w) = &s.telemetry_writer {
+                    let _sp = crate::trace::span(crate::trace::Phase::Report);
+                    w.enqueue(mon.report_with(self.clip.as_ref()).to_string());
+                }
+            }
+        }
+
+        if let Some(sal) = &self.saliency {
+            let every = self.cfg.audit.every;
+            if every > 0 && self.step > 0 && self.step % every == 0 {
+                if let Some(w) = &s.saliency_writer {
+                    let _sp = crate::trace::span(crate::trace::Phase::Report);
+                    w.enqueue(sal.render_line(self.step).to_string());
+                }
+            }
+        }
+
+        if self.cfg.eval_every > 0
+            && self.step > 0
+            && self.step % self.cfg.eval_every == 0
+        {
+            let (el, ea) = self.evaluate(s.fwd_entry.as_ref())?;
+            self.metrics.record_eval(self.step, el, ea);
+        }
+        if self.cfg.checkpoint_every > 0
+            && self.step > 0
+            && self.step % self.cfg.checkpoint_every == 0
+        {
+            let _sp = crate::trace::span(crate::trace::Phase::Checkpoint);
+            match &s.ckpt_writer {
+                Some(w) => self.enqueue_checkpoint(w)?,
+                None => {
+                    self.save_checkpoint()?;
+                }
+            }
+        }
+
+        self.step += 1;
+        if self.cfg.prefetch_depth > 0 && self.step < end_step {
+            let _sp = crate::trace::span(crate::trace::Phase::DataLoad);
+            s.pending = Some(
+                s.prefetcher
+                    .as_ref()
+                    .unwrap()
+                    .recv()
+                    .ok_or_else(|| anyhow!("prefetcher closed early"))?,
+            );
+        }
+        if stop {
+            s.stopped = true;
+        }
+        Ok(!s.stopped && self.step < s.end_step)
+    }
+
+    /// Close a session: shut the prefetch pipeline down, emit the final
+    /// stream lines, drain every writer thread (the ONLY place a run
+    /// waits on the disk — after its last step, never during one), dump
+    /// saliency maps, run the final evaluation and assemble the
+    /// [`RunSummary`]. Safe to call after an early stop: the summary
+    /// then covers the steps that actually executed.
+    pub fn finish_session(&mut self, mut s: RunSession) -> Result<RunSummary> {
+        drop(s.sel_tx.take());
+        drop(s.prefetcher.take());
 
         // close the streams: one final line each, then drain the writer
         // threads (the only place training waits on the disk — after the
         // last step, not during one)
-        if let (Some(rec_tr), Some(w)) = (recorder.as_mut(), &trace_writer) {
+        if let (Some(rec_tr), Some(w)) = (s.recorder.as_mut(), &s.trace_writer) {
             let last = self.step.saturating_sub(1) as u64;
             w.enqueue(rec_tr.record(last, w.reports_dropped()).to_string());
         }
-        if let (Some(mon), Some(w)) = (&self.monitor, &telemetry_writer) {
+        if let (Some(mon), Some(w)) = (&self.monitor, &s.telemetry_writer) {
             w.enqueue(mon.report_with(self.clip.as_ref()).to_string());
         }
-        if let (Some(sal), Some(w)) = (&self.saliency, &saliency_writer) {
+        if let (Some(sal), Some(w)) = (&self.saliency, &s.saliency_writer) {
             let last = self.step.saturating_sub(1);
             w.enqueue(sal.render_line(last).to_string());
         }
-        if let Some(w) = trace_writer {
+        if let Some(w) = s.trace_writer.take() {
             let dropped = w.finish();
             if dropped > 0 {
                 log::warn!("trace stream: {dropped} lines dropped (writer backpressure)");
             }
             log::info!("trace stream: {}", self.metrics.dir().join("trace.jsonl").display());
         }
-        if let Some(w) = telemetry_writer {
+        if let Some(w) = s.telemetry_writer.take() {
             let dropped = w.finish();
             if dropped > 0 {
                 log::warn!(
@@ -638,7 +779,7 @@ impl Trainer {
                 );
             }
         }
-        if let Some(w) = saliency_writer {
+        if let Some(w) = s.saliency_writer.take() {
             let dropped = w.finish();
             if dropped > 0 {
                 log::warn!(
@@ -649,6 +790,15 @@ impl Trainer {
                 "saliency stream: {}",
                 self.metrics.dir().join("saliency.jsonl").display()
             );
+        }
+        if let Some(w) = s.ckpt_writer.take() {
+            let lost = w.finish();
+            if lost > 0 {
+                log::warn!(
+                    "checkpoint writer: {lost} checkpoint(s) dropped or failed \
+                     (the last durable checkpoint on disk is still valid)"
+                );
+            }
         }
         // dump the tracked maps (observation-only: a failed dump must not
         // fail the run) and remember the paths for `pegrad audit`
@@ -665,18 +815,18 @@ impl Trainer {
                 Err(e) => log::warn!("saliency map dump failed: {e}"),
             }
         }
-        if tracing {
+        if s.tracing {
             crate::trace::set_enabled(false);
         }
 
         self.sync_params_to_host()?;
-        let (eval_loss, eval_acc) = self.evaluate(fwd_entry.as_ref())?;
+        let (eval_loss, eval_acc) = self.evaluate(s.fwd_entry.as_ref())?;
         self.metrics.record_eval(self.step, eval_loss, eval_acc);
         log::info!(
             "run '{}' done: {} steps in {:.1}s ({:.1} ms/step)",
             self.cfg.run_name,
-            self.cfg.steps,
-            total.secs(),
+            s.curve.len(),
+            s.total.secs(),
             self.metrics.time_stats.mean()
         );
         if let Some(p) = &self.profile {
@@ -707,12 +857,12 @@ impl Trainer {
             }
         });
         Ok(RunSummary {
-            steps: self.cfg.steps,
-            final_loss: curve.last().map(|&(_, l)| l).unwrap_or(f32::NAN),
+            steps: s.curve.len(),
+            final_loss: s.curve.last().map(|&(_, l)| l).unwrap_or(f32::NAN),
             eval_loss: Some(eval_loss),
             eval_accuracy: eval_acc,
             mean_step_ms: self.metrics.time_stats.mean(),
-            curve,
+            curve: s.curve,
             epsilon: self
                 .accountant
                 .as_ref()
@@ -1068,7 +1218,22 @@ impl Trainer {
         Ok(((loss_sum / n_batches as f64) as f32, acc))
     }
 
-    pub fn save_checkpoint(&mut self) -> Result<()> {
+    /// Save a checkpoint of the current state SYNCHRONOUSLY to
+    /// `<run_dir>/ckpt-<step>.bin` and return its path. Periodic
+    /// in-loop checkpoints go through [`Trainer::step_session`]'s
+    /// asynchronous blob-writer path instead; this is the
+    /// end-of-run/shutdown form, where waiting on the disk is fine.
+    pub fn save_checkpoint(&mut self) -> Result<std::path::PathBuf> {
+        let (path, ck) = self.render_checkpoint()?;
+        ck.save(&path).context("saving checkpoint")?;
+        log::info!("checkpoint saved: {}", path.display());
+        Ok(path)
+    }
+
+    /// Render the current checkpoint (params, optimizer, RNG, clip +
+    /// flag state) and its target path — the serialization half shared
+    /// by the sync and async save paths.
+    fn render_checkpoint(&mut self) -> Result<(std::path::PathBuf, Checkpoint)> {
         self.sync_params_to_host()?;
         let opt_state: Vec<Tensor> = self.optimizer.state().into_iter().cloned().collect();
         let ck = Checkpoint::new(
@@ -1080,9 +1245,30 @@ impl Trainer {
         .with_clip(self.clip.as_ref().map(|c| c.snapshot()))
         .with_flags(self.monitor.as_ref().map(|m| m.outliers().flag_state()));
         let path = self.metrics.dir().join(format!("ckpt-{:06}.bin", self.step));
-        ck.save(&path).context("saving checkpoint")?;
-        log::info!("checkpoint saved: {}", path.display());
+        Ok((path, ck))
+    }
+
+    /// Render the current checkpoint and hand its bytes to the
+    /// session's blob-writer thread: the step loop pays only the
+    /// (memory-bound) serialization, never the disk.
+    fn enqueue_checkpoint(&mut self, w: &BlobWriter) -> Result<()> {
+        let (path, ck) = self.render_checkpoint()?;
+        if w.enqueue(path, ck.to_bytes()) {
+            log::info!("checkpoint queued: step {}", self.step);
+        } else {
+            log::warn!(
+                "checkpoint at step {} dropped (blob-writer backpressure)",
+                self.step
+            );
+        }
         Ok(())
+    }
+
+    /// The next step index this trainer will execute (total steps
+    /// completed across restores — the serve scheduler's progress
+    /// counter).
+    pub fn current_step(&self) -> usize {
+        self.step
     }
 
     /// Current host-side parameters (synced from device first).

@@ -26,12 +26,15 @@ const GLYPHS: [[&str; 7]; 10] = [
 ];
 
 #[derive(Debug, Clone)]
+/// Synthetic-digits generator parameters.
 pub struct DigitsConfig {
+    /// Number of examples.
     pub n: usize,
     /// canvas side length (>= 9 so the 5x7 glyph plus shift fits).
     pub side: usize,
     /// std of the per-pixel Gaussian noise.
     pub noise: f32,
+    /// Generator seed.
     pub seed: u64,
 }
 
@@ -61,6 +64,7 @@ fn render(canvas: &mut [f32], side: usize, digit: usize, dx: usize, dy: usize, c
     }
 }
 
+/// Render the dataset: jittered glyph templates, one class per digit.
 pub fn generate(cfg: &DigitsConfig) -> Dataset {
     assert!(cfg.side >= 9, "side must fit a shifted 5x7 glyph");
     let mut rng = Rng::new(cfg.seed ^ 0xD161);

@@ -18,10 +18,15 @@ use super::Dataset;
 /// A fully-materialized minibatch ready for the executor.
 #[derive(Debug, Clone)]
 pub struct PreparedBatch {
+    /// Step index the batch was prepared for.
     pub step: usize,
+    /// Dataset rows in the batch, in order.
     pub indices: Vec<usize>,
+    /// Per-example importance weights (all 1 under uniform sampling).
     pub weights: Vec<f32>,
+    /// Gathered input rows, `[m, dim]`.
     pub x: Tensor,
+    /// Gathered targets.
     pub y: Targets,
 }
 
@@ -78,6 +83,7 @@ impl Prefetcher {
         }
     }
 
+    /// Next prefetched batch; `None` once the producer is done.
     pub fn recv(&self) -> Option<PreparedBatch> {
         self.rx.recv()
     }

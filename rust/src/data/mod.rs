@@ -13,6 +13,8 @@
 //!   path end to end).
 //! * [`loader`] — batch gather + the prefetch stage used by the
 //!   coordinator pipeline.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod digits;
 pub mod loader;
@@ -31,19 +33,24 @@ use crate::tensor::Tensor;
 pub struct Dataset {
     /// [n, d] feature matrix.
     pub x: Tensor,
+    /// Targets, aligned with the rows of `x`.
     pub y: Targets,
+    /// Dataset name for logs and reports.
     pub name: String,
 }
 
 impl Dataset {
+    /// Number of examples.
     pub fn len(&self) -> usize {
         self.x.dims()[0]
     }
 
+    /// Whether the dataset holds no examples.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Flattened input width.
     pub fn dim(&self) -> usize {
         self.x.dims()[1]
     }

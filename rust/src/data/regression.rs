@@ -8,13 +8,20 @@ use crate::tensor::{ops, Rng, Tensor};
 
 use super::Dataset;
 
+/// Teacher-network regression generator parameters.
 #[derive(Debug, Clone)]
 pub struct RegressionConfig {
+    /// Number of examples.
     pub n: usize,
+    /// Input dimensionality.
     pub dim: usize,
+    /// Target dimensionality.
     pub out_dim: usize,
+    /// Hidden width of the random teacher network.
     pub teacher_hidden: usize,
+    /// Std-dev of the additive target noise (the loss floor).
     pub noise: f32,
+    /// Generator seed (teacher weights, inputs, and noise).
     pub seed: u64,
 }
 
@@ -31,6 +38,7 @@ impl Default for RegressionConfig {
     }
 }
 
+/// Generate the dataset: `y = tanh(W2 relu(W1 x)) + eps`.
 pub fn generate(cfg: &RegressionConfig) -> Dataset {
     let mut rng = Rng::new(cfg.seed ^ 0x4E6);
     let w1 = ops::scale(

@@ -14,9 +14,13 @@ use crate::tensor::{Rng, Tensor};
 use super::Dataset;
 
 #[derive(Debug, Clone)]
+/// Synthetic classification generator parameters.
 pub struct SynthConfig {
+    /// Number of examples.
     pub n: usize,
+    /// Input dimensionality.
     pub dim: usize,
+    /// Number of classes.
     pub n_classes: usize,
     /// geometric class-frequency ratio: class c has weight imbalance^c.
     pub imbalance: f32,
@@ -24,6 +28,7 @@ pub struct SynthConfig {
     pub label_noise: f32,
     /// distance of class centers from the origin.
     pub separation: f32,
+    /// Generator seed.
     pub seed: u64,
 }
 
@@ -43,10 +48,13 @@ impl Default for SynthConfig {
 
 /// Which examples got a flipped label (ground truth for the outlier demo).
 pub struct SynthMeta {
+    /// Which rows had their label flipped (the planted outliers).
     pub flipped: Vec<bool>,
+    /// Examples per class.
     pub class_counts: Vec<usize>,
 }
 
+/// Generate the dataset plus the ground-truth metadata tests use.
 pub fn generate(cfg: &SynthConfig) -> (Dataset, SynthMeta) {
     assert!(cfg.n_classes >= 2 && cfg.n >= cfg.n_classes);
     assert!((0.0..=1.0).contains(&cfg.label_noise));

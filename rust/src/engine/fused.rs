@@ -81,6 +81,7 @@ pub enum EngineMode {
 /// Scalars a step reports (everything else is read via getters).
 #[derive(Debug, Clone, Copy)]
 pub struct EngineStats {
+    /// Mean training loss over the batch.
     pub mean_loss: f32,
     /// Fraction of examples with `||g_j|| > c` (clip mode only).
     pub clip_frac: Option<f32>,
@@ -146,6 +147,7 @@ impl FusedEngine {
         self.saliency = true;
     }
 
+    /// Whether the per-position saliency tap path is active.
     pub fn saliency_enabled(&self) -> bool {
         self.saliency
     }
@@ -166,6 +168,7 @@ impl FusedEngine {
             .map(|mp| &mp[..self.ws.last_m * mlen])
     }
 
+    /// The stack spec the engine was built for.
     pub fn stack(&self) -> &StackSpec {
         &self.stack
     }
@@ -203,6 +206,7 @@ impl FusedEngine {
         &self.ws.coef[..self.ws.last_m]
     }
 
+    /// Per-example losses of the most recent step.
     pub fn per_ex_loss(&self) -> &[f32] {
         &self.ws.per_ex_loss[..self.ws.last_m]
     }

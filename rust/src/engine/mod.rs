@@ -47,6 +47,8 @@
 //! sampler's unbiased weights). Both ride the existing traversal:
 //! `benches/e9_telemetry.rs` measures the overhead, the flop tests prove
 //! the matmul work is untouched.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod fused;
 pub mod workspace;

@@ -51,6 +51,7 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// Arenas sized for `stack` at its maximum batch size.
     pub fn new(stack: &StackSpec) -> Workspace {
         let m = stack.m;
         let w = stack.max_width();

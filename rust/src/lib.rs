@@ -15,22 +15,45 @@
 //! (L3) loads the artifacts via PJRT and owns the entire training
 //! framework around them — config, CLI, data pipeline, importance
 //! sampler, optimizers, DP accountant, metrics, checkpoints, benches.
+//!
+//! The end-to-end system map — config → trainer/serve → fused engine →
+//! layer taps → streams — lives in `docs/architecture.md`.
 
+#![warn(missing_docs)]
+
+/// Bench harness: spec/timing helpers and `BENCH_*.json` emission.
 pub mod bench;
+/// Command-line interface: arg parsing and the `pegrad` subcommands.
 pub mod cli;
+/// Typed run configuration: schema, TOML-subset parser, presets.
 pub mod config;
+/// The training coordinator: loop, metrics, checkpoints.
 pub mod coordinator;
+/// Dataset generators and the gather-prefetch pipeline.
 pub mod data;
+/// The pure-rust fused per-example-gradient engine (L1+L2 in-process).
 pub mod engine;
+/// Neural-net building blocks: layers, losses, reference models.
 pub mod nn;
+/// Optimizers (SGD/momentum/Adam) and learning-rate schedules.
 pub mod optim;
+/// The paper's §3/§5 norm-factorization math on host tensors.
 pub mod pegrad;
+/// Differential-privacy accounting (RDP) for the §6 modes.
 pub mod privacy;
+/// PJRT runtime loading and AOT artifact registry.
 pub mod runtime;
+/// Importance sampling driven by streamed per-example norms (§1).
 pub mod sampler;
+/// The concurrent multi-run serve daemon (`pegrad serve`).
+pub mod serve;
+/// Gradient-norm telemetry: histograms, outliers, adaptive clip, saliency.
 pub mod telemetry;
+/// Host tensors, deterministic RNG, and the op library.
 pub mod tensor;
+/// Step tracing: spans, counters, JSONL stream writers.
 pub mod trace;
+/// Shared utilities: threadpool, JSON, stats, timers, property tests.
 pub mod util;
 
 /// Crate-wide result alias.

@@ -13,7 +13,7 @@
 //! band-local loop, reading straight from the retained raw input
 //! (`[m, in_len]` — the only per-batch state the layer keeps). Patch
 //! values are bitwise identical to the unfold, and every GEMM-shaped
-//! pass stages [`PATCH_CHUNK`] patch rows and hands them to the SAME
+//! pass stages `PATCH_CHUNK` patch rows and hands them to the SAME
 //! dispatched [`kernels::Microkernel`] primitives the materialized
 //! matmuls run on ([`Microkernel::matmul_band`] forward,
 //! [`Microkernel::tn_band`] for `G_j` and the replay), so the two
@@ -129,6 +129,7 @@ impl<'a> PatchSrc<'a> {
     }
 }
 
+/// A 2-D convolution layer instance: spec plus per-instance scratch.
 pub struct ConvLayer {
     spec: LayerSpec,
     geom: ConvGeom,
@@ -174,10 +175,12 @@ pub struct ConvLayer {
 }
 
 impl ConvLayer {
+    /// Conv layer sized for batches up to `m_max` (impl auto-selected).
     pub fn new(spec: LayerSpec, m_max: usize) -> ConvLayer {
         ConvLayer::with_impl(spec, m_max, ConvImpl::Implicit)
     }
 
+    /// Conv layer with an explicit implementation choice (tests/benches).
     pub fn with_impl(spec: LayerSpec, m_max: usize, imp: ConvImpl) -> ConvLayer {
         let LayerSpec::Conv2d { geom, out_ch, .. } = spec else {
             panic!("ConvLayer::new needs a Conv2d spec, got {}", spec.name());
@@ -544,7 +547,7 @@ impl Layer for ConvLayer {
     }
 }
 
-/// One example band of the implicit-GEMM forward: stage [`PATCH_CHUNK`]
+/// One example band of the implicit-GEMM forward: stage `PATCH_CHUNK`
 /// gathered `[K+1]` patch rows, zero the matching output tile, and run
 /// the dispatched GEMM band kernel over it — bitwise identical to
 /// im2col + [`ops::matmul_into_slices`] because both sides bottom out

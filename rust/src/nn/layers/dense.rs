@@ -20,6 +20,7 @@ use super::{Layer, LayerSpec};
 /// single-threaded (same constant as the original engine).
 const BACKPROP_PAR_THRESHOLD: usize = 64 * 64 * 16;
 
+/// A dense (fully-connected) layer instance: spec plus scratch.
 pub struct DenseLayer {
     spec: LayerSpec,
     in_dim: usize,
@@ -43,6 +44,7 @@ pub struct DenseLayer {
 }
 
 impl DenseLayer {
+    /// Dense layer sized for batches up to `m_max`.
     pub fn new(spec: LayerSpec, m_max: usize) -> DenseLayer {
         let LayerSpec::Dense { in_dim, out_dim, .. } = spec else {
             panic!("DenseLayer::new needs a Dense spec, got {}", spec.name());

@@ -164,6 +164,7 @@ pub enum LayerSpec {
 }
 
 impl LayerSpec {
+    /// Short kind name (`"dense"`, `"conv2d"`, …) for logs and errors.
     pub fn name(&self) -> &'static str {
         match self {
             LayerSpec::Dense { .. } => "dense",
@@ -285,6 +286,7 @@ impl LayerSpec {
 /// retention buffer is allocated once, lazily, via
 /// [`Layer::ensure_retention`]).
 pub trait Layer: Send {
+    /// The static spec this layer was built from.
     fn spec(&self) -> &LayerSpec;
 
     /// Compute the pre-activation output `z` `[m, out_len]` from `x`

@@ -22,6 +22,7 @@ pub struct MaxPoolLayer {
 }
 
 impl MaxPoolLayer {
+    /// Max-pool layer sized for batches up to `m_max`.
     pub fn new(spec: LayerSpec, m_max: usize) -> MaxPoolLayer {
         let LayerSpec::MaxPool2d { in_h, in_w, ch, k } = spec else {
             panic!("MaxPoolLayer::new needs a MaxPool2d spec, got {}", spec.name());
@@ -131,6 +132,7 @@ pub struct AvgPoolLayer {
 }
 
 impl AvgPoolLayer {
+    /// Average-pool layer (stateless; no batch sizing needed).
     pub fn new(spec: LayerSpec) -> AvgPoolLayer {
         let LayerSpec::AvgPool2d { in_h, in_w, ch, k } = spec else {
             panic!("AvgPoolLayer::new needs an AvgPool2d spec, got {}", spec.name());
@@ -235,6 +237,7 @@ pub struct FlattenLayer {
 }
 
 impl FlattenLayer {
+    /// Flatten marker layer.
     pub fn new(spec: LayerSpec) -> FlattenLayer {
         let LayerSpec::Flatten { len } = spec else {
             panic!("FlattenLayer::new needs a Flatten spec, got {}", spec.name());

@@ -18,13 +18,17 @@ use super::LayerSpec;
 /// `m ≤ m_max` runs in the same engine).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StackSpec {
+    /// Layer specs, input to output.
     pub layers: Vec<LayerSpec>,
+    /// Loss applied to the final layer output.
     pub loss: Loss,
     /// Maximum batch size (workspace capacity).
     pub m: usize,
 }
 
 impl StackSpec {
+    /// Validate and build a stack (non-empty, geometry in bounds,
+    /// adjacent layer widths matching).
     pub fn new(layers: Vec<LayerSpec>, loss: Loss, m: usize) -> Result<StackSpec> {
         if layers.is_empty() {
             bail!("a stack needs at least one layer");
@@ -112,6 +116,7 @@ impl StackSpec {
         }
     }
 
+    /// Total layer count (weighted and unweighted).
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
@@ -133,6 +138,7 @@ impl StackSpec {
             .collect()
     }
 
+    /// Weight shapes of the weighted layers, in `param_layers` order.
     pub fn weight_shapes(&self) -> Vec<(usize, usize)> {
         self.layers
             .iter()
@@ -151,14 +157,17 @@ impl StackSpec {
             .collect()
     }
 
+    /// Total trainable parameter count.
     pub fn param_count(&self) -> usize {
         self.weight_shapes().iter().map(|&(a, b)| a * b).sum()
     }
 
+    /// Flattened input width of the stack.
     pub fn in_len(&self) -> usize {
         self.layers[0].in_len()
     }
 
+    /// Output width of the final layer.
     pub fn out_len(&self) -> usize {
         self.layers.last().unwrap().out_len()
     }

@@ -8,11 +8,14 @@ use crate::tensor::Tensor;
 /// Target values: class indices for CE, dense targets for MSE.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Targets {
+    /// Integer class labels (classification).
     Classes(Vec<i32>),
+    /// Dense target rows (regression).
     Dense(Tensor),
 }
 
 impl Targets {
+    /// Number of target rows/labels.
     pub fn len(&self) -> usize {
         match self {
             Targets::Classes(v) => v.len(),
@@ -20,6 +23,7 @@ impl Targets {
         }
     }
 
+    /// Whether there are no targets.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -43,11 +47,14 @@ impl Targets {
 /// Loss kind; mirrors `python/compile/model.py::LOSSES`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Loss {
+    /// Softmax cross-entropy over class labels.
     SoftmaxCe,
+    /// Mean squared error against dense targets.
     Mse,
 }
 
 impl Loss {
+    /// Parse a loss name (`"softmax_ce"`, `"mse"`); `None` if unknown.
     pub fn parse(s: &str) -> Option<Loss> {
         match s {
             "softmax_ce" => Some(Loss::SoftmaxCe),
@@ -56,6 +63,7 @@ impl Loss {
         }
     }
 
+    /// The canonical name [`Loss::parse`] accepts.
     pub fn name(&self) -> &'static str {
         match self {
             Loss::SoftmaxCe => "softmax_ce",

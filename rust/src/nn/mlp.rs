@@ -13,7 +13,9 @@ use super::spec::ModelSpec;
 /// A network = spec + weights (weights include the folded bias row).
 #[derive(Debug, Clone)]
 pub struct Mlp {
+    /// The model geometry.
     pub spec: ModelSpec,
+    /// Weight matrices, one per layer (bias row folded in).
     pub params: Vec<Tensor>,
 }
 
@@ -41,6 +43,7 @@ pub struct Backward {
 }
 
 impl Mlp {
+    /// MLP over existing parameters (shape-checked by the caller).
     pub fn new(spec: ModelSpec, params: Vec<Tensor>) -> Self {
         let shapes = spec.weight_shapes();
         assert_eq!(params.len(), shapes.len(), "param count mismatch");
@@ -50,6 +53,7 @@ impl Mlp {
         Mlp { spec, params }
     }
 
+    /// MLP with freshly initialized parameters.
     pub fn init(spec: ModelSpec, rng: &mut crate::tensor::Rng) -> Self {
         let params = spec.init_params(rng);
         Mlp { spec, params }

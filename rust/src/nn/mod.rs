@@ -8,6 +8,8 @@
 //!
 //! Also carries the instrumented flop counters that E1 (the §5 op-count
 //! table) reads.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod layers;
 pub mod loss;
@@ -34,6 +36,7 @@ pub fn reset_flops() {
     FLOP_COUNTER.store(0, Ordering::Relaxed);
 }
 
+/// Current value of the global flop counter.
 pub fn read_flops() -> u64 {
     FLOP_COUNTER.load(Ordering::Relaxed)
 }

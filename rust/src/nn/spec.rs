@@ -13,13 +13,16 @@ use super::Loss;
 pub struct ModelSpec {
     /// (d0, d1, ..., dn): input width, hidden widths..., output width.
     pub dims: Vec<usize>,
+    /// Hidden-layer activation.
     pub activation: Activation,
+    /// Output loss.
     pub loss: Loss,
     /// Minibatch size baked into the AOT artifacts.
     pub m: usize,
 }
 
 impl ModelSpec {
+    /// Validate and build a dense model spec.
     pub fn new(dims: Vec<usize>, activation: Activation, loss: Loss, m: usize) -> Result<Self> {
         if dims.len() < 2 {
             bail!("need >=2 dims, got {dims:?}");
@@ -38,6 +41,7 @@ impl ModelSpec {
         })
     }
 
+    /// Number of weight layers (`dims.len() - 1`).
     pub fn n_layers(&self) -> usize {
         self.dims.len() - 1
     }
@@ -49,14 +53,17 @@ impl ModelSpec {
             .collect()
     }
 
+    /// Total parameter count (bias rows included).
     pub fn param_count(&self) -> usize {
         self.weight_shapes().iter().map(|&(a, b)| a * b).sum()
     }
 
+    /// Input width.
     pub fn in_dim(&self) -> usize {
         self.dims[0]
     }
 
+    /// Output width.
     pub fn out_dim(&self) -> usize {
         *self.dims.last().unwrap()
     }

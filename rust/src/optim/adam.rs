@@ -5,9 +5,13 @@ use crate::tensor::Tensor;
 use super::Optimizer;
 
 #[derive(Debug, Clone)]
+/// Adam optimizer hyperparameters (state lives in the opt tensors).
 pub struct Adam {
+    /// First-moment decay rate.
     pub beta1: f32,
+    /// Second-moment decay rate.
     pub beta2: f32,
+    /// Denominator stabilizer.
     pub eps: f32,
     t: u64,
     m: Vec<Tensor>,
@@ -15,6 +19,7 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Adam with explicit hyperparameters.
     pub fn new(beta1: f32, beta2: f32, eps: f32) -> Adam {
         assert!((0.0..1.0).contains(&beta1) && (0.0..1.0).contains(&beta2));
         Adam {

@@ -4,6 +4,8 @@
 //! update inside XLA) and the rust-side path (`grads_pegrad` returns mean
 //! gradients, these optimizers apply them). The rust path is what enables
 //! momentum/Adam without re-lowering artifacts.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod adam;
 pub mod schedule;
@@ -27,5 +29,6 @@ pub trait Optimizer {
     /// Restore state saved by [`Optimizer::state`].
     fn load_state(&mut self, state: Vec<Tensor>);
 
+    /// Optimizer name for logs and reports.
     fn name(&self) -> &'static str;
 }

@@ -3,6 +3,7 @@
 /// LR as a function of the step index.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Schedule {
+    /// Fixed learning rate.
     Constant {
         lr: f32,
     },
@@ -23,6 +24,7 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// Learning rate at `step`.
     pub fn at(&self, step: usize) -> f32 {
         match *self {
             Schedule::Constant { lr } => lr,

@@ -5,8 +5,11 @@ use crate::tensor::{ops, Tensor};
 use super::Optimizer;
 
 #[derive(Debug, Clone)]
+/// SGD with optional momentum, Nesterov lookahead and weight decay.
 pub struct Sgd {
+    /// Momentum coefficient (0 = plain SGD).
     pub momentum: f32,
+    /// Use the Nesterov lookahead update.
     pub nesterov: bool,
     /// decoupled (AdamW-style) weight decay coefficient.
     pub weight_decay: f32,
@@ -14,6 +17,7 @@ pub struct Sgd {
 }
 
 impl Sgd {
+    /// SGD with explicit hyperparameters.
     pub fn new(momentum: f32, nesterov: bool, weight_decay: f32) -> Sgd {
         assert!((0.0..1.0).contains(&momentum) || momentum == 0.0);
         Sgd {
@@ -24,6 +28,7 @@ impl Sgd {
         }
     }
 
+    /// Momentum-free, decay-free SGD.
     pub fn plain() -> Sgd {
         Sgd::new(0.0, false, 0.0)
     }

@@ -9,8 +9,11 @@ use crate::nn::ModelSpec;
 /// norms on an (m, spec) workload, by method.
 #[derive(Debug, Clone)]
 pub struct OpCountRow {
+    /// Parameter count.
     pub p: usize,
+    /// Weight-layer count.
     pub n_layers: usize,
+    /// Batch size.
     pub m: usize,
     /// Ops of the batched training fwd+bwd everyone already pays.
     pub backprop: u64,

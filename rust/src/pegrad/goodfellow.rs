@@ -27,6 +27,7 @@ impl PerExampleNorms {
         self.s_total.iter().map(|&s| s.sqrt()).collect()
     }
 
+    /// Batch size the norms cover.
     pub fn m(&self) -> usize {
         self.s_total.len()
     }

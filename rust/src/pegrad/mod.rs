@@ -7,6 +7,8 @@
 //! test and bench oracle now goes through (engine-based batch-1
 //! materialization, exact §6 updates, exact sorted quantiles, and the
 //! exact-quantile adaptive-clip controller).
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod clip;
 pub mod flops;

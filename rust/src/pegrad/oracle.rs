@@ -43,6 +43,7 @@ pub struct PerExampleOracle {
 }
 
 impl PerExampleOracle {
+    /// Oracle over a layer stack (materializes per-example gradients).
     pub fn new(stack: &StackSpec) -> PerExampleOracle {
         PerExampleOracle {
             in_len: stack.in_len(),
@@ -227,6 +228,8 @@ pub struct ExactClipController {
 }
 
 impl ExactClipController {
+    /// Exact (sort-based) controller with the same config surface as the
+    /// sketch-based one — the test oracle.
     pub fn new(cfg: &ClipConfig, init_c: f32) -> ExactClipController {
         assert!(init_c > 0.0 && init_c.is_finite(), "init clip bound must be > 0");
         ExactClipController {
@@ -237,10 +240,12 @@ impl ExactClipController {
         }
     }
 
+    /// The bound the next step should clip with.
     pub fn bound(&self) -> f32 {
         self.c as f32
     }
 
+    /// Observed steps.
     pub fn steps(&self) -> u64 {
         self.steps
     }

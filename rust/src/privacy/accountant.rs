@@ -32,10 +32,12 @@ pub struct RdpAccountant {
     orders: Vec<f64>,
     /// accumulated ε_RDP per order.
     rdp: Vec<f64>,
+    /// Steps accounted so far.
     pub steps: u64,
 }
 
 impl RdpAccountant {
+    /// Accountant for subsampling rate `q` and noise multiplier `sigma`.
     pub fn new(q: f64, sigma: f64) -> RdpAccountant {
         assert!((0.0..=1.0).contains(&q), "subsampling rate q in [0,1]");
         assert!(sigma > 0.0, "sigma must be positive");

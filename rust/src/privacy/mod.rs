@@ -1,6 +1,8 @@
 //! Differential privacy for the §6 extension: per-example clipping is the
 //! DP-SGD primitive; combined with Gaussian noise it yields (ε, δ)-DP
 //! guarantees tracked by an RDP accountant.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod accountant;
 pub mod calibrate;

@@ -16,11 +16,14 @@ pub const FORMAT_VERSION: i64 = 2;
 /// dtype + shape of one artifact input/output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorMeta {
+    /// Element dtype name (e.g. `"f32"`, `"s32"`).
     pub dtype: String,
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
 }
 
 impl TensorMeta {
+    /// Total element count (product of the shape).
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -41,26 +44,40 @@ impl TensorMeta {
 /// One lowered entry point.
 #[derive(Debug, Clone)]
 pub struct EntryMeta {
+    /// Entry-point name (e.g. `"step_pegrad"`).
     pub name: String,
     /// Path of the HLO text file, relative to the artifacts dir.
     pub file: String,
+    /// Expected input tensors, in call order.
     pub inputs: Vec<TensorMeta>,
+    /// Produced output tensors, in return order.
     pub outputs: Vec<TensorMeta>,
 }
 
 /// One model preset (dims, loss, batch size, its entries).
 #[derive(Debug, Clone)]
 pub struct PresetMeta {
+    /// Preset name (the `preset` config key selects it).
     pub name: String,
+    /// Layer widths, input first.
     pub dims: Vec<usize>,
+    /// Hidden-layer activation name.
     pub activation: String,
+    /// Loss name.
     pub loss: String,
+    /// Minibatch size the artifacts were lowered for.
     pub m: usize,
+    /// Number of weight layers.
     pub n_layers: usize,
+    /// Total parameter count.
     pub param_count: usize,
+    /// Analytic forward-pass flop count per step.
     pub flops_forward: u64,
+    /// Analytic backward-pass flop count per step.
     pub flops_backward: u64,
+    /// Whether the preset was lowered with the Pallas kernels.
     pub use_pallas: bool,
+    /// Lowered entry points, keyed by name.
     pub entries: BTreeMap<String, EntryMeta>,
 }
 
@@ -74,6 +91,7 @@ impl PresetMeta {
         ModelSpec::new(self.dims.clone(), act, loss, self.m)
     }
 
+    /// Look up an entry point by name, with an error listing what exists.
     pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
         self.entries.get(name).ok_or_else(|| {
             anyhow!(
@@ -88,7 +106,9 @@ impl PresetMeta {
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifacts directory the manifest (and its HLO files) live in.
     pub dir: PathBuf,
+    /// Model presets, keyed by name.
     pub presets: BTreeMap<String, PresetMeta>,
 }
 
@@ -102,6 +122,7 @@ impl Manifest {
         Self::from_json(dir, &j)
     }
 
+    /// Parse an already-loaded manifest JSON document (version-checked).
     pub fn from_json(dir: PathBuf, j: &Json) -> Result<Manifest> {
         let ver = j.req("format_version")?.as_i64().unwrap_or(-1);
         if ver != FORMAT_VERSION {
@@ -175,6 +196,7 @@ impl Manifest {
         Ok(Manifest { dir, presets })
     }
 
+    /// Look up a preset by name, with an error listing what exists.
     pub fn preset(&self, name: &str) -> Result<&PresetMeta> {
         self.presets.get(name).ok_or_else(|| {
             anyhow!(

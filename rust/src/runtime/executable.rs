@@ -18,15 +18,19 @@ use super::client;
 /// A host-side argument for an entry call.
 #[derive(Debug, Clone)]
 pub enum Arg {
+    /// An f32 tensor argument.
     F32(Tensor),
+    /// An i32 buffer argument with an explicit shape.
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl Arg {
+    /// A rank-1, length-1 f32 argument.
     pub fn scalar_f32(v: f32) -> Arg {
         Arg::F32(Tensor::new(vec![1], vec![v]))
     }
 
+    /// A rank-1, length-1 i32 argument.
     pub fn scalar_i32(v: i32) -> Arg {
         Arg::I32(vec![v], vec![1])
     }
@@ -68,6 +72,7 @@ impl From<&Targets> for Arg {
 
 /// A set of device-resident tensors (e.g. the model parameters).
 pub struct DeviceTensors {
+    /// The device buffers, in upload order.
     pub buffers: Vec<xla::PjRtBuffer>,
 }
 
@@ -90,10 +95,12 @@ impl DeviceTensors {
         self.buffers.iter().map(fetch_f32).collect()
     }
 
+    /// Number of buffers.
     pub fn len(&self) -> usize {
         self.buffers.len()
     }
 
+    /// Whether the set holds no buffers.
     pub fn is_empty(&self) -> bool {
         self.buffers.is_empty()
     }
@@ -124,6 +131,7 @@ pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
 
 /// One compiled entry point.
 pub struct Entry {
+    /// The manifest entry this executable was compiled from.
     pub meta: EntryMeta,
     exe: xla::PjRtLoadedExecutable,
 }

@@ -11,6 +11,8 @@
 //! * the training hot path keeps parameters **device-resident** as
 //!   `PjRtBuffer`s and executes with `execute_b`, so the per-step host
 //!   traffic is only the minibatch in and the scalars/norms out.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod artifact;
 pub mod client;

@@ -15,11 +15,13 @@ use super::executable::Entry;
 
 /// Lazy compile cache over one manifest.
 pub struct Registry {
+    /// The loaded artifact manifest.
     pub manifest: Manifest,
     cache: RefCell<HashMap<(String, String), Rc<Entry>>>,
 }
 
 impl Registry {
+    /// Registry over a loaded manifest (entries compile lazily).
     pub fn new(manifest: Manifest) -> Registry {
         Registry {
             manifest,

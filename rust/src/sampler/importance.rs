@@ -60,6 +60,7 @@ pub struct ImportanceSampler {
 }
 
 impl ImportanceSampler {
+    /// Sampler over a dataset of `n` examples.
     pub fn new(n: usize, cfg: ImportanceConfig) -> ImportanceSampler {
         assert!(n > 0);
         assert!(cfg.ema_lambda > 0.0 && cfg.ema_lambda <= 1.0);

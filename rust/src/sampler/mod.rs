@@ -10,6 +10,8 @@
 //!   exploration, O(log N) sampling via a [`sumtree::SumTree`], and the
 //!   unbiased reweighting coefficients `w_j = 1/(N p_j)` that
 //!   `step_pegrad` folds into the gradient matmul.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod importance;
 pub mod sumtree;
@@ -29,7 +31,9 @@ use crate::tensor::Rng;
 /// plain minibatch mean).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Batch {
+    /// Selected dataset rows.
     pub indices: Vec<usize>,
+    /// Importance weights aligned with `indices` (1 = unweighted).
     pub weights: Vec<f32>,
 }
 
@@ -46,6 +50,7 @@ pub trait Sampler {
     /// Dataset size this sampler covers.
     fn len(&self) -> usize;
 
+    /// Whether the sampler covers no examples.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }

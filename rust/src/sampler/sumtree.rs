@@ -19,6 +19,7 @@ pub struct SumTree {
 }
 
 impl SumTree {
+    /// Tree over `n` leaves, all weights zero.
     pub fn new(n: usize) -> SumTree {
         assert!(n > 0, "SumTree needs at least one leaf");
         let cap = n.next_power_of_two();
@@ -30,6 +31,7 @@ impl SumTree {
         }
     }
 
+    /// Tree initialized from explicit leaf weights.
     pub fn from_weights(w: &[f32]) -> SumTree {
         let mut t = SumTree::new(w.len());
         for (i, &x) in w.iter().enumerate() {
@@ -39,18 +41,22 @@ impl SumTree {
         t
     }
 
+    /// Number of leaves.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Whether the tree has no leaves.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
 
+    /// Sum of all leaf weights.
     pub fn total(&self) -> f64 {
         self.tree[1]
     }
 
+    /// Weight of leaf `i`.
     pub fn get(&self, i: usize) -> f64 {
         assert!(i < self.n);
         self.tree[self.cap + i]

@@ -13,6 +13,7 @@ pub struct UniformSampler {
 }
 
 impl UniformSampler {
+    /// Sampler over a dataset of `n` examples.
     pub fn new(n: usize) -> UniformSampler {
         assert!(n > 0);
         UniformSampler { n }

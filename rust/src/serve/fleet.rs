@@ -1,0 +1,356 @@
+//! Fleet specs: what the serve daemon is asked to run.
+//!
+//! A fleet spec is a small TOML file (parsed with the same
+//! [`crate::config::parse`] subset as scenario configs) naming the
+//! scenario configs to schedule plus the daemon's own options:
+//!
+//! ```toml
+//! [serve]
+//! name = "nightly"            # serve session name (serve.jsonl dir)
+//! out_dir = "runs"            # parent of the session directory
+//! max_concurrent = 2          # driver threads stepping at once
+//! status_every_ms = 500       # serve.jsonl cadence
+//! # spool = "spool"           # optional: watch this dir for configs
+//! # max_seconds = 120.0       # optional: auto-shutdown deadline
+//!
+//! [fleet]
+//! configs = ["digits_small.toml", "digits_conv.toml"]
+//! ```
+//!
+//! Config paths are resolved **relative to the fleet file's directory**
+//! so a spec can live next to the configs it names. Each run config is
+//! loaded eagerly at spec-load time — a typo fails fast, before any
+//! sibling run has started. The full schema contract lives in
+//! `docs/serving.md`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::parse::parse_toml;
+use crate::config::Config;
+
+/// One scheduled run: a name (unique within the serve session; see
+/// [`crate::serve::Server::enqueue`]) plus the fully-loaded scenario
+/// config it will train with.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Run name; seeds the run-directory name and the `"run"` field of
+    /// `serve.jsonl` rows. May be renamed (`-r2`, `-r3`, …) on enqueue
+    /// if it collides with an earlier run.
+    pub name: String,
+    /// The scenario config (must be a rust-engine mode; serve drives
+    /// many trainers concurrently and the PJRT path is single-client).
+    pub config: Config,
+    /// Chaos hook for the isolation tests: panic the driver thread
+    /// after this many executed steps. Never set by fleet files.
+    pub panic_after: Option<usize>,
+}
+
+impl RunSpec {
+    /// A spec named after `config.run_name`.
+    pub fn new(config: Config) -> RunSpec {
+        RunSpec {
+            name: config.run_name.clone(),
+            config,
+            panic_after: None,
+        }
+    }
+
+    /// Builder: arm the chaos hook (tests only).
+    pub fn with_panic_after(mut self, steps: usize) -> RunSpec {
+        self.panic_after = Some(steps);
+        self
+    }
+
+    /// Reject configs the serve scheduler cannot drive concurrently.
+    pub fn validate(&self) -> Result<()> {
+        self.config.validate()?;
+        if !self.config.mode.is_rust_engine() {
+            bail!(
+                "run '{}': serve requires a rust-engine mode (got {:?}); \
+                 artifact modes hold a single PJRT client and cannot run \
+                 concurrently",
+                self.name,
+                self.config.mode
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Daemon-level options, from the `[serve]` section and/or CLI flags
+/// (flags win; see `pegrad serve --help`).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Serve session name: `serve.jsonl` lands in
+    /// `{out_dir}/{name}/serve.jsonl`.
+    pub name: String,
+    /// Parent directory for the session directory (shared with run
+    /// directories by default).
+    pub out_dir: String,
+    /// How many runs may step concurrently (≥ 1). The shared threadpool
+    /// is the real capacity limit; this bounds oversubscription.
+    pub max_concurrent: usize,
+    /// Status-line cadence in milliseconds (≥ 1).
+    pub status_every_ms: u64,
+    /// Bounded queue capacity for the `serve.jsonl` writer (lines).
+    pub buffer: usize,
+    /// Optional spool directory: `*.toml` scenario configs dropped here
+    /// while the daemon runs are scheduled as they appear. With a
+    /// spool, the daemon idles when drained instead of exiting.
+    pub spool: Option<PathBuf>,
+    /// Optional wall-clock deadline; reaching it triggers the same
+    /// graceful shutdown as [`crate::serve::ServeHandle::shutdown`].
+    pub max_seconds: Option<f64>,
+    /// `--set k=v` config overrides applied to every scheduled run,
+    /// including spooled ones (applied before validation).
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            name: "serve".into(),
+            out_dir: "runs".into(),
+            max_concurrent: 2,
+            status_every_ms: 500,
+            buffer: 256,
+            spool: None,
+            max_seconds: None,
+            overrides: Vec::new(),
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Bounds-check the options before the server starts.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("serve.name must be non-empty");
+        }
+        if self.max_concurrent == 0 {
+            bail!("serve.max_concurrent must be >= 1");
+        }
+        if self.status_every_ms == 0 {
+            bail!("serve.status_every_ms must be >= 1");
+        }
+        if self.buffer == 0 {
+            bail!("serve.buffer must be >= 1");
+        }
+        if let Some(s) = self.max_seconds {
+            if !s.is_finite() || s <= 0.0 {
+                bail!("serve.max_seconds must be > 0");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// An ordered batch of [`RunSpec`]s ready to enqueue.
+#[derive(Debug, Clone, Default)]
+pub struct Fleet {
+    /// Runs in scheduling order (fleet-file order).
+    pub specs: Vec<RunSpec>,
+}
+
+impl Fleet {
+    /// Load a fleet spec file: parses the `[serve]` options, loads every
+    /// `[fleet] configs` entry relative to the spec's directory, applies
+    /// `overrides` to each, and validates each run eagerly.
+    ///
+    /// Unknown keys are an error (same policy as
+    /// [`Config::from_file`]): a typo must not silently change what a
+    /// nightly fleet trains.
+    pub fn from_file(
+        path: &Path,
+        overrides: &[(String, String)],
+    ) -> Result<(Fleet, ServeOptions)> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading fleet spec {}: {e}", path.display()))?;
+        let map = parse_toml(&text)
+            .map_err(|e| anyhow!("parsing fleet spec {}: {e}", path.display()))?;
+
+        let mut opts = ServeOptions {
+            overrides: overrides.to_vec(),
+            ..ServeOptions::default()
+        };
+        let mut config_names: Vec<String> = Vec::new();
+        for (key, val) in &map {
+            match key.as_str() {
+                "serve.name" => {
+                    opts.name = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("serve.name must be a string"))?
+                        .to_string();
+                }
+                "serve.out_dir" => {
+                    opts.out_dir = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("serve.out_dir must be a string"))?
+                        .to_string();
+                }
+                "serve.max_concurrent" => {
+                    opts.max_concurrent = val
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("serve.max_concurrent must be an integer"))?;
+                }
+                "serve.status_every_ms" => {
+                    opts.status_every_ms = val
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("serve.status_every_ms must be an integer"))?
+                        as u64;
+                }
+                "serve.buffer" => {
+                    opts.buffer = val
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("serve.buffer must be an integer"))?;
+                }
+                "serve.spool" => {
+                    let s = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("serve.spool must be a string"))?;
+                    opts.spool = Some(resolve(path, s));
+                }
+                "serve.max_seconds" => {
+                    opts.max_seconds = Some(
+                        val.as_f64()
+                            .ok_or_else(|| anyhow!("serve.max_seconds must be a number"))?,
+                    );
+                }
+                "fleet.configs" => {
+                    config_names = val.as_str_list().ok_or_else(|| {
+                        anyhow!("fleet.configs must be a list of strings")
+                    })?;
+                }
+                other => bail!(
+                    "unknown key '{other}' in fleet spec {} (see docs/serving.md)",
+                    path.display()
+                ),
+            }
+        }
+        opts.validate()?;
+
+        let mut specs = Vec::with_capacity(config_names.len());
+        for name in &config_names {
+            let cfg_path = resolve(path, name);
+            let mut cfg = Config::from_file(&cfg_path)?;
+            cfg.apply_overrides(overrides)?;
+            let spec = RunSpec::new(cfg);
+            spec.validate()
+                .map_err(|e| anyhow!("fleet entry {}: {e}", cfg_path.display()))?;
+            specs.push(spec);
+        }
+        Ok((Fleet { specs }, opts))
+    }
+
+    /// Load one spooled scenario config (a plain `Config` TOML dropped
+    /// into the spool directory), applying the daemon's overrides.
+    pub fn load_spooled(
+        path: &Path,
+        overrides: &[(String, String)],
+    ) -> Result<RunSpec> {
+        let mut cfg = Config::from_file(path)?;
+        cfg.apply_overrides(overrides)?;
+        let spec = RunSpec::new(cfg);
+        spec.validate()
+            .map_err(|e| anyhow!("spooled config {}: {e}", path.display()))?;
+        Ok(spec)
+    }
+}
+
+/// Resolve `name` relative to the directory containing `spec_path`
+/// (absolute paths pass through).
+fn resolve(spec_path: &Path, name: &str) -> PathBuf {
+    let p = Path::new(name);
+    if p.is_absolute() {
+        p.to_path_buf()
+    } else {
+        spec_path.parent().unwrap_or(Path::new(".")).join(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write(dir: &Path, name: &str, text: &str) -> PathBuf {
+        let p = dir.join(name);
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pegrad_fleet_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const RUN_TOML: &str = r#"
+        run_name = "tiny"
+        mode = "rust_pegrad"
+        steps = 4
+        [model]
+        dims = [16, 8, 10]
+        m = 8
+    "#;
+
+    #[test]
+    fn loads_fleet_relative_to_spec() {
+        let d = tmpdir("rel");
+        write(&d, "tiny.toml", RUN_TOML);
+        let spec = write(
+            &d,
+            "fleet.toml",
+            r#"
+            [serve]
+            name = "smoke"
+            max_concurrent = 3
+            status_every_ms = 50
+            [fleet]
+            configs = ["tiny.toml", "tiny.toml"]
+            "#,
+        );
+        let (fleet, opts) = Fleet::from_file(&spec, &[]).unwrap();
+        assert_eq!(opts.name, "smoke");
+        assert_eq!(opts.max_concurrent, 3);
+        assert_eq!(opts.status_every_ms, 50);
+        assert_eq!(fleet.specs.len(), 2);
+        assert_eq!(fleet.specs[0].name, "tiny");
+        assert_eq!(fleet.specs[0].config.steps, 4);
+    }
+
+    #[test]
+    fn overrides_reach_every_run() {
+        let d = tmpdir("ovr");
+        write(&d, "tiny.toml", RUN_TOML);
+        let spec = write(&d, "fleet.toml", "[fleet]\nconfigs = [\"tiny.toml\"]\n");
+        let ov = vec![("steps".to_string(), "9".to_string())];
+        let (fleet, _) = Fleet::from_file(&spec, &ov).unwrap();
+        assert_eq!(fleet.specs[0].config.steps, 9);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_non_engine_modes() {
+        let d = tmpdir("bad");
+        write(&d, "tiny.toml", RUN_TOML);
+        let spec = write(&d, "fleet.toml", "[serve]\nnmae = \"x\"\n");
+        let err = Fleet::from_file(&spec, &[]).unwrap_err().to_string();
+        assert!(err.contains("unknown key"), "{err}");
+
+        let ov = vec![("mode".to_string(), "vanilla".to_string())];
+        let spec2 = write(&d, "fleet2.toml", "[fleet]\nconfigs = [\"tiny.toml\"]\n");
+        let err = Fleet::from_file(&spec2, &ov).unwrap_err().to_string();
+        assert!(err.contains("rust-engine"), "{err}");
+    }
+
+    #[test]
+    fn spooled_config_loads_and_validates() {
+        let d = tmpdir("spool");
+        let p = write(&d, "drop.toml", RUN_TOML);
+        let spec = Fleet::load_spooled(&p, &[]).unwrap();
+        assert_eq!(spec.name, "tiny");
+        assert!(spec.panic_after.is_none());
+    }
+}

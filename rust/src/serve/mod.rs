@@ -1,0 +1,41 @@
+//! `pegrad serve` — the concurrent multi-run training/monitoring
+//! daemon (system map: `docs/architecture.md`, operations guide:
+//! `docs/serving.md`).
+//!
+//! One process schedules N scenario runs at a time over the ONE shared
+//! scoped-dispatch threadpool ([`crate::util::threadpool`], whose
+//! workers never block on latches — the property that makes concurrent
+//! callers safe). Each run gets its own arena: its own
+//! [`crate::coordinator::Trainer`] (engine + workspace), its own run
+//! directory and stream writers, its
+//! own driver thread ([`crate::coordinator::trainer::RunSession`]).
+//! The only shared mutable state is the pool's job queue and the
+//! process-global trace counters.
+//!
+//! Work arrives two ways, composable:
+//! * a **fleet spec** — a TOML file listing scenario configs
+//!   ([`Fleet::from_file`], schema in `docs/serving.md`);
+//! * a **spool directory** — any `*.toml` config dropped into it while
+//!   the daemon runs is picked up and scheduled.
+//!
+//! The daemon appends a `serve.jsonl` status stream (tag
+//! [`SERVE_TAG`], schema v1 in `docs/streams.md`) with per-run state,
+//! steps/sec, queue depth and pool utilization — consumable live by
+//! `pegrad monitor --follow` and schema-checked by
+//! `scripts/validate_stream`. Graceful shutdown
+//! ([`ServeHandle::shutdown`], or `--max-seconds`) checkpoints every
+//! active run at a clean step boundary so each resumes bitwise
+//! (noise-free runs; proven in `tests/serve.rs`). A run that fails —
+//! or outright panics — is contained to its driver thread and reported
+//! in the stream without stalling its siblings.
+//!
+//! Throughput + tail latency at N = 1/2/4 concurrent runs are measured
+//! by `benches/e12_service.rs` and gated in CI by `scripts/perf_gate`.
+
+pub mod fleet;
+pub mod server;
+pub mod status;
+
+pub use fleet::{Fleet, RunSpec, ServeOptions};
+pub use server::{RunReport, RunState, ServeHandle, ServeReport, Server};
+pub use status::SERVE_TAG;

@@ -1,0 +1,806 @@
+//! The serve scheduler: driver threads, run lifecycle, status stream.
+//!
+//! One driver thread per *active* run (bounded by
+//! [`ServeOptions::max_concurrent`]); each driver builds its
+//! [`Trainer`] on-thread (the trainer is deliberately not `Send` — the
+//! engine arena never crosses threads) and advances it one step at a
+//! time via the session API, so the scheduler can interleave launches,
+//! spool pickups, status emission and shutdown between any two steps
+//! of any run. Compute still funnels through the ONE shared scoped
+//! threadpool; driver threads only orchestrate.
+//!
+//! Lifecycle per run: `pending → running → completed | interrupted |
+//! failed`. `interrupted` means graceful shutdown landed first: the run
+//! executed its in-flight step WITHOUT drawing the next selection
+//! lookahead, checkpointed synchronously, and will resume bitwise
+//! (noise-free configs; `tests/serve.rs` proves it). `failed` covers
+//! both `Err` returns and panics — a panicking run is contained to its
+//! driver thread by `catch_unwind` and reported in `serve.jsonl`
+//! without stalling siblings.
+//!
+//! Shutdown has three triggers, all funneling into one shared flag:
+//! [`ServeHandle::shutdown`] (any thread), the `--max-seconds`
+//! deadline, and fleet drain (no spool). See `docs/serving.md`.
+
+use std::collections::{HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{RunSummary, Trainer};
+use crate::serve::fleet::{Fleet, RunSpec, ServeOptions};
+use crate::serve::status::{render_status, RunStatus, ServeSnapshot};
+use crate::trace::StreamWriter;
+use crate::util::Timer;
+
+/// At most this many recent per-step latencies are kept per run (a
+/// ring, so long runs report their tail, not their warmup).
+const STEP_SAMPLE_CAP: usize = 4096;
+
+/// Scheduler poll cadence while runs are active (the step loop itself
+/// never waits on this — drivers run freely between polls).
+const POLL: Duration = Duration::from_millis(5);
+
+/// Spool rescan cadence.
+const SPOOL_SCAN: Duration = Duration::from_millis(200);
+
+/// Run lifecycle state, as reported in `serve.jsonl` and
+/// [`RunReport`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunState {
+    /// Accepted, waiting for a driver slot.
+    Pending,
+    /// Stepping on a driver thread.
+    Running,
+    /// Ran to its configured end step.
+    Completed,
+    /// Stopped early by graceful shutdown; a resume checkpoint was
+    /// written at a clean step boundary.
+    Interrupted,
+    /// Returned an error or panicked; siblings were unaffected.
+    Failed,
+}
+
+impl RunState {
+    /// The lowercase label used in `serve.jsonl` (`"state"` field).
+    pub fn label(&self) -> &'static str {
+        match self {
+            RunState::Pending => "pending",
+            RunState::Running => "running",
+            RunState::Completed => "completed",
+            RunState::Interrupted => "interrupted",
+            RunState::Failed => "failed",
+        }
+    }
+
+    /// True once the run can no longer change state.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            RunState::Completed | RunState::Interrupted | RunState::Failed
+        )
+    }
+}
+
+/// What one scheduled run came to: returned in
+/// [`ServeReport::runs`], in completion order.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Final (possibly uniquified) run name.
+    pub name: String,
+    /// Terminal state (`Completed`, `Interrupted` or `Failed`).
+    pub state: RunState,
+    /// Global step the trainer reached.
+    pub steps_done: usize,
+    /// Step the run was configured to stop at.
+    pub steps_total: usize,
+    /// The run directory (metrics, streams, checkpoints), when the
+    /// trainer got far enough to create one.
+    pub run_dir: Option<PathBuf>,
+    /// Shutdown checkpoint, for `Interrupted` runs.
+    pub checkpoint: Option<PathBuf>,
+    /// Error / panic message, for `Failed` runs.
+    pub error: Option<String>,
+    /// The trainer's own summary, for runs that finished a session.
+    pub summary: Option<RunSummary>,
+    /// Recent per-step wall latencies in ms (ring of the last
+    /// `STEP_SAMPLE_CAP`; the service bench derives p50/p99 here).
+    pub step_ms: Vec<f64>,
+}
+
+impl RunReport {
+    fn failed(name: &str, steps_total: usize, error: String) -> RunReport {
+        RunReport {
+            name: name.to_string(),
+            state: RunState::Failed,
+            steps_done: 0,
+            steps_total,
+            run_dir: None,
+            checkpoint: None,
+            error: Some(error),
+            summary: None,
+            step_ms: Vec::new(),
+        }
+    }
+}
+
+/// Everything `Server::run` came to, for the CLI / bench / tests.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Terminal reports, one per started run, in completion order.
+    pub runs: Vec<RunReport>,
+    /// Names of runs still queued when shutdown landed (never started,
+    /// nothing to resume — rerun them).
+    pub skipped: Vec<String>,
+    /// Spooled files that failed to load, with the reason (the daemon
+    /// keeps serving; a bad drop must not take down good runs).
+    pub spool_rejected: Vec<(PathBuf, String)>,
+    /// Where `serve.jsonl` landed.
+    pub status_path: PathBuf,
+    /// Status lines handed to the writer (backpressure drops excluded).
+    pub status_lines: u64,
+    /// Total serve wall time.
+    pub elapsed_secs: f64,
+}
+
+impl ServeReport {
+    /// How many runs ended in `state`.
+    pub fn count(&self, state: RunState) -> usize {
+        self.runs.iter().filter(|r| r.state == state).count()
+    }
+
+    /// Runs that reached their configured end step.
+    pub fn completed(&self) -> usize {
+        self.count(RunState::Completed)
+    }
+
+    /// Runs checkpointed early by graceful shutdown.
+    pub fn interrupted(&self) -> usize {
+        self.count(RunState::Interrupted)
+    }
+
+    /// Runs that errored or panicked.
+    pub fn failed(&self) -> usize {
+        self.count(RunState::Failed)
+    }
+}
+
+/// Cloneable remote control for a running [`Server`]: any thread may
+/// request graceful shutdown.
+#[derive(Debug, Clone)]
+pub struct ServeHandle {
+    stop: Arc<AtomicBool>,
+}
+
+impl ServeHandle {
+    /// Request graceful shutdown: every active run executes its
+    /// in-flight step, checkpoints, and reports `interrupted`; queued
+    /// runs are skipped; the server returns once all drivers join.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// True once shutdown has been requested (by any trigger).
+    pub fn is_shutdown(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+}
+
+/// Messages drivers post to the scheduler thread.
+enum Event {
+    /// The trainer constructed and the session opened.
+    Started { name: String, steps_total: usize },
+    /// One step executed.
+    Progress { name: String, step: usize },
+    /// The driver is done (boxed: reports carry curves).
+    Finished(Box<RunReport>),
+}
+
+/// Scheduler-side view of one launched run.
+struct Tracker {
+    name: String,
+    state: RunState,
+    step: usize,
+    steps_total: usize,
+    rate: f64,
+    /// `step` at the previous status emit (rate window).
+    last_step: usize,
+    error: Option<String>,
+    checkpoint: Option<PathBuf>,
+}
+
+/// The serve daemon: owns the queue, launches driver threads, emits
+/// `serve.jsonl`. Construct with [`Server::new`], feed it with
+/// [`Server::enqueue_fleet`] / a spool directory, then block on
+/// [`Server::run`].
+pub struct Server {
+    opts: ServeOptions,
+    queue: VecDeque<RunSpec>,
+    /// Every name ever accepted (uniquification set).
+    names: HashSet<String>,
+    /// Spool paths already ingested (good or bad) — a file is tried once.
+    spool_seen: HashSet<PathBuf>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Validate the options and build an idle server.
+    pub fn new(opts: ServeOptions) -> Result<Server> {
+        opts.validate()?;
+        Ok(Server {
+            opts,
+            queue: VecDeque::new(),
+            names: HashSet::new(),
+            spool_seen: HashSet::new(),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The session directory: `{out_dir}/{name}` (holds `serve.jsonl`).
+    pub fn session_dir(&self) -> PathBuf {
+        Path::new(&self.opts.out_dir).join(&self.opts.name)
+    }
+
+    /// A shutdown control usable from other threads.
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle {
+            stop: Arc::clone(&self.stop),
+        }
+    }
+
+    /// Accept one run. Collisions with any previously accepted name are
+    /// renamed `{name}-r2`, `{name}-r3`, … (the run directory must be
+    /// unique); the final name is returned and also written into the
+    /// spec's `run_name` so the run directory matches `serve.jsonl`.
+    pub fn enqueue(&mut self, mut spec: RunSpec) -> String {
+        let mut name = spec.name.clone();
+        let mut k = 2;
+        while !self.names.insert(name.clone()) {
+            name = format!("{}-r{k}", spec.name);
+            k += 1;
+        }
+        spec.name = name.clone();
+        spec.config.run_name = name.clone();
+        // runs of one serve session share the session's out_dir parent
+        spec.config.out_dir = self.opts.out_dir.clone();
+        self.queue.push_back(spec);
+        name
+    }
+
+    /// Accept a whole fleet, in fleet-file order.
+    pub fn enqueue_fleet(&mut self, fleet: Fleet) {
+        for spec in fleet.specs {
+            self.enqueue(spec);
+        }
+    }
+
+    /// Serve until drained (fleet mode), or until shutdown (spool mode /
+    /// [`ServeHandle::shutdown`] / the `max_seconds` deadline). Blocks;
+    /// returns once every driver thread has joined.
+    pub fn run(&mut self) -> Result<ServeReport> {
+        let dir = self.session_dir();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow!("creating serve dir {}: {e}", dir.display()))?;
+        let status_path = dir.join("serve.jsonl");
+        let writer = StreamWriter::create(&status_path, self.opts.buffer)?;
+        log::info!(
+            "serve '{}': {} queued, max_concurrent={}, status -> {}",
+            self.opts.name,
+            self.queue.len(),
+            self.opts.max_concurrent,
+            status_path.display()
+        );
+
+        // Pool utilization comes from the process-global PR-7 trace
+        // counters; keep them hot for the whole session (re-asserted
+        // per emit — a finishing traced run flips them off).
+        let trace_was = crate::trace::enabled();
+        crate::trace::set_enabled(true);
+        let workers = crate::util::threadpool::bands();
+        let mut pool_prev = crate::trace::counters().pool_busy_nanos;
+
+        let total = Timer::start();
+        let interval = Duration::from_millis(self.opts.status_every_ms);
+        let (tx, rx) = mpsc::channel::<Event>();
+        let mut trackers: Vec<Tracker> = Vec::new();
+        let mut reports: Vec<RunReport> = Vec::new();
+        let mut spool_rejected: Vec<(PathBuf, String)> = Vec::new();
+        let mut active: Vec<(String, std::thread::JoinHandle<()>)> = Vec::new();
+        let mut seq = 0u64;
+
+        // seq-0 snapshot before anything launches: a monitor attached
+        // at startup sees the full pending fleet immediately
+        self.scan_spool(&mut spool_rejected);
+        emit_status(
+            &writer,
+            &mut seq,
+            total.millis(),
+            total.secs(),
+            0.0,
+            workers,
+            &mut trackers,
+            &self.queue,
+            0,
+        );
+        let mut last_emit = Instant::now();
+        let mut last_scan = Instant::now();
+
+        loop {
+            if let Some(max_s) = self.opts.max_seconds {
+                if total.secs() >= max_s && !self.stop.load(Ordering::Relaxed) {
+                    log::info!("serve: max_seconds={max_s} reached, shutting down");
+                    self.stop.store(true, Ordering::Relaxed);
+                }
+            }
+            let stopping = self.stop.load(Ordering::Relaxed);
+
+            if !stopping && last_scan.elapsed() >= SPOOL_SCAN {
+                self.scan_spool(&mut spool_rejected);
+                last_scan = Instant::now();
+            }
+
+            while !stopping && active.len() < self.opts.max_concurrent {
+                let Some(spec) = self.queue.pop_front() else {
+                    break;
+                };
+                let name = spec.name.clone();
+                trackers.push(Tracker {
+                    name: name.clone(),
+                    state: RunState::Running,
+                    step: 0,
+                    steps_total: spec.config.steps,
+                    rate: 0.0,
+                    last_step: 0,
+                    error: None,
+                    checkpoint: None,
+                });
+                let stop = Arc::clone(&self.stop);
+                let txc = tx.clone();
+                log::info!("serve: starting run '{name}'");
+                let handle = std::thread::Builder::new()
+                    .name(format!("pegrad-run-{name}"))
+                    .spawn(move || drive(spec, stop, txc))
+                    .map_err(|e| anyhow!("spawning driver thread: {e}"))?;
+                active.push((name, handle));
+            }
+
+            drain_events(&rx, &mut trackers, &mut reports);
+
+            let mut still = Vec::new();
+            for (name, handle) in active.drain(..) {
+                if !handle.is_finished() {
+                    still.push((name, handle));
+                } else if handle.join().is_err() {
+                    // unreachable by construction (drive() never panics:
+                    // the run body is under catch_unwind) — but a run
+                    // must never vanish silently, so synthesize a report
+                    if let Some(t) = tracker_mut(&mut trackers, &name) {
+                        if !t.state.is_terminal() {
+                            t.state = RunState::Failed;
+                            t.error = Some("driver thread aborted".into());
+                            reports.push(RunReport::failed(
+                                &name,
+                                t.steps_total,
+                                "driver thread aborted".into(),
+                            ));
+                        }
+                    }
+                }
+            }
+            active = still;
+
+            if last_emit.elapsed() >= interval {
+                crate::trace::set_enabled(true);
+                let dt = last_emit.elapsed().as_secs_f64();
+                let util = pool_utilization(&mut pool_prev, workers, dt);
+                emit_status(
+                    &writer,
+                    &mut seq,
+                    total.millis(),
+                    dt,
+                    util,
+                    workers,
+                    &mut trackers,
+                    &self.queue,
+                    active.len(),
+                );
+                last_emit = Instant::now();
+            }
+
+            if active.is_empty()
+                && (stopping || (self.queue.is_empty() && self.opts.spool.is_none()))
+            {
+                break;
+            }
+            std::thread::sleep(POLL);
+        }
+
+        // Drivers have all joined; pick up any Finished events posted
+        // between the last drain and the join, then emit the final line.
+        drain_events(&rx, &mut trackers, &mut reports);
+        let dt = last_emit.elapsed().as_secs_f64();
+        let util = pool_utilization(&mut pool_prev, workers, dt);
+        emit_status(
+            &writer,
+            &mut seq,
+            total.millis(),
+            dt,
+            util,
+            workers,
+            &mut trackers,
+            &self.queue,
+            0,
+        );
+        let status_lines = seq;
+        let dropped = writer.finish();
+        if dropped > 0 {
+            log::warn!("serve: {dropped} status line(s) dropped under backpressure");
+        }
+        crate::trace::set_enabled(trace_was);
+
+        let skipped: Vec<String> =
+            self.queue.drain(..).map(|s| s.name).collect();
+        let report = ServeReport {
+            runs: reports,
+            skipped,
+            spool_rejected,
+            status_path,
+            status_lines,
+            elapsed_secs: total.secs(),
+        };
+        log::info!(
+            "serve '{}' done in {:.2}s: {} completed, {} interrupted, {} failed, {} skipped",
+            self.opts.name,
+            report.elapsed_secs,
+            report.completed(),
+            report.interrupted(),
+            report.failed(),
+            report.skipped.len()
+        );
+        Ok(report)
+    }
+
+    /// Ingest new `*.toml` drops from the spool directory (each file is
+    /// tried once; failures are recorded, never fatal).
+    fn scan_spool(&mut self, rejected: &mut Vec<(PathBuf, String)>) {
+        let Some(spool) = self.opts.spool.clone() else {
+            return;
+        };
+        let entries = match std::fs::read_dir(&spool) {
+            Ok(e) => e,
+            Err(e) => {
+                log::warn!("serve: cannot read spool {}: {e}", spool.display());
+                return;
+            }
+        };
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+            .filter(|p| !self.spool_seen.contains(p))
+            .collect();
+        paths.sort();
+        let overrides = self.opts.overrides.clone();
+        for path in paths {
+            self.spool_seen.insert(path.clone());
+            match Fleet::load_spooled(&path, &overrides) {
+                Ok(spec) => {
+                    let name = self.enqueue(spec);
+                    log::info!(
+                        "serve: spooled {} as run '{name}'",
+                        path.display()
+                    );
+                }
+                Err(e) => {
+                    log::warn!("serve: rejecting spooled {}: {e:#}", path.display());
+                    rejected.push((path, format!("{e:#}")));
+                }
+            }
+        }
+    }
+}
+
+fn tracker_mut<'a>(trackers: &'a mut [Tracker], name: &str) -> Option<&'a mut Tracker> {
+    trackers.iter_mut().find(|t| t.name == name)
+}
+
+fn drain_events(
+    rx: &mpsc::Receiver<Event>,
+    trackers: &mut [Tracker],
+    reports: &mut Vec<RunReport>,
+) {
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            Event::Started {
+                name, steps_total, ..
+            } => {
+                if let Some(t) = tracker_mut(trackers, &name) {
+                    t.steps_total = steps_total;
+                }
+            }
+            Event::Progress { name, step } => {
+                if let Some(t) = tracker_mut(trackers, &name) {
+                    t.step = step;
+                }
+            }
+            Event::Finished(r) => {
+                if let Some(t) = tracker_mut(trackers, &r.name) {
+                    t.state = r.state;
+                    t.step = t.step.max(r.steps_done);
+                    t.rate = 0.0;
+                    t.error = r.error.clone();
+                    t.checkpoint = r.checkpoint.clone();
+                }
+                log::info!(
+                    "serve: run '{}' {} at step {}{}",
+                    r.name,
+                    r.state.label(),
+                    r.steps_done,
+                    r.error.as_deref().map(|e| format!(": {e}")).unwrap_or_default()
+                );
+                reports.push(*r);
+            }
+        }
+    }
+}
+
+/// Diff the global pool-busy counter into a utilization fraction for
+/// the last `dt` seconds.
+fn pool_utilization(prev: &mut u64, workers: usize, dt: f64) -> f64 {
+    let cur = crate::trace::counters().pool_busy_nanos;
+    let busy = cur.saturating_sub(*prev) as f64;
+    *prev = cur;
+    if dt <= 0.0 || workers == 0 {
+        return 0.0;
+    }
+    (busy / (dt * 1e9 * workers as f64)).clamp(0.0, 1.0)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_status(
+    writer: &StreamWriter,
+    seq: &mut u64,
+    elapsed_ms: f64,
+    dt: f64,
+    pool_utilization: f64,
+    pool_workers: usize,
+    trackers: &mut [Tracker],
+    queue: &VecDeque<RunSpec>,
+    active: usize,
+) {
+    let mut rows: Vec<RunStatus> = Vec::with_capacity(trackers.len() + queue.len());
+    for t in trackers.iter_mut() {
+        if t.state == RunState::Running && dt > 0.0 {
+            t.rate = (t.step.saturating_sub(t.last_step)) as f64 / dt;
+        }
+        t.last_step = t.step;
+        rows.push(RunStatus {
+            run: t.name.clone(),
+            state: t.state.label(),
+            step: t.step,
+            steps_total: t.steps_total,
+            steps_per_sec: if t.state == RunState::Running { t.rate } else { 0.0 },
+            error: t.error.clone(),
+            checkpoint: t
+                .checkpoint
+                .as_ref()
+                .map(|p| p.display().to_string()),
+        });
+    }
+    for spec in queue {
+        rows.push(RunStatus {
+            run: spec.name.clone(),
+            state: RunState::Pending.label(),
+            step: 0,
+            steps_total: spec.config.steps,
+            steps_per_sec: 0.0,
+            error: None,
+            checkpoint: None,
+        });
+    }
+    let snap = ServeSnapshot {
+        seq: *seq,
+        elapsed_ms,
+        queue_depth: queue.len(),
+        active,
+        pool_workers,
+        pool_utilization,
+    };
+    writer.enqueue(render_status(&snap, &rows).to_string());
+    *seq += 1;
+}
+
+/// Driver-thread entry: everything that can fail or panic happens
+/// under `catch_unwind`, and exactly one `Finished` event is posted.
+fn drive(spec: RunSpec, stop: Arc<AtomicBool>, tx: mpsc::Sender<Event>) {
+    let name = spec.name.clone();
+    let steps_total = spec.config.steps;
+    let outcome = catch_unwind(AssertUnwindSafe(|| run_one(spec, &stop, &tx)));
+    let report = match outcome {
+        Ok(Ok(report)) => report,
+        Ok(Err(e)) => RunReport::failed(&name, steps_total, format!("{e:#}")),
+        Err(payload) => RunReport::failed(
+            &name,
+            steps_total,
+            format!("panic: {}", panic_text(payload.as_ref())),
+        ),
+    };
+    let _ = tx.send(Event::Finished(Box::new(report)));
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
+}
+
+/// The per-run body: build the trainer ON this thread, open a session,
+/// step until done or stopped, checkpoint on stop, close the session.
+fn run_one(
+    spec: RunSpec,
+    stop: &AtomicBool,
+    tx: &mpsc::Sender<Event>,
+) -> Result<RunReport> {
+    let RunSpec {
+        name,
+        config,
+        panic_after,
+    } = spec;
+    let mut tr = Trainer::new(config)?;
+    let run_dir = tr.metrics.dir().to_path_buf();
+    let mut session = tr.begin_session()?;
+    let steps_total = session.end_step();
+    let _ = tx.send(Event::Started {
+        name: name.clone(),
+        steps_total,
+    });
+
+    let mut ring: Vec<f64> = Vec::new();
+    let mut ring_at = 0usize;
+    loop {
+        if let Some(after) = panic_after {
+            if session.steps_executed() >= after {
+                panic!("chaos: injected panic in run '{name}' after {after} steps");
+            }
+        }
+        let stop_now = stop.load(Ordering::Relaxed);
+        let before = session.steps_executed();
+        let t = Timer::start();
+        let more = tr.step_session(&mut session, stop_now)?;
+        if session.steps_executed() > before {
+            let ms = t.millis();
+            if ring.len() < STEP_SAMPLE_CAP {
+                ring.push(ms);
+            } else {
+                ring[ring_at] = ms;
+                ring_at = (ring_at + 1) % STEP_SAMPLE_CAP;
+            }
+            let _ = tx.send(Event::Progress {
+                name: name.clone(),
+                step: tr.current_step(),
+            });
+        }
+        if !more {
+            break;
+        }
+    }
+
+    let interrupted = session.stopped();
+    // The stopped step drew no selection lookahead, so the RNG sits
+    // exactly where a fresh run would start the next step: this
+    // checkpoint resumes bitwise. Synchronous on purpose — shutdown
+    // must not race process exit.
+    let checkpoint = if interrupted {
+        Some(tr.save_checkpoint()?)
+    } else {
+        None
+    };
+    let steps_done = tr.current_step();
+    let summary = tr.finish_session(session)?;
+    Ok(RunReport {
+        name,
+        state: if interrupted {
+            RunState::Interrupted
+        } else {
+            RunState::Completed
+        },
+        steps_done,
+        steps_total,
+        run_dir: Some(run_dir),
+        checkpoint,
+        error: None,
+        summary: Some(summary),
+        step_ms: ring,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn tiny_cfg(name: &str, out: &Path, steps: usize) -> Config {
+        let mut cfg = Config::from_toml(
+            r#"
+            mode = "rust_pegrad"
+            steps = 4
+            eval_every = 0
+            checkpoint_every = 0
+            [data]
+            kind = "synth"
+            n = 64
+            [model]
+            dims = [8, 12, 4]
+            m = 8
+            "#,
+        )
+        .unwrap();
+        cfg.run_name = name.to_string();
+        cfg.out_dir = out.display().to_string();
+        cfg.steps = steps;
+        cfg
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("pegrad_serve_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn names_are_uniquified() {
+        let d = tmpdir("uniq");
+        let opts = ServeOptions {
+            out_dir: d.display().to_string(),
+            ..ServeOptions::default()
+        };
+        let mut server = Server::new(opts).unwrap();
+        let a = server.enqueue(RunSpec::new(tiny_cfg("x", &d, 2)));
+        let b = server.enqueue(RunSpec::new(tiny_cfg("x", &d, 2)));
+        let c = server.enqueue(RunSpec::new(tiny_cfg("x", &d, 2)));
+        assert_eq!(a, "x");
+        assert_eq!(b, "x-r2");
+        assert_eq!(c, "x-r3");
+    }
+
+    #[test]
+    fn fleet_drains_and_completes() {
+        let d = tmpdir("drain");
+        let opts = ServeOptions {
+            name: "sess".into(),
+            out_dir: d.display().to_string(),
+            max_concurrent: 2,
+            status_every_ms: 10,
+            ..ServeOptions::default()
+        };
+        let mut server = Server::new(opts).unwrap();
+        server.enqueue(RunSpec::new(tiny_cfg("a", &d, 3)));
+        server.enqueue(RunSpec::new(tiny_cfg("b", &d, 3)));
+        let report = server.run().unwrap();
+        assert_eq!(report.completed(), 2);
+        assert_eq!(report.failed(), 0);
+        assert!(report.status_lines >= 1);
+        assert!(report.status_path.exists());
+        for r in &report.runs {
+            assert_eq!(r.steps_done, 3);
+            assert_eq!(r.summary.as_ref().unwrap().steps, 3);
+            assert!(!r.step_ms.is_empty());
+        }
+    }
+
+    #[test]
+    fn rejects_zero_concurrency() {
+        let opts = ServeOptions {
+            max_concurrent: 0,
+            ..ServeOptions::default()
+        };
+        assert!(Server::new(opts).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! The `serve.jsonl` status stream: schema v1 rendering.
+//!
+//! One line per status interval (plus one final line at exit), tagged
+//! `"serve": "pegrad.serve"` so consumers can route it alongside the
+//! trace/telemetry/saliency streams. The full schema contract lives in
+//! `docs/streams.md`; `scripts/validate_stream` enforces it in CI.
+//!
+//! Rendering is pure: the server passes a snapshot of its trackers and
+//! this module builds the [`Json`] line. Keys are emitted through
+//! [`Json::obj`] (BTreeMap-backed), so key order is deterministic and
+//! lines are byte-diffable across runs.
+
+use crate::util::json::Json;
+
+/// Tag value carried by every `serve.jsonl` line (key `"serve"`),
+/// mirroring [`crate::trace::TRACE_TAG`] et al. for the other streams.
+pub const SERVE_TAG: &str = "pegrad.serve";
+
+/// `serve.jsonl` schema version emitted in the `"v"` field.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Snapshot of one scheduled run, as the status renderer sees it.
+///
+/// The server owns the mutable tracker; this is the flattened view it
+/// hands to [`render_status`] each interval.
+#[derive(Debug, Clone)]
+pub struct RunStatus {
+    /// Run name (unique within the serve session; doubles as the run
+    /// directory name).
+    pub run: String,
+    /// Lifecycle state label: `pending`, `running`, `completed`,
+    /// `interrupted` or `failed`.
+    pub state: &'static str,
+    /// Global step the trainer has reached (0 until the run starts).
+    pub step: usize,
+    /// Step this run will stop at (config `steps`, plus any restored
+    /// offset).
+    pub steps_total: usize,
+    /// Steps/sec over the last status interval (0 when idle).
+    pub steps_per_sec: f64,
+    /// Error message, present only for `failed` runs.
+    pub error: Option<String>,
+    /// Shutdown checkpoint path, present only for `interrupted` runs.
+    pub checkpoint: Option<String>,
+}
+
+/// Aggregate, non-per-run fields of one status line.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeSnapshot {
+    /// Monotone line sequence number, from 0.
+    pub seq: u64,
+    /// Milliseconds since the server started.
+    pub elapsed_ms: f64,
+    /// Runs accepted but not yet started.
+    pub queue_depth: usize,
+    /// Runs currently stepping on a driver thread.
+    pub active: usize,
+    /// Shared-threadpool worker count.
+    pub pool_workers: usize,
+    /// Fraction of worker capacity busy over the last interval, in
+    /// `[0, 1]` (diffed from the PR-7 trace counters).
+    pub pool_utilization: f64,
+}
+
+/// Build one `serve.jsonl` line (schema v1; see `docs/streams.md`).
+pub fn render_status(snap: &ServeSnapshot, runs: &[RunStatus]) -> Json {
+    let mut completed = 0usize;
+    let mut interrupted = 0usize;
+    let mut failed = 0usize;
+    for r in runs {
+        match r.state {
+            "completed" => completed += 1,
+            "interrupted" => interrupted += 1,
+            "failed" => failed += 1,
+            _ => {}
+        }
+    }
+    let run_rows: Vec<Json> = runs.iter().map(render_run).collect();
+    Json::obj(vec![
+        ("v", Json::num(SCHEMA_VERSION as f64)),
+        ("serve", Json::str(SERVE_TAG)),
+        ("seq", Json::num(snap.seq as f64)),
+        ("elapsed_ms", Json::num(snap.elapsed_ms)),
+        ("queue_depth", Json::num(snap.queue_depth as f64)),
+        ("active", Json::num(snap.active as f64)),
+        ("completed", Json::num(completed as f64)),
+        ("interrupted", Json::num(interrupted as f64)),
+        ("failed", Json::num(failed as f64)),
+        (
+            "pool",
+            Json::obj(vec![
+                ("workers", Json::num(snap.pool_workers as f64)),
+                ("utilization", Json::num(snap.pool_utilization)),
+            ]),
+        ),
+        ("runs", Json::Arr(run_rows)),
+    ])
+}
+
+fn render_run(r: &RunStatus) -> Json {
+    let mut pairs = vec![
+        ("run", Json::str(r.run.as_str())),
+        ("state", Json::str(r.state)),
+        ("step", Json::num(r.step as f64)),
+        ("steps_total", Json::num(r.steps_total as f64)),
+        ("steps_per_sec", Json::num(r.steps_per_sec)),
+    ];
+    if let Some(e) = &r.error {
+        pairs.push(("error", Json::str(e.as_str())));
+    }
+    if let Some(c) = &r.checkpoint {
+        pairs.push(("checkpoint", Json::str(c.as_str())));
+    }
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(state: &'static str) -> RunStatus {
+        RunStatus {
+            run: "r".into(),
+            state,
+            step: 3,
+            steps_total: 10,
+            steps_per_sec: 12.5,
+            error: None,
+            checkpoint: None,
+        }
+    }
+
+    #[test]
+    fn line_has_tag_version_and_counts() {
+        let snap = ServeSnapshot {
+            seq: 2,
+            elapsed_ms: 40.0,
+            queue_depth: 1,
+            active: 1,
+            pool_workers: 8,
+            pool_utilization: 0.5,
+        };
+        let runs = vec![run("running"), run("completed"), run("failed")];
+        let line = render_status(&snap, &runs);
+        assert_eq!(line.get("serve").unwrap().as_str().unwrap(), SERVE_TAG);
+        assert_eq!(line.get("v").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(line.get("seq").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(line.get("completed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(line.get("failed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(line.get("interrupted").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(
+            line.get("pool").unwrap().get("workers").unwrap().as_usize(),
+            Some(8)
+        );
+        assert_eq!(line.get("runs").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn error_and_checkpoint_are_optional() {
+        let mut ok = run("running");
+        ok.checkpoint = None;
+        let row = render_run(&ok);
+        assert!(row.get("error").is_none());
+        assert!(row.get("checkpoint").is_none());
+
+        let mut bad = run("failed");
+        bad.error = Some("boom".into());
+        let row = render_run(&bad);
+        assert_eq!(row.get("error").unwrap().as_str().unwrap(), "boom");
+
+        let mut stopped = run("interrupted");
+        stopped.checkpoint = Some("runs/a/ckpt.pegd".into());
+        let row = render_run(&stopped);
+        assert!(row.get("checkpoint").unwrap().as_str().is_some());
+    }
+
+    #[test]
+    fn lines_are_parseable_jsonl() {
+        let snap = ServeSnapshot {
+            seq: 0,
+            elapsed_ms: 0.0,
+            queue_depth: 0,
+            active: 0,
+            pool_workers: 4,
+            pool_utilization: 0.0,
+        };
+        let text = render_status(&snap, &[]).to_string();
+        assert!(!text.contains('\n'));
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("runs").unwrap().as_arr().unwrap().len(), 0);
+    }
+}

@@ -89,6 +89,7 @@ impl Default for ClipConfig {
 }
 
 impl ClipConfig {
+    /// Reject out-of-range controller settings.
     pub fn validate(&self) -> anyhow::Result<()> {
         if !(0.0 < self.quantile && self.quantile < 1.0) {
             anyhow::bail!("clip.quantile must be in (0,1)");
@@ -131,9 +132,13 @@ pub fn clip_update(c: f64, q_hat: f64, cfg: &ClipConfig) -> f64 {
 /// `docs/observability.md`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClipState {
+    /// The quantile sketch state.
     pub sketch: P2State,
+    /// Current clip bound.
     pub c: f64,
+    /// Initial bound (the warmup fallback).
     pub init_c: f64,
+    /// Observed steps.
     pub steps: u64,
 }
 
@@ -178,6 +183,7 @@ impl ClipController {
         self.c as f32
     }
 
+    /// The initial bound the controller started from.
     pub fn init_bound(&self) -> f32 {
         self.init_c as f32
     }
@@ -197,6 +203,7 @@ impl ClipController {
         self.last_estimate
     }
 
+    /// The controller configuration.
     pub fn config(&self) -> &ClipConfig {
         &self.cfg
     }

@@ -80,6 +80,7 @@ impl GnsEstimate {
         }
     }
 
+    /// Estimate as a JSON object (non-finite values become `null`).
     pub fn to_json(&self) -> Json {
         let num_or_null = |v: f64| if v.is_finite() { Json::num(v) } else { Json::Null };
         Json::obj(vec![
@@ -105,10 +106,12 @@ impl GnsEstimator {
         }
     }
 
+    /// Steps folded into the moment accumulators.
     pub fn steps(&self) -> u64 {
         self.steps
     }
 
+    /// Steps skipped (batch too small to identify the decomposition).
     pub fn skipped(&self) -> u64 {
         self.skipped
     }
@@ -163,6 +166,7 @@ impl GnsEstimator {
         Some(GnsEstimate::from_moments(self.m, small, big))
     }
 
+    /// Per-layer and whole-model estimates as a JSON object.
     pub fn to_json(&self) -> Json {
         let per_layer = match self.per_layer() {
             Some(v) => Json::Arr(v.iter().map(GnsEstimate::to_json).collect()),

@@ -54,6 +54,8 @@
 //! `telemetry.json` snapshot. The versioned line schema, the paired
 //! `trace.jsonl` step-tracing stream and the overhead guarantees are
 //! documented in `docs/observability.md`.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod adaptive;
 pub mod diff;
@@ -97,8 +99,12 @@ pub use sketch::{P2Quantile, P2State, StreamingHistogram};
 ///   conv, `1` for dense). Default: ignore — existing sinks are
 ///   unaffected, and with saliency off (the default) it never fires.
 pub trait LayerTap {
+    /// One weighted layer's per-example squared norms, in stream order.
     fn on_layer(&mut self, layer: usize, s_layer: &[f32]);
+    /// End of step: final per-example squared norms and losses.
     fn on_step_end(&mut self, s_total: &[f32], per_ex_loss: &[f32]);
+    /// One weighted layer's per-position saliency maps (rows of
+    /// `map_len`, one per example); default ignores them.
     fn on_layer_map(&mut self, layer: usize, map_len: usize, maps: &[f32]) {
         let _ = (layer, map_len, maps);
     }
@@ -110,8 +116,11 @@ pub trait LayerTap {
 pub struct RecordingTap {
     /// `layers[l][j] = s_j^(l)` in stream order (index by layer).
     pub layers: Vec<(usize, Vec<f32>)>,
+    /// Final per-example squared norms of the last step.
     pub s_total: Vec<f32>,
+    /// Per-example losses of the last step.
     pub per_ex_loss: Vec<f32>,
+    /// `on_step_end` calls seen.
     pub steps_ended: usize,
     /// `(layer, map_len, maps)` per `on_layer_map` call, stream order.
     pub maps: Vec<(usize, usize, Vec<f32>)>,
@@ -138,7 +147,9 @@ impl LayerTap for RecordingTap {
 /// clip controller on the stream, the trainer tees them — each sink sees
 /// exactly the stream it would have seen alone.
 pub struct TeeTap<'a> {
+    /// First sink (sees every event before `second`).
     pub first: &'a mut dyn LayerTap,
+    /// Second sink.
     pub second: &'a mut dyn LayerTap,
 }
 
@@ -213,6 +224,7 @@ impl Default for TelemetryConfig {
 }
 
 impl TelemetryConfig {
+    /// Reject out-of-range telemetry settings.
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.bins < 2 {
             anyhow::bail!("telemetry.bins must be >= 2");

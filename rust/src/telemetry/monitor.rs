@@ -139,10 +139,12 @@ impl TelemetryMonitor {
         self.steps
     }
 
+    /// Outliers flagged on the most recent step.
     pub fn flagged_last_step(&self) -> usize {
         self.flagged_last_step
     }
 
+    /// The outlier detector.
     pub fn outliers(&self) -> &OutlierDetector {
         &self.outliers
     }
@@ -153,6 +155,7 @@ impl TelemetryMonitor {
         &mut self.outliers
     }
 
+    /// The gradient-noise-scale estimator.
     pub fn gns(&self) -> &GnsEstimator {
         &self.gns
     }
@@ -223,10 +226,13 @@ impl TelemetryMonitor {
         j
     }
 
+    /// Write the final report JSON to `path`.
     pub fn write_report(&self, path: &Path) -> Result<()> {
         self.write_report_with(path, None)
     }
 
+    /// [`TelemetryMonitor::write_report`] with extra top-level fields
+    /// merged in (the trainer adds run context).
     pub fn write_report_with(
         &self,
         path: &Path,

@@ -50,8 +50,11 @@ impl Default for OutlierConfig {
 /// history would silently skew a `pegrad audit` ranking.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlagState {
+    /// Per-example flag count, indexed by dataset row.
     pub counts: Vec<u32>,
+    /// Steps the detector has observed.
     pub steps: u64,
+    /// Total flags raised across all steps.
     pub total_flags: u64,
 }
 
@@ -69,6 +72,7 @@ pub struct OutlierDetector {
 }
 
 impl OutlierDetector {
+    /// Detector for a dataset of `dataset_n` examples.
     pub fn new(dataset_n: usize, cfg: OutlierConfig) -> OutlierDetector {
         assert!(cfg.quantile > 0.0 && cfg.quantile < 1.0);
         assert!(cfg.zscore > 0.0);
@@ -139,18 +143,22 @@ impl OutlierDetector {
         self.last_flagged.len()
     }
 
+    /// Steps observed so far.
     pub fn steps(&self) -> usize {
         self.steps
     }
 
+    /// Total flags raised across all steps.
     pub fn total_flags(&self) -> u64 {
         self.total_flags
     }
 
+    /// Flag count for one dataset index (0 if out of range).
     pub fn flag_count(&self, idx: usize) -> u32 {
         self.flag_counts.get(idx).copied().unwrap_or(0)
     }
 
+    /// Indices flagged on the most recent step (deduplicated).
     pub fn last_flagged(&self) -> &[usize] {
         &self.last_flagged
     }
@@ -194,6 +202,7 @@ impl OutlierDetector {
         v
     }
 
+    /// Report object: config, counters, and the `top_k` most-flagged rows.
     pub fn to_json(&self, top_k: usize) -> Json {
         let top = self.top_flagged(top_k);
         Json::obj(vec![

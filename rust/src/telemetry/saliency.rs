@@ -74,6 +74,7 @@ impl Default for AuditConfig {
 }
 
 impl AuditConfig {
+    /// Reject out-of-range audit settings.
     pub fn validate(&self) -> Result<()> {
         if self.top_n < 1 {
             anyhow::bail!("audit.top_n must be >= 1");
@@ -124,6 +125,8 @@ pub struct SaliencyTap {
 }
 
 impl SaliencyTap {
+    /// Tap over the weighted layers’ map `shapes`, sized for batches up
+    /// to `m_max`.
     pub fn new(shapes: &[(usize, usize)], m_max: usize, cfg: &AuditConfig) -> SaliencyTap {
         let lens: Vec<usize> = shapes.iter().map(|&(h, w)| h * w).collect();
         let mut offsets = Vec::with_capacity(lens.len());

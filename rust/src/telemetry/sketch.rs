@@ -30,6 +30,7 @@ impl StreamingHistogram {
         StreamingHistogram::with_range(bins, -20.0, 20.0)
     }
 
+    /// Histogram with an explicit log2 bucket range.
     pub fn with_range(bins: usize, lo_log2: f64, hi_log2: f64) -> StreamingHistogram {
         assert!(bins >= 2, "histogram needs >= 2 bins");
         assert!(lo_log2 < hi_log2, "empty histogram range");
@@ -43,18 +44,22 @@ impl StreamingHistogram {
         }
     }
 
+    /// Number of in-range buckets.
     pub fn bins(&self) -> usize {
         self.counts.len()
     }
 
+    /// In-range bucket counts.
     pub fn counts(&self) -> &[u64] {
         &self.counts
     }
 
+    /// Observations below the bucket range.
     pub fn underflow(&self) -> u64 {
         self.underflow
     }
 
+    /// Observations above the bucket range.
     pub fn overflow(&self) -> u64 {
         self.overflow
     }
@@ -80,6 +85,7 @@ impl StreamingHistogram {
         Some(((frac * self.counts.len() as f64) as usize).min(self.counts.len() - 1))
     }
 
+    /// Fold in one observation.
     pub fn push(&mut self, x: f32) {
         self.total += 1;
         match self.bin_index(x) {
@@ -149,6 +155,7 @@ impl StreamingHistogram {
         self.total += other.total;
     }
 
+    /// Histogram as a JSON object (range, counts, over/underflow).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("lo_log2", Json::num(self.lo_log2)),
@@ -182,6 +189,7 @@ pub struct P2Quantile {
 }
 
 impl P2Quantile {
+    /// Sketch tracking the `p` quantile, `p` in (0, 1).
     pub fn new(p: f64) -> P2Quantile {
         assert!(p > 0.0 && p < 1.0, "quantile must be in (0,1)");
         P2Quantile {
@@ -194,14 +202,17 @@ impl P2Quantile {
         }
     }
 
+    /// The tracked quantile.
     pub fn p(&self) -> f64 {
         self.p
     }
 
+    /// Observations seen.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Fold in one observation (P² marker update).
     pub fn push(&mut self, x: f32) {
         let x = x as f64;
         if !x.is_finite() {
@@ -323,10 +334,15 @@ impl P2Quantile {
 /// are derivable from `p` and deliberately not part of the state.
 #[derive(Debug, Clone, PartialEq)]
 pub struct P2State {
+    /// The tracked quantile.
     pub p: f64,
+    /// Marker heights.
     pub q: [f64; 5],
+    /// Actual marker positions.
     pub n: [f64; 5],
+    /// Desired marker positions.
     pub np: [f64; 5],
+    /// Observations seen.
     pub count: u64,
 }
 

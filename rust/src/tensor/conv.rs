@@ -33,11 +33,17 @@ use crate::util::threadpool;
 /// convolution; see [`ConvGeom::unit`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvGeom {
+    /// Input height.
     pub in_h: usize,
+    /// Input width.
     pub in_w: usize,
+    /// Input channel count.
     pub in_ch: usize,
+    /// Square kernel side length.
     pub k: usize,
+    /// Stride (same in both spatial dims).
     pub stride: usize,
+    /// Symmetric zero padding (same in both spatial dims).
     pub pad: usize,
 }
 
@@ -54,10 +60,12 @@ impl ConvGeom {
         }
     }
 
+    /// Output height.
     pub fn out_h(&self) -> usize {
         (self.in_h + 2 * self.pad - self.k) / self.stride + 1
     }
 
+    /// Output width.
     pub fn out_w(&self) -> usize {
         (self.in_w + 2 * self.pad - self.k) / self.stride + 1
     }
@@ -72,6 +80,7 @@ impl ConvGeom {
         self.k * self.k * self.in_ch
     }
 
+    /// Flattened input length `in_h * in_w * in_ch`.
     pub fn in_len(&self) -> usize {
         self.in_h * self.in_w * self.in_ch
     }

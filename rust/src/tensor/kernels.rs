@@ -49,6 +49,7 @@ pub const NR: usize = 2 * LANES;
 /// plain slice kernels — banding/threading stays in the callers, so one
 /// implementation serves serial and band-parallel paths identically.
 pub trait Microkernel: Send + Sync {
+    /// Kernel name (`"scalar"` / `"packed"`) for logs and bench tables.
     fn name(&self) -> &'static str;
 
     /// `C[i - r0, :] += Σ_kk A[i, kk] · B[kk, :]` for `i ∈ [r0, r1)`.

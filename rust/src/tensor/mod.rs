@@ -6,6 +6,8 @@
 //! the E1 instrumented-flop baseline. The PJRT artifacts remain the
 //! production compute path; this module is the *oracle* and the CPU
 //! baseline the benches compare against.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod conv;
 pub mod kernels;
@@ -26,6 +28,8 @@ pub struct Tensor {
 
 impl Tensor {
     // ------------------------------------------------------------ construct
+    /// Build a tensor from a shape and its row-major data (panics on
+    /// a length mismatch).
     pub fn new(shape: impl Into<Shape>, data: Vec<f32>) -> Self {
         let shape = shape.into();
         assert_eq!(
@@ -39,6 +43,7 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// All-zeros tensor.
     pub fn zeros(shape: impl Into<Shape>) -> Self {
         let shape = shape.into();
         let n = shape.numel();
@@ -48,10 +53,12 @@ impl Tensor {
         }
     }
 
+    /// All-ones tensor.
     pub fn ones(shape: impl Into<Shape>) -> Self {
         Self::full(shape, 1.0)
     }
 
+    /// Tensor filled with `v`.
     pub fn full(shape: impl Into<Shape>, v: f32) -> Self {
         let shape = shape.into();
         let n = shape.numel();
@@ -61,6 +68,7 @@ impl Tensor {
         }
     }
 
+    /// Rank-0 tensor holding one value.
     pub fn scalar(v: f32) -> Self {
         Tensor::new(vec![], vec![v])
     }
@@ -86,30 +94,37 @@ impl Tensor {
     }
 
     // --------------------------------------------------------------- access
+    /// The tensor shape.
     pub fn shape(&self) -> &Shape {
         &self.shape
     }
 
+    /// Dimension sizes, outermost first.
     pub fn dims(&self) -> &[usize] {
         self.shape.dims()
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.rank()
     }
 
+    /// Row-major element slice.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major element slice.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, returning its row-major data.
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
@@ -121,6 +136,7 @@ impl Tensor {
         self.data[i * cols + j]
     }
 
+    /// 2-D element store (row-major).
     pub fn set2(&mut self, i: usize, j: usize, v: f32) {
         debug_assert_eq!(self.rank(), 2);
         let cols = self.dims()[1];

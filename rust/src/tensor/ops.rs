@@ -75,22 +75,27 @@ fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
     Tensor::new(a.dims().to_vec(), data)
 }
 
+/// Elementwise `a + b` (shapes must match).
 pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
     zip(a, b, |x, y| x + y)
 }
 
+/// Elementwise `a - b` (shapes must match).
 pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
     zip(a, b, |x, y| x - y)
 }
 
+/// Elementwise `a * b` (shapes must match).
 pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
     zip(a, b, |x, y| x * y)
 }
 
+/// Elementwise map of `f` over `a` into a new tensor.
 pub fn map(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
     Tensor::new(a.dims().to_vec(), a.data().iter().map(|&x| f(x)).collect())
 }
 
+/// Every element of `a` scaled by `s`.
 pub fn scale(a: &Tensor, s: f32) -> Tensor {
     map(a, |x| x * s)
 }
@@ -121,10 +126,12 @@ pub fn scale_rows(a: &Tensor, coef: &[f32]) -> Tensor {
 // Reductions
 // ---------------------------------------------------------------------------
 
+/// Sum of all elements, in storage order.
 pub fn sum(a: &Tensor) -> f32 {
     a.data().iter().sum()
 }
 
+/// Mean of all elements.
 pub fn mean(a: &Tensor) -> f32 {
     sum(a) / a.numel() as f32
 }
@@ -181,14 +188,20 @@ pub fn row_argmax_rows(a: &[f32], m: usize, n: usize) -> Vec<usize> {
 /// Activation kind; mirrors `python/compile/model.py::ACTIVATIONS`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Activation {
+    /// `max(z, 0)`.
     Relu,
+    /// Hyperbolic tangent.
     Tanh,
+    /// Tanh-approximation GELU.
     Gelu,
+    /// Logistic sigmoid.
     Sigmoid,
+    /// Pass-through (linear output layers).
     Identity,
 }
 
 impl Activation {
+    /// Parse an activation name (`"relu"`, `"tanh"`, …); `None` if unknown.
     pub fn parse(s: &str) -> Option<Activation> {
         Some(match s {
             "relu" => Activation::Relu,
@@ -200,6 +213,7 @@ impl Activation {
         })
     }
 
+    /// The canonical name [`Activation::parse`] accepts.
     pub fn name(&self) -> &'static str {
         match self {
             Activation::Relu => "relu",
@@ -210,6 +224,7 @@ impl Activation {
         }
     }
 
+    /// phi(z).
     pub fn apply(&self, z: f32) -> f32 {
         match self {
             Activation::Relu => z.max(0.0),
@@ -267,6 +282,7 @@ fn gelu_grad(z: f32) -> f32 {
 // Softmax / log-softmax (rowwise, numerically stable)
 // ---------------------------------------------------------------------------
 
+/// Row-wise log-softmax of a rank-2 tensor (max-shifted, f64 log-sum-exp).
 pub fn log_softmax_rows(a: &Tensor) -> Tensor {
     let (m, n) = (a.dims()[0], a.dims()[1]);
     let mut out = a.clone();
@@ -281,6 +297,7 @@ pub fn log_softmax_rows(a: &Tensor) -> Tensor {
     out
 }
 
+/// Row-wise softmax of a rank-2 tensor (via [`log_softmax_rows`]).
 pub fn softmax_rows(a: &Tensor) -> Tensor {
     map(&log_softmax_rows(a), f32::exp)
 }
@@ -329,6 +346,7 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     out
 }
 
+/// Transpose of a rank-2 tensor (materialized, cache-blocked copy).
 pub fn transpose(a: &Tensor) -> Tensor {
     let (m, n) = (a.dims()[0], a.dims()[1]);
     let mut out = Tensor::zeros(vec![n, m]);

@@ -22,6 +22,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// RNG seeded deterministically from `seed` (splitmix64 expansion).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -38,6 +39,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407))
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[0]
@@ -103,6 +105,7 @@ impl Rng {
         self.s
     }
 
+    /// Rebuild an RNG from a captured [`Rng::state`].
     pub fn from_state(s: [u64; 4]) -> Self {
         Rng { s, spare: None }
     }

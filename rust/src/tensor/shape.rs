@@ -5,18 +5,22 @@
 pub struct Shape(Vec<usize>);
 
 impl Shape {
+    /// Shape from a dimension list.
     pub fn new(dims: Vec<usize>) -> Self {
         Shape(dims)
     }
 
+    /// The dimension list.
     pub fn dims(&self) -> &[usize] {
         &self.0
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.0.len()
     }
 
+    /// Total element count (1 for rank 0).
     pub fn numel(&self) -> usize {
         self.0.iter().product()
     }
@@ -36,6 +40,7 @@ impl Shape {
         self.0[0]
     }
 
+    /// Columns of a rank-2 shape (panics otherwise).
     pub fn cols(&self) -> usize {
         assert_eq!(self.rank(), 2, "cols() on rank-{}", self.rank());
         self.0[1]

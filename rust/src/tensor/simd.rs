@@ -29,6 +29,7 @@ pub struct F32x8(pub [f32; LANES]);
 
 impl F32x8 {
     #[inline(always)]
+    /// All eight lanes set to `v`.
     pub fn splat(v: f32) -> F32x8 {
         F32x8([v; LANES])
     }
@@ -48,6 +49,7 @@ impl F32x8 {
     }
 
     #[inline(always)]
+    /// Lanewise addition.
     pub fn add(mut self, o: F32x8) -> F32x8 {
         for (a, b) in self.0.iter_mut().zip(o.0) {
             *a += b;
@@ -56,6 +58,7 @@ impl F32x8 {
     }
 
     #[inline(always)]
+    /// Lanewise multiplication.
     pub fn mul(mut self, o: F32x8) -> F32x8 {
         for (a, b) in self.0.iter_mut().zip(o.0) {
             *a *= b;

@@ -33,6 +33,8 @@
 //! engine, kernels and threadpool know only the free functions here
 //! ([`span`], [`count_kernel`], [`pool_busy`]); all aggregation state
 //! lives in [`Recorder`], which is owned and driven by the trainer.
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod writer;
 
@@ -42,7 +44,7 @@ use std::time::Instant;
 use crate::telemetry::sketch::P2Quantile;
 use crate::util::Json;
 
-pub use writer::StreamWriter;
+pub use writer::{BlobWriter, StreamWriter};
 
 /// Identifying tag every trace record carries (`"trace"` field), the
 /// dual of [`crate::telemetry::REPORT_TAG`].
@@ -238,12 +240,19 @@ pub fn pool_busy(ns: u64) {
 /// during a run.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
+    /// Cumulative nanoseconds spent inside each phase span.
     pub phase_nanos: [u64; PHASE_COUNT],
+    /// Cumulative span entry count per phase.
     pub phase_counts: [u64; PHASE_COUNT],
+    /// Cumulative dispatched-call count per kernel kind.
     pub kernel_calls: [u64; KERNEL_KIND_COUNT],
+    /// Cumulative band (parallel job) count per kernel kind.
     pub kernel_bands: [u64; KERNEL_KIND_COUNT],
+    /// Cumulative bytes touched per kernel kind (analytic estimate).
     pub kernel_bytes: [u64; KERNEL_KIND_COUNT],
+    /// Cumulative worker busy time across the shared pool.
     pub pool_busy_nanos: u64,
+    /// Cumulative jobs executed by the shared pool.
     pub pool_jobs: u64,
 }
 
@@ -333,6 +342,7 @@ impl Default for TraceConfig {
 }
 
 impl TraceConfig {
+    /// Reject impossible settings (zero-sized ring buffer).
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.buffer == 0 {
             anyhow::bail!("trace.buffer must be >= 1");
@@ -348,6 +358,7 @@ impl TraceConfig {
 /// One ring slot: the phase-span breakdown of a single training step.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepSpans {
+    /// Step index the spans belong to.
     pub step: u64,
     /// Whole-step wall time as measured by the trainer's step timer.
     pub step_nanos: u64,

@@ -12,13 +12,19 @@
 //! Line integrity: exactly one thread writes the sink, one
 //! `write_all(line) + write_all(b"\n")` pair per record — lines are
 //! never torn or interleaved (asserted by the backpressure test in
-//! `tests/trace.rs`). Schemas for the two streams the trainer emits
-//! (`telemetry.jsonl`, `trace.jsonl`) are documented in
-//! `docs/observability.md`.
+//! `tests/trace.rs`). Line schemas for the streams the trainer and the
+//! serve scheduler emit are documented in `docs/streams.md`; the
+//! overhead contract lives in `docs/observability.md`.
+//!
+//! [`BlobWriter`] is the same double-buffered pattern applied to whole
+//! binary artifacts (checkpoints): the hot path enqueues
+//! `(path, bytes)` jobs, a dedicated thread performs the
+//! write-temp-then-rename dance, and a full queue drops (and counts)
+//! rather than stalling a training step on the disk.
 
 use std::fs::OpenOptions;
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -165,6 +171,161 @@ impl Drop for StreamWriter {
     }
 }
 
+/// One queued binary artifact: write `bytes` to `path` atomically
+/// (temp file + rename, exactly like `Checkpoint::save`).
+struct BlobJob {
+    path: PathBuf,
+    bytes: Vec<u8>,
+}
+
+struct BlobShared {
+    queue: Mutex<Vec<BlobJob>>,
+    wake: Condvar,
+    cap: usize,
+    shutdown: AtomicBool,
+    dropped: AtomicU64,
+    written: AtomicU64,
+    failed: AtomicU64,
+}
+
+/// Off-hot-path writer for whole binary files (checkpoints). Same
+/// contract as [`StreamWriter`]: the producer enqueues under a mutex
+/// held for O(1) work, a dedicated `pegrad-blob-writer` thread swaps
+/// the queue out and owns all disk traffic, and a full queue drops the
+/// newest job (counted) instead of blocking a step. Every blob lands
+/// via write-temp-then-rename, so a reader (or a crash) never observes
+/// a torn file — at worst the previous version survives.
+pub struct BlobWriter {
+    shared: Arc<BlobShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Write `bytes` to `path` atomically: temp file, `sync_all`, rename.
+/// Creates parent directories. Shared by [`BlobWriter`] and the
+/// synchronous `Checkpoint::save` path.
+pub fn write_blob_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+impl BlobWriter {
+    /// Start the writer thread. `cap` bounds the pending-job queue
+    /// (each job owns its full byte payload, so keep this small —
+    /// checkpoint producers enqueue at most one job per interval).
+    pub fn spawn(cap: usize) -> Self {
+        let cap = cap.max(1);
+        let shared = Arc::new(BlobShared {
+            queue: Mutex::new(Vec::with_capacity(cap)),
+            wake: Condvar::new(),
+            cap,
+            shutdown: AtomicBool::new(false),
+            dropped: AtomicU64::new(0),
+            written: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+        });
+        let s = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("pegrad-blob-writer".into())
+            .spawn(move || {
+                let mut back: Vec<BlobJob> = Vec::with_capacity(s.cap);
+                loop {
+                    {
+                        let mut q = s.queue.lock().unwrap_or_else(|e| e.into_inner());
+                        while q.is_empty() && !s.shutdown.load(Ordering::Acquire) {
+                            q = s.wake.wait(q).unwrap_or_else(|e| e.into_inner());
+                        }
+                        std::mem::swap(&mut *q, &mut back);
+                    }
+                    for job in back.drain(..) {
+                        match write_blob_atomic(&job.path, &job.bytes) {
+                            Ok(()) => {
+                                s.written.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => {
+                                log::warn!(
+                                    "checkpoint write failed: {}: {e}",
+                                    job.path.display()
+                                );
+                                s.failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    if s.shutdown.load(Ordering::Acquire) {
+                        let q = s.queue.lock().unwrap_or_else(|e| e.into_inner());
+                        if q.is_empty() {
+                            break;
+                        }
+                        // jobs raced in after the swap: loop to drain
+                    }
+                }
+            })
+            .expect("spawning the blob writer thread");
+        BlobWriter {
+            shared,
+            handle: Some(handle),
+        }
+    }
+
+    /// Enqueue one atomic file write. Returns false when the job was
+    /// dropped because the queue is full (slow-disk backpressure —
+    /// the PREVIOUS checkpoint on disk stays valid). Never blocks on IO.
+    pub fn enqueue(&self, path: PathBuf, bytes: Vec<u8>) -> bool {
+        {
+            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            if q.len() >= self.shared.cap {
+                drop(q);
+                self.shared.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            q.push(BlobJob { path, bytes });
+        }
+        self.shared.wake.notify_one();
+        true
+    }
+
+    /// Blobs fully written (and renamed into place) so far.
+    pub fn blobs_written(&self) -> u64 {
+        self.shared.written.load(Ordering::Relaxed)
+    }
+
+    /// Jobs dropped on a full queue so far.
+    pub fn blobs_dropped(&self) -> u64 {
+        self.shared.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drain, join the writer thread, and return dropped + failed jobs
+    /// (0 means every enqueued blob is durably on disk).
+    pub fn finish(mut self) -> u64 {
+        self.close_blob();
+        self.shared.dropped.load(Ordering::Relaxed)
+            + self.shared.failed.load(Ordering::Relaxed)
+    }
+
+    fn close_blob(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.wake.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for BlobWriter {
+    fn drop(&mut self) {
+        self.close_blob();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +360,34 @@ mod tests {
         for (i, line) in lines.iter().enumerate() {
             assert_eq!(*line, format!("{{\"i\":{i}}}"));
         }
+    }
+
+    #[test]
+    fn blob_writer_lands_atomic_files() {
+        let dir = std::env::temp_dir().join(format!("pegrad-blob-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = BlobWriter::spawn(4);
+        assert!(w.enqueue(dir.join("a.bin"), vec![1, 2, 3]));
+        assert!(w.enqueue(dir.join("sub").join("b.bin"), vec![9; 100]));
+        assert_eq!(w.finish(), 0);
+        assert_eq!(std::fs::read(dir.join("a.bin")).unwrap(), vec![1, 2, 3]);
+        assert_eq!(std::fs::read(dir.join("sub/b.bin")).unwrap(), vec![9; 100]);
+        // no temp droppings left behind
+        assert!(!dir.join("a.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn blob_writer_overwrite_keeps_last() {
+        let dir = std::env::temp_dir().join(format!("pegrad-blob2-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = BlobWriter::spawn(4);
+        let p = dir.join("ck.bin");
+        w.enqueue(p.clone(), vec![1]);
+        w.enqueue(p.clone(), vec![2]);
+        assert_eq!(w.finish(), 0);
+        assert_eq!(std::fs::read(&p).unwrap(), vec![2]);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

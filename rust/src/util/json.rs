@@ -13,16 +13,23 @@ use anyhow::{anyhow, bail, Result};
 /// deterministic (stable key order), which keeps manifests diffable.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (always stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys sorted, so serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---------------------------------------------------------------- access
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -30,6 +37,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -37,10 +45,12 @@ impl Json {
         }
     }
 
+    /// The value as `i64`, if this is an integral number.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
 
+    /// The value as `usize`, if this is a non-negative integral number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 {
@@ -51,6 +61,7 @@ impl Json {
         })
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -58,6 +69,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -65,6 +77,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -84,27 +97,33 @@ impl Json {
     }
 
     // ------------------------------------------------------------ construct
+    /// Object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Number value.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
 
+    /// String value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Array of numbers from an `f32` slice.
     pub fn arr_f32(v: &[f32]) -> Json {
         Json::Arr(v.iter().map(|x| Json::Num(*x as f64)).collect())
     }
 
+    /// Array of numbers from a `usize` slice.
     pub fn arr_usize(v: &[usize]) -> Json {
         Json::Arr(v.iter().map(|x| Json::Num(*x as f64)).collect())
     }
 
     // ---------------------------------------------------------------- parse
+    /// Parse one JSON document from `text`.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser {
             b: text.as_bytes(),
@@ -119,6 +138,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse the JSON document in `path`.
     pub fn parse_file(path: &std::path::Path) -> Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
@@ -126,6 +146,8 @@ impl Json {
     }
 
     // ------------------------------------------------------------ serialize
+    /// Serialize deterministically (object keys sorted, stable float
+    /// formatting) — byte-identical across runs for identical values.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -218,6 +240,7 @@ impl JsonlReader<std::io::BufReader<std::fs::File>> {
 }
 
 impl<R: std::io::BufRead> JsonlReader<R> {
+    /// Reader over a JSONL source.
     pub fn new(src: R) -> Self {
         JsonlReader {
             src,

@@ -58,6 +58,7 @@ pub fn init() {
     );
 }
 
+/// Install the logger at an explicit level (benches/tests).
 pub fn init_with(level: log::LevelFilter) {
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;

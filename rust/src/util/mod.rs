@@ -4,6 +4,8 @@
 //! transitive dependencies, so everything a framework normally pulls from
 //! crates.io — JSON, logging, bench statistics, property testing, thread
 //! pools — is implemented here (see DESIGN.md §6 Substitutions).
+//!
+//! (System map: `docs/architecture.md`.)
 
 pub mod json;
 pub mod logging;

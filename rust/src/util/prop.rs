@@ -20,6 +20,7 @@ use crate::tensor::rng::Rng;
 /// helpers. Records sizes so failures can shrink.
 pub struct Gen {
     rng: Rng,
+    /// Which property case this generator is for (0-based).
     pub case: u64,
     /// Shrink factor in (0, 1]; sizes are scaled down by it on retry.
     shrink: f64,
@@ -34,6 +35,7 @@ impl Gen {
         }
     }
 
+    /// Uniform `usize` in `r` (upper bound shrunk on retry).
     pub fn usize_in(&mut self, r: Range<usize>) -> usize {
         assert!(r.start < r.end);
         let span = (r.end - r.start) as f64;
@@ -41,33 +43,40 @@ impl Gen {
         r.start + (self.rng.next_u64() as usize) % scaled
     }
 
+    /// Uniform `i64` in `r`.
     pub fn i64_in(&mut self, r: Range<i64>) -> i64 {
         assert!(r.start < r.end);
         let span = (r.end - r.start) as u64;
         r.start + (self.rng.next_u64() % span) as i64
     }
 
+    /// Uniform `f32` in `r`.
     pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
         r.start + self.rng.next_f32() * (r.end - r.start)
     }
 
+    /// Uniform `f64` in `r`.
     pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
         r.start + self.rng.next_f64() * (r.end - r.start)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
 
+    /// Standard-normal sample.
     pub fn normal(&mut self) -> f32 {
         self.rng.next_normal()
     }
 
+    /// Vector of uniform values; length drawn from `len`.
     pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
         let n = self.usize_in(len);
         (0..n).map(|_| self.f32_in(vals.clone())).collect()
     }
 
+    /// Vector of standard-normal values; length drawn from `len`.
     pub fn vec_normal(&mut self, len: Range<usize>) -> Vec<f32> {
         let n = self.usize_in(len);
         (0..n).map(|_| self.normal()).collect()
@@ -121,6 +130,7 @@ pub fn require(cond: bool, msg: impl Into<String>) -> Result<(), String> {
     }
 }
 
+/// Relative closeness check (with an absolute escape hatch near zero).
 pub fn assert_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
     let denom = a.abs().max(b.abs()).max(1e-12);
     // relative check with a small absolute escape hatch for
@@ -133,6 +143,7 @@ pub fn assert_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
     }
 }
 
+/// [`assert_close`] over two slices, reporting the first failing index.
 pub fn assert_all_close(a: &[f32], b: &[f32], tol: f64) -> Result<(), String> {
     if a.len() != b.len() {
         return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));

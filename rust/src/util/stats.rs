@@ -11,6 +11,7 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self {
             min: f64::INFINITY,
@@ -19,6 +20,7 @@ impl Welford {
         }
     }
 
+    /// Fold in one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -28,10 +30,12 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Observations seen.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 before any observation).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -45,14 +49,17 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
 
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -61,12 +68,19 @@ impl Welford {
 /// Batch summary with percentiles, used by the bench harness reports.
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Minimum.
     pub min: f64,
+    /// Median (linear-interpolated).
     pub p50: f64,
+    /// 95th percentile (linear-interpolated).
     pub p95: f64,
+    /// Maximum.
     pub max: f64,
 }
 
@@ -125,6 +139,7 @@ impl Ema {
         }
     }
 
+    /// Fold in one observation.
     pub fn push(&mut self, x: f64) {
         self.value = (1.0 - self.lambda) * self.value + self.lambda * x;
         self.weight = (1.0 - self.lambda) * self.weight + self.lambda;

@@ -34,6 +34,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Pool with `threads` workers (floored to 1).
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0);
         let (tx, rx) = mpsc::channel::<Job>();

@@ -9,24 +9,29 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer {
             start: Instant::now(),
         }
     }
 
+    /// Time since start (or last reset).
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Elapsed seconds.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Elapsed milliseconds.
     pub fn millis(&self) -> f64 {
         self.secs() * 1e3
     }
 
+    /// Return the elapsed time and restart from zero.
     pub fn reset(&mut self) -> Duration {
         let e = self.elapsed();
         self.start = Instant::now();

@@ -1,0 +1,233 @@
+//! Integration tests for `pegrad serve` (the concurrent multi-run
+//! daemon): graceful-shutdown checkpointing with bitwise resume, spool
+//! pickup, and panic containment. See docs/serving.md for the
+//! lifecycle contract these tests pin down.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use pegrad::config::{Config, DataKind, PrivacyConfig, RunMode, SamplerKind};
+use pegrad::coordinator::{Checkpoint, Trainer};
+use pegrad::serve::{RunSpec, RunState, ServeOptions, Server};
+use pegrad::util::Json;
+
+fn tmp_out(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("pegrad-serve-{}-{name}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// A noise-free clipped config: the RNG stream is purely
+/// selection-driven (uniform sampler, σ = 0), the precondition for
+/// bitwise resume — same convention as the PR-6 resume harness.
+fn serve_cfg(name: &str, steps: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.run_name = name.into();
+    cfg.mode = RunMode::RustClipped;
+    cfg.model_dims = vec![16, 24, 10];
+    cfg.model_m = 16;
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.checkpoint_every = 0;
+    cfg.data = DataKind::Synth;
+    cfg.data_n = 512;
+    cfg.sampler = SamplerKind::Uniform;
+    cfg.privacy = Some(PrivacyConfig {
+        clip_c: 0.8,
+        noise_sigma: 0.0,
+        delta: 1e-5,
+    });
+    cfg
+}
+
+fn opts(session: &str, out: &str) -> ServeOptions {
+    ServeOptions {
+        name: session.into(),
+        out_dir: out.into(),
+        max_concurrent: 2,
+        status_every_ms: 20,
+        ..ServeOptions::default()
+    }
+}
+
+/// Tentpole acceptance: shutdown mid-training checkpoints EVERY active
+/// run at a clean step boundary, and each resumes bitwise — the resumed
+/// tail of the loss curve and the final parameters match an
+/// uninterrupted reference run exactly.
+#[test]
+fn graceful_shutdown_checkpoints_every_run_and_resumes_bitwise() {
+    let out = tmp_out("shutdown");
+    let _ = std::fs::remove_dir_all(&out);
+    let mut server = Server::new(opts("shutdown", &out)).unwrap();
+    // steps chosen far beyond what ~250 ms can execute: shutdown must
+    // land mid-run at a step k the test does NOT get to choose
+    server.enqueue(RunSpec::new(serve_cfg("sa", 200_000)));
+    server.enqueue(RunSpec::new(serve_cfg("sb", 200_000)));
+    let handle = server.handle();
+    let stopper = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(250));
+        handle.shutdown();
+    });
+    let report = server.run().unwrap();
+    stopper.join().unwrap();
+
+    assert_eq!(report.interrupted(), 2, "both active runs must checkpoint");
+    assert_eq!(report.failed(), 0);
+    for r in &report.runs {
+        assert_eq!(r.state, RunState::Interrupted);
+        assert!(r.steps_done > 0, "shutdown before any step executed");
+        assert!(r.steps_done < 200_000, "run finished before shutdown?");
+        let ck_path = r.checkpoint.as_ref().expect("interrupted run checkpoint");
+        let ck = Checkpoint::load(ck_path).unwrap();
+        assert_eq!(ck.step as usize, r.steps_done);
+
+        // resume 25 more steps from the shutdown checkpoint
+        let k = ck.step as usize;
+        let mut resumed = Trainer::new(serve_cfg(&format!("{}-res", r.name), 25)).unwrap();
+        resumed.restore(ck).unwrap();
+        let s_res = resumed.run().unwrap();
+
+        // uninterrupted reference: k + 25 steps from scratch
+        let mut reference =
+            Trainer::new(serve_cfg(&format!("{}-ref", r.name), k + 25)).unwrap();
+        let s_ref = reference.run().unwrap();
+
+        assert_eq!(
+            &s_ref.curve[k..],
+            &s_res.curve[..],
+            "run '{}': resumed loss curve diverged from the uninterrupted \
+             reference after step {k}",
+            r.name
+        );
+        let p_res: Vec<_> = resumed.params().unwrap().to_vec();
+        let p_ref: Vec<_> = reference.params().unwrap().to_vec();
+        assert_eq!(p_res.len(), p_ref.len());
+        for (x, y) in p_res.iter().zip(&p_ref) {
+            assert_eq!(
+                x.data(),
+                y.data(),
+                "run '{}': resumed params diverged bitwise",
+                r.name
+            );
+        }
+    }
+}
+
+/// Wait until `pred` holds for the last parseable line of `path`.
+fn wait_for_status(path: &Path, timeout: Duration, pred: impl Fn(&Json) -> bool) -> Json {
+    let start = Instant::now();
+    loop {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Some(j) = text
+                .lines()
+                .rev()
+                .find_map(|l| Json::parse(l.trim()).ok())
+            {
+                if pred(&j) {
+                    return j;
+                }
+            }
+        }
+        assert!(
+            start.elapsed() < timeout,
+            "timed out waiting on {}",
+            path.display()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Spool mode: a scenario config dropped into the watched directory
+/// while the daemon is already serving gets picked up, scheduled, and
+/// run to completion.
+#[test]
+fn spool_drop_starts_and_completes_a_run() {
+    let out = tmp_out("spool");
+    let _ = std::fs::remove_dir_all(&out);
+    let spool = PathBuf::from(&out).join("spool");
+    std::fs::create_dir_all(&spool).unwrap();
+    let mut o = opts("spoolsess", &out);
+    o.spool = Some(spool.clone());
+    let mut server = Server::new(o).unwrap();
+    let status_path = server.session_dir().join("serve.jsonl");
+
+    let handle = server.handle();
+    let dropper = std::thread::spawn(move || {
+        // drop AFTER the daemon is up: this exercises live pickup, not
+        // the startup scan
+        std::thread::sleep(Duration::from_millis(150));
+        let cfg_toml = r#"
+            run_name = "dropped"
+            mode = "rust_pegrad"
+            steps = 4
+            eval_every = 0
+            checkpoint_every = 0
+            [data]
+            kind = "synth"
+            n = 64
+            [model]
+            dims = [16, 12, 10]
+            m = 8
+        "#;
+        let tmp = spool.join(".drop.toml.part");
+        std::fs::write(&tmp, cfg_toml).unwrap();
+        // atomic publish: the scanner must never read a half-written file
+        std::fs::rename(&tmp, spool.join("drop.toml")).unwrap();
+        let done = wait_for_status(&status_path, Duration::from_secs(30), |j| {
+            j.get("completed").and_then(Json::as_usize) == Some(1)
+        });
+        assert_eq!(done.get("queue_depth").and_then(Json::as_usize), Some(0));
+        handle.shutdown();
+    });
+    let report = server.run().unwrap();
+    dropper.join().unwrap();
+
+    assert_eq!(report.completed(), 1);
+    assert_eq!(report.runs[0].name, "dropped");
+    assert_eq!(report.runs[0].steps_done, 4);
+    assert!(report.spool_rejected.is_empty());
+}
+
+/// Failure containment: a run that panics mid-training is reported
+/// `failed` in serve.jsonl (with the panic message) while its sibling
+/// runs to completion and the server returns normally.
+#[test]
+fn panicking_run_is_contained_and_reported() {
+    let out = tmp_out("panic");
+    let _ = std::fs::remove_dir_all(&out);
+    let mut server = Server::new(opts("chaos", &out)).unwrap();
+    server.enqueue(RunSpec::new(serve_cfg("ok", 30)));
+    server.enqueue(RunSpec::new(serve_cfg("boom", 30)).with_panic_after(3));
+    let status_path = server.session_dir().join("serve.jsonl");
+    let report = server.run().unwrap();
+
+    assert_eq!(report.completed(), 1);
+    assert_eq!(report.failed(), 1);
+    let ok = report.runs.iter().find(|r| r.name == "ok").unwrap();
+    assert_eq!(ok.state, RunState::Completed);
+    assert_eq!(ok.steps_done, 30, "sibling must not be stalled or stopped");
+    let boom = report.runs.iter().find(|r| r.name == "boom").unwrap();
+    assert_eq!(boom.state, RunState::Failed);
+    let msg = boom.error.as_deref().unwrap();
+    assert!(msg.contains("panic"), "error should carry the panic: {msg}");
+
+    // the stream's final line agrees with the report and carries the
+    // per-run error
+    let text = std::fs::read_to_string(&status_path).unwrap();
+    let last = text
+        .lines()
+        .rev()
+        .find_map(|l| Json::parse(l.trim()).ok())
+        .expect("serve.jsonl has at least one line");
+    assert_eq!(last.get("serve").and_then(Json::as_str), Some("pegrad.serve"));
+    assert_eq!(last.get("completed").and_then(Json::as_usize), Some(1));
+    assert_eq!(last.get("failed").and_then(Json::as_usize), Some(1));
+    let runs = last.get("runs").and_then(Json::as_arr).unwrap();
+    let boom_row = runs
+        .iter()
+        .find(|r| r.get("run").and_then(Json::as_str) == Some("boom"))
+        .unwrap();
+    assert_eq!(boom_row.get("state").and_then(Json::as_str), Some("failed"));
+    assert!(boom_row.get("error").is_some());
+}
