@@ -1,0 +1,186 @@
+//! E16: sequence-stack streaming overhead — the fused Mean step on the
+//! embed/attention-lite/layernorm stack with no tap, with a full-stack
+//! [`pegrad::telemetry::RecordingTap`], and with the tap restricted to
+//! the normalization layers (`norm_layers_only`), vs the plain baseline.
+//!
+//! The PR-10 pitch: per-example norms for the new sequence layers
+//! stream out of the training backward at near-zero cost, and the
+//! Gray-et-al norm-layers-only mask cuts tap traffic from one `[m]`
+//! block per weighted layer (6 here) to one per layernorm (2 here)
+//! without touching the step arithmetic. Acceptance gate (enforced by
+//! `scripts/perf_gate` in CI): < 10% step-time overhead with the
+//! norm-layers-only tap at m = 256.
+//!
+//! All inputs come from fixed seeds — the numbers are commit-independent
+//! apart from the code under test. Emits `BENCH_seq.json`.
+
+use pegrad::bench::{bench_fn, BenchSpec, Table};
+use pegrad::engine::{EngineMode, FusedEngine};
+use pegrad::nn::layers::StackSpec;
+use pegrad::nn::loss::Targets;
+use pegrad::nn::Loss;
+use pegrad::telemetry::{LayerTap, RecordingTap};
+use pegrad::tensor::{Rng, Tensor};
+use pegrad::util::Json;
+
+const SEQ_STACK: &str = "input 16, embed 32 8, attn 8 2, layernorm, dense 10";
+const VOCAB: u64 = 32;
+
+/// Constant-memory stream consumer for the timed loops: folds every
+/// streamed value into one accumulator (a `RecordingTap` would grow a
+/// Vec per step and the allocations would pollute the measurement).
+#[derive(Default)]
+struct SinkTap {
+    acc: f64,
+    layer_calls: u64,
+}
+
+impl LayerTap for SinkTap {
+    fn on_layer(&mut self, _layer: usize, s_layer: &[f32]) {
+        self.layer_calls += 1;
+        self.acc += s_layer.iter().map(|&v| v as f64).sum::<f64>();
+    }
+
+    fn on_step_end(&mut self, s_total: &[f32], _per_ex_loss: &[f32]) {
+        self.acc += s_total.iter().map(|&v| v as f64).sum::<f64>();
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    pegrad::util::logging::init_with(log::LevelFilter::Warn);
+    let quick = std::env::args().any(|a| a == "--quick");
+    let spec_bench = if quick {
+        BenchSpec::quick()
+    } else {
+        BenchSpec {
+            warmup_secs: 0.1,
+            measure_secs: 0.8,
+            min_samples: 3,
+            max_samples: 40,
+        }
+    };
+
+    let mut table = Table::new(
+        "E16 — seq stack: full tap / norm-layers-only tap vs baseline fused step (ms)",
+        &["model", "m", "baseline", "full_tap", "norm_only", "full_ovh", "norm_ovh"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut ok_at_256 = true;
+    let mut bitwise_ok = true;
+
+    for m in [32usize, 256] {
+        let stack = StackSpec::parse(SEQ_STACK, Loss::SoftmaxCe, m).unwrap();
+        let mut rng = Rng::new(16);
+        let params = stack.init_params(&mut rng);
+        let toks = stack.in_len();
+        let ids: Vec<f32> = (0..m * toks)
+            .map(|_| rng.next_below(VOCAB) as f32)
+            .collect();
+        let x = Tensor::new(vec![m, toks], ids);
+        let y = Targets::Classes((0..m).map(|j| (j % stack.out_len()) as i32).collect());
+        // weighted ordinals 1 and 4 are the layernorms
+        let n_weighted = stack.weight_shapes().len();
+        let mask: Vec<bool> = (0..n_weighted).map(|i| i == 1 || i == 4).collect();
+
+        // --- pre-check (not a benchmark): the tap and the mask leave
+        // the training math bitwise alone, and the mask cuts the tap
+        // traffic from 6 to 2 layer blocks per step
+        let mut engine = FusedEngine::from_stack(stack.clone());
+        engine.step(&params, &x, &y, EngineMode::Mean);
+        let want: Vec<Tensor> = engine.grads().to_vec();
+        let mut tap = RecordingTap::default();
+        engine.step_streamed(&params, &x, &y, EngineMode::Mean, None, Some(&mut tap));
+        for (a, b) in engine.grads().iter().zip(&want) {
+            bitwise_ok &= a.data() == b.data();
+        }
+        assert_eq!(tap.layers.len(), n_weighted);
+        let mut norm_engine = FusedEngine::from_stack(stack.clone());
+        norm_engine.set_tap_mask(Some(mask.clone()));
+        let mut norm_tap = RecordingTap::default();
+        norm_engine.step_streamed(
+            &params,
+            &x,
+            &y,
+            EngineMode::Mean,
+            None,
+            Some(&mut norm_tap),
+        );
+        for (a, b) in norm_engine.grads().iter().zip(&want) {
+            bitwise_ok &= a.data() == b.data();
+        }
+        assert_eq!(norm_tap.layers.len(), 2);
+        assert!(bitwise_ok, "m={m}: the tap/mask perturbed the gradients");
+
+        let t_base = bench_fn(&format!("seq/m{m}/baseline"), &spec_bench, || {
+            engine.step(&params, &x, &y, EngineMode::Mean);
+            std::hint::black_box(engine.s_total());
+        })
+        .mean_ms();
+
+        let mut sink = SinkTap::default();
+        let t_full = bench_fn(&format!("seq/m{m}/full_tap"), &spec_bench, || {
+            engine.step_streamed(&params, &x, &y, EngineMode::Mean, None, Some(&mut sink));
+            std::hint::black_box(sink.acc);
+        })
+        .mean_ms();
+
+        let t_norm = bench_fn(&format!("seq/m{m}/norm_only"), &spec_bench, || {
+            norm_engine.step_streamed(
+                &params,
+                &x,
+                &y,
+                EngineMode::Mean,
+                None,
+                Some(&mut sink),
+            );
+            std::hint::black_box(sink.acc);
+        })
+        .mean_ms();
+        std::hint::black_box(sink.layer_calls);
+
+        let full_ovh = t_full / t_base - 1.0;
+        let norm_ovh = t_norm / t_base - 1.0;
+        if m == 256 && norm_ovh >= 0.10 {
+            ok_at_256 = false;
+        }
+        table.row(vec![
+            "seq".to_string(),
+            m.to_string(),
+            format!("{t_base:.3}"),
+            format!("{t_full:.3}"),
+            format!("{t_norm:.3}"),
+            format!("{:+.1}%", full_ovh * 100.0),
+            format!("{:+.1}%", norm_ovh * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("model", Json::str("seq")),
+            ("m", Json::num(m as f64)),
+            ("baseline_ms", Json::num(t_base)),
+            ("full_tap_ms", Json::num(t_full)),
+            ("norm_only_ms", Json::num(t_norm)),
+            ("full_tap_overhead_frac", Json::num(full_ovh)),
+            ("overhead_frac", Json::num(norm_ovh)),
+            ("tap_layers_full", Json::num(n_weighted as f64)),
+            ("tap_layers_norm_only", Json::num(2.0)),
+        ]));
+    }
+
+    table.emit(Some(&pegrad::bench::workspace_path(
+        "bench_results/e16_seq.csv",
+    )));
+    let summary = Json::obj(vec![
+        ("bench", Json::str("e16_seq")),
+        ("seq_stack", Json::str(SEQ_STACK)),
+        ("quick", Json::Bool(quick)),
+        ("tap_bitwise", Json::Bool(bitwise_ok)),
+        ("norm_only_overhead_under_10pct_at_m256", Json::Bool(ok_at_256)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out = pegrad::bench::workspace_path("BENCH_seq.json");
+    std::fs::write(&out, format!("{summary}\n"))?;
+    println!("(summary saved to {})", out.display());
+    if !ok_at_256 {
+        println!("WARNING: norm-layers-only tap overhead exceeded 10% at m=256 on this host.");
+    }
+    Ok(())
+}

@@ -90,6 +90,11 @@ pub enum DataKind {
     Digits,
     /// Synthetic linear-teacher regression set (`data::regression`).
     Regression,
+    /// Synthetic token-sequence classification set (`data::seq`); the
+    /// token count and vocabulary come from the stack's leading
+    /// `embed V d` layer, so this kind requires an embedding-first
+    /// `model.stack`.
+    Seq,
 }
 
 /// Which optimizer updates the parameters (`[optim] kind`).
@@ -291,6 +296,26 @@ impl Config {
         if self.mode == RunMode::RustNormalized && self.normalize_target <= 0.0 {
             bail!("normalize_target must be > 0");
         }
+        if self.data == DataKind::Seq {
+            if !self.mode.is_rust_engine() {
+                bail!(
+                    "data.kind = \"seq\" requires a rust-engine mode: the \
+                     token count and vocabulary come from the model.stack's \
+                     embedding layer"
+                );
+            }
+            let layers = crate::nn::layers::StackSpec::parse_layers(&self.model_stack)
+                .map_err(|e| anyhow!("data.kind = \"seq\" needs a model.stack: {e}"))?;
+            if !matches!(
+                layers.first(),
+                Some(crate::nn::layers::LayerSpec::Embedding { .. })
+            ) {
+                bail!(
+                    "data.kind = \"seq\" requires a model.stack starting with \
+                     'embed V d' (the generator emits token ids, not features)"
+                );
+            }
+        }
         self.telemetry.validate()?;
         if self.telemetry.enabled && !self.mode.is_rust_engine() {
             bail!(
@@ -298,6 +323,36 @@ impl Config {
                  (rust_pegrad|rust_clipped|rust_normalized): the layer taps \
                  stream out of the in-process fused engine, not the AOT artifacts"
             );
+        }
+        if self.telemetry.norm_layers_only {
+            if !self.telemetry.enabled {
+                bail!(
+                    "telemetry.norm_layers_only = true requires \
+                     telemetry.enabled = true: the mask restricts an active \
+                     tap stream"
+                );
+            }
+            let layers = crate::nn::layers::StackSpec::parse_layers(&self.model_stack)
+                .map_err(|e| {
+                    anyhow!("telemetry.norm_layers_only needs a model.stack: {e}")
+                })?;
+            if !layers
+                .iter()
+                .any(|l| matches!(l, crate::nn::layers::LayerSpec::LayerNorm { .. }))
+            {
+                bail!(
+                    "telemetry.norm_layers_only = true requires at least one \
+                     'layernorm' layer in model.stack — with none masked in, \
+                     every telemetry stream would be empty"
+                );
+            }
+            if self.audit.enabled {
+                bail!(
+                    "telemetry.norm_layers_only is incompatible with \
+                     audit.enabled: saliency ranking needs the full-stack \
+                     norm stream"
+                );
+            }
         }
         self.trace.validate()?;
         if self.trace.enabled && !self.mode.is_rust_engine() {
@@ -453,6 +508,7 @@ fn apply(cfg: &mut Config, map: &BTreeMap<String, Value>) -> Result<()> {
                     "synth" => DataKind::Synth,
                     "digits" => DataKind::Digits,
                     "regression" => DataKind::Regression,
+                    "seq" => DataKind::Seq,
                     s => bail!("unknown data kind '{s}'"),
                 }
             }
@@ -492,6 +548,9 @@ fn apply(cfg: &mut Config, map: &BTreeMap<String, Value>) -> Result<()> {
             }
             "telemetry.warmup_steps" => {
                 cfg.telemetry.warmup_steps = v.as_usize().ok_or_else(fail)?
+            }
+            "telemetry.norm_layers_only" => {
+                cfg.telemetry.norm_layers_only = v.as_bool().ok_or_else(fail)?
             }
             "clip.adaptive" => cfg.clip.adaptive = v.as_bool().ok_or_else(fail)?,
             "clip.quantile" => cfg.clip.quantile = v.as_f64().ok_or_else(fail)?,
@@ -703,6 +762,76 @@ mod tests {
         cfg.apply_overrides(&[("telemetry.enabled".into(), "true".into())])
             .unwrap();
         assert!(cfg.telemetry.enabled);
+    }
+
+    #[test]
+    fn parse_seq_stack_and_norm_layers_only() {
+        let cfg = Config::from_toml(
+            r#"
+            mode = "rust_pegrad"
+
+            [model]
+            stack = "input 16, embed 32 8, attn 8 2, layernorm, dense 10"
+            m = 32
+
+            [data]
+            kind = "seq"
+
+            [telemetry]
+            enabled = true
+            norm_layers_only = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.data, DataKind::Seq);
+        assert!(cfg.telemetry.norm_layers_only);
+        // defaults: off — existing configs are untouched
+        assert!(!Config::default().telemetry.norm_layers_only);
+        // override path: --set telemetry.norm_layers_only=true
+        let mut cfg = Config::from_toml(
+            "mode = \"rust_pegrad\"\n[model]\nstack = \"input 4, layernorm, dense 2\"\n[telemetry]\nenabled = true",
+        )
+        .unwrap();
+        cfg.apply_overrides(&[("telemetry.norm_layers_only".into(), "true".into())])
+            .unwrap();
+        assert!(cfg.telemetry.norm_layers_only);
+    }
+
+    #[test]
+    fn seq_and_norm_layers_only_validation() {
+        // seq data without a rust-engine mode has no stack to read
+        let err = Config::from_toml("mode = \"pegrad\"\n[data]\nkind = \"seq\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rust-engine"), "{err}");
+        // seq data with a non-embedding stack rejected
+        let err = Config::from_toml(
+            "mode = \"rust_pegrad\"\n[model]\nstack = \"input 4, dense 2\"\n[data]\nkind = \"seq\"",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("embed"), "{err}");
+        // the mask needs an active tap stream
+        let err = Config::from_toml(
+            "mode = \"rust_pegrad\"\n[model]\nstack = \"input 4, layernorm, dense 2\"\n[telemetry]\nnorm_layers_only = true",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("telemetry.enabled"), "{err}");
+        // a stack with no layernorm would mask out everything
+        let err = Config::from_toml(
+            "mode = \"rust_pegrad\"\n[model]\nstack = \"input 4, dense 2\"\n[telemetry]\nenabled = true\nnorm_layers_only = true",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("layernorm"), "{err}");
+        // saliency needs the full stream
+        let err = Config::from_toml(
+            "mode = \"rust_pegrad\"\n[model]\nstack = \"input 4, layernorm, dense 2\"\n[telemetry]\nenabled = true\nnorm_layers_only = true\n[audit]\nenabled = true",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("audit"), "{err}");
     }
 
     #[test]

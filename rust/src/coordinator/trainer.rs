@@ -15,7 +15,7 @@ use crate::config::{Config, DataKind, OptimKind, RunMode, SamplerKind};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::{MetricsLogger, StepRecord};
 use crate::data::loader::{prepare, PreparedBatch, Prefetcher};
-use crate::data::{digits, regression, synth, Dataset};
+use crate::data::{digits, regression, seq, synth, Dataset};
 use crate::engine::{EngineMode, FusedEngine};
 use crate::nn::loss::Targets;
 use crate::nn::{Loss, Mlp, ModelSpec, StackSpec};
@@ -272,7 +272,7 @@ impl Trainer {
             Some(spec) => spec.init_params(&mut rng),
             None => stack.init_params(&mut rng),
         };
-        let monitor = cfg.telemetry.enabled.then(|| {
+        let mut monitor = cfg.telemetry.enabled.then(|| {
             let mut mon =
                 TelemetryMonitor::new(&cfg.telemetry, stack.n_params(), stack.m, train.len());
             // the GNS decomposition is unbiased only for the plain uniform
@@ -283,6 +283,16 @@ impl Trainer {
             }
             mon
         });
+        if cfg.telemetry.norm_layers_only {
+            let mask = norm_layer_mask(&stack);
+            engine
+                .as_mut()
+                .expect("validated: telemetry requires a rust-engine mode")
+                .set_tap_mask(Some(mask.clone()));
+            if let Some(mon) = monitor.as_mut() {
+                mon.set_layer_mask(Some(mask));
+            }
+        }
         let clip = cfg.clip.adaptive.then(|| {
             // the initial bound is whatever the mode would have used as
             // its fixed constant; the controller starts there and the
@@ -375,6 +385,9 @@ impl Trainer {
             );
             if tr.cfg.sampler != SamplerKind::Uniform || tr.cfg.mode != RunMode::RustPegrad {
                 mon.mark_weighted_gradients();
+            }
+            if tr.cfg.telemetry.norm_layers_only {
+                mon.set_layer_mask(Some(norm_layer_mask(&tr.stack)));
             }
             tr.monitor = Some(mon);
         }
@@ -952,7 +965,13 @@ impl Trainer {
         // moment should see the gradient the math defines (ḡ in mean mode,
         // the clipped mean in clipped mode), not the privacy noise
         if let Some(mon) = self.monitor.as_mut() {
-            mon.end_step(&batch.indices, self.engine.as_ref().unwrap().grads());
+            mon.end_step(
+                &batch.indices,
+                self.engine
+                    .as_ref()
+                    .expect("validated: rust-engine modes own an engine")
+                    .grads(),
+            );
         }
         // then fold the staged maps into the tracked flagged set — the
         // detector's counts are current as of the end_step above
@@ -970,7 +989,11 @@ impl Trainer {
                 let c_used = adaptive_c.unwrap_or(p.clip_c);
                 let scale = p.noise_sigma * c_used / self.stack.m as f32;
                 let rng = &mut self.rng;
-                for g in self.engine.as_mut().unwrap().grads_mut() {
+                let engine = self
+                    .engine
+                    .as_mut()
+                    .expect("validated: rust-engine modes own an engine");
+                for g in engine.grads_mut() {
                     for v in g.data_mut() {
                         *v += scale * rng.next_normal();
                     }
@@ -983,15 +1006,26 @@ impl Trainer {
 
         self.optimizer.step(
             &mut self.params,
-            self.engine.as_ref().unwrap().grads(),
+            self.engine
+                .as_ref()
+                .expect("validated: rust-engine modes own an engine")
+                .grads(),
             lr,
         );
         // norm feedback (§1 loop): the engine computed them in-pass
         {
-            let engine = self.engine.as_ref().unwrap();
+            let engine = self
+                .engine
+                .as_ref()
+                .expect("validated: rust-engine modes own an engine");
             self.sampler.observe(&batch.indices, engine.norms());
         }
-        let norms: Vec<f32> = self.engine.as_ref().unwrap().norms().to_vec();
+        let norms: Vec<f32> = self
+            .engine
+            .as_ref()
+            .expect("validated: rust-engine modes own an engine")
+            .norms()
+            .to_vec();
         Ok(self.record(stats.mean_loss, Some(&norms), stats.clip_frac, lr))
     }
 
@@ -1297,7 +1331,7 @@ fn build_datasets(cfg: &Config, stack: &StackSpec, rng: &mut Rng) -> Result<(Dat
         (crate::nn::Loss::SoftmaxCe, DataKind::Regression) => {
             bail!("regression data produces dense targets but the preset uses softmax_ce")
         }
-        (crate::nn::Loss::Mse, DataKind::Synth | DataKind::Digits) => {
+        (crate::nn::Loss::Mse, DataKind::Synth | DataKind::Digits | DataKind::Seq) => {
             bail!("classification data produces class targets but the preset uses mse; use data.kind=\"regression\"")
         }
         _ => {}
@@ -1341,6 +1375,25 @@ fn build_datasets(cfg: &Config, stack: &StackSpec, rng: &mut Rng) -> Result<(Dat
                 seed,
                 ..Default::default()
             }),
+            DataKind::Seq => {
+                // token count and vocabulary come from the stack's leading
+                // embedding layer (embedding-first is validated upstream)
+                let Some(&crate::nn::layers::LayerSpec::Embedding { vocab, toks, .. }) =
+                    stack.layers.first()
+                else {
+                    bail!("seq data requires a model.stack starting with 'embed V d'")
+                };
+                seq::generate(&seq::SeqConfig {
+                    n,
+                    toks,
+                    vocab,
+                    n_classes: stack.out_len(),
+                    label_noise: cfg.label_noise,
+                    seed,
+                    ..Default::default()
+                })
+                .0
+            }
         })
     };
     // One generation, then split: train and eval must come from the SAME
@@ -1349,4 +1402,17 @@ fn build_datasets(cfg: &Config, stack: &StackSpec, rng: &mut Rng) -> Result<(Dat
     let base_seed = rng.next_u64();
     let full = mk(cfg.data_n + eval_n, base_seed)?;
     Ok(full.split_at(cfg.data_n))
+}
+
+/// The `telemetry.norm_layers_only` tap mask: one entry per WEIGHTED
+/// layer (the engine's `wi` indexing), true exactly for LayerNorm layers
+/// — the per-example-gradient subset Gray et al. 2024 show predicts GNS
+/// on its own.
+fn norm_layer_mask(stack: &StackSpec) -> Vec<bool> {
+    stack
+        .layers
+        .iter()
+        .filter(|l| l.weight_shape().is_some())
+        .map(|l| matches!(l, crate::nn::layers::LayerSpec::LayerNorm { .. }))
+        .collect()
 }

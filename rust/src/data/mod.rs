@@ -11,6 +11,10 @@
 //!   run.
 //! * [`regression`] — dense-target MSE workload (exercises the Mse loss
 //!   path end to end).
+//! * [`seq`] — token-sequence classification with class motif tokens:
+//!   the PR-10 workload for the embedding/LayerNorm/attention-lite
+//!   stacks (features are token ids, consumed by an `embed`-first
+//!   stack).
 //! * [`loader`] — batch gather + the prefetch stage used by the
 //!   coordinator pipeline.
 //!
@@ -19,6 +23,7 @@
 pub mod digits;
 pub mod loader;
 pub mod regression;
+pub mod seq;
 pub mod synth;
 
 use crate::nn::loss::Targets;

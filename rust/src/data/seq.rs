@@ -1,0 +1,215 @@
+//! Synthetic token-sequence classification (the PR-10 sequence workload).
+//!
+//! Each class owns a small disjoint pool of "motif" tokens at the bottom
+//! of the vocabulary; an example of class `c` draws each of its `toks`
+//! positions from pool `c` with probability `motif_frac`, else uniformly
+//! from the whole vocabulary. Classes are therefore separable from token
+//! counts alone — a bag-of-embeddings model (the `embed … attn …
+//! layernorm … dense` stack) trains to high accuracy in a few hundred
+//! steps — while `label_noise` plants the large-gradient-norm outliers
+//! the telemetry/outlier machinery feeds on, exactly like
+//! [`super::synth`].
+//!
+//! Features are token IDS stored as f32 (row `i` is the id sequence of
+//! example `i`); only an embedding-first stack can consume them, which
+//! `config::schema` enforces for `data.kind = "seq"`.
+
+use crate::nn::loss::Targets;
+use crate::tensor::{Rng, Tensor};
+
+use super::Dataset;
+
+#[derive(Debug, Clone)]
+/// Token-sequence generator parameters.
+pub struct SeqConfig {
+    /// Number of examples.
+    pub n: usize,
+    /// Tokens per example (the stack's `input T`).
+    pub toks: usize,
+    /// Vocabulary size (the stack's `embed V d`).
+    pub vocab: usize,
+    /// Number of classes.
+    pub n_classes: usize,
+    /// Probability a position draws from the class motif pool.
+    pub motif_frac: f32,
+    /// Fraction of examples whose label is replaced uniformly at random.
+    pub label_noise: f32,
+    /// Generator seed.
+    pub seed: u64,
+}
+
+impl Default for SeqConfig {
+    fn default() -> Self {
+        SeqConfig {
+            n: 4096,
+            toks: 16,
+            vocab: 32,
+            n_classes: 10,
+            motif_frac: 0.6,
+            label_noise: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Ground-truth metadata for tests and the outlier demos.
+pub struct SeqMeta {
+    /// Which rows had their label flipped (the planted outliers).
+    pub flipped: Vec<bool>,
+    /// Motif pool of each class, as `[lo, hi)` token-id ranges.
+    pub pools: Vec<(u32, u32)>,
+}
+
+/// Tokens per class motif pool: disjoint slices at the bottom of the
+/// vocabulary, leaving at least half of it as shared background.
+fn pool_size(vocab: usize, n_classes: usize) -> usize {
+    (vocab / (2 * n_classes)).max(1)
+}
+
+/// Generate the dataset plus the ground-truth metadata tests use.
+pub fn generate(cfg: &SeqConfig) -> (Dataset, SeqMeta) {
+    assert!(cfg.n_classes >= 2 && cfg.n >= cfg.n_classes);
+    assert!(cfg.toks >= 1);
+    assert!(
+        cfg.vocab >= cfg.n_classes,
+        "vocab {} cannot give {} classes disjoint motif pools",
+        cfg.vocab,
+        cfg.n_classes
+    );
+    assert!((0.0..=1.0).contains(&cfg.label_noise));
+    assert!((0.0..=1.0).contains(&cfg.motif_frac));
+    let mut rng = Rng::new(cfg.seed ^ 0x5E90);
+
+    let ps = pool_size(cfg.vocab, cfg.n_classes);
+    let pools: Vec<(u32, u32)> = (0..cfg.n_classes)
+        .map(|c| ((c * ps) as u32, ((c + 1) * ps) as u32))
+        .collect();
+
+    let mut x = Tensor::zeros(vec![cfg.n, cfg.toks]);
+    let mut labels = Vec::with_capacity(cfg.n);
+    let mut flipped = vec![false; cfg.n];
+    for i in 0..cfg.n {
+        let c = rng.next_below(cfg.n_classes as u64) as usize;
+        for t in 0..cfg.toks {
+            let tok = if rng.next_f32() < cfg.motif_frac {
+                pools[c].0 as u64 + rng.next_below(ps as u64)
+            } else {
+                rng.next_below(cfg.vocab as u64)
+            };
+            x.set2(i, t, tok as f32);
+        }
+        let mut label = c;
+        if rng.next_f32() < cfg.label_noise {
+            label = rng.next_below(cfg.n_classes as u64) as usize;
+            flipped[i] = label != c;
+        }
+        labels.push(label as i32);
+    }
+    (
+        Dataset {
+            x,
+            y: Targets::Classes(labels),
+            name: format!("seq-n{}-t{}-v{}", cfg.n, cfg.toks, cfg.vocab),
+        },
+        SeqMeta { flipped, pools },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_ids_integral_and_in_range() {
+        let cfg = SeqConfig {
+            n: 64,
+            toks: 12,
+            vocab: 20,
+            n_classes: 4,
+            ..Default::default()
+        };
+        let (d, meta) = generate(&cfg);
+        assert_eq!(d.len(), 64);
+        assert_eq!(d.dim(), 12);
+        assert_eq!(meta.pools.len(), 4);
+        for &v in d.x.data() {
+            assert_eq!(v, v.round(), "token ids must be integral");
+            assert!(v >= 0.0 && (v as usize) < 20, "id {v} out of vocab");
+        }
+        match &d.y {
+            Targets::Classes(l) => assert!(l.iter().all(|&c| (0..4).contains(&c))),
+            _ => panic!("seq targets are classes"),
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = SeqConfig {
+            n: 50,
+            ..Default::default()
+        };
+        let (a, _) = generate(&cfg);
+        let (b, _) = generate(&cfg);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let (c, _) = generate(&SeqConfig { seed: 1, ..cfg });
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn motif_tokens_dominate_own_class() {
+        let cfg = SeqConfig {
+            n: 2000,
+            toks: 16,
+            vocab: 32,
+            n_classes: 4,
+            motif_frac: 0.6,
+            ..Default::default()
+        };
+        let (d, meta) = generate(&cfg);
+        let labels = match &d.y {
+            Targets::Classes(l) => l,
+            _ => unreachable!(),
+        };
+        // per class: fraction of tokens inside the OWN pool vs a foreign
+        // pool — separability means the former dominates by a wide margin
+        for c in 0..4usize {
+            let (own_lo, own_hi) = meta.pools[c];
+            let foreign = meta.pools[(c + 1) % 4];
+            let (mut own, mut other, mut total) = (0usize, 0usize, 0usize);
+            for (i, &l) in labels.iter().enumerate() {
+                if l as usize != c {
+                    continue;
+                }
+                for &v in d.x.row(i) {
+                    let id = v as u32;
+                    total += 1;
+                    if (own_lo..own_hi).contains(&id) {
+                        own += 1;
+                    }
+                    if (foreign.0..foreign.1).contains(&id) {
+                        other += 1;
+                    }
+                }
+            }
+            assert!(total > 0, "class {c} never drawn");
+            assert!(
+                own > 4 * other.max(1),
+                "class {c}: own-pool {own} vs foreign {other} of {total}"
+            );
+        }
+    }
+
+    #[test]
+    fn label_noise_plants_flips() {
+        let (d, meta) = generate(&SeqConfig {
+            n: 1000,
+            label_noise: 0.3,
+            ..Default::default()
+        });
+        let flips = meta.flipped.iter().filter(|&&f| f).count();
+        // 30% redraws, of which 9/10 actually change the label
+        assert!(flips > 150 && flips < 400, "{flips}");
+        assert_eq!(d.len(), 1000);
+    }
+}

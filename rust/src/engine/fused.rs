@@ -46,7 +46,7 @@
 //! (streamed vs tap, implicit vs im2col, banded vs serial) compare two
 //! paths through the SAME dispatched kernel, so they hold under either.
 
-use crate::nn::layers::{ConvImpl, Layer, StackSpec};
+use crate::nn::layers::{ConvImpl, Layer, LayerSpec, StackSpec};
 use crate::nn::loss::Targets;
 use crate::nn::ModelSpec;
 use crate::pegrad::PerExampleNorms;
@@ -97,6 +97,13 @@ pub struct FusedEngine {
     retention_ready: bool,
     /// Per-position saliency maps requested ([`FusedEngine::enable_saliency`]).
     saliency: bool,
+    /// Per-WEIGHTED-layer tap filter ([`FusedEngine::set_tap_mask`]):
+    /// `Some(mask)` restricts `on_layer`/`on_layer_map` streaming to the
+    /// layers with `mask[wi] == true` (the `telemetry.norm_layers_only`
+    /// mode). `None` (the default) streams every weighted layer. The
+    /// mask only gates the tap callbacks — norms, totals, gradients and
+    /// flops are identical with or without it.
+    tap_mask: Option<Vec<bool>>,
 }
 
 impl FusedEngine {
@@ -131,7 +138,31 @@ impl FusedEngine {
             ws,
             retention_ready: false,
             saliency: false,
+            tap_mask: None,
         }
+    }
+
+    /// Restrict tap streaming to a subset of the weighted layers
+    /// (`mask[wi] == true` streams layer `wi`; `None` restores the
+    /// default full stream). The `wi` indices the tap sees are
+    /// unchanged — unmasked layers are simply skipped — and
+    /// [`LayerTap::on_step_end`] still carries the FULL-stack totals,
+    /// so total-consuming taps (outliers, adaptive clipping) are
+    /// unaffected. See `telemetry.norm_layers_only`.
+    pub fn set_tap_mask(&mut self, mask: Option<Vec<bool>>) {
+        if let Some(mk) = &mask {
+            assert_eq!(
+                mk.len(),
+                self.param_idx.len(),
+                "tap mask must cover every weighted layer"
+            );
+        }
+        self.tap_mask = mask;
+    }
+
+    /// The active tap filter, if any ([`FusedEngine::set_tap_mask`]).
+    pub fn tap_mask(&self) -> Option<&[bool]> {
+        self.tap_mask.as_deref()
     }
 
     /// Turn on NormGrad-style per-position saliency maps (PR 8): every
@@ -350,6 +381,7 @@ impl FusedEngine {
             s_param,
             s_total,
             norms,
+            res,
             coef,
             grads,
             ..
@@ -398,6 +430,21 @@ impl FusedEngine {
             } else {
                 (None, None)
             };
+            // residual routing (top-down, so ResClose is hit first): for
+            // z = u + f(u) the closer's incoming delta g feeds BOTH paths
+            // — stash it here, and add it back to the opener's delta so
+            // the opener's backward forms dL/du = (J_f^T g + g)·phi'.
+            match lspec {
+                LayerSpec::ResClose { len } => {
+                    res[..m * len].copy_from_slice(&ping[..m * len]);
+                }
+                LayerSpec::ResOpen { len } => {
+                    for (v, &r) in ping[..m * len].iter_mut().zip(&res[..m * len]) {
+                        *v += r;
+                    }
+                }
+                _ => {}
+            }
             self.layers[i].backward(
                 has_w.then(|| &params[wi]),
                 &ping[..m * out_len_i],
@@ -418,8 +465,11 @@ impl FusedEngine {
             );
             // stream this layer's §4 norms out while they are hot — the
             // tap sees s_j^(l) in the same traversal that produced them,
-            // and (saliency enabled) the per-position maps right after
-            if has_w {
+            // and (saliency enabled) the per-position maps right after.
+            // A tap mask (norm_layers_only) gates ONLY this streaming;
+            // the norms themselves are computed either way, so the step
+            // stays bitwise- and flop-identical under any mask.
+            if has_w && self.tap_mask.as_ref().map_or(true, |mk| mk[wi]) {
                 if let Some(t) = &mut tap {
                     t.on_layer(wi, &s_param[wi][..m]);
                     if self.saliency {
@@ -511,6 +561,7 @@ fn forward_pass(
         dphi,
         logits,
         per_ex_loss,
+        res,
         ..
     } = ws;
     let mut src_is_x = true;
@@ -536,6 +587,21 @@ fn forward_pass(
         }
         std::mem::swap(ping, pong);
         src_is_x = false;
+        // residual routing: ResOpen stashes the block input u, ResClose
+        // adds it back so the block computes z = u + f(u). The marker
+        // layers themselves are copy-throughs; the arithmetic lives here
+        // so it shares the one engine-owned stash.
+        match lspec {
+            LayerSpec::ResOpen { len } => {
+                res[..m * len].copy_from_slice(&ping[..m * len]);
+            }
+            LayerSpec::ResClose { len } => {
+                for (v, &r) in ping[..m * len].iter_mut().zip(&res[..m * len]) {
+                    *v += r;
+                }
+            }
+            _ => {}
+        }
     }
     let out_len = stack.out_len();
     logits[..m * out_len].copy_from_slice(&ping[..m * out_len]);

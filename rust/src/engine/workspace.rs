@@ -42,6 +42,12 @@ pub struct Workspace {
     pub(crate) s_param: Vec<Vec<f32>>,
     pub(crate) s_total: Vec<f32>,
     pub(crate) norms: Vec<f32>,
+    /// Residual stash `[m_max, stack.res_width()]` (empty without
+    /// residual blocks): the forward keeps the `ResOpen` activations
+    /// here until the matching `ResClose` adds them back; the backward
+    /// symmetrically stashes the `ResClose` delta until the `ResOpen`.
+    /// One buffer suffices because blocks cannot nest (validated).
+    pub(crate) res: Vec<f32>,
     /// Per-example coefficients folded into the gradient accumulation.
     pub(crate) coef: Vec<f32>,
     /// Gradient accumulators, one per weight matrix.
@@ -81,6 +87,7 @@ impl Workspace {
             s_param: vec![vec![0.0; m]; stack.n_params()],
             s_total: vec![0.0; m],
             norms: vec![0.0; m],
+            res: vec![0.0; m * stack.res_width()],
             coef: vec![0.0; m],
             grads,
             last_m: 0,
@@ -96,6 +103,7 @@ impl Workspace {
             + self.per_ex_loss.len()
             + self.s_total.len()
             + self.norms.len()
+            + self.res.len()
             + self.coef.len()
             + self.dphi.iter().map(Vec::len).sum::<usize>()
             + self.s_param.iter().map(Vec::len).sum::<usize>();
@@ -146,5 +154,27 @@ mod tests {
         assert!(ws.dphi[2].is_empty());
         assert!(ws.dphi[3].is_empty());
         assert_eq!(ws.s_param.len(), 2);
+        assert!(ws.res.is_empty(), "no residual blocks, no stash");
+    }
+
+    #[test]
+    fn seq_stack_sizes_residual_stash() {
+        let stack = StackSpec::parse(
+            "input 16, embed 32 8, attn 8 2, layernorm, dense 10",
+            Loss::SoftmaxCe,
+            4,
+        )
+        .unwrap();
+        let ws = Workspace::new(&stack);
+        assert_eq!(ws.res.len(), 4 * 128);
+        // only the gelu expansion stores phi'
+        let filled: Vec<usize> = ws
+            .dphi
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(filled, vec![3]);
     }
 }

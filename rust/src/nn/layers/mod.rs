@@ -107,15 +107,63 @@
 //! dense = the `L = 1` scalar), consumed by
 //! `telemetry::saliency::SaliencyTap` and the `pegrad audit` pipeline —
 //! schema and zero-overhead contract in `docs/observability.md`.
+//!
+//! ## Sequence layers (PR 10)
+//!
+//! The same streaming contract covers sequence-shaped stacks:
+//!
+//! * **LayerNorm** `z = g ⊙ x̂ + b` with `x̂ = (x − μ)/√(σ² + ε)` per
+//!   row. Example j's gradient is elementwise in quantities the
+//!   backward row visit already holds:
+//!
+//!   ```text
+//!   ∂L/∂g = δ_j ⊙ x̂_j     ∂L/∂b = δ_j
+//!   s_j   = ||δ_j ⊙ x̂_j||² + ||δ_j||²
+//!   ```
+//!
+//!   — the per-example norm streams from the band-local row statistics
+//!   with no matmul at all (the `L = 0` degenerate case of the factored
+//!   norm: the "unfold" is the normalized activation itself).
+//!
+//! * **Embedding** `z_{j,t} = W[tok_{j,t}]`: the per-example gradient
+//!   is row-sparse — `G_j[v] = Σ_{t: tok=v} δ_{j,t}`, zero on every
+//!   row the example's tokens never touch — so the streamed norm
+//!   reduces over the distinct tokens only:
+//!
+//!   ```text
+//!   s_j = Σ_{v ∈ tokens(j)} ||Σ_{t: tok_{j,t}=v} δ_{j,t}||²
+//!   ```
+//!
+//!   with the group sums visited in ascending vocab row, bitwise equal
+//!   to reducing the materialized `G_j` row-major.
+//!
+//! * **`attn d h`** (attention-lite) is a parser macro, not a kernel:
+//!   it expands to a pre-norm residual MLP
+//!   `x + W₂·gelu(W₁·LN(x))` built from `ResOpen → LayerNorm →
+//!   Dense(gelu) → Dense(identity) → ResClose`. The `ResOpen`/
+//!   `ResClose` markers are parameterless copy-throughs; the engine
+//!   stashes the opener's activations in the workspace `res` buffer on
+//!   the forward walk (adding them back at the closer) and routes the
+//!   closer's incoming delta back to the opener on the backward walk
+//!   (`dL/du = J_f^T g + g` for `z = u + f(u)`), so every weighted
+//!   layer inside the block streams its norms unchanged. Blocks cannot
+//!   nest (one stash buffer) — validated at parse time.
+//!
+//! Gray et al. 2024 motivate the product angle: normalization-layer
+//! per-example gradients alone predict the full-model gradient noise
+//! scale, so `telemetry.norm_layers_only` restricts tap traffic to the
+//! LayerNorm streams (see `docs/observability.md`).
 
 pub mod conv2d;
 pub mod dense;
 pub mod pool;
+pub mod seq;
 pub mod stack;
 
 pub use conv2d::{ConvImpl, ConvLayer};
 pub use dense::DenseLayer;
 pub use pool::{AvgPoolLayer, FlattenLayer, MaxPoolLayer};
+pub use seq::{EmbeddingLayer, LayerNormLayer, ResMarkLayer};
 pub use stack::StackSpec;
 
 use crate::tensor::conv::ConvGeom;
@@ -161,6 +209,24 @@ pub enum LayerSpec {
     /// Shape-only marker between spatial and dense stages (the flat
     /// buffer layout makes it a copy-through).
     Flatten { len: usize },
+    /// Per-row feature normalization `z = g ⊙ x̂ + b`, W `[2, dim]`
+    /// with row 0 the gain and row 1 the bias.
+    LayerNorm { dim: usize },
+    /// Token-embedding gather, W `[vocab, dim]`; the input row is
+    /// `toks` token ids (as f32), the output row their concatenated
+    /// embeddings. Must be the first layer of a stack.
+    Embedding {
+        vocab: usize,
+        dim: usize,
+        toks: usize,
+    },
+    /// Residual-block opener (copy-through marker; the engine stashes
+    /// the activations here and adds them back at the matching
+    /// [`LayerSpec::ResClose`]).
+    ResOpen { len: usize },
+    /// Residual-block closer (copy-through marker; the engine adds the
+    /// stashed [`LayerSpec::ResOpen`] activations to the output).
+    ResClose { len: usize },
 }
 
 impl LayerSpec {
@@ -172,6 +238,10 @@ impl LayerSpec {
             LayerSpec::MaxPool2d { .. } => "maxpool2d",
             LayerSpec::AvgPool2d { .. } => "avgpool2d",
             LayerSpec::Flatten { .. } => "flatten",
+            LayerSpec::LayerNorm { .. } => "layernorm",
+            LayerSpec::Embedding { .. } => "embedding",
+            LayerSpec::ResOpen { .. } => "res_open",
+            LayerSpec::ResClose { .. } => "res_close",
         }
     }
 
@@ -183,6 +253,9 @@ impl LayerSpec {
             LayerSpec::MaxPool2d { in_h, in_w, ch, .. }
             | LayerSpec::AvgPool2d { in_h, in_w, ch, .. } => in_h * in_w * ch,
             LayerSpec::Flatten { len } => *len,
+            LayerSpec::LayerNorm { dim } => *dim,
+            LayerSpec::Embedding { toks, .. } => *toks,
+            LayerSpec::ResOpen { len } | LayerSpec::ResClose { len } => *len,
         }
     }
 
@@ -194,6 +267,9 @@ impl LayerSpec {
             LayerSpec::MaxPool2d { in_h, in_w, ch, k }
             | LayerSpec::AvgPool2d { in_h, in_w, ch, k } => (in_h / k) * (in_w / k) * ch,
             LayerSpec::Flatten { len } => *len,
+            LayerSpec::LayerNorm { dim } => *dim,
+            LayerSpec::Embedding { dim, toks, .. } => toks * dim,
+            LayerSpec::ResOpen { len } | LayerSpec::ResClose { len } => *len,
         }
     }
 
@@ -219,6 +295,8 @@ impl LayerSpec {
             LayerSpec::Conv2d { geom, out_ch, .. } => {
                 Some((geom.patch_len() + 1, *out_ch))
             }
+            LayerSpec::LayerNorm { dim } => Some((2, *dim)),
+            LayerSpec::Embedding { vocab, dim, .. } => Some((*vocab, *dim)),
             _ => None,
         }
     }
@@ -231,6 +309,7 @@ impl LayerSpec {
         match self {
             LayerSpec::Dense { .. } => Some((1, 1)),
             LayerSpec::Conv2d { geom, .. } => Some((geom.out_h(), geom.out_w())),
+            LayerSpec::LayerNorm { .. } | LayerSpec::Embedding { .. } => Some((1, 1)),
             _ => None,
         }
     }
@@ -244,17 +323,25 @@ impl LayerSpec {
         }
     }
 
-    /// Analytic matmul flops of this layer's forward at batch m.
+    /// Analytic matmul flops of this layer's forward at batch m
+    /// (zero for the matmul-free layers — layernorm row statistics,
+    /// the embedding gather and the glue copies are not counted).
     pub fn flops_forward(&self, m: usize) -> u64 {
-        match self.weight_shape() {
-            Some((a, b)) => {
-                let rows = match self {
-                    LayerSpec::Conv2d { geom, .. } => m * geom.positions(),
-                    _ => m,
-                };
-                2 * rows as u64 * a as u64 * b as u64
-            }
-            None => 0,
+        match self {
+            LayerSpec::LayerNorm { .. }
+            | LayerSpec::Embedding { .. }
+            | LayerSpec::ResOpen { .. }
+            | LayerSpec::ResClose { .. } => 0,
+            _ => match self.weight_shape() {
+                Some((a, b)) => {
+                    let rows = match self {
+                        LayerSpec::Conv2d { geom, .. } => m * geom.positions(),
+                        _ => m,
+                    };
+                    2 * rows as u64 * a as u64 * b as u64
+                }
+                None => 0,
+            },
         }
     }
 
@@ -276,6 +363,11 @@ impl LayerSpec {
             LayerSpec::MaxPool2d { .. } => Box::new(MaxPoolLayer::new(self.clone(), m_max)),
             LayerSpec::AvgPool2d { .. } => Box::new(AvgPoolLayer::new(self.clone())),
             LayerSpec::Flatten { .. } => Box::new(FlattenLayer::new(self.clone())),
+            LayerSpec::LayerNorm { .. } => Box::new(LayerNormLayer::new(self.clone(), m_max)),
+            LayerSpec::Embedding { .. } => Box::new(EmbeddingLayer::new(self.clone(), m_max)),
+            LayerSpec::ResOpen { .. } | LayerSpec::ResClose { .. } => {
+                Box::new(ResMarkLayer::new(self.clone()))
+            }
         }
     }
 }
@@ -441,5 +533,36 @@ mod tests {
         assert_eq!(avg.out_hwc(), Some((6, 6, 8)));
         assert_eq!(avg.weight_shape(), None);
         assert_eq!(avg.activation(), Activation::Identity);
+    }
+
+    #[test]
+    fn sequence_spec_shape_arithmetic() {
+        let ln = LayerSpec::LayerNorm { dim: 12 };
+        assert_eq!(ln.name(), "layernorm");
+        assert_eq!(ln.in_len(), 12);
+        assert_eq!(ln.out_len(), 12);
+        assert_eq!(ln.weight_shape(), Some((2, 12)));
+        assert_eq!(ln.map_shape(), Some((1, 1)));
+        assert_eq!(ln.activation(), Activation::Identity);
+        assert_eq!(ln.flops_forward(64), 0);
+
+        let emb = LayerSpec::Embedding {
+            vocab: 32,
+            dim: 8,
+            toks: 16,
+        };
+        assert_eq!(emb.name(), "embedding");
+        assert_eq!(emb.in_len(), 16);
+        assert_eq!(emb.out_len(), 128);
+        assert_eq!(emb.weight_shape(), Some((32, 8)));
+        assert_eq!(emb.map_shape(), Some((1, 1)));
+        assert_eq!(emb.flops_forward(64), 0);
+
+        let open = LayerSpec::ResOpen { len: 128 };
+        let close = LayerSpec::ResClose { len: 128 };
+        assert_eq!(open.in_len(), close.out_len());
+        assert_eq!(open.weight_shape(), None);
+        assert_eq!(close.map_shape(), None);
+        assert_eq!(open.activation(), Activation::Identity);
     }
 }

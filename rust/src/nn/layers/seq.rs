@@ -1,0 +1,811 @@
+//! Sequence layers (PR 10): `LayerNorm`, `Embedding`, and the residual
+//! block markers behind the `attn` stack macro — all emitting streamed
+//! per-example gradient norms under the same [`Layer`] contract as
+//! dense/conv.
+//!
+//! ## LayerNorm norms from band-local row statistics
+//!
+//! With per-row statistics `μ_j = mean(x_j)`, `σ_j² = var(x_j)` and
+//! `x̂_j = (x_j − μ_j)/√(σ_j² + ε)`, the layer computes
+//! `z_j = g ⊙ x̂_j + b` (weight `(2, dim)`: row 0 gain, row 1 bias).
+//! Example j's parameter gradient is elementwise in the same row
+//! quantities the backward already holds:
+//!
+//! ```text
+//! ∂L/∂g = δ_j ⊙ x̂_j      ∂L/∂b = δ_j
+//! s_j   = ||δ_j ⊙ x̂_j||² + ||δ_j||²
+//! ```
+//!
+//! so the per-example norm streams out of the backward row visit with
+//! no extra traversal — the §4 trick without even a matmul.
+//!
+//! ## Embedding norms are sparse
+//!
+//! An embedding gather `z_{j,t} = W[tok_{j,t}]` has per-example
+//! gradient `G_j[v] = Σ_{t: tok_{j,t}=v} δ_{j,t}` — zero on every row
+//! the example's tokens never touched. The streamed norm therefore
+//! reduces over the (few) distinct tokens only:
+//!
+//! ```text
+//! s_j = Σ_{v ∈ tokens(j)} ||Σ_{t: tok_{j,t}=v} δ_{j,t}||²
+//! ```
+//!
+//! The group sums are accumulated in the same order (ascending vocab
+//! row) a materialized `G_j` would be reduced in, so the streamed value
+//! is bitwise identical to the batch-1 oracle's.
+//!
+//! ## Residual markers
+//!
+//! `ResOpen`/`ResClose` are shape-only copy-through markers like
+//! [`super::pool::FlattenLayer`]; the residual arithmetic itself lives
+//! in the engine, which stashes the opener's activations in the
+//! workspace `res` buffer on the way up (adding them back at the
+//! closer) and symmetrically routes the closer's delta back to the
+//! opener on the way down. See `engine::fused` and the derivation in
+//! the [`super`] module docs.
+
+use crate::tensor::Tensor;
+
+use super::{Layer, LayerSpec};
+
+/// ε added to the per-row variance before the reciprocal square root.
+pub const LAYERNORM_EPS: f32 = 1e-5;
+
+/// Per-example feature normalization with learned gain/bias
+/// (weight `(2, dim)`: row 0 gain, row 1 bias).
+pub struct LayerNormLayer {
+    spec: LayerSpec,
+    dim: usize,
+    m_max: usize,
+    /// Normalized activations `x̂` `[m_max, dim]` — written by forward,
+    /// consumed by the gain gradient, the norm stream and the input
+    /// backprop.
+    xhat: Vec<f32>,
+    /// `1/√(σ² + ε)` per example row.
+    inv: Vec<f32>,
+    /// Retained delta copy for the §6 deferred accumulation
+    /// (lazily allocated on the first clip/normalize step).
+    retained: Vec<f32>,
+    /// Per-example saliency scalars `[m_max]` — the layer's map is its
+    /// §4 scalar, same as dense. Empty = disabled (the default).
+    maps: Vec<f32>,
+}
+
+impl LayerNormLayer {
+    /// LayerNorm layer sized for batches up to `m_max`.
+    pub fn new(spec: LayerSpec, m_max: usize) -> LayerNormLayer {
+        let LayerSpec::LayerNorm { dim } = spec else {
+            panic!("LayerNormLayer::new needs a LayerNorm spec, got {}", spec.name());
+        };
+        LayerNormLayer {
+            spec,
+            dim,
+            m_max,
+            xhat: vec![0.0; m_max * dim],
+            inv: vec![0.0; m_max],
+            retained: Vec::new(),
+            maps: Vec::new(),
+        }
+    }
+}
+
+impl Layer for LayerNormLayer {
+    fn spec(&self) -> &LayerSpec {
+        &self.spec
+    }
+
+    fn forward(&mut self, w: Option<&Tensor>, x: &[f32], z: &mut [f32], m: usize) {
+        let w = w.expect("layernorm layer is weighted");
+        let d = self.dim;
+        debug_assert!(m <= self.m_max);
+        debug_assert_eq!(w.data().len(), 2 * d);
+        let (gain, bias) = w.data().split_at(d);
+        for j in 0..m {
+            let xrow = &x[j * d..(j + 1) * d];
+            let mut sum = 0f64;
+            for &v in xrow {
+                sum += v as f64;
+            }
+            let mu = (sum / d as f64) as f32;
+            let mut var = 0f64;
+            for &v in xrow {
+                let c = (v - mu) as f64;
+                var += c * c;
+            }
+            let inv = 1.0 / ((var / d as f64) as f32 + LAYERNORM_EPS).sqrt();
+            self.inv[j] = inv;
+            let xh = &mut self.xhat[j * d..(j + 1) * d];
+            let zrow = &mut z[j * d..(j + 1) * d];
+            for k in 0..d {
+                let h = (xrow[k] - mu) * inv;
+                xh[k] = h;
+                zrow[k] = gain[k] * h + bias[k];
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &mut self,
+        w: Option<&Tensor>,
+        delta: &[f32],
+        dx: Option<&mut [f32]>,
+        dphi_prev: Option<&[f32]>,
+        s: Option<&mut [f32]>,
+        coef: Option<&[f32]>,
+        grad: Option<&mut Tensor>,
+        m: usize,
+    ) {
+        let w = w.expect("layernorm layer is weighted");
+        let d = self.dim;
+        debug_assert_eq!(delta.len(), m * d);
+        let gain = &w.data()[..d];
+        match (coef, grad) {
+            (Some(coef), Some(grad)) => {
+                let g = grad.data_mut();
+                for j in 0..m {
+                    let c = coef[j];
+                    let drow = &delta[j * d..(j + 1) * d];
+                    let xrow = &self.xhat[j * d..(j + 1) * d];
+                    for k in 0..d {
+                        g[k] += c * (drow[k] * xrow[k]); // gain row
+                        g[d + k] += c * drow[k]; // bias row
+                    }
+                }
+                crate::nn::count_flops(4 * m as u64 * d as u64);
+            }
+            (None, None) => {
+                debug_assert!(
+                    !self.retained.is_empty(),
+                    "ensure_retention before a §6 backward"
+                );
+                self.retained[..m * d].copy_from_slice(delta);
+            }
+            _ => panic!("layernorm backward: coef and grad must be both Some or both None"),
+        }
+        if let Some(s) = s {
+            // s_j = ||δ⊙x̂||² + ||δ||², f64-accumulated in the row-major
+            // order a materialized (2, dim) G_j reduces in — bitwise
+            // reproducible against the batch-1 oracle.
+            for j in 0..m {
+                let drow = &delta[j * d..(j + 1) * d];
+                let xrow = &self.xhat[j * d..(j + 1) * d];
+                let mut acc = 0f64;
+                for k in 0..d {
+                    let t = drow[k] * xrow[k];
+                    acc += (t as f64) * (t as f64);
+                }
+                for &dv in drow {
+                    acc += (dv as f64) * (dv as f64);
+                }
+                s[j] = acc as f32;
+            }
+            if !self.maps.is_empty() {
+                self.maps[..m].copy_from_slice(&s[..m]);
+            }
+        }
+        if let Some(dx) = dx {
+            // dx̂ = δ⊙g; dx = inv·(dx̂ − mean(dx̂) − x̂·mean(dx̂⊙x̂)),
+            // then the previous layer's φ' like every layer backward.
+            for j in 0..m {
+                let drow = &delta[j * d..(j + 1) * d];
+                let xrow = &self.xhat[j * d..(j + 1) * d];
+                let inv = self.inv[j];
+                let mut sum_dh = 0f64;
+                let mut sum_dhx = 0f64;
+                for k in 0..d {
+                    let dh = drow[k] * gain[k];
+                    sum_dh += dh as f64;
+                    sum_dhx += (dh * xrow[k]) as f64;
+                }
+                let mean_dh = (sum_dh / d as f64) as f32;
+                let mean_dhx = (sum_dhx / d as f64) as f32;
+                let orow = &mut dx[j * d..(j + 1) * d];
+                for k in 0..d {
+                    orow[k] = inv * (drow[k] * gain[k] - mean_dh - xrow[k] * mean_dhx);
+                }
+                if let Some(dp) = dphi_prev {
+                    for (ov, &pv) in orow.iter_mut().zip(&dp[j * d..(j + 1) * d]) {
+                        *ov *= pv;
+                    }
+                }
+            }
+            crate::nn::count_flops(8 * m as u64 * d as u64);
+        }
+    }
+
+    fn accumulate(&mut self, coef: &[f32], grad: &mut Tensor, m: usize) {
+        let d = self.dim;
+        let g = grad.data_mut();
+        for j in 0..m {
+            let c = coef[j];
+            let drow = &self.retained[j * d..(j + 1) * d];
+            let xrow = &self.xhat[j * d..(j + 1) * d];
+            for k in 0..d {
+                g[k] += c * (drow[k] * xrow[k]);
+                g[d + k] += c * drow[k];
+            }
+        }
+        crate::nn::count_flops(4 * m as u64 * d as u64);
+    }
+
+    fn ensure_retention(&mut self) {
+        if self.retained.is_empty() {
+            self.retained = vec![0.0; self.m_max * self.dim];
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * (self.xhat.len() + self.inv.len() + self.retained.len() + self.maps.len())
+    }
+
+    fn map_len(&self) -> usize {
+        1
+    }
+
+    fn enable_maps(&mut self) {
+        if self.maps.is_empty() {
+            self.maps = vec![0.0; self.m_max];
+        }
+    }
+
+    fn maps(&self) -> Option<&[f32]> {
+        (!self.maps.is_empty()).then_some(self.maps.as_slice())
+    }
+}
+
+/// Token-embedding gather: input rows are `toks` token ids (as f32),
+/// output rows are the concatenated `toks·dim` embedding vectors.
+/// Must be the first layer of a stack (validated by `StackSpec`).
+pub struct EmbeddingLayer {
+    spec: LayerSpec,
+    vocab: usize,
+    dim: usize,
+    toks: usize,
+    m_max: usize,
+    /// Rounded token ids `[m_max, toks]`, retained by forward for the
+    /// sparse accumulation/norms.
+    ids: Vec<u32>,
+    /// Sorted-id scratch `[toks]` for the ascending-row group visit.
+    order: Vec<u32>,
+    /// Group-sum scratch `[dim]` — the only live slice of `G_j` the
+    /// norm reduction ever materializes.
+    gsum: Vec<f32>,
+    /// Retained delta copy `[m_max, toks·dim]` for the §6 deferred
+    /// accumulation (lazily allocated on the first clip/normalize step).
+    retained: Vec<f32>,
+    /// Per-example saliency scalars `[m_max]`; empty = disabled.
+    maps: Vec<f32>,
+}
+
+impl EmbeddingLayer {
+    /// Embedding layer sized for batches up to `m_max`.
+    pub fn new(spec: LayerSpec, m_max: usize) -> EmbeddingLayer {
+        let LayerSpec::Embedding { vocab, dim, toks } = spec else {
+            panic!("EmbeddingLayer::new needs an Embedding spec, got {}", spec.name());
+        };
+        EmbeddingLayer {
+            spec,
+            vocab,
+            dim,
+            toks,
+            m_max,
+            ids: vec![0; m_max * toks],
+            order: vec![0; toks],
+            gsum: vec![0.0; dim],
+            retained: Vec::new(),
+            maps: Vec::new(),
+        }
+    }
+}
+
+impl Layer for EmbeddingLayer {
+    fn spec(&self) -> &LayerSpec {
+        &self.spec
+    }
+
+    fn forward(&mut self, w: Option<&Tensor>, x: &[f32], z: &mut [f32], m: usize) {
+        let w = w.expect("embedding layer is weighted");
+        let (t_len, d) = (self.toks, self.dim);
+        debug_assert!(m <= self.m_max);
+        let wd = w.data();
+        for j in 0..m {
+            for t in 0..t_len {
+                let raw = x[j * t_len + t];
+                let id = raw.round() as usize;
+                assert!(
+                    raw >= -0.5 && id < self.vocab,
+                    "token id {raw} out of range for vocab {}",
+                    self.vocab
+                );
+                self.ids[j * t_len + t] = id as u32;
+                z[(j * t_len + t) * d..(j * t_len + t + 1) * d]
+                    .copy_from_slice(&wd[id * d..(id + 1) * d]);
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &mut self,
+        _w: Option<&Tensor>,
+        delta: &[f32],
+        dx: Option<&mut [f32]>,
+        _dphi_prev: Option<&[f32]>,
+        s: Option<&mut [f32]>,
+        coef: Option<&[f32]>,
+        grad: Option<&mut Tensor>,
+        m: usize,
+    ) {
+        let (t_len, d) = (self.toks, self.dim);
+        debug_assert_eq!(delta.len(), m * t_len * d);
+        assert!(
+            dx.is_none(),
+            "embedding must be the first layer — token ids have no input gradient"
+        );
+        match (coef, grad) {
+            (Some(coef), Some(grad)) => {
+                let g = grad.data_mut();
+                for j in 0..m {
+                    let c = coef[j];
+                    for t in 0..t_len {
+                        let id = self.ids[j * t_len + t] as usize;
+                        let drow = &delta[(j * t_len + t) * d..(j * t_len + t + 1) * d];
+                        for (gv, &dv) in g[id * d..(id + 1) * d].iter_mut().zip(drow) {
+                            *gv += c * dv;
+                        }
+                    }
+                }
+                crate::nn::count_flops(2 * m as u64 * t_len as u64 * d as u64);
+            }
+            (None, None) => {
+                debug_assert!(
+                    !self.retained.is_empty(),
+                    "ensure_retention before a §6 backward"
+                );
+                self.retained[..m * t_len * d].copy_from_slice(delta);
+            }
+            _ => panic!("embedding backward: coef and grad must be both Some or both None"),
+        }
+        if let Some(s) = s {
+            // Sparse norm: only the example's distinct tokens contribute.
+            // Groups are visited in ascending vocab row so the f64 chain
+            // matches a row-major reduction of the materialized G_j.
+            for j in 0..m {
+                let ids = &self.ids[j * t_len..(j + 1) * t_len];
+                self.order.copy_from_slice(ids);
+                self.order.sort_unstable();
+                let mut acc = 0f64;
+                let mut prev = u32::MAX;
+                for oi in 0..t_len {
+                    let id = self.order[oi];
+                    if id == prev {
+                        continue;
+                    }
+                    prev = id;
+                    self.gsum.fill(0.0);
+                    for (t2, &id2) in ids.iter().enumerate() {
+                        if id2 != id {
+                            continue;
+                        }
+                        let drow = &delta[(j * t_len + t2) * d..(j * t_len + t2 + 1) * d];
+                        for (gv, &dv) in self.gsum.iter_mut().zip(drow) {
+                            *gv += dv;
+                        }
+                    }
+                    for &gv in &self.gsum {
+                        acc += (gv as f64) * (gv as f64);
+                    }
+                }
+                s[j] = acc as f32;
+            }
+            if !self.maps.is_empty() {
+                self.maps[..m].copy_from_slice(&s[..m]);
+            }
+        }
+    }
+
+    fn accumulate(&mut self, coef: &[f32], grad: &mut Tensor, m: usize) {
+        let (t_len, d) = (self.toks, self.dim);
+        let g = grad.data_mut();
+        for j in 0..m {
+            let c = coef[j];
+            for t in 0..t_len {
+                let id = self.ids[j * t_len + t] as usize;
+                let drow = &self.retained[(j * t_len + t) * d..(j * t_len + t + 1) * d];
+                for (gv, &dv) in g[id * d..(id + 1) * d].iter_mut().zip(drow) {
+                    *gv += c * dv;
+                }
+            }
+        }
+        crate::nn::count_flops(2 * m as u64 * t_len as u64 * d as u64);
+    }
+
+    fn ensure_retention(&mut self) {
+        if self.retained.is_empty() {
+            self.retained = vec![0.0; self.m_max * self.toks * self.dim];
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        4 * (self.ids.len()
+            + self.order.len()
+            + self.gsum.len()
+            + self.retained.len()
+            + self.maps.len())
+    }
+
+    fn map_len(&self) -> usize {
+        1
+    }
+
+    fn enable_maps(&mut self) {
+        if self.maps.is_empty() {
+            self.maps = vec![0.0; self.m_max];
+        }
+    }
+
+    fn maps(&self) -> Option<&[f32]> {
+        (!self.maps.is_empty()).then_some(self.maps.as_slice())
+    }
+}
+
+/// Residual-block marker (`ResOpen`/`ResClose`): a parameterless
+/// copy-through like `Flatten`. The skip-connection arithmetic is the
+/// engine's — it keys on the spec, not on this kernel.
+pub struct ResMarkLayer {
+    spec: LayerSpec,
+    len: usize,
+}
+
+impl ResMarkLayer {
+    /// Marker layer for either end of a residual block.
+    pub fn new(spec: LayerSpec) -> ResMarkLayer {
+        let len = match spec {
+            LayerSpec::ResOpen { len } | LayerSpec::ResClose { len } => len,
+            ref other => panic!(
+                "ResMarkLayer::new needs a ResOpen/ResClose spec, got {}",
+                other.name()
+            ),
+        };
+        ResMarkLayer { spec, len }
+    }
+}
+
+impl Layer for ResMarkLayer {
+    fn spec(&self) -> &LayerSpec {
+        &self.spec
+    }
+
+    fn forward(&mut self, _w: Option<&Tensor>, x: &[f32], z: &mut [f32], m: usize) {
+        z[..m * self.len].copy_from_slice(&x[..m * self.len]);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &mut self,
+        _w: Option<&Tensor>,
+        delta: &[f32],
+        dx: Option<&mut [f32]>,
+        dphi_prev: Option<&[f32]>,
+        s: Option<&mut [f32]>,
+        _coef: Option<&[f32]>,
+        _grad: Option<&mut Tensor>,
+        m: usize,
+    ) {
+        debug_assert!(s.is_none(), "parameterless layer has no norm stream");
+        let Some(dx) = dx else { return };
+        let n = m * self.len;
+        dx[..n].copy_from_slice(&delta[..n]);
+        if let Some(dp) = dphi_prev {
+            for (v, &p) in dx[..n].iter_mut().zip(&dp[..n]) {
+                *v *= p;
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+    use crate::util::prop;
+
+    fn layernorm(dim: usize, m_max: usize) -> (LayerNormLayer, Tensor) {
+        let spec = LayerSpec::LayerNorm { dim };
+        let layer = LayerNormLayer::new(spec, m_max);
+        let mut rng = Rng::new(21);
+        // random (not unit) gain/bias so the chain rule is exercised
+        let w = Tensor::randn(vec![2, dim], &mut rng);
+        (layer, w)
+    }
+
+    #[test]
+    fn layernorm_forward_normalizes() {
+        let (mut layer, w) = layernorm(6, 4);
+        let mut rng = Rng::new(22);
+        let x = Tensor::randn(vec![4, 6], &mut rng);
+        let mut z = vec![0f32; 4 * 6];
+        layer.forward(Some(&w), x.data(), &mut z, 4);
+        let (gain, bias) = w.data().split_at(6);
+        for j in 0..4 {
+            let xh = &layer.xhat[j * 6..(j + 1) * 6];
+            let mean: f64 = xh.iter().map(|&v| v as f64).sum::<f64>() / 6.0;
+            let var: f64 = xh.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / 6.0;
+            prop::assert_close(mean, 0.0, 1e-5).unwrap();
+            prop::assert_close(var, 1.0, 1e-3).unwrap();
+            for k in 0..6 {
+                prop::assert_close(
+                    z[j * 6 + k] as f64,
+                    (gain[k] * xh[k] + bias[k]) as f64,
+                    1e-6,
+                )
+                .unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_backward_emits_elementwise_norms() {
+        let (mut layer, w) = layernorm(5, 3);
+        let mut rng = Rng::new(23);
+        let x = Tensor::randn(vec![3, 5], &mut rng);
+        let delta = Tensor::randn(vec![3, 5], &mut rng);
+        let mut z = vec![0f32; 3 * 5];
+        layer.forward(Some(&w), x.data(), &mut z, 3);
+        let coef = vec![1.0f32; 3];
+        let mut grad = Tensor::zeros(vec![2, 5]);
+        let mut s = vec![0f32; 3];
+        let mut dx = vec![0f32; 3 * 5];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            Some(&mut dx),
+            None,
+            Some(&mut s),
+            Some(&coef),
+            Some(&mut grad),
+            3,
+        );
+        // grad == Σ_j [δ⊙x̂ ; δ]
+        for k in 0..5 {
+            let mut wg = 0f64;
+            let mut wb = 0f64;
+            for j in 0..3 {
+                wg += (delta.data()[j * 5 + k] * layer.xhat[j * 5 + k]) as f64;
+                wb += delta.data()[j * 5 + k] as f64;
+            }
+            prop::assert_close(grad.data()[k] as f64, wg, 1e-5).unwrap();
+            prop::assert_close(grad.data()[5 + k] as f64, wb, 1e-5).unwrap();
+        }
+        // s_j == ||δ⊙x̂||² + ||δ||²
+        for j in 0..3 {
+            let mut want = 0f64;
+            for k in 0..5 {
+                let t = delta.data()[j * 5 + k] * layer.xhat[j * 5 + k];
+                want += (t as f64) * (t as f64);
+            }
+            for k in 0..5 {
+                let dv = delta.data()[j * 5 + k];
+                want += (dv as f64) * (dv as f64);
+            }
+            assert_eq!(s[j], want as f32, "streamed norm must be bitwise");
+        }
+    }
+
+    #[test]
+    fn layernorm_dx_matches_finite_difference() {
+        let dim = 5;
+        let m = 2;
+        let (mut layer, w) = layernorm(dim, m);
+        let mut rng = Rng::new(24);
+        let x = Tensor::randn(vec![m, dim], &mut rng);
+        let r = Tensor::randn(vec![m, dim], &mut rng); // L = Σ r⊙z
+        let mut z = vec![0f32; m * dim];
+        layer.forward(Some(&w), x.data(), &mut z, m);
+        let mut s = vec![0f32; m];
+        let mut dx = vec![0f32; m * dim];
+        let mut grad = Tensor::zeros(vec![2, dim]);
+        let coef = vec![1.0f32; m];
+        layer.backward(
+            Some(&w),
+            r.data(),
+            Some(&mut dx),
+            None,
+            Some(&mut s),
+            Some(&coef),
+            Some(&mut grad),
+            m,
+        );
+        let loss = |xv: &[f32]| -> f64 {
+            let mut l2 = LayerNormLayer::new(LayerSpec::LayerNorm { dim }, m);
+            let mut zz = vec![0f32; m * dim];
+            l2.forward(Some(&w), xv, &mut zz, m);
+            zz.iter()
+                .zip(r.data())
+                .map(|(&a, &b)| (a as f64) * (b as f64))
+                .sum()
+        };
+        let h = 1e-3f32;
+        for i in 0..m * dim {
+            let mut xp = x.data().to_vec();
+            let mut xm = x.data().to_vec();
+            xp[i] += h;
+            xm[i] -= h;
+            let fd = (loss(&xp) - loss(&xm)) / (2.0 * h as f64);
+            prop::assert_close(dx[i] as f64, fd, 5e-2).unwrap();
+        }
+    }
+
+    #[test]
+    fn layernorm_retention_replays_accumulation() {
+        let (mut layer, w) = layernorm(4, 3);
+        let mut rng = Rng::new(25);
+        let x = Tensor::randn(vec![3, 4], &mut rng);
+        let delta = Tensor::randn(vec![3, 4], &mut rng);
+        let mut z = vec![0f32; 3 * 4];
+        layer.forward(Some(&w), x.data(), &mut z, 3);
+        layer.ensure_retention();
+        let mut s = vec![0f32; 3];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            None,
+            None,
+            Some(&mut s),
+            None,
+            None,
+            3,
+        );
+        let coef = [0.5f32, 2.0, 0.0];
+        let mut got = Tensor::zeros(vec![2, 4]);
+        layer.accumulate(&coef, &mut got, 3);
+        let mut want = Tensor::zeros(vec![2, 4]);
+        let mut fresh = LayerNormLayer::new(LayerSpec::LayerNorm { dim: 4 }, 3);
+        let mut z2 = vec![0f32; 3 * 4];
+        fresh.forward(Some(&w), x.data(), &mut z2, 3);
+        let mut s2 = vec![0f32; 3];
+        fresh.backward(
+            Some(&w),
+            delta.data(),
+            None,
+            None,
+            Some(&mut s2),
+            Some(&coef),
+            Some(&mut want),
+            3,
+        );
+        assert_eq!(got.data(), want.data(), "replay must match fused accumulation");
+    }
+
+    fn embedding(vocab: usize, dim: usize, toks: usize, m_max: usize) -> (EmbeddingLayer, Tensor) {
+        let spec = LayerSpec::Embedding { vocab, dim, toks };
+        let layer = EmbeddingLayer::new(spec, m_max);
+        let mut rng = Rng::new(31);
+        let w = Tensor::randn(vec![vocab, dim], &mut rng);
+        (layer, w)
+    }
+
+    #[test]
+    fn embedding_forward_gathers_rows() {
+        let (mut layer, w) = embedding(7, 3, 4, 2);
+        let x = vec![0.0f32, 2.0, 6.0, 2.0, 1.0, 1.0, 5.0, 0.0];
+        let mut z = vec![0f32; 2 * 4 * 3];
+        layer.forward(Some(&w), &x, &mut z, 2);
+        for (jt, &tok) in x.iter().enumerate() {
+            let id = tok as usize;
+            assert_eq!(&z[jt * 3..(jt + 1) * 3], &w.data()[id * 3..(id + 1) * 3]);
+        }
+    }
+
+    #[test]
+    fn embedding_sparse_norms_match_materialized() {
+        let (vocab, dim, toks, m) = (7, 3, 5, 4);
+        let (mut layer, w) = embedding(vocab, dim, toks, m);
+        let mut rng = Rng::new(32);
+        // repeated tokens inside an example exercise the grouping
+        let x: Vec<f32> = (0..m * toks)
+            .map(|_| rng.next_below(vocab as u64) as f32)
+            .collect();
+        let delta = Tensor::randn(vec![m, toks * dim], &mut rng);
+        let mut z = vec![0f32; m * toks * dim];
+        layer.forward(Some(&w), &x, &mut z, m);
+        let coef = vec![1.0f32; m];
+        let mut grad = Tensor::zeros(vec![vocab, dim]);
+        let mut s = vec![0f32; m];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            None,
+            None,
+            Some(&mut s),
+            Some(&coef),
+            Some(&mut grad),
+            m,
+        );
+        for j in 0..m {
+            // materialize G_j the way the batch-1 engine would
+            let mut gj = vec![0f32; vocab * dim];
+            for t in 0..toks {
+                let id = x[j * toks + t] as usize;
+                for k in 0..dim {
+                    gj[id * dim + k] += delta.data()[(j * toks + t) * dim + k];
+                }
+            }
+            // row-major f64 reduction — must match the stream bitwise
+            let mut want = 0f64;
+            for &gv in &gj {
+                want += (gv as f64) * (gv as f64);
+            }
+            assert_eq!(s[j], want as f32, "sparse norm must be bitwise vs materialized");
+        }
+        // the batch accumulation is the coef-weighted sum of the G_j
+        let mut want_g = vec![0f32; vocab * dim];
+        for j in 0..m {
+            for t in 0..toks {
+                let id = x[j * toks + t] as usize;
+                for k in 0..dim {
+                    want_g[id * dim + k] += 1.0 * delta.data()[(j * toks + t) * dim + k];
+                }
+            }
+        }
+        prop::assert_all_close(grad.data(), &want_g, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn embedding_retention_replays_accumulation() {
+        let (vocab, dim, toks, m) = (5, 2, 3, 3);
+        let (mut layer, w) = embedding(vocab, dim, toks, m);
+        let mut rng = Rng::new(33);
+        let x: Vec<f32> = (0..m * toks)
+            .map(|_| rng.next_below(vocab as u64) as f32)
+            .collect();
+        let delta = Tensor::randn(vec![m, toks * dim], &mut rng);
+        let mut z = vec![0f32; m * toks * dim];
+        layer.forward(Some(&w), &x, &mut z, m);
+        layer.ensure_retention();
+        let mut s = vec![0f32; m];
+        layer.backward(
+            Some(&w),
+            delta.data(),
+            None,
+            None,
+            Some(&mut s),
+            None,
+            None,
+            m,
+        );
+        let coef = [0.25f32, 0.0, 3.0];
+        let mut got = Tensor::zeros(vec![vocab, dim]);
+        layer.accumulate(&coef, &mut got, m);
+        let mut want = vec![0f32; vocab * dim];
+        for j in 0..m {
+            for t in 0..toks {
+                let id = x[j * toks + t] as usize;
+                for k in 0..dim {
+                    want[id * dim + k] += coef[j] * delta.data()[(j * toks + t) * dim + k];
+                }
+            }
+        }
+        prop::assert_all_close(got.data(), &want, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn res_marker_copies_through() {
+        let mut open = ResMarkLayer::new(LayerSpec::ResOpen { len: 4 });
+        let x = vec![1.0f32, -2.0, 3.0, 0.5, 4.0, 0.0, -1.0, 2.0];
+        let mut z = vec![0f32; 8];
+        open.forward(None, &x, &mut z, 2);
+        assert_eq!(z, x);
+        let dphi = vec![2.0f32; 8];
+        let mut dx = vec![0f32; 8];
+        open.backward(None, &x, Some(&mut dx), Some(&dphi), None, None, None, 2);
+        let want: Vec<f32> = x.iter().map(|v| v * 2.0).collect();
+        assert_eq!(dx, want);
+        assert_eq!(open.state_bytes(), 0);
+    }
+}

@@ -68,9 +68,45 @@ impl StackSpec {
                     bail!("layer {i}: pool k={k} must divide the {in_h}x{in_w} input");
                 }
             }
+            if let LayerSpec::Embedding { vocab, .. } = l {
+                if i != 0 {
+                    bail!("layer {i}: embedding must be the first layer of the stack");
+                }
+                if *vocab == 0 {
+                    bail!("layer {i}: embedding vocab must be >= 1");
+                }
+            }
             if l.in_len() == 0 || l.out_len() == 0 {
                 bail!("layer {i} ({}) has a zero-width side", l.name());
             }
+        }
+        // residual markers must pair up, same width, no nesting (the
+        // engine keeps ONE stash buffer)
+        let mut open: Option<(usize, usize)> = None;
+        for (i, l) in layers.iter().enumerate() {
+            match l {
+                LayerSpec::ResOpen { len } => {
+                    if open.is_some() {
+                        bail!("layer {i}: residual blocks cannot nest");
+                    }
+                    open = Some((i, *len));
+                }
+                LayerSpec::ResClose { len } => {
+                    let Some((oi, olen)) = open.take() else {
+                        bail!("layer {i}: res_close without a matching res_open");
+                    };
+                    if olen != *len {
+                        bail!(
+                            "layer {i}: res_close width {len} does not match \
+                             res_open (layer {oi}) width {olen}"
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some((oi, _)) = open {
+            bail!("layer {oi}: res_open is never closed");
         }
         for (i, pair) in layers.windows(2).enumerate() {
             if pair[0].out_len() != pair[1].in_len() {
@@ -185,6 +221,20 @@ impl StackSpec {
             .unwrap_or(0)
     }
 
+    /// Width of the residual stash buffer the engine's workspace needs:
+    /// the widest `ResOpen` in the stack (0 without residual blocks —
+    /// no stash is allocated).
+    pub fn res_width(&self) -> usize {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                LayerSpec::ResOpen { len } => Some(*len),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Is this a pure dense stack (i.e. expressible as a `ModelSpec`)?
     pub fn is_dense(&self) -> bool {
         self.layers
@@ -200,20 +250,44 @@ impl StackSpec {
             .iter()
             .filter_map(|l| {
                 let (rows, cols) = l.weight_shape()?;
-                let fan_in = rows - 1;
-                let he = matches!(l.activation(), Activation::Relu | Activation::Gelu);
-                let std = if he {
-                    (2.0 / fan_in as f32).sqrt()
-                } else {
-                    (2.0 / (fan_in + cols) as f32).sqrt()
-                };
-                let mut w = Tensor::zeros(vec![rows, cols]);
-                for i in 0..fan_in {
-                    for j in 0..cols {
-                        w.set2(i, j, rng.next_normal() * std);
+                match l {
+                    // layernorm starts as the identity transform
+                    LayerSpec::LayerNorm { .. } => {
+                        let mut w = Tensor::zeros(vec![rows, cols]);
+                        for j in 0..cols {
+                            w.set2(0, j, 1.0); // gain row; bias row stays zero
+                        }
+                        Some(w)
+                    }
+                    // every embedding row is a real vector — no bias row
+                    LayerSpec::Embedding { dim, .. } => {
+                        let std = 1.0 / (*dim as f32).sqrt();
+                        let mut w = Tensor::zeros(vec![rows, cols]);
+                        for i in 0..rows {
+                            for j in 0..cols {
+                                w.set2(i, j, rng.next_normal() * std);
+                            }
+                        }
+                        Some(w)
+                    }
+                    _ => {
+                        let fan_in = rows - 1;
+                        let he =
+                            matches!(l.activation(), Activation::Relu | Activation::Gelu);
+                        let std = if he {
+                            (2.0 / fan_in as f32).sqrt()
+                        } else {
+                            (2.0 / (fan_in + cols) as f32).sqrt()
+                        };
+                        let mut w = Tensor::zeros(vec![rows, cols]);
+                        for i in 0..fan_in {
+                            for j in 0..cols {
+                                w.set2(i, j, rng.next_normal() * std);
+                            }
+                        }
+                        Some(w) // last row (bias) stays zero
                     }
                 }
-                Some(w) // last row (bias) stays zero
             })
             .collect()
     }
@@ -233,6 +307,12 @@ impl StackSpec {
     /// * `avgpool K` — non-overlapping k×k average pool
     /// * `flatten` — spatial → flat (required before `dense`)
     /// * `dense N [act]` — activation defaults to `identity`
+    /// * `embed V D` — token embedding (vocab V, dim D); must come
+    ///   first, reinterprets the flat `input T` as T token ids
+    /// * `layernorm` — per-row feature normalization (flat input)
+    /// * `attn D H` — attention-lite macro: pre-norm residual MLP
+    ///   `x + W₂·gelu(W₁·LN(x))` with hidden width D·H, expanded to
+    ///   `res_open, layernorm, dense D·H gelu, dense N, res_close`
     pub fn parse_layers(text: &str) -> Result<Vec<LayerSpec>> {
         enum Cur {
             Spatial(usize, usize, usize), // h, w, c
@@ -384,6 +464,69 @@ impl StackSpec {
                     });
                     cur = Cur::Flat(out);
                 }
+                "embed" => {
+                    if !layers.is_empty() {
+                        bail!("'{item}': embed must be the first layer after 'input'");
+                    }
+                    let Cur::Flat(t) = cur else {
+                        bail!("'{item}': embed needs a flat input of token ids ('input T')");
+                    };
+                    let vocab: usize = w
+                        .next()
+                        .ok_or_else(|| anyhow!("'{item}': embed needs a vocab size"))?
+                        .parse()
+                        .map_err(|_| anyhow!("'{item}': bad vocab size"))?;
+                    let dim: usize = w
+                        .next()
+                        .ok_or_else(|| anyhow!("'{item}': embed needs a dim, e.g. embed 32 8"))?
+                        .parse()
+                        .map_err(|_| anyhow!("'{item}': bad embedding dim"))?;
+                    layers.push(LayerSpec::Embedding {
+                        vocab,
+                        dim,
+                        toks: t,
+                    });
+                    cur = Cur::Flat(t * dim);
+                }
+                "layernorm" => {
+                    let Cur::Flat(n) = cur else {
+                        bail!("'{item}': layernorm needs a flat input — insert 'flatten' first");
+                    };
+                    layers.push(LayerSpec::LayerNorm { dim: n });
+                }
+                "attn" => {
+                    let Cur::Flat(n) = cur else {
+                        bail!("'{item}': attn needs a flat input — insert 'flatten' first");
+                    };
+                    let d: usize = w
+                        .next()
+                        .ok_or_else(|| anyhow!("'{item}': attn needs a head width, e.g. attn 8 2"))?
+                        .parse()
+                        .map_err(|_| anyhow!("'{item}': bad attn head width"))?;
+                    let heads: usize = w
+                        .next()
+                        .ok_or_else(|| anyhow!("'{item}': attn needs a head count, e.g. attn 8 2"))?
+                        .parse()
+                        .map_err(|_| anyhow!("'{item}': bad attn head count"))?;
+                    let hidden = d * heads;
+                    if hidden == 0 {
+                        bail!("'{item}': attn needs head width and count >= 1");
+                    }
+                    layers.push(LayerSpec::ResOpen { len: n });
+                    layers.push(LayerSpec::LayerNorm { dim: n });
+                    layers.push(LayerSpec::Dense {
+                        in_dim: n,
+                        out_dim: hidden,
+                        act: Activation::Gelu,
+                    });
+                    layers.push(LayerSpec::Dense {
+                        in_dim: hidden,
+                        out_dim: n,
+                        act: Activation::Identity,
+                    });
+                    layers.push(LayerSpec::ResClose { len: n });
+                    // cur stays Flat(n) — residual blocks preserve width
+                }
                 other => bail!("unknown stack layer '{other}' in '{item}'"),
             }
             if let Some(extra) = w.next() {
@@ -525,6 +668,120 @@ mod tests {
             for j in 0..cols {
                 assert_eq!(p.at2(rows - 1, j), 0.0, "bias row must start at zero");
             }
+        }
+    }
+
+    #[test]
+    fn parses_the_seq_stack() {
+        let spec = StackSpec::parse(
+            "input 16, embed 32 8, attn 8 2, layernorm, dense 10",
+            Loss::SoftmaxCe,
+            64,
+        )
+        .unwrap();
+        // embed -> [res_open, layernorm, dense 128->16 gelu, dense 16->128, res_close]
+        // -> layernorm -> dense 128->10
+        assert_eq!(spec.n_layers(), 8);
+        assert_eq!(spec.in_len(), 16);
+        assert_eq!(spec.out_len(), 10);
+        assert_eq!(
+            spec.weight_shapes(),
+            vec![(32, 8), (2, 128), (129, 16), (17, 128), (2, 128), (129, 10)]
+        );
+        assert_eq!(spec.res_width(), 128);
+        assert_eq!(spec.max_width(), 128);
+        assert_eq!(spec.layers[1], LayerSpec::ResOpen { len: 128 });
+        assert_eq!(spec.layers[5], LayerSpec::ResClose { len: 128 });
+        let LayerSpec::Dense { act, out_dim, .. } = &spec.layers[3] else {
+            panic!("layer 3 must be the gelu expansion")
+        };
+        assert_eq!((*act, *out_dim), (Activation::Gelu, 16));
+        assert_eq!(
+            spec.map_shapes(),
+            vec![(1, 1); 6],
+            "sequence layers stream 1x1 scalar maps"
+        );
+    }
+
+    #[test]
+    fn seq_dsl_and_validation_errors() {
+        let bad = [
+            ("input 16, dense 8, embed 32 4", "embed must be the first layer"),
+            ("input 8x8x1, embed 32 4, flatten, dense 2", "needs a flat input"),
+            ("input 16, embed 0 4, dense 2", "vocab must be >= 1"),
+            ("input 16, embed 32, dense 2", "embed needs a dim"),
+            ("input 8x8x1, layernorm, flatten, dense 2", "layernorm needs a flat input"),
+            ("input 16, attn 8, dense 2", "attn needs a head count"),
+            ("input 16, attn 0 2, dense 2", "head width and count >= 1"),
+            ("input 16, layernorm", "last layer must be weighted"),
+        ];
+        for (text, needle) in bad {
+            let err = StackSpec::parse(text, Loss::SoftmaxCe, 4)
+                .map(|_| ())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "'{text}': got '{err}'");
+        }
+        // hand-built residual marker mistakes
+        let dense = |n_in: usize, n_out: usize| LayerSpec::Dense {
+            in_dim: n_in,
+            out_dim: n_out,
+            act: Activation::Identity,
+        };
+        let err = StackSpec::new(
+            vec![LayerSpec::ResClose { len: 4 }, dense(4, 2)],
+            Loss::SoftmaxCe,
+            1,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("without a matching res_open"), "{err}");
+        let err = StackSpec::new(
+            vec![LayerSpec::ResOpen { len: 4 }, dense(4, 2)],
+            Loss::SoftmaxCe,
+            1,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("never closed"), "{err}");
+        let err = StackSpec::new(
+            vec![
+                LayerSpec::ResOpen { len: 4 },
+                LayerSpec::ResOpen { len: 4 },
+                LayerSpec::ResClose { len: 4 },
+                LayerSpec::ResClose { len: 4 },
+                dense(4, 2),
+            ],
+            Loss::SoftmaxCe,
+            1,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("cannot nest"), "{err}");
+    }
+
+    #[test]
+    fn seq_init_params_special_cases() {
+        let spec = StackSpec::parse(
+            "input 6, embed 11 3, layernorm, dense 4",
+            Loss::SoftmaxCe,
+            4,
+        )
+        .unwrap();
+        let mut rng = Rng::new(5);
+        let params = spec.init_params(&mut rng);
+        assert_eq!(params.len(), 3);
+        // embedding: every row populated (no zero bias row)
+        let emb = &params[0];
+        assert_eq!(emb.dims(), &[11, 3]);
+        let last_row_sq: f32 = (0..3).map(|j| emb.at2(10, j).powi(2)).sum();
+        assert!(last_row_sq > 0.0, "embedding rows must all be initialized");
+        // layernorm: identity transform over the 6·3 = 18 flat features
+        let ln = &params[1];
+        assert_eq!(ln.dims(), &[2, 18]);
+        for j in 0..18 {
+            assert_eq!(ln.at2(0, j), 1.0, "gain row starts at one");
+            assert_eq!(ln.at2(1, j), 0.0, "bias row starts at zero");
         }
     }
 

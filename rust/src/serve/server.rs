@@ -22,7 +22,7 @@
 //! [`ServeHandle::shutdown`] (any thread), the `--max-seconds`
 //! deadline, and fleet drain (no spool). See `docs/serving.md`.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -222,8 +222,15 @@ pub struct Server {
     queue: VecDeque<RunSpec>,
     /// Every name ever accepted (uniquification set).
     names: HashSet<String>,
-    /// Spool paths already ingested (good or bad) — a file is tried once.
+    /// Spool paths fully resolved (accepted or finally rejected).
     spool_seen: HashSet<PathBuf>,
+    /// Paths that failed to parse on the last scan, with the (size,
+    /// mtime) snapshot taken at that failure: a `.toml` caught mid-write
+    /// parses again on later scans and is only REJECTED once its
+    /// metadata has been stable across a full rescan interval —
+    /// write-then-rename drops still land instantly, plain writes settle
+    /// within one extra scan instead of being permanently torn.
+    spool_pending: HashMap<PathBuf, (u64, Option<std::time::SystemTime>)>,
     stop: Arc<AtomicBool>,
 }
 
@@ -236,6 +243,7 @@ impl Server {
             queue: VecDeque::new(),
             names: HashSet::new(),
             spool_seen: HashSet::new(),
+            spool_pending: HashMap::new(),
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -464,8 +472,11 @@ impl Server {
         Ok(report)
     }
 
-    /// Ingest new `*.toml` drops from the spool directory (each file is
-    /// tried once; failures are recorded, never fatal).
+    /// Ingest new `*.toml` drops from the spool directory. A file that
+    /// fails to parse is retried on later scans until its size/mtime
+    /// have been stable across one rescan interval (a writer may still
+    /// be mid-write); only a SETTLED file that still fails is finally
+    /// rejected. Rejections are recorded, never fatal.
     fn scan_spool(&mut self, rejected: &mut Vec<(PathBuf, String)>) {
         let Some(spool) = self.opts.spool.clone() else {
             return;
@@ -485,9 +496,10 @@ impl Server {
         paths.sort();
         let overrides = self.opts.overrides.clone();
         for path in paths {
-            self.spool_seen.insert(path.clone());
             match Fleet::load_spooled(&path, &overrides) {
                 Ok(spec) => {
+                    self.spool_seen.insert(path.clone());
+                    self.spool_pending.remove(&path);
                     let name = self.enqueue(spec);
                     log::info!(
                         "serve: spooled {} as run '{name}'",
@@ -495,8 +507,30 @@ impl Server {
                     );
                 }
                 Err(e) => {
-                    log::warn!("serve: rejecting spooled {}: {e:#}", path.display());
-                    rejected.push((path, format!("{e:#}")));
+                    let snap = std::fs::metadata(&path)
+                        .ok()
+                        .map(|md| (md.len(), md.modified().ok()));
+                    let settled = match (&snap, self.spool_pending.get(&path)) {
+                        // unchanged since the last failed scan: no writer
+                        // is making progress — the file is really invalid
+                        (Some(now), Some(prev)) => now == prev,
+                        // vanished mid-scan: nothing left to retry
+                        (None, _) => true,
+                        // first failure: give the writer one interval
+                        (Some(_), None) => false,
+                    };
+                    if settled {
+                        self.spool_seen.insert(path.clone());
+                        self.spool_pending.remove(&path);
+                        log::warn!("serve: rejecting spooled {}: {e:#}", path.display());
+                        rejected.push((path, format!("{e:#}")));
+                    } else if let Some(s) = snap {
+                        log::debug!(
+                            "serve: spooled {} unparseable, waiting for it to settle: {e:#}",
+                            path.display()
+                        );
+                        self.spool_pending.insert(path, s);
+                    }
                 }
             }
         }

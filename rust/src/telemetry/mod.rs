@@ -208,6 +208,13 @@ pub struct TelemetryConfig {
     /// Steps before the outlier detector starts flagging (thresholds need
     /// a populated sketch first).
     pub warmup_steps: usize,
+    /// Restrict tap traffic to normalization (LayerNorm) layers, per
+    /// Gray et al. 2024: their per-example norms alone predict GNS, so
+    /// the stream shrinks from `n_params·m` to `n_norm_layers·m` values
+    /// per step while the GNS/outlier/clip consumers keep working on the
+    /// restricted signal. Requires a stack with at least one `layernorm`;
+    /// incompatible with `[audit]` (saliency needs the full stream).
+    pub norm_layers_only: bool,
 }
 
 impl Default for TelemetryConfig {
@@ -219,6 +226,7 @@ impl Default for TelemetryConfig {
             outlier_quantile: 0.99,
             outlier_zscore: 4.0,
             warmup_steps: 10,
+            norm_layers_only: false,
         }
     }
 }

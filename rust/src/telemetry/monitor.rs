@@ -83,6 +83,13 @@ pub struct TelemetryMonitor {
     step_big: Vec<f64>,
     /// Scratch: this step's per-example total norms, for the detector.
     last_norms: Vec<f32>,
+    /// Layer subset restriction (`telemetry.norm_layers_only`): when set,
+    /// the engine's tap mask suppresses `on_layer` for unmasked layers
+    /// (their `step_small` scratch stays 0) and `end_step` zeroes the
+    /// matching `step_big` entries, so BOTH sides of the GNS decomposition
+    /// restrict to the same subset. Unmasked per-layer stats stay empty
+    /// and their per-layer `b_simple` renders as JSON null.
+    layer_mask: Option<Vec<bool>>,
     steps: u64,
     flagged_last_step: usize,
     /// True when the gradient stream satisfies the GNS decomposition's
@@ -119,6 +126,7 @@ impl TelemetryMonitor {
             step_small: vec![0.0; n_layers],
             step_big: vec![0.0; n_layers],
             last_norms: vec![0.0; m],
+            layer_mask: None,
             steps: 0,
             flagged_last_step: 0,
             gns_unbiased: true,
@@ -132,6 +140,16 @@ impl TelemetryMonitor {
     /// the McCandlish/Gray unbiased estimate.
     pub fn mark_weighted_gradients(&mut self) {
         self.gns_unbiased = false;
+    }
+
+    /// Restrict the monitor to a layer subset (pair of the engine's
+    /// [`crate::engine::FusedEngine::set_tap_mask`] — the trainer sets
+    /// both from the same mask when `telemetry.norm_layers_only` is on).
+    pub fn set_layer_mask(&mut self, mask: Option<Vec<bool>>) {
+        if let Some(mk) = &mask {
+            assert_eq!(mk.len(), self.n_layers, "layer mask length");
+        }
+        self.layer_mask = mask;
     }
 
     /// Steps fully recorded (i.e. `end_step` calls).
@@ -169,6 +187,16 @@ impl TelemetryMonitor {
         for (b, g) in self.step_big.iter_mut().zip(grads) {
             *b = ops::sq_sum(g);
         }
+        if let Some(mk) = &self.layer_mask {
+            // restrict the big-batch moments to the streamed subset; the
+            // small side never fired for unmasked layers (tap mask), so
+            // its scratch is already 0 there.
+            for (l, b) in self.step_big.iter_mut().enumerate() {
+                if !mk[l] {
+                    *b = 0.0;
+                }
+            }
+        }
         self.flagged_last_step = self.outliers.observe(indices, &self.last_norms);
         self.gns.observe(&self.step_small, &self.step_big);
         self.steps += 1;
@@ -184,6 +212,10 @@ impl TelemetryMonitor {
             ("steps", Json::num(self.steps as f64)),
             ("m", Json::num(self.m as f64)),
             ("n_layers", Json::num(self.n_layers as f64)),
+            (
+                "norm_layers_only",
+                Json::Bool(self.layer_mask.is_some()),
+            ),
             (
                 "loss",
                 if self.loss.count() > 0 {
@@ -369,6 +401,31 @@ mod tests {
         assert_eq!(clip.get("history").unwrap().as_arr().unwrap().len(), 1);
         // without a controller the report is byte-identical to report()
         assert_eq!(mon.report_with(None).to_string(), mon.report().to_string());
+    }
+
+    #[test]
+    fn layer_mask_restricts_both_gns_moments() {
+        let cfg = TelemetryConfig::default();
+        let mut mon = TelemetryMonitor::new(&cfg, 2, 4, 8);
+        mon.set_layer_mask(Some(vec![false, true]));
+        // the engine's tap mask suppresses on_layer(0, ..); mimic that
+        let s1 = [2.0f32, 2.0, 2.0, 2.0];
+        mon.on_layer(1, &s1);
+        mon.on_step_end(&s1, &[0.1; 4]);
+        let grads = vec![Tensor::full(vec![2, 2], 9.0), Tensor::full(vec![1, 2], 1.0)];
+        mon.end_step(&[0, 1, 2, 3], &grads);
+        // the masked-out layer contributed to NEITHER moment, so the
+        // total decomposition restricts cleanly to the streamed subset
+        let pl = mon.gns().per_layer().unwrap();
+        assert_eq!(pl[0].small_sq, 0.0);
+        assert_eq!(pl[0].big_sq, 0.0);
+        let t = mon.gns().total().unwrap();
+        assert!((t.small_sq - 2.0).abs() < 1e-12, "{t:?}");
+        assert!((t.big_sq - 2.0).abs() < 1e-12, "{t:?}");
+        let j = mon.report();
+        assert_eq!(j.get("norm_layers_only").unwrap(), &Json::Bool(true));
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers[0].get("count").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

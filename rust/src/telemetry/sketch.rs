@@ -123,7 +123,12 @@ impl StreamingHistogram {
         let q = q.clamp(0.0, 1.0);
         let target = q * self.total as f64;
         let mut cum = self.underflow as f64;
-        if target <= cum {
+        // the low-edge shortcut is only correct when underflow mass
+        // actually exists: at q = 0 (target 0.0) the comparison holds
+        // vacuously at cum == 0.0 and used to report the range's low edge
+        // (~1e-6) no matter where the data sat — fall through to the scan
+        // instead, which lands on the first occupied bucket.
+        if self.underflow > 0 && target <= cum {
             return Some(self.lo_log2.exp2());
         }
         let width = (self.hi_log2 - self.lo_log2) / self.counts.len() as f64;
@@ -390,7 +395,10 @@ mod tests {
                 xs.push(x as f64);
             }
             xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            for q in [0.1, 0.5, 0.9] {
+            // edge quantiles included: q = 0 and near-0 must track the
+            // data minimum (not the range's low edge — the torn shortcut
+            // this test regressed on), q = 1 the maximum.
+            for q in [0.0, 1e-6, 0.1, 0.5, 0.9, 1.0] {
                 let est = h.quantile(q).unwrap();
                 // estimate must fall within one bucket of the exact value
                 let exact = percentile_sorted(&xs, q * 100.0);

@@ -189,6 +189,79 @@ fn spool_drop_starts_and_completes_a_run() {
     assert!(report.spool_rejected.is_empty());
 }
 
+/// Torn-write tolerance: a `.toml` written IN PLACE (no rename) that the
+/// scanner catches mid-write must not be permanently rejected — the
+/// settle/retry logic keeps retrying until the file stops changing, then
+/// parses the completed drop and runs it. A file that is invalid after
+/// settling IS finally rejected, exactly once.
+#[test]
+fn torn_spool_write_settles_and_runs() {
+    let out = tmp_out("torn");
+    let _ = std::fs::remove_dir_all(&out);
+    let spool = PathBuf::from(&out).join("spool");
+    std::fs::create_dir_all(&spool).unwrap();
+    let mut o = opts("tornsess", &out);
+    o.spool = Some(spool.clone());
+    let mut server = Server::new(o).unwrap();
+    let status_path = server.session_dir().join("serve.jsonl");
+
+    let handle = server.handle();
+    let dropper = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        let cfg_toml = r#"
+            run_name = "torn"
+            mode = "rust_pegrad"
+            steps = 4
+            eval_every = 0
+            checkpoint_every = 0
+            [data]
+            kind = "synth"
+            n = 64
+            [model]
+            dims = [16, 12, 10]
+            m = 8
+        "#;
+        // staged IN-PLACE write (no rename): starts as a syntactically
+        // torn prefix (unterminated string) and keeps growing — an
+        // in-progress writer's file changes between scans, so the
+        // scanner must keep retrying rather than reject it
+        let torn = &cfg_toml[..cfg_toml.find("steps").unwrap() + 8];
+        let path = spool.join("torn.toml");
+        let mut staged = format!("{torn}\"");
+        std::fs::write(&path, &staged).unwrap();
+        // ~400 ms of visible-but-unfinished file, growing every 100 ms
+        // (faster than the rescan cadence, so it never looks settled)
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(100));
+            staged.push('x');
+            std::fs::write(&path, &staged).unwrap();
+        }
+        std::fs::write(&path, cfg_toml).unwrap();
+        // a permanently invalid file, for the settled-rejection side
+        std::fs::write(spool.join("junk.toml"), "mode = \"nonsense\"").unwrap();
+        let done = wait_for_status(&status_path, Duration::from_secs(30), |j| {
+            j.get("completed").and_then(Json::as_usize) == Some(1)
+        });
+        assert_eq!(done.get("queue_depth").and_then(Json::as_usize), Some(0));
+        // give the junk file time to settle and be finally rejected
+        std::thread::sleep(Duration::from_millis(600));
+        handle.shutdown();
+    });
+    let report = server.run().unwrap();
+    dropper.join().unwrap();
+
+    assert_eq!(report.completed(), 1, "torn drop must complete once settled");
+    assert_eq!(report.runs[0].name, "torn");
+    assert_eq!(report.runs[0].steps_done, 4);
+    // the torn file must NOT appear among the rejections; the junk file
+    // must appear exactly once (settled, still invalid)
+    assert_eq!(report.spool_rejected.len(), 1, "{:?}", report.spool_rejected);
+    assert!(report.spool_rejected[0]
+        .0
+        .to_string_lossy()
+        .ends_with("junk.toml"));
+}
+
 /// Failure containment: a run that panics mid-training is reported
 /// `failed` in serve.jsonl (with the panic message) while its sibling
 /// runs to completion and the server returns normally.
